@@ -1,0 +1,98 @@
+//! E6 — §III: the full unified analysis table.
+//!
+//! For every (precision, organization) pair: block inventory, padded
+//! blocks, utilization, per-op dynamic energy / useful energy / latency,
+//! and pipelined throughput on the default fabric sizing — the quantified
+//! version of the paper's qualitative §III table, plus the iso-area
+//! comparison the paper implies ("replace" = same silicon budget).
+
+use civp::benchx::section;
+use civp::decomp::{AnalysisRow, Precision, Scheme, SchemeKind};
+use civp::fabric::{schedule_op, simulate_stream, CostModel, FabricConfig, OpClass};
+
+fn main() {
+    let cost = CostModel::default();
+
+    section("E6a: blocks / utilization (static census)");
+    println!(
+        "{:<10} {:<8} {:>7} {:>8} {:>8} | {:>6} {:>6} {:>6} {:>6} {:>6}",
+        "precision", "scheme", "blocks", "padded", "util%", "24x24", "24x9", "9x9", "18x18", "25x18"
+    );
+    for row in AnalysisRow::full_table() {
+        let c = &row.census;
+        println!(
+            "{:<10} {:<8} {:>7} {:>8} {:>8.1} | {:>6} {:>6} {:>6} {:>6} {:>6}",
+            row.precision.name(),
+            row.kind.name(),
+            c.total_blocks,
+            c.padded_blocks,
+            c.utilization * 100.0,
+            c.count(civp::decomp::BlockKind::M24x24),
+            c.count(civp::decomp::BlockKind::M24x9),
+            c.count(civp::decomp::BlockKind::M9x9),
+            c.count(civp::decomp::BlockKind::M18x18),
+            c.count(civp::decomp::BlockKind::M25x18),
+        );
+    }
+
+    section("E6b: per-op cost on the default fabrics");
+    println!(
+        "{:<10} {:<8} {:>10} {:>10} {:>9} {:>6} {:>5}",
+        "precision", "scheme", "energy", "useful-E", "wasted%", "lat", "II"
+    );
+    for prec in Precision::ALL {
+        for kind in SchemeKind::ALL {
+            let scheme = Scheme::new(kind, prec);
+            let fabric = match kind {
+                SchemeKind::Civp => FabricConfig::civp_default(),
+                _ => FabricConfig::legacy_default(),
+            };
+            let s = schedule_op(&scheme, &fabric, &cost);
+            println!(
+                "{:<10} {:<8} {:>10.3} {:>10.3} {:>9.1} {:>6} {:>5}",
+                prec.name(),
+                kind.name(),
+                s.dyn_energy,
+                s.useful_energy,
+                (1.0 - s.useful_energy / s.dyn_energy) * 100.0,
+                s.latency_cycles,
+                s.initiation_interval
+            );
+        }
+    }
+
+    section("E6c: iso-area streaming comparison (the paper's 'replace' semantics)");
+    // Same silicon: CIVP column vs 40x 18x18 blocks. Stream 10k ops of each
+    // precision and compare cycles + energy.
+    let civp_fabric = FabricConfig::civp_scaled(1);
+    let iso_fabric = FabricConfig::legacy_iso_area(1);
+    println!(
+        "fabric areas: civp={:.1} (18x18-equivalents), legacy-iso={:.1}",
+        civp_fabric.total_area(),
+        iso_fabric.total_area()
+    );
+    println!(
+        "\n{:<10} {:>12} {:>12} {:>12} {:>12} {:>10} {:>10}",
+        "precision", "civp cyc", "iso18 cyc", "civp E/op", "iso18 E/op", "civp wst%", "iso wst%"
+    );
+    for prec in Precision::ALL {
+        let n = 10_000;
+        let civp_ops: Vec<OpClass> =
+            vec![OpClass { precision: prec, organization: SchemeKind::Civp }; n];
+        let b18_ops: Vec<OpClass> =
+            vec![OpClass { precision: prec, organization: SchemeKind::Baseline18 }; n];
+        let rc = simulate_stream(&civp_ops, &civp_fabric, &cost);
+        let rb = simulate_stream(&b18_ops, &iso_fabric, &cost);
+        println!(
+            "{:<10} {:>12} {:>12} {:>12.3} {:>12.3} {:>10.1} {:>10.1}",
+            prec.name(),
+            rc.cycles,
+            rb.cycles,
+            rc.energy_per_op(),
+            rb.energy_per_op(),
+            rc.wasted_fraction() * 100.0,
+            rb.wasted_fraction() * 100.0
+        );
+    }
+    println!("\n(lower energy/op + lower wasted% at SP/QP is the paper's §III conclusion)");
+}

@@ -1,0 +1,117 @@
+//! E7 — end-to-end serving benchmark: the three-layer system on mixed
+//! precision multimedia traffic.
+//!
+//! For each workload mix: drive the coordinator (native backend) and
+//! report throughput + latency; replay the same op mix through the fabric
+//! simulator under the CIVP fabric and the iso-area legacy fabric to get
+//! the paper's hardware-level comparison. Also times the PJRT backend
+//! (batched artifact dispatch) when artifacts are present.
+
+use civp::benchx::section;
+use civp::config::ServiceConfig;
+use civp::coordinator::{BackendChoice, Service};
+use civp::decomp::SchemeKind;
+use civp::fabric::{simulate_stream, CostModel, FabricConfig, OpClass};
+use civp::runtime::EngineHandle;
+use civp::trace::{TraceGen, WorkloadSpec};
+use std::time::Instant;
+
+const REQUESTS: usize = 20_000;
+
+fn drive(svc: &Service, trace: &[civp::trace::TraceRequest]) -> f64 {
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(4096);
+    for req in trace {
+        pending.push(svc.submit(req.id, req.precision, req.a, req.b).unwrap());
+        if pending.len() >= 4096 {
+            for rx in pending.drain(..) {
+                let _ = rx.recv();
+            }
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let cost = CostModel::default();
+
+    for workload in WorkloadSpec::ALL {
+        section(&format!("E7 workload `{}`", workload.name()));
+        let trace = TraceGen::new(0xE7, workload.mix(), 0).take(REQUESTS);
+
+        // --- serving layer (native backend) ---------------------------
+        let cfg = ServiceConfig::default();
+        let svc = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
+        let wall = drive(&svc, &trace);
+        let rep = svc.shutdown();
+        println!(
+            "coordinator (native): {:>8.0} mult/s  ({} reqs in {:.3}s)",
+            REQUESTS as f64 / wall,
+            REQUESTS,
+            wall
+        );
+        for p in ["single", "double", "quad"] {
+            if let Some(h) = rep.snapshot.hists.get(&format!("latency_ns_{p}")) {
+                if h.count > 0 {
+                    println!("  latency {p:<7} p50={:>9}ns p99={:>9}ns n={}", h.p50, h.p99, h.count);
+                }
+            }
+        }
+
+        // --- fabric layer: civp vs iso-area legacy ---------------------
+        let civp_ops: Vec<OpClass> = trace
+            .iter()
+            .map(|r| OpClass { precision: r.precision, organization: SchemeKind::Civp })
+            .collect();
+        let b18_ops: Vec<OpClass> = trace
+            .iter()
+            .map(|r| OpClass { precision: r.precision, organization: SchemeKind::Baseline18 })
+            .collect();
+        let rc = simulate_stream(&civp_ops, &FabricConfig::civp_scaled(1), &cost);
+        let rb = simulate_stream(&b18_ops, &FabricConfig::legacy_iso_area(1), &cost);
+        println!(
+            "fabric civp      : {:>8} cycles  {:>7.3} E/op  {:>5.1}% wasted",
+            rc.cycles,
+            rc.energy_per_op(),
+            rc.wasted_fraction() * 100.0
+        );
+        println!(
+            "fabric iso-18x18 : {:>8} cycles  {:>7.3} E/op  {:>5.1}% wasted",
+            rb.cycles,
+            rb.energy_per_op(),
+            rb.wasted_fraction() * 100.0
+        );
+        println!(
+            "civp advantage   : {:.2}x cycles, {:.2}x energy/op, {:.1}x waste",
+            rb.cycles as f64 / rc.cycles as f64,
+            rb.energy_per_op() / rc.energy_per_op(),
+            rb.wasted_fraction() / rc.wasted_fraction().max(1e-9)
+        );
+    }
+
+    // --- PJRT backend timing (graphics mix) ----------------------------
+    section("E7 PJRT backend (AOT JAX/Pallas artifacts)");
+    match EngineHandle::load("artifacts") {
+        Ok(handle) => {
+            let info = handle.info().unwrap();
+            let trace = TraceGen::new(0xE7, WorkloadSpec::Graphics.mix(), 0).take(REQUESTS / 4);
+            let cfg = ServiceConfig { max_batch: info.batch, linger_us: 500, ..Default::default() };
+            let svc = Service::start(&cfg, BackendChoice::Pjrt(handle.clone()));
+            let wall = drive(&svc, &trace);
+            let rep = svc.shutdown();
+            println!(
+                "coordinator (pjrt): {:>8.0} mult/s  ({} reqs in {:.3}s, batch={})",
+                trace.len() as f64 / wall,
+                trace.len(),
+                wall,
+                info.batch
+            );
+            let _ = rep;
+            handle.stop();
+        }
+        Err(e) => println!("skipped (artifacts not built): {e:#}"),
+    }
+}

@@ -1,0 +1,77 @@
+//! E3 — Fig. 2: double-precision 57x57 partitioning.
+//!
+//! Regenerates Fig. 2(b)'s block inventory (four 24x24 + four 24x9 + one
+//! 9x9), compares against the nine-18x18 alternative the paper concedes in
+//! §II.B, and measures the software pipeline under both.
+
+use civp::benchx::{bb, bench, section};
+use civp::decomp::{scheme_census, BlockKind, DecompMul, Precision, Scheme, SchemeKind};
+use civp::fabric::{schedule_op, CostModel, FabricConfig};
+use civp::fpu::{Fp64, RoundMode};
+use civp::proput::Rng;
+
+fn main() {
+    section("E3 static: Fig. 2(b) — 57x57 double-precision partitioning");
+    let civp = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Double));
+    println!(
+        "civp-double: padded {} bits, {} blocks = {} x24x24 + {} x24x9 + {} x9x9",
+        civp.padded_bits,
+        civp.total_blocks,
+        civp.count(BlockKind::M24x24),
+        civp.count(BlockKind::M24x9),
+        civp.count(BlockKind::M9x9),
+    );
+    assert_eq!(
+        (civp.count(BlockKind::M24x24), civp.count(BlockKind::M24x9), civp.count(BlockKind::M9x9)),
+        (4, 4, 1),
+        "Fig. 2(b) block inventory"
+    );
+
+    println!("\n{:<10} {:>7} {:>8} {:>8} {:>10} {:>10} {:>8}", "scheme", "blocks", "padded", "util%", "energy", "useful-E", "lat");
+    let cost = CostModel::default();
+    for kind in SchemeKind::ALL {
+        let scheme = Scheme::new(kind, Precision::Double);
+        let census = scheme_census(&scheme);
+        let fabric = match kind {
+            SchemeKind::Civp => FabricConfig::civp_default(),
+            _ => FabricConfig::legacy_default(),
+        };
+        let sched = schedule_op(&scheme, &fabric, &cost);
+        println!(
+            "{:<10} {:>7} {:>8} {:>8.1} {:>10.3} {:>10.3} {:>8}",
+            kind.name(),
+            census.total_blocks,
+            census.padded_blocks,
+            census.utilization * 100.0,
+            sched.dyn_energy,
+            sched.useful_energy,
+            sched.latency_cycles
+        );
+    }
+    println!(
+        "\npaper §II.B concession reproduced: 18x18 also needs 9 blocks for DP;\n\
+         CIVP's advantage at DP is unification, not count."
+    );
+
+    section("E3 measured: software IEEE fp64 pipeline throughput per scheme");
+    let mut rng = Rng::new(0xE3);
+    let pairs: Vec<(Fp64, Fp64)> = (0..1024)
+        .map(|_| (Fp64(rng.nasty_bits64()), Fp64(rng.nasty_bits64())))
+        .collect();
+    for kind in SchemeKind::ALL {
+        let mut m = DecompMul::new(kind);
+        let mut i = 0;
+        bench(&format!("fp64 mul via {}", kind.name()), 2_000, 30, 20_000, || {
+            let (a, b) = pairs[i & 1023];
+            i += 1;
+            bb(a.mul_with(b, RoundMode::NearestEven, &mut m));
+        });
+    }
+    let mut direct = civp::fpu::DirectMul;
+    let mut i = 0;
+    bench("fp64 mul via direct (no decomposition)", 2_000, 30, 20_000, || {
+        let (a, b) = pairs[i & 1023];
+        i += 1;
+        bb(a.mul_with(b, RoundMode::NearestEven, &mut direct));
+    });
+}

@@ -1,0 +1,69 @@
+//! E2 — §II.A: single-precision multiplication, CIVP (one 24x24 block) vs
+//! the existing 18x18 fabric (four blocks) vs 25x18 and 9x9 baselines.
+//!
+//! Reports (a) the static block/utilization table for one SP multiply and
+//! (b) measured software throughput of the full IEEE pipeline under each
+//! decomposition (the decomposition cost is the variable; the pipeline is
+//! shared).
+
+use civp::benchx::{bb, bench, section};
+use civp::decomp::{scheme_census, DecompMul, Precision, Scheme, SchemeKind};
+use civp::fabric::{schedule_op, CostModel, FabricConfig};
+use civp::fpu::{Fp32, RoundMode};
+use civp::proput::Rng;
+
+fn main() {
+    section("E2 static: blocks per single-precision multiply (paper §II.A)");
+    println!(
+        "{:<10} {:>7} {:>8} {:>8} {:>10} {:>10}",
+        "scheme", "blocks", "padded", "util%", "energy", "lat(cyc)"
+    );
+    let cost = CostModel::default();
+    for kind in SchemeKind::ALL {
+        let scheme = Scheme::new(kind, Precision::Single);
+        let census = scheme_census(&scheme);
+        let fabric = match kind {
+            SchemeKind::Civp => FabricConfig::civp_default(),
+            _ => FabricConfig::legacy_default(),
+        };
+        let sched = schedule_op(&scheme, &fabric, &cost);
+        println!(
+            "{:<10} {:>7} {:>8} {:>8.1} {:>10.3} {:>10}",
+            kind.name(),
+            census.total_blocks,
+            census.padded_blocks,
+            census.utilization * 100.0,
+            sched.dyn_energy,
+            sched.latency_cycles
+        );
+    }
+    println!("\npaper: one 24x24 block replaces four 18x18 blocks for SP [2].");
+
+    section("E2 measured: software IEEE fp32 pipeline throughput per scheme");
+    let mut rng = Rng::new(0xE2);
+    let pairs: Vec<(Fp32, Fp32)> = (0..1024)
+        .map(|_| (Fp32(rng.nasty_bits32()), Fp32(rng.nasty_bits32())))
+        .collect();
+    for kind in SchemeKind::ALL {
+        let mut m = DecompMul::new(kind);
+        let mut i = 0;
+        bench(&format!("fp32 mul via {}", kind.name()), 2_000, 30, 20_000, || {
+            let (a, b) = pairs[i & 1023];
+            i += 1;
+            bb(a.mul_with(b, RoundMode::NearestEven, &mut m));
+        });
+    }
+    let mut direct = civp::fpu::DirectMul;
+    let mut i = 0;
+    bench("fp32 mul via direct (no decomposition)", 2_000, 30, 20_000, || {
+        let (a, b) = pairs[i & 1023];
+        i += 1;
+        bb(a.mul_with(b, RoundMode::NearestEven, &mut direct));
+    });
+    let mut i = 0;
+    bench("fp32 mul native hardware (reference)", 2_000, 30, 20_000, || {
+        let (a, b) = pairs[i & 1023];
+        i += 1;
+        bb(a.to_f32() * b.to_f32());
+    });
+}

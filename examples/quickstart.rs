@@ -1,0 +1,90 @@
+//! Quickstart: the CIVP library in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the three layers: (1) the decomposition engine multiplying real
+//! IEEE values through the paper's block structure, (2) the fabric
+//! simulator pricing those blocks, (3) the serving coordinator.
+
+use civp::config::ServiceConfig;
+use civp::coordinator::{BackendChoice, Service};
+use civp::decomp::{scheme_census, DecompMul, Precision, Scheme, SchemeKind};
+use civp::fabric::{schedule_op, CostModel, FabricConfig};
+use civp::fpu::{Fp128, Fp32, Fp64, RoundMode};
+
+fn main() {
+    // ------------------------------------------------------------------
+    // 1. IEEE multiplication through the CIVP decomposition
+    // ------------------------------------------------------------------
+    println!("== 1. CIVP-decomposed IEEE multiplication ==");
+    let mut civp_mul = DecompMul::new(SchemeKind::Civp);
+
+    let (r32, _) =
+        Fp32::from_f32(3.5).mul_with(Fp32::from_f32(-2.0), RoundMode::NearestEven, &mut civp_mul);
+    println!("single: 3.5 x -2.0      = {}", r32.to_f32());
+
+    let (r64, _) =
+        Fp64::from_f64(0.1).mul_with(Fp64::from_f64(0.2), RoundMode::NearestEven, &mut civp_mul);
+    println!("double: 0.1 x 0.2       = {:.17}", r64.to_f64());
+    assert_eq!(r64.to_f64(), 0.1 * 0.2); // bit-exact vs hardware
+
+    let (r128, _) = Fp128::from_f64(1e200).mul_with(
+        Fp128::from_f64(1e100),
+        RoundMode::NearestEven,
+        &mut civp_mul,
+    );
+    println!("quad:   1e200 x 1e100   = {:e} (113-bit significand)", r128.to_f64_lossy());
+
+    println!("\nblocks fired so far: {:?}", civp_mul.stats.by_kind());
+    println!("array utilization:   {:.1}%", civp_mul.stats.utilization() * 100.0);
+
+    // ------------------------------------------------------------------
+    // 2. What does each multiplication cost on the fabric?
+    // ------------------------------------------------------------------
+    println!("\n== 2. fabric cost per multiplication ==");
+    let cost = CostModel::default();
+    let civp_fabric = FabricConfig::civp_default();
+    let legacy_fabric = FabricConfig::legacy_default();
+    for prec in Precision::ALL {
+        let civp = schedule_op(&Scheme::new(SchemeKind::Civp, prec), &civp_fabric, &cost);
+        let legacy = schedule_op(&Scheme::new(SchemeKind::Baseline18, prec), &legacy_fabric, &cost);
+        println!(
+            "{:<7} civp: {} cyc, {:.2} energy ({:.0}% useful) | 18x18: {} cyc, {:.2} energy ({:.0}% useful)",
+            prec.name(),
+            civp.latency_cycles,
+            civp.dyn_energy,
+            civp.useful_energy / civp.dyn_energy * 100.0,
+            legacy.latency_cycles,
+            legacy.dyn_energy,
+            legacy.useful_energy / legacy.dyn_energy * 100.0,
+        );
+    }
+
+    // Block counts straight from the paper's figures:
+    let fig2 = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Double));
+    println!(
+        "\nFig. 2(b) check — double precision: {} blocks ({} 24x24 + {} 24x9 + {} 9x9)",
+        fig2.total_blocks,
+        fig2.count(civp::decomp::BlockKind::M24x24),
+        fig2.count(civp::decomp::BlockKind::M24x9),
+        fig2.count(civp::decomp::BlockKind::M9x9),
+    );
+
+    // ------------------------------------------------------------------
+    // 3. The serving coordinator
+    // ------------------------------------------------------------------
+    println!("\n== 3. variable-precision multiplication service ==");
+    let cfg = ServiceConfig::default();
+    let svc = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
+    let product = svc.mul_blocking(
+        Precision::Double,
+        (6.0f64).to_bits() as u128,
+        (7.0f64).to_bits() as u128,
+    );
+    println!("service: 6.0 x 7.0 = {}", f64::from_bits(product as u64));
+    let report = svc.shutdown();
+    println!("service handled {} request(s); backend = {}", report.responses, report.backend);
+    println!("\nquickstart OK");
+}

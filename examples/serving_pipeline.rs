@@ -1,0 +1,143 @@
+//! End-to-end driver (E7): the full three-layer system on a real workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serving_pipeline
+//! ```
+//!
+//! Drives a mixed-precision multimedia trace through the coordinator twice:
+//!
+//! 1. **PJRT backend** — requests execute in the AOT-compiled JAX/Pallas
+//!    artifacts (Layer 1+2) through the PJRT runtime, proving all layers
+//!    compose, with results cross-checked against the native softfloat.
+//! 2. **Native backend** — CIVP fabric vs legacy 18x18 fabric accounting,
+//!    reproducing the paper's headline claim (full block utilization →
+//!    lower energy per op) on serving traffic.
+//!
+//! Reported: throughput, p50/p99 latency, simulated fabric energy/op and
+//! wasted-energy fraction. Numbers land in EXPERIMENTS.md E7.
+
+use civp::config::ServiceConfig;
+use civp::coordinator::{BackendChoice, Service};
+use civp::decomp::SchemeKind;
+use civp::fabric::FabricKind;
+use civp::fpu::{Fp128, Fp32, Fp64};
+use civp::runtime::EngineHandle;
+use civp::trace::{TraceGen, TraceRequest, WorkloadSpec};
+use std::time::Instant;
+
+const REQUESTS: usize = 30_000;
+
+fn drive(svc: &Service, trace: &[TraceRequest]) -> (f64, Vec<u128>) {
+    let t0 = Instant::now();
+    let mut results = vec![0u128; trace.len()];
+    let mut pending: Vec<(usize, std::sync::mpsc::Receiver<civp::coordinator::Response>)> =
+        Vec::with_capacity(4096);
+    for (idx, req) in trace.iter().enumerate() {
+        pending.push((idx, svc.submit(req.id, req.precision, req.a, req.b).unwrap()));
+        if pending.len() >= 4096 {
+            for (i, rx) in pending.drain(..) {
+                results[i] = rx.recv().unwrap().bits;
+            }
+        }
+    }
+    for (i, rx) in pending.drain(..) {
+        results[i] = rx.recv().unwrap().bits;
+    }
+    (t0.elapsed().as_secs_f64(), results)
+}
+
+fn verify_against_softfloat(trace: &[TraceRequest], results: &[u128]) -> usize {
+    let mut checked = 0;
+    for (req, &got) in trace.iter().zip(results) {
+        let want = match req.precision {
+            civp::decomp::Precision::Single => {
+                Fp32(req.a as u32).mul(Fp32(req.b as u32)).0 as u128
+            }
+            civp::decomp::Precision::Double => {
+                Fp64(req.a as u64).mul(Fp64(req.b as u64)).0 as u128
+            }
+            civp::decomp::Precision::Quad => Fp128(req.a).mul(Fp128(req.b)).0,
+        };
+        assert_eq!(got, want, "req {} ({:?}) diverged", req.id, req.precision);
+        checked += 1;
+    }
+    checked
+}
+
+fn report(label: &str, svc: Service, wall: f64, n: usize) {
+    let fabric = svc.fabric_report();
+    let rep = svc.shutdown();
+    println!("\n---- {label} ----");
+    println!("requests        {n}");
+    println!("wall            {wall:.3} s");
+    println!("throughput      {:.0} mult/s", n as f64 / wall);
+    for p in ["single", "double", "quad"] {
+        if let Some(h) = rep.snapshot.hists.get(&format!("latency_ns_{p}")) {
+            println!(
+                "latency {p:<7} p50={:>9} ns   p99={:>9} ns   (n={})",
+                h.p50, h.p99, h.count
+            );
+        }
+    }
+    println!("fabric          {}", fabric.fabric);
+    println!("  cycles        {}", fabric.cycles);
+    println!("  energy/op     {:.3}", fabric.energy_per_op());
+    println!("  wasted energy {:.1}%", fabric.wasted_fraction() * 100.0);
+}
+
+fn main() {
+    let workload = WorkloadSpec::Graphics;
+    let trace = TraceGen::new(20260710, workload.mix(), 0).take(REQUESTS);
+    println!(
+        "workload `{}`: {} requests ({} single / {} double / {} quad)",
+        workload.name(),
+        trace.len(),
+        trace.iter().filter(|r| r.precision == civp::decomp::Precision::Single).count(),
+        trace.iter().filter(|r| r.precision == civp::decomp::Precision::Double).count(),
+        trace.iter().filter(|r| r.precision == civp::decomp::Precision::Quad).count(),
+    );
+
+    // ------------------------------------------------------------------
+    // 1. Full three-layer path: PJRT artifacts behind the coordinator.
+    // ------------------------------------------------------------------
+    match EngineHandle::load("artifacts") {
+        Ok(handle) => {
+            let info = handle.info().unwrap();
+            println!("\nPJRT engine: platform={} batch={}", info.platform, info.batch);
+            let cfg = ServiceConfig {
+                max_batch: info.batch,
+                linger_us: 500,
+                ..ServiceConfig::default()
+            };
+            let svc = Service::start(&cfg, BackendChoice::Pjrt(handle.clone()));
+            let (wall, results) = drive(&svc, &trace);
+            let checked = verify_against_softfloat(&trace, &results);
+            println!("PJRT results verified against softfloat: {checked}/{}", trace.len());
+            report("PJRT backend (JAX/Pallas artifacts)", svc, wall, trace.len());
+            handle.stop();
+        }
+        Err(e) => {
+            println!("\n(skipping PJRT pass: {e:#}; run `make artifacts`)");
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // 2. Fabric comparison: CIVP vs legacy 18x18 on the same trace.
+    // ------------------------------------------------------------------
+    let civp_cfg = ServiceConfig::default();
+    let svc = Service::start(&civp_cfg, BackendChoice::Native(SchemeKind::Civp));
+    let (wall, civp_results) = drive(&svc, &trace);
+    report("native backend, CIVP fabric", svc, wall, trace.len());
+
+    let legacy_cfg = ServiceConfig {
+        scheme: SchemeKind::Baseline18,
+        fabric: FabricKind::Legacy,
+        ..ServiceConfig::default()
+    };
+    let svc = Service::start(&legacy_cfg, BackendChoice::Native(SchemeKind::Baseline18));
+    let (wall, legacy_results) = drive(&svc, &trace);
+    assert_eq!(civp_results, legacy_results, "organizations must agree bit-for-bit");
+    report("native backend, legacy 18x18 fabric", svc, wall, trace.len());
+
+    println!("\nserving_pipeline OK (all backends bit-identical)");
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX model + Pallas kernels, AOT-lowered to HLO.
+
+Nothing in this package runs at serving time — `aot.py` emits
+`artifacts/*.hlo.txt` once and the Rust coordinator executes them via PJRT.
+"""

@@ -1,0 +1,78 @@
+"""AOT-lower the Layer-2 model to HLO *text* artifacts for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--batch 256]
+
+Emits one artifact per precision plus a manifest:
+
+* ``civp_fp32.hlo.txt``  — (u32[B], u32[B]) -> u32[B]
+* ``civp_fp64.hlo.txt``  — (u64[B], u64[B]) -> u64[B]
+* ``civp_fp128.hlo.txt`` — (u64[B,2], u64[B,2]) -> u64[B,2]
+* ``manifest.txt``       — batch size + entry list for the Rust loader
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BATCH_DEFAULT = 256
+BATCH_TILE = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entries(batch):
+    u32 = jax.ShapeDtypeStruct((batch,), jnp.uint32)
+    u64 = jax.ShapeDtypeStruct((batch,), jnp.uint64)
+    u64x2 = jax.ShapeDtypeStruct((batch, 2), jnp.uint64)
+    tile = min(BATCH_TILE, batch)
+    return {
+        "civp_fp32": (functools.partial(model.mul_fp32, batch_tile=tile), (u32, u32)),
+        "civp_fp64": (functools.partial(model.mul_fp64, batch_tile=tile), (u64, u64)),
+        "civp_fp128": (functools.partial(model.mul_fp128, batch_tile=tile), (u64x2, u64x2)),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=BATCH_DEFAULT)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = [f"batch={args.batch}"]
+    for name, (fn, specs) in entries(args.batch).items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(name)
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

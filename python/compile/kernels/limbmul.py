@@ -1,0 +1,97 @@
+"""Layer-1 Pallas kernel: CIVP limb-decomposed significand multiplication.
+
+The kernel is a software transcription of Fig. 2(b) / Fig. 4(b): each
+partial product ``a_chunk[i] * b_chunk[j]`` is one dedicated-block
+multiplication (<= 24x24 bits, so the 48-bit product is exact in int64),
+and the shifted accumulation is the adder tree. Batched over requests; the
+batch is the Pallas grid dimension.
+
+TPU adaptation (DESIGN.md §3): the paper's spatial DSP tiles become the
+static chunk structure unrolled inside the kernel body (fully vectorizable
+on the VPU lanes across the batch), and the HBM<->VMEM schedule the paper
+expressed with block wiring is expressed with a BlockSpec over the batch
+dimension. ``interpret=True`` always — the CPU PJRT client cannot run
+Mosaic custom-calls.
+
+Accumulation strategy: tile offsets are not multiples of a machine word, so
+each shifted 48-bit partial product is scattered into base-2^12 digit
+buckets (digit = 12 bits guarantees ``(product << (offset % 12))`` fits in
+int64 and per-digit sums stay far below 2^63 for <= 36 tiles). A single
+static carry sweep then yields canonical base-2^24 limbs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .schemes import SigScheme
+
+DIGIT = 12
+DIGIT_MASK = (1 << DIGIT) - 1
+
+
+def _n_digits(scheme: SigScheme) -> int:
+    # one spare digit for the final carry sweep
+    return -(-scheme.product_bits // DIGIT) + 1
+
+
+def sig_mul_kernel_body(scheme: SigScheme, a_ref, b_ref, out_ref):
+    """Kernel body: a_ref/b_ref [TB, n_chunks] int64 -> out_ref [TB, n_limb24]."""
+    n_dig = _n_digits(scheme)
+    tb = a_ref.shape[0]
+    acc = [jnp.zeros((tb,), dtype=jnp.int64) for _ in range(n_dig)]
+    # --- partial products: one dedicated block per (i, j) tile -----------
+    for i, (wa, oa) in enumerate(zip(scheme.chunks, scheme.offsets)):
+        ai = a_ref[:, i]
+        for j, (wb, ob) in enumerate(zip(scheme.chunks, scheme.offsets)):
+            bj = b_ref[:, j]
+            prod = ai * bj  # <= wa+wb <= 48 bits, exact in int64
+            off = oa + ob
+            q, r = divmod(off, DIGIT)
+            shifted = prod << r  # <= 59 bits
+            # scatter the shifted value into its digit buckets
+            for k in range((wa + wb + r + DIGIT - 1) // DIGIT):
+                acc[q + k] = acc[q + k] + ((shifted >> (DIGIT * k)) & DIGIT_MASK)
+    # --- carry sweep (the adder tree) -------------------------------------
+    for d in range(n_dig - 1):
+        carry = acc[d] >> DIGIT
+        acc[d] = acc[d] & DIGIT_MASK
+        acc[d + 1] = acc[d + 1] + carry
+    # top digit must have no residual carry by construction
+    # --- pack pairs of 12-bit digits into base-2^24 limbs ------------------
+    for k in range(scheme.n_limb24):
+        lo = acc[2 * k] if 2 * k < n_dig else jnp.zeros((tb,), jnp.int64)
+        hi = acc[2 * k + 1] if 2 * k + 1 < n_dig else jnp.zeros((tb,), jnp.int64)
+        out_ref[:, k] = lo + (hi << DIGIT)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def sig_mul(scheme: SigScheme, a_chunks, b_chunks, batch_tile: int = 128):
+    """Batched significand multiply through the CIVP tile structure.
+
+    Args:
+      scheme: static partition scheme.
+      a_chunks, b_chunks: int64 [B, n_chunks], chunk values (< 2^24 each).
+      batch_tile: Pallas block size along the batch dimension; B must be a
+        multiple (callers pad — padding waste is measured in EXPERIMENTS.md
+        §Perf, mirroring the paper's block-padding argument).
+
+    Returns:
+      int64 [B, n_limb24] base-2^24 limbs of the exact product.
+    """
+    b = a_chunks.shape[0]
+    assert b % batch_tile == 0, f"batch {b} not a multiple of tile {batch_tile}"
+    grid = (b // batch_tile,)
+    return pl.pallas_call(
+        functools.partial(sig_mul_kernel_body, scheme),
+        out_shape=jax.ShapeDtypeStruct((b, scheme.n_limb24), jnp.int64),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch_tile, scheme.n_chunks), lambda i: (i, 0)),
+            pl.BlockSpec((batch_tile, scheme.n_chunks), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch_tile, scheme.n_limb24), lambda i: (i, 0)),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(a_chunks, b_chunks)

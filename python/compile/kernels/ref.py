@@ -1,0 +1,141 @@
+"""Correctness oracles for the Pallas kernel and the JAX model.
+
+Two independent references:
+
+* :func:`sig_mul_ref` — a pure-jnp transcription of the same tile
+  accumulation (no Pallas), used to check the kernel's lowering; and
+* host-side exact big-int helpers (:func:`chunks_to_int`,
+  :func:`int_to_limb24`, :func:`ieee_mul_bits`) built on Python integers —
+  no shared code with either the kernel or the Rust pipeline. pytest
+  compares all three.
+"""
+
+import jax.numpy as jnp
+
+from .schemes import SigScheme
+
+# ---------------------------------------------------------------------------
+# pure-jnp reference (traced, but independent of Pallas)
+# ---------------------------------------------------------------------------
+
+
+def sig_mul_ref(scheme: SigScheme, a_chunks, b_chunks):
+    """Same math as the kernel, expressed as a flat jnp reduction."""
+    b = a_chunks.shape[0]
+    n_dig = -(-scheme.product_bits // 12) + 1
+    acc = jnp.zeros((b, n_dig), dtype=jnp.int64)
+    for i, (wa, oa) in enumerate(zip(scheme.chunks, scheme.offsets)):
+        for j, (wb, ob) in enumerate(zip(scheme.chunks, scheme.offsets)):
+            prod = a_chunks[:, i] * b_chunks[:, j]
+            off = oa + ob
+            q, r = divmod(off, 12)
+            shifted = prod << r
+            for k in range((wa + wb + r + 11) // 12):
+                acc = acc.at[:, q + k].add((shifted >> (12 * k)) & 0xFFF)
+    # carry sweep
+    for d in range(n_dig - 1):
+        carry = acc[:, d] >> 12
+        acc = acc.at[:, d].set(acc[:, d] & 0xFFF)
+        acc = acc.at[:, d + 1].add(carry)
+    out = []
+    for k in range(scheme.n_limb24):
+        lo = acc[:, 2 * k] if 2 * k < n_dig else 0
+        hi = acc[:, 2 * k + 1] if 2 * k + 1 < n_dig else 0
+        out.append(lo + (hi << 12))
+    return jnp.stack(out, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# host-side exact big-int reference (Python ints, never traced)
+# ---------------------------------------------------------------------------
+
+
+def int_to_chunks(v: int, scheme: SigScheme):
+    """Split an integer into the scheme's chunk values (host side)."""
+    assert 0 <= v < (1 << scheme.padded_bits)
+    return [(v >> o) & ((1 << w) - 1) for w, o in zip(scheme.chunks, scheme.offsets)]
+
+
+def chunks_to_int(chunks, scheme: SigScheme) -> int:
+    """Reassemble chunk values into the integer they encode."""
+    return sum(int(c) << o for c, o in zip(chunks, scheme.offsets))
+
+
+def int_to_limb24(v: int, n: int):
+    """Split an integer into ``n`` base-2^24 limbs (host side)."""
+    return [(v >> (24 * k)) & 0xFFFFFF for k in range(n)]
+
+
+def limb24_to_int(limbs) -> int:
+    """Reassemble base-2^24 limbs."""
+    return sum(int(l) << (24 * k) for k, l in enumerate(limbs))
+
+
+# --- IEEE-754 binary multiply on Python ints (round-to-nearest-even) -------
+
+FORMATS = {
+    # name: (exp_bits, frac_bits)
+    "single": (8, 23),
+    "double": (11, 52),
+    "quad": (15, 112),
+}
+
+
+def ieee_mul_bits(a_bits: int, b_bits: int, fmt: str) -> int:
+    """Exact IEEE-754 multiply (RNE) on packed bit patterns, via Python ints.
+
+    Independent of both the JAX model and the Rust softfloat — the third
+    implementation used to cross-check the other two.
+    """
+    eb, fb = FORMATS[fmt]
+    bias = (1 << (eb - 1)) - 1
+    emin, emax = 1 - bias, bias
+    exp_mask = (1 << eb) - 1
+    total = 1 + eb + fb
+
+    def unpack(bits):
+        sign = bits >> (total - 1)
+        biased = (bits >> fb) & exp_mask
+        frac = bits & ((1 << fb) - 1)
+        if biased == exp_mask:
+            return sign, ("nan" if frac else "inf"), 0, 0
+        if biased == 0:
+            return (sign, "zero", 0, 0) if frac == 0 else (sign, "fin", emin, frac)
+        return sign, "fin", biased - bias, frac | (1 << fb)
+
+    sa, ca, ea, ma = unpack(a_bits)
+    sb, cb, eb_, mb = unpack(b_bits)
+    sign = sa ^ sb
+    qnan = (exp_mask << fb) | (1 << (fb - 1))
+    if ca == "nan" or cb == "nan":
+        return qnan
+    if (ca == "inf" and cb == "zero") or (ca == "zero" and cb == "inf"):
+        return qnan
+    if ca == "inf" or cb == "inf":
+        return (sign << (total - 1)) | (exp_mask << fb)
+    if ca == "zero" or cb == "zero":
+        return sign << (total - 1)
+    while ma < (1 << fb):
+        ma, ea = ma << 1, ea - 1
+    while mb < (1 << fb):
+        mb, eb_ = mb << 1, eb_ - 1
+    prod = ma * mb
+    top = prod.bit_length() - 1
+    exp = ea + eb_ + (top - 2 * fb)
+    shift = top - fb
+    if exp < emin:
+        shift += emin - exp
+        exp = emin
+    kept, rem = prod >> shift, prod & ((1 << shift) - 1)
+    half = 1 << (shift - 1) if shift else 0
+    if shift and (rem > half or (rem == half and kept & 1)):
+        kept += 1
+    if kept.bit_length() > fb + 1:
+        kept, exp = kept >> 1, exp + 1
+    if exp > emax:
+        return (sign << (total - 1)) | (exp_mask << fb)
+    if kept == 0:
+        return sign << (total - 1)
+    if kept < (1 << fb):
+        return (sign << (total - 1)) | kept  # subnormal
+    return (sign << (total - 1)) | ((exp + bias) << fb) | (kept - (1 << fb))

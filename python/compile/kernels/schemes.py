@@ -1,0 +1,67 @@
+"""CIVP partition schemes — the Python mirror of `rust/src/decomp/scheme.rs`.
+
+Chunk layouts follow the paper exactly (least-significant first):
+
+* single — 24-bit significand = one ``24`` chunk (§II.A);
+* double — 53 bits padded to 57 = ``[24, 24, 9]`` (Fig. 2);
+* quad   — 113 bits padded to 114 = two 57-bit halves (Fig. 4), i.e.
+  ``[24, 24, 9, 24, 24, 9]``.
+
+The kernel consumes these statically: the chunk structure is baked into the
+lowered HLO, exactly as the paper's block wiring is baked into silicon.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class SigScheme:
+    """A partition of one significand operand for the CIVP block set."""
+
+    name: str
+    #: significand width including hidden bit (24 / 53 / 113)
+    sig_bits: int
+    #: chunk widths, least-significant first; sum == padded width
+    chunks: tuple
+    #: chunk bit offsets (derived)
+    offsets: tuple = field(init=False)
+
+    def __post_init__(self):
+        offs, o = [], 0
+        for w in self.chunks:
+            offs.append(o)
+            o += w
+        object.__setattr__(self, "offsets", tuple(offs))
+
+    @property
+    def padded_bits(self):
+        return sum(self.chunks)
+
+    @property
+    def n_chunks(self):
+        return len(self.chunks)
+
+    @property
+    def product_bits(self):
+        return 2 * self.padded_bits
+
+    @property
+    def n_limb24(self):
+        """Output limbs (base 2^24) needed for the full product."""
+        return -(-self.product_bits // 24)
+
+    def block_kinds(self):
+        """Block kind (a, b) -> 'AxB' label for every tile, row-major."""
+        out = []
+        for wa in self.chunks:
+            for wb in self.chunks:
+                hi, lo = max(wa, wb), min(wa, wb)
+                out.append(f"{hi}x{lo}")
+        return out
+
+
+SINGLE = SigScheme("civp-single", 24, (24,))
+DOUBLE = SigScheme("civp-double", 53, (24, 24, 9))
+QUAD = SigScheme("civp-quad", 113, (24, 24, 9, 24, 24, 9))
+
+BY_NAME = {"single": SINGLE, "double": DOUBLE, "quad": QUAD}

@@ -1,0 +1,252 @@
+"""Layer-2 JAX model: the full IEEE-754 multiplication pipeline.
+
+Everything around the significand product is standard IEEE machinery
+(unpack -> normalize subnormals -> multiply -> round-to-nearest-even ->
+pack, with the NaN/Inf/zero lattice as vectorized selects); the significand
+product itself goes through the Layer-1 CIVP Pallas kernel
+(:mod:`compile.kernels.limbmul`), so the lowered HLO contains the paper's
+tile structure.
+
+Three batched entry points (fixed batch per artifact, Rust pads):
+
+* ``mul_fp32(a_u32[B], b_u32[B]) -> u32[B]``
+* ``mul_fp64(a_u64[B], b_u64[B]) -> u64[B]``
+* ``mul_fp128(a_u64[B,2], b_u64[B,2]) -> u64[B,2]``  (lo, hi words)
+
+All are bit-exact against the host big-int oracle (``kernels/ref.py``) and
+— for fp32/fp64 — against numpy hardware multiplication; see
+``python/tests/``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from . import wordops as wo
+from .kernels import limbmul
+from .kernels.schemes import DOUBLE, QUAD, SINGLE
+
+U64 = jnp.uint64
+
+
+def _u(x):
+    return jnp.asarray(x, dtype=U64)
+
+
+# ---------------------------------------------------------------------------
+# generic pipeline over wordvecs
+# ---------------------------------------------------------------------------
+
+
+class _Fmt:
+    def __init__(self, name, exp_bits, frac_bits, scheme, sig_words, prod_words):
+        self.name = name
+        self.exp_bits = exp_bits
+        self.frac_bits = frac_bits
+        self.scheme = scheme
+        self.sig_words = sig_words
+        self.prod_words = prod_words
+        self.bias = (1 << (exp_bits - 1)) - 1
+        self.emin = 1 - self.bias
+        self.emax = self.bias
+        self.exp_mask = (1 << exp_bits) - 1
+        self.total = 1 + exp_bits + frac_bits
+
+
+FMT32 = _Fmt("single", 8, 23, SINGLE, 1, 1)
+FMT64 = _Fmt("double", 11, 52, DOUBLE, 1, 2)
+FMT128 = _Fmt("quad", 15, 112, QUAD, 2, 4)
+
+
+def _unpack(fmt: _Fmt, bits):
+    """bits: wordvec of the packed value -> (sign, biased, frac wordvec)."""
+    total, fb = fmt.total, fmt.frac_bits
+    sign = wo.get_bit(bits, jnp.full(bits[0].shape, total - 1, jnp.int32))
+    shifted = wo.shr(bits, jnp.full(bits[0].shape, fb, jnp.int32), out_words=1)[0]
+    biased = (shifted & _u(fmt.exp_mask)).astype(jnp.int32)
+    frac = wo.mask_low_static(bits, fb)
+    return sign, biased, frac
+
+
+def _normalize(fmt: _Fmt, biased, frac):
+    """Normalized (exp, sig) for finite non-zero inputs.
+
+    Normal: sig = frac | hidden, exp = biased - bias.
+    Subnormal: shift frac up so the top bit reaches frac_bits, exp adjusts.
+    """
+    t = fmt.frac_bits + 1
+    is_sub = biased == 0
+    # normal path
+    hidden = wo.const_words(1 << fmt.frac_bits, fmt.sig_words, frac[0].shape[0])
+    sig_norm = [a | b for a, b in zip(wo.mask_low_static(frac, fmt.frac_bits), hidden)]
+    exp_norm = biased - fmt.bias
+    # subnormal path
+    bl = wo.bitlen(frac)
+    up = (t - bl).astype(jnp.int32)
+    sig_sub = wo.shl(frac, up, out_words=fmt.sig_words)
+    exp_sub = fmt.emin - up
+    sig = wo.select(is_sub, sig_sub, sig_norm)
+    exp = jnp.where(is_sub, exp_sub, exp_norm)
+    return exp, sig
+
+
+def _extract_chunks(fmt: _Fmt, sig):
+    """Cut a normalized significand wordvec into the scheme's chunk columns
+    (int64 [B, n_chunks]) for the Pallas kernel."""
+    cols = []
+    for w, o in zip(fmt.scheme.chunks, fmt.scheme.offsets):
+        piece = wo.shr(sig, jnp.full(sig[0].shape, o, jnp.int32), out_words=1)[0]
+        cols.append((piece & _u((1 << w) - 1)).astype(jnp.int64))
+    return jnp.stack(cols, axis=-1)
+
+
+def _limbs_to_words(fmt: _Fmt, limbs):
+    """Pack base-2^24 kernel limbs into an exact product wordvec.
+
+    Limbs are canonical (< 2^24) and occupy disjoint bit ranges, so each
+    word is an OR of statically-shifted pieces — no carries.
+    """
+    n = limbs.shape[-1]
+    words = []
+    for j in range(fmt.prod_words):
+        acc = jnp.zeros(limbs.shape[0], dtype=U64)
+        for k in range(n):
+            lo_bit = 24 * k
+            rel = lo_bit - 64 * j
+            if rel <= -24 or rel >= 64:
+                continue
+            piece = limbs[:, k].astype(U64)
+            if rel >= 0:
+                acc = acc | ((piece << _u(rel)) if rel < 64 else _u(0))
+            else:
+                acc = acc | (piece >> _u(-rel))
+        words.append(acc)
+    return words
+
+
+def _round_pack(fmt: _Fmt, sign, exp, prod, batch_tile):
+    """RNE-round the exact product and pack the finite result."""
+    del batch_tile
+    f = fmt.frac_bits
+    t = f + 1
+    b = prod[0].shape[0]
+    # top bit is at 2f or 2f+1
+    is_big = wo.get_bit(prod, jnp.full(b, 2 * f + 1, jnp.int32)).astype(jnp.int32)
+    exp = exp + is_big
+    shift = (f + is_big).astype(jnp.int32)
+    # underflow denormalization
+    extra = jnp.clip(fmt.emin - exp, 0, 2 * t + 4)
+    shift = shift + extra.astype(jnp.int32)
+    exp = jnp.maximum(exp, fmt.emin)
+    # round to nearest even
+    kept = wo.shr(prod, shift, out_words=fmt.sig_words)
+    round_bit = wo.get_bit(prod, shift - 1)
+    sticky = wo.any_below(prod, shift - 1)
+    inc = (round_bit == 1) & (sticky | ((kept[0] & _u(1)) == 1))
+    kept = wo.add_small(kept, inc.astype(U64))
+    # carry renormalize: if bit t set, halve (low bits are then zero)
+    carry = wo.get_bit(kept, jnp.full(b, t, jnp.int32)) == 1
+    kept = wo.select(carry, wo.shr(kept, jnp.full(b, 1, jnp.int32)), kept)
+    exp = exp + carry.astype(jnp.int32)
+    # classify result
+    hidden_set = wo.get_bit(kept, jnp.full(b, f, jnp.int32)) == 1
+    overflow = exp > fmt.emax
+    # pack finite
+    biased = jnp.where(hidden_set, (exp + fmt.bias).astype(jnp.int64), 0).astype(U64)
+    frac = wo.mask_low_static(kept, f)
+    packed = list(frac)
+    packed = _or_field(packed, biased, f)
+    packed = _or_field(packed, sign.astype(U64), fmt.total - 1)
+    # overflow -> inf (RNE)
+    inf = wo.const_words((fmt.exp_mask << f), fmt.sig_words, b)
+    inf = _or_field(list(inf), sign.astype(U64), fmt.total - 1)
+    return wo.select(overflow, inf, packed)
+
+
+def _or_field(ws, value_u64, bit_offset: int):
+    """OR a (<64-bit) field into a wordvec at a static bit offset."""
+    j, r = divmod(bit_offset, 64)
+    ws[j] = ws[j] | ((value_u64 << _u(r)) if r < 64 else _u(0))
+    if r > 0 and j + 1 < len(ws):
+        ws[j + 1] = ws[j + 1] | (value_u64 >> _u(64 - r))
+    return ws
+
+
+def _mul_pipeline(fmt: _Fmt, a_bits, b_bits, batch_tile):
+    """Full multiply on packed wordvecs -> packed wordvec."""
+    b = a_bits[0].shape[0]
+    sa, ba, fa = _unpack(fmt, a_bits)
+    sb, bb, fb_ = _unpack(fmt, b_bits)
+    sign = sa ^ sb
+
+    # classes
+    a_is_nan = (ba == fmt.exp_mask) & ~wo.is_zero(fa)
+    b_is_nan = (bb == fmt.exp_mask) & ~wo.is_zero(fb_)
+    a_is_inf = (ba == fmt.exp_mask) & wo.is_zero(fa)
+    b_is_inf = (bb == fmt.exp_mask) & wo.is_zero(fb_)
+    a_is_zero = (ba == 0) & wo.is_zero(fa)
+    b_is_zero = (bb == 0) & wo.is_zero(fb_)
+
+    # finite x finite path
+    ea, siga = _normalize(fmt, ba, fa)
+    eb, sigb = _normalize(fmt, bb, fb_)
+    # guard the all-zero significand (zero inputs) so bitlen math stays sane:
+    # results for those lanes are overridden by the lattice below.
+    one = wo.const_words(1 << fmt.frac_bits, fmt.sig_words, b)
+    siga = wo.select(a_is_zero | a_is_nan | a_is_inf, one, siga)
+    sigb = wo.select(b_is_zero | b_is_nan | b_is_inf, one, sigb)
+    ea = jnp.where(a_is_zero | a_is_nan | a_is_inf, 0, ea)
+    eb = jnp.where(b_is_zero | b_is_nan | b_is_inf, 0, eb)
+
+    a_chunks = _extract_chunks(fmt, siga)
+    b_chunks = _extract_chunks(fmt, sigb)
+    limbs = limbmul.sig_mul(fmt.scheme, a_chunks, b_chunks, batch_tile)
+    prod = _limbs_to_words(fmt, limbs)
+    finite = _round_pack(fmt, sign, ea + eb, prod, batch_tile)
+
+    # special lattice (priority: NaN > inf*0 -> NaN > inf > zero > finite)
+    qnan = wo.const_words((fmt.exp_mask << fmt.frac_bits) | (1 << (fmt.frac_bits - 1)),
+                          fmt.sig_words, b)
+    inf = _or_field(list(wo.const_words(fmt.exp_mask << fmt.frac_bits, fmt.sig_words, b)),
+                    sign.astype(U64), fmt.total - 1)
+    zero = _or_field(list(wo.const_words(0, fmt.sig_words, b)),
+                     sign.astype(U64), fmt.total - 1)
+
+    any_nan = a_is_nan | b_is_nan
+    inf_times_zero = (a_is_inf & b_is_zero) | (a_is_zero & b_is_inf)
+    any_inf = a_is_inf | b_is_inf
+    any_zero = a_is_zero | b_is_zero
+
+    out = finite
+    out = wo.select(any_zero, zero, out)
+    out = wo.select(any_inf, inf, out)
+    out = wo.select(inf_times_zero | any_nan, qnan, out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def mul_fp32(a_u32, b_u32, batch_tile=128):
+    """Batched binary32 multiply on packed uint32 bits."""
+    aw = [a_u32.astype(U64)]
+    bw = [b_u32.astype(U64)]
+    out = _mul_pipeline(FMT32, aw, bw, batch_tile)
+    return out[0].astype(jnp.uint32)
+
+
+def mul_fp64(a_u64, b_u64, batch_tile=128):
+    """Batched binary64 multiply on packed uint64 bits."""
+    out = _mul_pipeline(FMT64, [a_u64], [b_u64], batch_tile)
+    return out[0]
+
+
+def mul_fp128(a_words, b_words, batch_tile=128):
+    """Batched binary128 multiply; operands are uint64 [B, 2] (lo, hi)."""
+    aw = [a_words[:, 0], a_words[:, 1]]
+    bw = [b_words[:, 0], b_words[:, 1]]
+    out = _mul_pipeline(FMT128, aw, bw, batch_tile)
+    return jnp.stack(out, axis=-1)

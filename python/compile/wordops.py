@@ -1,0 +1,160 @@
+"""Vectorized multi-word (uint64-limb) bit machinery for the JAX model.
+
+The IEEE pipeline needs a handful of exact integer operations on values
+wider than 64 bits (the quad significand is 113 bits, its product 226):
+dynamic shifts, sticky-bit queries, bit tests and bit-lengths — all
+batched, all expressible as elementwise uint64 ops so XLA fuses them.
+
+A "wordvec" is a Python list of ``[B]``-shaped uint64 arrays,
+least-significant word first. The word count is static; only shift
+*amounts* are dynamic (per batch element).
+"""
+
+import jax.numpy as jnp
+
+U64 = jnp.uint64
+
+
+def _u(x):
+    return jnp.asarray(x, dtype=U64)
+
+
+def const_words(value: int, n_words: int, batch):
+    """Broadcast a Python int into an n-word wordvec."""
+    return [
+        jnp.full(batch, (value >> (64 * k)) & 0xFFFFFFFFFFFFFFFF, dtype=U64)
+        for k in range(n_words)
+    ]
+
+
+def _shl64(x, n):
+    """x << n with n in [0, 64]; n == 64 yields 0 (numpy shift is UB there)."""
+    n = jnp.asarray(n)
+    safe = jnp.clip(n, 0, 63)
+    shifted = x << safe.astype(U64)
+    return jnp.where(n >= 64, _u(0), shifted)
+
+
+def _shr64(x, n):
+    """x >> n with n in [0, 64]; n == 64 yields 0."""
+    n = jnp.asarray(n)
+    safe = jnp.clip(n, 0, 63)
+    shifted = x >> safe.astype(U64)
+    return jnp.where(n >= 64, _u(0), shifted)
+
+
+def bitlen64(x):
+    """Bit length of a uint64 array (0 for 0), via 6-step binary search."""
+    x = jnp.asarray(x, dtype=U64)
+    out = jnp.zeros(x.shape, dtype=jnp.int32)
+    cur = x
+    for sh in (32, 16, 8, 4, 2, 1):
+        m = cur >> _u(sh)
+        take = m > 0
+        out = out + jnp.where(take, sh, 0).astype(jnp.int32)
+        cur = jnp.where(take, m, cur)
+    return out + (cur > 0).astype(jnp.int32)
+
+
+def bitlen(ws):
+    """Bit length of a wordvec."""
+    out = bitlen64(ws[0])
+    for k in range(1, len(ws)):
+        blk = bitlen64(ws[k])
+        out = jnp.where(blk > 0, blk + 64 * k, out)
+    return out
+
+
+def get_bit(ws, i):
+    """Bit ``i`` (dynamic, per element) of a wordvec -> uint64 0/1.
+
+    Out-of-range indices (including negative) read as 0.
+    """
+    i = jnp.asarray(i)
+    out = jnp.zeros(ws[0].shape, dtype=U64)
+    for k, w in enumerate(ws):
+        sel = (i >= 64 * k) & (i < 64 * (k + 1))
+        bit = _shr64(w, jnp.clip(i - 64 * k, 0, 63)) & _u(1)
+        out = jnp.where(sel, bit, out)
+    return out
+
+
+def any_below(ws, n):
+    """True where any bit strictly below dynamic position ``n`` is set."""
+    n = jnp.asarray(n)
+    acc = jnp.zeros(ws[0].shape, dtype=jnp.bool_)
+    for k, w in enumerate(ws):
+        rel = jnp.clip(n - 64 * k, 0, 64)
+        # mask of the low `rel` bits; rel==64 -> all ones
+        mask = jnp.where(rel >= 64, _u(0xFFFFFFFFFFFFFFFF), _shl64(_u(1), rel) - _u(1))
+        acc = acc | ((w & mask) != 0)
+    return acc
+
+
+def shr(ws, n, out_words=None):
+    """Wordvec >> n (dynamic, per element), producing ``out_words`` words."""
+    n = jnp.asarray(n)
+    m = out_words if out_words is not None else len(ws)
+    out = []
+    for j in range(m):
+        acc = jnp.zeros(ws[0].shape, dtype=U64)
+        for k in range(len(ws)):
+            # ws[k] contributes to out[j] bits: rel = 64*(k - j) - n
+            rel = 64 * (k - j) - n
+            left = _shl64(ws[k], jnp.clip(rel, 0, 64))
+            right = _shr64(ws[k], jnp.clip(-rel, 0, 64))
+            contrib = jnp.where(rel >= 64, _u(0), jnp.where(rel >= 0, left, jnp.where(rel > -64, right, _u(0))))
+            acc = acc | contrib
+        out.append(acc)
+    return out
+
+
+def shl(ws, n, out_words=None):
+    """Wordvec << n (dynamic, per element)."""
+    return shr(ws, -jnp.asarray(n), out_words=out_words or len(ws))
+
+
+def add_small(ws, inc):
+    """Wordvec + inc where ``inc`` is a per-element uint64 (carry rippled)."""
+    out = []
+    carry = jnp.asarray(inc, dtype=U64)
+    for w in ws:
+        s = w + carry
+        out.append(s)
+        carry = (s < w).astype(U64)  # overflow detect
+    return out
+
+
+def mask_low_static(ws, n_bits: int):
+    """Keep only the low ``n_bits`` (static) bits."""
+    out = []
+    for k, w in enumerate(ws):
+        lo = 64 * k
+        if lo >= n_bits:
+            out.append(jnp.zeros_like(w))
+        elif n_bits - lo >= 64:
+            out.append(w)
+        else:
+            out.append(w & _u((1 << (n_bits - lo)) - 1))
+    return out
+
+
+def is_zero(ws):
+    """True where the wordvec is zero."""
+    acc = ws[0] == 0
+    for w in ws[1:]:
+        acc = acc & (w == 0)
+    return acc
+
+
+def words_eq(a, b):
+    """Elementwise equality of two wordvecs."""
+    acc = a[0] == b[0]
+    for x, y in zip(a[1:], b[1:]):
+        acc = acc & (x == y)
+    return acc
+
+
+def select(cond, a, b):
+    """Per-element wordvec select."""
+    return [jnp.where(cond, x, y) for x, y in zip(a, b)]

@@ -1,0 +1,9 @@
+"""pytest root: make `compile` importable and force x64 before jax inits."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

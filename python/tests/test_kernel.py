@@ -1,0 +1,135 @@
+"""Layer-1 kernel correctness: Pallas vs pure-jnp ref vs host big-int.
+
+The CORE correctness signal for the compiled artifacts: the CIVP tile
+structure must produce the exact integer product for every scheme, every
+batch shape, and adversarial operand patterns. Hypothesis drives the
+shape/value sweeps.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import limbmul, ref
+from compile.kernels.schemes import BY_NAME, DOUBLE, QUAD, SINGLE
+
+SCHEMES = [SINGLE, DOUBLE, QUAD]
+
+
+def chunk_arrays(scheme, vals):
+    return jnp.array([ref.int_to_chunks(v, scheme) for v in vals], dtype=jnp.int64)
+
+
+def run_kernel(scheme, avals, bvals, tile):
+    a = chunk_arrays(scheme, avals)
+    b = chunk_arrays(scheme, bvals)
+    return np.asarray(limbmul.sig_mul(scheme, a, b, tile))
+
+
+@pytest.mark.parametrize("scheme", SCHEMES, ids=lambda s: s.name)
+def test_kernel_matches_bigint_oracle(scheme):
+    rng = np.random.default_rng(42)
+    B = 128
+    avals = [int.from_bytes(rng.bytes(16), "little") % (1 << scheme.sig_bits) for _ in range(B)]
+    bvals = [int.from_bytes(rng.bytes(16), "little") % (1 << scheme.sig_bits) for _ in range(B)]
+    out = run_kernel(scheme, avals, bvals, 64)
+    for i in range(B):
+        assert ref.limb24_to_int(out[i]) == avals[i] * bvals[i]
+
+
+@pytest.mark.parametrize("scheme", SCHEMES, ids=lambda s: s.name)
+def test_kernel_matches_jnp_ref(scheme):
+    rng = np.random.default_rng(43)
+    B = 128
+    avals = [int.from_bytes(rng.bytes(16), "little") % (1 << scheme.sig_bits) for _ in range(B)]
+    bvals = [int.from_bytes(rng.bytes(16), "little") % (1 << scheme.sig_bits) for _ in range(B)]
+    a = chunk_arrays(scheme, avals)
+    b = chunk_arrays(scheme, bvals)
+    out = np.asarray(limbmul.sig_mul(scheme, a, b, 128))
+    out_ref = np.asarray(ref.sig_mul_ref(scheme, a, b))
+    np.testing.assert_array_equal(out, out_ref)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES, ids=lambda s: s.name)
+def test_kernel_edge_operands(scheme):
+    bits = scheme.sig_bits
+    edge = [0, 1, (1 << bits) - 1, 1 << (bits - 1), ((1 << bits) - 1) >> 1, 0b1010 % (1 << bits)]
+    # all pairs, padded to a full tile
+    pairs = [(x, y) for x in edge for y in edge]
+    while len(pairs) % 36 != 0:
+        pairs.append((0, 0))
+    avals = [p[0] for p in pairs]
+    bvals = [p[1] for p in pairs]
+    out = run_kernel(scheme, avals, bvals, len(pairs))
+    for i, (x, y) in enumerate(pairs):
+        assert ref.limb24_to_int(out[i]) == x * y, (x, y)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    name=st.sampled_from(["single", "double", "quad"]),
+    seed=st.integers(0, 2**32 - 1),
+    tiles=st.integers(1, 4),
+    tile=st.sampled_from([32, 64, 128]),
+)
+def test_kernel_shape_sweep(name, seed, tiles, tile):
+    """Hypothesis sweep over batch shapes and block sizes."""
+    scheme = BY_NAME[name]
+    B = tiles * tile
+    rng = np.random.default_rng(seed)
+    avals = [int.from_bytes(rng.bytes(16), "little") % (1 << scheme.sig_bits) for _ in range(B)]
+    bvals = [int.from_bytes(rng.bytes(16), "little") % (1 << scheme.sig_bits) for _ in range(B)]
+    out = run_kernel(scheme, avals, bvals, tile)
+    assert out.shape == (B, scheme.n_limb24)
+    idx = rng.integers(0, B, size=min(16, B))
+    for i in idx:
+        assert ref.limb24_to_int(out[i]) == avals[i] * bvals[i]
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    name=st.sampled_from(["single", "double", "quad"]),
+    a=st.integers(min_value=0),
+    b=st.integers(min_value=0),
+)
+def test_kernel_single_pair_property(name, a, b):
+    """Any operand pair multiplies exactly (values reduced mod 2^W)."""
+    scheme = BY_NAME[name]
+    a %= 1 << scheme.sig_bits
+    b %= 1 << scheme.sig_bits
+    out = run_kernel(scheme, [a] * 32, [b] * 32, 32)
+    assert ref.limb24_to_int(out[0]) == a * b
+
+
+def test_scheme_structure_matches_paper():
+    """Fig. 2 / Fig. 4 chunk structure pinned."""
+    assert SINGLE.chunks == (24,)
+    assert DOUBLE.chunks == (24, 24, 9)
+    assert DOUBLE.padded_bits == 57
+    assert QUAD.chunks == (24, 24, 9, 24, 24, 9)
+    assert QUAD.padded_bits == 114
+    # tile census matches Fig. 2(b): four 24x24, four 24x9, one 9x9
+    kinds = DOUBLE.block_kinds()
+    assert kinds.count("24x24") == 4
+    assert kinds.count("24x9") == 4
+    assert kinds.count("9x9") == 1
+    # Fig. 4: 16 / 16 / 4
+    kinds = QUAD.block_kinds()
+    assert kinds.count("24x24") == 16
+    assert kinds.count("24x9") == 16
+    assert kinds.count("9x9") == 4
+
+
+def test_chunk_roundtrip():
+    rng = np.random.default_rng(7)
+    for scheme in SCHEMES:
+        for _ in range(50):
+            v = int.from_bytes(rng.bytes(16), "little") % (1 << scheme.sig_bits)
+            assert ref.chunks_to_int(ref.int_to_chunks(v, scheme), scheme) == v
+
+
+def test_kernel_rejects_misaligned_batch():
+    with pytest.raises(AssertionError):
+        a = jnp.zeros((100, 1), dtype=jnp.int64)
+        limbmul.sig_mul(SINGLE, a, a, 64)

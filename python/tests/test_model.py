@@ -1,0 +1,184 @@
+"""Layer-2 model correctness: the full IEEE pipeline vs hardware (fp32/64)
+and vs the independent host big-int oracle (all precisions)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import ieee_mul_bits
+
+B = 256
+TILE = 128
+
+
+def nasty_bits(rng, total, eb, fb):
+    kind = rng.integers(0, 8)
+    emask = (1 << eb) - 1
+    if kind == 0:
+        return int.from_bytes(rng.bytes(16), "little") % (1 << total)
+    if kind == 1:
+        return 0
+    if kind == 2:  # subnormal
+        return int.from_bytes(rng.bytes(16), "little") % (1 << fb)
+    if kind == 3:  # near overflow
+        return ((emask - 1) << fb) | (int.from_bytes(rng.bytes(16), "little") % (1 << fb))
+    if kind == 4:  # min normal
+        return (1 << fb) | (int.from_bytes(rng.bytes(16), "little") % (1 << fb))
+    if kind == 5:  # all-ones significand
+        return (int(rng.integers(0, emask)) << fb) | ((1 << fb) - 1)
+    if kind == 6:  # power of two
+        return int(rng.integers(0, emask)) << fb
+    return (int(rng.integers(0, emask + 1)) << fb) | (1 << int(rng.integers(0, fb)))
+
+
+def is_qnan(bits, eb, fb):
+    emask = (1 << eb) - 1
+    return ((bits >> fb) & emask) == emask and (bits & ((1 << fb) - 1)) != 0
+
+
+def check_all(got_bits, av, bv, fmt, eb, fb):
+    bad = []
+    for i, (a, b) in enumerate(zip(av, bv)):
+        want = ieee_mul_bits(a, b, fmt)
+        got = got_bits[i]
+        if is_qnan(want, eb, fb):
+            ok = is_qnan(got, eb, fb)
+        else:
+            ok = got == want
+        if not ok:
+            bad.append((i, a, b, got, want))
+    assert not bad, f"{len(bad)} mismatches, first: {bad[0]}"
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_fp64_vs_hardware(seed):
+    rng = np.random.default_rng(seed)
+    av = [nasty_bits(rng, 64, 11, 52) for _ in range(B)]
+    bv = [nasty_bits(rng, 64, 11, 52) for _ in range(B)]
+    out = np.asarray(
+        model.mul_fp64(jnp.array(av, dtype=jnp.uint64), jnp.array(bv, dtype=jnp.uint64), TILE)
+    )
+    for i in range(B):
+        a = np.uint64(av[i]).view(np.float64)
+        b = np.uint64(bv[i]).view(np.float64)
+        with np.errstate(all="ignore"):
+            hw = a * b
+        got = int(out[i])
+        if np.isnan(hw):
+            assert is_qnan(got, 11, 52), (hex(av[i]), hex(bv[i]))
+        else:
+            assert got == int(np.float64(hw).view(np.uint64)), (hex(av[i]), hex(bv[i]), hex(got))
+
+
+@pytest.mark.parametrize("seed", [10, 11, 12])
+def test_fp32_vs_hardware(seed):
+    rng = np.random.default_rng(seed)
+    av = [nasty_bits(rng, 32, 8, 23) for _ in range(B)]
+    bv = [nasty_bits(rng, 32, 8, 23) for _ in range(B)]
+    out = np.asarray(
+        model.mul_fp32(jnp.array(av, dtype=jnp.uint32), jnp.array(bv, dtype=jnp.uint32), TILE)
+    )
+    for i in range(B):
+        a = np.uint32(av[i]).view(np.float32)
+        b = np.uint32(bv[i]).view(np.float32)
+        with np.errstate(all="ignore"):
+            hw = np.float32(a * b)
+        got = int(out[i])
+        if np.isnan(hw):
+            assert is_qnan(got, 8, 23)
+        else:
+            assert got == int(np.float32(hw).view(np.uint32)), (hex(av[i]), hex(bv[i]))
+
+
+@pytest.mark.parametrize("seed", [20, 21, 22, 23])
+def test_fp128_vs_bigint_oracle(seed):
+    rng = np.random.default_rng(seed)
+    av = [nasty_bits(rng, 128, 15, 112) for _ in range(B)]
+    bv = [nasty_bits(rng, 128, 15, 112) for _ in range(B)]
+    aw = jnp.array([[v & ((1 << 64) - 1), v >> 64] for v in av], dtype=jnp.uint64)
+    bw = jnp.array([[v & ((1 << 64) - 1), v >> 64] for v in bv], dtype=jnp.uint64)
+    out = np.asarray(model.mul_fp128(aw, bw, TILE))
+    got_bits = [int(out[i][0]) | (int(out[i][1]) << 64) for i in range(B)]
+    check_all(got_bits, av, bv, "quad", 15, 112)
+
+
+def test_fp64_specials_lattice():
+    INF = 0x7FF0000000000000
+    NINF = 0xFFF0000000000000
+    QNAN = 0x7FF8000000000000
+    ONE = 0x3FF0000000000000
+    NZERO = 0x8000000000000000
+    cases = [
+        (INF, 0, "nan"), (0, INF, "nan"), (QNAN, ONE, "nan"), (ONE, QNAN, "nan"),
+        (INF, ONE, INF), (INF, NINF, NINF), (NINF, NINF, INF),
+        (0, ONE, 0), (NZERO, ONE, NZERO), (NZERO, NZERO, 0),
+        (ONE, ONE, ONE),
+    ]
+    while len(cases) % TILE != 0:
+        cases.append((ONE, ONE, ONE))
+    av = jnp.array([c[0] for c in cases], dtype=jnp.uint64)
+    bv = jnp.array([c[1] for c in cases], dtype=jnp.uint64)
+    out = np.asarray(model.mul_fp64(av, bv, TILE))
+    for i, (_, _, want) in enumerate(cases):
+        got = int(out[i])
+        if want == "nan":
+            assert is_qnan(got, 11, 52), i
+        else:
+            assert got == want, (i, hex(got), hex(want))
+
+
+def test_fp64_subnormal_results():
+    rng = np.random.default_rng(99)
+    # tiny * tiny products that land subnormal or underflow to zero
+    av, bv = [], []
+    for _ in range(B):
+        av.append((int(rng.integers(1, 64)) << 52) | int(rng.integers(0, 1 << 52)))
+        bv.append((int(rng.integers(1, 64)) << 52) | int(rng.integers(0, 1 << 52)))
+    out = np.asarray(
+        model.mul_fp64(jnp.array(av, dtype=jnp.uint64), jnp.array(bv, dtype=jnp.uint64), TILE)
+    )
+    got_bits = [int(v) for v in out]
+    check_all(got_bits, av, bv, "double", 11, 52)
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=st.integers(0, (1 << 64) - 1), b=st.integers(0, (1 << 64) - 1))
+def test_fp64_hypothesis_pairs(a, b):
+    out = np.asarray(
+        model.mul_fp64(
+            jnp.full(TILE, a, dtype=jnp.uint64), jnp.full(TILE, b, dtype=jnp.uint64), TILE
+        )
+    )
+    want = ieee_mul_bits(a, b, "double")
+    got = int(out[0])
+    if is_qnan(want, 11, 52):
+        assert is_qnan(got, 11, 52)
+    else:
+        assert got == want
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=st.integers(0, (1 << 128) - 1), b=st.integers(0, (1 << 128) - 1))
+def test_fp128_hypothesis_pairs(a, b):
+    aw = jnp.tile(jnp.array([[a & ((1 << 64) - 1), a >> 64]], dtype=jnp.uint64), (TILE, 1))
+    bw = jnp.tile(jnp.array([[b & ((1 << 64) - 1), b >> 64]], dtype=jnp.uint64), (TILE, 1))
+    out = np.asarray(model.mul_fp128(aw, bw, TILE))
+    got = int(out[0][0]) | (int(out[0][1]) << 64)
+    want = ieee_mul_bits(a, b, "quad")
+    if is_qnan(want, 15, 112):
+        assert is_qnan(got, 15, 112)
+    else:
+        assert got == want
+
+
+def test_fp128_commutative_batch():
+    rng = np.random.default_rng(5)
+    av = [nasty_bits(rng, 128, 15, 112) for _ in range(B)]
+    bv = [nasty_bits(rng, 128, 15, 112) for _ in range(B)]
+    aw = jnp.array([[v & ((1 << 64) - 1), v >> 64] for v in av], dtype=jnp.uint64)
+    bw = jnp.array([[v & ((1 << 64) - 1), v >> 64] for v in bv], dtype=jnp.uint64)
+    ab = np.asarray(model.mul_fp128(aw, bw, TILE))
+    ba = np.asarray(model.mul_fp128(bw, aw, TILE))
+    np.testing.assert_array_equal(ab, ba)

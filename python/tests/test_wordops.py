@@ -1,0 +1,127 @@
+"""Unit + hypothesis tests for the multi-word bit machinery the JAX model
+is built on — each op checked against Python big-int semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import wordops as wo
+
+MASK64 = (1 << 64) - 1
+
+
+def to_words(vals, n_words):
+    """Python ints -> wordvec of [B] uint64 arrays."""
+    return [
+        jnp.array([(v >> (64 * k)) & MASK64 for v in vals], dtype=jnp.uint64)
+        for k in range(n_words)
+    ]
+
+
+def from_words(ws):
+    """wordvec -> list of Python ints."""
+    arrs = [np.asarray(w, dtype=np.uint64) for w in ws]
+    out = []
+    for i in range(arrs[0].shape[0]):
+        v = 0
+        for k, a in enumerate(arrs):
+            v |= int(a[i]) << (64 * k)
+        out.append(v)
+    return out
+
+
+ints256 = st.lists(st.integers(0, (1 << 256) - 1), min_size=1, max_size=16)
+
+
+@settings(max_examples=50, deadline=None)
+@given(vals=ints256)
+def test_bitlen(vals):
+    ws = to_words(vals, 4)
+    got = np.asarray(wo.bitlen(ws))
+    want = [v.bit_length() for v in vals]
+    assert list(got) == want
+
+
+@settings(max_examples=50, deadline=None)
+@given(vals=ints256, bit=st.integers(0, 300))
+def test_get_bit(vals, bit):
+    ws = to_words(vals, 4)
+    idx = jnp.full(len(vals), bit, dtype=jnp.int32)
+    got = np.asarray(wo.get_bit(ws, idx))
+    want = [(v >> bit) & 1 if bit < 256 else 0 for v in vals]
+    assert list(got) == want
+
+
+@settings(max_examples=50, deadline=None)
+@given(vals=ints256, n=st.integers(0, 300))
+def test_any_below(vals, n):
+    ws = to_words(vals, 4)
+    nn = jnp.full(len(vals), n, dtype=jnp.int32)
+    got = np.asarray(wo.any_below(ws, nn))
+    want = [(v & ((1 << min(n, 256)) - 1)) != 0 for v in vals]
+    assert list(got) == want
+
+
+@settings(max_examples=50, deadline=None)
+@given(vals=ints256, shift=st.integers(0, 280))
+def test_shr(vals, shift):
+    ws = to_words(vals, 4)
+    s = jnp.full(len(vals), shift, dtype=jnp.int32)
+    got = from_words(wo.shr(ws, s))
+    want = [v >> shift for v in vals]
+    assert got == want
+
+
+@settings(max_examples=50, deadline=None)
+@given(vals=st.lists(st.integers(0, (1 << 100) - 1), min_size=1, max_size=16),
+       shift=st.integers(0, 150))
+def test_shl_within_width(vals, shift):
+    # shifts that stay inside 256 bits must be exact
+    ws = to_words(vals, 4)
+    s = jnp.full(len(vals), shift, dtype=jnp.int32)
+    got = from_words(wo.shl(ws, s))
+    want = [(v << shift) & ((1 << 256) - 1) for v in vals]
+    assert got == want
+
+
+@settings(max_examples=50, deadline=None)
+@given(vals=ints256, inc=st.lists(st.integers(0, 1), min_size=16, max_size=16))
+def test_add_small(vals, inc):
+    vals = (vals * 16)[:16]
+    ws = to_words(vals, 4)
+    iv = jnp.array(inc, dtype=jnp.uint64)
+    got = from_words(wo.add_small(ws, iv))
+    want = [(v + i) & ((1 << 256) - 1) for v, i in zip(vals, inc)]
+    assert got == want
+
+
+@settings(max_examples=50, deadline=None)
+@given(vals=ints256, nbits=st.integers(0, 256))
+def test_mask_low_static(vals, nbits):
+    ws = to_words(vals, 4)
+    got = from_words(wo.mask_low_static(ws, nbits))
+    want = [v & ((1 << nbits) - 1) for v in vals]
+    assert got == want
+
+
+def test_is_zero_and_select():
+    ws = to_words([0, 5, 1 << 200], 4)
+    assert list(np.asarray(wo.is_zero(ws))) == [True, False, False]
+    other = to_words([7, 7, 7], 4)
+    cond = jnp.array([True, False, True])
+    sel = from_words(wo.select(cond, ws, other))
+    assert sel == [0, 7, 1 << 200]
+
+
+def test_const_words():
+    ws = wo.const_words((1 << 130) | 5, 4, 3)
+    assert from_words(ws) == [(1 << 130) | 5] * 3
+
+
+def test_shift_helpers_edge_64():
+    # n == 64 must yield 0, not UB
+    x = jnp.array([MASK64], dtype=jnp.uint64)
+    assert int(np.asarray(wo._shl64(x, jnp.array([64])))[0]) == 0
+    assert int(np.asarray(wo._shr64(x, jnp.array([64])))[0]) == 0
+    assert int(np.asarray(wo.bitlen64(x))[0]) == 64
+    assert int(np.asarray(wo.bitlen64(jnp.array([0], dtype=jnp.uint64)))[0]) == 0

@@ -1,0 +1,196 @@
+"""Generate binary128 multiplication golden vectors with pure-integer math.
+
+Independent oracle for the Rust softfloat: implements IEEE-754 binary128
+multiply (round-to-nearest-even) directly on Python ints — no shared code
+with the Rust pipeline. Output is a Rust array literal pasted into
+`rust/src/fpu/golden.rs`.
+"""
+import random
+
+EXP_BITS = 15
+FRAC_BITS = 112
+BIAS = (1 << (EXP_BITS - 1)) - 1
+EMIN = 1 - BIAS
+EMAX = BIAS
+EXP_MASK = (1 << EXP_BITS) - 1
+TOTAL = 128
+
+
+def unpack(bits):
+    sign = bits >> 127
+    biased = (bits >> FRAC_BITS) & EXP_MASK
+    frac = bits & ((1 << FRAC_BITS) - 1)
+    if biased == EXP_MASK:
+        return (sign, 'nan' if frac else 'inf', 0, 0)
+    if biased == 0:
+        if frac == 0:
+            return (sign, 'zero', 0, 0)
+        return (sign, 'fin', EMIN, frac)  # subnormal, no hidden bit
+    return (sign, 'fin', biased - BIAS, frac | (1 << FRAC_BITS))
+
+
+def mul_mode(a_bits, b_bits, mode):
+    """IEEE binary128 multiply under any rounding-direction attribute.
+
+    mode: 'rne' | 'rna' | 'rtz' | 'rup' | 'rdn'
+    """
+    sa, ca, ea, ma = unpack(a_bits)
+    sb, cb, eb, mb = unpack(b_bits)
+    sign = sa ^ sb
+    QNAN = (EXP_MASK << FRAC_BITS) | (1 << (FRAC_BITS - 1))
+    INF = EXP_MASK << FRAC_BITS
+    if ca == 'nan' or cb == 'nan':
+        return QNAN
+    if (ca == 'inf' and cb == 'zero') or (ca == 'zero' and cb == 'inf'):
+        return QNAN
+    if ca == 'inf' or cb == 'inf':
+        return (sign << 127) | INF
+    if ca == 'zero' or cb == 'zero':
+        return sign << 127
+    while ma < (1 << FRAC_BITS):
+        ma <<= 1
+        ea -= 1
+    while mb < (1 << FRAC_BITS):
+        mb <<= 1
+        eb -= 1
+    prod = ma * mb
+    top = prod.bit_length() - 1
+    exp = ea + eb + (top - 2 * FRAC_BITS)
+    shift = top - FRAC_BITS
+    if exp < EMIN:
+        shift += EMIN - exp
+        exp = EMIN
+    kept = prod >> shift
+    rem = prod & ((1 << shift) - 1) if shift > 0 else 0
+    half = 1 << (shift - 1) if shift > 0 else 0
+    inc = False
+    if rem:
+        if mode == 'rne':
+            inc = rem > half or (rem == half and kept & 1)
+        elif mode == 'rna':
+            inc = rem >= half
+        elif mode == 'rtz':
+            inc = False
+        elif mode == 'rup':
+            inc = sign == 0
+        elif mode == 'rdn':
+            inc = sign == 1
+    if inc:
+        kept += 1
+    if kept.bit_length() > FRAC_BITS + 1:
+        kept >>= 1
+        exp += 1
+    if exp > EMAX:
+        to_inf = mode in ('rne', 'rna') or (mode == 'rup' and sign == 0) or (
+            mode == 'rdn' and sign == 1)
+        if to_inf:
+            return (sign << 127) | INF
+        return (sign << 127) | ((EXP_MASK - 1) << FRAC_BITS) | ((1 << FRAC_BITS) - 1)
+    if kept == 0:
+        return sign << 127
+    if kept < (1 << FRAC_BITS):
+        return (sign << 127) | kept
+    return (sign << 127) | ((exp + BIAS) << FRAC_BITS) | (kept - (1 << FRAC_BITS))
+
+
+def mul_rne(a_bits, b_bits):
+    sa, ca, ea, ma = unpack(a_bits)
+    sb, cb, eb, mb = unpack(b_bits)
+    sign = sa ^ sb
+    QNAN = (EXP_MASK << FRAC_BITS) | (1 << (FRAC_BITS - 1))
+    if ca == 'nan' or cb == 'nan':
+        return QNAN
+    if (ca == 'inf' and cb == 'zero') or (ca == 'zero' and cb == 'inf'):
+        return QNAN
+    if ca == 'inf' or cb == 'inf':
+        return (sign << 127) | (EXP_MASK << FRAC_BITS)
+    if ca == 'zero' or cb == 'zero':
+        return sign << 127
+    # normalize subnormals
+    while ma < (1 << FRAC_BITS):
+        ma <<= 1
+        ea -= 1
+    while mb < (1 << FRAC_BITS):
+        mb <<= 1
+        eb -= 1
+    prod = ma * mb
+    top = prod.bit_length() - 1
+    exp = ea + eb + (top - 2 * FRAC_BITS)
+    shift = top - FRAC_BITS
+    if exp < EMIN:
+        shift += EMIN - exp
+        exp = EMIN
+    kept = prod >> shift
+    rem = prod & ((1 << shift) - 1)
+    half = 1 << (shift - 1) if shift > 0 else 0
+    if shift > 0 and (rem > half or (rem == half and kept & 1)):
+        kept += 1
+    if kept.bit_length() > FRAC_BITS + 1:
+        kept >>= 1
+        exp += 1
+    if exp > EMAX:
+        return (sign << 127) | (EXP_MASK << FRAC_BITS)  # inf (RNE)
+    if kept == 0:
+        return sign << 127
+    if kept < (1 << FRAC_BITS):
+        return (sign << 127) | kept  # subnormal (exp == EMIN)
+    return (sign << 127) | ((exp + BIAS) << FRAC_BITS) | (kept - (1 << FRAC_BITS))
+
+
+def rand_bits(rng):
+    kind = rng.randrange(8)
+    if kind == 0:
+        return rng.getrandbits(128)
+    if kind == 1:
+        return rng.getrandbits(FRAC_BITS)  # subnormal
+    if kind == 2:  # near overflow
+        return ((EXP_MASK - 1 - rng.randrange(4)) << FRAC_BITS) | rng.getrandbits(FRAC_BITS)
+    if kind == 3:  # near underflow
+        return ((1 + rng.randrange(4)) << FRAC_BITS) | rng.getrandbits(FRAC_BITS)
+    if kind == 4:  # all-ones significand
+        return (rng.randrange(EXP_MASK) << FRAC_BITS) | ((1 << FRAC_BITS) - 1)
+    if kind == 5:  # power of two
+        return rng.randrange(EXP_MASK) << FRAC_BITS
+    if kind == 6:  # sparse significand
+        return (rng.randrange(EXP_MASK) << FRAC_BITS) | (1 << rng.randrange(FRAC_BITS))
+    return rng.getrandbits(128) | (1 << 127)  # negative
+
+
+def main():
+    rng = random.Random(20260710)
+    cases = []
+    # Directed cases
+    ONE = 0x3FFF << FRAC_BITS
+    directed = [
+        (ONE, ONE),
+        (ONE, 1),  # 1 * min_subnormal
+        ((1 << FRAC_BITS) - 1, (1 << FRAC_BITS) - 1),  # max subnormal^2 -> 0
+        (((EXP_MASK - 1) << FRAC_BITS) | ((1 << FRAC_BITS) - 1),) * 2,  # max_finite^2
+        ((0x3FFE << FRAC_BITS), (1 << FRAC_BITS)),  # 0.5 * min_normal
+        ((0x3FFF << FRAC_BITS) | ((1 << FRAC_BITS) - 1),) * 2,  # (2-ulp)^2 round
+    ]
+    for a, b in directed:
+        cases.append((a, b, mul_rne(a, b)))
+    while len(cases) < 64:
+        a, b = rand_bits(rng), rand_bits(rng)
+        cases.append((a, b, mul_rne(a, b)))
+    print("// @generated by python/tools/gen_golden_fp128.py — do not edit.")
+    print("pub const GOLDEN_FP128_MUL_RNE: &[(u128, u128, u128)] = &[")
+    for a, b, r in cases:
+        print(f"    ({a:#034x}, {b:#034x}, {r:#034x}),")
+    print("];")
+    # directed-mode vectors: (mode_idx, a, b, result); mode order matches
+    # RoundMode::ALL = [NearestEven, NearestAway, TowardZero, TowardPositive,
+    # TowardNegative]
+    modes = ['rne', 'rna', 'rtz', 'rup', 'rdn']
+    print()
+    print("pub const GOLDEN_FP128_MUL_MODES: &[(u8, u128, u128, u128)] = &[")
+    for mi, mode in enumerate(modes):
+        for a, b, _ in cases[:24]:
+            r = mul_mode(a, b, mode)
+            print(f"    ({mi}, {a:#034x}, {b:#034x}, {r:#034x}),")
+    print("];")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+//! Bench-harness support (the build environment has no registry access, so
+//! `criterion` is unavailable; this module provides the timing loop the
+//! `benches/` targets share).
+//!
+//! Protocol per measurement: warmup iterations, then `samples` timed
+//! batches of `iters_per_sample` calls; reports ns/op at p50 (median of
+//! batch means), mean, and min — the same summary criterion prints. Batch
+//! results are black-boxed to keep the optimizer honest.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+/// One measurement result.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Median ns/op across samples.
+    pub ns_per_op_p50: f64,
+    /// Mean ns/op.
+    pub ns_per_op_mean: f64,
+    /// Fastest sample's ns/op.
+    pub ns_per_op_min: f64,
+    /// Total ops timed.
+    pub total_ops: u64,
+}
+
+impl Measurement {
+    /// Ops per second at the median.
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.ns_per_op_p50 == 0.0 {
+            return f64::INFINITY;
+        }
+        1e9 / self.ns_per_op_p50
+    }
+}
+
+/// Time `op` (which should perform ONE operation per call).
+pub fn bench(name: &str, warmup: u64, samples: u64, iters_per_sample: u64, mut op: impl FnMut()) -> Measurement {
+    for _ in 0..warmup {
+        op();
+    }
+    let mut per_sample = Vec::with_capacity(samples as usize);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters_per_sample {
+            op();
+        }
+        let dt = t0.elapsed().as_nanos() as f64;
+        per_sample.push(dt / iters_per_sample as f64);
+    }
+    per_sample.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let m = Measurement {
+        ns_per_op_p50: per_sample[per_sample.len() / 2],
+        ns_per_op_mean: per_sample.iter().sum::<f64>() / per_sample.len() as f64,
+        ns_per_op_min: per_sample[0],
+        total_ops: samples * iters_per_sample,
+    };
+    println!(
+        "{name:<44} {:>10.1} ns/op (p50)   {:>10.1} ns/op (min)   {:>12.0} op/s",
+        m.ns_per_op_p50,
+        m.ns_per_op_min,
+        m.ops_per_sec()
+    );
+    m
+}
+
+/// Convenience: black-box a value (re-export for benches).
+pub fn bb<T>(v: T) -> T {
+    black_box(v)
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a table row (generic alignment helper).
+pub fn row(cols: &[&str], widths: &[usize]) {
+    let mut line = String::new();
+    for (c, w) in cols.iter().zip(widths) {
+        line.push_str(&format!("{c:<w$} ", w = w));
+    }
+    println!("{}", line.trim_end());
+}

@@ -1,0 +1,99 @@
+//! Minimal argument parser (offline build — no clap).
+//!
+//! Supports `binary <command> [--key value] [--flag]` invocations, which is
+//! all `civp-server` needs.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: a positional command plus `--key value` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First positional argument.
+    pub command: Option<String>,
+    /// `--key value` pairs and bare `--flag`s (value `"true"`).
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                let value = match iter.peek() {
+                    Some(v) if !v.starts_with("--") => iter.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                if out.options.insert(key.to_string(), value).is_some() {
+                    bail!("duplicate option --{key}");
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                bail!("unexpected positional argument {arg:?}");
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Integer option with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    /// Flag presence.
+    pub fn get_flag(&self, key: &str) -> bool {
+        self.options.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_options() {
+        let a = p(&["serve", "--workers", "4", "--verbose", "--name", "x"]);
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get_usize("workers", 1).unwrap(), 4);
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.get_str("name", ""), "x");
+        assert_eq!(a.get_str("missing", "d"), "d");
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Args::parse(vec!["a".into(), "b".into()]).is_err());
+        assert!(Args::parse(vec!["--x".into(), "1".into(), "--x".into(), "2".into()]).is_err());
+        assert!(Args::parse(vec!["--".into()]).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = p(&["run", "--flag", "--n", "3"]);
+        assert!(a.get_flag("flag"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,10 @@
+//! Configuration substrate: a minimal TOML-subset parser (offline build —
+//! no serde) and the typed service configuration.
+
+mod schema;
+mod toml;
+#[cfg(test)]
+mod tests;
+
+pub use schema::ServiceConfig;
+pub use toml::{parse_toml, TomlValue};

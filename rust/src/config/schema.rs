@@ -1,0 +1,170 @@
+//! Typed service configuration with defaults, file loading and validation.
+
+use super::toml::{parse_toml, TomlValue};
+use crate::decomp::SchemeKind;
+use crate::fabric::FabricKind;
+use crate::trace::WorkloadSpec;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Everything `civp-server` needs to run. Every field has a default; a
+/// config file overrides selectively.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceConfig {
+    /// Artifacts directory (HLO + manifest).
+    pub artifacts_dir: String,
+    /// Worker threads per precision queue.
+    pub workers: usize,
+    /// Max requests per batch (dispatch earlier on timeout).
+    pub max_batch: usize,
+    /// Batch linger: how long to wait filling a batch, in microseconds.
+    pub linger_us: u64,
+    /// Bounded queue depth per precision (backpressure beyond this).
+    pub queue_depth: usize,
+    /// Partition organization for the simulated fabric accounting.
+    pub scheme: SchemeKind,
+    /// Fabric preset to account against.
+    pub fabric: FabricKind,
+    /// Fabric scale (number of quad-columns).
+    pub fabric_scale: u32,
+    /// Workload for built-in generators.
+    pub workload: WorkloadSpec,
+    /// Number of requests for batch/bench runs.
+    pub requests: usize,
+    /// PRNG seed.
+    pub seed: u64,
+    /// Use the PJRT engine (false = native softfloat backend only).
+    pub use_pjrt: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            artifacts_dir: "artifacts".to_string(),
+            workers: 2,
+            max_batch: 256,
+            linger_us: 200,
+            queue_depth: 4096,
+            scheme: SchemeKind::Civp,
+            fabric: FabricKind::Civp,
+            fabric_scale: 1,
+            workload: WorkloadSpec::Graphics,
+            requests: 10_000,
+            seed: 20260710,
+            use_pjrt: true,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Load from a TOML-subset file, overriding defaults.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<ServiceConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn from_toml(text: &str) -> Result<ServiceConfig> {
+        let kv = parse_toml(text)?;
+        let mut cfg = ServiceConfig::default();
+        cfg.apply(&kv)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply(&mut self, kv: &BTreeMap<String, TomlValue>) -> Result<()> {
+        for (key, value) in kv {
+            match key.as_str() {
+                "service.artifacts_dir" => self.artifacts_dir = req_str(key, value)?,
+                "service.workers" => self.workers = req_usize(key, value)?,
+                "service.use_pjrt" => {
+                    self.use_pjrt =
+                        value.as_bool().with_context(|| format!("{key} must be bool"))?
+                }
+                "batcher.max_batch" => self.max_batch = req_usize(key, value)?,
+                "batcher.linger_us" => self.linger_us = req_usize(key, value)? as u64,
+                "batcher.queue_depth" => self.queue_depth = req_usize(key, value)?,
+                "fabric.scheme" => {
+                    let s = req_str(key, value)?;
+                    self.scheme = match s.as_str() {
+                        "civp" => SchemeKind::Civp,
+                        "18x18" => SchemeKind::Baseline18,
+                        "25x18" => SchemeKind::Baseline25x18,
+                        "9x9" => SchemeKind::Baseline9,
+                        other => bail!("unknown scheme {other:?}"),
+                    };
+                }
+                "fabric.kind" => {
+                    let s = req_str(key, value)?;
+                    self.fabric = match s.as_str() {
+                        "civp" => FabricKind::Civp,
+                        "legacy" => FabricKind::Legacy,
+                        other => bail!("unknown fabric {other:?}"),
+                    };
+                }
+                "fabric.scale" => self.fabric_scale = req_usize(key, value)? as u32,
+                "workload.spec" => {
+                    let s = req_str(key, value)?;
+                    self.workload = WorkloadSpec::parse(&s)
+                        .with_context(|| format!("unknown workload {s:?}"))?;
+                }
+                "workload.requests" => self.requests = req_usize(key, value)?,
+                "workload.seed" => self.seed = req_usize(key, value)? as u64,
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Sanity-check field ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("service.workers must be >= 1");
+        }
+        if self.max_batch == 0 {
+            bail!("batcher.max_batch must be >= 1");
+        }
+        if self.queue_depth < self.max_batch {
+            bail!(
+                "batcher.queue_depth ({}) must be >= max_batch ({})",
+                self.queue_depth,
+                self.max_batch
+            );
+        }
+        if self.fabric_scale == 0 {
+            bail!("fabric.scale must be >= 1");
+        }
+        // scheme/fabric compatibility mirrors `FabricConfig::can_serve`:
+        // CIVP tiles need 24x24/24x9 blocks (CIVP fabric only); 18x18 and
+        // 25x18 tiles need the legacy fabric; 9x9 runs anywhere.
+        let compatible = match self.scheme {
+            SchemeKind::Civp => self.fabric == FabricKind::Civp,
+            SchemeKind::Baseline18 | SchemeKind::Baseline25x18 => {
+                self.fabric == FabricKind::Legacy
+            }
+            SchemeKind::Baseline9 => true,
+        };
+        if !compatible {
+            bail!(
+                "scheme {:?} cannot run on fabric {:?} (missing block kinds)",
+                self.scheme,
+                self.fabric
+            );
+        }
+        Ok(())
+    }
+}
+
+fn req_str(key: &str, v: &TomlValue) -> Result<String> {
+    Ok(v.as_str().with_context(|| format!("{key} must be a string"))?.to_string())
+}
+
+fn req_usize(key: &str, v: &TomlValue) -> Result<usize> {
+    let i = v.as_int().with_context(|| format!("{key} must be an integer"))?;
+    if i < 0 {
+        bail!("{key} must be non-negative");
+    }
+    Ok(i as usize)
+}

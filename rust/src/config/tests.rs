@@ -1,0 +1,133 @@
+//! Config parser + schema tests.
+
+use super::*;
+use crate::decomp::SchemeKind;
+use crate::fabric::FabricKind;
+use crate::trace::WorkloadSpec;
+
+#[test]
+fn toml_scalars() {
+    let kv = parse_toml(
+        r#"
+# top comment
+name = "civp"   # trailing comment
+count = 42
+neg = -3
+big = 1_000_000
+hexv = 0xff
+ratio = 0.5
+sci = 1e3
+on = true
+off = false
+[section]
+key = "value"
+"#,
+    )
+    .unwrap();
+    assert_eq!(kv["name"], TomlValue::Str("civp".into()));
+    assert_eq!(kv["count"], TomlValue::Int(42));
+    assert_eq!(kv["neg"], TomlValue::Int(-3));
+    assert_eq!(kv["big"], TomlValue::Int(1_000_000));
+    assert_eq!(kv["hexv"], TomlValue::Int(255));
+    assert_eq!(kv["ratio"], TomlValue::Float(0.5));
+    assert_eq!(kv["sci"], TomlValue::Float(1000.0));
+    assert_eq!(kv["on"], TomlValue::Bool(true));
+    assert_eq!(kv["off"], TomlValue::Bool(false));
+    assert_eq!(kv["section.key"], TomlValue::Str("value".into()));
+}
+
+#[test]
+fn toml_hash_inside_string() {
+    let kv = parse_toml(r##"path = "a#b""##).unwrap();
+    assert_eq!(kv["path"], TomlValue::Str("a#b".into()));
+}
+
+#[test]
+fn toml_errors() {
+    assert!(parse_toml("[unterminated").is_err());
+    assert!(parse_toml("no_equals_here").is_err());
+    assert!(parse_toml("x = ").is_err());
+    assert!(parse_toml("x = \"open").is_err());
+    assert!(parse_toml("x = 1\nx = 2").is_err());
+    assert!(parse_toml("= 5").is_err());
+    assert!(parse_toml("x = what").is_err());
+}
+
+#[test]
+fn value_accessors() {
+    assert_eq!(TomlValue::Int(3).as_float(), Some(3.0));
+    assert_eq!(TomlValue::Float(0.5).as_int(), None);
+    assert_eq!(TomlValue::Str("x".into()).as_bool(), None);
+    assert_eq!(TomlValue::Bool(true).as_bool(), Some(true));
+}
+
+#[test]
+fn config_defaults() {
+    let cfg = ServiceConfig::default();
+    assert_eq!(cfg.scheme, SchemeKind::Civp);
+    assert_eq!(cfg.fabric, FabricKind::Civp);
+    cfg.validate().unwrap();
+}
+
+#[test]
+fn config_overrides() {
+    let cfg = ServiceConfig::from_toml(
+        r#"
+[service]
+workers = 4
+use_pjrt = false
+[batcher]
+max_batch = 64
+linger_us = 50
+queue_depth = 1024
+[fabric]
+scheme = "18x18"
+kind = "legacy"
+scale = 2
+[workload]
+spec = "scientific"
+requests = 500
+seed = 99
+"#,
+    )
+    .unwrap();
+    assert_eq!(cfg.workers, 4);
+    assert!(!cfg.use_pjrt);
+    assert_eq!(cfg.max_batch, 64);
+    assert_eq!(cfg.linger_us, 50);
+    assert_eq!(cfg.scheme, SchemeKind::Baseline18);
+    assert_eq!(cfg.fabric, FabricKind::Legacy);
+    assert_eq!(cfg.fabric_scale, 2);
+    assert_eq!(cfg.workload, WorkloadSpec::Scientific);
+    assert_eq!(cfg.requests, 500);
+    assert_eq!(cfg.seed, 99);
+}
+
+#[test]
+fn config_rejects_unknown_key() {
+    assert!(ServiceConfig::from_toml("[service]\nbogus = 1\n").is_err());
+}
+
+#[test]
+fn config_rejects_incompatible_scheme_fabric() {
+    // CIVP scheme on legacy fabric: missing 24x24 blocks.
+    let err = ServiceConfig::from_toml("[fabric]\nscheme = \"civp\"\nkind = \"legacy\"\n");
+    assert!(err.is_err());
+    // 18x18 scheme on civp fabric: missing 18x18 blocks.
+    let err = ServiceConfig::from_toml("[fabric]\nscheme = \"18x18\"\nkind = \"civp\"\n");
+    assert!(err.is_err());
+    // 9x9 runs anywhere.
+    ServiceConfig::from_toml("[fabric]\nscheme = \"9x9\"\nkind = \"civp\"\n").unwrap();
+    ServiceConfig::from_toml("[fabric]\nscheme = \"9x9\"\nkind = \"legacy\"\n").unwrap();
+}
+
+#[test]
+fn config_range_validation() {
+    assert!(ServiceConfig::from_toml("[service]\nworkers = 0\n").is_err());
+    assert!(ServiceConfig::from_toml("[batcher]\nmax_batch = 0\n").is_err());
+    assert!(
+        ServiceConfig::from_toml("[batcher]\nmax_batch = 512\nqueue_depth = 256\n").is_err()
+    );
+    assert!(ServiceConfig::from_toml("[fabric]\nscale = 0\n").is_err());
+    assert!(ServiceConfig::from_toml("[workload]\nrequests = -1\n").is_err());
+}

@@ -1,0 +1,138 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supports what the service config needs: `[section]` headers, `key =
+//! value` with string / integer / float / bool values, `#` comments and
+//! blank lines. Nested tables, arrays and multi-line strings are out of
+//! scope (a config that needs them should graduate to a real TOML crate
+//! when the build environment has registry access).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl TomlValue {
+    /// As string, if a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// As integer (accepts Int only).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    /// As float (accepts Float or Int).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse TOML-subset text into `section.key -> value` (keys outside any
+/// section land under the empty section `""`).
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1)
+            };
+            let name = name.trim();
+            if name.is_empty() || name.contains(['[', ']']) {
+                bail!("line {}: bad section name {name:?}", lineno + 1);
+            }
+            section = name.to_string();
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("line {}: expected `key = value`, got {line:?}", lineno + 1)
+        };
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        let parsed = parse_value(value.trim())
+            .with_context(|| format!("line {}: value for {full}", lineno + 1))?;
+        if out.insert(full.clone(), parsed).is_some() {
+            bail!("line {}: duplicate key {full}", lineno + 1);
+        }
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue> {
+    if v.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(stripped) = v.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else { bail!("unterminated string") };
+        if inner.contains('"') {
+            bail!("embedded quote in string (escapes unsupported)");
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match v {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if v.contains(['.', 'e', 'E']) && !v.starts_with("0x") {
+        if let Ok(f) = v.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Some(hex) = v.strip_prefix("0x") {
+        if let Ok(i) = i64::from_str_radix(hex, 16) {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(i) = v.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    bail!("cannot parse value {v:?}")
+}

@@ -1,0 +1,108 @@
+//! Execution backends: native softfloat (+CIVP decomposition accounting)
+//! and the AOT PJRT engine.
+
+use crate::decomp::{DecompMul, ExecStats, Precision, SchemeKind};
+use crate::fpu::{mul_bits, RoundMode, DOUBLE, QUAD, SINGLE};
+use crate::runtime::EngineHandle;
+use crate::wideint::U128;
+use anyhow::Result;
+
+/// A batch executor for one precision class.
+pub trait Backend: Send {
+    /// Multiply packed bit patterns elementwise. All slices have equal
+    /// length; results are packed patterns of the same precision.
+    fn execute(&mut self, precision: Precision, a: &[u128], b: &[u128]) -> Result<Vec<u128>>;
+    /// Backend display name.
+    fn name(&self) -> &'static str;
+    /// Decomposition stats accumulated so far (native backend only).
+    fn exec_stats(&self) -> Option<&ExecStats> {
+        None
+    }
+}
+
+/// How a service should construct its workers' backends.
+#[derive(Clone)]
+pub enum BackendChoice {
+    /// Native softfloat with the given partition organization.
+    Native(SchemeKind),
+    /// AOT JAX/Pallas artifacts through PJRT (pinned executor thread).
+    Pjrt(EngineHandle),
+}
+
+impl BackendChoice {
+    /// Instantiate a backend for one worker.
+    pub fn build(&self) -> Box<dyn Backend> {
+        match self {
+            BackendChoice::Native(kind) => Box::new(NativeBackend::new(*kind)),
+            BackendChoice::Pjrt(handle) => Box::new(PjrtBackend::new(handle.clone())),
+        }
+    }
+}
+
+/// Native softfloat backend: the IEEE pipeline with the CIVP (or baseline)
+/// decomposed significand multiplier. Tallies block usage per multiply.
+pub struct NativeBackend {
+    mul: DecompMul,
+}
+
+impl NativeBackend {
+    /// New backend with the given organization.
+    pub fn new(kind: SchemeKind) -> NativeBackend {
+        NativeBackend { mul: DecompMul::new(kind) }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn execute(&mut self, precision: Precision, a: &[u128], b: &[u128]) -> Result<Vec<u128>> {
+        anyhow::ensure!(a.len() == b.len(), "operand length mismatch");
+        let fmt = match precision {
+            Precision::Single => &SINGLE,
+            Precision::Double => &DOUBLE,
+            Precision::Quad => &QUAD,
+        };
+        let mut out = Vec::with_capacity(a.len());
+        for (&x, &y) in a.iter().zip(b) {
+            let (bits, _flags) = mul_bits(
+                fmt,
+                U128::from_u128(x),
+                U128::from_u128(y),
+                RoundMode::NearestEven,
+                &mut self.mul,
+            );
+            out.push(bits.as_u128());
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn exec_stats(&self) -> Option<&ExecStats> {
+        Some(&self.mul.stats)
+    }
+}
+
+/// PJRT backend: batches go through the compiled HLO artifacts on the
+/// pinned executor thread.
+pub struct PjrtBackend {
+    handle: EngineHandle,
+}
+
+impl PjrtBackend {
+    /// New backend sharing a loaded engine.
+    pub fn new(handle: EngineHandle) -> PjrtBackend {
+        PjrtBackend { handle }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn execute(&mut self, precision: Precision, a: &[u128], b: &[u128]) -> Result<Vec<u128>> {
+        anyhow::ensure!(a.len() == b.len(), "operand length mismatch");
+        self.handle.mul(precision, a.to_vec(), b.to_vec())
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

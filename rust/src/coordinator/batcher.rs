@@ -1,0 +1,134 @@
+//! Bounded dynamic batcher: size + linger dispatch policy, blocking or
+//! failing submit (backpressure), condvar-based (no busy wait).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a submit failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue at capacity (try_submit only).
+    QueueFull,
+    /// Batcher shut down.
+    Closed,
+}
+
+struct Inner<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded MPMC batch queue.
+///
+/// Producers `submit` (blocking on backpressure) or `try_submit`
+/// (fail-fast). Consumers call `next_batch(max, linger)`: it returns as
+/// soon as `max` items are waiting, or `linger` after the *first* waiting
+/// item arrived — the classic dynamic-batching policy (vLLM-style) that
+/// trades a bounded latency hit for batch efficiency.
+pub struct Batcher<T> {
+    inner: Mutex<Inner<T>>,
+    /// Signalled when items arrive or the batcher closes.
+    items: Condvar,
+    /// Signalled when space frees up.
+    space: Condvar,
+    depth: usize,
+}
+
+impl<T> Batcher<T> {
+    /// New batcher with a bounded depth.
+    pub fn new(depth: usize) -> Batcher<T> {
+        assert!(depth > 0);
+        Batcher {
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            items: Condvar::new(),
+            space: Condvar::new(),
+            depth,
+        }
+    }
+
+    /// Current queue length.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking submit; fails when full or closed.
+    pub fn try_submit(&self, item: T) -> Result<(), SubmitError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(SubmitError::Closed);
+        }
+        if g.queue.len() >= self.depth {
+            return Err(SubmitError::QueueFull);
+        }
+        g.queue.push_back(item);
+        drop(g);
+        self.items.notify_one();
+        Ok(())
+    }
+
+    /// Blocking submit: waits for space (backpressure) unless closed.
+    pub fn submit(&self, item: T) -> Result<(), SubmitError> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(SubmitError::Closed);
+            }
+            if g.queue.len() < self.depth {
+                g.queue.push_back(item);
+                drop(g);
+                self.items.notify_one();
+                return Ok(());
+            }
+            g = self.space.wait(g).unwrap();
+        }
+    }
+
+    /// Take the next batch: up to `max` items, dispatching early once the
+    /// oldest waiting item has lingered `linger`. Returns `None` only after
+    /// close with an empty queue.
+    pub fn next_batch(&self, max: usize, linger: Duration) -> Option<Vec<T>> {
+        debug_assert!(max > 0);
+        let mut g = self.inner.lock().unwrap();
+        // Phase 1: wait for at least one item (or close).
+        loop {
+            if !g.queue.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.items.wait(g).unwrap();
+        }
+        // Phase 2: fill until `max` or the linger deadline.
+        let deadline = Instant::now() + linger;
+        while g.queue.len() < max && !g.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (ng, timeout) = self.items.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = g.queue.len().min(max);
+        let batch: Vec<T> = g.queue.drain(..take).collect();
+        drop(g);
+        self.space.notify_all();
+        Some(batch)
+    }
+
+    /// Close: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.items.notify_all();
+        self.space.notify_all();
+    }
+}

@@ -1,0 +1,30 @@
+//! Layer-3 coordinator: the variable-precision multiplication service.
+//!
+//! The deployment shape the paper motivates (§I: multimedia pipelines whose
+//! precision demand varies per request, single through quadruple) as a
+//! serving system:
+//!
+//! ```text
+//!   clients ──submit──▶ router ──▶ per-precision dynamic batcher (bounded,
+//!       size+linger policy, backpressure) ──▶ worker pool ──▶ backend
+//!                                                              │
+//!                          native softfloat + CIVP decomposition│
+//!                          or AOT JAX/Pallas artifacts via PJRT ┘
+//! ```
+//!
+//! Workers tally simulated FPGA block usage per operation class, so every
+//! run also produces the paper's fabric-level utilization/energy report.
+
+mod adaptive;
+mod backend;
+mod batcher;
+mod request;
+mod service;
+#[cfg(test)]
+mod tests;
+
+pub use adaptive::{orient2d_adaptive, AdaptiveStats, Orient};
+pub use backend::{Backend, BackendChoice, NativeBackend, PjrtBackend};
+pub use batcher::{Batcher, SubmitError};
+pub use request::{Request, Response};
+pub use service::{Service, ServiceReport};

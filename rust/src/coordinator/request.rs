@@ -1,0 +1,33 @@
+//! Request/response types for the multiplication service.
+
+use crate::decomp::Precision;
+use std::time::Instant;
+
+/// A multiplication request. Operand bits are packed IEEE patterns of the
+/// request's precision, carried in the low bits of a `u128`.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    /// Client-assigned id, echoed in the response.
+    pub id: u64,
+    /// IEEE precision of the operands and result.
+    pub precision: Precision,
+    /// Packed operand A.
+    pub a: u128,
+    /// Packed operand B.
+    pub b: u128,
+    /// Enqueue timestamp (set by the service).
+    pub enqueued: Instant,
+}
+
+/// A completed multiplication.
+#[derive(Clone, Copy, Debug)]
+pub struct Response {
+    /// Echo of the request id.
+    pub id: u64,
+    /// Packed product bits.
+    pub bits: u128,
+    /// Queue + batch + execute time.
+    pub latency_ns: u64,
+    /// Size of the batch this request was served in (telemetry).
+    pub batch_size: u32,
+}

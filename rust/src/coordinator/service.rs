@@ -1,0 +1,279 @@
+//! The service: router → per-precision batchers → worker pool → backend,
+//! with fabric accounting and telemetry.
+
+use super::backend::BackendChoice;
+use super::batcher::{Batcher, SubmitError};
+use super::request::{Request, Response};
+use crate::config::ServiceConfig;
+use crate::decomp::{Precision, SchemeKind};
+use crate::fabric::{simulate_stream, CostModel, FabricConfig, FabricKind, OpClass, StreamReport};
+use crate::metrics::Registry;
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+struct Item {
+    req: Request,
+    reply: mpsc::Sender<Response>,
+}
+
+struct Shared {
+    batchers: BTreeMap<Precision, Batcher<Item>>,
+    metrics: Registry,
+    /// Hot-path instruments, resolved once (no registry lookup or string
+    /// formatting per request — §Perf).
+    hot: HotMetrics,
+    /// Op counts per class for the fabric report.
+    op_counts: Mutex<BTreeMap<OpClass, u64>>,
+    max_batch: usize,
+    linger: Duration,
+    scheme: SchemeKind,
+}
+
+struct HotMetrics {
+    requests_total: std::sync::Arc<crate::metrics::Counter>,
+    requests_by_prec: [std::sync::Arc<crate::metrics::Counter>; 3],
+    rejected: std::sync::Arc<crate::metrics::Counter>,
+}
+
+impl HotMetrics {
+    fn resolve(metrics: &Registry) -> HotMetrics {
+        HotMetrics {
+            requests_total: metrics.counter("requests_total"),
+            requests_by_prec: [
+                metrics.counter("requests_single"),
+                metrics.counter("requests_double"),
+                metrics.counter("requests_quad"),
+            ],
+            rejected: metrics.counter("rejected_queue_full"),
+        }
+    }
+}
+
+#[inline]
+fn prec_idx(p: Precision) -> usize {
+    match p {
+        Precision::Single => 0,
+        Precision::Double => 1,
+        Precision::Quad => 2,
+    }
+}
+
+/// The running multiplication service.
+///
+/// `submit` routes a request to its precision queue and returns a receiver
+/// for the response; `mul_blocking` is the convenience wrapper. Dropping
+/// the service (or calling [`Service::shutdown`]) drains queues and joins
+/// the workers.
+pub struct Service {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    fabric: FabricConfig,
+    cost: CostModel,
+    backend_name: &'static str,
+}
+
+impl Service {
+    /// Start a service per `cfg` with the given backend.
+    pub fn start(cfg: &ServiceConfig, backend: BackendChoice) -> Service {
+        let mut batchers = BTreeMap::new();
+        for p in Precision::ALL {
+            batchers.insert(p, Batcher::new(cfg.queue_depth));
+        }
+        let metrics = Registry::new();
+        let hot = HotMetrics::resolve(&metrics);
+        let shared = Arc::new(Shared {
+            batchers,
+            metrics,
+            hot,
+            op_counts: Mutex::new(BTreeMap::new()),
+            max_batch: cfg.max_batch,
+            linger: Duration::from_micros(cfg.linger_us),
+            scheme: cfg.scheme,
+        });
+        let backend_name = match &backend {
+            BackendChoice::Native(_) => "native",
+            BackendChoice::Pjrt(_) => "pjrt",
+        };
+        // One worker set per precision queue; each worker owns a backend
+        // instance (DecompMul stats merge into op_counts via class counts).
+        let mut workers = Vec::new();
+        for p in Precision::ALL {
+            for w in 0..cfg.workers {
+                let shared = shared.clone();
+                let mut be = backend.build();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("civp-{}-{w}", p.name()))
+                        .spawn(move || worker_loop(p, shared, be.as_mut()))
+                        .expect("spawn worker"),
+                );
+            }
+        }
+        let fabric = match cfg.fabric {
+            FabricKind::Civp => FabricConfig::civp_scaled(cfg.fabric_scale),
+            FabricKind::Legacy => FabricConfig::legacy_scaled(cfg.fabric_scale),
+        };
+        Service { shared, workers, fabric, cost: CostModel::default(), backend_name }
+    }
+
+    /// Submit a request; returns the response channel. Blocks on
+    /// backpressure when the precision queue is full.
+    pub fn submit(
+        &self,
+        id: u64,
+        precision: Precision,
+        a: u128,
+        b: u128,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        let req = Request { id, precision, a, b, enqueued: Instant::now() };
+        self.shared.hot.requests_total.inc();
+        self.shared.hot.requests_by_prec[prec_idx(precision)].inc();
+        self.shared.batchers[&precision].submit(Item { req, reply: tx })?;
+        Ok(rx)
+    }
+
+    /// Submit without blocking; `QueueFull` applies backpressure to the
+    /// caller.
+    pub fn try_submit(
+        &self,
+        id: u64,
+        precision: Precision,
+        a: u128,
+        b: u128,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        let req = Request { id, precision, a, b, enqueued: Instant::now() };
+        match self.shared.batchers[&precision].try_submit(Item { req, reply: tx }) {
+            Ok(()) => {
+                self.shared.hot.requests_total.inc();
+                Ok(rx)
+            }
+            Err(e) => {
+                if e == SubmitError::QueueFull {
+                    self.shared.hot.rejected.inc();
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn mul_blocking(&self, precision: Precision, a: u128, b: u128) -> u128 {
+        let rx = self.submit(0, precision, a, b).expect("service closed");
+        rx.recv().expect("worker dropped reply").bits
+    }
+
+    /// Telemetry snapshot.
+    pub fn metrics(&self) -> crate::metrics::Snapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Fabric-level report for everything executed so far: replays the op
+    /// mix through the cycle/energy model (E7).
+    pub fn fabric_report(&self) -> StreamReport {
+        let counts = self.shared.op_counts.lock().unwrap().clone();
+        let mut ops = Vec::new();
+        for (class, n) in counts {
+            for _ in 0..n {
+                ops.push(class);
+            }
+        }
+        simulate_stream(&ops, &self.fabric, &self.cost)
+    }
+
+    /// Service-level summary (throughput etc. come from the caller's wall
+    /// clock; this report carries queue/batch telemetry).
+    pub fn report(&self) -> ServiceReport {
+        let snap = self.metrics();
+        ServiceReport {
+            backend: self.backend_name,
+            requests: snap.counters.get("requests_total").copied().unwrap_or(0),
+            responses: snap.counters.get("responses_total").copied().unwrap_or(0),
+            rejected: snap.counters.get("rejected_queue_full").copied().unwrap_or(0),
+            snapshot: snap,
+        }
+    }
+
+    /// Close queues and join workers (drains in-flight batches).
+    pub fn shutdown(mut self) -> ServiceReport {
+        self.shutdown_inner();
+        self.report()
+    }
+
+    fn shutdown_inner(&mut self) {
+        for b in self.shared.batchers.values() {
+            b.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn worker_loop(precision: Precision, shared: Arc<Shared>, backend: &mut dyn super::Backend) {
+    let lat = shared.metrics.histogram(&format!("latency_ns_{}", precision.name()));
+    let bsize = shared.metrics.histogram(&format!("batch_size_{}", precision.name()));
+    let responses = shared.metrics.counter("responses_total");
+    let batches = shared.metrics.counter("batches_total");
+    let errors = shared.metrics.counter("backend_errors");
+    while let Some(batch) = shared.batchers[&precision].next_batch(shared.max_batch, shared.linger)
+    {
+        let n = batch.len();
+        bsize.record(n as u64);
+        batches.inc();
+        let a: Vec<u128> = batch.iter().map(|i| i.req.a).collect();
+        let b: Vec<u128> = batch.iter().map(|i| i.req.b).collect();
+        match backend.execute(precision, &a, &b) {
+            Ok(bits) => {
+                // Account the ops *before* releasing replies so a client
+                // that observed its response also observes the op in
+                // `fabric_report`.
+                let class = OpClass { precision, organization: shared.scheme };
+                *shared.op_counts.lock().unwrap().entry(class).or_insert(0) += n as u64;
+                let now = Instant::now();
+                for (item, out) in batch.into_iter().zip(bits) {
+                    let latency = now.duration_since(item.req.enqueued).as_nanos() as u64;
+                    lat.record(latency);
+                    responses.inc();
+                    // Receiver may have given up; ignore send failures.
+                    let _ = item.reply.send(Response {
+                        id: item.req.id,
+                        bits: out,
+                        latency_ns: latency,
+                        batch_size: n as u32,
+                    });
+                }
+            }
+            Err(e) => {
+                errors.inc();
+                log::error!("backend {} failed on {} batch: {e:#}", backend.name(), precision.name());
+                // Drop replies: receivers observe a closed channel.
+            }
+        }
+    }
+}
+
+/// Summary returned by [`Service::report`] / [`Service::shutdown`].
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    /// Backend name.
+    pub backend: &'static str,
+    /// Requests accepted.
+    pub requests: u64,
+    /// Responses delivered.
+    pub responses: u64,
+    /// Requests rejected by backpressure.
+    pub rejected: u64,
+    /// Full metrics snapshot.
+    pub snapshot: crate::metrics::Snapshot,
+}

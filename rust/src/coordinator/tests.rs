@@ -1,0 +1,279 @@
+//! Coordinator tests: batcher policy, service correctness against hardware,
+//! backpressure, adaptive escalation, failure behaviour.
+
+use super::*;
+use crate::config::ServiceConfig;
+use crate::decomp::{Precision, SchemeKind};
+use crate::proput::forall;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn native_cfg() -> ServiceConfig {
+    ServiceConfig { workers: 2, max_batch: 32, linger_us: 100, ..ServiceConfig::default() }
+}
+
+fn native_service(cfg: &ServiceConfig) -> Service {
+    Service::start(cfg, BackendChoice::Native(SchemeKind::Civp))
+}
+
+// ---------------------------------------------------------------------
+// Batcher
+// ---------------------------------------------------------------------
+
+#[test]
+fn batcher_batches_up_to_max() {
+    let b: Batcher<u32> = Batcher::new(100);
+    for i in 0..10 {
+        b.submit(i).unwrap();
+    }
+    let batch = b.next_batch(4, Duration::from_millis(1)).unwrap();
+    assert_eq!(batch, vec![0, 1, 2, 3]);
+    let batch = b.next_batch(100, Duration::from_millis(1)).unwrap();
+    assert_eq!(batch.len(), 6);
+}
+
+#[test]
+fn batcher_linger_dispatches_partial() {
+    let b: Batcher<u32> = Batcher::new(100);
+    b.submit(1).unwrap();
+    let t0 = std::time::Instant::now();
+    let batch = b.next_batch(1000, Duration::from_millis(5)).unwrap();
+    assert_eq!(batch, vec![1]);
+    assert!(t0.elapsed() >= Duration::from_millis(4));
+}
+
+#[test]
+fn batcher_try_submit_backpressure() {
+    let b: Batcher<u32> = Batcher::new(2);
+    b.try_submit(1).unwrap();
+    b.try_submit(2).unwrap();
+    assert_eq!(b.try_submit(3), Err(SubmitError::QueueFull));
+    let _ = b.next_batch(2, Duration::ZERO);
+    b.try_submit(3).unwrap();
+}
+
+#[test]
+fn batcher_close_semantics() {
+    let b: Batcher<u32> = Batcher::new(4);
+    b.submit(1).unwrap();
+    b.close();
+    assert_eq!(b.submit(2), Err(SubmitError::Closed));
+    // drains remaining, then None
+    assert_eq!(b.next_batch(4, Duration::ZERO), Some(vec![1]));
+    assert_eq!(b.next_batch(4, Duration::ZERO), None);
+}
+
+#[test]
+fn batcher_concurrent_producers_consumers() {
+    let b: Arc<Batcher<u64>> = Arc::new(Batcher::new(64));
+    let n_items = 10_000u64;
+    let producers: Vec<_> = (0..4)
+        .map(|p| {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                for i in 0..n_items / 4 {
+                    b.submit(p * 1_000_000 + i).unwrap();
+                }
+            })
+        })
+        .collect();
+    let consumer = {
+        let b = b.clone();
+        std::thread::spawn(move || {
+            let mut seen = 0u64;
+            while let Some(batch) = b.next_batch(32, Duration::from_millis(1)) {
+                seen += batch.len() as u64;
+                if seen == n_items {
+                    break;
+                }
+            }
+            seen
+        })
+    };
+    for p in producers {
+        p.join().unwrap();
+    }
+    assert_eq!(consumer.join().unwrap(), n_items);
+}
+
+// ---------------------------------------------------------------------
+// Service (native backend; PJRT covered in integration tests)
+// ---------------------------------------------------------------------
+
+#[test]
+fn service_multiplies_correctly_all_precisions() {
+    let svc = native_service(&native_cfg());
+    forall(0x500, 200, |rng| {
+        let a = f64::from_bits(rng.nasty_bits64());
+        let b = f64::from_bits(rng.nasty_bits64());
+        if !a.is_finite() || !b.is_finite() {
+            return;
+        }
+        let out = svc.mul_blocking(
+            Precision::Double,
+            crate::fpu::Fp64::from_f64(a).0 as u128,
+            crate::fpu::Fp64::from_f64(b).0 as u128,
+        );
+        let hw = a * b;
+        if !hw.is_nan() {
+            assert_eq!(out as u64, hw.to_bits());
+        }
+        let af = a as f32;
+        let bf = b as f32;
+        let out = svc.mul_blocking(
+            Precision::Single,
+            af.to_bits() as u128,
+            bf.to_bits() as u128,
+        );
+        let hw = af * bf;
+        if !hw.is_nan() {
+            assert_eq!(out as u32, hw.to_bits());
+        }
+    });
+    let report = svc.shutdown();
+    assert_eq!(report.requests, report.responses);
+    assert_eq!(report.rejected, 0);
+}
+
+#[test]
+fn service_batches_concurrent_submissions() {
+    let cfg = ServiceConfig { workers: 1, max_batch: 64, linger_us: 2000, ..Default::default() };
+    let svc = Arc::new(native_service(&cfg));
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let mut rxs = Vec::new();
+                for i in 0..100u64 {
+                    let x = 1.0 + (t as f64) + i as f64;
+                    let bits = crate::fpu::Fp64::from_f64(x).0 as u128;
+                    rxs.push((x, svc.submit(i, Precision::Double, bits, bits).unwrap()));
+                }
+                for (x, rx) in rxs {
+                    let resp = rx.recv().unwrap();
+                    assert_eq!(resp.bits as u64, (x * x).to_bits());
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let metrics = svc.metrics();
+    // batching actually happened: fewer batches than requests
+    assert!(metrics.counters["batches_total"] < metrics.counters["requests_total"]);
+}
+
+#[test]
+fn service_fabric_report_tracks_mix() {
+    let svc = native_service(&native_cfg());
+    for _ in 0..10 {
+        svc.mul_blocking(Precision::Double, 1u128 << 62, 1u128 << 62);
+    }
+    for _ in 0..5 {
+        svc.mul_blocking(Precision::Single, 0x3F80_0000, 0x3F80_0000);
+    }
+    let report = svc.fabric_report();
+    assert_eq!(report.total_ops, 15);
+    assert_eq!(report.per_class.len(), 2);
+    assert!(report.dyn_energy > 0.0);
+}
+
+#[test]
+fn service_try_submit_backpressure() {
+    // Tiny queue, zero workers draining fast: force QueueFull.
+    let cfg = ServiceConfig {
+        workers: 1,
+        max_batch: 4,
+        queue_depth: 4,
+        linger_us: 50_000,
+        ..Default::default()
+    };
+    let svc = native_service(&cfg);
+    // Stuff the double queue faster than the single worker drains.
+    let mut rejected = 0;
+    for i in 0..5_000u64 {
+        match svc.try_submit(i, Precision::Double, 1u128 << 62, 1u128 << 62) {
+            Ok(_rx) => {}
+            Err(SubmitError::QueueFull) => rejected += 1,
+            Err(e) => panic!("unexpected {e:?}"),
+        }
+    }
+    assert!(rejected > 0, "expected backpressure rejections");
+    let report = svc.shutdown();
+    assert_eq!(report.rejected, rejected);
+}
+
+#[test]
+fn service_shutdown_drains_inflight() {
+    let svc = native_service(&native_cfg());
+    let mut rxs = Vec::new();
+    for i in 0..500u64 {
+        let bits = crate::fpu::Fp64::from_f64(i as f64).0 as u128;
+        rxs.push(svc.submit(i, Precision::Double, bits, bits).unwrap());
+    }
+    let report = svc.shutdown();
+    // every accepted request got an answer before shutdown returned
+    assert_eq!(report.responses, 500);
+    for rx in rxs {
+        assert!(rx.try_recv().is_ok());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Adaptive precision
+// ---------------------------------------------------------------------
+
+#[test]
+fn adaptive_clear_cases_settle_single() {
+    let svc = native_service(&native_cfg());
+    let mut stats = AdaptiveStats::default();
+    let o = orient2d_adaptive(&svc, (0.0, 0.0), (1.0, 0.0), (0.5, 1.0), &mut stats);
+    assert_eq!(o, Orient::Ccw);
+    let o = orient2d_adaptive(&svc, (0.0, 0.0), (1.0, 0.0), (0.5, -1.0), &mut stats);
+    assert_eq!(o, Orient::Cw);
+    assert_eq!(stats.settled_single, 2);
+}
+
+#[test]
+fn adaptive_degenerate_cases_escalate_and_are_exact() {
+    let svc = native_service(&native_cfg());
+    let mut stats = AdaptiveStats::default();
+    // exactly collinear points with coordinates unrepresentable in f32
+    let a = (0.1, 0.1);
+    let b = (0.2, 0.2);
+    let c = (0.30000000000000004, 0.30000000000000004);
+    let o = orient2d_adaptive(&svc, a, b, c, &mut stats);
+    assert_eq!(o, Orient::Collinear);
+    assert!(stats.settled_quad >= 1, "degenerate case must escalate: {stats:?}");
+    // near-degenerate: a point displaced by one ulp must get a definite sign
+    let c2 = (0.30000000000000004, 0.3000000000000001);
+    let o2 = orient2d_adaptive(&svc, a, b, c2, &mut stats);
+    assert_ne!(o2, Orient::Collinear);
+}
+
+#[test]
+fn adaptive_sign_agrees_with_exact_rational() {
+    // Exact oracle via i128 rational arithmetic on scaled integer coords.
+    let svc = native_service(&native_cfg());
+    let mut stats = AdaptiveStats::default();
+    forall(0x501, 300, |rng| {
+        let coord = |rng: &mut crate::proput::Rng| (rng.below(2000) as i64 - 1000) as f64 / 16.0;
+        let (ax, ay) = (coord(rng), coord(rng));
+        let (bx, by) = (coord(rng), coord(rng));
+        let (cx, cy) = (coord(rng), coord(rng));
+        let o = orient2d_adaptive(&svc, (ax, ay), (bx, by), (cx, cy), &mut stats);
+        // scaled by 16: exact in i128
+        let det = ((ax * 16.0) as i128 - (cx * 16.0) as i128)
+            * ((by * 16.0) as i128 - (cy * 16.0) as i128)
+            - ((ay * 16.0) as i128 - (cy * 16.0) as i128)
+                * ((bx * 16.0) as i128 - (cx * 16.0) as i128);
+        let want = match det.cmp(&0) {
+            core::cmp::Ordering::Greater => Orient::Ccw,
+            core::cmp::Ordering::Less => Orient::Cw,
+            core::cmp::Ordering::Equal => Orient::Collinear,
+        };
+        assert_eq!(o, want, "a=({ax},{ay}) b=({bx},{by}) c=({cx},{cy})");
+    });
+    assert!(stats.total() >= 300);
+}

@@ -1,0 +1,112 @@
+//! Static analysis of partition schemes — the numbers behind every claim in
+//! §II and §III of the paper: block counts by kind, padded ("wasted")
+//! blocks, and aggregate multiplier-array utilization.
+
+use super::scheme::{BlockKind, Precision, Scheme, SchemeKind, Tile};
+use std::collections::BTreeMap;
+
+/// Paper §II.C: the authors state that 17 of the 49 `18x18` blocks in a
+/// quad multiplication are wasted ("35%"). Recomputing from 113 = 6·18 + 5
+/// gives 7 + 7 − 1 = 13 tiles touching the 5-bit top chunk (26.5%). Both
+/// numbers are reported; see DESIGN.md §1 and EXPERIMENTS.md E5.
+pub const PAPER_CLAIMED_QP_WASTED_18X18: u32 = 17;
+/// Paper §II.C: total 18x18 blocks for quad (7 × 7) — this one checks out.
+pub const PAPER_CLAIMED_QP_TOTAL_18X18: u32 = 49;
+
+/// Census of one scheme's tile set.
+#[derive(Clone, Debug)]
+pub struct BlockCensus {
+    /// Scheme display name.
+    pub scheme: String,
+    /// Organization family.
+    pub kind: SchemeKind,
+    /// Real operand width.
+    pub eff_bits: u32,
+    /// Padded operand width.
+    pub padded_bits: u32,
+    /// Blocks by kind.
+    pub by_kind: BTreeMap<BlockKind, u32>,
+    /// Total dedicated blocks consumed.
+    pub total_blocks: u32,
+    /// Blocks with padding on a port (paper's wasted blocks).
+    pub padded_blocks: u32,
+    /// Blocks multiplying only padding (contribute nothing).
+    pub dead_blocks: u32,
+    /// Useful bit-products / capacity bit-products.
+    pub utilization: f64,
+    /// The tiles themselves (for detailed reporting).
+    pub tiles: Vec<Tile>,
+}
+
+impl BlockCensus {
+    /// Count for one block kind.
+    pub fn count(&self, kind: BlockKind) -> u32 {
+        self.by_kind.get(&kind).copied().unwrap_or(0)
+    }
+    /// Fraction of blocks carrying padding.
+    pub fn padded_fraction(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 0.0;
+        }
+        self.padded_blocks as f64 / self.total_blocks as f64
+    }
+}
+
+/// Run the census for a scheme.
+pub fn scheme_census(scheme: &Scheme) -> BlockCensus {
+    let tiles = scheme.tiles();
+    let mut by_kind = BTreeMap::new();
+    let mut padded = 0u32;
+    let mut dead = 0u32;
+    let mut useful = 0u64;
+    let mut capacity = 0u64;
+    for t in &tiles {
+        *by_kind.entry(t.kind).or_insert(0u32) += 1;
+        if t.is_padded() {
+            padded += 1;
+        }
+        if t.is_dead() {
+            dead += 1;
+        }
+        useful += (t.eff_a * t.eff_b) as u64;
+        capacity += t.kind.capacity() as u64;
+    }
+    BlockCensus {
+        scheme: scheme.name.clone(),
+        kind: scheme.kind,
+        eff_bits: scheme.eff_bits,
+        padded_bits: scheme.padded_bits,
+        total_blocks: tiles.len() as u32,
+        by_kind,
+        padded_blocks: padded,
+        dead_blocks: dead,
+        utilization: if capacity == 0 { 1.0 } else { useful as f64 / capacity as f64 },
+        tiles,
+    }
+}
+
+/// One row of the §III analysis table (E6): a (precision, organization)
+/// pair with its census.
+#[derive(Clone, Debug)]
+pub struct AnalysisRow {
+    /// IEEE precision.
+    pub precision: Precision,
+    /// Organization family.
+    pub kind: SchemeKind,
+    /// Census for the scheme.
+    pub census: BlockCensus,
+}
+
+impl AnalysisRow {
+    /// Build the full cross-product table the paper's §III argues from.
+    pub fn full_table() -> Vec<AnalysisRow> {
+        let mut rows = Vec::new();
+        for prec in Precision::ALL {
+            for kind in SchemeKind::ALL {
+                let scheme = Scheme::new(kind, prec);
+                rows.push(AnalysisRow { precision: prec, kind, census: scheme_census(&scheme) });
+            }
+        }
+        rows
+    }
+}

@@ -1,0 +1,239 @@
+//! Exact tiled execution of a partition scheme, and the [`DecompMul`]
+//! adapter that plugs decomposed multiplication into the IEEE pipeline.
+
+use super::scheme::{BlockKind, Precision, Scheme, SchemeKind, Tile};
+use crate::fpu::SigMultiplier;
+use crate::wideint::{U128, U256};
+use std::collections::HashMap;
+
+/// Accounting from executed tile multiplications.
+///
+/// Hot-path representation: per-kind counters are a fixed array indexed by
+/// the `BlockKind` discriminant (no hashing on the multiply path — §Perf).
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    /// Multiplications performed, indexed by `BlockKind as usize`.
+    ops_by_kind: [u64; 5],
+    /// Total tiles executed.
+    pub tiles: u64,
+    /// Tiles where a port carried padding (the paper's wasted blocks).
+    pub padded_tiles: u64,
+    /// Sum over tiles of `eff_a * eff_b` (useful bit-products).
+    pub useful_bitops: u64,
+    /// Sum over tiles of block capacity (total bit-products paid for).
+    pub capacity_bitops: u64,
+    /// Whole significand multiplications completed.
+    pub muls: u64,
+}
+
+impl ExecStats {
+    /// Aggregate utilization = useful / capacity.
+    pub fn utilization(&self) -> f64 {
+        if self.capacity_bitops == 0 {
+            return 1.0;
+        }
+        self.useful_bitops as f64 / self.capacity_bitops as f64
+    }
+
+    /// Merge another stats block in.
+    pub fn merge(&mut self, other: &ExecStats) {
+        for i in 0..5 {
+            self.ops_by_kind[i] += other.ops_by_kind[i];
+        }
+        self.tiles += other.tiles;
+        self.padded_tiles += other.padded_tiles;
+        self.useful_bitops += other.useful_bitops;
+        self.capacity_bitops += other.capacity_bitops;
+        self.muls += other.muls;
+    }
+
+    /// Ops for one kind (0 if none).
+    pub fn ops(&self, kind: BlockKind) -> u64 {
+        self.ops_by_kind[kind as usize]
+    }
+
+    /// All non-zero per-kind counts (reporting).
+    pub fn by_kind(&self) -> HashMap<BlockKind, u64> {
+        BlockKind::ALL
+            .into_iter()
+            .filter(|k| self.ops(*k) > 0)
+            .map(|k| (k, self.ops(k)))
+            .collect()
+    }
+}
+
+/// Execute `a × b` exactly through `scheme`, accumulating block usage into
+/// `stats`. `a, b < 2^scheme.eff_bits`.
+///
+/// Every tile is one dedicated-block multiplication: chunk values are
+/// extracted, multiplied (each chunk ≤ 25 bits, so the product fits u64) and
+/// shift-accumulated — exactly the dataflow of Fig. 2(b) / Fig. 4(b).
+pub fn execute(scheme: &Scheme, a: U128, b: U128, stats: &mut ExecStats) -> U256 {
+    execute_tiles(&scheme.tiles(), scheme.eff_bits, a, b, stats)
+}
+
+/// Tile-level executor used by both [`execute`] and the tile-caching
+/// [`DecompMul`] hot path (§Perf: avoids regenerating the tile vector per
+/// multiplication).
+pub fn execute_tiles(
+    tiles: &[Tile],
+    eff_bits: u32,
+    a: U128,
+    b: U128,
+    stats: &mut ExecStats,
+) -> U256 {
+    debug_assert!(a.bit_len() <= eff_bits, "operand A wider than scheme");
+    debug_assert!(b.bit_len() <= eff_bits, "operand B wider than scheme");
+    let mut acc = U256::ZERO;
+    for tile in tiles {
+        let pa = a.extract_u64(tile.off_a, tile.wa);
+        let pb = b.extract_u64(tile.off_b, tile.wb);
+        // The dedicated block always fires (it is hard-wired into the
+        // partial-product array) — even when a port is all padding. That is
+        // precisely the energy waste the paper argues about, so the stats
+        // count it either way.
+        stats.ops_by_kind[tile.kind as usize] += 1;
+        if tile.is_padded() {
+            stats.padded_tiles += 1;
+        }
+        stats.useful_bitops += (tile.eff_a * tile.eff_b) as u64;
+        stats.capacity_bitops += tile.kind.capacity() as u64;
+        let prod = (pa as u128) * (pb as u128);
+        // Accumulate prod << (off_a + off_b) without building a temporary
+        // U256: the shifted 50-bit product spans at most two 64-bit limbs
+        // (three when the in-limb shift wraps) — add limb-wise with carry.
+        let off = tile.off_a + tile.off_b;
+        let limb = (off / 64) as usize;
+        let shift = off % 64;
+        let parts = [
+            (prod << shift) as u64,
+            (prod >> (64 - shift).min(127)) as u64, // shift==0 -> prod>>64
+            if shift == 0 { 0 } else { (prod >> (128 - shift)) as u64 },
+        ];
+        let mut carry = false;
+        for (i, &p) in parts.iter().enumerate() {
+            let idx = limb + i;
+            if idx < 4 {
+                let (v, c1) = acc.limbs[idx].overflowing_add(p);
+                let (v, c2) = v.overflowing_add(carry as u64);
+                acc.limbs[idx] = v;
+                carry = c1 || c2;
+            } else {
+                debug_assert!(p == 0 && !carry, "accumulator overflow");
+            }
+        }
+        if carry && limb + 3 < 4 {
+            acc.limbs[limb + 3] = acc.limbs[limb + 3].wrapping_add(1);
+        }
+    }
+    stats.tiles += tiles.len() as u64;
+    stats.muls += 1;
+    acc
+}
+
+/// A [`SigMultiplier`] that computes significand products through a
+/// partition scheme, tallying simulated FPGA block usage — drop-in for the
+/// IEEE pipeline so CIVP (and baselines) run real FP multiplications.
+///
+/// §Perf: the scheme *and its tile vector* are cached per operand width —
+/// the paper's point is precisely that the tile wiring is static hardware,
+/// so regenerating it per multiplication would be both slow and unfaithful.
+#[derive(Clone, Debug)]
+pub struct DecompMul {
+    kind: SchemeKind,
+    /// Fast slots for the three IEEE widths (24 / 53 / 113) — no hashing
+    /// on the hot path.
+    ieee: [Option<Box<(Scheme, Vec<Tile>)>>; 3],
+    /// Cached (scheme, tiles) for other (integer) widths.
+    schemes: HashMap<u32, (Scheme, Vec<Tile>)>,
+    /// Accumulated usage across all multiplications.
+    pub stats: ExecStats,
+    /// Cross-check every product against the direct widening multiply
+    /// (debug builds always do; this forces it in release too).
+    pub verify: bool,
+}
+
+/// Fast-slot index for IEEE significand widths.
+#[inline]
+fn ieee_slot(width: u32) -> Option<usize> {
+    match width {
+        24 => Some(0),
+        53 => Some(1),
+        113 => Some(2),
+        _ => None,
+    }
+}
+
+impl DecompMul {
+    /// New adapter for the given organization.
+    pub fn new(kind: SchemeKind) -> DecompMul {
+        DecompMul {
+            kind,
+            ieee: [None, None, None],
+            schemes: HashMap::new(),
+            stats: ExecStats::default(),
+            verify: false,
+        }
+    }
+
+    /// New adapter that re-verifies every product against the oracle.
+    pub fn verified(kind: SchemeKind) -> DecompMul {
+        let mut m = Self::new(kind);
+        m.verify = true;
+        m
+    }
+
+    fn build_entry(kind: SchemeKind, width: u32) -> (Scheme, Vec<Tile>) {
+        // IEEE significand widths get the paper's exact partitions; any
+        // other width is served as an integer scheme.
+        let scheme = match width {
+            24 => Scheme::new(kind, Precision::Single),
+            53 => Scheme::new(kind, Precision::Double),
+            113 => Scheme::new(kind, Precision::Quad),
+            w => Scheme::for_int(kind, w),
+        };
+        let tiles = scheme.tiles();
+        (scheme, tiles)
+    }
+
+    #[inline]
+    fn entry_for(&mut self, width: u32) -> &(Scheme, Vec<Tile>) {
+        let kind = self.kind;
+        if let Some(slot) = ieee_slot(width) {
+            return self.ieee[slot].get_or_insert_with(|| Box::new(Self::build_entry(kind, width)));
+        }
+        self.schemes.entry(width).or_insert_with(|| Self::build_entry(kind, width))
+    }
+
+    /// The scheme used for a given operand width.
+    pub fn scheme_for(&mut self, width: u32) -> &Scheme {
+        &self.entry_for(width).0
+    }
+
+    /// Reset accumulated stats.
+    pub fn reset_stats(&mut self) {
+        self.stats = ExecStats::default();
+    }
+}
+
+impl SigMultiplier for DecompMul {
+    fn mul_sig(&mut self, a: U128, b: U128, width: u32) -> U256 {
+        self.entry_for(width); // ensure populated
+        // Take stats out to split the borrow (ExecStats is plain counters —
+        // the take is free).
+        let mut stats = std::mem::take(&mut self.stats);
+        let (scheme, tiles) = match ieee_slot(width) {
+            Some(slot) => self.ieee[slot].as_deref().expect("entry populated above"),
+            None => self.schemes.get(&width).expect("entry populated above"),
+        };
+        let out = execute_tiles(tiles, scheme.eff_bits, a, b, &mut stats);
+        self.stats = stats;
+        if self.verify {
+            let oracle = crate::wideint::mul_u128(a, b);
+            assert_eq!(out, oracle, "decomposed product mismatch (width={width})");
+        } else {
+            debug_assert_eq!(out, crate::wideint::mul_u128(a, b));
+        }
+        out
+    }
+}

@@ -1,0 +1,26 @@
+//! The paper's contribution: partitioned (tiled) significand multiplication
+//! over dedicated FPGA multiplier blocks.
+//!
+//! A [`Scheme`] describes how each operand of an `W x W` significand
+//! multiplication is cut into chunks and which dedicated block kind computes
+//! each partial-product tile. The CIVP schemes (Fig. 2 / Fig. 4 of the
+//! paper) cut a padded 57-bit double-precision operand into `[24, 24, 9]`
+//! and a padded 114-bit quad operand into two 57-bit halves; the baselines
+//! tile with `18x18` (existing Xilinx/Altera fabric), `25x18` (DSP48E-style)
+//! or `9x9` blocks.
+//!
+//! [`exec::execute`] runs a scheme *exactly* (bit-for-bit) and tallies which
+//! blocks fired and how full they were — the quantity all of the paper's
+//! claims are about. [`exec::DecompMul`] plugs that into the IEEE pipeline
+//! in [`crate::fpu`], so every decomposition is validated against hardware
+//! floating point, reproducing the paper's ModelSim functional check.
+
+pub mod analysis;
+pub mod exec;
+pub mod scheme;
+#[cfg(test)]
+mod tests;
+
+pub use analysis::{scheme_census, AnalysisRow, BlockCensus};
+pub use exec::{execute, DecompMul, ExecStats};
+pub use scheme::{BlockKind, Precision, Scheme, SchemeKind, Tile};

@@ -1,0 +1,337 @@
+//! Partition schemes: operand chunking + tile-to-block assignment.
+
+/// A dedicated hardware multiplier block kind.
+///
+/// `M18x18`, `M25x18` and `M9x9` are the blocks shipped by Xilinx/Altera
+/// fabrics at the time of the paper; `M24x24` and `M24x9` are the blocks the
+/// paper proposes to replace them with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BlockKind {
+    /// 9x9 bit (kept by the proposal).
+    M9x9,
+    /// 18x18 bit (existing fabric, to be replaced).
+    M18x18,
+    /// 24x9 bit (proposed replacement for 25x18).
+    M24x9,
+    /// 25x18 bit (existing fabric, to be replaced).
+    M25x18,
+    /// 24x24 bit (proposed replacement for 18x18).
+    M24x24,
+}
+
+impl BlockKind {
+    /// All kinds, for iteration / reporting.
+    pub const ALL: [BlockKind; 5] =
+        [BlockKind::M9x9, BlockKind::M18x18, BlockKind::M24x9, BlockKind::M25x18, BlockKind::M24x24];
+
+    /// Operand widths `(a_bits, b_bits)` with `a_bits >= b_bits`.
+    pub const fn dims(self) -> (u32, u32) {
+        match self {
+            BlockKind::M9x9 => (9, 9),
+            BlockKind::M18x18 => (18, 18),
+            BlockKind::M24x9 => (24, 9),
+            BlockKind::M25x18 => (25, 18),
+            BlockKind::M24x24 => (24, 24),
+        }
+    }
+
+    /// Capacity in bit-products (`a_bits * b_bits`) — proportional to the
+    /// multiplier array's area and switching energy.
+    pub const fn capacity(self) -> u32 {
+        let (a, b) = self.dims();
+        a * b
+    }
+
+    /// True if a `wa x wb` tile fits this block (either orientation).
+    pub const fn fits(self, wa: u32, wb: u32) -> bool {
+        let (da, db) = self.dims();
+        (wa <= da && wb <= db) || (wa <= db && wb <= da)
+    }
+
+    /// Short display name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            BlockKind::M9x9 => "9x9",
+            BlockKind::M18x18 => "18x18",
+            BlockKind::M24x9 => "24x9",
+            BlockKind::M25x18 => "25x18",
+            BlockKind::M24x24 => "24x24",
+        }
+    }
+}
+
+/// The three IEEE precisions the paper targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    /// binary32 — 24-bit significand.
+    Single,
+    /// binary64 — 53-bit significand.
+    Double,
+    /// binary128 — 113-bit significand.
+    Quad,
+}
+
+impl Precision {
+    /// All precisions, low to high.
+    pub const ALL: [Precision; 3] = [Precision::Single, Precision::Double, Precision::Quad];
+
+    /// Significand width including the hidden bit.
+    pub const fn sig_bits(self) -> u32 {
+        match self {
+            Precision::Single => 24,
+            Precision::Double => 53,
+            Precision::Quad => 113,
+        }
+    }
+
+    /// Display name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Precision::Single => "single",
+            Precision::Double => "double",
+            Precision::Quad => "quad",
+        }
+    }
+}
+
+/// Which multiplier organization a scheme models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SchemeKind {
+    /// The paper's proposal: `24x24` + `24x9` + `9x9` blocks.
+    Civp,
+    /// Existing fabric baseline: `18x18` blocks only.
+    Baseline18,
+    /// DSP48E-style baseline: `25x18` blocks.
+    Baseline25x18,
+    /// Small-block baseline: `9x9` blocks only.
+    Baseline9,
+}
+
+impl SchemeKind {
+    /// All kinds, CIVP first.
+    pub const ALL: [SchemeKind; 4] = [
+        SchemeKind::Civp,
+        SchemeKind::Baseline18,
+        SchemeKind::Baseline25x18,
+        SchemeKind::Baseline9,
+    ];
+
+    /// Display name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            SchemeKind::Civp => "civp",
+            SchemeKind::Baseline18 => "18x18",
+            SchemeKind::Baseline25x18 => "25x18",
+            SchemeKind::Baseline9 => "9x9",
+        }
+    }
+}
+
+/// One partial-product tile: chunk `i` of A times chunk `j` of B on a
+/// dedicated block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    /// Chunk index in A (0 = least significant).
+    pub i: usize,
+    /// Chunk index in B.
+    pub j: usize,
+    /// Bit offset of the A chunk.
+    pub off_a: u32,
+    /// Bit offset of the B chunk.
+    pub off_b: u32,
+    /// Chunk width drawn from A (== block port width).
+    pub wa: u32,
+    /// Chunk width drawn from B.
+    pub wb: u32,
+    /// Bits of the A chunk that carry real operand data (rest is padding).
+    pub eff_a: u32,
+    /// Bits of the B chunk that carry real operand data.
+    pub eff_b: u32,
+    /// Block kind executing this tile.
+    pub kind: BlockKind,
+}
+
+impl Tile {
+    /// Fraction of the block's multiplier array doing useful work.
+    pub fn utilization(&self) -> f64 {
+        (self.eff_a * self.eff_b) as f64 / self.kind.capacity() as f64
+    }
+    /// True if any port carries padding bits (the paper's "wasted
+    /// computation" criterion).
+    pub fn is_padded(&self) -> bool {
+        self.eff_a < self.wa || self.eff_b < self.wb
+    }
+    /// A tile that multiplies only padding contributes nothing at all.
+    pub fn is_dead(&self) -> bool {
+        self.eff_a == 0 || self.eff_b == 0
+    }
+}
+
+/// A complete partition scheme for one `W x W` significand multiplication.
+#[derive(Clone, Debug)]
+pub struct Scheme {
+    /// e.g. "civp-double".
+    pub name: String,
+    /// Organization family.
+    pub kind: SchemeKind,
+    /// Real operand width (significand bits actually carrying data).
+    pub eff_bits: u32,
+    /// Padded operand width (sum of chunk widths).
+    pub padded_bits: u32,
+    /// Chunk widths for operand A, least-significant first.
+    pub a_chunks: Vec<u32>,
+    /// Chunk widths for operand B, least-significant first.
+    pub b_chunks: Vec<u32>,
+    /// Block kinds available to this organization, preferred order.
+    pub blocks: Vec<BlockKind>,
+}
+
+impl Scheme {
+    /// Build a scheme for `kind` at IEEE precision `prec`.
+    pub fn new(kind: SchemeKind, prec: Precision) -> Scheme {
+        Self::for_width(kind, prec.sig_bits(), Some(prec))
+    }
+
+    /// Build a scheme for an arbitrary integer operand width (the "combined
+    /// integer" half of the paper: the same blocks serve plain integer
+    /// multiplication).
+    pub fn for_int(kind: SchemeKind, width: u32) -> Scheme {
+        Self::for_width(kind, width, None)
+    }
+
+    fn for_width(kind: SchemeKind, width: u32, prec: Option<Precision>) -> Scheme {
+        assert!(width >= 1 && width <= 128, "operand width out of range");
+        let (chunks, blocks) = match kind {
+            SchemeKind::Civp => (civp_chunks(width, prec), vec![
+                BlockKind::M24x24,
+                BlockKind::M24x9,
+                BlockKind::M9x9,
+            ]),
+            SchemeKind::Baseline18 => (uniform_chunks(width, 18), vec![BlockKind::M18x18]),
+            SchemeKind::Baseline9 => (uniform_chunks(width, 9), vec![BlockKind::M9x9]),
+            SchemeKind::Baseline25x18 => {
+                // Asymmetric: A side in 25-bit chunks, B side in 18-bit.
+                let a = uniform_chunks(width, 25);
+                let b = uniform_chunks(width, 18);
+                let padded_a: u32 = a.iter().sum();
+                let padded_b: u32 = b.iter().sum();
+                let name = prec
+                    .map(|p| format!("{}-{}", kind.name(), p.name()))
+                    .unwrap_or_else(|| format!("{}-int{}", kind.name(), width));
+                return Scheme {
+                    name,
+                    kind,
+                    eff_bits: width,
+                    padded_bits: padded_a.max(padded_b),
+                    a_chunks: a,
+                    b_chunks: b,
+                    blocks: vec![BlockKind::M25x18],
+                };
+            }
+        };
+        let padded: u32 = chunks.iter().sum();
+        let name = prec
+            .map(|p| format!("{}-{}", kind.name(), p.name()))
+            .unwrap_or_else(|| format!("{}-int{}", kind.name(), width));
+        Scheme {
+            name,
+            kind,
+            eff_bits: width,
+            padded_bits: padded,
+            a_chunks: chunks.clone(),
+            b_chunks: chunks,
+            blocks,
+        }
+    }
+
+    /// Generate the partial-product tile set (row-major over `(i, j)`).
+    ///
+    /// Effective bits per chunk are the overlap of the chunk's bit range
+    /// with `[0, eff_bits)` — operands are placed at bit 0 and padded at the
+    /// most-significant end (value-preserving).
+    pub fn tiles(&self) -> Vec<Tile> {
+        let mut out = Vec::with_capacity(self.a_chunks.len() * self.b_chunks.len());
+        let mut off_a = 0u32;
+        for (i, &wa) in self.a_chunks.iter().enumerate() {
+            let eff_a = effective_bits(off_a, wa, self.eff_bits);
+            let mut off_b = 0u32;
+            for (j, &wb) in self.b_chunks.iter().enumerate() {
+                let eff_b = effective_bits(off_b, wb, self.eff_bits);
+                let kind = self.assign_block(wa, wb);
+                out.push(Tile { i, j, off_a, off_b, wa, wb, eff_a, eff_b, kind });
+                off_b += wb;
+            }
+            off_a += wa;
+        }
+        out
+    }
+
+    /// Pick the preferred available block for a `wa x wb` tile.
+    fn assign_block(&self, wa: u32, wb: u32) -> BlockKind {
+        // Prefer the smallest-capacity block that fits — that is what a
+        // synthesis tool does when mapping a partial product to DSP blocks.
+        self.blocks
+            .iter()
+            .copied()
+            .filter(|k| k.fits(wa, wb))
+            .min_by_key(|k| k.capacity())
+            .unwrap_or_else(|| panic!("no block in {:?} fits {}x{}", self.blocks, wa, wb))
+    }
+
+    /// Total number of dedicated blocks consumed by one multiplication.
+    pub fn block_count(&self) -> usize {
+        self.a_chunks.len() * self.b_chunks.len()
+    }
+}
+
+/// Chunk widths for the CIVP organization, least-significant first.
+///
+/// IEEE precisions follow the paper exactly:
+/// * single — 24 = one `24` chunk (§II.A);
+/// * double — 53 → pad to 57 = `[24, 24, 9]` (Fig. 2: A3/A2 24-bit low
+///   parts, A1 9-bit high part);
+/// * quad — 113 → pad to 114 = two 57-bit halves, each `[24, 24, 9]`
+///   (Fig. 4 over Fig. 2).
+///
+/// Other integer widths chunk greedily with 24s and close with a 9 where the
+/// remainder allows, mirroring the same block set.
+fn civp_chunks(width: u32, prec: Option<Precision>) -> Vec<u32> {
+    match prec {
+        Some(Precision::Single) => return vec![24],
+        Some(Precision::Double) => return vec![24, 24, 9],
+        Some(Precision::Quad) => return vec![24, 24, 9, 24, 24, 9],
+        None => {}
+    }
+    // Greedy integer chunking: as many 24s as possible, remainder served by
+    // a 9 (if <= 9) or a final 24 (padded).
+    let mut chunks = Vec::new();
+    let mut rem = width;
+    while rem > 0 {
+        if rem >= 24 {
+            chunks.push(24);
+            rem -= 24;
+        } else if rem <= 9 {
+            chunks.push(9);
+            rem = 0;
+        } else {
+            chunks.push(24); // padded final chunk
+            rem = 0;
+        }
+    }
+    chunks
+}
+
+/// `ceil(width / w)` chunks of width `w` (last one padded).
+fn uniform_chunks(width: u32, w: u32) -> Vec<u32> {
+    let n = width.div_ceil(w);
+    vec![w; n as usize]
+}
+
+/// Overlap of `[off, off+w)` with `[0, eff)`.
+fn effective_bits(off: u32, w: u32, eff: u32) -> u32 {
+    if off >= eff {
+        0
+    } else {
+        (eff - off).min(w)
+    }
+}

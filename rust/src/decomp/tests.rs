@@ -1,0 +1,321 @@
+//! Tests for the decomposition engine: block counts must match the paper's
+//! figures exactly, and tiled execution must be bit-exact for every scheme
+//! and every input.
+
+use super::*;
+use crate::fpu::{DirectMul, Fp128, Fp32, Fp64, RoundMode};
+use crate::proput::forall;
+use crate::wideint::{mul_u128, U128};
+
+fn rand_sig(rng: &mut crate::proput::Rng, bits: u32) -> U128 {
+    // Uniform `bits`-wide value with the top (hidden) bit always set, like a
+    // normalized significand.
+    let mut v = U128::ZERO;
+    for limb in 0..2 {
+        v.limbs[limb] = rng.next_u64();
+    }
+    let mut v = v.mask_low(bits);
+    v.set_bit(bits - 1);
+    v
+}
+
+// ---------------------------------------------------------------------
+// Paper figure block counts (E2, E3, E4)
+// ---------------------------------------------------------------------
+
+#[test]
+fn sp_civp_uses_one_24x24() {
+    // §II.A: single precision = one 24x24 block.
+    let c = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Single));
+    assert_eq!(c.total_blocks, 1);
+    assert_eq!(c.count(BlockKind::M24x24), 1);
+    assert_eq!(c.padded_blocks, 0);
+    assert_eq!(c.utilization, 1.0);
+}
+
+#[test]
+fn sp_baseline18_uses_four_blocks() {
+    // §II.A context: 24x24 on an 18x18 fabric needs 2x2 = 4 blocks.
+    let c = scheme_census(&Scheme::new(SchemeKind::Baseline18, Precision::Single));
+    assert_eq!(c.total_blocks, 4);
+    assert_eq!(c.count(BlockKind::M18x18), 4);
+    assert!(c.padded_blocks > 0); // 24 = 18 + 6: padding in the top chunk
+    assert!(c.utilization < 1.0);
+}
+
+#[test]
+fn dp_civp_matches_fig2() {
+    // Fig. 2(b): 57x57 = four 24x24 + four 24x9 + one 9x9 = 9 blocks.
+    let c = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Double));
+    assert_eq!(c.padded_bits, 57);
+    assert_eq!(c.total_blocks, 9);
+    assert_eq!(c.count(BlockKind::M24x24), 4);
+    assert_eq!(c.count(BlockKind::M24x9), 4);
+    assert_eq!(c.count(BlockKind::M9x9), 1);
+}
+
+#[test]
+fn dp_baseline18_uses_nine_blocks() {
+    // §II.B: "The 54x54 bit multiplication can be achieved using nine 18x18
+    // bit multipliers".
+    let c = scheme_census(&Scheme::new(SchemeKind::Baseline18, Precision::Double));
+    assert_eq!(c.padded_bits, 54);
+    assert_eq!(c.total_blocks, 9);
+    assert_eq!(c.count(BlockKind::M18x18), 9);
+}
+
+#[test]
+fn qp_civp_matches_fig4() {
+    // Fig. 4: 114x114 = 4 x 57x57 = 16 x 24x24 + 16 x 24x9 + 4 x 9x9 = 36.
+    let c = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Quad));
+    assert_eq!(c.padded_bits, 114);
+    assert_eq!(c.total_blocks, 36);
+    assert_eq!(c.count(BlockKind::M24x24), 16);
+    assert_eq!(c.count(BlockKind::M24x9), 16);
+    assert_eq!(c.count(BlockKind::M9x9), 4);
+}
+
+#[test]
+fn qp_baseline18_is_49_blocks() {
+    // §II.C: "it will require 49 18x18 bit multipliers" (7x7 over 126 bits).
+    let c = scheme_census(&Scheme::new(SchemeKind::Baseline18, Precision::Quad));
+    assert_eq!(c.padded_bits, 126);
+    assert_eq!(c.total_blocks, analysis::PAPER_CLAIMED_QP_TOTAL_18X18);
+    assert_eq!(c.count(BlockKind::M18x18), 49);
+}
+
+#[test]
+fn qp_baseline18_wastage_recomputed_vs_paper() {
+    // The paper claims 17/49 wasted blocks (35%). Recomputed: the top chunk
+    // holds 5 real bits, so padded tiles = 7 + 7 - 1 = 13 (26.5%). We pin
+    // the recomputed value and keep the paper's constant for reporting.
+    let c = scheme_census(&Scheme::new(SchemeKind::Baseline18, Precision::Quad));
+    assert_eq!(c.padded_blocks, 13);
+    assert_ne!(c.padded_blocks, analysis::PAPER_CLAIMED_QP_WASTED_18X18);
+    // Direction of the claim holds: a significant fraction is padded.
+    assert!(c.padded_fraction() > 0.25);
+}
+
+#[test]
+fn qp_civp_near_perfect_utilization() {
+    // CIVP pads 113 -> 114: exactly one padding bit. Only tiles touching
+    // the top 9-bit chunk see it.
+    let c = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Quad));
+    assert!(c.utilization > 0.98, "civp quad utilization {}", c.utilization);
+    let b18 = scheme_census(&Scheme::new(SchemeKind::Baseline18, Precision::Quad));
+    assert!(c.utilization > b18.utilization);
+}
+
+#[test]
+fn dp_civp_utilization_beats_what_paper_concedes() {
+    // §II.B concedes 18x18 "seems the better choice" for DP in block count
+    // (9 vs 9) — but CIVP still wins utilization because 54 pads 1 bit vs
+    // 57 pads 4.
+    let civp = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Double));
+    let b18 = scheme_census(&Scheme::new(SchemeKind::Baseline18, Precision::Double));
+    assert_eq!(civp.total_blocks, b18.total_blocks);
+    // Paper's concession: same block count; CIVP's capacity is larger
+    // (24-bit ports), so raw utilization is lower — record the real numbers.
+    assert!(civp.utilization > 0.85);
+    assert!(b18.utilization > 0.9);
+}
+
+#[test]
+fn baseline25x18_counts() {
+    // DSP48E-style: A in 25s, B in 18s.
+    let sp = scheme_census(&Scheme::new(SchemeKind::Baseline25x18, Precision::Single));
+    assert_eq!(sp.total_blocks, 1 * 2); // 24->one 25-chunk, 24->two 18-chunks
+    let qp = scheme_census(&Scheme::new(SchemeKind::Baseline25x18, Precision::Quad));
+    assert_eq!(qp.total_blocks, 5 * 7);
+}
+
+#[test]
+fn baseline9_counts() {
+    let sp = scheme_census(&Scheme::new(SchemeKind::Baseline9, Precision::Single));
+    assert_eq!(sp.total_blocks, 9); // 27x27 in 9s
+    let qp = scheme_census(&Scheme::new(SchemeKind::Baseline9, Precision::Quad));
+    assert_eq!(qp.total_blocks, 13 * 13);
+}
+
+#[test]
+fn dead_blocks_only_when_chunk_all_padding() {
+    // No scheme for IEEE precisions produces an all-padding chunk.
+    for prec in Precision::ALL {
+        for kind in SchemeKind::ALL {
+            let c = scheme_census(&Scheme::new(kind, prec));
+            assert_eq!(c.dead_blocks, 0, "{:?} {:?}", kind, prec);
+        }
+    }
+}
+
+#[test]
+fn tile_offsets_cover_operand_exactly() {
+    for prec in Precision::ALL {
+        for kind in SchemeKind::ALL {
+            let s = Scheme::new(kind, prec);
+            let sum_a: u32 = s.a_chunks.iter().sum();
+            let sum_b: u32 = s.b_chunks.iter().sum();
+            assert!(sum_a >= s.eff_bits);
+            assert!(sum_b >= s.eff_bits);
+            let tiles = s.tiles();
+            assert_eq!(tiles.len(), s.a_chunks.len() * s.b_chunks.len());
+            // every tile's chunk fits its block
+            for t in &tiles {
+                assert!(t.kind.fits(t.wa, t.wb), "{t:?}");
+                assert!(t.eff_a <= t.wa && t.eff_b <= t.wb);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Exact execution (the ModelSim-equivalent functional check)
+// ---------------------------------------------------------------------
+
+#[test]
+fn execute_exact_all_schemes_all_precisions() {
+    forall(0x200, 2_000, |rng| {
+        for prec in Precision::ALL {
+            for kind in SchemeKind::ALL {
+                let s = Scheme::new(kind, prec);
+                let a = rand_sig(rng, prec.sig_bits());
+                let b = rand_sig(rng, prec.sig_bits());
+                let mut stats = ExecStats::default();
+                let got = execute(&s, a, b, &mut stats);
+                assert_eq!(got, mul_u128(a, b), "{} exactness", s.name);
+                assert_eq!(stats.tiles as usize, s.block_count());
+            }
+        }
+    });
+}
+
+#[test]
+fn execute_exact_integer_widths() {
+    // The "combined integer" claim: CIVP blocks serve arbitrary-width
+    // integer multiplication exactly.
+    forall(0x201, 500, |rng| {
+        let width = rng.range(2, 128) as u32;
+        for kind in SchemeKind::ALL {
+            let s = Scheme::for_int(kind, width);
+            let a = rand_sig(rng, width);
+            let b = rand_sig(rng, width);
+            let mut stats = ExecStats::default();
+            let got = execute(&s, a, b, &mut stats);
+            assert_eq!(got, mul_u128(a, b), "{} width={width}", s.name);
+        }
+    });
+}
+
+#[test]
+fn execute_edge_operands() {
+    // all-zeros (denormal path feeds normalized values, but the executor
+    // must still be exact), all-ones, single-bit.
+    for prec in Precision::ALL {
+        let bits = prec.sig_bits();
+        let ones = U128::ONE.shl(bits).wrapping_sub(&U128::ONE);
+        let one = U128::ONE;
+        let top = U128::ONE.shl(bits - 1);
+        for kind in SchemeKind::ALL {
+            let s = Scheme::new(kind, prec);
+            for (a, b) in [(ones, ones), (one, ones), (top, top), (U128::ZERO, ones)] {
+                let mut st = ExecStats::default();
+                assert_eq!(execute(&s, a, b, &mut st), mul_u128(a, b), "{}", s.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn decomp_mul_drives_ieee_pipeline_bit_exact() {
+    // Full-system check: CIVP-decomposed significand multiply inside the
+    // IEEE pipeline == hardware f32/f64 multiply.
+    forall(0x202, 5_000, |rng| {
+        let mut m = DecompMul::new(SchemeKind::Civp);
+        let a = f64::from_bits(rng.nasty_bits64());
+        let b = f64::from_bits(rng.nasty_bits64());
+        let (r, _) = Fp64::from_f64(a).mul_with(Fp64::from_f64(b), RoundMode::NearestEven, &mut m);
+        let hw = a * b;
+        if hw.is_nan() {
+            assert!(r.to_f64().is_nan());
+        } else {
+            assert_eq!(r.0, hw.to_bits(), "a={a:e} b={b:e}");
+        }
+
+        let a = f32::from_bits(rng.nasty_bits32());
+        let b = f32::from_bits(rng.nasty_bits32());
+        let (r, _) = Fp32::from_f32(a).mul_with(Fp32::from_f32(b), RoundMode::NearestEven, &mut m);
+        let hw = a * b;
+        if hw.is_nan() {
+            assert!(r.to_f32().is_nan());
+        } else {
+            assert_eq!(r.0, hw.to_bits(), "a={a:e} b={b:e}");
+        }
+    });
+}
+
+#[test]
+fn decomp_mul_all_baselines_agree_on_fp128() {
+    // Quad has no hardware oracle; instead all four organizations plus the
+    // direct multiplier must produce identical packed results.
+    forall(0x203, 2_000, |rng| {
+        let a = Fp128::from_f64(f64::from_bits(rng.nasty_bits64()));
+        let b = Fp128::from_f64(f64::from_bits(rng.nasty_bits64()));
+        let (expect, _) = a.mul_with(b, RoundMode::NearestEven, &mut DirectMul);
+        for kind in SchemeKind::ALL {
+            let mut m = DecompMul::new(kind);
+            let (got, _) = a.mul_with(b, RoundMode::NearestEven, &mut m);
+            if expect.is_nan() {
+                assert!(got.is_nan());
+            } else {
+                assert_eq!(got.0, expect.0, "{:?}", kind);
+            }
+        }
+    });
+}
+
+#[test]
+fn decomp_mul_stats_accumulate() {
+    let mut m = DecompMul::new(SchemeKind::Civp);
+    let x = Fp64::from_f64(1.5);
+    let y = Fp64::from_f64(2.5);
+    for _ in 0..10 {
+        x.mul_with(y, RoundMode::NearestEven, &mut m);
+    }
+    assert_eq!(m.stats.muls, 10);
+    assert_eq!(m.stats.tiles, 90); // 9 blocks per DP multiply
+    assert_eq!(m.stats.ops(BlockKind::M24x24), 40);
+    assert_eq!(m.stats.ops(BlockKind::M24x9), 40);
+    assert_eq!(m.stats.ops(BlockKind::M9x9), 10);
+    m.reset_stats();
+    assert_eq!(m.stats.muls, 0);
+}
+
+#[test]
+fn decomp_mul_verified_mode() {
+    let mut m = DecompMul::verified(SchemeKind::Civp);
+    let (r, _) =
+        Fp64::from_f64(1.1).mul_with(Fp64::from_f64(2.2), RoundMode::NearestEven, &mut m);
+    assert_eq!(r.to_f64(), 1.1 * 2.2);
+}
+
+#[test]
+fn analysis_full_table_shape() {
+    let table = AnalysisRow::full_table();
+    assert_eq!(table.len(), 12); // 3 precisions x 4 organizations
+    // CIVP quad row repeats Fig. 4 counts.
+    let qp_civp = table
+        .iter()
+        .find(|r| r.precision == Precision::Quad && r.kind == SchemeKind::Civp)
+        .unwrap();
+    assert_eq!(qp_civp.census.total_blocks, 36);
+}
+
+#[test]
+fn stats_utilization_bounds() {
+    forall(0x204, 200, |rng| {
+        let width = rng.range(2, 128) as u32;
+        let s = Scheme::for_int(SchemeKind::Civp, width);
+        let c = scheme_census(&s);
+        assert!(c.utilization > 0.0 && c.utilization <= 1.0);
+    });
+}

@@ -1,0 +1,110 @@
+//! Area / latency / energy cost models for dedicated multiplier blocks.
+//!
+//! An `m×n` array multiplier has `m·n` partial-product cells; both silicon
+//! area and dynamic switching energy scale with the cell count to first
+//! order, which is the approximation the paper itself reasons with ("17
+//! blocks ... consuming the power of 18x18 multiplication"). All constants
+//! are *normalized to the 18x18 block = 1.0* so only relative comparisons —
+//! the only kind the paper makes — are meaningful.
+//!
+//! The latency model gives each dedicated block a fixed pipeline depth
+//! (dedicated FPGA multipliers are fully pipelined, initiation interval 1)
+//! and charges the partial-product reduction (adder tree) `log2` levels of
+//! soft-logic carry-save addition — the structure of Fig. 2(b)'s shifted
+//! additions.
+
+use crate::decomp::BlockKind;
+
+/// Reference capacity: the 18x18 block's `324` bit-product cells.
+const REF_CAPACITY: f64 = 324.0;
+
+/// Tunable cost model. The defaults are first-order array-multiplier
+/// scalings; the constructor doc-comments record the datasheet intuition.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Dynamic energy per firing of a block, per unit of normalized
+    /// capacity (capacity / 324). A block always burns its full-capacity
+    /// energy when it fires — this is exactly the waste the paper targets.
+    pub energy_per_capacity: f64,
+    /// Static (leakage) power per unit capacity per cycle, as a fraction of
+    /// the dynamic per-op energy. Idle provisioned blocks still leak.
+    pub static_per_capacity_cycle: f64,
+    /// Soft-logic energy per accumulated output bit in the adder tree,
+    /// relative to one 18x18 firing.
+    pub adder_energy_per_bit: f64,
+    /// Pipeline depth (cycles) of a dedicated block.
+    pub block_latency: u32,
+    /// Cycles per carry-save adder-tree level in soft logic.
+    pub adder_level_latency: u32,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            energy_per_capacity: 1.0,
+            // Leakage per cycle is small relative to an op; 0.5% of a
+            // full-capacity firing per idle cycle.
+            static_per_capacity_cycle: 0.005,
+            // One CSA bit ≈ a full adder ≈ tiny next to a 324-cell array.
+            adder_energy_per_bit: 0.002,
+            block_latency: 2,
+            adder_level_latency: 1,
+        }
+    }
+}
+
+impl CostModel {
+    /// Normalized dynamic energy of one firing of `kind` (1.0 = 18x18).
+    pub fn block_energy(&self, kind: BlockKind) -> f64 {
+        self.energy_per_capacity * kind.capacity() as f64 / REF_CAPACITY
+    }
+
+    /// Normalized area of one instance of `kind` (1.0 = 18x18).
+    pub fn block_area(&self, kind: BlockKind) -> f64 {
+        kind.capacity() as f64 / REF_CAPACITY
+    }
+
+    /// Energy actually *useful* in a firing where only `eff_a x eff_b` of
+    /// the array carries real data. The difference from
+    /// [`Self::block_energy`] is the paper's wasted power.
+    pub fn useful_energy(&self, kind: BlockKind, eff_a: u32, eff_b: u32) -> f64 {
+        debug_assert!({
+            let (da, db) = kind.dims();
+            (eff_a <= da && eff_b <= db) || (eff_a <= db && eff_b <= da)
+        });
+        self.energy_per_capacity * (eff_a * eff_b) as f64 / REF_CAPACITY
+    }
+
+    /// Energy of the shifted-accumulation adder tree for `tiles` partial
+    /// products of a `width`-bit multiplication: reducing `n` values needs
+    /// `n - 1` two-input additions of (at most) `2*width` bits each; the
+    /// tree shape affects latency, not the addition count.
+    pub fn adder_energy(&self, tiles: usize, width: u32) -> f64 {
+        if tiles <= 1 {
+            return 0.0;
+        }
+        self.adder_energy_per_bit * (2 * width) as f64 * (tiles - 1) as f64
+    }
+
+    /// Static leakage of a whole fabric over `cycles`.
+    pub fn static_energy(&self, total_capacity: f64, cycles: u64) -> f64 {
+        self.static_per_capacity_cycle * total_capacity / REF_CAPACITY * cycles as f64
+    }
+
+    /// End-to-end latency (cycles) of one multiplication whose tiles all
+    /// issue immediately: block pipeline + adder tree.
+    pub fn unconstrained_latency(&self, tiles: usize) -> u32 {
+        self.block_latency + self.adder_level_latency * adder_tree_depth(tiles)
+    }
+}
+
+/// Carry-save adder tree depth for `n` partial products: `ceil(log2 n)`
+/// (3:2 compressor trees are a constant factor shallower; `log2` keeps the
+/// model simple and monotone, which is all relative comparisons need).
+pub fn adder_tree_depth(n: usize) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as u32
+    }
+}

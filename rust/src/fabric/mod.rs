@@ -1,0 +1,30 @@
+//! Cycle-level FPGA DSP-block fabric simulator.
+//!
+//! The paper's hardware claims (block counts, "wasted computation", low
+//! power) are about what happens on an FPGA's dedicated multiplier fabric.
+//! No FPGA is available in this environment, so this module simulates the
+//! relevant behaviour at the block level (DESIGN.md §2 substitution map):
+//!
+//! * [`cost`] — area / latency / dynamic-energy models per block kind,
+//!   normalized so `E(18x18) = 1.0` (the paper argues *relative* power).
+//! * [`pool`] — a fabric configuration: how many instances of each block
+//!   kind exist (the paper's proposal is a fabric shipping `24x24`/`24x9`/
+//!   `9x9`; the legacy baseline ships `18x18`/`25x18`/`9x9`).
+//! * [`sched`] — list-scheduling of a multiplication's tile DAG onto the
+//!   finite block instances: latency (cycles), pipelined initiation
+//!   interval, energy per operation.
+//! * [`report`] — aggregated per-run reports used by the benches.
+
+pub mod cost;
+pub mod pool;
+pub mod repair;
+pub mod report;
+pub mod sched;
+#[cfg(test)]
+mod tests;
+
+pub use cost::{adder_tree_depth, CostModel};
+pub use pool::{FabricConfig, FabricKind};
+pub use repair::{gated_tile_energy, gating_report, FaultOutcome, RepairableFabric};
+pub use report::{FabricReport, StreamReport};
+pub use sched::{schedule_op, simulate_stream, OpClass, ScheduledOp};

@@ -1,0 +1,97 @@
+//! Fabric configurations: how many dedicated blocks of each kind exist.
+
+use crate::decomp::BlockKind;
+use std::collections::BTreeMap;
+
+/// Named fabric presets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FabricKind {
+    /// The paper's proposal: `24x24` + `24x9` + `9x9` blocks.
+    Civp,
+    /// Legacy Xilinx/Altera-style fabric: `18x18` + `25x18` + `9x9`.
+    Legacy,
+}
+
+/// A concrete fabric: instance counts per block kind.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FabricConfig {
+    /// Display name.
+    pub name: String,
+    /// Instances per kind. Kinds absent from the map do not exist in this
+    /// fabric.
+    pub instances: BTreeMap<BlockKind, u32>,
+}
+
+impl FabricConfig {
+    /// The paper's proposed fabric, sized so one quadruple-precision
+    /// multiplication issues in a single wave (Fig. 4 needs 16/16/4).
+    pub fn civp_default() -> FabricConfig {
+        Self::civp_scaled(1)
+    }
+
+    /// CIVP fabric with `scale` quad-multiplication "columns".
+    pub fn civp_scaled(scale: u32) -> FabricConfig {
+        let mut m = BTreeMap::new();
+        m.insert(BlockKind::M24x24, 16 * scale);
+        m.insert(BlockKind::M24x9, 16 * scale);
+        m.insert(BlockKind::M9x9, 4 * scale);
+        FabricConfig { name: format!("civp-x{scale}"), instances: m }
+    }
+
+    /// Legacy fabric with the *same total multiplier-array area* as
+    /// [`Self::civp_scaled`] — the iso-area comparison the paper implies.
+    pub fn legacy_iso_area(scale: u32) -> FabricConfig {
+        // CIVP column area: 16*576 + 16*216 + 4*81 = 12996 cells.
+        // One 18x18 block = 324 cells -> 40 blocks per column ≈ iso-area
+        // (12960 cells, within 0.3%).
+        let mut m = BTreeMap::new();
+        m.insert(BlockKind::M18x18, 40 * scale);
+        FabricConfig { name: format!("legacy-iso-area-x{scale}"), instances: m }
+    }
+
+    /// Legacy fabric sized so one quad multiplication issues in one wave
+    /// (49 blocks), plus the 9x9s legacy fabrics ship.
+    pub fn legacy_default() -> FabricConfig {
+        Self::legacy_scaled(1)
+    }
+
+    /// Legacy fabric with `scale` quad columns. Ships every block kind the
+    /// legacy family offers: `18x18` (49 = one quad wave), `25x18` (35 =
+    /// one quad wave under the DSP48E-style tiling) and `9x9`.
+    pub fn legacy_scaled(scale: u32) -> FabricConfig {
+        let mut m = BTreeMap::new();
+        m.insert(BlockKind::M18x18, 49 * scale);
+        m.insert(BlockKind::M25x18, 35 * scale);
+        m.insert(BlockKind::M9x9, 4 * scale);
+        FabricConfig { name: format!("legacy-x{scale}"), instances: m }
+    }
+
+    /// Build for a named preset.
+    pub fn preset(kind: FabricKind) -> FabricConfig {
+        match kind {
+            FabricKind::Civp => Self::civp_default(),
+            FabricKind::Legacy => Self::legacy_default(),
+        }
+    }
+
+    /// Instances of one kind.
+    pub fn count(&self, kind: BlockKind) -> u32 {
+        self.instances.get(&kind).copied().unwrap_or(0)
+    }
+
+    /// Total multiplier-array capacity (bit-product cells) provisioned.
+    pub fn total_capacity(&self) -> f64 {
+        self.instances.iter().map(|(k, n)| k.capacity() as f64 * *n as f64).sum()
+    }
+
+    /// Total normalized area (18x18 = 1.0).
+    pub fn total_area(&self) -> f64 {
+        self.total_capacity() / 324.0
+    }
+
+    /// True if the fabric has at least one instance of every kind in
+    /// `needs`.
+    pub fn can_serve(&self, needs: impl IntoIterator<Item = BlockKind>) -> bool {
+        needs.into_iter().all(|k| self.count(k) > 0)
+    }
+}

@@ -1,0 +1,303 @@
+//! Reconfigurable, self-repairing multiplier blocks — the paper's stated
+//! future work (§III: "a novel design of 24x24 bit multiplier having the
+//! feature of reconfigurability and self reparability at run time ... with
+//! considerable dynamic power saving").
+//!
+//! Model: each dedicated block is built from a grid of 12x12 sub-multiplier
+//! units (a 24x24 block = 2x2 grid, 24x9 = 2x1, 9x9 = 1x1 — a 9-bit port
+//! occupies one 12-bit sub-unit column), plus a configurable number of
+//! spare units per block.
+//!
+//! * **Self-repair**: a faulty sub-unit is remapped to a spare at run time;
+//!   only when spares are exhausted does the whole block fall out of the
+//!   fabric (degrading the schedule — more issue waves).
+//! * **Reconfigurability / power gating**: when a tile uses fewer effective
+//!   bits than the block's ports, the unused sub-units are power-gated, so
+//!   the block burns energy proportional to the *sub-units engaged* rather
+//!   than its full array — the "considerable dynamic power saving".
+
+use super::cost::CostModel;
+use super::pool::FabricConfig;
+use crate::decomp::{BlockKind, Tile};
+use crate::proput::Rng;
+use std::collections::BTreeMap;
+
+/// Sub-multiplier grid dimensions for a block kind (rows x cols of 12x12
+/// units; a 9-bit port still occupies one 12-bit unit).
+pub fn subunit_grid(kind: BlockKind) -> (u32, u32) {
+    let (a, b) = kind.dims();
+    (a.div_ceil(12), b.div_ceil(12))
+}
+
+/// Total sub-units in one block of `kind`.
+pub fn subunits(kind: BlockKind) -> u32 {
+    let (r, c) = subunit_grid(kind);
+    r * c
+}
+
+/// A fabric whose blocks can fail sub-unit by sub-unit and repair
+/// themselves from spares.
+#[derive(Clone, Debug)]
+pub struct RepairableFabric {
+    /// The pristine configuration.
+    pub base: FabricConfig,
+    /// Spare sub-units provisioned per block instance.
+    pub spares_per_block: u32,
+    /// Faults absorbed so far, per block kind: (repaired, dead_blocks).
+    state: BTreeMap<BlockKind, KindState>,
+}
+
+#[derive(Clone, Debug, Default)]
+struct KindState {
+    /// Sub-unit faults remapped onto spares (no capacity loss).
+    repaired: u64,
+    /// Spare budget consumed per live instance index.
+    used_spares: Vec<u32>,
+    /// Instances permanently lost (spares exhausted).
+    dead: u32,
+}
+
+/// Outcome of one fault injection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOutcome {
+    /// Remapped to a spare; full capacity retained.
+    Repaired,
+    /// Spares exhausted; the block is retired from the fabric.
+    BlockLost,
+    /// The targeted kind has no live instances left.
+    NoTarget,
+}
+
+impl RepairableFabric {
+    /// Wrap a fabric with `spares_per_block` spare 12x12 units per block.
+    pub fn new(base: FabricConfig, spares_per_block: u32) -> RepairableFabric {
+        let mut state = BTreeMap::new();
+        for (kind, n) in &base.instances {
+            state.insert(
+                *kind,
+                KindState { repaired: 0, used_spares: vec![0; *n as usize], dead: 0 },
+            );
+        }
+        RepairableFabric { base, spares_per_block, state }
+    }
+
+    /// Live instances of a kind after degradation.
+    pub fn live(&self, kind: BlockKind) -> u32 {
+        let total = self.base.count(kind);
+        let dead = self.state.get(&kind).map(|s| s.dead).unwrap_or(0);
+        total.saturating_sub(dead)
+    }
+
+    /// Inject one sub-unit fault into a random live instance of `kind`.
+    pub fn inject_fault(&mut self, kind: BlockKind, rng: &mut Rng) -> FaultOutcome {
+        let spares = self.spares_per_block;
+        let Some(s) = self.state.get_mut(&kind) else { return FaultOutcome::NoTarget };
+        let live: Vec<usize> = s
+            .used_spares
+            .iter()
+            .enumerate()
+            .filter(|(_, &u)| u != u32::MAX)
+            .map(|(i, _)| i)
+            .collect();
+        if live.is_empty() {
+            return FaultOutcome::NoTarget;
+        }
+        let idx = live[rng.below(live.len() as u64) as usize];
+        if s.used_spares[idx] < spares {
+            s.used_spares[idx] += 1;
+            s.repaired += 1;
+            FaultOutcome::Repaired
+        } else {
+            s.used_spares[idx] = u32::MAX; // tombstone
+            s.dead += 1;
+            FaultOutcome::BlockLost
+        }
+    }
+
+    /// The degraded fabric as a plain config (for the scheduler).
+    pub fn effective_config(&self) -> FabricConfig {
+        let mut cfg = self.base.clone();
+        cfg.name = format!("{}-degraded", self.base.name);
+        for (kind, n) in cfg.instances.iter_mut() {
+            *n = self.live(*kind).max(0);
+        }
+        cfg.instances.retain(|_, n| *n > 0);
+        cfg
+    }
+
+    /// (repaired faults, lost blocks) per kind.
+    pub fn degradation(&self) -> BTreeMap<BlockKind, (u64, u32)> {
+        self.state.iter().map(|(k, s)| (*k, (s.repaired, s.dead))).collect()
+    }
+
+    /// Fraction of original block capacity still live.
+    pub fn health(&self) -> f64 {
+        let total: f64 = self.base.total_capacity();
+        if total == 0.0 {
+            return 1.0;
+        }
+        let live: f64 = self
+            .base
+            .instances
+            .keys()
+            .map(|k| k.capacity() as f64 * self.live(*k) as f64)
+            .sum();
+        live / total
+    }
+}
+
+/// Dynamic energy of a tile on a *reconfigurable* block: only the
+/// sub-units covering the effective bits stay powered; the rest are gated.
+/// Sub-units tile the block exactly (a 24-bit port splits into 2x12, an
+/// 18-bit port into 2x9, a 9-bit port is one unit), so a fully-engaged
+/// block costs exactly [`CostModel::block_energy`] and a padded one costs
+/// less. This is the paper's "considerable dynamic power saving"
+/// quantified.
+pub fn gated_tile_energy(cost: &CostModel, tile: &Tile) -> f64 {
+    let (dim_a, dim_b) = {
+        // orient block dims to match the tile's port assignment
+        let (da, db) = tile.kind.dims();
+        if tile.wa <= da && tile.wb <= db {
+            (da, db)
+        } else {
+            (db, da)
+        }
+    };
+    let (rows, cols) = (dim_a.div_ceil(12), dim_b.div_ceil(12));
+    let (sub_a, sub_b) = (dim_a / rows, dim_b / cols); // exact: 12, 9 or block dim
+    let engaged_rows = tile.eff_a.div_ceil(sub_a).min(rows);
+    let engaged_cols = tile.eff_b.div_ceil(sub_b).min(cols);
+    let engaged_cells = engaged_rows * sub_a * engaged_cols * sub_b;
+    cost.energy_per_capacity * engaged_cells as f64 / 324.0
+}
+
+/// Total gated energy for a tile set vs the ungated (hard-wired) energy.
+pub fn gating_report(cost: &CostModel, tiles: &[Tile]) -> (f64, f64) {
+    let gated: f64 = tiles.iter().map(|t| gated_tile_energy(cost, t)).sum();
+    let fixed: f64 = tiles.iter().map(|t| cost.block_energy(t.kind)).sum();
+    (gated, fixed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::{Precision, Scheme, SchemeKind};
+    use crate::fabric::{schedule_op, CostModel};
+
+    #[test]
+    fn subunit_grids() {
+        assert_eq!(subunit_grid(BlockKind::M24x24), (2, 2));
+        assert_eq!(subunit_grid(BlockKind::M24x9), (2, 1));
+        assert_eq!(subunit_grid(BlockKind::M9x9), (1, 1));
+        assert_eq!(subunit_grid(BlockKind::M18x18), (2, 2));
+        assert_eq!(subunits(BlockKind::M24x24), 4);
+    }
+
+    #[test]
+    fn spares_absorb_first_faults_without_degradation() {
+        let mut f = RepairableFabric::new(FabricConfig::civp_default(), 2);
+        let mut rng = Rng::new(1);
+        // 16 instances x 2 spares = 32 faults absorbable in the best case;
+        // inject a handful and require zero capacity loss.
+        for _ in 0..8 {
+            let out = f.inject_fault(BlockKind::M24x24, &mut rng);
+            assert_ne!(out, FaultOutcome::NoTarget);
+        }
+        assert!(f.health() > 0.99 || f.live(BlockKind::M24x24) == 16);
+    }
+
+    #[test]
+    fn exhausted_spares_lose_blocks_monotonically() {
+        let mut f = RepairableFabric::new(FabricConfig::civp_default(), 1);
+        let mut rng = Rng::new(2);
+        let mut last_live = f.live(BlockKind::M24x24);
+        let mut lost = 0;
+        for _ in 0..200 {
+            if f.inject_fault(BlockKind::M24x24, &mut rng) == FaultOutcome::BlockLost {
+                lost += 1;
+            }
+            let live = f.live(BlockKind::M24x24);
+            assert!(live <= last_live, "live count must be monotone");
+            last_live = live;
+        }
+        assert!(lost > 0);
+        assert_eq!(f.live(BlockKind::M24x24), 16 - lost);
+        assert!(f.health() < 1.0);
+    }
+
+    #[test]
+    fn zero_spares_every_fault_kills_a_block() {
+        let mut f = RepairableFabric::new(FabricConfig::civp_default(), 0);
+        let mut rng = Rng::new(3);
+        for i in 0..4 {
+            assert_eq!(f.inject_fault(BlockKind::M9x9, &mut rng), FaultOutcome::BlockLost, "{i}");
+        }
+        // all four 9x9s gone
+        assert_eq!(f.inject_fault(BlockKind::M9x9, &mut rng), FaultOutcome::NoTarget);
+        assert_eq!(f.live(BlockKind::M9x9), 0);
+        assert!(f.effective_config().instances.get(&BlockKind::M9x9).is_none());
+    }
+
+    #[test]
+    fn degraded_fabric_needs_more_waves() {
+        let mut f = RepairableFabric::new(FabricConfig::civp_default(), 0);
+        let mut rng = Rng::new(4);
+        // kill half the 24x24s
+        let mut killed = 0;
+        while killed < 8 {
+            if f.inject_fault(BlockKind::M24x24, &mut rng) == FaultOutcome::BlockLost {
+                killed += 1;
+            }
+        }
+        let cost = CostModel::default();
+        let scheme = Scheme::new(SchemeKind::Civp, Precision::Quad);
+        let healthy = schedule_op(&scheme, &FabricConfig::civp_default(), &cost);
+        let degraded = schedule_op(&scheme, &f.effective_config(), &cost);
+        assert_eq!(healthy.initiation_interval, 1);
+        assert_eq!(degraded.initiation_interval, 2, "8 of 16 24x24s -> 2 waves");
+    }
+
+    #[test]
+    fn gating_saves_energy_exactly_where_padding_lives() {
+        let cost = CostModel::default();
+        // Single precision on CIVP: zero padding -> gating saves nothing.
+        let sp = Scheme::new(SchemeKind::Civp, Precision::Single).tiles();
+        let (gated, fixed) = gating_report(&cost, &sp);
+        assert!((gated - fixed).abs() < 1e-9, "fully-used block gains nothing");
+        // Quad on 18x18: 13 padded tiles -> gating must save energy.
+        let qp18 = Scheme::new(SchemeKind::Baseline18, Precision::Quad).tiles();
+        let (gated, fixed) = gating_report(&cost, &qp18);
+        assert!(gated < fixed * 0.95, "gated {gated} vs fixed {fixed}");
+        // And gated energy is never more than fixed for any scheme.
+        for prec in Precision::ALL {
+            for kind in SchemeKind::ALL {
+                let tiles = Scheme::new(kind, prec).tiles();
+                let (g, f) = gating_report(&cost, &tiles);
+                assert!(g <= f + 1e-9, "{kind:?} {prec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn gated_energy_monotone_in_effective_bits() {
+        let cost = CostModel::default();
+        let mk = |eff_a, eff_b| Tile {
+            i: 0,
+            j: 0,
+            off_a: 0,
+            off_b: 0,
+            wa: 24,
+            wb: 24,
+            eff_a,
+            eff_b,
+            kind: BlockKind::M24x24,
+        };
+        let mut last = 0.0;
+        for eff in [1u32, 9, 12, 13, 24] {
+            let e = gated_tile_energy(&cost, &mk(eff, eff));
+            assert!(e >= last);
+            last = e;
+        }
+        assert!((last - cost.block_energy(BlockKind::M24x24)).abs() < 1e-9);
+    }
+}

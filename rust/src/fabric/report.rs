@@ -1,0 +1,77 @@
+//! Report structures produced by the fabric simulator.
+
+/// Per-class scheduling report.
+#[derive(Clone, Debug)]
+pub struct FabricReport {
+    /// "organization-precision" label.
+    pub label: String,
+    /// Operations of this class.
+    pub ops: u64,
+    /// Cycles consumed (issue + drain).
+    pub cycles: u64,
+    /// Total dynamic energy (normalized, 18x18-op = 1.0).
+    pub dyn_energy: f64,
+    /// Portion of the dynamic energy doing useful bit-products.
+    pub useful_energy: f64,
+    /// Latency of one op.
+    pub latency_cycles: u32,
+    /// Initiation interval when streamed.
+    pub initiation_interval: u32,
+}
+
+impl FabricReport {
+    /// Fraction of dynamic energy wasted on padding.
+    pub fn wasted_fraction(&self) -> f64 {
+        if self.dyn_energy == 0.0 {
+            return 0.0;
+        }
+        1.0 - self.useful_energy / self.dyn_energy
+    }
+}
+
+/// Whole-stream simulation report (E7 rows).
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    /// Fabric name.
+    pub fabric: String,
+    /// Total ops simulated.
+    pub total_ops: u64,
+    /// Total cycles.
+    pub cycles: u64,
+    /// Total dynamic energy.
+    pub dyn_energy: f64,
+    /// Useful portion.
+    pub useful_energy: f64,
+    /// Leakage over the run.
+    pub static_energy: f64,
+    /// Per-class breakdown.
+    pub per_class: Vec<FabricReport>,
+}
+
+impl StreamReport {
+    /// Ops per cycle.
+    pub fn throughput(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.total_ops as f64 / self.cycles as f64
+    }
+    /// Total energy (dynamic + static).
+    pub fn total_energy(&self) -> f64 {
+        self.dyn_energy + self.static_energy
+    }
+    /// Energy per op.
+    pub fn energy_per_op(&self) -> f64 {
+        if self.total_ops == 0 {
+            return 0.0;
+        }
+        self.total_energy() / self.total_ops as f64
+    }
+    /// Fraction of dynamic energy wasted on padded ports.
+    pub fn wasted_fraction(&self) -> f64 {
+        if self.dyn_energy == 0.0 {
+            return 0.0;
+        }
+        1.0 - self.useful_energy / self.dyn_energy
+    }
+}

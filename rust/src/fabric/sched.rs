@@ -1,0 +1,143 @@
+//! Scheduling of multiplication tile-DAGs onto finite block instances.
+//!
+//! Each significand multiplication is a two-stage DAG: a set of independent
+//! partial-product tiles (Fig. 2(b) / Fig. 4(b)) followed by a shifted-
+//! accumulation adder tree. Dedicated blocks are fully pipelined (II = 1),
+//! so scheduling is a counting problem: a fabric with `n_k` instances of
+//! kind `k` issues at most `n_k` kind-`k` tiles per cycle.
+
+use super::cost::CostModel;
+use super::pool::FabricConfig;
+use super::report::{FabricReport, StreamReport};
+use crate::decomp::{Precision, Scheme, SchemeKind};
+use std::collections::BTreeMap;
+
+/// One operation class flowing through the fabric: a significand multiply
+/// of `precision` under `organization`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpClass {
+    /// IEEE precision of the multiply.
+    pub precision: Precision,
+    /// Partition organization executing it.
+    pub organization: SchemeKind,
+}
+
+impl OpClass {
+    /// The scheme for this class.
+    pub fn scheme(&self) -> Scheme {
+        Scheme::new(self.organization, self.precision)
+    }
+}
+
+/// Result of scheduling one multiplication on a fabric.
+#[derive(Clone, Debug)]
+pub struct ScheduledOp {
+    /// Cycles from issue to result (block pipeline + issue serialization +
+    /// adder tree).
+    pub latency_cycles: u32,
+    /// Cycles between successive results of the same class when streamed
+    /// (pipelined initiation interval).
+    pub initiation_interval: u32,
+    /// Dynamic energy of the op (blocks at full capacity + adder tree).
+    pub dyn_energy: f64,
+    /// Energy doing useful work (effective bits only).
+    pub useful_energy: f64,
+    /// Tiles issued per cycle, per kind (diagnostic).
+    pub issue_waves: u32,
+}
+
+/// Schedule one multiplication described by `scheme` onto `fabric`.
+///
+/// Panics if the fabric lacks a block kind the scheme needs (callers use
+/// [`FabricConfig::can_serve`] to route first — the coordinator refuses to
+/// place CIVP ops on a legacy fabric, mirroring real synthesis).
+pub fn schedule_op(scheme: &Scheme, fabric: &FabricConfig, cost: &CostModel) -> ScheduledOp {
+    let tiles = scheme.tiles();
+    let mut need: BTreeMap<crate::decomp::BlockKind, u32> = BTreeMap::new();
+    let mut dyn_energy = 0.0;
+    let mut useful = 0.0;
+    for t in &tiles {
+        *need.entry(t.kind).or_insert(0) += 1;
+        dyn_energy += cost.block_energy(t.kind);
+        useful += cost.useful_energy(t.kind, t.eff_a, t.eff_b);
+    }
+    // Issue waves: the kind that is most oversubscribed relative to the
+    // fabric's instance count dictates how many cycles the tile set takes
+    // to enter the pipelines.
+    let mut waves = 1u32;
+    for (kind, n) in &need {
+        let avail = fabric.count(*kind);
+        assert!(avail > 0, "fabric {} lacks {} blocks", fabric.name, kind.name());
+        waves = waves.max(n.div_ceil(avail));
+    }
+    let adder = cost.adder_energy(tiles.len(), scheme.padded_bits);
+    dyn_energy += adder;
+    useful += adder; // the tree adds real partial products either way
+    ScheduledOp {
+        latency_cycles: waves - 1 + cost.unconstrained_latency(tiles.len()),
+        initiation_interval: waves,
+        dyn_energy,
+        useful_energy: useful,
+        issue_waves: waves,
+    }
+}
+
+/// Simulate a stream of `ops` (a workload mix) through `fabric`, assuming
+/// full pipelining and in-order issue — the steady-state model behind the
+/// paper's throughput/power comparison (E7).
+pub fn simulate_stream(
+    ops: &[OpClass],
+    fabric: &FabricConfig,
+    cost: &CostModel,
+) -> StreamReport {
+    let mut per_class: BTreeMap<OpClass, u64> = BTreeMap::new();
+    for op in ops {
+        *per_class.entry(*op).or_insert(0) += 1;
+    }
+    let mut cycles = 0u64;
+    let mut dyn_energy = 0.0;
+    let mut useful_energy = 0.0;
+    let mut last_latency = 0u32;
+    let mut per_class_reports = Vec::new();
+    for (class, count) in &per_class {
+        let scheme = class.scheme();
+        let s = schedule_op(&scheme, fabric, cost);
+        // Issue cycles for `count` pipelined ops of this class: the most
+        // oversubscribed block kind gates the stream. An oversized fabric
+        // (more instances than one op's tiles) issues several ops per
+        // cycle, so this can be < count.
+        let mut need: BTreeMap<crate::decomp::BlockKind, u64> = BTreeMap::new();
+        for t in scheme.tiles() {
+            *need.entry(t.kind).or_insert(0) += 1;
+        }
+        let mut issue = 1u64;
+        for (kind, n) in &need {
+            let avail = fabric.count(*kind) as u64;
+            issue = issue.max((count * n).div_ceil(avail));
+        }
+        cycles += issue;
+        last_latency = last_latency.max(s.latency_cycles);
+        dyn_energy += s.dyn_energy * *count as f64;
+        useful_energy += s.useful_energy * *count as f64;
+        per_class_reports.push(FabricReport {
+            label: format!("{}-{}", class.organization.name(), class.precision.name()),
+            ops: *count,
+            cycles: issue + s.latency_cycles as u64,
+            dyn_energy: s.dyn_energy * *count as f64,
+            useful_energy: s.useful_energy * *count as f64,
+            latency_cycles: s.latency_cycles,
+            initiation_interval: s.initiation_interval,
+        });
+    }
+    cycles += last_latency as u64;
+    let static_energy = cost.static_energy(fabric.total_capacity(), cycles);
+    StreamReport {
+        fabric: fabric.name.clone(),
+        total_ops: ops.len() as u64,
+        cycles,
+        dyn_energy,
+        useful_energy,
+        static_energy,
+        per_class: per_class_reports,
+    }
+}

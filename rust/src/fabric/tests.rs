@@ -1,0 +1,198 @@
+//! Fabric simulator tests: cost-model sanity, scheduling invariants, and
+//! the paper's §II.C power argument reproduced quantitatively.
+
+use super::*;
+use crate::decomp::{BlockKind, Precision, Scheme, SchemeKind};
+use crate::proput::forall;
+
+#[test]
+fn adder_tree_depth_values() {
+    assert_eq!(adder_tree_depth(1), 0);
+    assert_eq!(adder_tree_depth(2), 1);
+    assert_eq!(adder_tree_depth(4), 2);
+    assert_eq!(adder_tree_depth(9), 4);
+    assert_eq!(adder_tree_depth(36), 6);
+    assert_eq!(adder_tree_depth(49), 6);
+}
+
+#[test]
+fn block_energy_normalized_to_18x18() {
+    let cm = CostModel::default();
+    assert!((cm.block_energy(BlockKind::M18x18) - 1.0).abs() < 1e-12);
+    assert!((cm.block_energy(BlockKind::M24x24) - 576.0 / 324.0).abs() < 1e-12);
+    assert!((cm.block_energy(BlockKind::M9x9) - 81.0 / 324.0).abs() < 1e-12);
+    assert!(cm.block_energy(BlockKind::M24x9) < cm.block_energy(BlockKind::M18x18));
+}
+
+#[test]
+fn useful_energy_never_exceeds_block_energy() {
+    let cm = CostModel::default();
+    for kind in BlockKind::ALL {
+        let (da, db) = kind.dims();
+        for ea in [0, 1, da / 2, da] {
+            for eb in [0, 1, db / 2, db] {
+                assert!(cm.useful_energy(kind, ea, eb) <= cm.block_energy(kind) + 1e-12);
+            }
+        }
+        assert!((cm.useful_energy(kind, da, db) - cm.block_energy(kind)).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn fabric_presets() {
+    let civp = FabricConfig::civp_default();
+    assert_eq!(civp.count(BlockKind::M24x24), 16);
+    assert_eq!(civp.count(BlockKind::M24x9), 16);
+    assert_eq!(civp.count(BlockKind::M9x9), 4);
+    assert_eq!(civp.count(BlockKind::M18x18), 0);
+
+    let legacy = FabricConfig::legacy_default();
+    assert_eq!(legacy.count(BlockKind::M18x18), 49);
+
+    // Iso-area configs really are iso-area (within 1%).
+    let iso = FabricConfig::legacy_iso_area(1);
+    let ratio = iso.total_capacity() / civp.total_capacity();
+    assert!((ratio - 1.0).abs() < 0.01, "iso-area ratio {ratio}");
+}
+
+#[test]
+fn schedule_qp_single_wave_on_default_fabrics() {
+    // Both default fabrics are sized for one quad multiply per wave.
+    let cm = CostModel::default();
+    let civp = schedule_op(
+        &Scheme::new(SchemeKind::Civp, Precision::Quad),
+        &FabricConfig::civp_default(),
+        &cm,
+    );
+    assert_eq!(civp.initiation_interval, 1);
+    let legacy = schedule_op(
+        &Scheme::new(SchemeKind::Baseline18, Precision::Quad),
+        &FabricConfig::legacy_default(),
+        &cm,
+    );
+    assert_eq!(legacy.initiation_interval, 1);
+    // CIVP's tree is shallower: 36 partial products vs 49.
+    assert!(civp.latency_cycles <= legacy.latency_cycles);
+}
+
+#[test]
+fn paper_power_claim_qp() {
+    // §II.C quantified: on 18x18 fabric a quad multiply wastes a
+    // substantial fraction of its dynamic block energy; CIVP wastes almost
+    // none.
+    let cm = CostModel::default();
+    let civp = schedule_op(
+        &Scheme::new(SchemeKind::Civp, Precision::Quad),
+        &FabricConfig::civp_default(),
+        &cm,
+    );
+    let legacy = schedule_op(
+        &Scheme::new(SchemeKind::Baseline18, Precision::Quad),
+        &FabricConfig::legacy_default(),
+        &cm,
+    );
+    let civp_waste = 1.0 - civp.useful_energy / civp.dyn_energy;
+    let legacy_waste = 1.0 - legacy.useful_energy / legacy.dyn_energy;
+    assert!(civp_waste < 0.02, "civp qp waste {civp_waste}");
+    assert!(legacy_waste > 0.10, "legacy qp waste {legacy_waste}");
+    assert!(legacy_waste > 5.0 * civp_waste);
+}
+
+#[test]
+fn schedule_waves_scale_with_undersized_fabric() {
+    // Half-size CIVP fabric: a quad op needs 2 waves.
+    let cm = CostModel::default();
+    let mut fabric = FabricConfig::civp_default();
+    for n in fabric.instances.values_mut() {
+        *n = (*n).div_ceil(2);
+    }
+    let s = schedule_op(&Scheme::new(SchemeKind::Civp, Precision::Quad), &fabric, &cm);
+    assert_eq!(s.initiation_interval, 2);
+}
+
+#[test]
+#[should_panic(expected = "lacks")]
+fn schedule_panics_on_missing_kind() {
+    let cm = CostModel::default();
+    schedule_op(
+        &Scheme::new(SchemeKind::Civp, Precision::Quad),
+        &FabricConfig::legacy_default(),
+        &cm,
+    );
+}
+
+#[test]
+fn can_serve_routes_correctly() {
+    let civp = FabricConfig::civp_default();
+    let legacy = FabricConfig::legacy_default();
+    let needs_civp = Scheme::new(SchemeKind::Civp, Precision::Quad)
+        .tiles()
+        .iter()
+        .map(|t| t.kind)
+        .collect::<Vec<_>>();
+    let needs_18 = Scheme::new(SchemeKind::Baseline18, Precision::Quad)
+        .tiles()
+        .iter()
+        .map(|t| t.kind)
+        .collect::<Vec<_>>();
+    assert!(civp.can_serve(needs_civp.iter().copied()));
+    assert!(!legacy.can_serve(needs_civp.iter().copied()));
+    assert!(legacy.can_serve(needs_18.iter().copied()));
+    assert!(!civp.can_serve(needs_18));
+}
+
+#[test]
+fn stream_throughput_monotone_in_fabric_size() {
+    let cm = CostModel::default();
+    let ops: Vec<OpClass> = (0..100)
+        .map(|_| OpClass { precision: Precision::Double, organization: SchemeKind::Civp })
+        .collect();
+    let r1 = simulate_stream(&ops, &FabricConfig::civp_scaled(1), &cm);
+    let r4 = simulate_stream(&ops, &FabricConfig::civp_scaled(4), &cm);
+    assert!(r4.cycles <= r1.cycles);
+    assert!(r4.throughput() >= r1.throughput());
+    // Dynamic energy identical (same work), static differs.
+    assert!((r4.dyn_energy - r1.dyn_energy).abs() < 1e-9);
+}
+
+#[test]
+fn stream_mixed_precisions() {
+    let cm = CostModel::default();
+    let mut ops = Vec::new();
+    for i in 0..300 {
+        let precision = match i % 3 {
+            0 => Precision::Single,
+            1 => Precision::Double,
+            _ => Precision::Quad,
+        };
+        ops.push(OpClass { precision, organization: SchemeKind::Civp });
+    }
+    let r = simulate_stream(&ops, &FabricConfig::civp_scaled(2), &cm);
+    assert_eq!(r.total_ops, 300);
+    assert_eq!(r.per_class.len(), 3);
+    assert!(r.cycles > 0);
+    assert!(r.wasted_fraction() < 0.15);
+}
+
+#[test]
+fn stream_energy_accounting_consistent() {
+    forall(0x300, 100, |rng| {
+        let cm = CostModel::default();
+        let n = rng.range(1, 50);
+        let ops: Vec<OpClass> = (0..n)
+            .map(|_| {
+                let precision = match rng.below(3) {
+                    0 => Precision::Single,
+                    1 => Precision::Double,
+                    _ => Precision::Quad,
+                };
+                OpClass { precision, organization: SchemeKind::Civp }
+            })
+            .collect();
+        let r = simulate_stream(&ops, &FabricConfig::civp_scaled(1), &cm);
+        assert!(r.useful_energy <= r.dyn_energy + 1e-9);
+        assert!(r.static_energy >= 0.0);
+        let class_dyn: f64 = r.per_class.iter().map(|c| c.dyn_energy).sum();
+        assert!((class_dyn - r.dyn_energy).abs() < 1e-6);
+    });
+}

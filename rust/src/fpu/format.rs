@@ -1,0 +1,277 @@
+//! IEEE-754 binary interchange format descriptors and pack/unpack.
+//!
+//! All packed values travel as [`U128`] regardless of precision (binary32
+//! occupies the low 32 bits, etc.), so one generic code path serves every
+//! format. This mirrors the paper's framing: the *only* thing that changes
+//! between precisions is the significand width handed to the multiplier
+//! array (24 / 53 / 113 bits).
+
+use crate::wideint::U128;
+
+/// Floating-point datum class after unpacking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FpClass {
+    /// ±0
+    Zero,
+    /// Exponent field 0, fraction non-zero.
+    Subnormal,
+    /// Ordinary normalized value.
+    Normal,
+    /// ±∞
+    Infinite,
+    /// Quiet or signalling NaN.
+    Nan,
+}
+
+/// An IEEE-754 binary interchange format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FpFormat {
+    /// Human name ("single", "double", "quad").
+    pub name: &'static str,
+    /// Exponent field width in bits.
+    pub exp_bits: u32,
+    /// Fraction (trailing significand) width in bits, excluding hidden bit.
+    pub frac_bits: u32,
+}
+
+/// binary32: the paper's "single precision" — 24-bit significand.
+pub const SINGLE: FpFormat = FpFormat { name: "single", exp_bits: 8, frac_bits: 23 };
+/// binary64: Fig. 1 — 53-bit significand.
+pub const DOUBLE: FpFormat = FpFormat { name: "double", exp_bits: 11, frac_bits: 52 };
+/// binary128: Fig. 3 — 113-bit significand.
+pub const QUAD: FpFormat = FpFormat { name: "quad", exp_bits: 15, frac_bits: 112 };
+
+impl FpFormat {
+    /// Total storage width (1 + exp_bits + frac_bits).
+    pub const fn total_bits(&self) -> u32 {
+        1 + self.exp_bits + self.frac_bits
+    }
+    /// Significand width including the hidden bit — the integer multiplier
+    /// width the paper reasons about (24 / 53 / 113).
+    pub const fn sig_bits(&self) -> u32 {
+        self.frac_bits + 1
+    }
+    /// Exponent bias.
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+    /// Minimum unbiased exponent of a normal number.
+    pub const fn emin(&self) -> i32 {
+        1 - self.bias()
+    }
+    /// Maximum unbiased exponent of a finite number.
+    pub const fn emax(&self) -> i32 {
+        self.bias()
+    }
+    /// All-ones biased exponent (Inf/NaN marker).
+    pub const fn exp_mask(&self) -> u32 {
+        (1 << self.exp_bits) - 1
+    }
+
+    /// Positive infinity bit pattern.
+    pub fn inf(&self, sign: bool) -> U128 {
+        let mut v = U128::from_u64(self.exp_mask() as u64).shl(self.frac_bits);
+        if sign {
+            v.set_bit(self.total_bits() - 1);
+        }
+        v
+    }
+
+    /// Canonical quiet NaN (sign 0, exponent all ones, MSB of fraction set).
+    pub fn quiet_nan(&self) -> U128 {
+        let mut v = self.inf(false);
+        v.set_bit(self.frac_bits - 1);
+        v
+    }
+
+    /// Largest finite value with the given sign.
+    pub fn max_finite(&self, sign: bool) -> U128 {
+        // exponent emax (biased exp_mask-1), fraction all ones
+        let exp = (self.exp_mask() - 1) as u64;
+        let mut v = U128::from_u64(exp).shl(self.frac_bits);
+        let frac = U128::ONE.shl(self.frac_bits).wrapping_sub(&U128::ONE);
+        v = v.or(&frac);
+        if sign {
+            v.set_bit(self.total_bits() - 1);
+        }
+        v
+    }
+
+    /// ±0 bit pattern.
+    pub fn zero(&self, sign: bool) -> U128 {
+        if sign {
+            let mut v = U128::ZERO;
+            v.set_bit(self.total_bits() - 1);
+            v
+        } else {
+            U128::ZERO
+        }
+    }
+
+    /// Unpack a bit pattern into fields + class.
+    pub fn unpack(&self, bits: U128) -> Unpacked {
+        debug_assert!(
+            bits.bit_len() <= self.total_bits(),
+            "packed value wider than format"
+        );
+        let sign = bits.bit(self.total_bits() - 1);
+        let biased = bits.extract_u64(self.frac_bits, self.exp_bits) as u32;
+        let frac = bits.mask_low(self.frac_bits);
+        let (class, exp, sig) = if biased == self.exp_mask() {
+            if frac.is_zero() {
+                (FpClass::Infinite, 0, U128::ZERO)
+            } else {
+                (FpClass::Nan, 0, frac)
+            }
+        } else if biased == 0 {
+            if frac.is_zero() {
+                (FpClass::Zero, 0, U128::ZERO)
+            } else {
+                // Subnormal: significand has no hidden bit; report the raw
+                // fraction with exponent emin. `normalize()` shifts it up.
+                (FpClass::Subnormal, self.emin(), frac)
+            }
+        } else {
+            let mut sig = frac;
+            sig.set_bit(self.frac_bits); // hidden one
+            (FpClass::Normal, biased as i32 - self.bias(), sig)
+        };
+        Unpacked { sign, class, exp, sig }
+    }
+
+    /// Pack fields back into a bit pattern. `exp` is the unbiased exponent
+    /// of a value whose significand `sig` carries the hidden bit at
+    /// position `frac_bits` (normal) or is below it (subnormal, `exp ==
+    /// emin`). No rounding happens here.
+    pub fn pack(&self, sign: bool, exp: i32, sig: U128) -> U128 {
+        debug_assert!(sig.bit_len() <= self.sig_bits());
+        let hidden = U128::ONE.shl(self.frac_bits);
+        let (biased, frac) = if sig.cmp_wide(&hidden) == core::cmp::Ordering::Less {
+            // Subnormal or zero.
+            debug_assert!(sig.is_zero() || exp == self.emin(), "subnormal pack at wrong exp");
+            (0u64, sig)
+        } else {
+            let biased = (exp + self.bias()) as u64;
+            debug_assert!(biased >= 1 && biased < self.exp_mask() as u64);
+            (biased, sig.wrapping_sub(&hidden))
+        };
+        let mut v = U128::from_u64(biased).shl(self.frac_bits).or(&frac);
+        if sign {
+            v.set_bit(self.total_bits() - 1);
+        }
+        v
+    }
+
+    /// True if the pattern is a signalling NaN (NaN with quiet bit clear).
+    pub fn is_signaling_nan(&self, bits: U128) -> bool {
+        let u = self.unpack(bits);
+        u.class == FpClass::Nan && !bits.bit(self.frac_bits - 1)
+    }
+}
+
+/// Unpacked floating-point datum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Unpacked {
+    /// Sign bit (true = negative).
+    pub sign: bool,
+    /// Datum class.
+    pub class: FpClass,
+    /// Unbiased exponent (valid for Normal/Subnormal).
+    pub exp: i32,
+    /// Significand. Normal: hidden bit set at `frac_bits`. Subnormal: raw
+    /// fraction. NaN: payload.
+    pub sig: U128,
+}
+
+impl Unpacked {
+    /// Normalize a subnormal into `Normal` representation (hidden bit at
+    /// `frac_bits`), adjusting the exponent. No-op for normals.
+    pub fn normalize(&self, fmt: &FpFormat) -> Unpacked {
+        match self.class {
+            FpClass::Subnormal => {
+                let shift = fmt.sig_bits() - self.sig.bit_len();
+                Unpacked {
+                    sign: self.sign,
+                    class: FpClass::Normal,
+                    exp: self.exp - shift as i32,
+                    sig: self.sig.shl(shift),
+                }
+            }
+            _ => *self,
+        }
+    }
+}
+
+#[cfg(test)]
+mod format_tests {
+    use super::*;
+
+    #[test]
+    fn field_widths_match_paper_figures() {
+        // Fig. 1: double = 1 + 11 + 52; hidden bit -> 53-bit significand.
+        assert_eq!(DOUBLE.total_bits(), 64);
+        assert_eq!(DOUBLE.sig_bits(), 53);
+        assert_eq!(DOUBLE.bias(), 1023);
+        // Fig. 3: quad = 1 + 15 + 112; hidden bit -> 113 bits.
+        assert_eq!(QUAD.total_bits(), 128);
+        assert_eq!(QUAD.sig_bits(), 113);
+        assert_eq!(QUAD.bias(), 16383);
+        // Single: 24-bit significand drives the 24x24 block claim.
+        assert_eq!(SINGLE.total_bits(), 32);
+        assert_eq!(SINGLE.sig_bits(), 24);
+        assert_eq!(SINGLE.bias(), 127);
+    }
+
+    #[test]
+    fn unpack_pack_roundtrip_f64() {
+        for v in [0.0f64, -0.0, 1.0, -1.5, 1e-300, 1e300, f64::MIN_POSITIVE] {
+            let bits = U128::from_u64(v.to_bits());
+            let u = DOUBLE.unpack(bits);
+            let repacked = DOUBLE.pack(u.sign, u.exp, u.sig);
+            assert_eq!(repacked.as_u64(), v.to_bits(), "roundtrip {v}");
+        }
+    }
+
+    #[test]
+    fn classify_specials() {
+        assert_eq!(DOUBLE.unpack(U128::from_u64(f64::NAN.to_bits())).class, FpClass::Nan);
+        assert_eq!(
+            DOUBLE.unpack(U128::from_u64(f64::INFINITY.to_bits())).class,
+            FpClass::Infinite
+        );
+        assert_eq!(DOUBLE.unpack(U128::from_u64(0)).class, FpClass::Zero);
+        assert_eq!(DOUBLE.unpack(U128::from_u64(1)).class, FpClass::Subnormal);
+        assert_eq!(DOUBLE.unpack(U128::from_u64(1.0f64.to_bits())).class, FpClass::Normal);
+    }
+
+    #[test]
+    fn normalize_subnormal() {
+        // smallest positive subnormal: sig = 1, normalizes to hidden bit with
+        // exponent emin - 52.
+        let u = DOUBLE.unpack(U128::from_u64(1));
+        let n = u.normalize(&DOUBLE);
+        assert_eq!(n.class, FpClass::Normal);
+        assert_eq!(n.sig.bit_len(), 53);
+        assert_eq!(n.exp, DOUBLE.emin() - 52);
+    }
+
+    #[test]
+    fn special_patterns() {
+        assert_eq!(DOUBLE.inf(false).as_u64(), f64::INFINITY.to_bits());
+        assert_eq!(DOUBLE.inf(true).as_u64(), f64::NEG_INFINITY.to_bits());
+        assert_eq!(DOUBLE.max_finite(false).as_u64(), f64::MAX.to_bits());
+        assert_eq!(DOUBLE.zero(true).as_u64(), (-0.0f64).to_bits());
+        assert!(f64::from_bits(DOUBLE.quiet_nan().as_u64()).is_nan());
+        assert_eq!(SINGLE.inf(false).as_u64(), f32::INFINITY.to_bits() as u64);
+        assert_eq!(SINGLE.max_finite(false).as_u64(), f32::MAX.to_bits() as u64);
+    }
+
+    #[test]
+    fn snan_detection() {
+        // f64 sNaN: exponent all ones, quiet bit clear, payload non-zero.
+        let snan = 0x7FF0_0000_0000_0001u64;
+        assert!(DOUBLE.is_signaling_nan(U128::from_u64(snan)));
+        assert!(!DOUBLE.is_signaling_nan(U128::from_u64(f64::NAN.to_bits())));
+        assert!(!DOUBLE.is_signaling_nan(U128::from_u64(f64::INFINITY.to_bits())));
+    }
+}

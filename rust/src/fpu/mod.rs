@@ -1,0 +1,29 @@
+//! IEEE-754 software floating point (softfloat) substrate.
+//!
+//! The paper's contribution is a *significand-multiplier organization*;
+//! everything around it (unpack, normalize, round, pack, special cases) is
+//! standard IEEE-754. This module implements that standard machinery for
+//! the three precisions the paper targets — single (binary32), double
+//! (binary64) and quadruple (binary128) — with the significand multiplier
+//! left pluggable via [`SigMultiplier`], so the CIVP decomposition engine
+//! (and the baseline 18x18 / 25x18 tilings) can be dropped into a real FP
+//! multiply and verified bit-exactly against hardware.
+//!
+//! Layout (Fig. 1 / Fig. 3 of the paper):
+//! * binary32  — 1 sign, 8 exponent,  23 fraction (24-bit significand)
+//! * binary64  — 1 sign, 11 exponent, 52 fraction (53-bit significand)
+//! * binary128 — 1 sign, 15 exponent, 112 fraction (113-bit significand)
+
+mod format;
+mod round;
+mod softfp;
+mod types;
+#[cfg(test)]
+mod tests;
+#[cfg(test)]
+mod golden;
+
+pub use format::{FpClass, FpFormat, Unpacked, DOUBLE, QUAD, SINGLE};
+pub use round::RoundMode;
+pub use softfp::{mul_bits, DirectMul, Flags, SigMultiplier};
+pub use types::{Fp128, Fp32, Fp64};

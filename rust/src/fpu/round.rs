@@ -1,0 +1,159 @@
+//! IEEE-754 rounding of an exact wide product down to a target significand.
+//!
+//! The multiplier array produces the *exact* double-width product; rounding
+//! reduces it to `sig_bits` with guard/sticky semantics. This stage is
+//! shared by every precision and every multiplier backend.
+
+use crate::wideint::U256;
+
+/// IEEE-754 rounding-direction attributes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RoundMode {
+    /// roundTiesToEven (default).
+    NearestEven,
+    /// roundTiesToAway.
+    NearestAway,
+    /// roundTowardZero.
+    TowardZero,
+    /// roundTowardPositive.
+    TowardPositive,
+    /// roundTowardNegative.
+    TowardNegative,
+}
+
+impl RoundMode {
+    /// All five modes (test sweeps).
+    pub const ALL: [RoundMode; 5] = [
+        RoundMode::NearestEven,
+        RoundMode::NearestAway,
+        RoundMode::TowardZero,
+        RoundMode::TowardPositive,
+        RoundMode::TowardNegative,
+    ];
+}
+
+/// Outcome of [`round_shift`].
+#[derive(Clone, Copy, Debug)]
+pub struct Rounded {
+    /// Rounded significand (may have grown one bit past the target width —
+    /// caller renormalizes).
+    pub sig: U256,
+    /// Any discarded bit was non-zero (inexact).
+    pub inexact: bool,
+}
+
+/// Shift `value` right by `shift` bits, rounding the discarded bits per
+/// `mode`. `sign` is the sign of the datum (directional modes depend on it).
+///
+/// `shift == 0` returns the value unchanged and exact. Shifts larger than
+/// the value's width collapse everything into the sticky bit.
+pub fn round_shift(value: U256, shift: u32, mode: RoundMode, sign: bool) -> Rounded {
+    if shift == 0 {
+        return Rounded { sig: value, inexact: false };
+    }
+    let kept = value.shr(shift);
+    let round_bit = value.bit(shift - 1);
+    let sticky = if shift >= 2 { value.any_below(shift - 1) } else { false };
+    let inexact = round_bit || sticky;
+    if !inexact {
+        return Rounded { sig: kept, inexact: false };
+    }
+    let increment = match mode {
+        RoundMode::NearestEven => round_bit && (sticky || kept.bit(0)),
+        RoundMode::NearestAway => round_bit,
+        RoundMode::TowardZero => false,
+        RoundMode::TowardPositive => !sign,
+        RoundMode::TowardNegative => sign,
+    };
+    let sig = if increment { kept.wrapping_add(&U256::ONE) } else { kept };
+    Rounded { sig, inexact }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proput::forall;
+    use crate::wideint::U256;
+
+    fn rs(v: u64, shift: u32, mode: RoundMode, sign: bool) -> (u64, bool) {
+        let r = round_shift(U256::from_u64(v), shift, mode, sign);
+        (r.sig.as_u64(), r.inexact)
+    }
+
+    #[test]
+    fn exact_shift_is_exact() {
+        assert_eq!(rs(0b1000, 3, RoundMode::NearestEven, false), (1, false));
+        assert_eq!(rs(0b10100, 2, RoundMode::TowardZero, false), (0b101, false));
+    }
+
+    #[test]
+    fn nearest_even_ties() {
+        // 0b101 >> 1: kept=0b10, round=1, sticky=0 -> tie -> stays even (10)
+        assert_eq!(rs(0b101, 1, RoundMode::NearestEven, false), (0b10, true));
+        // 0b111 >> 1: kept=0b11, round=1, sticky=0 -> tie -> to even (100)
+        assert_eq!(rs(0b111, 1, RoundMode::NearestEven, false), (0b100, true));
+        // 0b1011 >> 2: kept=0b10, round=1, sticky=1 -> round up (11)
+        assert_eq!(rs(0b1011, 2, RoundMode::NearestEven, false), (0b11, true));
+    }
+
+    #[test]
+    fn nearest_away_ties_up() {
+        assert_eq!(rs(0b101, 1, RoundMode::NearestAway, false), (0b11, true));
+        assert_eq!(rs(0b111, 1, RoundMode::NearestAway, false), (0b100, true));
+    }
+
+    #[test]
+    fn directional_modes() {
+        // value 0b1001 >> 2 = 0b10 remainder 01 (inexact, below half)
+        assert_eq!(rs(0b1001, 2, RoundMode::TowardZero, false), (0b10, true));
+        assert_eq!(rs(0b1001, 2, RoundMode::TowardPositive, false), (0b11, true));
+        assert_eq!(rs(0b1001, 2, RoundMode::TowardPositive, true), (0b10, true));
+        assert_eq!(rs(0b1001, 2, RoundMode::TowardNegative, true), (0b11, true));
+        assert_eq!(rs(0b1001, 2, RoundMode::TowardNegative, false), (0b10, true));
+    }
+
+    #[test]
+    fn huge_shift_all_sticky() {
+        let one = U256::ONE;
+        let r = round_shift(one, 200, RoundMode::NearestEven, false);
+        assert!(r.sig.is_zero());
+        assert!(r.inexact);
+        let r = round_shift(one, 200, RoundMode::TowardPositive, false);
+        assert_eq!(r.sig.as_u64(), 1); // rounds up from sticky
+    }
+
+    #[test]
+    fn rne_matches_reference_formula() {
+        // Property: for random v and shift<=32, RNE equals floor((v + half +
+        // tie_adjust) >> shift) computed with u128 arithmetic.
+        forall(0x31, 5000, |rng| {
+            let v = rng.next_u64() as u128;
+            let shift = rng.range(1, 32) as u32;
+            let kept = v >> shift;
+            let rem = v & ((1u128 << shift) - 1);
+            let half = 1u128 << (shift - 1);
+            let expect = if rem > half || (rem == half && kept & 1 == 1) {
+                kept + 1
+            } else {
+                kept
+            };
+            let got = round_shift(U256::from_u128(v), shift, RoundMode::NearestEven, false);
+            assert_eq!(got.sig.as_u128(), expect, "v={v:#x} shift={shift}");
+            assert_eq!(got.inexact, rem != 0);
+        });
+    }
+
+    #[test]
+    fn ordering_between_modes() {
+        // TowardNegative <= TowardZero(sign-adjusted) <= TowardPositive
+        forall(0x32, 3000, |rng| {
+            let v = rng.next_u64();
+            let shift = rng.range(1, 40) as u32;
+            let down = rs(v, shift, RoundMode::TowardNegative, false).0;
+            let up = rs(v, shift, RoundMode::TowardPositive, false).0;
+            let ne = rs(v, shift, RoundMode::NearestEven, false).0;
+            assert!(down <= ne && ne <= up);
+            assert!(up - down <= 1);
+        });
+    }
+}

@@ -1,0 +1,339 @@
+//! Oracle tests: the softfloat multiply must agree bit-for-bit with native
+//! hardware IEEE-754 f32/f64 multiplication (round-to-nearest-even) across
+//! uniform and adversarial ("nasty") bit patterns, and obey algebraic laws
+//! in binary128 where no hardware oracle exists.
+
+use super::*;
+use crate::proput::forall;
+use crate::wideint::U128;
+
+fn soft_mul_f64(a: f64, b: f64) -> f64 {
+    Fp64::from_f64(a).mul(Fp64::from_f64(b)).to_f64()
+}
+
+fn soft_mul_f32(a: f32, b: f32) -> f32 {
+    Fp32::from_f32(a).mul(Fp32::from_f32(b)).to_f32()
+}
+
+/// Compare softfloat result against hardware for one f64 pair. NaN results
+/// compare as "both NaN" (payloads are implementation-defined).
+fn check_f64(a: f64, b: f64) {
+    let hw = a * b;
+    let sw = soft_mul_f64(a, b);
+    if hw.is_nan() {
+        assert!(sw.is_nan(), "a={a:e} b={b:e}: hw NaN, sw {sw:e}");
+    } else {
+        assert_eq!(
+            sw.to_bits(),
+            hw.to_bits(),
+            "a={a:e}({:#x}) b={b:e}({:#x}): hw={hw:e}({:#x}) sw={sw:e}({:#x})",
+            a.to_bits(),
+            b.to_bits(),
+            hw.to_bits(),
+            sw.to_bits()
+        );
+    }
+}
+
+fn check_f32(a: f32, b: f32) {
+    let hw = a * b;
+    let sw = soft_mul_f32(a, b);
+    if hw.is_nan() {
+        assert!(sw.is_nan(), "a={a:e} b={b:e}: hw NaN, sw {sw:e}");
+    } else {
+        assert_eq!(sw.to_bits(), hw.to_bits(), "a={a:e} b={b:e}: hw={hw:e} sw={sw:e}");
+    }
+}
+
+#[test]
+fn f64_simple_values() {
+    check_f64(1.5, 2.0);
+    check_f64(0.1, 0.2);
+    check_f64(-3.7, 1e18);
+    check_f64(1e308, 10.0); // overflow
+    check_f64(1e-308, 1e-10); // underflow to subnormal
+    check_f64(f64::MIN_POSITIVE, 0.5);
+    check_f64(0.0, -5.0);
+    check_f64(-0.0, 5.0);
+}
+
+#[test]
+fn f64_specials() {
+    check_f64(f64::INFINITY, 2.0);
+    check_f64(f64::NEG_INFINITY, -2.0);
+    check_f64(f64::INFINITY, 0.0); // invalid -> NaN
+    check_f64(f64::NAN, 1.0);
+    check_f64(1.0, f64::NAN);
+    check_f64(f64::INFINITY, f64::INFINITY);
+}
+
+#[test]
+fn f64_subnormal_boundaries() {
+    let min_sub = f64::from_bits(1);
+    let max_sub = f64::from_bits(0x000F_FFFF_FFFF_FFFF);
+    check_f64(min_sub, 0.5); // underflows to zero
+    check_f64(min_sub, 1.5);
+    check_f64(max_sub, 1.0000000001);
+    check_f64(max_sub, 2.0); // subnormal * 2 -> normal
+    check_f64(min_sub, 1e300);
+    check_f64(max_sub, max_sub);
+}
+
+#[test]
+fn f64_rounding_carry_chain() {
+    // Significand all-ones forces the round-up carry path.
+    let a = f64::from_bits(0x3FEF_FFFF_FFFF_FFFF);
+    check_f64(a, a);
+    check_f64(a, 1.0 + f64::EPSILON);
+}
+
+#[test]
+fn f64_uniform_property() {
+    forall(0x100, 20_000, |rng| {
+        let a = f64::from_bits(rng.next_u64());
+        let b = f64::from_bits(rng.next_u64());
+        check_f64(a, b);
+    });
+}
+
+#[test]
+fn f64_nasty_property() {
+    forall(0x101, 30_000, |rng| {
+        let a = f64::from_bits(rng.nasty_bits64());
+        let b = f64::from_bits(rng.nasty_bits64());
+        check_f64(a, b);
+    });
+}
+
+#[test]
+fn f32_uniform_property() {
+    forall(0x102, 20_000, |rng| {
+        let a = f32::from_bits(rng.next_u32());
+        let b = f32::from_bits(rng.next_u32());
+        check_f32(a, b);
+    });
+}
+
+#[test]
+fn f32_nasty_property() {
+    forall(0x103, 30_000, |rng| {
+        let a = f32::from_bits(rng.nasty_bits32());
+        let b = f32::from_bits(rng.nasty_bits32());
+        check_f32(a, b);
+    });
+}
+
+#[test]
+fn f64_directed_rounding_brackets_exact() {
+    // down <= exact <= up, and they differ by at most 1 ulp.
+    forall(0x104, 5_000, |rng| {
+        let a = f64::from_bits(rng.nasty_bits64());
+        let b = f64::from_bits(rng.nasty_bits64());
+        if !(a.is_finite() && b.is_finite()) {
+            return;
+        }
+        let fa = Fp64::from_f64(a);
+        let fb = Fp64::from_f64(b);
+        let (dn, _) = fa.mul_with(fb, RoundMode::TowardNegative, &mut DirectMul);
+        let (up, _) = fa.mul_with(fb, RoundMode::TowardPositive, &mut DirectMul);
+        let (ne, _) = fa.mul_with(fb, RoundMode::NearestEven, &mut DirectMul);
+        let (dn, up, ne) = (dn.to_f64(), up.to_f64(), ne.to_f64());
+        if dn.is_nan() {
+            return;
+        }
+        assert!(dn <= up, "a={a:e} b={b:e} dn={dn:e} up={up:e}");
+        assert!(dn <= ne && ne <= up, "a={a:e} b={b:e}");
+    });
+}
+
+#[test]
+fn f64_toward_zero_magnitude() {
+    // |RTZ result| <= |RNE result| always.
+    forall(0x105, 5_000, |rng| {
+        let a = f64::from_bits(rng.nasty_bits64());
+        let b = f64::from_bits(rng.nasty_bits64());
+        if !(a.is_finite() && b.is_finite()) {
+            return;
+        }
+        let fa = Fp64::from_f64(a);
+        let fb = Fp64::from_f64(b);
+        let (tz, _) = fa.mul_with(fb, RoundMode::TowardZero, &mut DirectMul);
+        let (ne, _) = fa.mul_with(fb, RoundMode::NearestEven, &mut DirectMul);
+        if tz.to_f64().is_nan() {
+            return;
+        }
+        assert!(tz.to_f64().abs() <= ne.to_f64().abs());
+    });
+}
+
+#[test]
+fn flags_inexact_overflow_underflow() {
+    let fa = Fp64::from_f64(1e308);
+    let (r, fl) = fa.mul_with(Fp64::from_f64(10.0), RoundMode::NearestEven, &mut DirectMul);
+    assert_eq!(r.to_f64(), f64::INFINITY);
+    assert!(fl.overflow && fl.inexact);
+
+    let (r, fl) = Fp64::from_f64(1e-308)
+        .mul_with(Fp64::from_f64(1e-10), RoundMode::NearestEven, &mut DirectMul);
+    assert!(r.to_f64().is_subnormal() || r.to_f64() == 0.0);
+    assert!(fl.underflow && fl.inexact);
+
+    let (_, fl) =
+        Fp64::from_f64(1.5).mul_with(Fp64::from_f64(2.0), RoundMode::NearestEven, &mut DirectMul);
+    assert_eq!(fl, Flags::default());
+
+    let (r, fl) = Fp64::from_f64(f64::INFINITY)
+        .mul_with(Fp64::from_f64(0.0), RoundMode::NearestEven, &mut DirectMul);
+    assert!(r.is_nan());
+    assert!(fl.invalid);
+}
+
+#[test]
+fn flags_snan_invalid() {
+    let snan = Fp64(0x7FF0_0000_0000_0001);
+    let (r, fl) = snan.mul_with(Fp64::from_f64(1.0), RoundMode::NearestEven, &mut DirectMul);
+    assert!(r.is_nan());
+    assert!(fl.invalid);
+    // Quiet NaN input: NaN result but NOT invalid.
+    let qnan = Fp64::from_f64(f64::NAN);
+    let (r, fl) = qnan.mul_with(Fp64::from_f64(1.0), RoundMode::NearestEven, &mut DirectMul);
+    assert!(r.is_nan());
+    assert!(!fl.invalid);
+}
+
+#[test]
+fn overflow_directed_modes_saturate() {
+    let fa = Fp64::from_f64(1e308);
+    let fb = Fp64::from_f64(10.0);
+    let (r, _) = fa.mul_with(fb, RoundMode::TowardZero, &mut DirectMul);
+    assert_eq!(r.to_f64(), f64::MAX);
+    let (r, _) = fa.mul_with(fb, RoundMode::TowardNegative, &mut DirectMul);
+    assert_eq!(r.to_f64(), f64::MAX);
+    let (r, _) = fa.mul_with(fb, RoundMode::TowardPositive, &mut DirectMul);
+    assert_eq!(r.to_f64(), f64::INFINITY);
+    // Negative product mirror-image.
+    let (r, _) = fa.mul_with(Fp64::from_f64(-10.0), RoundMode::TowardPositive, &mut DirectMul);
+    assert_eq!(r.to_f64(), f64::MIN);
+    let (r, _) = fa.mul_with(Fp64::from_f64(-10.0), RoundMode::TowardNegative, &mut DirectMul);
+    assert_eq!(r.to_f64(), f64::NEG_INFINITY);
+}
+
+// ------------------------------------------------------------------
+// binary128: no hardware oracle — algebraic laws + exact-product cases.
+// Golden vectors from an independent Python big-int model live in
+// `golden.rs`.
+// ------------------------------------------------------------------
+
+#[test]
+fn fp128_identity_and_sign_laws() {
+    forall(0x110, 5_000, |rng| {
+        let a = Fp128::from_f64(f64::from_bits(rng.nasty_bits64()));
+        if a.is_nan() {
+            return;
+        }
+        // x * 1 == x
+        assert_eq!(a.mul(Fp128::ONE).0, a.0, "identity law");
+        // x * 2 == exact scaling (exponent bump) for normals well in range
+        let u = QUAD.unpack(U128::from_u128(a.0));
+        if u.class == FpClass::Normal && u.exp < QUAD.emax() - 1 {
+            let doubled = a.mul(Fp128::TWO);
+            let ud = QUAD.unpack(U128::from_u128(doubled.0));
+            assert_eq!(ud.exp, u.exp + 1);
+            assert_eq!(ud.sig, u.sig);
+        }
+    });
+}
+
+#[test]
+fn fp128_commutative() {
+    forall(0x111, 5_000, |rng| {
+        let a = Fp128::from_f64(f64::from_bits(rng.nasty_bits64()));
+        let b = Fp128::from_f64(f64::from_bits(rng.nasty_bits64()));
+        let ab = a.mul(b);
+        let ba = b.mul(a);
+        if ab.is_nan() {
+            assert!(ba.is_nan());
+        } else {
+            assert_eq!(ab.0, ba.0);
+        }
+    });
+}
+
+#[test]
+fn fp128_exact_products_match_f64() {
+    // When both operands have <= 26 significant bits, the product has <= 52
+    // and is exact in BOTH binary64 and binary128 — so the quad product must
+    // equal the widened f64 product bit-for-bit.
+    forall(0x112, 10_000, |rng| {
+        let a = (rng.below(1 << 26) as i64 - (1 << 25)) as f64;
+        let b = (rng.below(1 << 26) as i64 - (1 << 25)) as f64;
+        let qa = Fp128::from_f64(a);
+        let qb = Fp128::from_f64(b);
+        let qprod = qa.mul(qb);
+        let expect = Fp128::from_f64(a * b);
+        assert_eq!(qprod.0, expect.0, "a={a} b={b}");
+    });
+}
+
+#[test]
+fn fp128_f64_products_widen_exactly() {
+    // Any two f64 values multiply exactly in binary128 when the f64 multiply
+    // itself is exact (106-bit product always fits 113 bits) — compare the
+    // quad product against the widened f64 product whenever the f64 multiply
+    // reports exactness via a round-trip check.
+    forall(0x113, 10_000, |rng| {
+        let a = f64::from_bits(rng.nasty_bits64());
+        let b = f64::from_bits(rng.nasty_bits64());
+        if !a.is_finite() || !b.is_finite() {
+            return;
+        }
+        let (sw, fl) =
+            Fp64::from_f64(a).mul_with(Fp64::from_f64(b), RoundMode::NearestEven, &mut DirectMul);
+        if fl.inexact || fl.overflow || fl.underflow {
+            return;
+        }
+        // Exact in f64 -> quad must agree after widening.
+        let qprod = Fp128::from_f64(a).mul(Fp128::from_f64(b));
+        assert_eq!(qprod.0, Fp128::from_f64(sw.to_f64()).0, "a={a:e} b={b:e}");
+    });
+}
+
+#[test]
+fn fp128_specials() {
+    let inf = Fp128(QUAD.inf(false).as_u128());
+    let zero = Fp128(0);
+    assert!(inf.mul(zero).is_nan());
+    assert_eq!(inf.mul(Fp128::TWO).0, inf.0);
+    let neg_two = Fp128(Fp128::TWO.0 | (1u128 << 127));
+    assert_eq!(inf.mul(neg_two).0, QUAD.inf(true).as_u128());
+    // -0 * 2 = -0
+    let neg_zero = Fp128(1u128 << 127);
+    assert_eq!(neg_zero.mul(Fp128::TWO).0, neg_zero.0);
+}
+
+#[test]
+fn fp128_overflow_underflow() {
+    let max = Fp128(QUAD.max_finite(false).as_u128());
+    let (r, fl) = max.mul_with(Fp128::TWO, RoundMode::NearestEven, &mut DirectMul);
+    assert_eq!(r.0, QUAD.inf(false).as_u128());
+    assert!(fl.overflow);
+    // min-normal * 0.5 -> subnormal (exact halving: inexact=false)
+    let min_normal = Fp128(1u128 << 112);
+    let half = Fp128(0x3FFE_0000_0000_0000_0000_0000_0000_0000);
+    let (r, fl) = min_normal.mul_with(half, RoundMode::NearestEven, &mut DirectMul);
+    assert_eq!(QUAD.unpack(U128::from_u128(r.0)).class, FpClass::Subnormal);
+    assert!(!fl.inexact);
+    assert!(!fl.underflow); // exact subnormal: no underflow flag
+}
+
+#[test]
+fn all_round_modes_run_every_precision() {
+    for mode in RoundMode::ALL {
+        let (r, _) = Fp32::from_f32(1.1).mul_with(Fp32::from_f32(2.2), mode, &mut DirectMul);
+        assert!((r.to_f32() - 2.42).abs() < 1e-5);
+        let (r, _) = Fp64::from_f64(1.1).mul_with(Fp64::from_f64(2.2), mode, &mut DirectMul);
+        assert!((r.to_f64() - 2.42).abs() < 1e-12);
+        let (r, _) = Fp128::from_f64(1.5).mul_with(Fp128::from_f64(2.5), mode, &mut DirectMul);
+        assert_eq!(r.to_f64_lossy(), 3.75);
+    }
+}

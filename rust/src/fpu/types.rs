@@ -1,0 +1,244 @@
+//! Ergonomic typed wrappers over the generic bit-level pipeline.
+
+use super::format::{FpClass, FpFormat, DOUBLE, QUAD, SINGLE};
+use super::round::RoundMode;
+use super::softfp::{mul_bits, DirectMul, Flags, SigMultiplier};
+use crate::wideint::U128;
+
+macro_rules! common_impl {
+    ($ty:ident, $fmt:expr) => {
+        impl $ty {
+            /// The format descriptor for this type.
+            pub const FORMAT: FpFormat = $fmt;
+
+            /// Multiply with the default (direct) significand multiplier and
+            /// round-to-nearest-even.
+            pub fn mul(self, rhs: $ty) -> $ty {
+                self.mul_with(rhs, RoundMode::NearestEven, &mut DirectMul).0
+            }
+
+            /// Multiply with an explicit rounding mode and significand
+            /// multiplier backend, returning exception flags.
+            pub fn mul_with(
+                self,
+                rhs: $ty,
+                mode: RoundMode,
+                m: &mut dyn SigMultiplier,
+            ) -> ($ty, Flags) {
+                let (bits, flags) = mul_bits(&Self::FORMAT, self.to_u128(), rhs.to_u128(), mode, m);
+                ($ty::from_u128(bits), flags)
+            }
+
+            /// Classify the value.
+            pub fn class(self) -> FpClass {
+                Self::FORMAT.unpack(self.to_u128()).class
+            }
+
+            /// True if NaN.
+            pub fn is_nan(self) -> bool {
+                self.class() == FpClass::Nan
+            }
+
+            /// Sign bit.
+            pub fn sign(self) -> bool {
+                Self::FORMAT.unpack(self.to_u128()).sign
+            }
+        }
+    };
+}
+
+/// IEEE binary32 value carried as raw bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fp32(pub u32);
+
+impl Fp32 {
+    /// From a native `f32`.
+    pub fn from_f32(v: f32) -> Self {
+        Fp32(v.to_bits())
+    }
+    /// To a native `f32`.
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits(self.0)
+    }
+    fn to_u128(self) -> U128 {
+        U128::from_u64(self.0 as u64)
+    }
+    fn from_u128(v: U128) -> Self {
+        Fp32(v.as_u64() as u32)
+    }
+}
+common_impl!(Fp32, SINGLE);
+
+/// IEEE binary64 value carried as raw bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fp64(pub u64);
+
+impl Fp64 {
+    /// From a native `f64`.
+    pub fn from_f64(v: f64) -> Self {
+        Fp64(v.to_bits())
+    }
+    /// To a native `f64`.
+    pub fn to_f64(self) -> f64 {
+        f64::from_bits(self.0)
+    }
+    fn to_u128(self) -> U128 {
+        U128::from_u64(self.0)
+    }
+    fn from_u128(v: U128) -> Self {
+        Fp64(v.as_u64())
+    }
+}
+common_impl!(Fp64, DOUBLE);
+
+/// IEEE binary128 value carried as raw bits (no native Rust equivalent —
+/// this *is* the quad substrate the paper's Fig. 3/4 path needs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fp128(pub u128);
+
+impl Fp128 {
+    /// Positive one.
+    pub const ONE: Fp128 = Fp128(0x3FFF_0000_0000_0000_0000_0000_0000_0000);
+    /// Positive two.
+    pub const TWO: Fp128 = Fp128(0x4000_0000_0000_0000_0000_0000_0000_0000);
+
+    /// Widen a native `f64` exactly into binary128 (every f64 is
+    /// representable).
+    pub fn from_f64(v: f64) -> Self {
+        let bits = v.to_bits();
+        let sign = (bits >> 63) as u128;
+        let biased = ((bits >> 52) & 0x7FF) as i64;
+        let frac = bits & 0x000F_FFFF_FFFF_FFFF;
+        let out = if biased == 0x7FF {
+            // Inf / NaN: shift payload into the quad fraction field.
+            let qfrac = (frac as u128) << (112 - 52);
+            (sign << 127) | (0x7FFFu128 << 112) | qfrac
+        } else if biased == 0 {
+            if frac == 0 {
+                sign << 127
+            } else {
+                // f64 subnormal: value = frac * 2^(-1074); always a quad
+                // normal. Normalize the 52-bit fraction.
+                let lz = frac.leading_zeros() - 12; // leading zeros within 52 bits
+                let shift = lz + 1;
+                let nsig = (frac << shift) & 0x000F_FFFF_FFFF_FFFF; // drop hidden
+                let e_unbiased = -1022 - shift as i64;
+                let qbiased = (e_unbiased + 16383) as u128;
+                (sign << 127) | (qbiased << 112) | ((nsig as u128) << 60)
+            }
+        } else {
+            let e_unbiased = biased - 1023;
+            let qbiased = (e_unbiased + 16383) as u128;
+            (sign << 127) | (qbiased << 112) | ((frac as u128) << 60)
+        };
+        Fp128(out)
+    }
+
+    /// Truncate to a native `f64` with round-to-nearest-even (used only in
+    /// examples/diagnostics; exactness is not guaranteed).
+    pub fn to_f64_lossy(self) -> f64 {
+        let u = QUAD.unpack(self.to_u128());
+        match u.class {
+            FpClass::Zero => {
+                if u.sign {
+                    -0.0
+                } else {
+                    0.0
+                }
+            }
+            FpClass::Nan => f64::NAN,
+            FpClass::Infinite => {
+                if u.sign {
+                    f64::NEG_INFINITY
+                } else {
+                    f64::INFINITY
+                }
+            }
+            _ => {
+                // Bit-level narrowing with RNE, including f64-subnormal
+                // landing — exact packing, no powi (which underflows).
+                let n = u.normalize(&QUAD);
+                let mut e = n.exp; // value = sig / 2^112 * 2^e, sig in [2^112, 2^113)
+                let mut shift = 113 - 53; // keep 53 bits
+                if e < -1022 {
+                    shift += (-1022 - e).min(200) as u32; // denormalize
+                    e = -1022;
+                }
+                let kept = n.sig.shr(shift);
+                let round = shift > 0 && n.sig.bit(shift - 1);
+                let sticky = shift > 1 && n.sig.any_below(shift - 1);
+                let mut mant = kept.as_u64();
+                if round && (sticky || mant & 1 == 1) {
+                    mant += 1;
+                }
+                if mant == 1u64 << 53 {
+                    mant >>= 1;
+                    e += 1;
+                }
+                let bits = if e > 1023 {
+                    0x7FF0_0000_0000_0000u64 // overflow to +inf
+                } else if mant >= 1u64 << 52 {
+                    // normal
+                    (((e + 1023) as u64) << 52) | (mant & 0x000F_FFFF_FFFF_FFFF)
+                } else {
+                    // subnormal (e == -1022 here) or zero
+                    mant
+                };
+                let mag = f64::from_bits(bits);
+                if u.sign {
+                    -mag
+                } else {
+                    mag
+                }
+            }
+        }
+    }
+
+    fn to_u128(self) -> U128 {
+        U128::from_u128(self.0)
+    }
+    fn from_u128(v: U128) -> Self {
+        Fp128(v.as_u128())
+    }
+}
+common_impl!(Fp128, QUAD);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp128_from_f64_exact_small_ints() {
+        for v in [0.0, 1.0, -1.0, 2.0, 0.5, 3.25, -1024.0] {
+            let q = Fp128::from_f64(v);
+            assert_eq!(q.to_f64_lossy(), v, "roundtrip {v}");
+        }
+        assert_eq!(Fp128::from_f64(1.0), Fp128::ONE);
+        assert_eq!(Fp128::from_f64(2.0), Fp128::TWO);
+    }
+
+    #[test]
+    fn fp128_from_f64_specials() {
+        assert!(Fp128::from_f64(f64::NAN).is_nan());
+        assert_eq!(Fp128::from_f64(f64::INFINITY).class(), FpClass::Infinite);
+        assert_eq!(Fp128::from_f64(-0.0).class(), FpClass::Zero);
+        assert!(Fp128::from_f64(-0.0).sign());
+    }
+
+    #[test]
+    fn fp128_from_f64_subnormal() {
+        let tiny = f64::from_bits(1); // smallest positive subnormal
+        let q = Fp128::from_f64(tiny);
+        assert_eq!(q.class(), FpClass::Normal); // quad-normal
+        assert_eq!(q.to_f64_lossy(), tiny);
+        let mid = f64::from_bits(0x000F_0000_0000_0001);
+        assert_eq!(Fp128::from_f64(mid).to_f64_lossy(), mid);
+    }
+
+    #[test]
+    fn fp128_roundtrip_extremes() {
+        for v in [f64::MAX, f64::MIN_POSITIVE, 1e-300, 1e300] {
+            assert_eq!(Fp128::from_f64(v).to_f64_lossy(), v);
+        }
+    }
+}

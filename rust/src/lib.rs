@@ -1,0 +1,43 @@
+//! # civp — Combined Integer and Variable Precision FP Multiplication
+//!
+//! A full-system reproduction of *"Combined Integer and Variable Precision
+//! (CIVP) Floating Point Multiplication Architecture for FPGAs"*
+//! (Thapliyal, Arabnia, Bajpai, Sharma — 2007).
+//!
+//! The paper proposes replacing the dedicated `18x18` / `25x18` multiplier
+//! blocks in FPGAs with `24x24` / `24x9` blocks (keeping `9x9`) so that
+//! single-, double- and quadruple-precision significand products tile the
+//! block array with zero wasted computation. This crate builds everything
+//! needed to evaluate that claim end-to-end:
+//!
+//! * [`wideint`] — exact multi-limb integers (the 226-bit quad product).
+//! * [`fpu`] — full IEEE-754 softfloat for binary32/64/128 with a pluggable
+//!   significand multiplier, verified bit-exactly against hardware.
+//! * [`decomp`] — the paper's contribution: partition schemes (CIVP Fig. 2 /
+//!   Fig. 4 and the 18x18 / 25x18 / 9x9 baselines), tile-DAG generation and
+//!   exact tiled execution with per-block utilization accounting.
+//! * [`fabric`] — a cycle-level FPGA DSP-block fabric simulator with
+//!   area / latency / dynamic-energy cost models.
+//! * [`coordinator`] — a variable-precision multiplication service (router,
+//!   dynamic batcher, worker pool, adaptive-precision escalation) — the
+//!   "multimedia processing" deployment shape the paper motivates.
+//! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas numeric
+//!   backends (`artifacts/*.hlo.txt`).
+//! * [`trace`], [`metrics`], [`config`] — workload generation, telemetry
+//!   and configuration substrates.
+
+pub mod benchx;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod decomp;
+pub mod fabric;
+pub mod fpu;
+pub mod metrics;
+pub mod proput;
+pub mod runtime;
+pub mod trace;
+pub mod wideint;
+
+pub use decomp::{Precision, Scheme, SchemeKind};
+pub use fpu::{Fp128, Fp32, Fp64, RoundMode};

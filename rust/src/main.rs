@@ -1,0 +1,211 @@
+//! `civp-server` — leader entrypoint for the CIVP variable-precision
+//! multiplication service.
+//!
+//! Commands:
+//!
+//! * `serve`    — drive a synthetic multimedia trace through the service
+//!                (router → batcher → workers → backend) and print the
+//!                serving + fabric reports.
+//! * `analyze`  — print the §III block/utilization analysis table (E6).
+//! * `predicates` — run the adaptive-precision geometric-predicate demo.
+//! * `info`     — load the PJRT engine and print artifact facts.
+//!
+//! Run `civp-server help` for options.
+
+use anyhow::{bail, Result};
+use civp::cli::Args;
+use civp::config::ServiceConfig;
+use civp::coordinator::{orient2d_adaptive, AdaptiveStats, BackendChoice, Service};
+use civp::decomp::{AnalysisRow, Precision, SchemeKind};
+use civp::runtime::EngineHandle;
+use civp::trace::{TraceGen, WorkloadSpec};
+use std::time::Instant;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("civp-server: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("serve") => serve(&args),
+        Some("analyze") => analyze(),
+        Some("predicates") => predicates(&args),
+        Some("info") => info(&args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown command {other:?} (try `help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "civp-server — CIVP variable-precision multiplication service
+
+USAGE: civp-server <command> [options]
+
+COMMANDS
+  serve        run a synthetic trace through the service
+               --config <file>      TOML config (see ServiceConfig)
+               --requests <n>       override request count
+               --workload <spec>    graphics|scientific|uniform|single-only
+               --backend <b>        native|pjrt (default native)
+               --artifacts <dir>    artifacts directory (pjrt backend)
+  analyze      print the paper's block/utilization analysis table
+  predicates   adaptive-precision orient2d demo
+               --points <n>         number of predicates (default 2000)
+  info         print loaded-engine facts
+               --artifacts <dir>    artifacts directory
+  help         this text"
+    );
+}
+
+fn load_config(args: &Args) -> Result<ServiceConfig> {
+    let mut cfg = match args.options.get("config") {
+        Some(path) => ServiceConfig::from_file(path)?,
+        None => ServiceConfig::default(),
+    };
+    if let Some(n) = args.options.get("requests") {
+        cfg.requests = n.parse()?;
+    }
+    if let Some(w) = args.options.get("workload") {
+        cfg.workload =
+            WorkloadSpec::parse(w).ok_or_else(|| anyhow::anyhow!("unknown workload {w:?}"))?;
+    }
+    if let Some(dir) = args.options.get("artifacts") {
+        cfg.artifacts_dir = dir.clone();
+    }
+    Ok(cfg)
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let backend = match args.get_str("backend", "native").as_str() {
+        "native" => BackendChoice::Native(cfg.scheme),
+        "pjrt" => BackendChoice::Pjrt(EngineHandle::load(cfg.artifacts_dir.clone())?),
+        other => bail!("unknown backend {other:?}"),
+    };
+    println!(
+        "serving {} requests of workload `{}` (scheme {:?}, fabric {:?})",
+        cfg.requests,
+        cfg.workload.name(),
+        cfg.scheme,
+        cfg.fabric
+    );
+    let svc = Service::start(&cfg, backend);
+    let mut gen = TraceGen::new(cfg.seed, cfg.workload.mix(), 0);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(4096);
+    for req in gen.take(cfg.requests) {
+        pending.push(svc.submit(req.id, req.precision, req.a, req.b).expect("service closed"));
+        // cap in-flight to keep memory bounded
+        if pending.len() >= 4096 {
+            for rx in pending.drain(..) {
+                let _ = rx.recv();
+            }
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed();
+    let fabric = svc.fabric_report();
+    let report = svc.shutdown();
+    println!("\n== serving report ==");
+    println!("wall time            {:.3} s", wall.as_secs_f64());
+    println!("throughput           {:.0} mult/s", report.responses as f64 / wall.as_secs_f64());
+    print!("{}", report.snapshot.render());
+    println!("\n== fabric report ({}) ==", fabric.fabric);
+    println!("cycles               {}", fabric.cycles);
+    println!("ops/cycle            {:.3}", fabric.throughput());
+    println!("dynamic energy       {:.1}", fabric.dyn_energy);
+    println!("wasted energy        {:.1}%", fabric.wasted_fraction() * 100.0);
+    println!("energy/op            {:.3}", fabric.energy_per_op());
+    Ok(())
+}
+
+fn analyze() -> Result<()> {
+    println!("== paper §III analysis: blocks per multiplication ==\n");
+    println!(
+        "{:<10} {:<8} {:>6} {:>7} {:>7} {:>6} {:>6} {:>8} {:>8}",
+        "precision", "scheme", "blocks", "24x24", "24x9", "9x9", "18x18", "padded", "util%"
+    );
+    for row in AnalysisRow::full_table() {
+        let c = &row.census;
+        println!(
+            "{:<10} {:<8} {:>6} {:>7} {:>7} {:>6} {:>6} {:>8} {:>8.1}",
+            row.precision.name(),
+            row.kind.name(),
+            c.total_blocks,
+            c.count(civp::decomp::BlockKind::M24x24),
+            c.count(civp::decomp::BlockKind::M24x9),
+            c.count(civp::decomp::BlockKind::M9x9),
+            c.count(civp::decomp::BlockKind::M18x18),
+            c.padded_blocks,
+            c.utilization * 100.0
+        );
+    }
+    println!(
+        "\npaper claims (§II.C): quad on 18x18 needs {} blocks, {} wasted (35%);\n\
+         recomputed wastage is 13/49 = 26.5% — see EXPERIMENTS.md E5.",
+        civp::decomp::analysis::PAPER_CLAIMED_QP_TOTAL_18X18,
+        civp::decomp::analysis::PAPER_CLAIMED_QP_WASTED_18X18
+    );
+    Ok(())
+}
+
+fn predicates(args: &Args) -> Result<()> {
+    let n = args.get_usize("points", 2000)?;
+    let cfg = ServiceConfig::default();
+    let svc = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
+    let mut stats = AdaptiveStats::default();
+    let mut rng = civp::proput::Rng::new(7);
+    let t0 = Instant::now();
+    for _ in 0..n {
+        // mix of generic and degenerate (collinear) triangles
+        let degenerate = rng.chance(0.3);
+        let c0 = (rng.f64(), rng.f64());
+        let c1 = (rng.f64(), rng.f64());
+        let c2 = if degenerate {
+            let t = rng.f64();
+            (c0.0 + t * (c1.0 - c0.0), c0.1 + t * (c1.1 - c0.1))
+        } else {
+            (rng.f64(), rng.f64())
+        };
+        orient2d_adaptive(&svc, c0, c1, c2, &mut stats);
+    }
+    println!("adaptive orient2d over {n} triangles in {:?}", t0.elapsed());
+    println!(
+        "settled: single={} double={} quad={}",
+        stats.settled_single, stats.settled_double, stats.settled_quad
+    );
+    let fabric = svc.fabric_report();
+    println!("precision traffic mix observed by the fabric:");
+    for class in &fabric.per_class {
+        println!("  {:<16} {} ops", class.label, class.ops);
+    }
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let dir = args.get_str("artifacts", "artifacts");
+    let handle = EngineHandle::load(dir)?;
+    let info = handle.info()?;
+    println!("platform   {}", info.platform);
+    println!("batch      {}", info.batch);
+    println!("precisions {:?}", info.loaded);
+    // smoke multiply
+    let out = handle.mul(
+        Precision::Double,
+        vec![(2.0f64).to_bits() as u128],
+        vec![(3.0f64).to_bits() as u128],
+    )?;
+    println!("2.0 * 3.0  = {} (via PJRT)", f64::from_bits(out[0] as u64));
+    handle.stop();
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Telemetry substrate: counters and latency histograms for the service.
+//!
+//! Hot-path friendly: recording a latency is a few atomic increments into
+//! log-spaced buckets — no locks, no allocation.
+
+mod hist;
+mod registry;
+#[cfg(test)]
+mod tests;
+
+pub use hist::Histogram;
+pub use registry::{Counter, Registry, Snapshot};

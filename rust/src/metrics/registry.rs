@@ -1,0 +1,126 @@
+//! Named counters + histograms with a point-in-time snapshot.
+
+use super::hist::Histogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Registry of named counters and histograms. Lookup takes a read lock;
+/// the hot path holds `Arc`s to the instruments, so recording is lock-free.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: RwLock<BTreeMap<String, Arc<Counter>>>,
+    hists: RwLock<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// New empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create a counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        if let Some(c) = self.counters.read().unwrap().get(name) {
+            return c.clone();
+        }
+        let mut w = self.counters.write().unwrap();
+        w.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::default())).clone()
+    }
+
+    /// Get or create a histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        if let Some(h) = self.hists.read().unwrap().get(name) {
+            return h.clone();
+        }
+        let mut w = self.hists.write().unwrap();
+        w.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new())).clone()
+    }
+
+    /// Point-in-time snapshot of everything.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = self
+            .counters
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        let hists = self
+            .hists
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| {
+                (k.clone(), HistSummary {
+                    count: h.count(),
+                    mean: h.mean(),
+                    p50: h.quantile(0.5),
+                    p99: h.quantile(0.99),
+                    max: h.max(),
+                })
+            })
+            .collect();
+        Snapshot { counters, hists }
+    }
+}
+
+/// Summary of one histogram.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSummary {
+    /// Sample count.
+    pub count: u64,
+    /// Mean value.
+    pub mean: f64,
+    /// Approximate median.
+    pub p50: u64,
+    /// Approximate 99th percentile.
+    pub p99: u64,
+    /// Maximum.
+    pub max: u64,
+}
+
+/// Snapshot of a registry.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    /// Counter values by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Histogram summaries by name.
+    pub hists: BTreeMap<String, HistSummary>,
+}
+
+impl Snapshot {
+    /// Render as aligned text (for the CLI and examples).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k:<40} {v}\n"));
+        }
+        for (k, h) in &self.hists {
+            out.push_str(&format!(
+                "{k:<40} n={} mean={:.0} p50={} p99={} max={}\n",
+                h.count, h.mean, h.p50, h.p99, h.max
+            ));
+        }
+        out
+    }
+}

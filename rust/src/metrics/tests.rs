@@ -1,0 +1,83 @@
+//! Metrics tests: bucket math, quantile monotonicity, concurrent recording.
+
+use super::*;
+use crate::proput::forall;
+use std::sync::Arc;
+
+#[test]
+fn histogram_basic() {
+    let h = Histogram::new();
+    assert_eq!(h.count(), 0);
+    assert_eq!(h.quantile(0.5), 0);
+    for v in [1u64, 2, 3, 100, 1000] {
+        h.record(v);
+    }
+    assert_eq!(h.count(), 5);
+    assert_eq!(h.max(), 1000);
+    assert!((h.mean() - 221.2).abs() < 0.01);
+}
+
+#[test]
+fn quantiles_monotone_and_bounding() {
+    forall(0x400, 200, |rng| {
+        let h = Histogram::new();
+        let n = rng.range(1, 500);
+        let mut max = 0;
+        for _ in 0..n {
+            let mag = rng.below(40);
+            let v = rng.below(1 << mag) + 1;
+            max = max.max(v);
+            h.record(v);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+        // bucket upper bounds can exceed max by at most 2x
+        assert!(p99 <= max.next_power_of_two().max(2) * 2);
+    });
+}
+
+#[test]
+fn histogram_reset() {
+    let h = Histogram::new();
+    h.record(5);
+    h.reset();
+    assert_eq!(h.count(), 0);
+    assert_eq!(h.max(), 0);
+}
+
+#[test]
+fn concurrent_recording() {
+    let h = Arc::new(Histogram::new());
+    let threads: Vec<_> = (0..8)
+        .map(|t| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    h.record(i + t);
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(h.count(), 80_000);
+}
+
+#[test]
+fn registry_dedup_and_snapshot() {
+    let r = Registry::new();
+    let c1 = r.counter("reqs");
+    let c2 = r.counter("reqs");
+    c1.inc();
+    c2.add(2);
+    assert_eq!(r.counter("reqs").get(), 3);
+    r.histogram("lat").record(42);
+    let snap = r.snapshot();
+    assert_eq!(snap.counters["reqs"], 3);
+    assert_eq!(snap.hists["lat"].count, 1);
+    let text = snap.render();
+    assert!(text.contains("reqs"));
+    assert!(text.contains("lat"));
+}

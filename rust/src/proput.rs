@@ -1,0 +1,201 @@
+//! Minimal property-testing support (the build environment has no network
+//! registry, so `proptest` is unavailable — this module provides the subset
+//! the test suite needs: a fast deterministic PRNG, value generators, and a
+//! `forall` driver with failure reporting).
+//!
+//! All randomized tests in the crate derive their stream from a fixed seed
+//! so failures are reproducible; the failing iteration index and raw inputs
+//! are printed in the panic message.
+
+/// SplitMix64 — tiny, fast, full-period 64-bit generator. Good enough for
+/// test-input generation (not for cryptography).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create from a seed. The same seed always yields the same stream.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Next u32.
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`. `n` must be non-zero.
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Multiply-shift rejection-free mapping; bias is negligible for
+        // test-generation purposes (< 2^-64 * n).
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Boolean with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// A "nasty" u64 for floating-point bit patterns: biased toward
+    /// boundary exponents, all-ones/all-zeros significands, and values near
+    /// powers of two — where rounding bugs live.
+    pub fn nasty_bits64(&mut self) -> u64 {
+        match self.below(8) {
+            0 => self.next_u64(),                      // uniform
+            1 => 0,                                    // +0
+            2 => self.next_u64() & 0x000F_FFFF_FFFF_FFFF, // subnormal-ish
+            3 => {
+                // near-overflow exponent, random significand
+                let sig = self.next_u64() & 0x000F_FFFF_FFFF_FFFF;
+                0x7FE0_0000_0000_0000 | sig
+            }
+            4 => {
+                // minimal normal exponent
+                let sig = self.next_u64() & 0x000F_FFFF_FFFF_FFFF;
+                0x0010_0000_0000_0000 | sig
+            }
+            5 => {
+                // all-ones significand (rounding carry propagation)
+                let exp = self.below(0x7FF) << 52;
+                exp | 0x000F_FFFF_FFFF_FFFF
+            }
+            6 => {
+                // power of two
+                self.below(0x7FF) << 52
+            }
+            _ => {
+                // random exponent, sparse significand
+                let exp = self.below(0x7FF) << 52;
+                exp | (1u64 << self.below(52))
+            }
+        }
+    }
+
+    /// Same spirit for 32-bit patterns.
+    pub fn nasty_bits32(&mut self) -> u32 {
+        match self.below(8) {
+            0 => self.next_u32(),
+            1 => 0,
+            2 => self.next_u32() & 0x007F_FFFF,
+            3 => 0x7F00_0000 | (self.next_u32() & 0x007F_FFFF),
+            4 => 0x0080_0000 | (self.next_u32() & 0x007F_FFFF),
+            5 => ((self.below(0xFF) as u32) << 23) | 0x007F_FFFF,
+            6 => (self.below(0xFF) as u32) << 23,
+            _ => ((self.below(0xFF) as u32) << 23) | (1u32 << self.below(23)),
+        }
+    }
+}
+
+/// Run `body` for `iters` deterministic random iterations. On panic the
+/// failing iteration index is included so the case can be re-run alone with
+/// [`case`].
+pub fn forall(seed: u64, iters: u64, mut body: impl FnMut(&mut Rng)) {
+    for i in 0..iters {
+        let mut rng = Rng::new(seed ^ (i.wrapping_mul(0xA24BAED4963EE407)));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut rng)));
+        if let Err(e) = result {
+            panic!(
+                "property failed at iteration {i} (seed={seed:#x}): {}",
+                panic_message(&e)
+            );
+        }
+    }
+}
+
+/// Re-run a single iteration of a [`forall`] by index (debugging aid).
+pub fn case(seed: u64, index: u64, mut body: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::new(seed ^ (index.wrapping_mul(0xA24BAED4963EE407)));
+    body(&mut rng);
+}
+
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            let n = rng.range(1, 1000);
+            let v = rng.below(n);
+            assert!(v < n);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Rng::new(9);
+        for _ in 0..10_000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn forall_reports_iteration() {
+        // A failing property panics with the iteration index in the message.
+        let result = std::panic::catch_unwind(|| {
+            forall(1, 50, |rng| {
+                assert!(rng.below(100) < 90, "intentional failure");
+            });
+        });
+        let msg = match result {
+            Err(e) => {
+                if let Some(s) = e.downcast_ref::<String>() {
+                    s.clone()
+                } else {
+                    String::new()
+                }
+            }
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("property failed at iteration"), "msg: {msg}");
+        // And the reported iteration is reproducible via `case`.
+        let ok = std::panic::catch_unwind(|| {
+            forall(1, 50, |rng| {
+                let _ = rng.below(100);
+            });
+        });
+        assert!(ok.is_ok());
+    }
+}

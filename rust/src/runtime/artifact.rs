@@ -1,0 +1,77 @@
+//! Artifact manifest parsing.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// The manifest `aot.py` writes next to the HLO artifacts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    /// Fixed batch size every artifact was lowered with.
+    pub batch: usize,
+    /// Entry names, e.g. `civp_fp64` -> `<dir>/civp_fp64.hlo.txt`.
+    pub entries: Vec<String>,
+    /// Directory containing the artifacts.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut batch = None;
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(v) = line.strip_prefix("batch=") {
+                batch = Some(v.parse::<usize>().context("manifest batch")?);
+            } else {
+                entries.push(line.to_string());
+            }
+        }
+        let Some(batch) = batch else { bail!("manifest missing batch= line") };
+        if batch == 0 {
+            bail!("manifest batch must be positive");
+        }
+        if entries.is_empty() {
+            bail!("manifest lists no entries");
+        }
+        Ok(Manifest { batch, entries, dir })
+    }
+
+    /// Path of one entry's HLO text.
+    pub fn entry_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let m = Manifest::parse("batch=256\ncivp_fp32\ncivp_fp64\n", PathBuf::from("/a")).unwrap();
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.entries, vec!["civp_fp32", "civp_fp64"]);
+        assert_eq!(m.entry_path("civp_fp32"), PathBuf::from("/a/civp_fp32.hlo.txt"));
+    }
+
+    #[test]
+    fn parse_rejects_bad_manifests() {
+        assert!(Manifest::parse("civp_fp32\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("batch=0\ncivp_fp32\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("batch=64\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("batch=x\na\n", PathBuf::new()).is_err());
+    }
+}

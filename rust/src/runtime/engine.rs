@@ -1,0 +1,202 @@
+//! The PJRT engine: compiled executables per precision + batched dispatch.
+
+use super::artifact::Manifest;
+use crate::decomp::Precision;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Dispatch counters (telemetry for EXPERIMENTS.md §Perf).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    /// Batches executed per precision.
+    pub batches_fp32: AtomicU64,
+    /// Batches executed (fp64).
+    pub batches_fp64: AtomicU64,
+    /// Batches executed (fp128).
+    pub batches_fp128: AtomicU64,
+    /// Elements computed (including padding lanes).
+    pub lanes_total: AtomicU64,
+    /// Elements that were padding (measured waste, the serving analogue of
+    /// the paper's padded blocks).
+    pub lanes_padding: AtomicU64,
+}
+
+impl EngineStats {
+    /// Padding fraction so far.
+    pub fn padding_fraction(&self) -> f64 {
+        let total = self.lanes_total.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        self.lanes_padding.load(Ordering::Relaxed) as f64 / total as f64
+    }
+}
+
+/// A compiled multiply executable for one precision.
+struct Entry {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client, one compiled executable per precision.
+///
+/// `execute` takes packed bit patterns and returns packed bit patterns —
+/// the engine is oblivious to IEEE semantics (those live in the artifact).
+/// Inputs shorter than the artifact batch are padded with zeros; longer
+/// inputs are chunked.
+///
+/// The xla crate's handles are not `Send`; multi-threaded callers use
+/// [`super::EngineHandle`], which owns the engine on a dedicated executor
+/// thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    fp32: Option<Entry>,
+    fp64: Option<Entry>,
+    fp128: Option<Entry>,
+    /// Fixed artifact batch size.
+    pub batch: usize,
+    /// Dispatch counters.
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    /// Load every artifact listed in `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut engine = Engine {
+            client,
+            fp32: None,
+            fp64: None,
+            fp128: None,
+            batch: manifest.batch,
+            stats: EngineStats::default(),
+        };
+        for name in &manifest.entries {
+            let path = manifest.entry_path(name);
+            let entry = engine.compile_entry(&path)?;
+            match name.as_str() {
+                "civp_fp32" => engine.fp32 = Some(entry),
+                "civp_fp64" => engine.fp64 = Some(entry),
+                "civp_fp128" => engine.fp128 = Some(entry),
+                other => bail!("unknown artifact entry {other}"),
+            }
+        }
+        Ok(engine)
+    }
+
+    fn compile_entry(&self, path: &Path) -> Result<Entry> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Entry { exe })
+    }
+
+    /// Which precisions are loaded.
+    pub fn loaded(&self) -> Vec<Precision> {
+        let mut v = Vec::new();
+        if self.fp32.is_some() {
+            v.push(Precision::Single);
+        }
+        if self.fp64.is_some() {
+            v.push(Precision::Double);
+        }
+        if self.fp128.is_some() {
+            v.push(Precision::Quad);
+        }
+        v
+    }
+
+    /// Batched binary32 multiply on packed bits. Arbitrary length; the
+    /// engine chunks/pads to the artifact batch.
+    pub fn mul_fp32(&self, a: &[u32], b: &[u32]) -> Result<Vec<u32>> {
+        anyhow::ensure!(a.len() == b.len(), "operand length mismatch");
+        let Some(entry) = &self.fp32 else { bail!("fp32 artifact not loaded") };
+        self.stats.batches_fp32.fetch_add(a.len().div_ceil(self.batch) as u64, Ordering::Relaxed);
+        self.run_chunked(entry, a, b, |xs| xla::Literal::vec1(xs), |lit| lit.to_vec::<u32>())
+    }
+
+    /// Batched binary64 multiply on packed bits.
+    pub fn mul_fp64(&self, a: &[u64], b: &[u64]) -> Result<Vec<u64>> {
+        anyhow::ensure!(a.len() == b.len(), "operand length mismatch");
+        let Some(entry) = &self.fp64 else { bail!("fp64 artifact not loaded") };
+        self.stats.batches_fp64.fetch_add(a.len().div_ceil(self.batch) as u64, Ordering::Relaxed);
+        self.run_chunked(entry, a, b, |xs| xla::Literal::vec1(xs), |lit| lit.to_vec::<u64>())
+    }
+
+    /// Batched binary128 multiply on packed bits (u128 = lo | hi<<64).
+    pub fn mul_fp128(&self, a: &[u128], b: &[u128]) -> Result<Vec<u128>> {
+        anyhow::ensure!(a.len() == b.len(), "operand length mismatch");
+        let Some(entry) = &self.fp128 else { bail!("fp128 artifact not loaded") };
+        self.stats
+            .batches_fp128
+            .fetch_add(a.len().div_ceil(self.batch) as u64, Ordering::Relaxed);
+        let n = self.batch;
+        let mut out = Vec::with_capacity(a.len());
+        for (ca, cb) in a.chunks(n).zip(b.chunks(n)) {
+            let len = ca.len();
+            self.stats.lanes_total.fetch_add(n as u64, Ordering::Relaxed);
+            self.stats.lanes_padding.fetch_add((n - len) as u64, Ordering::Relaxed);
+            // words layout [B, 2]: row-major (lo, hi) pairs
+            let mut wa = vec![0u64; 2 * n];
+            let mut wb = vec![0u64; 2 * n];
+            for i in 0..len {
+                wa[2 * i] = ca[i] as u64;
+                wa[2 * i + 1] = (ca[i] >> 64) as u64;
+                wb[2 * i] = cb[i] as u64;
+                wb[2 * i + 1] = (cb[i] >> 64) as u64;
+            }
+            let la = xla::Literal::vec1(&wa).reshape(&[n as i64, 2])?;
+            let lb = xla::Literal::vec1(&wb).reshape(&[n as i64, 2])?;
+            let result = entry.exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+            let words = result.to_tuple1()?.to_vec::<u64>()?;
+            anyhow::ensure!(words.len() == 2 * n, "unexpected fp128 output length");
+            for i in 0..len {
+                out.push(words[2 * i] as u128 | ((words[2 * i + 1] as u128) << 64));
+            }
+        }
+        Ok(out)
+    }
+
+    fn run_chunked<T: Copy + Default + xla::NativeType + xla::ArrayElement>(
+        &self,
+        entry: &Entry,
+        a: &[T],
+        b: &[T],
+        make: impl Fn(&[T]) -> xla::Literal,
+        read: impl Fn(&xla::Literal) -> Result<Vec<T>, xla::Error>,
+    ) -> Result<Vec<T>> {
+        let n = self.batch;
+        let mut out = Vec::with_capacity(a.len());
+        let mut buf_a = vec![T::default(); n];
+        let mut buf_b = vec![T::default(); n];
+        for (ca, cb) in a.chunks(n).zip(b.chunks(n)) {
+            let len = ca.len();
+            self.stats.lanes_total.fetch_add(n as u64, Ordering::Relaxed);
+            self.stats.lanes_padding.fetch_add((n - len) as u64, Ordering::Relaxed);
+            let (la, lb) = if len == n {
+                (make(ca), make(cb))
+            } else {
+                buf_a[..len].copy_from_slice(ca);
+                buf_a[len..].fill(T::default());
+                buf_b[..len].copy_from_slice(cb);
+                buf_b[len..].fill(T::default());
+                (make(&buf_a), make(&buf_b))
+            };
+            let result = entry.exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+            let vals = read(&result.to_tuple1()?)?;
+            anyhow::ensure!(vals.len() == n, "unexpected output length");
+            out.extend_from_slice(&vals[..len]);
+        }
+        Ok(out)
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

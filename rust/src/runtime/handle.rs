@@ -1,0 +1,144 @@
+//! Thread-safe handle to an [`Engine`] running on a dedicated executor
+//! thread.
+//!
+//! The xla crate's PJRT wrappers hold `Rc`s and raw pointers, so [`Engine`]
+//! is not `Send`. The handle owns the engine on one executor thread and
+//! multiplexes batch jobs over an mpsc channel — the standard "pinned
+//! device thread" pattern. Cloning the handle is cheap; all clones feed the
+//! same executor (PJRT CPU execution is serialized anyway).
+
+use crate::decomp::Precision;
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+enum Job {
+    Mul {
+        precision: Precision,
+        a: Vec<u128>,
+        b: Vec<u128>,
+        reply: mpsc::Sender<Result<Vec<u128>>>,
+    },
+    Info {
+        reply: mpsc::Sender<EngineInfo>,
+    },
+    Stop,
+}
+
+/// Static facts about the loaded engine.
+#[derive(Clone, Debug)]
+pub struct EngineInfo {
+    /// Artifact batch size.
+    pub batch: usize,
+    /// PJRT platform name.
+    pub platform: String,
+    /// Loaded precisions.
+    pub loaded: Vec<Precision>,
+    /// Padding fraction so far (see `EngineStats`).
+    pub padding_fraction: f64,
+}
+
+struct HandleInner {
+    tx: mpsc::Sender<Job>,
+    join: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// Cloneable, `Send + Sync` front-end to a pinned-thread [`Engine`].
+#[derive(Clone)]
+pub struct EngineHandle {
+    inner: Arc<HandleInner>,
+}
+
+impl EngineHandle {
+    /// Load the artifacts on a fresh executor thread.
+    pub fn load(dir: impl Into<PathBuf>) -> Result<EngineHandle> {
+        let dir = dir.into();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("civp-pjrt-exec".to_string())
+            .spawn(move || {
+                let engine = match super::Engine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for job in rx {
+                    match job {
+                        Job::Mul { precision, a, b, reply } => {
+                            let out = match precision {
+                                Precision::Single => {
+                                    let xa: Vec<u32> = a.iter().map(|&v| v as u32).collect();
+                                    let xb: Vec<u32> = b.iter().map(|&v| v as u32).collect();
+                                    engine.mul_fp32(&xa, &xb).map(|v| {
+                                        v.into_iter().map(|x| x as u128).collect()
+                                    })
+                                }
+                                Precision::Double => {
+                                    let xa: Vec<u64> = a.iter().map(|&v| v as u64).collect();
+                                    let xb: Vec<u64> = b.iter().map(|&v| v as u64).collect();
+                                    engine.mul_fp64(&xa, &xb).map(|v| {
+                                        v.into_iter().map(|x| x as u128).collect()
+                                    })
+                                }
+                                Precision::Quad => engine.mul_fp128(&a, &b),
+                            };
+                            let _ = reply.send(out);
+                        }
+                        Job::Info { reply } => {
+                            let _ = reply.send(EngineInfo {
+                                batch: engine.batch,
+                                platform: engine.platform(),
+                                loaded: engine.loaded(),
+                                padding_fraction: engine.stats.padding_fraction(),
+                            });
+                        }
+                        Job::Stop => break,
+                    }
+                }
+            })?;
+        ready_rx.recv().map_err(|_| anyhow!("executor thread died during load"))??;
+        Ok(EngineHandle { inner: Arc::new(HandleInner { tx, join: Mutex::new(Some(join)) }) })
+    }
+
+    /// Batched multiply of packed bit patterns (any length).
+    pub fn mul(&self, precision: Precision, a: Vec<u128>, b: Vec<u128>) -> Result<Vec<u128>> {
+        let (reply, rx) = mpsc::channel();
+        self.inner
+            .tx
+            .send(Job::Mul { precision, a, b, reply })
+            .map_err(|_| anyhow!("engine executor stopped"))?;
+        rx.recv().map_err(|_| anyhow!("engine executor dropped reply"))?
+    }
+
+    /// Engine facts.
+    pub fn info(&self) -> Result<EngineInfo> {
+        let (reply, rx) = mpsc::channel();
+        self.inner.tx.send(Job::Info { reply }).map_err(|_| anyhow!("engine executor stopped"))?;
+        rx.recv().map_err(|_| anyhow!("engine executor dropped reply"))
+    }
+
+    /// Stop the executor (joins the thread). Subsequent calls error.
+    pub fn stop(&self) {
+        let _ = self.inner.tx.send(Job::Stop);
+        if let Some(j) = self.inner.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for HandleInner {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Stop);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT execution of the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The Python side (`python/compile/aot.py`) lowers the Layer-2 model once
+//! to HLO *text*; this module loads those artifacts, compiles them on the
+//! PJRT CPU client and exposes batched multiply calls to the coordinator.
+//! Python never runs on this path.
+//!
+//! Interchange is HLO text (not serialized `HloModuleProto`): jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+mod artifact;
+mod engine;
+mod handle;
+#[cfg(test)]
+mod tests;
+
+pub use artifact::Manifest;
+pub use engine::{Engine, EngineStats};
+pub use handle::{EngineHandle, EngineInfo};

@@ -1,0 +1,118 @@
+//! Runtime integration tests: load the real artifacts, execute, and compare
+//! bit-for-bit against the Rust softfloat (which is itself hardware-
+//! verified). Requires `make artifacts` to have run; tests are skipped with
+//! a clear message otherwise.
+
+use super::*;
+use crate::fpu::{Fp128, Fp32, Fp64};
+use crate::proput::{forall, Rng};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime test: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn engine() -> Option<Engine> {
+    artifacts_dir().map(|d| Engine::load(d).expect("engine load"))
+}
+
+#[test]
+fn load_reports_all_precisions() {
+    let Some(e) = engine() else { return };
+    assert_eq!(e.loaded().len(), 3);
+    assert!(e.batch > 0);
+    assert!(!e.platform().is_empty());
+}
+
+#[test]
+fn fp64_matches_softfloat_exact_batch() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(0x900);
+    let n = e.batch;
+    let a: Vec<u64> = (0..n).map(|_| rng.nasty_bits64()).collect();
+    let b: Vec<u64> = (0..n).map(|_| rng.nasty_bits64()).collect();
+    let out = e.mul_fp64(&a, &b).unwrap();
+    for i in 0..n {
+        let sw = Fp64(a[i]).mul(Fp64(b[i]));
+        if sw.is_nan() {
+            assert!(Fp64(out[i]).is_nan(), "i={i}");
+        } else {
+            assert_eq!(out[i], sw.0, "i={i} a={:#x} b={:#x}", a[i], b[i]);
+        }
+    }
+}
+
+#[test]
+fn fp32_matches_softfloat_with_padding() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(0x901);
+    // deliberately not a multiple of the batch: exercises the pad path
+    let n = e.batch + e.batch / 3 + 1;
+    let a: Vec<u32> = (0..n).map(|_| rng.nasty_bits32()).collect();
+    let b: Vec<u32> = (0..n).map(|_| rng.nasty_bits32()).collect();
+    let out = e.mul_fp32(&a, &b).unwrap();
+    assert_eq!(out.len(), n);
+    for i in 0..n {
+        let sw = Fp32(a[i]).mul(Fp32(b[i]));
+        if sw.is_nan() {
+            assert!(Fp32(out[i]).is_nan());
+        } else {
+            assert_eq!(out[i], sw.0, "i={i}");
+        }
+    }
+    assert!(e.stats.padding_fraction() > 0.0);
+}
+
+#[test]
+fn fp128_matches_softfloat() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(0x902);
+    let n = 64; // sub-batch: pad path for the 2-word layout
+    let a: Vec<u128> = (0..n)
+        .map(|_| Fp128::from_f64(f64::from_bits(rng.nasty_bits64())).0)
+        .collect();
+    let b: Vec<u128> = (0..n)
+        .map(|_| Fp128::from_f64(f64::from_bits(rng.nasty_bits64())).0)
+        .collect();
+    let out = e.mul_fp128(&a, &b).unwrap();
+    for i in 0..n {
+        let sw = Fp128(a[i]).mul(Fp128(b[i]));
+        if sw.is_nan() {
+            assert!(Fp128(out[i]).is_nan());
+        } else {
+            assert_eq!(out[i], sw.0, "i={i} a={:#x} b={:#x}", a[i], b[i]);
+        }
+    }
+}
+
+#[test]
+fn fp64_multi_chunk_roundtrip() {
+    let Some(e) = engine() else { return };
+    forall(0x903, 3, |rng| {
+        let n = e.batch * 2 + rng.below(e.batch as u64) as usize;
+        let a: Vec<u64> = (0..n).map(|_| rng.nasty_bits64()).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.nasty_bits64()).collect();
+        let out = e.mul_fp64(&a, &b).unwrap();
+        assert_eq!(out.len(), n);
+        // spot-check a sample
+        for _ in 0..32 {
+            let i = rng.below(n as u64) as usize;
+            let sw = Fp64(a[i]).mul(Fp64(b[i]));
+            if !sw.is_nan() {
+                assert_eq!(out[i], sw.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn mismatched_lengths_rejected() {
+    let Some(e) = engine() else { return };
+    assert!(e.mul_fp64(&[1, 2], &[1]).is_err());
+    assert!(e.mul_fp32(&[1], &[]).is_err());
+}

@@ -1,0 +1,81 @@
+//! Deterministic trace generation.
+
+use super::workloads::WorkloadMix;
+use crate::decomp::Precision;
+use crate::proput::Rng;
+
+/// One multiplication request in a trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceRequest {
+    /// Request id (sequential).
+    pub id: u64,
+    /// Precision demanded by the application.
+    pub precision: Precision,
+    /// Packed operand A bits (low `total_bits` of the precision are valid).
+    pub a: u128,
+    /// Packed operand B bits.
+    pub b: u128,
+    /// Arrival offset in nanoseconds from trace start (open-loop arrivals,
+    /// exponential inter-arrival).
+    pub arrival_ns: u64,
+}
+
+/// Deterministic request generator.
+pub struct TraceGen {
+    rng: Rng,
+    mix: WorkloadMix,
+    next_id: u64,
+    clock_ns: u64,
+    /// Mean inter-arrival gap in ns (0 = closed-loop, all arrive at t=0).
+    pub mean_gap_ns: u64,
+}
+
+impl TraceGen {
+    /// New generator with a fixed seed.
+    pub fn new(seed: u64, mix: WorkloadMix, mean_gap_ns: u64) -> TraceGen {
+        TraceGen { rng: Rng::new(seed), mix, next_id: 0, clock_ns: 0, mean_gap_ns }
+    }
+
+    /// Generate finite operand bits for `prec` — realistic magnitudes
+    /// (media-processing values cluster near 1.0; exponents within ±40 of
+    /// bias) with adversarial significands.
+    fn operand(&mut self, prec: Precision) -> u128 {
+        let (exp_bits, frac_bits) = match prec {
+            Precision::Single => (8u32, 23u32),
+            Precision::Double => (11, 52),
+            Precision::Quad => (15, 112),
+        };
+        let bias = (1u64 << (exp_bits - 1)) - 1;
+        let e_span = 80u64;
+        let biased = bias - e_span / 2 + self.rng.below(e_span);
+        let frac = if frac_bits <= 64 {
+            (self.rng.next_u64() & ((1u64 << frac_bits) - 1)) as u128
+        } else {
+            let hi = self.rng.next_u64() as u128 & ((1u128 << (frac_bits - 64)) - 1);
+            (hi << 64) | self.rng.next_u64() as u128
+        };
+        let sign = (self.rng.below(2) as u128) << (exp_bits + frac_bits);
+        sign | ((biased as u128) << frac_bits) | frac
+    }
+
+    /// Next request.
+    pub fn next(&mut self) -> TraceRequest {
+        let precision = self.mix.pick(self.rng.f64());
+        let a = self.operand(precision);
+        let b = self.operand(precision);
+        let id = self.next_id;
+        self.next_id += 1;
+        if self.mean_gap_ns > 0 {
+            // exponential inter-arrival (open loop)
+            let u = self.rng.f64().max(1e-12);
+            let gap = (-(u.ln()) * self.mean_gap_ns as f64) as u64;
+            self.clock_ns += gap;
+        }
+        TraceRequest { id, precision, a, b, arrival_ns: self.clock_ns }
+    }
+
+    /// Generate `n` requests.
+    pub fn take(&mut self, n: usize) -> Vec<TraceRequest> {
+        (0..n).map(|_| self.next()).collect()
+    }
+}

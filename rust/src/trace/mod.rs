@@ -1,0 +1,16 @@
+//! Synthetic multimedia workload traces.
+//!
+//! The paper motivates CIVP with "multi-media processing applications ...
+//! where required degree of accuracy depends on their inputs (single
+//! precision to higher precision)". No production trace of such an
+//! application exists publicly (2007-era), so this module generates
+//! synthetic traces with the same structure: streams of multiplication
+//! requests whose precision demand varies per request (DESIGN.md §2).
+
+mod gen;
+mod workloads;
+#[cfg(test)]
+mod tests;
+
+pub use gen::{TraceGen, TraceRequest};
+pub use workloads::{WorkloadMix, WorkloadSpec};

@@ -1,0 +1,87 @@
+//! Trace generator tests: determinism, mix fidelity, operand validity.
+
+use super::*;
+use crate::decomp::Precision;
+
+#[test]
+fn deterministic_for_fixed_seed() {
+    let mut g1 = TraceGen::new(7, WorkloadSpec::Graphics.mix(), 100);
+    let mut g2 = TraceGen::new(7, WorkloadSpec::Graphics.mix(), 100);
+    assert_eq!(g1.take(100), g2.take(100));
+}
+
+#[test]
+fn different_seeds_differ() {
+    let mut g1 = TraceGen::new(1, WorkloadSpec::Uniform.mix(), 0);
+    let mut g2 = TraceGen::new(2, WorkloadSpec::Uniform.mix(), 0);
+    assert_ne!(g1.take(50), g2.take(50));
+}
+
+#[test]
+fn mix_fractions_respected() {
+    let mut g = TraceGen::new(11, WorkloadSpec::Graphics.mix(), 0);
+    let reqs = g.take(20_000);
+    let singles = reqs.iter().filter(|r| r.precision == Precision::Single).count() as f64;
+    let quads = reqs.iter().filter(|r| r.precision == Precision::Quad).count() as f64;
+    let n = reqs.len() as f64;
+    assert!((singles / n - 0.80).abs() < 0.02, "single frac {}", singles / n);
+    assert!((quads / n - 0.03).abs() < 0.01, "quad frac {}", quads / n);
+}
+
+#[test]
+fn single_only_is_single_only() {
+    let mut g = TraceGen::new(3, WorkloadSpec::SingleOnly.mix(), 0);
+    assert!(g.take(1000).iter().all(|r| r.precision == Precision::Single));
+}
+
+#[test]
+fn operands_fit_format_and_are_finite() {
+    let mut g = TraceGen::new(5, WorkloadSpec::Uniform.mix(), 0);
+    for r in g.take(5000) {
+        let total = match r.precision {
+            Precision::Single => 32,
+            Precision::Double => 64,
+            Precision::Quad => 128,
+        };
+        if total < 128 {
+            assert!(r.a < (1u128 << total), "operand overflows format");
+            assert!(r.b < (1u128 << total));
+        }
+        // finite: biased exponent below the all-ones marker
+        let (eb, fb) = match r.precision {
+            Precision::Single => (8, 23),
+            Precision::Double => (11, 52),
+            Precision::Quad => (15, 112),
+        };
+        let emask = (1u128 << eb) - 1;
+        assert_ne!((r.a >> fb) & emask, emask, "operand must be finite");
+        assert_ne!((r.b >> fb) & emask, emask);
+    }
+}
+
+#[test]
+fn arrivals_monotone_open_loop() {
+    let mut g = TraceGen::new(9, WorkloadSpec::Scientific.mix(), 1000);
+    let reqs = g.take(1000);
+    for w in reqs.windows(2) {
+        assert!(w[1].arrival_ns >= w[0].arrival_ns);
+    }
+    // mean gap in the right ballpark (within 3x)
+    let span = reqs.last().unwrap().arrival_ns;
+    let mean = span as f64 / reqs.len() as f64;
+    assert!(mean > 300.0 && mean < 3000.0, "mean gap {mean}");
+}
+
+#[test]
+fn closed_loop_all_at_zero() {
+    let mut g = TraceGen::new(13, WorkloadSpec::Uniform.mix(), 0);
+    assert!(g.take(100).iter().all(|r| r.arrival_ns == 0));
+}
+
+#[test]
+fn spec_parse_roundtrip() {
+    for spec in WorkloadSpec::ALL {
+        assert_eq!(WorkloadSpec::parse(spec.name()), Some(spec));
+    }
+    assert_eq!(WorkloadSpec::parse("nope"), None);
+}

@@ -1,0 +1,85 @@
+//! Workload mixes: named precision distributions modeled on the paper's
+//! motivating applications.
+
+use crate::decomp::Precision;
+
+/// A precision mix (weights need not sum to 1; they are normalized).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkloadMix {
+    /// Weight of single-precision requests.
+    pub single: f64,
+    /// Weight of double-precision requests.
+    pub double: f64,
+    /// Weight of quad-precision requests.
+    pub quad: f64,
+}
+
+impl WorkloadMix {
+    /// Normalize to a cumulative distribution (single, single+double).
+    pub fn cdf(&self) -> (f64, f64) {
+        let total = self.single + self.double + self.quad;
+        assert!(total > 0.0, "workload mix has zero mass");
+        ((self.single) / total, (self.single + self.double) / total)
+    }
+
+    /// Pick a precision from a uniform sample in [0, 1).
+    pub fn pick(&self, u: f64) -> Precision {
+        let (c1, c2) = self.cdf();
+        if u < c1 {
+            Precision::Single
+        } else if u < c2 {
+            Precision::Double
+        } else {
+            Precision::Quad
+        }
+    }
+}
+
+/// Named workload specs (the mixes used in EXPERIMENTS.md E7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkloadSpec {
+    /// Graphics pipeline: mostly single, occasional double for geometric
+    /// predicates (Shewchuk-style escalation), rare quad fallback.
+    Graphics,
+    /// Scientific post-processing: double-dominant with quad refinement.
+    Scientific,
+    /// Stress mix: equal thirds — the worst case for a fixed-block fabric.
+    Uniform,
+    /// Pure single precision (the CIFM [2] setting the paper extends).
+    SingleOnly,
+}
+
+impl WorkloadSpec {
+    /// All named specs.
+    pub const ALL: [WorkloadSpec; 4] = [
+        WorkloadSpec::Graphics,
+        WorkloadSpec::Scientific,
+        WorkloadSpec::Uniform,
+        WorkloadSpec::SingleOnly,
+    ];
+
+    /// The precision mix for this spec.
+    pub fn mix(self) -> WorkloadMix {
+        match self {
+            WorkloadSpec::Graphics => WorkloadMix { single: 0.80, double: 0.17, quad: 0.03 },
+            WorkloadSpec::Scientific => WorkloadMix { single: 0.10, double: 0.70, quad: 0.20 },
+            WorkloadSpec::Uniform => WorkloadMix { single: 1.0, double: 1.0, quad: 1.0 },
+            WorkloadSpec::SingleOnly => WorkloadMix { single: 1.0, double: 0.0, quad: 0.0 },
+        }
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadSpec::Graphics => "graphics",
+            WorkloadSpec::Scientific => "scientific",
+            WorkloadSpec::Uniform => "uniform",
+            WorkloadSpec::SingleOnly => "single-only",
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<WorkloadSpec> {
+        Self::ALL.into_iter().find(|w| w.name() == s)
+    }
+}

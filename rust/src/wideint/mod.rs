@@ -1,0 +1,406 @@
+//! Fixed-width multi-limb unsigned integers.
+//!
+//! The CIVP decomposition engine needs exact integer arithmetic wider than
+//! `u128`: a quadruple-precision significand product is 226 bits (113x113),
+//! and the padded CIVP form is 228 bits (114x114). This module provides
+//! `Wide<N>` — a little-endian array of `N` u64 limbs — with the handful of
+//! exact operations the library needs: add/sub with carry, shifts, widening
+//! schoolbook multiplication, bit extraction, and sticky-bit queries used by
+//! the rounding stage.
+//!
+//! `Wide<N>` is deliberately *not* a general bignum: widths are fixed at
+//! compile time, there is no allocation, and overflow on `add`/`shl` is a
+//! checked error in debug and wraps in release (matching hardware
+//! accumulator semantics). The decomposition executor uses `U256` as the
+//! accumulator for every precision.
+
+mod ops;
+#[cfg(test)]
+mod tests;
+
+pub use ops::{add_limbs, mul_limb, sub_limbs};
+
+/// Little-endian fixed array of `N` 64-bit limbs.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Wide<const N: usize> {
+    /// limbs\[0\] is least significant.
+    pub limbs: [u64; N],
+}
+
+/// 128-bit value (2 limbs) — significand container for every precision.
+pub type U128 = Wide<2>;
+/// 192-bit value (3 limbs).
+pub type U192 = Wide<3>;
+/// 256-bit value (4 limbs) — product accumulator for every precision.
+pub type U256 = Wide<4>;
+
+impl<const N: usize> Default for Wide<N> {
+    fn default() -> Self {
+        Self::ZERO
+    }
+}
+
+impl<const N: usize> Wide<N> {
+    /// The zero value.
+    pub const ZERO: Self = Wide { limbs: [0u64; N] };
+    /// The value 1.
+    pub const ONE: Self = {
+        let mut l = [0u64; N];
+        l[0] = 1;
+        Wide { limbs: l }
+    };
+    /// Total bit width.
+    pub const BITS: u32 = 64 * N as u32;
+
+    /// Construct from a `u64`.
+    #[inline]
+    pub const fn from_u64(v: u64) -> Self {
+        let mut l = [0u64; N];
+        l[0] = v;
+        Wide { limbs: l }
+    }
+
+    /// Construct from a `u128` (low two limbs).
+    #[inline]
+    pub const fn from_u128(v: u128) -> Self {
+        assert!(N >= 2);
+        let mut l = [0u64; N];
+        l[0] = v as u64;
+        l[1] = (v >> 64) as u64;
+        Wide { limbs: l }
+    }
+
+    /// Low 64 bits.
+    #[inline]
+    pub const fn as_u64(&self) -> u64 {
+        self.limbs[0]
+    }
+
+    /// Low 128 bits.
+    #[inline]
+    pub fn as_u128(&self) -> u128 {
+        let lo = self.limbs[0] as u128;
+        let hi = if N >= 2 { self.limbs[1] as u128 } else { 0 };
+        lo | (hi << 64)
+    }
+
+    /// True if the value is zero.
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.limbs.iter().all(|&l| l == 0)
+    }
+
+    /// Number of significant bits (position of highest set bit + 1); 0 for zero.
+    pub fn bit_len(&self) -> u32 {
+        for i in (0..N).rev() {
+            if self.limbs[i] != 0 {
+                return 64 * i as u32 + (64 - self.limbs[i].leading_zeros());
+            }
+        }
+        0
+    }
+
+    /// Extract bit `i` (0 = LSB). Bits past the width read as 0.
+    #[inline]
+    pub fn bit(&self, i: u32) -> bool {
+        let limb = (i / 64) as usize;
+        if limb >= N {
+            return false;
+        }
+        (self.limbs[limb] >> (i % 64)) & 1 == 1
+    }
+
+    /// Set bit `i` to 1. Panics if out of range.
+    #[inline]
+    pub fn set_bit(&mut self, i: u32) {
+        let limb = (i / 64) as usize;
+        assert!(limb < N, "bit index {i} out of range for {} limbs", N);
+        self.limbs[limb] |= 1u64 << (i % 64);
+    }
+
+    /// Extract `width` bits starting at bit `lo` as a u64 (`width <= 64`).
+    /// Hot path of the tile executor — reads at most two limbs directly
+    /// instead of materializing a shifted value.
+    #[inline]
+    pub fn extract_u64(&self, lo: u32, width: u32) -> u64 {
+        assert!(width <= 64);
+        if width == 0 {
+            return 0;
+        }
+        let limb = (lo / 64) as usize;
+        let sh = lo % 64;
+        let mut v = if limb < N { self.limbs[limb] >> sh } else { 0 };
+        if sh > 0 && limb + 1 < N {
+            v |= self.limbs[limb + 1] << (64 - sh);
+        }
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        v & mask
+    }
+
+    /// Extract `width` bits starting at bit `lo` as a new `Wide` (`width <= BITS`).
+    pub fn extract(&self, lo: u32, width: u32) -> Self {
+        let shifted = self.shr(lo);
+        shifted.mask_low(width)
+    }
+
+    /// Keep only the low `width` bits.
+    pub fn mask_low(&self, width: u32) -> Self {
+        let mut out = *self;
+        for i in 0..N {
+            let lo = 64 * i as u32;
+            if lo >= width {
+                out.limbs[i] = 0;
+            } else {
+                let keep = width - lo;
+                if keep < 64 {
+                    out.limbs[i] &= (1u64 << keep) - 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// True if any of the low `width` bits is set — the "sticky" query used
+    /// by round-to-nearest-even.
+    pub fn any_below(&self, width: u32) -> bool {
+        !self.mask_low(width).is_zero()
+    }
+
+    /// Logical shift left. Bits shifted past the top are dropped (hardware
+    /// accumulator semantics); callers size the accumulator so this never
+    /// loses information on valid inputs.
+    pub fn shl(&self, n: u32) -> Self {
+        if n == 0 {
+            return *self;
+        }
+        let mut out = Self::ZERO;
+        let limb_shift = (n / 64) as usize;
+        let bit_shift = n % 64;
+        for i in (0..N).rev() {
+            if i < limb_shift {
+                continue;
+            }
+            let src = i - limb_shift;
+            let mut v = self.limbs[src] << bit_shift;
+            if bit_shift > 0 && src > 0 {
+                v |= self.limbs[src - 1] >> (64 - bit_shift);
+            }
+            out.limbs[i] = v;
+        }
+        out
+    }
+
+    /// Logical shift right.
+    pub fn shr(&self, n: u32) -> Self {
+        if n == 0 {
+            return *self;
+        }
+        if n >= Self::BITS {
+            return Self::ZERO;
+        }
+        let mut out = Self::ZERO;
+        let limb_shift = (n / 64) as usize;
+        let bit_shift = n % 64;
+        for i in 0..N {
+            let src = i + limb_shift;
+            if src >= N {
+                break;
+            }
+            let mut v = self.limbs[src] >> bit_shift;
+            if bit_shift > 0 && src + 1 < N {
+                v |= self.limbs[src + 1] << (64 - bit_shift);
+            }
+            out.limbs[i] = v;
+        }
+        out
+    }
+
+    /// Wrapping addition (carry out of the top limb is dropped; debug-asserts
+    /// it is zero, since callers size accumulators to avoid overflow).
+    pub fn wrapping_add(&self, rhs: &Self) -> Self {
+        let (out, carry) = self.overflowing_add(rhs);
+        debug_assert!(!carry, "Wide::add overflow");
+        out
+    }
+
+    /// Addition reporting carry-out.
+    pub fn overflowing_add(&self, rhs: &Self) -> (Self, bool) {
+        let mut out = Self::ZERO;
+        let mut carry = 0u64;
+        for i in 0..N {
+            let (s1, c1) = self.limbs[i].overflowing_add(rhs.limbs[i]);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.limbs[i] = s2;
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        (out, carry != 0)
+    }
+
+    /// Wrapping subtraction (borrow out of the top limb is dropped;
+    /// debug-asserts no borrow, i.e. `self >= rhs`).
+    pub fn wrapping_sub(&self, rhs: &Self) -> Self {
+        let mut out = Self::ZERO;
+        let mut borrow = 0u64;
+        for i in 0..N {
+            let (d1, b1) = self.limbs[i].overflowing_sub(rhs.limbs[i]);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out.limbs[i] = d2;
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        debug_assert!(borrow == 0, "Wide::sub underflow");
+        out
+    }
+
+    /// Bitwise OR.
+    pub fn or(&self, rhs: &Self) -> Self {
+        let mut out = *self;
+        for i in 0..N {
+            out.limbs[i] |= rhs.limbs[i];
+        }
+        out
+    }
+
+    /// Bitwise AND.
+    pub fn and(&self, rhs: &Self) -> Self {
+        let mut out = *self;
+        for i in 0..N {
+            out.limbs[i] &= rhs.limbs[i];
+        }
+        out
+    }
+
+    /// Three-way compare.
+    pub fn cmp_wide(&self, rhs: &Self) -> core::cmp::Ordering {
+        for i in (0..N).rev() {
+            match self.limbs[i].cmp(&rhs.limbs[i]) {
+                core::cmp::Ordering::Equal => continue,
+                ord => return ord,
+            }
+        }
+        core::cmp::Ordering::Equal
+    }
+
+    /// Multiply by a u64, accumulating into a value of the same width
+    /// (debug-asserts no overflow past the top limb).
+    pub fn mul_u64(&self, m: u64) -> Self {
+        let mut out = Self::ZERO;
+        let mut carry = 0u128;
+        for i in 0..N {
+            let prod = self.limbs[i] as u128 * m as u128 + carry;
+            out.limbs[i] = prod as u64;
+            carry = prod >> 64;
+        }
+        debug_assert!(carry == 0, "Wide::mul_u64 overflow");
+        out
+    }
+
+    /// Widen into a larger limb count.
+    pub fn widen<const M: usize>(&self) -> Wide<M> {
+        assert!(M >= N);
+        let mut out = Wide::<M>::ZERO;
+        out.limbs[..N].copy_from_slice(&self.limbs);
+        out
+    }
+
+    /// Truncate into a smaller (or equal) limb count, debug-asserting the
+    /// dropped limbs are zero.
+    pub fn narrow<const M: usize>(&self) -> Wide<M> {
+        let mut out = Wide::<M>::ZERO;
+        for i in 0..M.min(N) {
+            out.limbs[i] = self.limbs[i];
+        }
+        for i in M..N {
+            debug_assert!(self.limbs[i] == 0, "Wide::narrow drops non-zero limb");
+        }
+        out
+    }
+
+    /// Exact schoolbook widening multiply: `N x N -> 2N` limbs.
+    pub fn mul_wide(&self, rhs: &Self) -> WideProduct<N> {
+        let mut out = vec![0u64; 2 * N];
+        for i in 0..N {
+            if self.limbs[i] == 0 {
+                continue;
+            }
+            let mut carry = 0u128;
+            for j in 0..N {
+                let idx = i + j;
+                let prod =
+                    self.limbs[i] as u128 * rhs.limbs[j] as u128 + out[idx] as u128 + carry;
+                out[idx] = prod as u64;
+                carry = prod >> 64;
+            }
+            let mut idx = i + N;
+            while carry != 0 {
+                let s = out[idx] as u128 + carry;
+                out[idx] = s as u64;
+                carry = s >> 64;
+                idx += 1;
+            }
+        }
+        WideProduct { limbs: out }
+    }
+
+    /// Hex string (for debugging / golden tests).
+    pub fn to_hex(&self) -> String {
+        let mut s = String::from("0x");
+        let mut started = false;
+        for i in (0..N).rev() {
+            if !started {
+                if self.limbs[i] == 0 && i != 0 {
+                    continue;
+                }
+                s.push_str(&format!("{:x}", self.limbs[i]));
+                started = true;
+            } else {
+                s.push_str(&format!("{:016x}", self.limbs[i]));
+            }
+        }
+        s
+    }
+}
+
+impl<const N: usize> core::fmt::Debug for Wide<N> {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(f, "Wide<{}>({})", N, self.to_hex())
+    }
+}
+
+impl<const N: usize> PartialOrd for Wide<N> {
+    fn partial_cmp(&self, other: &Self) -> Option<core::cmp::Ordering> {
+        Some(self.cmp_wide(other))
+    }
+}
+
+impl<const N: usize> Ord for Wide<N> {
+    fn cmp(&self, other: &Self) -> core::cmp::Ordering {
+        self.cmp_wide(other)
+    }
+}
+
+/// Dynamically-sized product of `Wide<N> x Wide<N>` (2N limbs). Only used as
+/// an intermediate before narrowing into `U256`.
+pub struct WideProduct<const N: usize> {
+    /// Little-endian limbs, length 2N.
+    pub limbs: Vec<u64>,
+}
+
+impl<const N: usize> WideProduct<N> {
+    /// Convert into a fixed `Wide<M>`, debug-asserting dropped limbs are zero.
+    pub fn into_wide<const M: usize>(self) -> Wide<M> {
+        let mut out = Wide::<M>::ZERO;
+        for (i, &l) in self.limbs.iter().enumerate() {
+            if i < M {
+                out.limbs[i] = l;
+            } else {
+                debug_assert!(l == 0, "WideProduct::into_wide drops non-zero limb");
+            }
+        }
+        out
+    }
+}
+
+/// Convenience: exact `U128 x U128 -> U256`.
+pub fn mul_u128(a: U128, b: U128) -> U256 {
+    a.mul_wide(&b).into_wide::<4>()
+}

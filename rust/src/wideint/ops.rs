@@ -1,0 +1,55 @@
+//! Slice-level limb primitives shared by `Wide` and the decomposition
+//! executor's scratch accumulators.
+
+/// `acc += addend`, both little-endian limb slices; `addend` may be shorter.
+/// Returns the final carry (0 or 1) out of `acc`.
+pub fn add_limbs(acc: &mut [u64], addend: &[u64]) -> u64 {
+    debug_assert!(acc.len() >= addend.len());
+    let mut carry = 0u64;
+    for i in 0..addend.len() {
+        let (s1, c1) = acc[i].overflowing_add(addend[i]);
+        let (s2, c2) = s1.overflowing_add(carry);
+        acc[i] = s2;
+        carry = (c1 as u64) + (c2 as u64);
+    }
+    let mut i = addend.len();
+    while carry != 0 && i < acc.len() {
+        let (s, c) = acc[i].overflowing_add(carry);
+        acc[i] = s;
+        carry = c as u64;
+        i += 1;
+    }
+    carry
+}
+
+/// `acc -= sub`, both little-endian; returns the final borrow.
+pub fn sub_limbs(acc: &mut [u64], sub: &[u64]) -> u64 {
+    debug_assert!(acc.len() >= sub.len());
+    let mut borrow = 0u64;
+    for i in 0..sub.len() {
+        let (d1, b1) = acc[i].overflowing_sub(sub[i]);
+        let (d2, b2) = d1.overflowing_sub(borrow);
+        acc[i] = d2;
+        borrow = (b1 as u64) + (b2 as u64);
+    }
+    let mut i = sub.len();
+    while borrow != 0 && i < acc.len() {
+        let (d, b) = acc[i].overflowing_sub(borrow);
+        acc[i] = d;
+        borrow = b as u64;
+        i += 1;
+    }
+    borrow
+}
+
+/// `out = a * m` for a limb slice and a single u64; `out.len() == a.len()+1`.
+pub fn mul_limb(a: &[u64], m: u64, out: &mut [u64]) {
+    debug_assert!(out.len() >= a.len() + 1);
+    let mut carry = 0u128;
+    for i in 0..a.len() {
+        let prod = a[i] as u128 * m as u128 + carry;
+        out[i] = prod as u64;
+        carry = prod >> 64;
+    }
+    out[a.len()] = carry as u64;
+}

@@ -1,0 +1,275 @@
+//! Unit + property tests for `wideint`. The u128 native type is the oracle
+//! for everything that fits in 128 bits; 256-bit behaviour is checked by
+//! algebraic identities (distributivity, shift/mask laws).
+
+use super::*;
+use crate::proput::{forall, Rng};
+
+fn rand_u128(rng: &mut Rng) -> u128 {
+    let hi = rng.next_u64() as u128;
+    let lo = rng.next_u64() as u128;
+    (hi << 64) | lo
+}
+
+#[test]
+fn zero_one_constants() {
+    assert!(U256::ZERO.is_zero());
+    assert_eq!(U256::ONE.as_u64(), 1);
+    assert_eq!(U128::BITS, 128);
+    assert_eq!(U256::BITS, 256);
+}
+
+#[test]
+fn from_as_u128_roundtrip() {
+    forall(0x11, 2000, |rng| {
+        let v = rand_u128(rng);
+        assert_eq!(U128::from_u128(v).as_u128(), v);
+        assert_eq!(U256::from_u128(v).as_u128(), v);
+    });
+}
+
+#[test]
+fn bit_len_matches_u128() {
+    forall(0x12, 2000, |rng| {
+        let v = rand_u128(rng);
+        let expect = 128 - v.leading_zeros();
+        assert_eq!(U128::from_u128(v).bit_len(), expect);
+    });
+    assert_eq!(U256::ZERO.bit_len(), 0);
+    assert_eq!(U256::ONE.bit_len(), 1);
+    let big = U256::ONE.shl(255);
+    assert_eq!(big.bit_len(), 256);
+}
+
+#[test]
+fn shl_shr_match_u128() {
+    forall(0x13, 4000, |rng| {
+        let v = rand_u128(rng);
+        let n = rng.below(128) as u32;
+        let w = U128::from_u128(v);
+        assert_eq!(w.shl(n).as_u128(), v << n, "shl {n}");
+        assert_eq!(w.shr(n).as_u128(), v >> n, "shr {n}");
+    });
+}
+
+#[test]
+fn shr_past_width_is_zero() {
+    let v = U256::from_u128(u128::MAX);
+    assert!(v.shr(256).is_zero());
+    assert!(v.shr(300).is_zero());
+}
+
+#[test]
+fn shl_shr_roundtrip_256() {
+    forall(0x14, 2000, |rng| {
+        let v = rand_u128(rng);
+        let n = rng.below(128) as u32; // keep within range so no bits drop
+        let w = U256::from_u128(v);
+        assert_eq!(w.shl(n).shr(n).as_u128(), v);
+    });
+}
+
+#[test]
+fn add_sub_match_u128() {
+    forall(0x15, 4000, |rng| {
+        let a = rand_u128(rng);
+        let b = rand_u128(rng);
+        let wa = U256::from_u128(a);
+        let wb = U256::from_u128(b);
+        let sum = wa.wrapping_add(&wb);
+        // a + b fits in 129 bits; check low 128 and bit 128.
+        assert_eq!(sum.mask_low(128).as_u128(), a.wrapping_add(b));
+        assert_eq!(sum.bit(128), a.checked_add(b).is_none());
+        // (a+b) - b == a
+        assert_eq!(sum.wrapping_sub(&wb).as_u128(), a);
+    });
+}
+
+#[test]
+fn overflowing_add_carry() {
+    let max = {
+        let mut w = U128::ZERO;
+        w.limbs = [u64::MAX; 2];
+        w
+    };
+    let (sum, carry) = max.overflowing_add(&U128::ONE);
+    assert!(carry);
+    assert!(sum.is_zero());
+}
+
+#[test]
+fn mul_wide_matches_u128_oracle() {
+    forall(0x16, 4000, |rng| {
+        let a = rng.next_u64() as u128;
+        let b = rng.next_u64() as u128;
+        let prod = U128::from_u128(a).mul_wide(&U128::from_u128(b));
+        let w: U256 = prod.into_wide();
+        assert_eq!(w.as_u128(), a * b);
+    });
+}
+
+#[test]
+fn mul_u128_distributive() {
+    // (a + b) * c == a*c + b*c over 256-bit results, with a,b < 2^127 so the
+    // sum does not overflow 128 bits.
+    forall(0x17, 2000, |rng| {
+        let a = rand_u128(rng) >> 1;
+        let b = rand_u128(rng) >> 1;
+        let c = rand_u128(rng);
+        let ab = U128::from_u128(a.wrapping_add(b));
+        let lhs = mul_u128(ab, U128::from_u128(c));
+        let rhs = mul_u128(U128::from_u128(a), U128::from_u128(c))
+            .wrapping_add(&mul_u128(U128::from_u128(b), U128::from_u128(c)));
+        assert_eq!(lhs, rhs);
+    });
+}
+
+#[test]
+fn mul_u128_commutative_and_identity() {
+    forall(0x18, 2000, |rng| {
+        let a = rand_u128(rng);
+        let b = rand_u128(rng);
+        let wa = U128::from_u128(a);
+        let wb = U128::from_u128(b);
+        assert_eq!(mul_u128(wa, wb), mul_u128(wb, wa));
+        assert_eq!(mul_u128(wa, U128::ONE).mask_low(128).as_u128(), a);
+        assert!(mul_u128(wa, U128::ZERO).is_zero());
+    });
+}
+
+#[test]
+fn extract_and_mask() {
+    forall(0x19, 3000, |rng| {
+        let v = rand_u128(rng);
+        let lo = rng.below(120) as u32;
+        let width = rng.range(1, (128 - lo as u64).min(64)) as u32;
+        let w = U128::from_u128(v);
+        let expect = if width == 64 {
+            ((v >> lo) & u64::MAX as u128) as u64
+        } else {
+            ((v >> lo) as u64) & ((1u64 << width) - 1)
+        };
+        assert_eq!(w.extract_u64(lo, width), expect);
+        assert_eq!(w.extract(lo, width).as_u64(), expect);
+    });
+}
+
+#[test]
+fn mask_low_idempotent() {
+    forall(0x1a, 2000, |rng| {
+        let v = rand_u128(rng);
+        let width = rng.below(257) as u32;
+        let w = U256::from_u128(v);
+        let m = w.mask_low(width);
+        assert_eq!(m.mask_low(width), m);
+        // masked value never exceeds width bits
+        assert!(m.bit_len() <= width);
+    });
+}
+
+#[test]
+fn any_below_sticky() {
+    let mut v = U256::ZERO;
+    v.set_bit(10);
+    assert!(!v.any_below(10));
+    assert!(v.any_below(11));
+    assert!(v.any_below(200));
+    assert!(!U256::ZERO.any_below(256));
+}
+
+#[test]
+fn bit_set_get() {
+    forall(0x1b, 1000, |rng| {
+        let i = rng.below(256) as u32;
+        let mut v = U256::ZERO;
+        v.set_bit(i);
+        assert!(v.bit(i));
+        assert_eq!(v.bit_len(), i + 1);
+    });
+}
+
+#[test]
+fn bit_past_width_reads_zero() {
+    let v = U128::from_u128(u128::MAX);
+    assert!(!v.bit(128));
+    assert!(!v.bit(1000));
+}
+
+#[test]
+fn mul_u64_matches_mul_wide() {
+    forall(0x1c, 2000, |rng| {
+        let a = rand_u128(rng) >> 64; // keep to 64 bits so result fits 128
+        let m = rng.next_u64();
+        let w = U128::from_u128(a);
+        let lhs = w.mul_u64(m);
+        let rhs: U256 = w.mul_wide(&U128::from_u64(m)).into_wide();
+        assert_eq!(lhs.as_u128(), rhs.as_u128());
+    });
+}
+
+#[test]
+fn widen_narrow_roundtrip() {
+    forall(0x1d, 1000, |rng| {
+        let v = rand_u128(rng);
+        let w: U128 = U128::from_u128(v);
+        let wide: U256 = w.widen();
+        let back: U128 = wide.narrow();
+        assert_eq!(back, w);
+    });
+}
+
+#[test]
+fn ordering_matches_u128() {
+    forall(0x1e, 2000, |rng| {
+        let a = rand_u128(rng);
+        let b = rand_u128(rng);
+        assert_eq!(U128::from_u128(a).cmp(&U128::from_u128(b)), a.cmp(&b));
+    });
+}
+
+#[test]
+fn to_hex_small_values() {
+    assert_eq!(U128::from_u64(0xabc).to_hex(), "0xabc");
+    assert_eq!(U128::ZERO.to_hex(), "0x0");
+    assert_eq!(
+        U128::from_u128(0x1_0000_0000_0000_0000).to_hex(),
+        "0x10000000000000000"
+    );
+}
+
+#[test]
+fn slice_ops_match_wide() {
+    forall(0x1f, 2000, |rng| {
+        let a = rand_u128(rng);
+        let b = rand_u128(rng) >> 1;
+        let a2 = a >> 1;
+        // add_limbs
+        let mut acc = [a2 as u64, (a2 >> 64) as u64, 0];
+        let addend = [b as u64, (b >> 64) as u64];
+        let carry = add_limbs(&mut acc, &addend);
+        assert_eq!(carry, 0);
+        let sum = acc[0] as u128 | ((acc[1] as u128) << 64);
+        assert_eq!(sum, a2 + b);
+        // sub back
+        let borrow = sub_limbs(&mut acc, &addend);
+        assert_eq!(borrow, 0);
+        let diff = acc[0] as u128 | ((acc[1] as u128) << 64);
+        assert_eq!(diff, a2);
+    });
+}
+
+#[test]
+fn mul_limb_matches_oracle() {
+    forall(0x20, 2000, |rng| {
+        let a = rand_u128(rng);
+        let m = rng.next_u64();
+        let limbs = [a as u64, (a >> 64) as u64];
+        let mut out = [0u64; 3];
+        mul_limb(&limbs, m, &mut out);
+        // Oracle via U128 widening multiply.
+        let oracle = U128::from_u128(a).mul_wide(&U128::from_u64(m));
+        assert_eq!(out[0], oracle.limbs[0]);
+        assert_eq!(out[1], oracle.limbs[1]);
+        assert_eq!(out[2], oracle.limbs[2]);
+    });
+}

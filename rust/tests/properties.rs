@@ -1,0 +1,237 @@
+//! Cross-cutting property tests over the public API: algebraic laws that
+//! must hold across precisions, schemes, rounding modes and backends.
+
+use civp::decomp::{scheme_census, DecompMul, ExecStats, Precision, Scheme, SchemeKind};
+use civp::fpu::{DirectMul, Fp128, Fp32, Fp64, FpClass, RoundMode, DOUBLE, QUAD, SINGLE};
+use civp::proput::{forall, Rng};
+use civp::wideint::{mul_u128, U128};
+
+#[cfg(test)]
+fn rand_bits(rng: &mut Rng, bits: u32) -> U128 {
+    let mut v = U128::ZERO;
+    v.limbs[0] = rng.next_u64();
+    v.limbs[1] = rng.next_u64();
+    v.mask_low(bits)
+}
+
+#[test]
+fn every_scheme_is_exact_for_every_width_exhaustive_small() {
+    // Exhaustive over tiny widths: decomposition must be exact for every
+    // operand pair up to 7 bits (all 16384 pairs), every organization.
+    for width in 1..=7u32 {
+        for kind in SchemeKind::ALL {
+            let s = Scheme::for_int(kind, width);
+            let mut stats = ExecStats::default();
+            for a in 0..(1u64 << width) {
+                for b in 0..(1u64 << width) {
+                    let wa = U128::from_u64(a);
+                    let wb = U128::from_u64(b);
+                    let got = civp::decomp::execute(&s, wa, wb, &mut stats);
+                    assert_eq!(got.as_u128(), (a as u128) * (b as u128), "{} {a}x{b}", s.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn census_matches_exec_stats_for_all_precisions() {
+    // Static census and dynamic execution must agree on what fired.
+    for prec in Precision::ALL {
+        for kind in SchemeKind::ALL {
+            let s = Scheme::new(kind, prec);
+            let census = scheme_census(&s);
+            let mut stats = ExecStats::default();
+            let a = U128::ONE.shl(prec.sig_bits() - 1);
+            civp::decomp::execute(&s, a, a, &mut stats);
+            assert_eq!(stats.tiles, census.total_blocks as u64);
+            assert_eq!(stats.padded_tiles, census.padded_blocks as u64);
+            for (k, n) in &census.by_kind {
+                assert_eq!(stats.ops(*k), *n as u64, "{:?} {:?}", kind, prec);
+            }
+        }
+    }
+}
+
+#[test]
+fn multiplication_sign_laws_all_precisions() {
+    forall(0x600, 2_000, |rng| {
+        // (-a) * b == -(a * b) for finite non-NaN results, all precisions.
+        let a64 = f64::from_bits(rng.nasty_bits64() & !(1 << 63));
+        let b64 = f64::from_bits(rng.nasty_bits64() & !(1 << 63));
+        if a64.is_nan() || b64.is_nan() {
+            return;
+        }
+        let pos = Fp64::from_f64(a64).mul(Fp64::from_f64(b64));
+        let neg = Fp64::from_f64(-a64).mul(Fp64::from_f64(b64));
+        if !pos.is_nan() {
+            assert_eq!(neg.0, pos.0 ^ (1 << 63));
+        }
+        let qa = Fp128::from_f64(a64);
+        let qb = Fp128::from_f64(b64);
+        let qpos = qa.mul(qb);
+        let qneg = Fp128(qa.0 ^ (1u128 << 127)).mul(qb);
+        if !qpos.is_nan() {
+            assert_eq!(qneg.0, qpos.0 ^ (1u128 << 127));
+        }
+    });
+}
+
+#[test]
+fn rounding_mode_ordering_fp128() {
+    // For positive finite products: rdn <= rtz <= rne <= rup, pairwise
+    // within 1 ulp.
+    forall(0x601, 2_000, |rng| {
+        let a = Fp128::from_f64(f64::from_bits(rng.nasty_bits64() & !(1 << 63)));
+        let b = Fp128::from_f64(f64::from_bits(rng.nasty_bits64() & !(1 << 63)));
+        if a.is_nan() || b.is_nan() {
+            return;
+        }
+        let get = |mode| {
+            let (r, _) = a.mul_with(b, mode, &mut DirectMul);
+            r.0
+        };
+        let dn = get(RoundMode::TowardNegative);
+        let tz = get(RoundMode::TowardZero);
+        let ne = get(RoundMode::NearestEven);
+        let up = get(RoundMode::TowardPositive);
+        if Fp128(ne).is_nan() || Fp128(up).class() == FpClass::Infinite {
+            return;
+        }
+        // positive operands: packed-bit order == value order
+        assert!(dn <= tz && tz <= ne && ne <= up, "a={:#x} b={:#x}", a.0, b.0);
+        assert!(up - dn <= 1, "directed modes differ by > 1 ulp");
+    });
+}
+
+#[test]
+fn decomposed_equals_direct_under_every_mode() {
+    forall(0x602, 1_000, |rng| {
+        let mode = RoundMode::ALL[rng.below(5) as usize];
+        let a = Fp64(rng.nasty_bits64());
+        let b = Fp64(rng.nasty_bits64());
+        let (want, wf) = a.mul_with(b, mode, &mut DirectMul);
+        for kind in SchemeKind::ALL {
+            let mut m = DecompMul::new(kind);
+            let (got, gf) = a.mul_with(b, mode, &mut m);
+            if want.is_nan() {
+                assert!(got.is_nan());
+            } else {
+                assert_eq!(got.0, want.0, "{kind:?} {mode:?}");
+            }
+            assert_eq!(gf, wf, "flags must not depend on the multiplier backend");
+        }
+    });
+}
+
+#[test]
+fn flags_consistency_across_precisions() {
+    // overflow -> inexact; underflow -> inexact; exact small-int products
+    // raise nothing.
+    forall(0x603, 3_000, |rng| {
+        let a = Fp64(rng.nasty_bits64());
+        let b = Fp64(rng.nasty_bits64());
+        let (r, f) = a.mul_with(b, RoundMode::NearestEven, &mut DirectMul);
+        if f.overflow {
+            assert!(f.inexact, "overflow implies inexact");
+        }
+        if f.underflow {
+            assert!(f.inexact, "underflow (as flagged) implies inexact");
+        }
+        if f.invalid {
+            assert!(r.is_nan());
+        }
+    });
+    for prec_case in 0..3 {
+        let (x, y) = (3.0f64, 5.0f64);
+        match prec_case {
+            0 => {
+                let (r, f) = Fp32::from_f32(x as f32)
+                    .mul_with(Fp32::from_f32(y as f32), RoundMode::NearestEven, &mut DirectMul);
+                assert_eq!(r.to_f32(), 15.0);
+                assert_eq!(f, Default::default());
+            }
+            1 => {
+                let (r, f) = Fp64::from_f64(x)
+                    .mul_with(Fp64::from_f64(y), RoundMode::NearestEven, &mut DirectMul);
+                assert_eq!(r.to_f64(), 15.0);
+                assert_eq!(f, Default::default());
+            }
+            _ => {
+                let (r, f) = Fp128::from_f64(x)
+                    .mul_with(Fp128::from_f64(y), RoundMode::NearestEven, &mut DirectMul);
+                assert_eq!(r.to_f64_lossy(), 15.0);
+                assert_eq!(f, Default::default());
+            }
+        }
+    }
+}
+
+#[test]
+fn pack_unpack_roundtrip_all_formats() {
+    forall(0x604, 5_000, |rng| {
+        for (fmt, bits) in [(&SINGLE, 32u32), (&DOUBLE, 64), (&QUAD, 128)] {
+            let raw = rand_bits(rng, bits);
+            let u = fmt.unpack(raw);
+            if matches!(u.class, FpClass::Nan) {
+                return; // NaN payloads canonicalize; skip
+            }
+            let repacked = fmt.pack(u.sign, u.exp, u.sig);
+            assert_eq!(repacked, raw, "{} roundtrip", fmt.name);
+        }
+    });
+}
+
+#[test]
+fn quad_monotonicity_samples() {
+    // x -> x*c is monotone in x for positive c (spot-check order preserved).
+    forall(0x605, 1_000, |rng| {
+        let c = Fp128::from_f64((rng.f64() + 0.5) * 1e3);
+        let x1 = rng.f64() * 1e6;
+        let x2 = x1 + rng.f64() * 1e3 + 1e-3;
+        let p1 = Fp128::from_f64(x1).mul(c);
+        let p2 = Fp128::from_f64(x2).mul(c);
+        assert!(p1.0 <= p2.0, "monotonicity: {x1} {x2}");
+    });
+}
+
+#[test]
+fn decomp_exactness_against_wideint_oracle_wide_sweep() {
+    // 128-bit-wide randomized sweep over all integer widths.
+    forall(0x606, 1_500, |rng| {
+        let width = rng.range(8, 128) as u32;
+        let a = {
+            let mut v = rand_bits(rng, width);
+            if v.is_zero() {
+                v = U128::ONE;
+            }
+            v
+        };
+        let b = rand_bits(rng, width);
+        for kind in [SchemeKind::Civp, SchemeKind::Baseline18] {
+            let s = Scheme::for_int(kind, width);
+            let mut stats = ExecStats::default();
+            let got = civp::decomp::execute(&s, a, b, &mut stats);
+            assert_eq!(got, mul_u128(a, b), "{}", s.name);
+            assert!(stats.utilization() > 0.0 && stats.utilization() <= 1.0);
+        }
+    });
+}
+
+#[test]
+fn civp_full_utilization_only_at_native_widths() {
+    // The paper's design point: utilization is 1.0 exactly when operand
+    // widths tile perfectly (24/48/9/33...), below 1.0 otherwise.
+    for width in [24u32, 48, 9, 33, 57, 96] {
+        let c = scheme_census(&Scheme::for_int(SchemeKind::Civp, width));
+        assert!(
+            (c.utilization - 1.0).abs() < 1e-12,
+            "width {width} should tile perfectly, got {}",
+            c.utilization
+        );
+    }
+    for width in [16u32, 25, 50, 113] {
+        let c = scheme_census(&Scheme::for_int(SchemeKind::Civp, width));
+        assert!(c.utilization < 1.0, "width {width} cannot tile perfectly");
+    }
+}
