@@ -1,0 +1,126 @@
+//! §Perf — compiled tile plans vs per-call tile-DAG derivation.
+//!
+//! The paper's tile wiring is static hardware; re-deriving the tile DAG on
+//! every multiplication measures the *planner*, not the architecture. This
+//! bench quantifies the gap on the raw significand product for SP / DP /
+//! QP under every organization, and on the coordinator's batch path.
+//!
+//! Three executors per (scheme, precision):
+//! * `rederive` — `decomp::execute`: walks the chunk lists and allocates
+//!   the tile vector per call (the seed hot path);
+//! * `plan`     — `PlanCache` + `Plan::execute`: flat pre-resolved steps,
+//!   O(1) stats merge, zero allocation;
+//! * `direct`   — the plain widening multiply (lower bound, no
+//!   decomposition at all).
+
+use civp::benchx::{bb, bench, section};
+use civp::coordinator::NativeBackend;
+use civp::decomp::{execute, ExecStats, PlanCache, Precision, Scheme, SchemeKind};
+use civp::fpu::{mul_bits, DirectMul, RoundMode, DOUBLE, QUAD, SINGLE};
+use civp::proput::Rng;
+use civp::wideint::{mul_u128, U128};
+
+
+fn main() {
+    let precisions = [Precision::Single, Precision::Double, Precision::Quad];
+    let kinds = SchemeKind::ALL; // civp + all three baselines
+
+    section("significand product: cached plan vs per-call tile-DAG derivation");
+    let mut verdicts: Vec<(String, f64)> = Vec::new();
+    for prec in precisions {
+        for kind in kinds {
+            let bits = prec.sig_bits();
+            let scheme = Scheme::new(kind, prec);
+            let plan = PlanCache::get(kind, prec);
+            let mut rng = Rng::new(0xBEEF ^ bits as u64);
+            let pairs: Vec<(U128, U128)> =
+                (0..256).map(|_| (rng.sig(bits), rng.sig(bits))).collect();
+            // correctness cross-check before timing (via the batch surface)
+            let mut st = ExecStats::default();
+            let (av, bv): (Vec<U128>, Vec<U128>) = pairs.iter().copied().unzip();
+            let mut products = Vec::new();
+            plan.execute_batch(&av, &bv, &mut st, &mut products);
+            for (i, &(a, b)) in pairs.iter().enumerate() {
+                assert_eq!(products[i], mul_u128(a, b));
+            }
+
+            let label = format!("{}-{}", kind.name(), prec.name());
+            let mut i = 0usize;
+            let mut stats = ExecStats::default();
+            let rederive = bench(&format!("{label:<16} rederive/call"), 2_000, 30, 10_000, || {
+                let (a, b) = pairs[i & 255];
+                i += 1;
+                bb(execute(&scheme, a, b, &mut stats));
+            });
+            let mut i = 0usize;
+            let mut stats = ExecStats::default();
+            let planned = bench(&format!("{label:<16} cached plan"), 2_000, 30, 10_000, || {
+                let (a, b) = pairs[i & 255];
+                i += 1;
+                bb(plan.execute(a, b, &mut stats));
+            });
+            let mut i = 0usize;
+            bench(&format!("{label:<16} direct (oracle)"), 2_000, 30, 10_000, || {
+                let (a, b) = pairs[i & 255];
+                i += 1;
+                bb(mul_u128(a, b));
+            });
+            verdicts.push((label, rederive.ns_per_op_p50 / planned.ns_per_op_p50));
+        }
+    }
+
+    section("coordinator batch path: mul_batch (reused scratch) vs per-call pipeline");
+    for prec in precisions {
+        let fmt = match prec {
+            Precision::Single => &SINGLE,
+            Precision::Double => &DOUBLE,
+            Precision::Quad => &QUAD,
+        };
+        let bits = fmt.total_bits();
+        let mut rng = Rng::new(0xABCD ^ bits as u64);
+        let mask = if bits == 128 { u128::MAX } else { (1u128 << bits) - 1 };
+        let a: Vec<u128> = (0..256)
+            .map(|_| (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & mask)
+            .collect();
+        let b: Vec<u128> = (0..256)
+            .map(|_| (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & mask)
+            .collect();
+
+        let mut be = NativeBackend::new(SchemeKind::Civp);
+        let mut out = Vec::with_capacity(a.len());
+        bench(&format!("{:<8} mul_batch x256", prec.name()), 20, 20, 50, || {
+            be.mul_batch(prec, &a, &b, &mut out).unwrap();
+            bb(out.len());
+        });
+        let mut dm = DirectMul;
+        bench(&format!("{:<8} per-call direct x256", prec.name()), 20, 20, 50, || {
+            let mut fresh: Vec<u128> = Vec::with_capacity(a.len());
+            for i in 0..a.len() {
+                let (bits, _) = mul_bits(
+                    fmt,
+                    U128::from_u128(a[i]),
+                    U128::from_u128(b[i]),
+                    RoundMode::NearestEven,
+                    &mut dm,
+                );
+                fresh.push(bits.as_u128());
+            }
+            bb(fresh.len());
+        });
+    }
+
+    section("verdict: cached plan speedup over per-call derivation (p50)");
+    let mut all_faster = true;
+    for (label, speedup) in &verdicts {
+        println!("{label:<20} {speedup:>6.2}x {}", if *speedup > 1.0 { "faster" } else { "SLOWER" });
+        all_faster &= *speedup > 1.0;
+    }
+    println!(
+        "\n{}",
+        if all_faster {
+            "PASS: cached-plan execution beats tile-DAG re-derivation on every scheme x precision"
+        } else {
+            "FAIL: at least one configuration did not benefit from plan caching"
+        }
+    );
+}

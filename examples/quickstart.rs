@@ -10,9 +10,10 @@
 
 use civp::config::ServiceConfig;
 use civp::coordinator::{BackendChoice, Service};
-use civp::decomp::{scheme_census, DecompMul, Precision, Scheme, SchemeKind};
+use civp::decomp::{scheme_census, DecompMul, ExecStats, PlanCache, Precision, Scheme, SchemeKind};
 use civp::fabric::{schedule_op, CostModel, FabricConfig};
 use civp::fpu::{Fp128, Fp32, Fp64, RoundMode};
+use civp::wideint::U128;
 
 fn main() {
     // ------------------------------------------------------------------
@@ -73,9 +74,28 @@ fn main() {
     );
 
     // ------------------------------------------------------------------
-    // 3. The serving coordinator
+    // 3. Compiled tile plans — the hot path behind every multiply above
     // ------------------------------------------------------------------
-    println!("\n== 3. variable-precision multiplication service ==");
+    println!("\n== 3. compiled tile plans (process-wide cache) ==");
+    for prec in Precision::ALL {
+        let plan = PlanCache::get(SchemeKind::Civp, prec);
+        println!(
+            "{:<7} plan: {} pre-resolved steps for a {}-bit product",
+            prec.name(),
+            plan.steps().len(),
+            plan.width(),
+        );
+    }
+    // A plan executes the exact integer product with no per-call planning:
+    let plan = PlanCache::get(SchemeKind::Civp, Precision::Double);
+    let mut stats = ExecStats::default();
+    let p = plan.execute(U128::from_u64(3 << 50), U128::from_u64(5 << 50), &mut stats);
+    println!("plan.execute(3<<50 x 5<<50) -> {} (stats: {} tiles)", p.to_hex(), stats.tiles);
+
+    // ------------------------------------------------------------------
+    // 4. The serving coordinator
+    // ------------------------------------------------------------------
+    println!("\n== 4. variable-precision multiplication service ==");
     let cfg = ServiceConfig::default();
     let svc = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
     let product = svc.mul_blocking(

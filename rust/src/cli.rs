@@ -3,7 +3,7 @@
 //! Supports `binary <command> [--key value] [--flag]` invocations, which is
 //! all `civp-server` needs.
 
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 use std::collections::BTreeMap;
 
 /// Parsed command line: a positional command plus `--key value` options.

@@ -4,7 +4,7 @@ use super::toml::{parse_toml, TomlValue};
 use crate::decomp::SchemeKind;
 use crate::fabric::FabricKind;
 use crate::trace::WorkloadSpec;
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 

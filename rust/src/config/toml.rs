@@ -6,7 +6,7 @@
 //! scope (a config that needs them should graduate to a real TOML crate
 //! when the build environment has registry access).
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 use std::collections::BTreeMap;
 
 /// A parsed scalar value.

@@ -2,16 +2,27 @@
 //! and the AOT PJRT engine.
 
 use crate::decomp::{DecompMul, ExecStats, Precision, SchemeKind};
-use crate::fpu::{mul_bits, RoundMode, DOUBLE, QUAD, SINGLE};
+use crate::error::{ensure, Result};
+use crate::fpu::{mul_bits_batch, RoundMode, DOUBLE, QUAD, SINGLE};
 use crate::runtime::EngineHandle;
-use crate::wideint::U128;
-use anyhow::Result;
 
 /// A batch executor for one precision class.
+///
+/// `execute` writes into a caller-owned output vector so the worker pool
+/// can reuse one scratch allocation across batches — together with the
+/// process-wide plan cache this makes the batch path allocation-free in
+/// steady state.
 pub trait Backend: Send {
-    /// Multiply packed bit patterns elementwise. All slices have equal
-    /// length; results are packed patterns of the same precision.
-    fn execute(&mut self, precision: Precision, a: &[u128], b: &[u128]) -> Result<Vec<u128>>;
+    /// Multiply packed bit patterns elementwise. `a` and `b` must have
+    /// equal length; `out` is cleared and filled with packed patterns of
+    /// the same precision (one per input pair).
+    fn execute(
+        &mut self,
+        precision: Precision,
+        a: &[u128],
+        b: &[u128],
+        out: &mut Vec<u128>,
+    ) -> Result<()>;
     /// Backend display name.
     fn name(&self) -> &'static str;
     /// Decomposition stats accumulated so far (native backend only).
@@ -41,6 +52,9 @@ impl BackendChoice {
 
 /// Native softfloat backend: the IEEE pipeline with the CIVP (or baseline)
 /// decomposed significand multiplier. Tallies block usage per multiply.
+///
+/// The multiplier executes through the shared [`crate::decomp::PlanCache`],
+/// so every worker in the pool reuses the same compiled tile plans.
 pub struct NativeBackend {
     mul: DecompMul,
 }
@@ -50,28 +64,36 @@ impl NativeBackend {
     pub fn new(kind: SchemeKind) -> NativeBackend {
         NativeBackend { mul: DecompMul::new(kind) }
     }
-}
 
-impl Backend for NativeBackend {
-    fn execute(&mut self, precision: Precision, a: &[u128], b: &[u128]) -> Result<Vec<u128>> {
-        anyhow::ensure!(a.len() == b.len(), "operand length mismatch");
+    /// Multiply one batch, appending packed products to `out` (cleared
+    /// first). Exposed for direct (service-less) batch callers and benches.
+    pub fn mul_batch(
+        &mut self,
+        precision: Precision,
+        a: &[u128],
+        b: &[u128],
+        out: &mut Vec<u128>,
+    ) -> Result<()> {
+        ensure!(a.len() == b.len(), "operand length mismatch");
         let fmt = match precision {
             Precision::Single => &SINGLE,
             Precision::Double => &DOUBLE,
             Precision::Quad => &QUAD,
         };
-        let mut out = Vec::with_capacity(a.len());
-        for (&x, &y) in a.iter().zip(b) {
-            let (bits, _flags) = mul_bits(
-                fmt,
-                U128::from_u128(x),
-                U128::from_u128(y),
-                RoundMode::NearestEven,
-                &mut self.mul,
-            );
-            out.push(bits.as_u128());
-        }
-        Ok(out)
+        mul_bits_batch(fmt, a, b, RoundMode::NearestEven, &mut self.mul, out);
+        Ok(())
+    }
+}
+
+impl Backend for NativeBackend {
+    fn execute(
+        &mut self,
+        precision: Precision,
+        a: &[u128],
+        b: &[u128],
+        out: &mut Vec<u128>,
+    ) -> Result<()> {
+        self.mul_batch(precision, a, b, out)
     }
 
     fn name(&self) -> &'static str {
@@ -97,9 +119,18 @@ impl PjrtBackend {
 }
 
 impl Backend for PjrtBackend {
-    fn execute(&mut self, precision: Precision, a: &[u128], b: &[u128]) -> Result<Vec<u128>> {
-        anyhow::ensure!(a.len() == b.len(), "operand length mismatch");
-        self.handle.mul(precision, a.to_vec(), b.to_vec())
+    fn execute(
+        &mut self,
+        precision: Precision,
+        a: &[u128],
+        b: &[u128],
+        out: &mut Vec<u128>,
+    ) -> Result<()> {
+        ensure!(a.len() == b.len(), "operand length mismatch");
+        let bits = self.handle.mul(precision, a.to_vec(), b.to_vec())?;
+        out.clear();
+        out.extend(bits);
+        Ok(())
     }
 
     fn name(&self) -> &'static str {

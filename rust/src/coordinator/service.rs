@@ -226,29 +226,38 @@ fn worker_loop(precision: Precision, shared: Arc<Shared>, backend: &mut dyn supe
     let responses = shared.metrics.counter("responses_total");
     let batches = shared.metrics.counter("batches_total");
     let errors = shared.metrics.counter("backend_errors");
+    // Per-worker scratch, reused across batches: with the backend writing
+    // into `out` and the significand plans shared via `PlanCache`, the
+    // steady-state batch path performs no allocation (§Perf).
+    let mut a: Vec<u128> = Vec::with_capacity(shared.max_batch);
+    let mut b: Vec<u128> = Vec::with_capacity(shared.max_batch);
+    let mut out: Vec<u128> = Vec::with_capacity(shared.max_batch);
     while let Some(batch) = shared.batchers[&precision].next_batch(shared.max_batch, shared.linger)
     {
         let n = batch.len();
         bsize.record(n as u64);
         batches.inc();
-        let a: Vec<u128> = batch.iter().map(|i| i.req.a).collect();
-        let b: Vec<u128> = batch.iter().map(|i| i.req.b).collect();
-        match backend.execute(precision, &a, &b) {
-            Ok(bits) => {
+        a.clear();
+        a.extend(batch.iter().map(|i| i.req.a));
+        b.clear();
+        b.extend(batch.iter().map(|i| i.req.b));
+        match backend.execute(precision, &a, &b, &mut out) {
+            Ok(()) => {
+                debug_assert_eq!(out.len(), n, "backend produced wrong batch size");
                 // Account the ops *before* releasing replies so a client
                 // that observed its response also observes the op in
                 // `fabric_report`.
                 let class = OpClass { precision, organization: shared.scheme };
                 *shared.op_counts.lock().unwrap().entry(class).or_insert(0) += n as u64;
                 let now = Instant::now();
-                for (item, out) in batch.into_iter().zip(bits) {
+                for (item, &bits) in batch.into_iter().zip(out.iter()) {
                     let latency = now.duration_since(item.req.enqueued).as_nanos() as u64;
                     lat.record(latency);
                     responses.inc();
                     // Receiver may have given up; ignore send failures.
                     let _ = item.reply.send(Response {
                         id: item.req.id,
-                        bits: out,
+                        bits,
                         latency_ns: latency,
                         batch_size: n as u32,
                     });
@@ -256,7 +265,11 @@ fn worker_loop(precision: Precision, shared: Arc<Shared>, backend: &mut dyn supe
             }
             Err(e) => {
                 errors.inc();
-                log::error!("backend {} failed on {} batch: {e:#}", backend.name(), precision.name());
+                eprintln!(
+                    "civp worker: backend {} failed on {} batch: {e:#}",
+                    backend.name(),
+                    precision.name()
+                );
                 // Drop replies: receivers observe a closed channel.
             }
         }

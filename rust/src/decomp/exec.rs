@@ -1,10 +1,12 @@
 //! Exact tiled execution of a partition scheme, and the [`DecompMul`]
 //! adapter that plugs decomposed multiplication into the IEEE pipeline.
 
-use super::scheme::{BlockKind, Precision, Scheme, SchemeKind, Tile};
+use super::plan::{Plan, PlanCache};
+use super::scheme::{BlockKind, Scheme, SchemeKind, Tile};
 use crate::fpu::SigMultiplier;
 use crate::wideint::{U128, U256};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Accounting from executed tile multiplications.
 ///
@@ -72,9 +74,10 @@ pub fn execute(scheme: &Scheme, a: U128, b: U128, stats: &mut ExecStats) -> U256
     execute_tiles(&scheme.tiles(), scheme.eff_bits, a, b, stats)
 }
 
-/// Tile-level executor used by both [`execute`] and the tile-caching
-/// [`DecompMul`] hot path (§Perf: avoids regenerating the tile vector per
-/// multiplication).
+/// Tile-level executor used by [`execute`] and by [`Plan`] compilation
+/// (which runs it once to precompute the per-multiply stats delta). The
+/// multiply hot path itself goes through [`Plan::execute`], which mirrors
+/// this loop over pre-resolved steps.
 pub fn execute_tiles(
     tiles: &[Tile],
     eff_bits: u32,
@@ -99,53 +102,61 @@ pub fn execute_tiles(
         stats.useful_bitops += (tile.eff_a * tile.eff_b) as u64;
         stats.capacity_bitops += tile.kind.capacity() as u64;
         let prod = (pa as u128) * (pb as u128);
-        // Accumulate prod << (off_a + off_b) without building a temporary
-        // U256: the shifted 50-bit product spans at most two 64-bit limbs
-        // (three when the in-limb shift wraps) — add limb-wise with carry.
         let off = tile.off_a + tile.off_b;
-        let limb = (off / 64) as usize;
-        let shift = off % 64;
-        let parts = [
-            (prod << shift) as u64,
-            (prod >> (64 - shift).min(127)) as u64, // shift==0 -> prod>>64
-            if shift == 0 { 0 } else { (prod >> (128 - shift)) as u64 },
-        ];
-        let mut carry = false;
-        for (i, &p) in parts.iter().enumerate() {
-            let idx = limb + i;
-            if idx < 4 {
-                let (v, c1) = acc.limbs[idx].overflowing_add(p);
-                let (v, c2) = v.overflowing_add(carry as u64);
-                acc.limbs[idx] = v;
-                carry = c1 || c2;
-            } else {
-                debug_assert!(p == 0 && !carry, "accumulator overflow");
-            }
-        }
-        if carry && limb + 3 < 4 {
-            acc.limbs[limb + 3] = acc.limbs[limb + 3].wrapping_add(1);
-        }
+        accumulate_shifted(&mut acc, prod, (off / 64) as usize, off % 64);
     }
     stats.tiles += tiles.len() as u64;
     stats.muls += 1;
     acc
 }
 
+/// Accumulate `prod << (64*limb + shift)` into `acc` without building a
+/// temporary `U256`: the shifted ≤50-bit product spans at most two 64-bit
+/// limbs (three when the in-limb shift wraps) — add limb-wise with carry.
+///
+/// The shared inner kernel of [`execute_tiles`] and [`Plan::execute`]
+/// (`shift < 64`).
+#[inline]
+pub(crate) fn accumulate_shifted(acc: &mut U256, prod: u128, limb: usize, shift: u32) {
+    let parts = [
+        (prod << shift) as u64,
+        (prod >> (64 - shift).min(127)) as u64, // shift==0 -> prod>>64
+        if shift == 0 { 0 } else { (prod >> (128 - shift)) as u64 },
+    ];
+    let mut carry = false;
+    for (i, &p) in parts.iter().enumerate() {
+        let idx = limb + i;
+        if idx < 4 {
+            let (v, c1) = acc.limbs[idx].overflowing_add(p);
+            let (v, c2) = v.overflowing_add(carry as u64);
+            acc.limbs[idx] = v;
+            carry = c1 || c2;
+        } else {
+            debug_assert!(p == 0 && !carry, "accumulator overflow");
+        }
+    }
+    if carry && limb + 3 < 4 {
+        acc.limbs[limb + 3] = acc.limbs[limb + 3].wrapping_add(1);
+    }
+}
+
 /// A [`SigMultiplier`] that computes significand products through a
 /// partition scheme, tallying simulated FPGA block usage — drop-in for the
 /// IEEE pipeline so CIVP (and baselines) run real FP multiplications.
 ///
-/// §Perf: the scheme *and its tile vector* are cached per operand width —
-/// the paper's point is precisely that the tile wiring is static hardware,
-/// so regenerating it per multiplication would be both slow and unfaithful.
+/// §Perf: products execute through compiled [`Plan`]s shared process-wide
+/// via [`PlanCache`] — the paper's point is precisely that the tile wiring
+/// is static hardware, so re-deriving the tile DAG per multiplication
+/// would be both slow and unfaithful. The adapter holds `Arc` handles in
+/// fast slots for the three IEEE widths, so the hot path is an array index,
+/// not a hash lookup.
 #[derive(Clone, Debug)]
 pub struct DecompMul {
     kind: SchemeKind,
-    /// Fast slots for the three IEEE widths (24 / 53 / 113) — no hashing
-    /// on the hot path.
-    ieee: [Option<Box<(Scheme, Vec<Tile>)>>; 3],
-    /// Cached (scheme, tiles) for other (integer) widths.
-    schemes: HashMap<u32, (Scheme, Vec<Tile>)>,
+    /// Fast slots for the three IEEE widths (24 / 53 / 113).
+    ieee: [Option<Arc<Plan>>; 3],
+    /// Cached plans for other (integer) widths.
+    plans: HashMap<u32, Arc<Plan>>,
     /// Accumulated usage across all multiplications.
     pub stats: ExecStats,
     /// Cross-check every product against the direct widening multiply
@@ -170,7 +181,7 @@ impl DecompMul {
         DecompMul {
             kind,
             ieee: [None, None, None],
-            schemes: HashMap::new(),
+            plans: HashMap::new(),
             stats: ExecStats::default(),
             verify: false,
         }
@@ -183,31 +194,26 @@ impl DecompMul {
         m
     }
 
-    fn build_entry(kind: SchemeKind, width: u32) -> (Scheme, Vec<Tile>) {
-        // IEEE significand widths get the paper's exact partitions; any
-        // other width is served as an integer scheme.
-        let scheme = match width {
-            24 => Scheme::new(kind, Precision::Single),
-            53 => Scheme::new(kind, Precision::Double),
-            113 => Scheme::new(kind, Precision::Quad),
-            w => Scheme::for_int(kind, w),
-        };
-        let tiles = scheme.tiles();
-        (scheme, tiles)
-    }
-
     #[inline]
-    fn entry_for(&mut self, width: u32) -> &(Scheme, Vec<Tile>) {
+    fn entry_for(&mut self, width: u32) -> &Arc<Plan> {
         let kind = self.kind;
         if let Some(slot) = ieee_slot(width) {
-            return self.ieee[slot].get_or_insert_with(|| Box::new(Self::build_entry(kind, width)));
+            if self.ieee[slot].is_none() {
+                self.ieee[slot] = Some(PlanCache::get_width(kind, width));
+            }
+            return self.ieee[slot].as_ref().expect("slot populated above");
         }
-        self.schemes.entry(width).or_insert_with(|| Self::build_entry(kind, width))
+        self.plans.entry(width).or_insert_with(|| PlanCache::get_width(kind, width))
+    }
+
+    /// The shared compiled plan used for a given operand width.
+    pub fn plan_for(&mut self, width: u32) -> Arc<Plan> {
+        self.entry_for(width).clone()
     }
 
     /// The scheme used for a given operand width.
     pub fn scheme_for(&mut self, width: u32) -> &Scheme {
-        &self.entry_for(width).0
+        self.entry_for(width).scheme()
     }
 
     /// Reset accumulated stats.
@@ -218,15 +224,10 @@ impl DecompMul {
 
 impl SigMultiplier for DecompMul {
     fn mul_sig(&mut self, a: U128, b: U128, width: u32) -> U256 {
-        self.entry_for(width); // ensure populated
         // Take stats out to split the borrow (ExecStats is plain counters —
         // the take is free).
         let mut stats = std::mem::take(&mut self.stats);
-        let (scheme, tiles) = match ieee_slot(width) {
-            Some(slot) => self.ieee[slot].as_deref().expect("entry populated above"),
-            None => self.schemes.get(&width).expect("entry populated above"),
-        };
-        let out = execute_tiles(tiles, scheme.eff_bits, a, b, &mut stats);
+        let out = self.entry_for(width).execute(a, b, &mut stats);
         self.stats = stats;
         if self.verify {
             let oracle = crate::wideint::mul_u128(a, b);

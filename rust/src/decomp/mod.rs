@@ -14,13 +14,23 @@
 //! claims are about. [`exec::DecompMul`] plugs that into the IEEE pipeline
 //! in [`crate::fpu`], so every decomposition is validated against hardware
 //! floating point, reproducing the paper's ModelSim functional check.
+//!
+//! The multiply hot path does **not** re-derive the tile DAG per call: the
+//! [`plan`] layer compiles each `(SchemeKind, width)` pair once into a flat
+//! [`Plan`] and memoizes it process-wide in [`PlanCache`], so repeated
+//! multiplications run straight over pre-resolved offsets — the software
+//! analogue of the tile wiring being static hardware. Batches amortize the
+//! lookup through [`crate::fpu::mul_bits_batch`] (IEEE path) or
+//! [`Plan::execute_batch`] (raw significand products).
 
 pub mod analysis;
 pub mod exec;
+pub mod plan;
 pub mod scheme;
 #[cfg(test)]
 mod tests;
 
 pub use analysis::{scheme_census, AnalysisRow, BlockCensus};
 pub use exec::{execute, DecompMul, ExecStats};
+pub use plan::{Plan, PlanCache, PlanStep};
 pub use scheme::{BlockKind, Precision, Scheme, SchemeKind, Tile};

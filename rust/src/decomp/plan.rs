@@ -1,0 +1,269 @@
+//! Compiled tile plans: the decomposition hot path without the planner.
+//!
+//! [`Scheme::tiles`] re-derives the partial-product tile DAG — a `Vec` of
+//! [`super::scheme::Tile`]s with per-tile block assignment — every time it
+//! is called. That is fine for static analysis, but executing multiplies
+//! through it makes every measurement an *interpreter* benchmark: each
+//! operation pays the chunk-walk, the allocation and the per-tile stats
+//! arithmetic, none of which exist in the hardware the paper describes
+//! (the tile wiring is static).
+//!
+//! A [`Plan`] lowers one `(SchemeKind, width)` pair **once** into a flat,
+//! allocation-free execution recipe:
+//!
+//! * a contiguous array of [`PlanStep`]s with pre-resolved chunk offsets /
+//!   widths and pre-split accumulator limb/shift positions (no division on
+//!   the execute path);
+//! * a precomputed per-multiplication [`ExecStats`] delta, so executing a
+//!   plan does one `merge` instead of five counter updates per tile.
+//!
+//! [`PlanCache`] memoizes plans process-wide, keyed by scheme × precision
+//! (lock-free `OnceLock` fast slots for the 12 IEEE combinations, an
+//! `RwLock`ed map for arbitrary integer widths). Everything that multiplies
+//! in a loop — [`super::DecompMul`], the coordinator's native backend, the
+//! benches — shares the same compiled plans.
+
+use super::exec::{accumulate_shifted, execute_tiles, ExecStats};
+use super::scheme::{Precision, Scheme, SchemeKind};
+use crate::wideint::{U128, U256};
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// One pre-resolved partial-product step of a [`Plan`].
+///
+/// Compared to [`super::scheme::Tile`] this carries only what the execute
+/// loop reads, with the accumulator position pre-split into a limb index
+/// and an in-limb shift.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanStep {
+    /// Bit offset of the A chunk.
+    pub off_a: u32,
+    /// Chunk width drawn from A.
+    pub wa: u32,
+    /// Bit offset of the B chunk.
+    pub off_b: u32,
+    /// Chunk width drawn from B.
+    pub wb: u32,
+    /// Accumulator limb index of `off_a + off_b`.
+    pub limb: u32,
+    /// In-limb bit shift of `off_a + off_b`.
+    pub shift: u32,
+}
+
+/// A compiled, allocation-free execution plan for one scheme.
+///
+/// Built once by [`Plan::compile`] (usually through [`PlanCache`]), then
+/// executed any number of times with [`Plan::execute`]. Execution is
+/// bit-identical to [`super::execute`] over the same scheme — the property
+/// tests in `tests/plan_equiv.rs` pin this against `DirectMul` for every
+/// scheme × precision pair.
+///
+/// ```
+/// use civp::decomp::{ExecStats, PlanCache, Precision, SchemeKind};
+/// use civp::wideint::U128;
+///
+/// let plan = PlanCache::get(SchemeKind::Civp, Precision::Double);
+/// let mut stats = ExecStats::default();
+/// let product = plan.execute(U128::from_u64(3), U128::from_u64(5), &mut stats);
+/// assert_eq!(product.as_u64(), 15);
+/// assert_eq!(stats.muls, 1);
+/// assert_eq!(stats.tiles, 9); // Fig. 2(b): nine blocks per DP multiply
+/// ```
+#[derive(Clone, Debug)]
+pub struct Plan {
+    scheme: Scheme,
+    steps: Box<[PlanStep]>,
+    per_mul: ExecStats,
+}
+
+impl Plan {
+    /// Lower a scheme into a flat plan. This is the only place the tile
+    /// DAG is walked; every subsequent [`Plan::execute`] runs straight over
+    /// the step array.
+    pub fn compile(scheme: Scheme) -> Plan {
+        let tiles = scheme.tiles();
+        // One multiplication's worth of accounting. The stats a tile set
+        // produces do not depend on operand values, so running the tile
+        // executor once on zeros yields the exact per-multiply delta
+        // (including `muls = 1`).
+        let mut per_mul = ExecStats::default();
+        let _ = execute_tiles(&tiles, scheme.eff_bits, U128::ZERO, U128::ZERO, &mut per_mul);
+        let steps: Vec<PlanStep> = tiles
+            .iter()
+            .map(|t| {
+                let off = t.off_a + t.off_b;
+                PlanStep {
+                    off_a: t.off_a,
+                    wa: t.wa,
+                    off_b: t.off_b,
+                    wb: t.wb,
+                    limb: off / 64,
+                    shift: off % 64,
+                }
+            })
+            .collect();
+        Plan { scheme, steps: steps.into_boxed_slice(), per_mul }
+    }
+
+    /// The scheme this plan was compiled from.
+    pub fn scheme(&self) -> &Scheme {
+        &self.scheme
+    }
+
+    /// Organization family.
+    pub fn kind(&self) -> SchemeKind {
+        self.scheme.kind
+    }
+
+    /// Real operand width in bits.
+    pub fn width(&self) -> u32 {
+        self.scheme.eff_bits
+    }
+
+    /// The compiled steps (one per dedicated-block firing).
+    pub fn steps(&self) -> &[PlanStep] {
+        &self.steps
+    }
+
+    /// The precomputed stats delta one execution contributes.
+    pub fn per_mul_stats(&self) -> &ExecStats {
+        &self.per_mul
+    }
+
+    /// Execute `a × b` exactly through the compiled plan, accumulating
+    /// block usage into `stats`. `a, b < 2^self.width()`.
+    ///
+    /// Identical dataflow to [`super::exec::execute_tiles`] — each step is
+    /// one dedicated-block multiplication, shift-accumulated limb-wise —
+    /// but with no tile vector, no per-step stats arithmetic and no
+    /// offset division.
+    pub fn execute(&self, a: U128, b: U128, stats: &mut ExecStats) -> U256 {
+        debug_assert!(a.bit_len() <= self.scheme.eff_bits, "operand A wider than plan");
+        debug_assert!(b.bit_len() <= self.scheme.eff_bits, "operand B wider than plan");
+        let mut acc = U256::ZERO;
+        for step in self.steps.iter() {
+            let pa = a.extract_u64(step.off_a, step.wa);
+            let pb = b.extract_u64(step.off_b, step.wb);
+            let prod = (pa as u128) * (pb as u128);
+            accumulate_shifted(&mut acc, prod, step.limb as usize, step.shift);
+        }
+        stats.merge(&self.per_mul);
+        acc
+    }
+
+    /// Execute a whole batch of raw significand products through the
+    /// plan, appending them to `out` (cleared first). Zero allocations
+    /// beyond `out`'s (reusable) capacity.
+    ///
+    /// This is the raw-integer batch surface (used by the benches and by
+    /// direct integer-multiply callers). The coordinator's IEEE batch
+    /// path amortizes the plan differently: one
+    /// [`crate::fpu::mul_bits_batch`] call per batch, whose
+    /// [`super::DecompMul`] resolves the cached plan through an O(1)
+    /// fast slot per element.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `a` and `b` have different lengths.
+    pub fn execute_batch(
+        &self,
+        a: &[U128],
+        b: &[U128],
+        stats: &mut ExecStats,
+        out: &mut Vec<U256>,
+    ) {
+        assert_eq!(a.len(), b.len(), "operand length mismatch");
+        out.clear();
+        out.reserve(a.len());
+        for (&x, &y) in a.iter().zip(b) {
+            out.push(self.execute(x, y, stats));
+        }
+    }
+}
+
+/// Process-wide cache of compiled [`Plan`]s, keyed by scheme × width.
+///
+/// The 12 IEEE combinations (4 [`SchemeKind`]s × 3 [`Precision`]s) live in
+/// static `OnceLock` slots — after first use a lookup is one atomic load
+/// and an `Arc` clone. Integer widths go through an `RwLock`ed map.
+///
+/// ```
+/// use civp::decomp::{PlanCache, Precision, SchemeKind};
+/// use std::sync::Arc;
+///
+/// let a = PlanCache::get(SchemeKind::Civp, Precision::Quad);
+/// let b = PlanCache::get(SchemeKind::Civp, Precision::Quad);
+/// assert!(Arc::ptr_eq(&a, &b)); // compiled once, shared process-wide
+/// assert_eq!(a.steps().len(), 36); // Fig. 4: 36 blocks per quad multiply
+/// ```
+pub struct PlanCache {
+    _private: (),
+}
+
+/// `const` initializer for the static slot array (usable on rustc versions
+/// without inline-const array repetition).
+#[allow(clippy::declare_interior_mutable_const)]
+const EMPTY_SLOT: OnceLock<Arc<Plan>> = OnceLock::new();
+
+/// Fast slots: `kind_index * 3 + precision_index`.
+static IEEE_PLANS: [OnceLock<Arc<Plan>>; 12] = [EMPTY_SLOT; 12];
+
+/// Plans for non-IEEE (integer) widths.
+static INT_PLANS: OnceLock<RwLock<HashMap<(SchemeKind, u32), Arc<Plan>>>> = OnceLock::new();
+
+fn kind_index(kind: SchemeKind) -> usize {
+    match kind {
+        SchemeKind::Civp => 0,
+        SchemeKind::Baseline18 => 1,
+        SchemeKind::Baseline25x18 => 2,
+        SchemeKind::Baseline9 => 3,
+    }
+}
+
+fn prec_index(prec: Precision) -> usize {
+    match prec {
+        Precision::Single => 0,
+        Precision::Double => 1,
+        Precision::Quad => 2,
+    }
+}
+
+impl PlanCache {
+    /// The shared plan for an IEEE precision (compiled on first use).
+    pub fn get(kind: SchemeKind, prec: Precision) -> Arc<Plan> {
+        let slot = &IEEE_PLANS[kind_index(kind) * 3 + prec_index(prec)];
+        slot.get_or_init(|| Arc::new(Plan::compile(Scheme::new(kind, prec)))).clone()
+    }
+
+    /// The shared plan for an arbitrary operand width. IEEE significand
+    /// widths (24 / 53 / 113) route to the paper's exact partitions via
+    /// [`PlanCache::get`]; anything else compiles an integer scheme.
+    pub fn get_width(kind: SchemeKind, width: u32) -> Arc<Plan> {
+        match width {
+            24 => Self::get(kind, Precision::Single),
+            53 => Self::get(kind, Precision::Double),
+            113 => Self::get(kind, Precision::Quad),
+            w => {
+                let map = INT_PLANS.get_or_init(|| RwLock::new(HashMap::new()));
+                if let Some(p) = map.read().unwrap().get(&(kind, w)) {
+                    return p.clone();
+                }
+                // Compile outside the write lock; a racing thread's entry
+                // wins via the `or_insert` below, so all callers still
+                // share one plan.
+                let plan = Arc::new(Plan::compile(Scheme::for_int(kind, w)));
+                map.write().unwrap().entry((kind, w)).or_insert(plan).clone()
+            }
+        }
+    }
+
+    /// Number of IEEE fast slots populated so far (diagnostics).
+    pub fn ieee_cached() -> usize {
+        IEEE_PLANS.iter().filter(|s| s.get().is_some()).count()
+    }
+
+    /// Number of integer-width plans cached so far (diagnostics).
+    pub fn int_cached() -> usize {
+        INT_PLANS.get().map(|m| m.read().unwrap().len()).unwrap_or(0)
+    }
+}

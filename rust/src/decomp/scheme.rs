@@ -61,6 +61,16 @@ impl BlockKind {
 }
 
 /// The three IEEE precisions the paper targets.
+///
+/// ```
+/// use civp::decomp::Precision;
+///
+/// // Significand widths (with the hidden bit) drive every block-count
+/// // claim in the paper: 24 / 53 / 113 bits.
+/// assert_eq!(Precision::Single.sig_bits(), 24);
+/// assert_eq!(Precision::Double.sig_bits(), 53);
+/// assert_eq!(Precision::Quad.sig_bits(), 113);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Precision {
     /// binary32 — 24-bit significand.
@@ -168,6 +178,24 @@ impl Tile {
 }
 
 /// A complete partition scheme for one `W x W` significand multiplication.
+///
+/// ```
+/// use civp::decomp::{BlockKind, Precision, Scheme, SchemeKind};
+///
+/// // Fig. 2: a double-precision operand (53 bits) pads to 57 = 24+24+9,
+/// // so the product needs 3x3 = 9 dedicated blocks.
+/// let s = Scheme::new(SchemeKind::Civp, Precision::Double);
+/// assert_eq!(s.padded_bits, 57);
+/// assert_eq!(s.a_chunks, vec![24, 24, 9]);
+/// let tiles = s.tiles();
+/// assert_eq!(tiles.len(), 9);
+/// assert_eq!(tiles.iter().filter(|t| t.kind == BlockKind::M24x24).count(), 4);
+///
+/// // The same blocks serve plain integer multiplication ("combined
+/// // integer"): a 48-bit operand tiles two 24-bit chunks exactly.
+/// let i = Scheme::for_int(SchemeKind::Civp, 48);
+/// assert_eq!(i.padded_bits, 48);
+/// ```
 #[derive(Clone, Debug)]
 pub struct Scheme {
     /// e.g. "civp-double".

@@ -7,17 +7,6 @@ use crate::fpu::{DirectMul, Fp128, Fp32, Fp64, RoundMode};
 use crate::proput::forall;
 use crate::wideint::{mul_u128, U128};
 
-fn rand_sig(rng: &mut crate::proput::Rng, bits: u32) -> U128 {
-    // Uniform `bits`-wide value with the top (hidden) bit always set, like a
-    // normalized significand.
-    let mut v = U128::ZERO;
-    for limb in 0..2 {
-        v.limbs[limb] = rng.next_u64();
-    }
-    let mut v = v.mask_low(bits);
-    v.set_bit(bits - 1);
-    v
-}
 
 // ---------------------------------------------------------------------
 // Paper figure block counts (E2, E3, E4)
@@ -178,8 +167,8 @@ fn execute_exact_all_schemes_all_precisions() {
         for prec in Precision::ALL {
             for kind in SchemeKind::ALL {
                 let s = Scheme::new(kind, prec);
-                let a = rand_sig(rng, prec.sig_bits());
-                let b = rand_sig(rng, prec.sig_bits());
+                let a = rng.sig(prec.sig_bits());
+                let b = rng.sig(prec.sig_bits());
                 let mut stats = ExecStats::default();
                 let got = execute(&s, a, b, &mut stats);
                 assert_eq!(got, mul_u128(a, b), "{} exactness", s.name);
@@ -197,8 +186,8 @@ fn execute_exact_integer_widths() {
         let width = rng.range(2, 128) as u32;
         for kind in SchemeKind::ALL {
             let s = Scheme::for_int(kind, width);
-            let a = rand_sig(rng, width);
-            let b = rand_sig(rng, width);
+            let a = rng.sig(width);
+            let b = rng.sig(width);
             let mut stats = ExecStats::default();
             let got = execute(&s, a, b, &mut stats);
             assert_eq!(got, mul_u128(a, b), "{} width={width}", s.name);
@@ -308,6 +297,69 @@ fn analysis_full_table_shape() {
         .find(|r| r.precision == Precision::Quad && r.kind == SchemeKind::Civp)
         .unwrap();
     assert_eq!(qp_civp.census.total_blocks, 36);
+}
+
+// ---------------------------------------------------------------------
+// Compiled plans (the hot-path lowering)
+// ---------------------------------------------------------------------
+
+#[test]
+fn plan_steps_mirror_tiles() {
+    for prec in Precision::ALL {
+        for kind in SchemeKind::ALL {
+            let scheme = Scheme::new(kind, prec);
+            let tiles = scheme.tiles();
+            let plan = Plan::compile(scheme);
+            assert_eq!(plan.steps().len(), tiles.len());
+            for (s, t) in plan.steps().iter().zip(&tiles) {
+                assert_eq!((s.off_a, s.wa, s.off_b, s.wb), (t.off_a, t.wa, t.off_b, t.wb));
+                let off = t.off_a + t.off_b;
+                assert_eq!(s.limb, off / 64);
+                assert_eq!(s.shift, off % 64);
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_per_mul_stats_are_one_multiply() {
+    let plan = PlanCache::get(SchemeKind::Civp, Precision::Double);
+    let pm = plan.per_mul_stats();
+    assert_eq!(pm.muls, 1);
+    assert_eq!(pm.tiles, 9);
+    assert_eq!(pm.ops(BlockKind::M24x24), 4);
+    assert_eq!(pm.ops(BlockKind::M24x9), 4);
+    assert_eq!(pm.ops(BlockKind::M9x9), 1);
+    // Executing twice merges the delta twice.
+    let mut stats = ExecStats::default();
+    let a = U128::ONE.shl(52);
+    plan.execute(a, a, &mut stats);
+    plan.execute(a, a, &mut stats);
+    assert_eq!(stats.muls, 2);
+    assert_eq!(stats.tiles, 18);
+}
+
+#[test]
+fn decomp_mul_shares_cached_plans() {
+    let mut m1 = DecompMul::new(SchemeKind::Civp);
+    let mut m2 = DecompMul::new(SchemeKind::Civp);
+    assert!(std::sync::Arc::ptr_eq(&m1.plan_for(53), &m2.plan_for(53)));
+    assert_eq!(m1.scheme_for(53).padded_bits, 57);
+}
+
+#[test]
+fn plan_exact_for_random_sigs_every_scheme() {
+    forall(0x210, 1_000, |rng| {
+        for prec in Precision::ALL {
+            for kind in SchemeKind::ALL {
+                let plan = PlanCache::get(kind, prec);
+                let a = rng.sig(prec.sig_bits());
+                let b = rng.sig(prec.sig_bits());
+                let mut stats = ExecStats::default();
+                assert_eq!(plan.execute(a, b, &mut stats), mul_u128(a, b), "{:?} {:?}", kind, prec);
+            }
+        }
+    });
 }
 
 #[test]

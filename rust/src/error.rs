@@ -1,0 +1,182 @@
+//! Minimal error substrate (offline build — no `anyhow`).
+//!
+//! Provides the subset of `anyhow`'s surface the crate uses: a type-erased
+//! [`Error`] carrying a context chain, the [`Result`] alias, the
+//! [`Context`] extension trait for `Result`/`Option`, and the [`bail!`],
+//! [`ensure!`] and [`err!`] macros. Formatting mirrors `anyhow`: plain
+//! `{}` prints the outermost context, alternate `{:#}` prints the whole
+//! chain separated by `": "`.
+
+use std::fmt;
+
+/// A type-erased error: an ordered chain of messages, outermost context
+/// first, root cause last.
+///
+/// Deliberately does **not** implement [`std::error::Error`]; that is what
+/// permits the blanket `From<E: std::error::Error>` conversion used by the
+/// `?` operator (the same design decision `anyhow` makes).
+pub struct Error {
+    /// Outermost context first, root cause last. Never empty.
+    chain: Vec<String>,
+}
+
+/// Crate-wide result alias (error type defaults to [`Error`]).
+pub type Result<T, E = Error> = core::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a single message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { chain: vec![msg.into()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// Iterate the context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `context` / `with_context` to `Result` and
+/// `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Attach a context message, converting to [`Result<T>`].
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for core::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for core::result::Result<T, Error> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.context(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string (the `anyhow!` equivalent).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+pub use crate::{bail, ensure, err};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/forever").context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chain_formats_like_anyhow() {
+        let e = io_fail().unwrap_err();
+        let plain = format!("{e}");
+        let full = format!("{e:#}");
+        assert_eq!(plain, "reading config");
+        assert!(full.starts_with("reading config: "), "{full}");
+        assert!(full.len() > plain.len());
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("seven is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(7).unwrap_err()), "seven is right out");
+        let e = err!("v={}", 5);
+        assert_eq!(e.root_cause(), "v=5");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| "missing thing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+    }
+}

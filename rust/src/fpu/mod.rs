@@ -25,5 +25,5 @@ mod golden;
 
 pub use format::{FpClass, FpFormat, Unpacked, DOUBLE, QUAD, SINGLE};
 pub use round::RoundMode;
-pub use softfp::{mul_bits, DirectMul, Flags, SigMultiplier};
+pub use softfp::{mul_bits, mul_bits_batch, DirectMul, Flags, SigMultiplier};
 pub use types::{Fp128, Fp32, Fp64};

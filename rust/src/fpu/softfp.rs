@@ -164,3 +164,38 @@ pub fn mul_bits(
 
     (fmt.pack(sign, exp, sig128), flags)
 }
+
+/// Multiply a whole batch of packed values elementwise, writing the packed
+/// products into `out` (cleared first) and returning the union of the
+/// exception flags raised.
+///
+/// This is the coordinator's batch entry point: one call amortizes the
+/// multiplier's plan lookup and lets the caller reuse `out`'s allocation
+/// across batches (the worker pool keeps one scratch vector per worker).
+/// Operand patterns travel in the low bits of `u128` regardless of
+/// precision, mirroring [`crate::coordinator::Request`].
+///
+/// # Panics
+///
+/// Panics if `a` and `b` have different lengths — callers with untrusted
+/// input validate first (the coordinator's `Backend::execute` guards with
+/// an error before reaching this point).
+pub fn mul_bits_batch(
+    fmt: &FpFormat,
+    a: &[u128],
+    b: &[u128],
+    mode: RoundMode,
+    m: &mut dyn SigMultiplier,
+    out: &mut Vec<u128>,
+) -> Flags {
+    assert_eq!(a.len(), b.len(), "operand length mismatch");
+    out.clear();
+    out.reserve(a.len());
+    let mut flags = Flags::default();
+    for (&x, &y) in a.iter().zip(b) {
+        let (bits, f) = mul_bits(fmt, U128::from_u128(x), U128::from_u128(y), mode, m);
+        flags.merge(f);
+        out.push(bits.as_u128());
+    }
+    flags
+}

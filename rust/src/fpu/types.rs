@@ -49,7 +49,7 @@ macro_rules! common_impl {
 
 /// IEEE binary32 value carried as raw bits.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub struct Fp32(pub u32);
+pub struct Fp32(/** Raw IEEE binary32 bit pattern. */ pub u32);
 
 impl Fp32 {
     /// From a native `f32`.
@@ -71,7 +71,7 @@ common_impl!(Fp32, SINGLE);
 
 /// IEEE binary64 value carried as raw bits.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub struct Fp64(pub u64);
+pub struct Fp64(/** Raw IEEE binary64 bit pattern. */ pub u64);
 
 impl Fp64 {
     /// From a native `f64`.
@@ -94,7 +94,7 @@ common_impl!(Fp64, DOUBLE);
 /// IEEE binary128 value carried as raw bits (no native Rust equivalent —
 /// this *is* the quad substrate the paper's Fig. 3/4 path needs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub struct Fp128(pub u128);
+pub struct Fp128(/** Raw IEEE binary128 bit pattern. */ pub u128);
 
 impl Fp128 {
     /// Positive one.

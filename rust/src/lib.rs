@@ -25,12 +25,18 @@
 //!   backends (`artifacts/*.hlo.txt`).
 //! * [`trace`], [`metrics`], [`config`] — workload generation, telemetry
 //!   and configuration substrates.
+//!
+//! Start with `ARCHITECTURE.md` for the module map and request dataflow,
+//! and `cargo run --release --example quickstart` for a guided tour.
+
+#![warn(missing_docs)]
 
 pub mod benchx;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod decomp;
+pub mod error;
 pub mod fabric;
 pub mod fpu;
 pub mod metrics;
@@ -39,5 +45,5 @@ pub mod runtime;
 pub mod trace;
 pub mod wideint;
 
-pub use decomp::{Precision, Scheme, SchemeKind};
+pub use decomp::{Plan, PlanCache, Precision, Scheme, SchemeKind};
 pub use fpu::{Fp128, Fp32, Fp64, RoundMode};

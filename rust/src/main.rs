@@ -12,8 +12,8 @@
 //!
 //! Run `civp-server help` for options.
 
-use anyhow::{bail, Result};
 use civp::cli::Args;
+use civp::error::{bail, err, Result};
 use civp::config::ServiceConfig;
 use civp::coordinator::{orient2d_adaptive, AdaptiveStats, BackendChoice, Service};
 use civp::decomp::{AnalysisRow, Precision, SchemeKind};
@@ -75,7 +75,7 @@ fn load_config(args: &Args) -> Result<ServiceConfig> {
     }
     if let Some(w) = args.options.get("workload") {
         cfg.workload =
-            WorkloadSpec::parse(w).ok_or_else(|| anyhow::anyhow!("unknown workload {w:?}"))?;
+            WorkloadSpec::parse(w).ok_or_else(|| err!("unknown workload {w:?}"))?;
     }
     if let Some(dir) = args.options.get("artifacts") {
         cfg.artifacts_dir = dir.clone();

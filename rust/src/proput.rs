@@ -92,6 +92,18 @@ impl Rng {
         }
     }
 
+    /// A uniform `bits`-wide value with the top (hidden) bit set — the
+    /// shape of a normalized IEEE significand. Shared by the decomposition
+    /// property tests and benches so they draw from one distribution.
+    pub fn sig(&mut self, bits: u32) -> crate::wideint::U128 {
+        let mut v = crate::wideint::U128::ZERO;
+        v.limbs[0] = self.next_u64();
+        v.limbs[1] = self.next_u64();
+        let mut v = v.mask_low(bits);
+        v.set_bit(bits - 1);
+        v
+    }
+
     /// Same spirit for 32-bit patterns.
     pub fn nasty_bits32(&mut self) -> u32 {
         match self.below(8) {

@@ -1,6 +1,6 @@
 //! Artifact manifest parsing.
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// The manifest `aot.py` writes next to the HLO artifacts.

@@ -1,9 +1,13 @@
 //! The PJRT engine: compiled executables per precision + batched dispatch.
+//!
+//! The real engine drives the `xla` crate (xla_extension PJRT bindings),
+//! which the offline build environment cannot provide. It is therefore
+//! compiled only under the `pjrt-xla` feature (which requires adding a
+//! vendored `xla` dependency to `Cargo.toml`); the default build exposes a
+//! stub [`Engine`] with the same surface whose `load` fails with a
+//! descriptive error, so every caller — [`super::EngineHandle`], the
+//! coordinator's PJRT backend, the CLI — compiles and degrades cleanly.
 
-use super::artifact::Manifest;
-use crate::decomp::Precision;
-use anyhow::{bail, Context, Result};
-use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Dispatch counters (telemetry for EXPERIMENTS.md §Perf).
@@ -33,170 +37,253 @@ impl EngineStats {
     }
 }
 
-/// A compiled multiply executable for one precision.
-struct Entry {
-    exe: xla::PjRtLoadedExecutable,
+#[cfg(not(feature = "pjrt-xla"))]
+pub use stub::Engine;
+#[cfg(feature = "pjrt-xla")]
+pub use xla_impl::Engine;
+
+/// Stub engine for builds without the `pjrt-xla` feature.
+#[cfg(not(feature = "pjrt-xla"))]
+mod stub {
+    use super::EngineStats;
+    use crate::decomp::Precision;
+    use crate::error::{bail, Result};
+    use std::path::Path;
+
+    /// Placeholder for the PJRT runtime when the `pjrt-xla` feature (and
+    /// its vendored `xla` dependency) is absent.
+    ///
+    /// [`Engine::load`] still validates the artifact manifest — so missing
+    /// artifacts report the same actionable error as the real engine —
+    /// then fails with a message naming the feature. The batched-multiply
+    /// surface exists for API compatibility and always errors.
+    pub struct Engine {
+        /// Fixed artifact batch size.
+        pub batch: usize,
+        /// Dispatch counters.
+        pub stats: EngineStats,
+    }
+
+    const UNAVAILABLE: &str =
+        "PJRT engine not compiled in: enable the `pjrt-xla` feature with a vendored `xla` crate \
+         (the native softfloat backend serves all precisions without it)";
+
+    impl Engine {
+        /// Validate the manifest, then fail: this build has no PJRT.
+        pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+            let manifest = super::super::Manifest::load(&dir)?;
+            bail!("{UNAVAILABLE} (found {} artifact entries)", manifest.entries.len());
+        }
+
+        /// Which precisions are loaded (always none in the stub).
+        pub fn loaded(&self) -> Vec<Precision> {
+            Vec::new()
+        }
+
+        /// Batched binary32 multiply on packed bits (unavailable).
+        pub fn mul_fp32(&self, _a: &[u32], _b: &[u32]) -> Result<Vec<u32>> {
+            bail!("{UNAVAILABLE}");
+        }
+
+        /// Batched binary64 multiply on packed bits (unavailable).
+        pub fn mul_fp64(&self, _a: &[u64], _b: &[u64]) -> Result<Vec<u64>> {
+            bail!("{UNAVAILABLE}");
+        }
+
+        /// Batched binary128 multiply on packed bits (unavailable).
+        pub fn mul_fp128(&self, _a: &[u128], _b: &[u128]) -> Result<Vec<u128>> {
+            bail!("{UNAVAILABLE}");
+        }
+
+        /// Platform string (diagnostics).
+        pub fn platform(&self) -> String {
+            "unavailable (pjrt-xla feature disabled)".to_string()
+        }
+    }
 }
 
-/// The PJRT runtime: one CPU client, one compiled executable per precision.
-///
-/// `execute` takes packed bit patterns and returns packed bit patterns —
-/// the engine is oblivious to IEEE semantics (those live in the artifact).
-/// Inputs shorter than the artifact batch are padded with zeros; longer
-/// inputs are chunked.
-///
-/// The xla crate's handles are not `Send`; multi-threaded callers use
-/// [`super::EngineHandle`], which owns the engine on a dedicated executor
-/// thread.
-pub struct Engine {
-    client: xla::PjRtClient,
-    fp32: Option<Entry>,
-    fp64: Option<Entry>,
-    fp128: Option<Entry>,
-    /// Fixed artifact batch size.
-    pub batch: usize,
-    /// Dispatch counters.
-    pub stats: EngineStats,
-}
+/// Real PJRT engine, compiled only with the `pjrt-xla` feature.
+#[cfg(feature = "pjrt-xla")]
+mod xla_impl {
+    use super::super::artifact::Manifest;
+    use super::EngineStats;
+    use crate::decomp::Precision;
+    use crate::error::{bail, ensure, Context, Result};
+    use std::path::Path;
+    use std::sync::atomic::Ordering;
 
-impl Engine {
-    /// Load every artifact listed in `<dir>/manifest.txt`.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut engine = Engine {
-            client,
-            fp32: None,
-            fp64: None,
-            fp128: None,
-            batch: manifest.batch,
-            stats: EngineStats::default(),
-        };
-        for name in &manifest.entries {
-            let path = manifest.entry_path(name);
-            let entry = engine.compile_entry(&path)?;
-            match name.as_str() {
-                "civp_fp32" => engine.fp32 = Some(entry),
-                "civp_fp64" => engine.fp64 = Some(entry),
-                "civp_fp128" => engine.fp128 = Some(entry),
-                other => bail!("unknown artifact entry {other}"),
-            }
-        }
-        Ok(engine)
+    /// A compiled multiply executable for one precision.
+    struct Entry {
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    fn compile_entry(&self, path: &Path) -> Result<Entry> {
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Entry { exe })
+    /// The PJRT runtime: one CPU client, one compiled executable per
+    /// precision.
+    ///
+    /// `execute` takes packed bit patterns and returns packed bit patterns
+    /// — the engine is oblivious to IEEE semantics (those live in the
+    /// artifact). Inputs shorter than the artifact batch are padded with
+    /// zeros; longer inputs are chunked.
+    ///
+    /// The xla crate's handles are not `Send`; multi-threaded callers use
+    /// [`super::super::EngineHandle`], which owns the engine on a
+    /// dedicated executor thread.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        fp32: Option<Entry>,
+        fp64: Option<Entry>,
+        fp128: Option<Entry>,
+        /// Fixed artifact batch size.
+        pub batch: usize,
+        /// Dispatch counters.
+        pub stats: EngineStats,
     }
 
-    /// Which precisions are loaded.
-    pub fn loaded(&self) -> Vec<Precision> {
-        let mut v = Vec::new();
-        if self.fp32.is_some() {
-            v.push(Precision::Single);
-        }
-        if self.fp64.is_some() {
-            v.push(Precision::Double);
-        }
-        if self.fp128.is_some() {
-            v.push(Precision::Quad);
-        }
-        v
-    }
-
-    /// Batched binary32 multiply on packed bits. Arbitrary length; the
-    /// engine chunks/pads to the artifact batch.
-    pub fn mul_fp32(&self, a: &[u32], b: &[u32]) -> Result<Vec<u32>> {
-        anyhow::ensure!(a.len() == b.len(), "operand length mismatch");
-        let Some(entry) = &self.fp32 else { bail!("fp32 artifact not loaded") };
-        self.stats.batches_fp32.fetch_add(a.len().div_ceil(self.batch) as u64, Ordering::Relaxed);
-        self.run_chunked(entry, a, b, |xs| xla::Literal::vec1(xs), |lit| lit.to_vec::<u32>())
-    }
-
-    /// Batched binary64 multiply on packed bits.
-    pub fn mul_fp64(&self, a: &[u64], b: &[u64]) -> Result<Vec<u64>> {
-        anyhow::ensure!(a.len() == b.len(), "operand length mismatch");
-        let Some(entry) = &self.fp64 else { bail!("fp64 artifact not loaded") };
-        self.stats.batches_fp64.fetch_add(a.len().div_ceil(self.batch) as u64, Ordering::Relaxed);
-        self.run_chunked(entry, a, b, |xs| xla::Literal::vec1(xs), |lit| lit.to_vec::<u64>())
-    }
-
-    /// Batched binary128 multiply on packed bits (u128 = lo | hi<<64).
-    pub fn mul_fp128(&self, a: &[u128], b: &[u128]) -> Result<Vec<u128>> {
-        anyhow::ensure!(a.len() == b.len(), "operand length mismatch");
-        let Some(entry) = &self.fp128 else { bail!("fp128 artifact not loaded") };
-        self.stats
-            .batches_fp128
-            .fetch_add(a.len().div_ceil(self.batch) as u64, Ordering::Relaxed);
-        let n = self.batch;
-        let mut out = Vec::with_capacity(a.len());
-        for (ca, cb) in a.chunks(n).zip(b.chunks(n)) {
-            let len = ca.len();
-            self.stats.lanes_total.fetch_add(n as u64, Ordering::Relaxed);
-            self.stats.lanes_padding.fetch_add((n - len) as u64, Ordering::Relaxed);
-            // words layout [B, 2]: row-major (lo, hi) pairs
-            let mut wa = vec![0u64; 2 * n];
-            let mut wb = vec![0u64; 2 * n];
-            for i in 0..len {
-                wa[2 * i] = ca[i] as u64;
-                wa[2 * i + 1] = (ca[i] >> 64) as u64;
-                wb[2 * i] = cb[i] as u64;
-                wb[2 * i + 1] = (cb[i] >> 64) as u64;
-            }
-            let la = xla::Literal::vec1(&wa).reshape(&[n as i64, 2])?;
-            let lb = xla::Literal::vec1(&wb).reshape(&[n as i64, 2])?;
-            let result = entry.exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
-            let words = result.to_tuple1()?.to_vec::<u64>()?;
-            anyhow::ensure!(words.len() == 2 * n, "unexpected fp128 output length");
-            for i in 0..len {
-                out.push(words[2 * i] as u128 | ((words[2 * i + 1] as u128) << 64));
-            }
-        }
-        Ok(out)
-    }
-
-    fn run_chunked<T: Copy + Default + xla::NativeType + xla::ArrayElement>(
-        &self,
-        entry: &Entry,
-        a: &[T],
-        b: &[T],
-        make: impl Fn(&[T]) -> xla::Literal,
-        read: impl Fn(&xla::Literal) -> Result<Vec<T>, xla::Error>,
-    ) -> Result<Vec<T>> {
-        let n = self.batch;
-        let mut out = Vec::with_capacity(a.len());
-        let mut buf_a = vec![T::default(); n];
-        let mut buf_b = vec![T::default(); n];
-        for (ca, cb) in a.chunks(n).zip(b.chunks(n)) {
-            let len = ca.len();
-            self.stats.lanes_total.fetch_add(n as u64, Ordering::Relaxed);
-            self.stats.lanes_padding.fetch_add((n - len) as u64, Ordering::Relaxed);
-            let (la, lb) = if len == n {
-                (make(ca), make(cb))
-            } else {
-                buf_a[..len].copy_from_slice(ca);
-                buf_a[len..].fill(T::default());
-                buf_b[..len].copy_from_slice(cb);
-                buf_b[len..].fill(T::default());
-                (make(&buf_a), make(&buf_b))
+    impl Engine {
+        /// Load every artifact listed in `<dir>/manifest.txt`.
+        pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+            let manifest = Manifest::load(&dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let mut engine = Engine {
+                client,
+                fp32: None,
+                fp64: None,
+                fp128: None,
+                batch: manifest.batch,
+                stats: EngineStats::default(),
             };
-            let result = entry.exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
-            let vals = read(&result.to_tuple1()?)?;
-            anyhow::ensure!(vals.len() == n, "unexpected output length");
-            out.extend_from_slice(&vals[..len]);
+            for name in &manifest.entries {
+                let path = manifest.entry_path(name);
+                let entry = engine.compile_entry(&path)?;
+                match name.as_str() {
+                    "civp_fp32" => engine.fp32 = Some(entry),
+                    "civp_fp64" => engine.fp64 = Some(entry),
+                    "civp_fp128" => engine.fp128 = Some(entry),
+                    other => bail!("unknown artifact entry {other}"),
+                }
+            }
+            Ok(engine)
         }
-        Ok(out)
-    }
 
-    /// Platform string (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+        fn compile_entry(&self, path: &Path) -> Result<Entry> {
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Entry { exe })
+        }
+
+        /// Which precisions are loaded.
+        pub fn loaded(&self) -> Vec<Precision> {
+            let mut v = Vec::new();
+            if self.fp32.is_some() {
+                v.push(Precision::Single);
+            }
+            if self.fp64.is_some() {
+                v.push(Precision::Double);
+            }
+            if self.fp128.is_some() {
+                v.push(Precision::Quad);
+            }
+            v
+        }
+
+        /// Batched binary32 multiply on packed bits. Arbitrary length; the
+        /// engine chunks/pads to the artifact batch.
+        pub fn mul_fp32(&self, a: &[u32], b: &[u32]) -> Result<Vec<u32>> {
+            ensure!(a.len() == b.len(), "operand length mismatch");
+            let Some(entry) = &self.fp32 else { bail!("fp32 artifact not loaded") };
+            self.stats
+                .batches_fp32
+                .fetch_add(a.len().div_ceil(self.batch) as u64, Ordering::Relaxed);
+            self.run_chunked(entry, a, b, |xs| xla::Literal::vec1(xs), |lit| lit.to_vec::<u32>())
+        }
+
+        /// Batched binary64 multiply on packed bits.
+        pub fn mul_fp64(&self, a: &[u64], b: &[u64]) -> Result<Vec<u64>> {
+            ensure!(a.len() == b.len(), "operand length mismatch");
+            let Some(entry) = &self.fp64 else { bail!("fp64 artifact not loaded") };
+            self.stats
+                .batches_fp64
+                .fetch_add(a.len().div_ceil(self.batch) as u64, Ordering::Relaxed);
+            self.run_chunked(entry, a, b, |xs| xla::Literal::vec1(xs), |lit| lit.to_vec::<u64>())
+        }
+
+        /// Batched binary128 multiply on packed bits (u128 = lo | hi<<64).
+        pub fn mul_fp128(&self, a: &[u128], b: &[u128]) -> Result<Vec<u128>> {
+            ensure!(a.len() == b.len(), "operand length mismatch");
+            let Some(entry) = &self.fp128 else { bail!("fp128 artifact not loaded") };
+            self.stats
+                .batches_fp128
+                .fetch_add(a.len().div_ceil(self.batch) as u64, Ordering::Relaxed);
+            let n = self.batch;
+            let mut out = Vec::with_capacity(a.len());
+            for (ca, cb) in a.chunks(n).zip(b.chunks(n)) {
+                let len = ca.len();
+                self.stats.lanes_total.fetch_add(n as u64, Ordering::Relaxed);
+                self.stats.lanes_padding.fetch_add((n - len) as u64, Ordering::Relaxed);
+                // words layout [B, 2]: row-major (lo, hi) pairs
+                let mut wa = vec![0u64; 2 * n];
+                let mut wb = vec![0u64; 2 * n];
+                for i in 0..len {
+                    wa[2 * i] = ca[i] as u64;
+                    wa[2 * i + 1] = (ca[i] >> 64) as u64;
+                    wb[2 * i] = cb[i] as u64;
+                    wb[2 * i + 1] = (cb[i] >> 64) as u64;
+                }
+                let la = xla::Literal::vec1(&wa).reshape(&[n as i64, 2])?;
+                let lb = xla::Literal::vec1(&wb).reshape(&[n as i64, 2])?;
+                let result =
+                    entry.exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+                let words = result.to_tuple1()?.to_vec::<u64>()?;
+                ensure!(words.len() == 2 * n, "unexpected fp128 output length");
+                for i in 0..len {
+                    out.push(words[2 * i] as u128 | ((words[2 * i + 1] as u128) << 64));
+                }
+            }
+            Ok(out)
+        }
+
+        fn run_chunked<T: Copy + Default + xla::NativeType + xla::ArrayElement>(
+            &self,
+            entry: &Entry,
+            a: &[T],
+            b: &[T],
+            make: impl Fn(&[T]) -> xla::Literal,
+            read: impl Fn(&xla::Literal) -> core::result::Result<Vec<T>, xla::Error>,
+        ) -> Result<Vec<T>> {
+            let n = self.batch;
+            let mut out = Vec::with_capacity(a.len());
+            let mut buf_a = vec![T::default(); n];
+            let mut buf_b = vec![T::default(); n];
+            for (ca, cb) in a.chunks(n).zip(b.chunks(n)) {
+                let len = ca.len();
+                self.stats.lanes_total.fetch_add(n as u64, Ordering::Relaxed);
+                self.stats.lanes_padding.fetch_add((n - len) as u64, Ordering::Relaxed);
+                let (la, lb) = if len == n {
+                    (make(ca), make(cb))
+                } else {
+                    buf_a[..len].copy_from_slice(ca);
+                    buf_a[len..].fill(T::default());
+                    buf_b[..len].copy_from_slice(cb);
+                    buf_b[len..].fill(T::default());
+                    (make(&buf_a), make(&buf_b))
+                };
+                let result =
+                    entry.exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+                let vals = read(&result.to_tuple1()?)?;
+                ensure!(vals.len() == n, "unexpected output length");
+                out.extend_from_slice(&vals[..len]);
+            }
+            Ok(out)
+        }
+
+        /// Platform string (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
     }
 }

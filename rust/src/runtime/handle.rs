@@ -1,14 +1,15 @@
-//! Thread-safe handle to an [`Engine`] running on a dedicated executor
-//! thread.
+//! Thread-safe handle to an [`Engine`](super::Engine) running on a
+//! dedicated executor thread.
 //!
-//! The xla crate's PJRT wrappers hold `Rc`s and raw pointers, so [`Engine`]
-//! is not `Send`. The handle owns the engine on one executor thread and
-//! multiplexes batch jobs over an mpsc channel — the standard "pinned
-//! device thread" pattern. Cloning the handle is cheap; all clones feed the
-//! same executor (PJRT CPU execution is serialized anyway).
+//! The xla crate's PJRT wrappers hold `Rc`s and raw pointers, so
+//! [`Engine`](super::Engine) is not `Send`. The handle owns the engine on
+//! one executor thread and multiplexes batch jobs over an mpsc channel —
+//! the standard "pinned device thread" pattern. Cloning the handle is
+//! cheap; all clones feed the same executor (PJRT CPU execution is
+//! serialized anyway).
 
 use crate::decomp::Precision;
-use anyhow::{anyhow, Result};
+use crate::error::{err, Result};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -45,7 +46,8 @@ struct HandleInner {
     join: Mutex<Option<JoinHandle<()>>>,
 }
 
-/// Cloneable, `Send + Sync` front-end to a pinned-thread [`Engine`].
+/// Cloneable, `Send + Sync` front-end to a pinned-thread
+/// [`Engine`](super::Engine).
 #[derive(Clone)]
 pub struct EngineHandle {
     inner: Arc<HandleInner>,
@@ -104,7 +106,7 @@ impl EngineHandle {
                     }
                 }
             })?;
-        ready_rx.recv().map_err(|_| anyhow!("executor thread died during load"))??;
+        ready_rx.recv().map_err(|_| err!("executor thread died during load"))??;
         Ok(EngineHandle { inner: Arc::new(HandleInner { tx, join: Mutex::new(Some(join)) }) })
     }
 
@@ -114,15 +116,15 @@ impl EngineHandle {
         self.inner
             .tx
             .send(Job::Mul { precision, a, b, reply })
-            .map_err(|_| anyhow!("engine executor stopped"))?;
-        rx.recv().map_err(|_| anyhow!("engine executor dropped reply"))?
+            .map_err(|_| err!("engine executor stopped"))?;
+        rx.recv().map_err(|_| err!("engine executor dropped reply"))?
     }
 
     /// Engine facts.
     pub fn info(&self) -> Result<EngineInfo> {
         let (reply, rx) = mpsc::channel();
-        self.inner.tx.send(Job::Info { reply }).map_err(|_| anyhow!("engine executor stopped"))?;
-        rx.recv().map_err(|_| anyhow!("engine executor dropped reply"))
+        self.inner.tx.send(Job::Info { reply }).map_err(|_| err!("engine executor stopped"))?;
+        rx.recv().map_err(|_| err!("engine executor dropped reply"))
     }
 
     /// Stop the executor (joins the thread). Subsequent calls error.

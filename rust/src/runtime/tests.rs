@@ -8,6 +8,10 @@ use crate::fpu::{Fp128, Fp32, Fp64};
 use crate::proput::{forall, Rng};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
+    if cfg!(not(feature = "pjrt-xla")) {
+        eprintln!("skipping runtime test: pjrt-xla feature disabled (stub engine)");
+        return None;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.txt").exists() {
         Some(dir)

@@ -1,0 +1,177 @@
+//! Property tests pinning the compiled-plan executor to the `DirectMul`
+//! oracle: for every `(SchemeKind, Precision)` pair, executing through a
+//! cached [`civp::decomp::Plan`] is bit-identical to the plain widening
+//! multiply — across random significands and the edge cases where
+//! rounding/accumulation bugs live (all-ones, single-bit, subnormal-range).
+
+use civp::decomp::{execute, DecompMul, ExecStats, Plan, PlanCache, Precision, Scheme, SchemeKind};
+use civp::fpu::{mul_bits, DirectMul, RoundMode, DOUBLE, QUAD, SINGLE};
+use civp::proput::{forall, Rng};
+use civp::wideint::{mul_u128, U128};
+use std::sync::Arc;
+
+
+/// Edge-case significands for a given width: all-ones, single-bit at every
+/// byte boundary, the subnormal-range pattern (low bits only), and the
+/// minimal/maximal values.
+fn edge_sigs(bits: u32) -> Vec<U128> {
+    let ones = U128::ONE.shl(bits).wrapping_sub(&U128::ONE);
+    let mut v = vec![
+        U128::ZERO,
+        U128::ONE,
+        ones,
+        U128::ONE.shl(bits - 1),           // top bit only
+        ones.shr(bits / 2),                // subnormal-range: low half ones
+        U128::ONE.shl(bits / 2),           // middle single bit
+    ];
+    let mut i = 7;
+    while i < bits {
+        v.push(U128::ONE.shl(i));
+        i += 8;
+    }
+    v
+}
+
+#[test]
+fn plan_product_equals_direct_mul_random() {
+    // The cached plan's integer product == DirectMul's widening multiply,
+    // for every scheme x precision, over random normalized significands.
+    forall(0x700, 2_000, |rng| {
+        for prec in Precision::ALL {
+            for kind in SchemeKind::ALL {
+                let plan = PlanCache::get(kind, prec);
+                let a = rng.sig(prec.sig_bits());
+                let b = rng.sig(prec.sig_bits());
+                let mut stats = ExecStats::default();
+                let got = plan.execute(a, b, &mut stats);
+                // DirectMul's product IS the plain widening multiply.
+                let want = mul_u128(a, b);
+                assert_eq!(got, want, "{:?} {:?}", kind, prec);
+            }
+        }
+    });
+}
+
+#[test]
+fn plan_product_equals_direct_mul_edge_cases() {
+    for prec in Precision::ALL {
+        let edges = edge_sigs(prec.sig_bits());
+        for kind in SchemeKind::ALL {
+            let plan = PlanCache::get(kind, prec);
+            let mut stats = ExecStats::default();
+            for &a in &edges {
+                for &b in &edges {
+                    let got = plan.execute(a, b, &mut stats);
+                    assert_eq!(got, mul_u128(a, b), "{:?} {:?}", kind, prec);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_matches_rederived_tile_executor_and_stats() {
+    // The compiled plan is a pure lowering: product AND accounting must be
+    // identical to deriving the tile DAG per call.
+    forall(0x701, 500, |rng| {
+        for prec in Precision::ALL {
+            for kind in SchemeKind::ALL {
+                let scheme = Scheme::new(kind, prec);
+                let plan = PlanCache::get(kind, prec);
+                let a = rng.sig(prec.sig_bits());
+                let b = rng.sig(prec.sig_bits());
+                let mut ps = ExecStats::default();
+                let mut ts = ExecStats::default();
+                let via_plan = plan.execute(a, b, &mut ps);
+                let via_tiles = execute(&scheme, a, b, &mut ts);
+                assert_eq!(via_plan, via_tiles, "{:?} {:?}", kind, prec);
+                assert_eq!(ps.tiles, ts.tiles);
+                assert_eq!(ps.padded_tiles, ts.padded_tiles);
+                assert_eq!(ps.useful_bitops, ts.useful_bitops);
+                assert_eq!(ps.capacity_bitops, ts.capacity_bitops);
+                assert_eq!(ps.muls, ts.muls);
+                for bk in civp::decomp::BlockKind::ALL {
+                    assert_eq!(ps.ops(bk), ts.ops(bk), "{:?} {:?} {:?}", kind, prec, bk);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn plan_equivalence_for_integer_widths() {
+    // The "combined integer" half: compiled plans serve arbitrary widths.
+    forall(0x702, 300, |rng| {
+        let width = rng.range(2, 128) as u32;
+        for kind in SchemeKind::ALL {
+            let plan = PlanCache::get_width(kind, width);
+            let a = rng.sig(width);
+            let b = rng.sig(width);
+            let mut stats = ExecStats::default();
+            assert_eq!(plan.execute(a, b, &mut stats), mul_u128(a, b), "{:?} w={width}", kind);
+        }
+    });
+}
+
+#[test]
+fn full_ieee_pipeline_plan_vs_direct_all_modes() {
+    // End to end: mul_bits through the plan-backed DecompMul == mul_bits
+    // through DirectMul, for every scheme, precision and rounding mode.
+    forall(0x703, 800, |rng| {
+        let mode = RoundMode::ALL[rng.below(5) as usize];
+        for (fmt, bits) in [(&SINGLE, 32u32), (&DOUBLE, 64), (&QUAD, 128)] {
+            let mut raw_a = U128::ZERO;
+            raw_a.limbs[0] = rng.next_u64();
+            raw_a.limbs[1] = rng.next_u64();
+            let a = raw_a.mask_low(bits);
+            let mut raw_b = U128::ZERO;
+            raw_b.limbs[0] = rng.next_u64();
+            raw_b.limbs[1] = rng.next_u64();
+            let b = raw_b.mask_low(bits);
+            let (want, wf) = mul_bits(fmt, a, b, mode, &mut DirectMul);
+            for kind in SchemeKind::ALL {
+                let mut m = DecompMul::new(kind);
+                let (got, gf) = mul_bits(fmt, a, b, mode, &mut m);
+                assert_eq!(got, want, "{:?} {} {mode:?}", kind, fmt.name);
+                assert_eq!(gf, wf, "flags diverged: {:?} {}", kind, fmt.name);
+            }
+        }
+    });
+}
+
+#[test]
+fn plan_cache_shares_one_plan_per_key() {
+    for prec in Precision::ALL {
+        for kind in SchemeKind::ALL {
+            let a = PlanCache::get(kind, prec);
+            let b = PlanCache::get(kind, prec);
+            assert!(Arc::ptr_eq(&a, &b), "{:?} {:?} not shared", kind, prec);
+            // IEEE widths route to the same shared plan
+            let c = PlanCache::get_width(kind, prec.sig_bits());
+            assert!(Arc::ptr_eq(&a, &c));
+        }
+    }
+    let w1 = PlanCache::get_width(SchemeKind::Civp, 40);
+    let w2 = PlanCache::get_width(SchemeKind::Civp, 40);
+    assert!(Arc::ptr_eq(&w1, &w2));
+    assert!(PlanCache::ieee_cached() > 0);
+    assert!(PlanCache::int_cached() > 0);
+}
+
+#[test]
+fn plan_batch_matches_scalar_path() {
+    let plan: Arc<Plan> = PlanCache::get(SchemeKind::Civp, Precision::Double);
+    let mut rng = Rng::new(0x704);
+    let a: Vec<U128> = (0..257).map(|_| rng.sig(53)).collect();
+    let b: Vec<U128> = (0..257).map(|_| rng.sig(53)).collect();
+    let mut batch_stats = ExecStats::default();
+    let mut out = Vec::new();
+    plan.execute_batch(&a, &b, &mut batch_stats, &mut out);
+    assert_eq!(out.len(), a.len());
+    let mut scalar_stats = ExecStats::default();
+    for i in 0..a.len() {
+        assert_eq!(out[i], plan.execute(a[i], b[i], &mut scalar_stats), "i={i}");
+    }
+    assert_eq!(batch_stats.muls, scalar_stats.muls);
+    assert_eq!(batch_stats.tiles, scalar_stats.tiles);
+}
