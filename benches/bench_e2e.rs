@@ -2,21 +2,37 @@
 //! precision multimedia traffic.
 //!
 //! For each workload mix: drive the coordinator (native backend) and
-//! report throughput + latency; replay the same op mix through the fabric
-//! simulator under the CIVP fabric and the iso-area legacy fabric to get
-//! the paper's hardware-level comparison. Also times the PJRT backend
-//! (batched artifact dispatch) when artifacts are present.
+//! report throughput + latency; run the same op mix through the fabric
+//! cycle/energy model under the CIVP fabric and the iso-area legacy fabric
+//! to get the paper's hardware-level comparison. Also times the PJRT
+//! backend (batched artifact dispatch) when artifacts are present.
+//!
+//! §Perf paths covered explicitly:
+//!
+//! * steady-state submit→response throughput through the pooled oneshot
+//!   reply slots (vs an `mpsc::channel`-per-request baseline, the pre-PR
+//!   reply path, timed side by side);
+//! * count-based `simulate_counts` fabric reporting vs materializing the
+//!   op stream and replaying it through `simulate_stream` (the pre-PR
+//!   `fabric_report` shape), at 1M ops;
+//! * results land in `BENCH_e2e.json` at the repo root (see README
+//!   "Benchmarks") so the perf trajectory is tracked run over run.
+//!
+//! `CIVP_BENCH_QUICK=1` shrinks every workload for CI smoke runs.
 
-use civp::benchx::section;
+use civp::benchx::{bb, bench, scaled, section, JsonReport, Measurement};
 use civp::config::ServiceConfig;
-use civp::coordinator::{BackendChoice, Service};
-use civp::decomp::SchemeKind;
-use civp::fabric::{simulate_stream, CostModel, FabricConfig, OpClass};
+use civp::coordinator::{BackendChoice, ReplyPool, Response, Service};
+use civp::decomp::{Precision, SchemeKind};
+use civp::fabric::{simulate_counts, simulate_stream, CostModel, FabricConfig, OpClass};
 use civp::runtime::EngineHandle;
 use civp::trace::{TraceGen, WorkloadSpec};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-const REQUESTS: usize = 20_000;
+fn requests() -> usize {
+    scaled(20_000) as usize
+}
 
 fn drive(svc: &Service, trace: &[civp::trace::TraceRequest]) -> f64 {
     let t0 = Instant::now();
@@ -35,12 +51,26 @@ fn drive(svc: &Service, trace: &[civp::trace::TraceRequest]) -> f64 {
     t0.elapsed().as_secs_f64()
 }
 
+/// Wrap a single wall-clock run as a `Measurement` so it lands in the JSON
+/// artifact alongside the sampled benches.
+fn wall_measurement(ops: u64, wall_s: f64) -> Measurement {
+    let ns_per_op = wall_s * 1e9 / ops.max(1) as f64;
+    Measurement {
+        ns_per_op_p50: ns_per_op,
+        ns_per_op_mean: ns_per_op,
+        ns_per_op_min: ns_per_op,
+        total_ops: ops,
+    }
+}
+
 fn main() {
     let cost = CostModel::default();
+    let mut json = JsonReport::new();
+    let n_requests = requests();
 
     for workload in WorkloadSpec::ALL {
         section(&format!("E7 workload `{}`", workload.name()));
-        let trace = TraceGen::new(0xE7, workload.mix(), 0).take(REQUESTS);
+        let trace = TraceGen::new(0xE7, workload.mix(), 0).take(n_requests);
 
         // --- serving layer (native backend) ---------------------------
         let cfg = ServiceConfig::default();
@@ -49,9 +79,13 @@ fn main() {
         let rep = svc.shutdown();
         println!(
             "coordinator (native): {:>8.0} mult/s  ({} reqs in {:.3}s)",
-            REQUESTS as f64 / wall,
-            REQUESTS,
+            n_requests as f64 / wall,
+            n_requests,
             wall
+        );
+        json.push(
+            &format!("e2e/{}/native-submit-response", workload.name()),
+            wall_measurement(n_requests as u64, wall),
         );
         for p in ["single", "double", "quad"] {
             if let Some(h) = rep.snapshot.hists.get(&format!("latency_ns_{p}")) {
@@ -62,16 +96,20 @@ fn main() {
         }
 
         // --- fabric layer: civp vs iso-area legacy ---------------------
-        let civp_ops: Vec<OpClass> = trace
-            .iter()
-            .map(|r| OpClass { precision: r.precision, organization: SchemeKind::Civp })
-            .collect();
-        let b18_ops: Vec<OpClass> = trace
-            .iter()
-            .map(|r| OpClass { precision: r.precision, organization: SchemeKind::Baseline18 })
-            .collect();
-        let rc = simulate_stream(&civp_ops, &FabricConfig::civp_scaled(1), &cost);
-        let rb = simulate_stream(&b18_ops, &FabricConfig::legacy_iso_area(1), &cost);
+        // Per-class counts are all the cycle/energy model needs; no
+        // materialized op stream (§Perf).
+        let mut civp_counts: BTreeMap<OpClass, u64> = BTreeMap::new();
+        let mut b18_counts: BTreeMap<OpClass, u64> = BTreeMap::new();
+        for r in &trace {
+            *civp_counts
+                .entry(OpClass { precision: r.precision, organization: SchemeKind::Civp })
+                .or_insert(0) += 1;
+            *b18_counts
+                .entry(OpClass { precision: r.precision, organization: SchemeKind::Baseline18 })
+                .or_insert(0) += 1;
+        }
+        let rc = simulate_counts(&civp_counts, &FabricConfig::civp_scaled(1), &cost);
+        let rb = simulate_counts(&b18_counts, &FabricConfig::legacy_iso_area(1), &cost);
         println!(
             "fabric civp      : {:>8} cycles  {:>7.3} E/op  {:>5.1}% wasted",
             rc.cycles,
@@ -92,12 +130,74 @@ fn main() {
         );
     }
 
+    // --- reply path: pooled oneshot vs per-request mpsc channel --------
+    section("reply path: pooled oneshot slot vs mpsc channel per request (pre-PR)");
+    let resp = Response { id: 1, bits: 42, latency_ns: 100, batch_size: 8 };
+    let pool = ReplyPool::new();
+    let iters = scaled(20_000);
+    let oneshot = bench("reply roundtrip: pooled oneshot", 1_000, 30, iters, || {
+        let (tx, rx) = pool.acquire();
+        tx.send(resp);
+        bb(rx.recv().unwrap().bits);
+    });
+    let mpsc = bench("reply roundtrip: mpsc channel (pre-PR)", 1_000, 30, iters, || {
+        let (tx, rx) = std::sync::mpsc::channel();
+        tx.send(resp).unwrap();
+        bb(rx.recv().unwrap().bits);
+    });
+    println!(
+        "pooled oneshot is {:.2}x the mpsc reply path (p50)",
+        mpsc.ns_per_op_p50 / oneshot.ns_per_op_p50
+    );
+    json.push("reply/pooled-oneshot", oneshot);
+    json.push("reply/mpsc-channel-pre-pr", mpsc);
+
+    // --- fabric report: O(#classes) counts vs O(#ops) replay -----------
+    section("fabric report at 1M ops: simulate_counts vs materialized simulate_stream");
+    let total: u64 = scaled(1_000_000);
+    let mut counts: BTreeMap<OpClass, u64> = BTreeMap::new();
+    counts.insert(
+        OpClass { precision: Precision::Single, organization: SchemeKind::Civp },
+        total / 2,
+    );
+    counts.insert(
+        OpClass { precision: Precision::Double, organization: SchemeKind::Civp },
+        total / 3,
+    );
+    counts.insert(
+        OpClass { precision: Precision::Quad, organization: SchemeKind::Civp },
+        total - total / 2 - total / 3,
+    );
+    let fabric = FabricConfig::civp_scaled(1);
+    let from_counts = bench("fabric_report: simulate_counts", 10, 20, 50, || {
+        bb(simulate_counts(&counts, &fabric, &cost));
+    });
+    let from_stream = bench("fabric_report: replay simulate_stream (pre-PR)", 2, 10, 1, || {
+        // The pre-PR shape: materialize one OpClass per executed multiply,
+        // then aggregate it all over again.
+        let mut ops: Vec<OpClass> = Vec::with_capacity(total as usize);
+        for (class, n) in &counts {
+            for _ in 0..*n {
+                ops.push(*class);
+            }
+        }
+        bb(simulate_stream(&ops, &fabric, &cost));
+    });
+    println!(
+        "count-based report is {:.0}x faster than per-op replay at {} ops",
+        from_stream.ns_per_op_p50 / from_counts.ns_per_op_p50,
+        total
+    );
+    json.push("fabric-report/simulate-counts", from_counts);
+    json.push("fabric-report/replay-stream-pre-pr", from_stream);
+
     // --- PJRT backend timing (graphics mix) ----------------------------
     section("E7 PJRT backend (AOT JAX/Pallas artifacts)");
     match EngineHandle::load("artifacts") {
         Ok(handle) => {
             let info = handle.info().unwrap();
-            let trace = TraceGen::new(0xE7, WorkloadSpec::Graphics.mix(), 0).take(REQUESTS / 4);
+            let trace =
+                TraceGen::new(0xE7, WorkloadSpec::Graphics.mix(), 0).take(n_requests / 4);
             let cfg = ServiceConfig { max_batch: info.batch, linger_us: 500, ..Default::default() };
             let svc = Service::start(&cfg, BackendChoice::Pjrt(handle.clone()));
             let wall = drive(&svc, &trace);
@@ -109,9 +209,12 @@ fn main() {
                 wall,
                 info.batch
             );
+            json.push("e2e/graphics/pjrt-submit-response", wall_measurement(trace.len() as u64, wall));
             let _ = rep;
             handle.stop();
         }
         Err(e) => println!("skipped (artifacts not built): {e:#}"),
     }
+
+    json.write("BENCH_e2e.json").expect("write BENCH_e2e.json");
 }

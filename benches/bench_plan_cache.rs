@@ -12,18 +12,25 @@
 //!   O(1) stats merge, zero allocation;
 //! * `direct`   — the plain widening multiply (lower bound, no
 //!   decomposition at all).
+//!
+//! Also covers the batch surfaces (`Plan::execute_batch` with its single
+//! scaled stats merge, `NativeBackend::mul_batch`) and writes every
+//! measurement to `BENCH_plan.json` at the repo root (README
+//! "Benchmarks"). `CIVP_BENCH_QUICK=1` shrinks iteration counts for CI.
 
-use civp::benchx::{bb, bench, section};
+use civp::benchx::{bb, bench, scaled, section, JsonReport};
 use civp::coordinator::NativeBackend;
 use civp::decomp::{execute, ExecStats, PlanCache, Precision, Scheme, SchemeKind};
 use civp::fpu::{mul_bits, DirectMul, RoundMode, DOUBLE, QUAD, SINGLE};
 use civp::proput::Rng;
-use civp::wideint::{mul_u128, U128};
+use civp::wideint::{mul_u128, U128, U256};
 
 
 fn main() {
     let precisions = [Precision::Single, Precision::Double, Precision::Quad];
     let kinds = SchemeKind::ALL; // civp + all three baselines
+    let mut json = JsonReport::new();
+    let iters = scaled(10_000);
 
     section("significand product: cached plan vs per-call tile-DAG derivation");
     let mut verdicts: Vec<(String, f64)> = Vec::new();
@@ -40,6 +47,7 @@ fn main() {
             let (av, bv): (Vec<U128>, Vec<U128>) = pairs.iter().copied().unzip();
             let mut products = Vec::new();
             plan.execute_batch(&av, &bv, &mut st, &mut products);
+            assert_eq!(st.muls, 256, "batch stats must account every element");
             for (i, &(a, b)) in pairs.iter().enumerate() {
                 assert_eq!(products[i], mul_u128(a, b));
             }
@@ -47,26 +55,50 @@ fn main() {
             let label = format!("{}-{}", kind.name(), prec.name());
             let mut i = 0usize;
             let mut stats = ExecStats::default();
-            let rederive = bench(&format!("{label:<16} rederive/call"), 2_000, 30, 10_000, || {
+            let rederive = bench(&format!("{label:<16} rederive/call"), 2_000, 30, iters, || {
                 let (a, b) = pairs[i & 255];
                 i += 1;
                 bb(execute(&scheme, a, b, &mut stats));
             });
             let mut i = 0usize;
             let mut stats = ExecStats::default();
-            let planned = bench(&format!("{label:<16} cached plan"), 2_000, 30, 10_000, || {
+            let planned = bench(&format!("{label:<16} cached plan"), 2_000, 30, iters, || {
                 let (a, b) = pairs[i & 255];
                 i += 1;
                 bb(plan.execute(a, b, &mut stats));
             });
             let mut i = 0usize;
-            bench(&format!("{label:<16} direct (oracle)"), 2_000, 30, 10_000, || {
+            bench(&format!("{label:<16} direct (oracle)"), 2_000, 30, iters, || {
                 let (a, b) = pairs[i & 255];
                 i += 1;
                 bb(mul_u128(a, b));
             });
+            json.push(&format!("plan/{label}/rederive-per-call"), rederive);
+            json.push(&format!("plan/{label}/cached-plan"), planned);
             verdicts.push((label, rederive.ns_per_op_p50 / planned.ns_per_op_p50));
         }
+    }
+
+    section("plan batch surface: execute_batch (one scaled stats merge per batch)");
+    for prec in precisions {
+        let bits = prec.sig_bits();
+        let plan = PlanCache::get(SchemeKind::Civp, prec);
+        let mut rng = Rng::new(0xD00D ^ bits as u64);
+        let a: Vec<U128> = (0..256).map(|_| rng.sig(bits)).collect();
+        let b: Vec<U128> = (0..256).map(|_| rng.sig(bits)).collect();
+        let mut stats = ExecStats::default();
+        let mut out: Vec<U256> = Vec::with_capacity(256);
+        let batch = bench(
+            &format!("civp-{:<8} execute_batch x256", prec.name()),
+            20,
+            20,
+            scaled(200).max(2),
+            || {
+                plan.execute_batch(&a, &b, &mut stats, &mut out);
+                bb(out.len());
+            },
+        );
+        json.push(&format!("plan/civp-{}/execute-batch-x256", prec.name()), batch);
     }
 
     section("coordinator batch path: mul_batch (reused scratch) vs per-call pipeline");
@@ -88,12 +120,13 @@ fn main() {
 
         let mut be = NativeBackend::new(SchemeKind::Civp);
         let mut out = Vec::with_capacity(a.len());
-        bench(&format!("{:<8} mul_batch x256", prec.name()), 20, 20, 50, || {
+        let m = bench(&format!("{:<8} mul_batch x256", prec.name()), 20, 20, scaled(50).max(2), || {
             be.mul_batch(prec, &a, &b, &mut out).unwrap();
             bb(out.len());
         });
+        json.push(&format!("coordinator/{}/mul-batch-x256", prec.name()), m);
         let mut dm = DirectMul;
-        bench(&format!("{:<8} per-call direct x256", prec.name()), 20, 20, 50, || {
+        bench(&format!("{:<8} per-call direct x256", prec.name()), 20, 20, scaled(50).max(2), || {
             let mut fresh: Vec<u128> = Vec::with_capacity(a.len());
             for i in 0..a.len() {
                 let (bits, _) = mul_bits(
@@ -123,4 +156,6 @@ fn main() {
             "FAIL: at least one configuration did not benefit from plan caching"
         }
     );
+
+    json.write("BENCH_plan.json").expect("write BENCH_plan.json");
 }

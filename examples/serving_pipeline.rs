@@ -30,8 +30,7 @@ const REQUESTS: usize = 30_000;
 fn drive(svc: &Service, trace: &[TraceRequest]) -> (f64, Vec<u128>) {
     let t0 = Instant::now();
     let mut results = vec![0u128; trace.len()];
-    let mut pending: Vec<(usize, std::sync::mpsc::Receiver<civp::coordinator::Response>)> =
-        Vec::with_capacity(4096);
+    let mut pending: Vec<(usize, civp::coordinator::ReplyHandle)> = Vec::with_capacity(4096);
     for (idx, req) in trace.iter().enumerate() {
         pending.push((idx, svc.submit(req.id, req.precision, req.a, req.b).unwrap()));
         if pending.len() >= 4096 {

@@ -6,6 +6,16 @@
 //! batches of `iters_per_sample` calls; reports ns/op at p50 (median of
 //! batch means), mean, and min — the same summary criterion prints. Batch
 //! results are black-boxed to keep the optimizer honest.
+//!
+//! Two additions for perf-trajectory tracking (§Perf):
+//!
+//! * **quick mode** — setting `CIVP_BENCH_QUICK=1` divides iteration
+//!   counts (see [`scaled`]), so CI can smoke-run every bench target in
+//!   seconds and catch harness rot without paying full measurement cost;
+//! * **machine-readable output** — a [`JsonReport`] collects named
+//!   measurements and writes them as a JSON array (`name`, `ns_per_op_*`,
+//!   `ops_per_sec`), which the benches emit as `BENCH_*.json` at the repo
+//!   root so every run leaves a comparable artifact.
 
 use std::hint::black_box;
 use std::time::Instant;
@@ -68,6 +78,85 @@ pub fn bb<T>(v: T) -> T {
     black_box(v)
 }
 
+/// True when `CIVP_BENCH_QUICK` is set (to anything but `0`): benches
+/// should shrink workloads so a CI smoke run finishes in seconds.
+pub fn quick() -> bool {
+    std::env::var("CIVP_BENCH_QUICK").map(|v| v != "0").unwrap_or(false)
+}
+
+/// Scale an iteration/request count for the current mode: full value
+/// normally, `1/50th` (min 1) in quick mode.
+pub fn scaled(n: u64) -> u64 {
+    if quick() {
+        (n / 50).max(1)
+    } else {
+        n
+    }
+}
+
+/// Collects named [`Measurement`]s and renders them as a JSON array —
+/// the machine-readable artifact (`BENCH_*.json`) the benches write at
+/// the repo root. Hand-rolled serialization (no serde offline).
+#[derive(Clone, Debug, Default)]
+pub struct JsonReport {
+    entries: Vec<(String, Measurement)>,
+}
+
+impl JsonReport {
+    /// New empty report.
+    pub fn new() -> JsonReport {
+        JsonReport::default()
+    }
+
+    /// Record one named measurement.
+    pub fn push(&mut self, name: &str, m: Measurement) {
+        self.entries.push((name.to_string(), m));
+    }
+
+    /// Render as a JSON array of objects.
+    pub fn to_json(&self) -> String {
+        fn num(v: f64) -> String {
+            // JSON has no NaN/Infinity; clamp degenerate measurements.
+            if v.is_finite() {
+                format!("{v:.3}")
+            } else {
+                "0.0".to_string()
+            }
+        }
+        let mut out = String::from("[\n");
+        for (i, (name, m)) in self.entries.iter().enumerate() {
+            // Bench names are ASCII identifiers/labels; escape the two
+            // characters that could break a JSON string anyway.
+            let esc: String = name
+                .chars()
+                .flat_map(|c| match c {
+                    '"' => vec!['\\', '"'],
+                    '\\' => vec!['\\', '\\'],
+                    c => vec![c],
+                })
+                .collect();
+            out.push_str(&format!(
+                "  {{\"name\": \"{esc}\", \"ns_per_op_p50\": {}, \"ns_per_op_mean\": {}, \"ns_per_op_min\": {}, \"ops_per_sec\": {}, \"total_ops\": {}}}{}\n",
+                num(m.ns_per_op_p50),
+                num(m.ns_per_op_mean),
+                num(m.ns_per_op_min),
+                num(m.ops_per_sec()),
+                m.total_ops,
+                if i + 1 < self.entries.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("]\n");
+        out
+    }
+
+    /// Write the JSON to `path` and print a pointer line.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        println!("wrote {path} ({} measurements)", self.entries.len());
+        Ok(())
+    }
+}
+
 /// Print a section header.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
@@ -80,4 +169,44 @@ pub fn row(cols: &[&str], widths: &[usize]) {
         line.push_str(&format!("{c:<w$} ", w = w));
     }
     println!("{}", line.trim_end());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_report_shape() {
+        let mut r = JsonReport::new();
+        r.push(
+            "label \"quoted\"",
+            Measurement {
+                ns_per_op_p50: 1.5,
+                ns_per_op_mean: 2.0,
+                ns_per_op_min: 1.0,
+                total_ops: 10,
+            },
+        );
+        r.push(
+            "degenerate",
+            Measurement {
+                ns_per_op_p50: 0.0,
+                ns_per_op_mean: 0.0,
+                ns_per_op_min: 0.0,
+                total_ops: 0,
+            },
+        );
+        let j = r.to_json();
+        assert!(j.trim_start().starts_with('['));
+        assert!(j.trim_end().ends_with(']'));
+        assert_eq!(j.matches('{').count(), 2);
+        assert_eq!(j.matches('}').count(), 2);
+        assert!(j.contains("\"ns_per_op_p50\": 1.500"));
+        assert!(j.contains("label \\\"quoted\\\""));
+        // p50 == 0 makes ops_per_sec infinite; JSON has no Infinity, so it
+        // is clamped to 0.0.
+        assert!(j.contains("\"ops_per_sec\": 0.0"));
+        // exactly one separating comma between the two objects
+        assert_eq!(j.matches("},").count(), 1);
+    }
 }

@@ -12,12 +12,17 @@
 //!                          or AOT JAX/Pallas artifacts via PJRT ┘
 //! ```
 //!
-//! Workers tally simulated FPGA block usage per operation class, so every
-//! run also produces the paper's fabric-level utilization/energy report.
+//! Workers tally simulated FPGA block usage per operation class (lock-free
+//! atomic counters), so every run also produces the paper's fabric-level
+//! utilization/energy report — computed in closed form from the per-class
+//! counts, independent of how many requests were served. Responses travel
+//! back through pooled oneshot reply slots (`oneshot`), not per-request
+//! channels, keeping the steady-state submit→response path allocation-free.
 
 mod adaptive;
 mod backend;
 mod batcher;
+mod oneshot;
 mod request;
 mod service;
 #[cfg(test)]
@@ -26,5 +31,6 @@ mod tests;
 pub use adaptive::{orient2d_adaptive, AdaptiveStats, Orient};
 pub use backend::{Backend, BackendChoice, NativeBackend, PjrtBackend};
 pub use batcher::{Batcher, SubmitError};
+pub use oneshot::{RecvError, ReplyHandle, ReplyPool, ReplySender, TryRecvError};
 pub use request::{Request, Response};
 pub use service::{Service, ServiceReport};

@@ -1,0 +1,313 @@
+//! Pooled oneshot reply slots: the request→response rendezvous without a
+//! per-request channel allocation.
+//!
+//! The seed service created an `std::sync::mpsc::channel()` per request —
+//! an allocation (and its upgrade machinery) on the submit hot path for a
+//! value that is sent exactly once. A [`ReplyPool`] replaces it with a
+//! recycled slot: one `Mutex<SlotState>` + `Condvar` per in-flight request,
+//! drawn from a free list and returned to it when **both** sides (the
+//! worker's [`ReplySender`] and the client's [`ReplyHandle`]) are done. In
+//! steady state — a bounded number of requests in flight — `submit` performs
+//! no allocation at all (§Perf).
+//!
+//! Protocol: each side sets its `*_dropped` flag in its `Drop` impl under
+//! the slot mutex; whichever side drops *second* observes both flags set,
+//! resets the slot and pushes it back onto the free list. Because the flags
+//! are only ever written in `Drop` and the check happens in the same
+//! critical section, exactly one side recycles and never while the other
+//! side can still touch the slot.
+
+use super::request::Response;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Upper bound on pooled slots — beyond this, retired slots are simply
+/// freed. Sized generously above any sane in-flight count (queue depths
+/// default to 4096 per precision).
+const POOL_CAP: usize = 16_384;
+
+/// The worker side of the slot dropped without delivering a response
+/// (backend error or shutdown) — the oneshot analogue of a closed channel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+impl core::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(f, "reply sender dropped without a response")
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+/// Error from [`ReplyHandle::try_recv`] — mirrors
+/// `std::sync::mpsc::TryRecvError` so pollers can tell a pending response
+/// from a dead request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TryRecvError {
+    /// No response yet; the worker may still deliver one.
+    Empty,
+    /// The sender dropped without delivering a response (backend error or
+    /// shutdown) — no response will ever arrive.
+    Disconnected,
+}
+
+impl core::fmt::Display for TryRecvError {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        match self {
+            TryRecvError::Empty => write!(f, "response not ready yet"),
+            TryRecvError::Disconnected => {
+                write!(f, "reply sender dropped without a response")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TryRecvError {}
+
+/// Rendezvous state for one in-flight request.
+#[derive(Debug, Default)]
+struct SlotState {
+    /// The delivered response, if any (taken by the first successful recv).
+    resp: Option<Response>,
+    /// The worker-side [`ReplySender`] has been dropped (after `send` or on
+    /// the error path).
+    sender_dropped: bool,
+    /// The client-side [`ReplyHandle`] has been dropped.
+    receiver_dropped: bool,
+}
+
+#[derive(Debug, Default)]
+struct SlotInner {
+    state: Mutex<SlotState>,
+    ready: Condvar,
+}
+
+#[derive(Debug, Default)]
+struct PoolInner {
+    free: Mutex<Vec<Arc<SlotInner>>>,
+}
+
+impl PoolInner {
+    /// Return a retired slot to the free list (unless the pool is full).
+    /// The slot's state has already been reset by the caller.
+    fn recycle(&self, slot: Arc<SlotInner>) {
+        let mut free = self.free.lock().unwrap();
+        if free.len() < POOL_CAP {
+            free.push(slot);
+        }
+    }
+}
+
+/// Called from both `Drop` impls: mark this side done and, if the other
+/// side is already done, reset the slot and hand it back to the pool.
+fn finish_side(slot: &Arc<SlotInner>, pool: &Arc<PoolInner>, is_sender: bool) {
+    let both_done = {
+        let mut st = slot.state.lock().unwrap();
+        if is_sender {
+            st.sender_dropped = true;
+        } else {
+            st.receiver_dropped = true;
+        }
+        if st.sender_dropped && st.receiver_dropped {
+            // Reset under the same lock so the slot re-enters the pool
+            // pristine; the other side's handle is already gone.
+            *st = SlotState::default();
+            true
+        } else {
+            false
+        }
+    };
+    if both_done {
+        pool.recycle(slot.clone());
+    } else if is_sender {
+        // Sender gone without (or after) a response: wake any blocked recv
+        // so it can observe the disconnect.
+        slot.ready.notify_all();
+    }
+}
+
+/// A recycling pool of oneshot reply slots.
+///
+/// Cloning the pool is cheap (one `Arc`); all clones share the free list.
+/// [`ReplyPool::acquire`] pops a slot (or allocates one the first few
+/// times) and returns the two ends of the rendezvous.
+#[derive(Clone, Debug, Default)]
+pub struct ReplyPool {
+    inner: Arc<PoolInner>,
+}
+
+impl ReplyPool {
+    /// New empty pool.
+    pub fn new() -> ReplyPool {
+        ReplyPool::default()
+    }
+
+    /// Take a slot from the pool (allocating only when the free list is
+    /// empty) and split it into the sender and receiver ends.
+    pub fn acquire(&self) -> (ReplySender, ReplyHandle) {
+        // Pop under the lock; allocate the fallback slot only after the
+        // guard is released so a pool miss doesn't hold up other threads.
+        let pooled = self.inner.free.lock().unwrap().pop();
+        let slot = pooled.unwrap_or_default();
+        (
+            ReplySender { slot: slot.clone(), pool: self.inner.clone() },
+            ReplyHandle { slot, pool: self.inner.clone() },
+        )
+    }
+
+    /// Slots currently sitting in the free list (diagnostics/tests).
+    pub fn pooled(&self) -> usize {
+        self.inner.free.lock().unwrap().len()
+    }
+}
+
+/// Worker-side end of a reply slot: delivers at most one [`Response`].
+///
+/// Dropping the sender without calling [`ReplySender::send`] closes the
+/// slot — a blocked [`ReplyHandle::recv`] returns [`RecvError`], exactly
+/// like a dropped `mpsc::Sender`.
+#[derive(Debug)]
+pub struct ReplySender {
+    slot: Arc<SlotInner>,
+    pool: Arc<PoolInner>,
+}
+
+impl ReplySender {
+    /// Deliver the response and wake the receiver. Consumes the sender;
+    /// the slot is recycled once the client side is also done.
+    pub fn send(self, resp: Response) {
+        {
+            let mut st = self.slot.state.lock().unwrap();
+            // Client may have given up already; the slot is recycled by
+            // our Drop below either way.
+            st.resp = Some(resp);
+        }
+        self.slot.ready.notify_one();
+        // `self` drops here: sets `sender_dropped` and recycles if the
+        // receiver is already gone.
+    }
+}
+
+impl Drop for ReplySender {
+    fn drop(&mut self) {
+        finish_side(&self.slot, &self.pool, true);
+    }
+}
+
+/// Client-side end of a reply slot, returned by
+/// [`super::Service::submit`] / [`super::Service::try_submit`].
+///
+/// Mirrors the `mpsc::Receiver` surface the service used to return:
+/// [`ReplyHandle::recv`] blocks, [`ReplyHandle::try_recv`] polls. The
+/// response can be received exactly once; a second call reports
+/// [`RecvError`].
+#[derive(Debug)]
+pub struct ReplyHandle {
+    slot: Arc<SlotInner>,
+    pool: Arc<PoolInner>,
+}
+
+impl ReplyHandle {
+    /// Block until the worker delivers the response (or drops the sender).
+    pub fn recv(&self) -> Result<Response, RecvError> {
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            if let Some(resp) = st.resp.take() {
+                return Ok(resp);
+            }
+            if st.sender_dropped {
+                return Err(RecvError);
+            }
+            st = self.slot.ready.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking poll: [`TryRecvError::Empty`] while the response is
+    /// pending, [`TryRecvError::Disconnected`] once the sender dropped
+    /// without delivering one (so poll loops can bail on dead requests).
+    pub fn try_recv(&self) -> Result<Response, TryRecvError> {
+        let mut st = self.slot.state.lock().unwrap();
+        if let Some(resp) = st.resp.take() {
+            Ok(resp)
+        } else if st.sender_dropped {
+            Err(TryRecvError::Disconnected)
+        } else {
+            Err(TryRecvError::Empty)
+        }
+    }
+}
+
+impl Drop for ReplyHandle {
+    fn drop(&mut self) {
+        finish_side(&self.slot, &self.pool, false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Response;
+
+    fn resp(id: u64) -> Response {
+        Response { id, bits: id as u128 * 3, latency_ns: 1, batch_size: 1 }
+    }
+
+    #[test]
+    fn roundtrip_and_recycle() {
+        let pool = ReplyPool::new();
+        for i in 0..100u64 {
+            let (tx, rx) = pool.acquire();
+            tx.send(resp(i));
+            assert_eq!(rx.recv().unwrap().id, i);
+            drop(rx);
+            // Both ends done: the slot is back in the free list.
+            assert_eq!(pool.pooled(), 1, "iteration {i}");
+        }
+    }
+
+    #[test]
+    fn sender_drop_closes() {
+        let pool = ReplyPool::new();
+        let (tx, rx) = pool.acquire();
+        drop(tx);
+        assert_eq!(rx.recv(), Err(RecvError));
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+        drop(rx);
+        assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn receiver_drop_first_still_recycles() {
+        let pool = ReplyPool::new();
+        let (tx, rx) = pool.acquire();
+        drop(rx);
+        tx.send(resp(7)); // delivered into the void
+        assert_eq!(pool.pooled(), 1);
+        // The recycled slot comes back pristine: pending, not disconnected.
+        let (tx2, rx2) = pool.acquire();
+        assert_eq!(pool.pooled(), 0);
+        assert_eq!(rx2.try_recv(), Err(TryRecvError::Empty));
+        tx2.send(resp(8));
+        assert_eq!(rx2.recv().unwrap().id, 8);
+    }
+
+    #[test]
+    fn recv_blocks_until_send_across_threads() {
+        let pool = ReplyPool::new();
+        let (tx, rx) = pool.acquire();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            tx.send(resp(42));
+        });
+        assert_eq!(rx.recv().unwrap().id, 42);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn second_recv_errors() {
+        let pool = ReplyPool::new();
+        let (tx, rx) = pool.acquire();
+        tx.send(resp(1));
+        assert!(rx.recv().is_ok());
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+}

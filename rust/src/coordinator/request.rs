@@ -20,7 +20,7 @@ pub struct Request {
 }
 
 /// A completed multiplication.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Response {
     /// Echo of the request id.
     pub id: u64,

@@ -3,30 +3,38 @@
 
 use super::backend::BackendChoice;
 use super::batcher::{Batcher, SubmitError};
+use super::oneshot::{ReplyHandle, ReplyPool, ReplySender};
 use super::request::{Request, Response};
 use crate::config::ServiceConfig;
 use crate::decomp::{Precision, SchemeKind};
-use crate::fabric::{simulate_stream, CostModel, FabricConfig, FabricKind, OpClass, StreamReport};
+use crate::fabric::{simulate_counts, CostModel, FabricConfig, FabricKind, OpClass, StreamReport};
 use crate::metrics::Registry;
 use std::collections::BTreeMap;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 struct Item {
     req: Request,
-    reply: mpsc::Sender<Response>,
+    reply: ReplySender,
 }
 
 struct Shared {
-    batchers: BTreeMap<Precision, Batcher<Item>>,
+    /// One batcher per precision, indexed by [`prec_idx`] — a flat array
+    /// lookup on the submit and worker paths (no map walk — §Perf).
+    batchers: [Batcher<Item>; 3],
     metrics: Registry,
     /// Hot-path instruments, resolved once (no registry lookup or string
     /// formatting per request — §Perf).
     hot: HotMetrics,
-    /// Op counts per class for the fabric report.
-    op_counts: Mutex<BTreeMap<OpClass, u64>>,
+    /// Lock-free per-class op counters for the fabric report.
+    op_counts: OpCounters,
+    /// Recycled oneshot reply slots, one pool per precision (no
+    /// per-request channel allocation, and the free-list mutex shares the
+    /// serialization domain of that precision's batcher instead of being a
+    /// single cross-precision contention point).
+    pools: [ReplyPool; 3],
     max_batch: usize,
     linger: Duration,
     scheme: SchemeKind,
@@ -61,12 +69,66 @@ fn prec_idx(p: Precision) -> usize {
     }
 }
 
+#[inline]
+fn kind_idx(k: SchemeKind) -> usize {
+    match k {
+        SchemeKind::Civp => 0,
+        SchemeKind::Baseline18 => 1,
+        SchemeKind::Baseline25x18 => 2,
+        SchemeKind::Baseline9 => 3,
+    }
+}
+
+/// Flat array of per-(organization × precision) operation counters.
+///
+/// Workers bump one [`AtomicU64`] per *batch* (relaxed ordering); report
+/// readers snapshot the whole array without taking any lock. The
+/// consistency guarantee for clients: a worker increments the counter
+/// *before* releasing the batch's replies, and the release/acquire pairing
+/// of the reply-slot mutex makes the increment visible to any thread that
+/// has observed the response — so a client that got its answer always sees
+/// its op in [`Service::fabric_report`].
+struct OpCounters {
+    /// Indexed `kind_idx(kind) * 3 + prec_idx(precision)`.
+    counts: [AtomicU64; 12],
+}
+
+/// `const` initializer usable for array repetition.
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+impl OpCounters {
+    fn new() -> OpCounters {
+        OpCounters { counts: [ZERO_COUNTER; 12] }
+    }
+
+    #[inline]
+    fn slot(&self, class: OpClass) -> &AtomicU64 {
+        &self.counts[kind_idx(class.organization) * 3 + prec_idx(class.precision)]
+    }
+
+    /// Lock-free snapshot of all non-zero classes.
+    fn snapshot(&self) -> BTreeMap<OpClass, u64> {
+        let mut out = BTreeMap::new();
+        for kind in SchemeKind::ALL {
+            for precision in Precision::ALL {
+                let class = OpClass { precision, organization: kind };
+                let n = self.slot(class).load(Ordering::Relaxed);
+                if n > 0 {
+                    out.insert(class, n);
+                }
+            }
+        }
+        out
+    }
+}
+
 /// The running multiplication service.
 ///
-/// `submit` routes a request to its precision queue and returns a receiver
-/// for the response; `mul_blocking` is the convenience wrapper. Dropping
-/// the service (or calling [`Service::shutdown`]) drains queues and joins
-/// the workers.
+/// `submit` routes a request to its precision queue and returns a reply
+/// handle for the response; `mul_blocking` is the convenience wrapper.
+/// Dropping the service (or calling [`Service::shutdown`]) drains queues
+/// and joins the workers.
 pub struct Service {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
@@ -78,17 +140,14 @@ pub struct Service {
 impl Service {
     /// Start a service per `cfg` with the given backend.
     pub fn start(cfg: &ServiceConfig, backend: BackendChoice) -> Service {
-        let mut batchers = BTreeMap::new();
-        for p in Precision::ALL {
-            batchers.insert(p, Batcher::new(cfg.queue_depth));
-        }
         let metrics = Registry::new();
         let hot = HotMetrics::resolve(&metrics);
         let shared = Arc::new(Shared {
-            batchers,
+            batchers: core::array::from_fn(|_| Batcher::new(cfg.queue_depth)),
             metrics,
             hot,
-            op_counts: Mutex::new(BTreeMap::new()),
+            op_counts: OpCounters::new(),
+            pools: core::array::from_fn(|_| ReplyPool::new()),
             max_batch: cfg.max_batch,
             linger: Duration::from_micros(cfg.linger_us),
             scheme: cfg.scheme,
@@ -98,7 +157,7 @@ impl Service {
             BackendChoice::Pjrt(_) => "pjrt",
         };
         // One worker set per precision queue; each worker owns a backend
-        // instance (DecompMul stats merge into op_counts via class counts).
+        // instance (op classes tallied lock-free into `op_counts`).
         let mut workers = Vec::new();
         for p in Precision::ALL {
             for w in 0..cfg.workers {
@@ -119,37 +178,44 @@ impl Service {
         Service { shared, workers, fabric, cost: CostModel::default(), backend_name }
     }
 
-    /// Submit a request; returns the response channel. Blocks on
-    /// backpressure when the precision queue is full.
+    /// Submit a request; returns the reply handle. Blocks on backpressure
+    /// when the precision queue is full.
+    ///
+    /// Request counters are bumped only once the batcher has *accepted*
+    /// the item, so `requests_total` / `requests_{prec}` count exactly the
+    /// requests that will receive a reply (or be drained at shutdown).
     pub fn submit(
         &self,
         id: u64,
         precision: Precision,
         a: u128,
         b: u128,
-    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
-        let (tx, rx) = mpsc::channel();
+    ) -> Result<ReplyHandle, SubmitError> {
+        let (tx, rx) = self.shared.pools[prec_idx(precision)].acquire();
         let req = Request { id, precision, a, b, enqueued: Instant::now() };
+        self.shared.batchers[prec_idx(precision)].submit(Item { req, reply: tx })?;
         self.shared.hot.requests_total.inc();
         self.shared.hot.requests_by_prec[prec_idx(precision)].inc();
-        self.shared.batchers[&precision].submit(Item { req, reply: tx })?;
         Ok(rx)
     }
 
     /// Submit without blocking; `QueueFull` applies backpressure to the
-    /// caller.
+    /// caller. Accounting matches [`Service::submit`]: accepted requests
+    /// bump `requests_total` and the per-precision counter exactly once;
+    /// rejected ones bump only `rejected_queue_full`.
     pub fn try_submit(
         &self,
         id: u64,
         precision: Precision,
         a: u128,
         b: u128,
-    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
-        let (tx, rx) = mpsc::channel();
+    ) -> Result<ReplyHandle, SubmitError> {
+        let (tx, rx) = self.shared.pools[prec_idx(precision)].acquire();
         let req = Request { id, precision, a, b, enqueued: Instant::now() };
-        match self.shared.batchers[&precision].try_submit(Item { req, reply: tx }) {
+        match self.shared.batchers[prec_idx(precision)].try_submit(Item { req, reply: tx }) {
             Ok(()) => {
                 self.shared.hot.requests_total.inc();
+                self.shared.hot.requests_by_prec[prec_idx(precision)].inc();
                 Ok(rx)
             }
             Err(e) => {
@@ -172,17 +238,23 @@ impl Service {
         self.shared.metrics.snapshot()
     }
 
-    /// Fabric-level report for everything executed so far: replays the op
-    /// mix through the cycle/energy model (E7).
+    /// Lock-free snapshot of the per-class op counters.
+    ///
+    /// Consistency: workers account a batch's ops *before* releasing its
+    /// replies, so a caller that has received a response is guaranteed to
+    /// see that op included here. No lock is held while reading; a
+    /// snapshot taken concurrently with in-flight batches may trail them.
+    pub fn op_counts(&self) -> BTreeMap<OpClass, u64> {
+        self.shared.op_counts.snapshot()
+    }
+
+    /// Fabric-level report for everything executed so far: the accumulated
+    /// per-class counts through the cycle/energy model (E7), computed in
+    /// closed form — O(#op-classes), independent of how many requests have
+    /// been served, and bit-identical to replaying the op stream through
+    /// [`crate::fabric::simulate_stream`].
     pub fn fabric_report(&self) -> StreamReport {
-        let counts = self.shared.op_counts.lock().unwrap().clone();
-        let mut ops = Vec::new();
-        for (class, n) in counts {
-            for _ in 0..n {
-                ops.push(class);
-            }
-        }
-        simulate_stream(&ops, &self.fabric, &self.cost)
+        simulate_counts(&self.shared.op_counts.snapshot(), &self.fabric, &self.cost)
     }
 
     /// Service-level summary (throughput etc. come from the caller's wall
@@ -205,7 +277,7 @@ impl Service {
     }
 
     fn shutdown_inner(&mut self) {
-        for b in self.shared.batchers.values() {
+        for b in &self.shared.batchers {
             b.close();
         }
         for w in self.workers.drain(..) {
@@ -226,14 +298,16 @@ fn worker_loop(precision: Precision, shared: Arc<Shared>, backend: &mut dyn supe
     let responses = shared.metrics.counter("responses_total");
     let batches = shared.metrics.counter("batches_total");
     let errors = shared.metrics.counter("backend_errors");
-    // Per-worker scratch, reused across batches: with the backend writing
-    // into `out` and the significand plans shared via `PlanCache`, the
-    // steady-state batch path performs no allocation (§Perf).
+    // Everything loop-invariant is resolved once: the precision's batcher,
+    // the op-class counter slot, and the scratch buffers. With the backend
+    // writing into `out` and the significand plans shared via `PlanCache`,
+    // the steady-state batch path performs no allocation (§Perf).
+    let batcher = &shared.batchers[prec_idx(precision)];
+    let op_counter = shared.op_counts.slot(OpClass { precision, organization: shared.scheme });
     let mut a: Vec<u128> = Vec::with_capacity(shared.max_batch);
     let mut b: Vec<u128> = Vec::with_capacity(shared.max_batch);
     let mut out: Vec<u128> = Vec::with_capacity(shared.max_batch);
-    while let Some(batch) = shared.batchers[&precision].next_batch(shared.max_batch, shared.linger)
-    {
+    while let Some(batch) = batcher.next_batch(shared.max_batch, shared.linger) {
         let n = batch.len();
         bsize.record(n as u64);
         batches.inc();
@@ -246,16 +320,16 @@ fn worker_loop(precision: Precision, shared: Arc<Shared>, backend: &mut dyn supe
                 debug_assert_eq!(out.len(), n, "backend produced wrong batch size");
                 // Account the ops *before* releasing replies so a client
                 // that observed its response also observes the op in
-                // `fabric_report`.
-                let class = OpClass { precision, organization: shared.scheme };
-                *shared.op_counts.lock().unwrap().entry(class).or_insert(0) += n as u64;
+                // `fabric_report` (see `OpCounters`).
+                op_counter.fetch_add(n as u64, Ordering::Relaxed);
                 let now = Instant::now();
                 for (item, &bits) in batch.into_iter().zip(out.iter()) {
                     let latency = now.duration_since(item.req.enqueued).as_nanos() as u64;
                     lat.record(latency);
                     responses.inc();
-                    // Receiver may have given up; ignore send failures.
-                    let _ = item.reply.send(Response {
+                    // Receiver may have given up; delivery into an
+                    // abandoned slot is harmless.
+                    item.reply.send(Response {
                         id: item.req.id,
                         bits,
                         latency_ns: latency,
@@ -270,7 +344,7 @@ fn worker_loop(precision: Precision, shared: Arc<Shared>, backend: &mut dyn supe
                     backend.name(),
                     precision.name()
                 );
-                // Drop replies: receivers observe a closed channel.
+                // Drop replies: receivers observe a closed slot.
             }
         }
     }

@@ -39,14 +39,24 @@ impl ExecStats {
 
     /// Merge another stats block in.
     pub fn merge(&mut self, other: &ExecStats) {
+        self.merge_scaled(other, 1);
+    }
+
+    /// Merge `other` scaled by `n` — the accounting of `n` identical
+    /// multiplications in one shot. Block usage per multiply is a static
+    /// property of the scheme, so a batch of `n` executions through one
+    /// plan contributes exactly `n ×` the plan's per-multiply delta; this
+    /// is what makes [`super::Plan::execute_batch`]'s accounting O(1) in
+    /// the batch size (§Perf).
+    pub fn merge_scaled(&mut self, other: &ExecStats, n: u64) {
         for i in 0..5 {
-            self.ops_by_kind[i] += other.ops_by_kind[i];
+            self.ops_by_kind[i] += other.ops_by_kind[i] * n;
         }
-        self.tiles += other.tiles;
-        self.padded_tiles += other.padded_tiles;
-        self.useful_bitops += other.useful_bitops;
-        self.capacity_bitops += other.capacity_bitops;
-        self.muls += other.muls;
+        self.tiles += other.tiles * n;
+        self.padded_tiles += other.padded_tiles * n;
+        self.useful_bitops += other.useful_bitops * n;
+        self.capacity_bitops += other.capacity_bitops * n;
+        self.muls += other.muls * n;
     }
 
     /// Ops for one kind (0 if none).

@@ -48,6 +48,31 @@ pub struct PlanStep {
     pub limb: u32,
     /// In-limb bit shift of `off_a + off_b`.
     pub shift: u32,
+    /// Precomputed `wa`-bit mask (`(1 << wa) - 1`).
+    pub mask_a: u64,
+    /// Precomputed `wb`-bit mask.
+    pub mask_b: u64,
+}
+
+/// Width-specialized execute loop, selected once at plan-compile time.
+///
+/// The generic loop calls [`U128::extract_u64`] per chunk, which pays a
+/// limb-index computation and a cross-limb splice that narrow schemes never
+/// need. The paper's IEEE partitions are narrow: every single-precision
+/// organization and most double-precision ones keep both operands entirely
+/// inside limb 0 (padded widths ≤ 64), and CIVP single precision is one
+/// full-width block firing. The kernel is a static property of the step
+/// table, so it is picked in [`Plan::compile`], not per multiply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kernel {
+    /// Exactly one step at offset `(0, 0)` — the whole product is a single
+    /// dedicated-block firing (CIVP single precision).
+    Mono,
+    /// Every chunk of both operands lies within bit range `[0, 64)`: read
+    /// `limbs[0]` once per operand and shift/mask per step.
+    Limb0,
+    /// Arbitrary widths (quad, `25x18` double, wide integer schemes).
+    Generic,
 }
 
 /// A compiled, allocation-free execution plan for one scheme.
@@ -74,6 +99,7 @@ pub struct Plan {
     scheme: Scheme,
     steps: Box<[PlanStep]>,
     per_mul: ExecStats,
+    kernel: Kernel,
 }
 
 impl Plan {
@@ -99,10 +125,19 @@ impl Plan {
                     wb: t.wb,
                     limb: off / 64,
                     shift: off % 64,
+                    mask_a: low_mask(t.wa),
+                    mask_b: low_mask(t.wb),
                 }
             })
             .collect();
-        Plan { scheme, steps: steps.into_boxed_slice(), per_mul }
+        let kernel = if steps.len() == 1 && steps[0].off_a == 0 && steps[0].off_b == 0 {
+            Kernel::Mono
+        } else if steps.iter().all(|s| s.off_a + s.wa <= 64 && s.off_b + s.wb <= 64) {
+            Kernel::Limb0
+        } else {
+            Kernel::Generic
+        };
+        Plan { scheme, steps: steps.into_boxed_slice(), per_mul, kernel }
     }
 
     /// The scheme this plan was compiled from.
@@ -135,25 +170,61 @@ impl Plan {
     ///
     /// Identical dataflow to [`super::exec::execute_tiles`] — each step is
     /// one dedicated-block multiplication, shift-accumulated limb-wise —
-    /// but with no tile vector, no per-step stats arithmetic and no
-    /// offset division.
+    /// but with no tile vector, no per-step stats arithmetic, no offset
+    /// division, and a width-specialized inner loop (see `Kernel`).
     pub fn execute(&self, a: U128, b: U128, stats: &mut ExecStats) -> U256 {
-        debug_assert!(a.bit_len() <= self.scheme.eff_bits, "operand A wider than plan");
-        debug_assert!(b.bit_len() <= self.scheme.eff_bits, "operand B wider than plan");
-        let mut acc = U256::ZERO;
-        for step in self.steps.iter() {
-            let pa = a.extract_u64(step.off_a, step.wa);
-            let pb = b.extract_u64(step.off_b, step.wb);
-            let prod = (pa as u128) * (pb as u128);
-            accumulate_shifted(&mut acc, prod, step.limb as usize, step.shift);
-        }
+        let acc = self.product(a, b);
         stats.merge(&self.per_mul);
         acc
     }
 
+    /// The raw product through the compiled steps — the shared inner body
+    /// of [`Plan::execute`] and [`Plan::execute_batch`], with the kernel
+    /// dispatch resolved from the compile-time classification.
+    #[inline]
+    fn product(&self, a: U128, b: U128) -> U256 {
+        debug_assert!(a.bit_len() <= self.scheme.eff_bits, "operand A wider than plan");
+        debug_assert!(b.bit_len() <= self.scheme.eff_bits, "operand B wider than plan");
+        match self.kernel {
+            Kernel::Mono => {
+                // One full-width firing: chunk 0 is the whole operand.
+                let step = &self.steps[0];
+                let prod = ((a.limbs[0] & step.mask_a) as u128)
+                    * ((b.limbs[0] & step.mask_b) as u128);
+                U256::from_u128(prod)
+            }
+            Kernel::Limb0 => {
+                // All chunks live in limb 0: one limb read per operand,
+                // then shift/mask per step — no cross-limb extraction.
+                let a0 = a.limbs[0];
+                let b0 = b.limbs[0];
+                let mut acc = U256::ZERO;
+                for step in self.steps.iter() {
+                    let pa = (a0 >> step.off_a) & step.mask_a;
+                    let pb = (b0 >> step.off_b) & step.mask_b;
+                    let prod = (pa as u128) * (pb as u128);
+                    accumulate_shifted(&mut acc, prod, step.limb as usize, step.shift);
+                }
+                acc
+            }
+            Kernel::Generic => {
+                let mut acc = U256::ZERO;
+                for step in self.steps.iter() {
+                    let pa = a.extract_u64(step.off_a, step.wa);
+                    let pb = b.extract_u64(step.off_b, step.wb);
+                    let prod = (pa as u128) * (pb as u128);
+                    accumulate_shifted(&mut acc, prod, step.limb as usize, step.shift);
+                }
+                acc
+            }
+        }
+    }
+
     /// Execute a whole batch of raw significand products through the
     /// plan, appending them to `out` (cleared first). Zero allocations
-    /// beyond `out`'s (reusable) capacity.
+    /// beyond `out`'s (reusable) capacity, and the batch's accounting is
+    /// one scaled merge of the precomputed per-multiply delta — O(1) in
+    /// the batch size, not one merge per element (§Perf).
     ///
     /// This is the raw-integer batch surface (used by the benches and by
     /// direct integer-multiply callers). The coordinator's IEEE batch
@@ -176,8 +247,19 @@ impl Plan {
         out.clear();
         out.reserve(a.len());
         for (&x, &y) in a.iter().zip(b) {
-            out.push(self.execute(x, y, stats));
+            out.push(self.product(x, y));
         }
+        stats.merge_scaled(&self.per_mul, a.len() as u64);
+    }
+}
+
+/// Low `w`-bit mask (`w <= 64`).
+#[inline]
+const fn low_mask(w: u32) -> u64 {
+    if w >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << w) - 1
     }
 }
 

@@ -12,7 +12,9 @@
 //!   `9x9`; the legacy baseline ships `18x18`/`25x18`/`9x9`).
 //! * [`sched`] — list-scheduling of a multiplication's tile DAG onto the
 //!   finite block instances: latency (cycles), pipelined initiation
-//!   interval, energy per operation.
+//!   interval, energy per operation. Stream reports come in two flavors:
+//!   `simulate_stream` (walks a materialized op list — the oracle) and
+//!   `simulate_counts` (closed form over per-class counts, O(#classes)).
 //! * [`report`] — aggregated per-run reports used by the benches.
 
 pub mod cost;
@@ -27,4 +29,4 @@ pub use cost::{adder_tree_depth, CostModel};
 pub use pool::{FabricConfig, FabricKind};
 pub use repair::{gated_tile_energy, gating_report, FaultOutcome, RepairableFabric};
 pub use report::{FabricReport, StreamReport};
-pub use sched::{schedule_op, simulate_stream, OpClass, ScheduledOp};
+pub use sched::{schedule_op, simulate_counts, simulate_stream, OpClass, ScheduledOp};

@@ -1,7 +1,11 @@
 //! Report structures produced by the fabric simulator.
 
 /// Per-class scheduling report.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` is exact (including the `f64` energy fields): the
+/// count-based and stream-based simulators are required to agree
+/// bit-for-bit, and the equivalence tests compare whole reports.
+#[derive(Clone, Debug, PartialEq)]
 pub struct FabricReport {
     /// "organization-precision" label.
     pub label: String,
@@ -30,7 +34,9 @@ impl FabricReport {
 }
 
 /// Whole-stream simulation report (E7 rows).
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` is exact, including `f64` fields — see [`FabricReport`].
+#[derive(Clone, Debug, PartialEq)]
 pub struct StreamReport {
     /// Fabric name.
     pub fabric: String,

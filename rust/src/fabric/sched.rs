@@ -85,6 +85,11 @@ pub fn schedule_op(scheme: &Scheme, fabric: &FabricConfig, cost: &CostModel) -> 
 /// Simulate a stream of `ops` (a workload mix) through `fabric`, assuming
 /// full pipelining and in-order issue — the steady-state model behind the
 /// paper's throughput/power comparison (E7).
+///
+/// This walks the materialized op list (O(#ops) just to count it) and is
+/// kept as the *oracle*: [`simulate_counts`] computes the same report in
+/// closed form from per-class counts, and the property tests pin the two
+/// bit-for-bit against each other.
 pub fn simulate_stream(
     ops: &[OpClass],
     fabric: &FabricConfig,
@@ -134,6 +139,77 @@ pub fn simulate_stream(
     StreamReport {
         fabric: fabric.name.clone(),
         total_ops: ops.len() as u64,
+        cycles,
+        dyn_energy,
+        useful_energy,
+        static_energy,
+        per_class: per_class_reports,
+    }
+}
+
+/// Compute the steady-state stream report in closed form from per-class
+/// operation counts — O(#op-classes) time and memory, independent of how
+/// many operations the counts represent.
+///
+/// The static tile wiring means each class needs scheduling exactly once;
+/// `n` pipelined ops of a class then cost `n`-scaled energy and an issue
+/// interval dictated by the most oversubscribed block kind — the same
+/// analytical pipelining model [`simulate_stream`] applies per class.
+/// Classes with a zero count are skipped (they never appear in a
+/// materialized op stream either), and the per-class arithmetic follows
+/// `simulate_stream`'s exact operation order so the two agree *bit-for-
+/// bit* on every field — pinned by `simulate_counts_matches_stream_oracle`
+/// in the fabric tests.
+///
+/// This is what [`crate::coordinator::Service::fabric_report`] runs over
+/// the service's lock-free per-class counters: reporting cost no longer
+/// grows with traffic.
+pub fn simulate_counts(
+    counts: &BTreeMap<OpClass, u64>,
+    fabric: &FabricConfig,
+    cost: &CostModel,
+) -> StreamReport {
+    let mut total_ops = 0u64;
+    let mut cycles = 0u64;
+    let mut dyn_energy = 0.0;
+    let mut useful_energy = 0.0;
+    let mut last_latency = 0u32;
+    let mut per_class_reports = Vec::new();
+    for (class, &count) in counts {
+        if count == 0 {
+            continue;
+        }
+        total_ops += count;
+        let scheme = class.scheme();
+        let s = schedule_op(&scheme, fabric, cost);
+        let mut need: BTreeMap<crate::decomp::BlockKind, u64> = BTreeMap::new();
+        for t in scheme.tiles() {
+            *need.entry(t.kind).or_insert(0) += 1;
+        }
+        let mut issue = 1u64;
+        for (kind, n) in &need {
+            let avail = fabric.count(*kind) as u64;
+            issue = issue.max((count * n).div_ceil(avail));
+        }
+        cycles += issue;
+        last_latency = last_latency.max(s.latency_cycles);
+        dyn_energy += s.dyn_energy * count as f64;
+        useful_energy += s.useful_energy * count as f64;
+        per_class_reports.push(FabricReport {
+            label: format!("{}-{}", class.organization.name(), class.precision.name()),
+            ops: count,
+            cycles: issue + s.latency_cycles as u64,
+            dyn_energy: s.dyn_energy * count as f64,
+            useful_energy: s.useful_energy * count as f64,
+            latency_cycles: s.latency_cycles,
+            initiation_interval: s.initiation_interval,
+        });
+    }
+    cycles += last_latency as u64;
+    let static_energy = cost.static_energy(fabric.total_capacity(), cycles);
+    StreamReport {
+        fabric: fabric.name.clone(),
+        total_ops,
         cycles,
         dyn_energy,
         useful_energy,

@@ -175,6 +175,55 @@ fn stream_mixed_precisions() {
 }
 
 #[test]
+fn simulate_counts_matches_stream_oracle() {
+    // The closed-form count simulator must agree *bit-for-bit* with the
+    // materialized-stream oracle, over random op mixes covering all four
+    // organizations and all three precisions (counts 0..1000). Each fabric
+    // only serves the organizations whose block kinds it ships.
+    use std::collections::BTreeMap;
+    let cm = CostModel::default();
+    let fabric_classes: [(FabricConfig, Vec<SchemeKind>); 2] = [
+        (FabricConfig::civp_scaled(1), vec![SchemeKind::Civp, SchemeKind::Baseline9]),
+        (
+            FabricConfig::legacy_scaled(1),
+            vec![SchemeKind::Baseline18, SchemeKind::Baseline25x18, SchemeKind::Baseline9],
+        ),
+    ];
+    forall(0x301, 50, |rng| {
+        for (fabric, kinds) in &fabric_classes {
+            let mut counts: BTreeMap<OpClass, u64> = BTreeMap::new();
+            let mut ops: Vec<OpClass> = Vec::new();
+            for &organization in kinds {
+                for precision in Precision::ALL {
+                    let n = rng.below(1000);
+                    let class = OpClass { precision, organization };
+                    if n > 0 {
+                        counts.insert(class, n);
+                        ops.extend(std::iter::repeat(class).take(n as usize));
+                    } else if rng.chance(0.5) {
+                        // Zero-count entries must be ignored, matching a
+                        // stream in which the class never appears.
+                        counts.insert(class, 0);
+                    }
+                }
+            }
+            let from_counts = simulate_counts(&counts, fabric, &cm);
+            let from_stream = simulate_stream(&ops, fabric, &cm);
+            assert_eq!(from_counts, from_stream, "fabric {}", fabric.name);
+        }
+    });
+}
+
+#[test]
+fn simulate_counts_empty_is_empty() {
+    let cm = CostModel::default();
+    let r = simulate_counts(&std::collections::BTreeMap::new(), &FabricConfig::civp_scaled(1), &cm);
+    assert_eq!(r, simulate_stream(&[], &FabricConfig::civp_scaled(1), &cm));
+    assert_eq!(r.total_ops, 0);
+    assert!(r.per_class.is_empty());
+}
+
+#[test]
 fn stream_energy_accounting_consistent() {
     forall(0x300, 100, |rng| {
         let cm = CostModel::default();
