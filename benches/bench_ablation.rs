@@ -38,11 +38,9 @@ fn main() {
         let mut stats = civp::decomp::ExecStats::default();
         let exact = civp::decomp::execute(&scheme, a, b, &mut stats) == mul_u128(a, b);
         println!(
-            "{:<36} {:>8} {:>8.1} {:>8}",
-            label,
+            "{label:<36} {:>8} {:>8.1} {exact:>8}",
             census.padded_blocks,
             census.utilization * 100.0,
-            exact
         );
     }
     println!("(tile multiset is identical; Fig. 2's order confines padding to the 9x9/24x9 tiles)");
@@ -92,11 +90,9 @@ fn main() {
             .map(|h| h.p99)
             .unwrap_or(0);
         println!(
-            "{:<28} {:>12.0} {:>12} {:>12}",
+            "{:<28} {:>12.0} {batch_p50:>12} {lat_p99:>12}",
             format!("max={max_batch} linger={linger_us}us"),
             10_000.0 / wall,
-            batch_p50,
-            lat_p99
         );
     }
 
@@ -126,7 +122,10 @@ fn main() {
     // Self-repair: inject sub-unit faults into the 24x24 bank and watch the
     // quad schedule degrade gracefully (spares absorb early faults).
     use civp::fabric::{gating_report, schedule_op, FaultOutcome, RepairableFabric};
-    println!("{:<10} {:>9} {:>10} {:>8} {:>10}", "faults", "repaired", "lost-blk", "health%", "QP waves");
+    println!(
+        "{:<10} {:>9} {:>10} {:>8} {:>10}",
+        "faults", "repaired", "lost-blk", "health%", "QP waves"
+    );
     for spares in [2u32] {
         let mut fab = RepairableFabric::new(FabricConfig::civp_scaled(1), spares);
         let mut rng = civp::proput::Rng::new(0xE8D);
@@ -148,29 +147,26 @@ fn main() {
                 schedule_op(&scheme, &cfg, &cost).initiation_interval.to_string()
             };
             println!(
-                "{:<10} {:>9} {:>10} {:>8.1} {:>10}",
-                injected,
-                repaired,
-                lost,
+                "{injected:<10} {repaired:>9} {lost:>10} {:>8.1} {waves:>10}",
                 fab.health() * 100.0,
-                waves
             );
         }
     }
     // Power gating: dynamic energy with unused 12x12 sub-units gated off,
     // per precision and organization (the "considerable dynamic power
     // saving" the paper promises from the reconfigurable 24x24).
-    println!("\n{:<10} {:<8} {:>10} {:>10} {:>9}", "precision", "scheme", "fixed-E", "gated-E", "saving%");
+    println!(
+        "\n{:<10} {:<8} {:>10} {:>10} {:>9}",
+        "precision", "scheme", "fixed-E", "gated-E", "saving%"
+    );
     for prec in civp::decomp::Precision::ALL {
         for kind in [SchemeKind::Civp, SchemeKind::Baseline18] {
             let tiles = Scheme::new(kind, prec).tiles();
             let (gated, fixed) = gating_report(&cost, &tiles);
             println!(
-                "{:<10} {:<8} {:>10.3} {:>10.3} {:>9.1}",
+                "{:<10} {:<8} {fixed:>10.3} {gated:>10.3} {:>9.1}",
                 prec.name(),
                 kind.name(),
-                fixed,
-                gated,
                 (1.0 - gated / fixed) * 100.0
             );
         }

@@ -1,0 +1,164 @@
+//! Cluster scaling benchmark: aggregate throughput of the sharded
+//! multi-fabric serving layer at 1/2/4/8 shards under the `mixed`
+//! workload, plus a policy comparison at 4 shards.
+//!
+//! Two families of measurements land in `BENCH_cluster.json`:
+//!
+//! * `cluster/mixed/wall-*` — real submit→response wall-clock through the
+//!   full stack (threads, batchers, backends). Machine-dependent.
+//! * `cluster/mixed/model-scaling-*` — the deterministic fabric model:
+//!   the trace's per-class op counts split evenly across N one-column
+//!   CIVP fabrics, each run through the closed-form `simulate_counts`,
+//!   aggregated with parallel-makespan semantics (wall cycles = slowest
+//!   shard) at a nominal 1 GHz clock. Machine-*independent* — the CI
+//!   bench gate (`python/tools/check_bench.py`) checks this curve is
+//!   monotonically increasing in ops/sec from 1 → 4 shards.
+//!
+//! `CIVP_BENCH_QUICK=1` shrinks the trace for CI smoke runs.
+
+use civp::benchx::{scaled, section, wall_measurement, JsonReport, Measurement};
+use civp::cluster::{Cluster, ClusterConfig, RouterPolicy};
+use civp::config::ServiceConfig;
+use civp::coordinator::BackendChoice;
+use civp::decomp::SchemeKind;
+use civp::fabric::{simulate_counts, CostModel, FabricConfig, OpClass};
+use civp::trace::{TraceGen, TraceRequest, WorkloadSpec};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn cluster_cfg(shards: usize, policy: RouterPolicy) -> ClusterConfig {
+    ClusterConfig {
+        shards,
+        // One worker per precision queue per shard keeps the thread count
+        // proportional to the shard count — the scaling signal under test.
+        service: ServiceConfig { workers: 1, ..Default::default() },
+        policy,
+        max_inflight: 4096,
+        spares_per_block: 2,
+    }
+}
+
+/// Drive the whole trace through a cluster and return the wall seconds.
+/// Held replies are capped at half one shard's in-flight budget so the
+/// blocking submit can never livelock on slots pinned by our own backlog.
+fn drive(cluster: &Cluster, trace: &[TraceRequest]) -> f64 {
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(2048);
+    for req in trace {
+        let rx = cluster
+            .submit(req.id, req.precision, req.a, req.b)
+            .expect("cluster open");
+        pending.push(rx);
+        if pending.len() >= 2048 {
+            for rx in pending.drain(..) {
+                let _ = rx.recv();
+            }
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Deterministic fabric-model scaling: split the per-class counts evenly
+/// across `n` single-column CIVP shards, report the aggregate at 1 GHz.
+fn model_scaling(counts: &BTreeMap<OpClass, u64>, n: u64, cost: &CostModel) -> Measurement {
+    let fabric = FabricConfig::civp_scaled(1);
+    let mut wall_cycles = 0u64;
+    let mut total_ops = 0u64;
+    for shard in 0..n {
+        let mut share: BTreeMap<OpClass, u64> = BTreeMap::new();
+        for (class, &count) in counts {
+            let mine = count / n + u64::from(shard < count % n);
+            if mine > 0 {
+                share.insert(*class, mine);
+            }
+        }
+        if share.is_empty() {
+            continue;
+        }
+        let report = simulate_counts(&share, &fabric, cost);
+        wall_cycles = wall_cycles.max(report.cycles);
+        total_ops += report.total_ops;
+    }
+    // 1 GHz nominal clock: one cycle = one nanosecond.
+    let ns_per_op = wall_cycles as f64 / total_ops.max(1) as f64;
+    Measurement {
+        ns_per_op_p50: ns_per_op,
+        ns_per_op_mean: ns_per_op,
+        ns_per_op_min: ns_per_op,
+        total_ops,
+    }
+}
+
+fn main() {
+    let mut json = JsonReport::new();
+    let n_requests = scaled(40_000) as usize;
+    let trace = TraceGen::new(0xC1, WorkloadSpec::Mixed.mix(), 0).take(n_requests);
+    let mut counts: BTreeMap<OpClass, u64> = BTreeMap::new();
+    for r in &trace {
+        *counts
+            .entry(OpClass { precision: r.precision, organization: SchemeKind::Civp })
+            .or_insert(0) += 1;
+    }
+    let cost = CostModel::default();
+
+    section("cluster scaling (mixed workload): wall-clock through the full stack");
+    for shards in SHARD_COUNTS {
+        let cluster = Cluster::start(
+            &cluster_cfg(shards, RouterPolicy::LeastLoaded),
+            BackendChoice::Native(SchemeKind::Civp),
+        );
+        let wall = drive(&cluster, &trace);
+        let report = cluster.shutdown();
+        assert_eq!(report.total_ops, n_requests as u64, "cluster dropped ops");
+        let m = wall_measurement(n_requests as u64, wall);
+        println!(
+            "{shards} shard(s): {:>10.0} mult/s wall  ({n_requests} reqs in {wall:.3}s, {} spilled)",
+            m.ops_per_sec(),
+            report.spilled
+        );
+        json.push(&format!("cluster/mixed/wall-{shards}shard"), m);
+    }
+
+    section("cluster scaling (mixed workload): deterministic fabric model @ 1 GHz");
+    let mut last_ops_per_sec = 0.0;
+    let mut monotonic = true;
+    for shards in SHARD_COUNTS {
+        let m = model_scaling(&counts, shards as u64, &cost);
+        println!(
+            "{shards} shard(s): {:>12.0} model ops/s  ({:.3} ns/op aggregate)",
+            m.ops_per_sec(),
+            m.ns_per_op_p50
+        );
+        if m.ops_per_sec() < last_ops_per_sec {
+            monotonic = false;
+        }
+        last_ops_per_sec = m.ops_per_sec();
+        json.push(&format!("cluster/mixed/model-scaling-{shards}shard"), m);
+    }
+    assert!(monotonic, "fabric-model aggregate throughput must scale with shard count");
+
+    section("policy comparison at 4 shards (mixed workload)");
+    for policy in RouterPolicy::ALL {
+        let cluster =
+            Cluster::start(&cluster_cfg(4, policy), BackendChoice::Native(SchemeKind::Civp));
+        let wall = drive(&cluster, &trace);
+        let report = cluster.shutdown();
+        assert_eq!(report.total_ops, n_requests as u64);
+        let m = wall_measurement(n_requests as u64, wall);
+        println!(
+            "{:<20} {:>10.0} mult/s wall  ({} spilled, {} rejected)",
+            policy.name(),
+            m.ops_per_sec(),
+            report.spilled,
+            report.rejected_saturated
+        );
+        json.push(&format!("cluster/mixed/policy-{}-4shard", policy.name()), m);
+    }
+
+    json.write("BENCH_cluster.json").expect("write BENCH_cluster.json");
+}

@@ -20,7 +20,7 @@
 //!
 //! `CIVP_BENCH_QUICK=1` shrinks every workload for CI smoke runs.
 
-use civp::benchx::{bb, bench, scaled, section, JsonReport, Measurement};
+use civp::benchx::{bb, bench, scaled, section, wall_measurement, JsonReport};
 use civp::config::ServiceConfig;
 use civp::coordinator::{BackendChoice, ReplyPool, Response, Service};
 use civp::decomp::{Precision, SchemeKind};
@@ -51,18 +51,6 @@ fn drive(svc: &Service, trace: &[civp::trace::TraceRequest]) -> f64 {
     t0.elapsed().as_secs_f64()
 }
 
-/// Wrap a single wall-clock run as a `Measurement` so it lands in the JSON
-/// artifact alongside the sampled benches.
-fn wall_measurement(ops: u64, wall_s: f64) -> Measurement {
-    let ns_per_op = wall_s * 1e9 / ops.max(1) as f64;
-    Measurement {
-        ns_per_op_p50: ns_per_op,
-        ns_per_op_mean: ns_per_op,
-        ns_per_op_min: ns_per_op,
-        total_ops: ops,
-    }
-}
-
 fn main() {
     let cost = CostModel::default();
     let mut json = JsonReport::new();
@@ -78,10 +66,8 @@ fn main() {
         let wall = drive(&svc, &trace);
         let rep = svc.shutdown();
         println!(
-            "coordinator (native): {:>8.0} mult/s  ({} reqs in {:.3}s)",
+            "coordinator (native): {:>8.0} mult/s  ({n_requests} reqs in {wall:.3}s)",
             n_requests as f64 / wall,
-            n_requests,
-            wall
         );
         json.push(
             &format!("e2e/{}/native-submit-response", workload.name()),
@@ -90,7 +76,10 @@ fn main() {
         for p in ["single", "double", "quad"] {
             if let Some(h) = rep.snapshot.hists.get(&format!("latency_ns_{p}")) {
                 if h.count > 0 {
-                    println!("  latency {p:<7} p50={:>9}ns p99={:>9}ns n={}", h.p50, h.p99, h.count);
+                    println!(
+                        "  latency {p:<7} p50={:>9}ns p99={:>9}ns n={}",
+                        h.p50, h.p99, h.count
+                    );
                 }
             }
         }
@@ -184,9 +173,8 @@ fn main() {
         bb(simulate_stream(&ops, &fabric, &cost));
     });
     println!(
-        "count-based report is {:.0}x faster than per-op replay at {} ops",
+        "count-based report is {:.0}x faster than per-op replay at {total} ops",
         from_stream.ns_per_op_p50 / from_counts.ns_per_op_p50,
-        total
     );
     json.push("fabric-report/simulate-counts", from_counts);
     json.push("fabric-report/replay-stream-pre-pr", from_stream);
@@ -203,13 +191,15 @@ fn main() {
             let wall = drive(&svc, &trace);
             let rep = svc.shutdown();
             println!(
-                "coordinator (pjrt): {:>8.0} mult/s  ({} reqs in {:.3}s, batch={})",
+                "coordinator (pjrt): {:>8.0} mult/s  ({} reqs in {wall:.3}s, batch={})",
                 trace.len() as f64 / wall,
                 trace.len(),
-                wall,
                 info.batch
             );
-            json.push("e2e/graphics/pjrt-submit-response", wall_measurement(trace.len() as u64, wall));
+            json.push(
+                "e2e/graphics/pjrt-submit-response",
+                wall_measurement(trace.len() as u64, wall),
+            );
             let _ = rep;
             handle.stop();
         }

@@ -27,7 +27,10 @@ fn main() {
         "Fig. 2(b) block inventory"
     );
 
-    println!("\n{:<10} {:>7} {:>8} {:>8} {:>10} {:>10} {:>8}", "scheme", "blocks", "padded", "util%", "energy", "useful-E", "lat");
+    println!(
+        "\n{:<10} {:>7} {:>8} {:>8} {:>10} {:>10} {:>8}",
+        "scheme", "blocks", "padded", "util%", "energy", "useful-E", "lat"
+    );
     let cost = CostModel::default();
     for kind in SchemeKind::ALL {
         let scheme = Scheme::new(kind, Precision::Double);

@@ -63,7 +63,10 @@ fn main() {
 
     section("E4 energy: one quad multiply (dyn energy, useful fraction)");
     let cost = CostModel::default();
-    println!("{:<10} {:>8} {:>10} {:>10} {:>9} {:>8}", "scheme", "blocks", "energy", "useful-E", "wasted%", "lat");
+    println!(
+        "{:<10} {:>8} {:>10} {:>10} {:>9} {:>8}",
+        "scheme", "blocks", "energy", "useful-E", "wasted%", "lat"
+    );
     for kind in SchemeKind::ALL {
         let scheme = Scheme::new(kind, Precision::Quad);
         let fabric = match kind {

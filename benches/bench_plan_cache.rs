@@ -145,7 +145,8 @@ fn main() {
     section("verdict: cached plan speedup over per-call derivation (p50)");
     let mut all_faster = true;
     for (label, speedup) in &verdicts {
-        println!("{label:<20} {speedup:>6.2}x {}", if *speedup > 1.0 { "faster" } else { "SLOWER" });
+        let verdict = if *speedup > 1.0 { "faster" } else { "SLOWER" };
+        println!("{label:<20} {speedup:>6.2}x {verdict}");
         all_faster &= *speedup > 1.0;
     }
     println!(

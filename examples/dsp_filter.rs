@@ -97,19 +97,25 @@ fn main() {
 
     println!("\nper 16x16 multiply:");
     println!(
-        "  civp : {} block(s), energy {:.3}, adder depth {}",
+        "  civp : {} block(s), energy {civp_energy:.3}, adder depth {}",
         per_mul_civp.len(),
-        civp_energy,
         adder_tree_depth(per_mul_civp.len())
     );
     println!(
-        "  18x18: {} block(s), energy {:.3}, adder depth {}",
+        "  18x18: {} block(s), energy {b18_energy:.3}, adder depth {}",
         per_mul_b18.len(),
-        b18_energy,
         adder_tree_depth(per_mul_b18.len())
     );
     println!("\ntotal blocks fired:");
-    println!("  civp : {:?} (utilization {:.1}%)", civp_stats.by_kind(), civp_stats.utilization() * 100.0);
-    println!("  18x18: {:?} (utilization {:.1}%)", b18_stats.by_kind(), b18_stats.utilization() * 100.0);
+    println!(
+        "  civp : {:?} (utilization {:.1}%)",
+        civp_stats.by_kind(),
+        civp_stats.utilization() * 100.0
+    );
+    println!(
+        "  18x18: {:?} (utilization {:.1}%)",
+        b18_stats.by_kind(),
+        b18_stats.utilization() * 100.0
+    );
     println!("\ndsp_filter OK");
 }

@@ -1,0 +1,67 @@
+"""Pin `tools/gen_golden_fp128.py` against the checked-in Rust golden
+vectors.
+
+The generator is the independent binary128 oracle; its output was pasted
+into `rust/src/fpu/golden.rs`. If either side drifts — the generator's
+rounding model, its seed/case list, or a hand edit to the Rust file —
+the bit-exact contract between the Python oracle and the Rust softfloat
+tests silently weakens. This test regenerates the vectors and compares
+them tuple-for-tuple with what the Rust tests actually consume.
+"""
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+GENERATOR = REPO / "python" / "tools" / "gen_golden_fp128.py"
+GOLDEN_RS = REPO / "rust" / "src" / "fpu" / "golden.rs"
+
+TUPLE_RE = re.compile(r"^\s*\(([^)]+)\),\s*$")
+
+
+def parse_arrays(text):
+    """Extract {const_name: [tuple_of_ints, ...]} from Rust-array text."""
+    arrays = {}
+    current = None
+    for line in text.splitlines():
+        decl = re.search(r"pub const (\w+):", line)
+        if decl:
+            current = decl.group(1)
+            arrays[current] = []
+            continue
+        if current is None:
+            continue
+        if line.strip().startswith("];"):
+            current = None
+            continue
+        m = TUPLE_RE.match(line)
+        if m:
+            arrays[current].append(
+                tuple(int(f.strip(), 0) for f in m.group(1).split(","))
+            )
+    return arrays
+
+
+def test_generator_matches_checked_in_golden_vectors():
+    generated = subprocess.run(
+        [sys.executable, str(GENERATOR)],
+        capture_output=True,
+        text=True,
+        check=True,
+    ).stdout
+    gen = parse_arrays(generated)
+    rust = parse_arrays(GOLDEN_RS.read_text())
+
+    for name in ("GOLDEN_FP128_MUL_RNE", "GOLDEN_FP128_MUL_MODES"):
+        assert name in gen, f"generator no longer emits {name}"
+        assert name in rust, f"golden.rs no longer contains {name}"
+        assert gen[name], f"generator emitted an empty {name}"
+        assert gen[name] == rust[name], (
+            f"{name} drifted: regenerate with `python3 {GENERATOR.relative_to(REPO)}` "
+            f"and paste into {GOLDEN_RS.relative_to(REPO)} (first mismatch at index "
+            f"{next(i for i, (a, b) in enumerate(zip(gen[name], rust[name])) if a != b)})"
+            if len(gen[name]) == len(rust[name])
+            else f"{name} length drifted: generator {len(gen[name])} vs rust {len(rust[name])}"
+        )

@@ -1,0 +1,266 @@
+#!/usr/bin/env python3
+"""Bench-regression gate over the BENCH_*.json artifacts.
+
+Run from the repo root after the bench targets have written their
+artifacts (CI does this with CIVP_BENCH_QUICK=1). Three layers of checks:
+
+1. **Schema** — every artifact is a non-empty JSON array whose rows carry
+   `name`, `ns_per_op_p50` and `ops_per_sec` (replaces the old inline
+   heredoc validator in ci.yml).
+2. **Baseline regression** — any measurement whose `name` also appears in
+   the committed baseline (`BENCH_baseline.json`) fails the gate when its
+   `ns_per_op_p50` regresses more than `--tolerance` (default 25%, env
+   `CIVP_BENCH_TOLERANCE`) over the baseline value. The committed
+   baseline holds deliberately conservative (slow-side) seed numbers so
+   the gate is portable across runner hardware; refresh it from a
+   representative machine with `--update` after intentional perf changes.
+3. **Machine-independent invariants** — relative properties within ONE
+   run, so runner speed cancels out. The ratio slacks are deliberately
+   loose (gross-inversion detectors, not microbenchmarks) because CI runs
+   in quick mode where sub-microsecond p50s are noisy:
+   * the pooled-oneshot reply path is not >2x slower than the
+     mpsc-channel baseline it replaced;
+   * the closed-form `simulate_counts` report is at least 2x faster than
+     materializing and replaying the op stream;
+   * compiled-plan execution is not >1.25x slower than per-call tile-DAG
+     re-derivation for any scheme x precision;
+   * cluster fabric-model aggregate throughput (computed analytically —
+     deterministic, machine-independent) increases monotonically with
+     the shard count, strictly from 1 to 4 shards (the `bench_cluster`
+     scaling acceptance gate).
+
+When run with no file arguments (the CI shape), the three artifacts the
+bench targets write are REQUIRED to exist, and every baselined
+measurement must be present in the run — a renamed or dropped
+measurement fails the gate rather than silently disabling it.
+
+Exit status 0 = gate passed, 1 = any check failed.
+"""
+
+import argparse
+import glob
+import json
+import math
+import os
+import re
+import sys
+
+DEFAULT_TOLERANCE = 0.25
+REQUIRED_KEYS = ("name", "ns_per_op_p50", "ops_per_sec")
+REQUIRED_FILES = ("BENCH_e2e.json", "BENCH_plan.json", "BENCH_cluster.json")
+MODEL_SCALING_RE = re.compile(r"^cluster/mixed/model-scaling-(\d+)shard$")
+# Single-shot wall-clock measurements (and the optional pjrt path): too
+# machine- and load-dependent to gate against a committed number, and the
+# pjrt row does not exist on runners without artifacts. --update never
+# writes these into the baseline.
+UNBASELINEABLE_RE = re.compile(r"^(e2e/|cluster/mixed/wall-|cluster/mixed/policy-)")
+# Headroom --update applies on top of the measured p50 so a baseline
+# refreshed on a fast machine doesn't fail the 25% gate on a slower one.
+UPDATE_SLACK = 2.0
+
+failures = []
+notes = []
+
+
+def fail(msg):
+    failures.append(msg)
+    print(f"FAIL: {msg}")
+
+
+def note(msg):
+    notes.append(msg)
+    print(f"note: {msg}")
+
+
+def load_rows(path):
+    with open(path) as fh:
+        rows = json.load(fh)
+    if not isinstance(rows, list) or not rows:
+        fail(f"{path}: empty or not a JSON array")
+        return []
+    ok = []
+    for row in rows:
+        missing = [k for k in REQUIRED_KEYS if k not in row]
+        if missing:
+            fail(f"{path}: row missing {missing}: {row}")
+            continue
+        p50 = row["ns_per_op_p50"]
+        if not isinstance(p50, (int, float)) or not math.isfinite(p50) or p50 < 0:
+            fail(f"{path}: bad ns_per_op_p50 in {row['name']}: {p50!r}")
+            continue
+        ok.append(row)
+    print(f"{path}: {len(ok)} measurements ok")
+    return ok
+
+
+def check_baseline(current, baseline, tolerance, strict):
+    gated = 0
+    for name, base_p50 in sorted(baseline.items()):
+        if name not in current:
+            if strict:
+                fail(f"baselined measurement `{name}` not produced by this run")
+            else:
+                note(f"baselined measurement `{name}` not produced by this run")
+            continue
+        cur = current[name]
+        gated += 1
+        if base_p50 > 0 and cur > base_p50 * (1.0 + tolerance):
+            fail(
+                f"`{name}` regressed: {cur:.1f} ns/op vs baseline "
+                f"{base_p50:.1f} (+{(cur / base_p50 - 1) * 100:.0f}%, "
+                f"tolerance {tolerance * 100:.0f}%)"
+            )
+    for name in sorted(set(current) - set(baseline)):
+        note(f"new measurement (not in baseline): `{name}`")
+    print(f"baseline gate: {gated} measurements compared at {tolerance * 100:.0f}% tolerance")
+
+
+def check_ratio(current, fast, slow, max_ratio, what):
+    if fast not in current or slow not in current:
+        return
+    f, s = current[fast], current[slow]
+    if s <= 0:
+        return
+    if f > s * max_ratio:
+        fail(f"{what}: `{fast}` = {f:.1f} ns/op vs `{slow}` = {s:.1f} (ratio {f / s:.2f} > {max_ratio})")
+    else:
+        print(f"invariant ok: {what} (ratio {f / s:.3f} <= {max_ratio})")
+
+
+def check_plan_invariants(current):
+    before = len(failures)
+    for name, p50 in sorted(current.items()):
+        m = re.match(r"^plan/(.+)/cached-plan$", name)
+        if not m:
+            continue
+        sibling = f"plan/{m.group(1)}/rederive-per-call"
+        if sibling not in current:
+            continue
+        if p50 > current[sibling] * 1.25:
+            fail(
+                f"compiled plan slower than re-derivation for {m.group(1)}: "
+                f"{p50:.1f} vs {current[sibling]:.1f} ns/op"
+            )
+    if len(failures) == before:
+        print("invariant ok: compiled plans beat per-call derivation everywhere measured")
+
+
+def check_cluster_scaling(current):
+    before = len(failures)
+    points = []
+    for name, row in current.items():
+        m = MODEL_SCALING_RE.match(name)
+        if m:
+            points.append((int(m.group(1)), row))
+    if not points:
+        return
+    points.sort()
+    ops = {n: (1e9 / p50 if p50 > 0 else float("inf")) for n, p50 in points}
+    prev_n, prev = points[0][0], ops[points[0][0]]
+    for n, _ in points[1:]:
+        if ops[n] < prev:
+            fail(
+                f"cluster model scaling not monotonic: {n} shards = {ops[n]:.0f} ops/s "
+                f"< {prev_n} shards = {prev:.0f} ops/s"
+            )
+        prev_n, prev = n, ops[n]
+    if 1 in ops and 4 in ops and not ops[4] > ops[1]:
+        fail(
+            f"cluster aggregate throughput must increase strictly from 1 shard "
+            f"({ops[1]:.0f} ops/s) to 4 shards ({ops[4]:.0f} ops/s)"
+        )
+    curve = "  ".join(f"{n}sh={ops[n]:.0f}/s" for n, _ in points)
+    status = "ok" if len(failures) == before else "VIOLATED"
+    print(f"cluster scaling ({status}): {curve}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", help="BENCH_*.json artifacts (default: glob repo root)")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=float(os.environ.get("CIVP_BENCH_TOLERANCE", DEFAULT_TOLERANCE)),
+        help="allowed fractional p50 regression vs baseline (default 0.25)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline from the current artifacts instead of gating",
+    )
+    args = ap.parse_args()
+
+    strict = not args.files
+    files = args.files or sorted(
+        f
+        for f in glob.glob("BENCH_*.json")
+        if os.path.basename(f) != os.path.basename(args.baseline)
+    )
+    if not files:
+        fail("no BENCH_*.json artifacts found — did the benches run?")
+        return 1
+    if strict:
+        for required in REQUIRED_FILES:
+            if required not in files:
+                fail(f"required artifact {required} missing — did its bench target run?")
+
+    current = {}
+    for path in files:
+        for row in load_rows(path):
+            current[row["name"]] = row["ns_per_op_p50"]
+
+    if args.update:
+        rows = [
+            {"name": name, "ns_per_op_p50": round(p50 * UPDATE_SLACK, 3)}
+            for name, p50 in sorted(current.items())
+            if not UNBASELINEABLE_RE.match(name)
+        ]
+        if rows:
+            rows[0]["note"] = (
+                f"written by check_bench.py --update with {UPDATE_SLACK}x slack over the "
+                "measured p50s; wall-clock e2e/cluster-wall/policy rows are never baselined"
+            )
+        with open(args.baseline, "w") as fh:
+            json.dump(rows, fh, indent=2)
+            fh.write("\n")
+        skipped = len(current) - len(rows)
+        print(f"wrote {args.baseline} ({len(rows)} measurements, {skipped} wall-clock rows skipped)")
+        return 0
+
+    baseline = {}
+    if os.path.exists(args.baseline):
+        with open(args.baseline) as fh:
+            for row in json.load(fh):
+                baseline[row["name"]] = row["ns_per_op_p50"]
+    else:
+        note(f"{args.baseline} not found — skipping the baseline gate")
+
+    if baseline:
+        check_baseline(current, baseline, args.tolerance, strict)
+    check_ratio(
+        current,
+        "reply/pooled-oneshot",
+        "reply/mpsc-channel-pre-pr",
+        2.0,
+        "pooled oneshot reply path vs per-request mpsc channel",
+    )
+    check_ratio(
+        current,
+        "fabric-report/simulate-counts",
+        "fabric-report/replay-stream-pre-pr",
+        0.5,
+        "closed-form fabric report vs materialized stream replay",
+    )
+    check_plan_invariants(current)
+    check_cluster_scaling(current)
+
+    if failures:
+        print(f"\nbench gate FAILED: {len(failures)} failure(s)")
+        return 1
+    print(f"\nbench gate passed: {len(current)} measurements, {len(notes)} note(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

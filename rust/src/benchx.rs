@@ -44,7 +44,13 @@ impl Measurement {
 }
 
 /// Time `op` (which should perform ONE operation per call).
-pub fn bench(name: &str, warmup: u64, samples: u64, iters_per_sample: u64, mut op: impl FnMut()) -> Measurement {
+pub fn bench(
+    name: &str,
+    warmup: u64,
+    samples: u64,
+    iters_per_sample: u64,
+    mut op: impl FnMut(),
+) -> Measurement {
     for _ in 0..warmup {
         op();
     }
@@ -76,6 +82,19 @@ pub fn bench(name: &str, warmup: u64, samples: u64, iters_per_sample: u64, mut o
 /// Convenience: black-box a value (re-export for benches).
 pub fn bb<T>(v: T) -> T {
     black_box(v)
+}
+
+/// Wrap one wall-clock run (`ops` completed in `wall_s` seconds) as a
+/// [`Measurement`], so one-shot end-to-end timings land in the JSON
+/// artifacts alongside the sampled benches.
+pub fn wall_measurement(ops: u64, wall_s: f64) -> Measurement {
+    let ns_per_op = wall_s * 1e9 / ops.max(1) as f64;
+    Measurement {
+        ns_per_op_p50: ns_per_op,
+        ns_per_op_mean: ns_per_op,
+        ns_per_op_min: ns_per_op,
+        total_ops: ops,
+    }
 }
 
 /// True when `CIVP_BENCH_QUICK` is set (to anything but `0`): benches

@@ -1,0 +1,376 @@
+//! Layer-4 cluster: sharded serving across N independent fabric columns.
+//!
+//! PR 2 made a *single* CIVP fabric serve at hardware speed; this layer
+//! scales out. The paper already frames the fabric as a replicated
+//! resource (§III sizes the 24x24/24x9/9x9 pool per quad "column", and
+//! [`crate::fabric::FabricConfig::civp_scaled`] models N columns) — a
+//! cluster owns N such columns as independent **shards**, each a complete
+//! PR-2 [`crate::coordinator::Service`] (its own batchers, worker pool and
+//! lock-free op counters) plus a repairable fabric model:
+//!
+//! ```text
+//!   clients ── Cluster::try_submit(id, precision, a, b)
+//!        │           │
+//!        ▼           ▼  Router policy (lock-free ShardState reads):
+//!   round-robin (weighted) | least-loaded | precision-affinity
+//!        │   admission: reserve an in-flight slot (hard per-shard bound),
+//!        │   on backpressure spill over to the policy's next candidate
+//!        ▼
+//!   Shard 0..N  ──  Service (batchers → workers → backend) per shard
+//!        │
+//!        ▼  per-shard op counters → simulate_counts → ShardSummary
+//!   ClusterReport (ops Σ, wall cycles = max, energy Σ, admission stats)
+//! ```
+//!
+//! Degradation is first-class: faults injected through
+//! [`crate::fabric::repair`] reduce a shard's routing weight in proportion
+//! to the block capacity it lost; a shard whose pools no longer issue a
+//! quad in one wave drops out of the quad-affinity set; a precision whose
+//! block kinds are entirely gone has its servable bit cleared so only
+//! that traffic routes around the shard — the run-time-reconfigurable
+//! multiplier line of work (Arish & Sharma) routing around degraded IP
+//! cores.
+
+mod report;
+mod router;
+mod shard;
+#[cfg(test)]
+mod tests;
+
+pub use report::{ClusterReport, ShardSummary};
+pub use router::{Router, RouterPolicy, MAX_SHARDS};
+pub use shard::{DegradeOutcome, Shard, ShardState, FULL_WEIGHT};
+
+use crate::config::ServiceConfig;
+use crate::coordinator::{
+    BackendChoice, RecvError, ReplyHandle, Response, SubmitError, TryRecvError,
+};
+use crate::decomp::{BlockKind, Precision};
+use crate::fabric::OpClass;
+use crate::metrics::{Counter, Gauge, Registry, Snapshot};
+use crate::proput::Rng;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Why a cluster submit failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterSubmitError {
+    /// Every live shard is at its in-flight bound or queue capacity —
+    /// cluster-wide backpressure. Transient: retrying can succeed once
+    /// replies are consumed.
+    Saturated,
+    /// No live shard can serve this precision at all (every shard is
+    /// drained or has lost the block kinds the precision needs). Not
+    /// backpressure — retrying cannot succeed until capacity is restored,
+    /// so [`Cluster::submit`] returns this instead of spinning.
+    Unservable,
+    /// The cluster (or a shard it routed to) has shut down.
+    Closed,
+}
+
+impl core::fmt::Display for ClusterSubmitError {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        match self {
+            ClusterSubmitError::Saturated => write!(f, "all shards saturated"),
+            ClusterSubmitError::Unservable => {
+                write!(f, "no live shard can serve this precision")
+            }
+            ClusterSubmitError::Closed => write!(f, "cluster closed"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterSubmitError {}
+
+/// Cluster deployment shape.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Number of shards (1..=[`MAX_SHARDS`]).
+    pub shards: usize,
+    /// Per-shard service configuration (batchers, workers, fabric preset —
+    /// every shard is a full PR-2 service).
+    pub service: ServiceConfig,
+    /// Shard-selection policy.
+    pub policy: RouterPolicy,
+    /// Admission bound: max requests in flight per shard.
+    pub max_inflight: u64,
+    /// Spare sub-units provisioned per block instance (self-repair
+    /// budget — see [`crate::fabric::RepairableFabric`]).
+    pub spares_per_block: u32,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            shards: 4,
+            service: ServiceConfig::default(),
+            policy: RouterPolicy::LeastLoaded,
+            max_inflight: 4096,
+            spares_per_block: 2,
+        }
+    }
+}
+
+/// Reply handle for a cluster submit: the shard's pooled oneshot reply
+/// plus the in-flight slot reservation, which is released exactly once —
+/// when this handle drops (after `recv`, or on abandonment).
+#[derive(Debug)]
+pub struct ClusterReply {
+    shard: usize,
+    state: Arc<ShardState>,
+    inner: ReplyHandle,
+}
+
+impl ClusterReply {
+    /// Which shard served this request.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Block until the shard's worker delivers the response.
+    pub fn recv(&self) -> Result<Response, RecvError> {
+        self.inner.recv()
+    }
+
+    /// Non-blocking poll (see [`ReplyHandle::try_recv`]).
+    pub fn try_recv(&self) -> Result<Response, TryRecvError> {
+        self.inner.try_recv()
+    }
+}
+
+impl Drop for ClusterReply {
+    fn drop(&mut self) {
+        self.state.release();
+    }
+}
+
+/// Per-shard hot instruments, resolved once at startup.
+struct ShardInstruments {
+    accepted: Arc<Counter>,
+    spilled: Arc<Counter>,
+    inflight_gauge: Arc<Gauge>,
+    weight_gauge: Arc<Gauge>,
+    quad_gauge: Arc<Gauge>,
+}
+
+/// The sharded multi-fabric serving layer.
+pub struct Cluster {
+    shards: Vec<Shard>,
+    states: Vec<Arc<ShardState>>,
+    router: Router,
+    metrics: Registry,
+    instruments: Vec<ShardInstruments>,
+    rejected: Arc<Counter>,
+    unservable: Arc<Counter>,
+}
+
+impl Cluster {
+    /// Start `cfg.shards` independent shards, each with its own worker
+    /// pool, batchers, op counters and repairable fabric.
+    pub fn start(cfg: &ClusterConfig, backend: BackendChoice) -> Cluster {
+        assert!(
+            cfg.shards >= 1 && cfg.shards <= MAX_SHARDS,
+            "cluster needs 1..={MAX_SHARDS} shards, got {}",
+            cfg.shards
+        );
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            shards.push(Shard::start(
+                i,
+                &cfg.service,
+                backend.clone(),
+                cfg.max_inflight,
+                cfg.spares_per_block,
+            ));
+        }
+        let states: Vec<Arc<ShardState>> = shards.iter().map(|s| s.state().clone()).collect();
+        let metrics = Registry::new();
+        let instruments = (0..cfg.shards)
+            .map(|i| ShardInstruments {
+                accepted: metrics.counter(&format!("shard{i}_accepted")),
+                spilled: metrics.counter(&format!("shard{i}_spilled")),
+                inflight_gauge: metrics.gauge(&format!("shard{i}_inflight")),
+                weight_gauge: metrics.gauge(&format!("shard{i}_weight")),
+                quad_gauge: metrics.gauge(&format!("shard{i}_quad_one_wave")),
+            })
+            .collect();
+        let rejected = metrics.counter("rejected_saturated");
+        let unservable = metrics.counter("rejected_unservable");
+        Cluster {
+            shards,
+            states,
+            router: Router::new(cfg.policy),
+            metrics,
+            instruments,
+            rejected,
+            unservable,
+        }
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// True if the cluster has no shards (never: `start` asserts >= 1).
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// One shard (tests, diagnostics).
+    pub fn shard(&self, idx: usize) -> &Shard {
+        &self.shards[idx]
+    }
+
+    /// The lock-free routing states (tests, diagnostics).
+    pub fn states(&self) -> &[Arc<ShardState>] {
+        &self.states
+    }
+
+    /// Submit without blocking. The router proposes shards in policy
+    /// order; admission reserves an in-flight slot on the first shard with
+    /// room, spilling to the next candidate when a shard is at its bound
+    /// or its precision queue is full. [`ClusterSubmitError::Saturated`]
+    /// is cluster-wide backpressure.
+    pub fn try_submit(
+        &self,
+        id: u64,
+        precision: Precision,
+        a: u128,
+        b: u128,
+    ) -> Result<ClusterReply, ClusterSubmitError> {
+        let mut tried: u64 = 0;
+        // The first shard that turns the request away; charged with one
+        // `spilled` only if the request is later accepted elsewhere (a
+        // request that every shard refuses counts once as rejected, not
+        // as a spill too).
+        let mut spilled_from: Option<usize> = None;
+        while let Some(idx) = self.router.pick(precision, &self.states, tried) {
+            tried |= 1u64 << idx;
+            let state = &self.states[idx];
+            if !state.try_acquire() {
+                spilled_from.get_or_insert(idx);
+                continue;
+            }
+            match self.shards[idx].service().try_submit(id, precision, a, b) {
+                Ok(rx) => {
+                    self.instruments[idx].accepted.inc();
+                    if let Some(from) = spilled_from {
+                        self.instruments[from].spilled.inc();
+                    }
+                    return Ok(ClusterReply { shard: idx, state: state.clone(), inner: rx });
+                }
+                Err(SubmitError::QueueFull) => {
+                    state.release();
+                    spilled_from.get_or_insert(idx);
+                }
+                Err(SubmitError::Closed) => {
+                    state.release();
+                    return Err(ClusterSubmitError::Closed);
+                }
+            }
+        }
+        if tried == 0 {
+            // The router had no candidate at all: nothing live can serve
+            // this precision — permanent until capacity is restored, so
+            // it must not read as retryable backpressure.
+            self.unservable.inc();
+            return Err(ClusterSubmitError::Unservable);
+        }
+        self.rejected.inc();
+        Err(ClusterSubmitError::Saturated)
+    }
+
+    /// Submit, parking briefly under cluster-wide backpressure until a
+    /// shard frees up. The blocking analogue of [`Cluster::try_submit`].
+    /// Does NOT retry on [`ClusterSubmitError::Unservable`] — waiting
+    /// cannot conjure back a block kind the fabric has lost.
+    pub fn submit(
+        &self,
+        id: u64,
+        precision: Precision,
+        a: u128,
+        b: u128,
+    ) -> Result<ClusterReply, ClusterSubmitError> {
+        loop {
+            match self.try_submit(id, precision, a, b) {
+                Err(ClusterSubmitError::Saturated) => {
+                    std::thread::sleep(Duration::from_micros(20));
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// Inject `faults` sub-unit faults into `kind` blocks of shard `idx`
+    /// and recompute its routing weight/affinity. The cluster keeps
+    /// serving throughout: a shard that lost blocks gets proportionally
+    /// less traffic; one that can no longer serve its scheme is drained.
+    pub fn degrade_shard(
+        &mut self,
+        idx: usize,
+        kind: BlockKind,
+        faults: usize,
+        rng: &mut Rng,
+    ) -> DegradeOutcome {
+        self.shards[idx].inject_faults(kind, faults, rng)
+    }
+
+    /// Aggregated per-class op counts across all shards (the cluster-wide
+    /// analogue of [`crate::coordinator::Service::op_counts`]).
+    pub fn op_counts(&self) -> BTreeMap<OpClass, u64> {
+        let mut out: BTreeMap<OpClass, u64> = BTreeMap::new();
+        for shard in &self.shards {
+            for (class, n) in shard.service().op_counts() {
+                *out.entry(class).or_insert(0) += n;
+            }
+        }
+        out
+    }
+
+    /// Telemetry snapshot: per-shard accepted/spilled counters plus the
+    /// per-shard gauges (in-flight, weight, quad-affinity), refreshed from
+    /// the lock-free shard states at snapshot time.
+    pub fn metrics(&self) -> Snapshot {
+        for (state, inst) in self.states.iter().zip(&self.instruments) {
+            inst.inflight_gauge.set(state.inflight() as i64);
+            inst.weight_gauge.set(state.weight() as i64);
+            inst.quad_gauge.set(i64::from(state.quad_one_wave()));
+        }
+        self.metrics.snapshot()
+    }
+
+    /// One shard's report slice (single construction point shared by the
+    /// live [`Cluster::report`] and the final [`Cluster::shutdown`]).
+    fn summarize(&self, shard: &Shard) -> ShardSummary {
+        ShardSummary {
+            id: shard.id,
+            health: shard.health(),
+            weight: shard.state().weight(),
+            quad_one_wave: shard.state().quad_one_wave(),
+            inflight: shard.state().inflight(),
+            accepted: self.instruments[shard.id].accepted.get(),
+            fabric: shard.fabric_report(),
+        }
+    }
+
+    /// Aggregated cluster report over everything executed so far.
+    pub fn report(&self) -> ClusterReport {
+        let summaries = self.shards.iter().map(|s| self.summarize(s)).collect();
+        ClusterReport::aggregate(summaries, self.spilled_total(), self.rejected.get())
+    }
+
+    fn spilled_total(&self) -> u64 {
+        self.instruments.iter().map(|i| i.spilled.get()).sum()
+    }
+
+    /// Drain every shard (close queues, join workers — op counters are
+    /// final afterwards) and return the final aggregated report.
+    pub fn shutdown(mut self) -> ClusterReport {
+        for shard in &mut self.shards {
+            shard.drain();
+        }
+        self.report()
+    }
+}

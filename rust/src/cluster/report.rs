@@ -1,0 +1,137 @@
+//! Aggregated cluster reports: per-shard fabric/serving summaries rolled
+//! up into the numbers the CLI and `bench_cluster` print.
+
+use crate::fabric::StreamReport;
+
+/// One shard's slice of the cluster report.
+#[derive(Clone, Debug)]
+pub struct ShardSummary {
+    /// Shard index.
+    pub id: usize,
+    /// Fraction of original block capacity still live.
+    pub health: f64,
+    /// Routing weight at report time (0 = drained).
+    pub weight: u64,
+    /// Whether a quad multiplication still issues in one wave.
+    pub quad_one_wave: bool,
+    /// Requests in flight at report time.
+    pub inflight: u64,
+    /// Requests this shard accepted.
+    pub accepted: u64,
+    /// Closed-form fabric report over every op the shard executed
+    /// (per-shard `simulate_counts` summary).
+    pub fabric: StreamReport,
+}
+
+/// Cluster-level aggregate built from the per-shard summaries.
+///
+/// Shards run in parallel, so the cluster's wall-clock cycle count is the
+/// *maximum* over shards while ops and energies are sums — which is what
+/// makes aggregate throughput scale with the shard count until a single
+/// shard saturates.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    /// Per-shard breakdown.
+    pub shards: Vec<ShardSummary>,
+    /// Total ops executed across all shards.
+    pub total_ops: u64,
+    /// Parallel makespan: the slowest shard's cycle count.
+    pub wall_cycles: u64,
+    /// Total dynamic energy across shards.
+    pub dyn_energy: f64,
+    /// Useful portion of the dynamic energy.
+    pub useful_energy: f64,
+    /// Total leakage across shards.
+    pub static_energy: f64,
+    /// Requests accepted cluster-wide.
+    pub accepted: u64,
+    /// Requests that spilled from a full shard to another before
+    /// acceptance (spill-over admissions, not failures).
+    pub spilled: u64,
+    /// Requests rejected because every live shard was saturated.
+    pub rejected_saturated: u64,
+}
+
+impl ClusterReport {
+    /// Build the aggregate from per-shard summaries plus the cluster
+    /// admission counters.
+    pub fn aggregate(shards: Vec<ShardSummary>, spilled: u64, rejected_saturated: u64) -> Self {
+        let total_ops = shards.iter().map(|s| s.fabric.total_ops).sum();
+        let wall_cycles = shards.iter().map(|s| s.fabric.cycles).max().unwrap_or(0);
+        let dyn_energy = shards.iter().map(|s| s.fabric.dyn_energy).sum();
+        let useful_energy = shards.iter().map(|s| s.fabric.useful_energy).sum();
+        let static_energy = shards.iter().map(|s| s.fabric.static_energy).sum();
+        let accepted = shards.iter().map(|s| s.accepted).sum();
+        ClusterReport {
+            shards,
+            total_ops,
+            wall_cycles,
+            dyn_energy,
+            useful_energy,
+            static_energy,
+            accepted,
+            spilled,
+            rejected_saturated,
+        }
+    }
+
+    /// Aggregate ops per cycle (ops divided by the parallel makespan).
+    pub fn throughput(&self) -> f64 {
+        if self.wall_cycles == 0 {
+            return 0.0;
+        }
+        self.total_ops as f64 / self.wall_cycles as f64
+    }
+
+    /// Total energy (dynamic + static) per op.
+    pub fn energy_per_op(&self) -> f64 {
+        if self.total_ops == 0 {
+            return 0.0;
+        }
+        (self.dyn_energy + self.static_energy) / self.total_ops as f64
+    }
+
+    /// Fraction of dynamic energy wasted on padded ports.
+    pub fn wasted_fraction(&self) -> f64 {
+        if self.dyn_energy == 0.0 {
+            return 0.0;
+        }
+        1.0 - self.useful_energy / self.dyn_energy
+    }
+
+    /// Render the per-shard table plus the aggregate line (for the CLI).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<6} {:>8} {:>7} {:>6} {:>9} {:>10} {:>10} {:>9}\n",
+            "shard", "ops", "health", "weight", "quad-1w", "cycles", "E/op", "inflight"
+        ));
+        for s in &self.shards {
+            out.push_str(&format!(
+                "{:<6} {:>8} {:>6.1}% {:>6} {:>9} {:>10} {:>10.3} {:>9}\n",
+                s.id,
+                s.fabric.total_ops,
+                s.health * 100.0,
+                s.weight,
+                if s.quad_one_wave { "yes" } else { "no" },
+                s.fabric.cycles,
+                s.fabric.energy_per_op(),
+                s.inflight,
+            ));
+        }
+        out.push_str(&format!(
+            "total  {:>8} ops  {:>10} wall cycles  {:.3} ops/cycle  {:.3} E/op  \
+             {:.1}% wasted\n",
+            self.total_ops,
+            self.wall_cycles,
+            self.throughput(),
+            self.energy_per_op(),
+            self.wasted_fraction() * 100.0,
+        ));
+        out.push_str(&format!(
+            "admission: {} accepted, {} spilled, {} rejected saturated\n",
+            self.accepted, self.spilled, self.rejected_saturated
+        ));
+        out
+    }
+}

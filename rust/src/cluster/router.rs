@@ -1,0 +1,166 @@
+//! Pluggable shard-selection policies.
+//!
+//! A policy answers one question — "which live shard should this request
+//! try next?" — over nothing but the lock-free [`ShardState`] snapshots
+//! (weight, in-flight count, quad-affinity bit). Exclusion of
+//! already-tried shards is a caller-maintained `u64` bitmask, which is
+//! what makes spill-over admission (try the pick, on backpressure ask for
+//! the next one) allocation-free.
+
+use super::shard::ShardState;
+use crate::decomp::Precision;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Maximum shards a router addresses (candidate bookkeeping is a `u64`
+/// bitmask).
+pub const MAX_SHARDS: usize = 64;
+
+/// Shard-selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RouterPolicy {
+    /// Weighted round-robin over live shards: a degraded shard's reduced
+    /// weight directly reduces its share of the ticket space.
+    RoundRobin,
+    /// Lowest in-flight-per-weight-credit shard first (the atomic
+    /// in-flight counters are the load signal).
+    LeastLoaded,
+    /// Quad traffic is pinned to shards whose block pools issue a quad in
+    /// one wave; single/double traffic is steered away from those shards
+    /// while non-affine capacity exists, keeping the quad columns free.
+    /// Within the candidate set, least-loaded order applies.
+    PrecisionAffinity,
+}
+
+impl RouterPolicy {
+    /// All policies.
+    pub const ALL: [RouterPolicy; 3] =
+        [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::PrecisionAffinity];
+
+    /// Display / CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastLoaded => "least-loaded",
+            RouterPolicy::PrecisionAffinity => "precision-affinity",
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        Self::ALL.into_iter().find(|p| p.name() == s)
+    }
+}
+
+/// The shard router: one policy plus the round-robin cursor.
+#[derive(Debug)]
+pub struct Router {
+    policy: RouterPolicy,
+    rr: AtomicU64,
+}
+
+impl Router {
+    /// New router with the given policy.
+    pub fn new(policy: RouterPolicy) -> Router {
+        Router { policy, rr: AtomicU64::new(0) }
+    }
+
+    /// The configured policy.
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// Pick the next candidate shard for `precision`, excluding the
+    /// indices set in the `tried` bitmask. Returns `None` when no live
+    /// (weight > 0, precision-servable) untried shard remains. Lock-free
+    /// and allocation-free: a couple of passes over the state slice
+    /// reading relaxed atomics.
+    pub fn pick(
+        &self,
+        precision: Precision,
+        shards: &[Arc<ShardState>],
+        tried: u64,
+    ) -> Option<usize> {
+        debug_assert!(shards.len() <= MAX_SHARDS);
+        match self.policy {
+            RouterPolicy::RoundRobin => self.pick_weighted_rr(precision, shards, tried),
+            RouterPolicy::LeastLoaded => pick_least_loaded(precision, shards, tried, |_| true),
+            RouterPolicy::PrecisionAffinity => {
+                // Phase 1: the affine candidate set. Quads want one-wave
+                // shards; single/double keep those shards free while any
+                // other live capacity exists.
+                let affine: fn(&ShardState) -> bool = match precision {
+                    Precision::Quad => |s| s.quad_one_wave(),
+                    _ => |s| !s.quad_one_wave(),
+                };
+                pick_least_loaded(precision, shards, tried, affine)
+                    // Phase 2: any live shard (affinity is a preference,
+                    // not a partition — capacity beats placement).
+                    .or_else(|| pick_least_loaded(precision, shards, tried, |_| true))
+            }
+        }
+    }
+
+    /// Weighted round-robin: one ticket per call, mapped onto the
+    /// cumulative weight distribution of the live candidates.
+    fn pick_weighted_rr(
+        &self,
+        precision: Precision,
+        shards: &[Arc<ShardState>],
+        tried: u64,
+    ) -> Option<usize> {
+        let live = |i: usize, s: &ShardState| {
+            tried & (1u64 << i) == 0 && s.weight() > 0 && s.servable(precision)
+        };
+        let total: u64 =
+            shards.iter().enumerate().filter(|(i, s)| live(*i, s)).map(|(_, s)| s.weight()).sum();
+        if total == 0 {
+            return None;
+        }
+        let mut ticket = self.rr.fetch_add(1, Ordering::Relaxed) % total;
+        for (i, s) in shards.iter().enumerate() {
+            if !live(i, s) {
+                continue;
+            }
+            let w = s.weight();
+            if ticket < w {
+                return Some(i);
+            }
+            ticket -= w;
+        }
+        // Weights moved between the two passes (concurrent degradation);
+        // fall back to the first live candidate.
+        shards.iter().enumerate().find(|(i, s)| live(*i, s)).map(|(i, _)| i)
+    }
+}
+
+/// Argmin of in-flight-per-weight-credit over the eligible live shards
+/// that can still serve `precision`; ties break toward the lower absolute
+/// in-flight count, then the lower index (deterministic).
+fn pick_least_loaded(
+    precision: Precision,
+    shards: &[Arc<ShardState>],
+    tried: u64,
+    eligible: impl Fn(&ShardState) -> bool,
+) -> Option<usize> {
+    let mut best: Option<(u128, u64, usize)> = None;
+    for (i, s) in shards.iter().enumerate() {
+        if tried & (1u64 << i) != 0 || !eligible(s) || !s.servable(precision) {
+            continue;
+        }
+        let w = s.weight();
+        if w == 0 {
+            continue;
+        }
+        let inflight = s.inflight();
+        // Scale before dividing so fractional loads order correctly:
+        // 3 in flight at weight 16 (0.1875/credit) beats 2 at weight 8
+        // (0.25/credit).
+        let score = (inflight as u128) * 1_000_000 / w as u128;
+        let key = (score, inflight, i);
+        if best.map(|b| key < b).unwrap_or(true) {
+            best = Some(key);
+        }
+    }
+    best.map(|(_, _, i)| i)
+}

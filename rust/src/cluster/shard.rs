@@ -1,0 +1,280 @@
+//! One fabric shard: a complete PR-2 serving [`Service`] (its own
+//! per-precision batchers, worker pool and lock-free op counters) bound to
+//! one simulated fabric column set, plus the lock-free routing state the
+//! cluster's [`super::Router`] reads on every submit.
+
+use crate::config::ServiceConfig;
+use crate::coordinator::{BackendChoice, Service, ServiceReport};
+use crate::decomp::{BlockKind, Precision, Scheme, SchemeKind};
+use crate::fabric::{
+    schedule_op, simulate_counts, CostModel, FabricConfig, FabricKind, FaultOutcome,
+    RepairableFabric, StreamReport,
+};
+use crate::proput::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+
+/// Routing credits a fully healthy shard carries; degradation scales a
+/// shard's weight down proportionally to the block capacity it has lost.
+pub const FULL_WEIGHT: u64 = 16;
+
+#[inline]
+fn prec_bit(p: Precision) -> u8 {
+    match p {
+        Precision::Single => 1 << 0,
+        Precision::Double => 1 << 1,
+        Precision::Quad => 1 << 2,
+    }
+}
+
+/// Routing-visible state of one shard. Every field the router reads is an
+/// atomic, so shard selection takes no lock; degradation events (rare,
+/// control-plane) rewrite the weight and affinity bits in place.
+#[derive(Debug)]
+pub struct ShardState {
+    /// Admission bound: maximum requests in flight on this shard.
+    pub max_inflight: u64,
+    /// Requests currently in flight — reserved at submit, released when
+    /// the client consumes or drops its [`super::ClusterReply`].
+    inflight: AtomicU64,
+    /// Routing weight in credits ([`FULL_WEIGHT`] = healthy, `0` =
+    /// drained — the router never selects a zero-weight shard).
+    weight: AtomicU64,
+    /// Per-precision servability bits (one per [`Precision`], all set on
+    /// a healthy shard): degradation that kills every block of a kind
+    /// steers only the precisions that *need* that kind away, so a shard
+    /// that lost its 9x9 pool keeps serving single-precision traffic.
+    servable: AtomicU8,
+    /// True while the shard's (possibly degraded) block pools still issue
+    /// one quadruple-precision multiplication per wave — the
+    /// precision-affinity routing bit.
+    quad_one_wave: AtomicBool,
+}
+
+impl ShardState {
+    /// Healthy state with the given admission bound.
+    pub fn new(max_inflight: u64) -> ShardState {
+        assert!(max_inflight > 0, "shard in-flight bound must be >= 1");
+        ShardState {
+            max_inflight,
+            inflight: AtomicU64::new(0),
+            weight: AtomicU64::new(FULL_WEIGHT),
+            servable: AtomicU8::new(0b111),
+            quad_one_wave: AtomicBool::new(true),
+        }
+    }
+
+    /// Reserve one in-flight slot; `false` when the shard is at its bound.
+    /// The reservation is a single CAS loop — the bound can never be
+    /// exceeded, regardless of how many threads race the admission.
+    pub fn try_acquire(&self) -> bool {
+        self.inflight
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                if v < self.max_inflight {
+                    Some(v + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    /// Release one reserved slot.
+    pub fn release(&self) {
+        let prev = self.inflight.fetch_sub(1, Ordering::Relaxed);
+        debug_assert!(prev > 0, "shard in-flight underflow");
+    }
+
+    /// Requests currently in flight.
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Current routing weight (0 = drained).
+    pub fn weight(&self) -> u64 {
+        self.weight.load(Ordering::Relaxed)
+    }
+
+    /// Whether a quad multiplication issues in one wave on this shard.
+    pub fn quad_one_wave(&self) -> bool {
+        self.quad_one_wave.load(Ordering::Relaxed)
+    }
+
+    /// Whether this shard's block pools can still schedule `precision`.
+    pub fn servable(&self, precision: Precision) -> bool {
+        self.servable.load(Ordering::Relaxed) & prec_bit(precision) != 0
+    }
+
+    /// Set the routing weight (degradation control plane).
+    pub fn set_weight(&self, w: u64) {
+        self.weight.store(w, Ordering::Relaxed);
+    }
+
+    /// Set one precision's servability bit.
+    pub fn set_servable(&self, precision: Precision, v: bool) {
+        if v {
+            self.servable.fetch_or(prec_bit(precision), Ordering::Relaxed);
+        } else {
+            self.servable.fetch_and(!prec_bit(precision), Ordering::Relaxed);
+        }
+    }
+
+    /// Set the quad-affinity bit.
+    pub fn set_quad_one_wave(&self, v: bool) {
+        self.quad_one_wave.store(v, Ordering::Relaxed);
+    }
+}
+
+/// Fault-injection summary returned by [`Shard::inject_faults`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DegradeOutcome {
+    /// Faults absorbed by spare sub-units (no capacity loss).
+    pub repaired: u64,
+    /// Block instances permanently retired (spares exhausted).
+    pub lost: u64,
+}
+
+/// One serving shard: a [`Service`] plus its repairable fabric and the
+/// routing state derived from that fabric's current condition.
+pub struct Shard {
+    /// Shard index within the cluster.
+    pub id: usize,
+    service: Service,
+    state: Arc<ShardState>,
+    fabric: RepairableFabric,
+    cost: CostModel,
+    scheme: SchemeKind,
+}
+
+impl Shard {
+    /// Start a shard: its own worker pool, batchers and op counters (one
+    /// [`Service`]), wrapped with a repairable fabric of
+    /// `spares_per_block` spare sub-units per block instance.
+    pub fn start(
+        id: usize,
+        cfg: &ServiceConfig,
+        backend: BackendChoice,
+        max_inflight: u64,
+        spares_per_block: u32,
+    ) -> Shard {
+        let base = match cfg.fabric {
+            FabricKind::Civp => FabricConfig::civp_scaled(cfg.fabric_scale),
+            FabricKind::Legacy => FabricConfig::legacy_scaled(cfg.fabric_scale),
+        };
+        let mut shard = Shard {
+            id,
+            service: Service::start(cfg, backend),
+            state: Arc::new(ShardState::new(max_inflight)),
+            fabric: RepairableFabric::new(base, spares_per_block),
+            cost: CostModel::default(),
+            scheme: cfg.scheme,
+        };
+        shard.refresh_routing();
+        shard
+    }
+
+    /// The underlying service (submit paths, op counters, metrics).
+    pub fn service(&self) -> &Service {
+        &self.service
+    }
+
+    /// Shared routing state (read by the router, released by replies).
+    pub fn state(&self) -> &Arc<ShardState> {
+        &self.state
+    }
+
+    /// Fraction of original block capacity still live.
+    pub fn health(&self) -> f64 {
+        self.fabric.health()
+    }
+
+    /// The shard's fabric as currently degraded.
+    pub fn effective_fabric(&self) -> FabricConfig {
+        if self.is_degraded() {
+            self.fabric.effective_config()
+        } else {
+            self.fabric.base.clone()
+        }
+    }
+
+    fn is_degraded(&self) -> bool {
+        self.fabric.degradation().values().any(|(_, dead)| *dead > 0)
+    }
+
+    /// Inject `n` sub-unit faults into random live instances of `kind`,
+    /// then recompute the routing weight and affinity bits. A shard whose
+    /// repaired fabric has lost blocks gets proportionally less traffic;
+    /// one that can no longer serve its scheme at all is drained
+    /// (weight 0).
+    pub fn inject_faults(&mut self, kind: BlockKind, n: usize, rng: &mut Rng) -> DegradeOutcome {
+        let mut out = DegradeOutcome::default();
+        for _ in 0..n {
+            match self.fabric.inject_fault(kind, rng) {
+                FaultOutcome::Repaired => out.repaired += 1,
+                FaultOutcome::BlockLost => out.lost += 1,
+                FaultOutcome::NoTarget => break,
+            }
+        }
+        self.refresh_routing();
+        out
+    }
+
+    /// Recompute `weight` / per-precision servability / `quad_one_wave`
+    /// from the fabric's condition. A precision whose block kinds are all
+    /// gone is steered away individually (its servable bit clears); the
+    /// whole shard drains to weight 0 only when *no* precision remains
+    /// servable.
+    pub fn refresh_routing(&mut self) {
+        let effective = self.fabric.effective_config();
+        let mut any = false;
+        let mut quad_servable = false;
+        for prec in Precision::ALL {
+            let scheme = Scheme::new(self.scheme, prec);
+            let ok = effective.can_serve(scheme.tiles().iter().map(|t| t.kind));
+            self.state.set_servable(prec, ok);
+            any |= ok;
+            if prec == Precision::Quad {
+                quad_servable = ok;
+            }
+        }
+        if !any {
+            self.state.set_weight(0);
+            self.state.set_quad_one_wave(false);
+            return;
+        }
+        let weight = ((self.fabric.health() * FULL_WEIGHT as f64).round() as u64).max(1);
+        self.state.set_weight(weight);
+        let one_wave = quad_servable && {
+            let quad = Scheme::new(self.scheme, Precision::Quad);
+            schedule_op(&quad, &effective, &self.cost).initiation_interval == 1
+        };
+        self.state.set_quad_one_wave(one_wave);
+    }
+
+    /// Fabric-level report for everything this shard executed, replayed in
+    /// closed form on its *current* (degraded) fabric. If degradation has
+    /// removed a block kind some already-executed class needs, the report
+    /// falls back to the pristine fabric — those ops ran before the blocks
+    /// died, and a fabric that cannot serve them cannot be scheduled.
+    pub fn fabric_report(&self) -> StreamReport {
+        let counts = self.service.op_counts();
+        let effective = self.effective_fabric();
+        let all_servable = counts
+            .keys()
+            .all(|c| effective.can_serve(c.scheme().tiles().iter().map(|t| t.kind)));
+        let fabric = if all_servable { &effective } else { &self.fabric.base };
+        simulate_counts(&counts, fabric, &self.cost)
+    }
+
+    /// Close the shard's queues and join its workers; the op counters are
+    /// final afterwards, so a subsequent [`Shard::fabric_report`] covers
+    /// every op the shard ever executed. Idempotent.
+    pub fn drain(&mut self) {
+        self.service.drain();
+    }
+
+    /// Final serving-layer report (meaningful after [`Shard::drain`]).
+    pub fn service_report(&self) -> ServiceReport {
+        self.service.report()
+    }
+}

@@ -1,0 +1,443 @@
+//! Cluster tests: router policy properties (pure, no threads), admission
+//! bounds under flood, degradation-aware routing, and end-to-end
+//! accounting invariants across shards.
+
+use super::*;
+use crate::config::ServiceConfig;
+use crate::coordinator::BackendChoice;
+use crate::decomp::{BlockKind, Precision, SchemeKind};
+use crate::proput::{forall, Rng};
+use std::sync::Arc;
+
+fn one_bits(p: Precision) -> u128 {
+    match p {
+        Precision::Single => 0x3F80_0000u128,
+        Precision::Double => 0x3FF0_0000_0000_0000u128,
+        Precision::Quad => 0x3FFFu128 << 112,
+    }
+}
+
+fn small_cfg() -> ClusterConfig {
+    ClusterConfig {
+        shards: 2,
+        service: ServiceConfig { workers: 1, max_batch: 32, linger_us: 100, ..Default::default() },
+        policy: RouterPolicy::LeastLoaded,
+        max_inflight: 1024,
+        spares_per_block: 0,
+    }
+}
+
+fn native(cfg: &ClusterConfig) -> Cluster {
+    Cluster::start(cfg, BackendChoice::Native(SchemeKind::Civp))
+}
+
+// ---------------------------------------------------------------------
+// Router (pure state, no services)
+// ---------------------------------------------------------------------
+
+fn states(n: usize, bound: u64) -> Vec<Arc<ShardState>> {
+    (0..n).map(|_| Arc::new(ShardState::new(bound))).collect()
+}
+
+#[test]
+fn policy_parse_roundtrip() {
+    for p in RouterPolicy::ALL {
+        assert_eq!(RouterPolicy::parse(p.name()), Some(p));
+    }
+    assert_eq!(RouterPolicy::parse("nope"), None);
+}
+
+#[test]
+fn round_robin_distributes_exactly_by_weight() {
+    let s = states(2, 100);
+    s[0].set_weight(8);
+    s[1].set_weight(16);
+    let router = Router::new(RouterPolicy::RoundRobin);
+    let mut hits = [0u64; 2];
+    for _ in 0..2400 {
+        hits[router.pick(Precision::Double, &s, 0).unwrap()] += 1;
+    }
+    // ticket space cycles through 24 credits: 8 then 16, exactly.
+    assert_eq!(hits, [800, 1600]);
+}
+
+#[test]
+fn least_loaded_balances_alternately() {
+    let s = states(2, 100);
+    let router = Router::new(RouterPolicy::LeastLoaded);
+    let mut hits = [0u64; 2];
+    for _ in 0..10 {
+        let idx = router.pick(Precision::Single, &s, 0).unwrap();
+        assert!(s[idx].try_acquire());
+        hits[idx] += 1;
+    }
+    assert_eq!(hits, [5, 5]);
+}
+
+#[test]
+fn least_loaded_weighs_load_per_credit() {
+    let s = states(2, 100);
+    s[0].set_weight(16);
+    s[1].set_weight(8);
+    // 3/16 per credit on shard 0 vs 2/8 on shard 1: shard 0 is less loaded.
+    for _ in 0..3 {
+        assert!(s[0].try_acquire());
+    }
+    for _ in 0..2 {
+        assert!(s[1].try_acquire());
+    }
+    let router = Router::new(RouterPolicy::LeastLoaded);
+    assert_eq!(router.pick(Precision::Double, &s, 0), Some(0));
+}
+
+#[test]
+fn affinity_pins_quads_and_reserves_quad_columns() {
+    let s = states(2, 100);
+    s[0].set_quad_one_wave(true);
+    s[1].set_quad_one_wave(false);
+    let router = Router::new(RouterPolicy::PrecisionAffinity);
+    // Quads go to the one-wave shard; single/double keep it free.
+    assert_eq!(router.pick(Precision::Quad, &s, 0), Some(0));
+    assert_eq!(router.pick(Precision::Single, &s, 0), Some(1));
+    assert_eq!(router.pick(Precision::Double, &s, 0), Some(1));
+    // Spill-over: once the affine shard has been tried, fall back to the
+    // other (capacity beats placement).
+    assert_eq!(router.pick(Precision::Quad, &s, 1 << 0), Some(1));
+    assert_eq!(router.pick(Precision::Single, &s, 1 << 1), Some(0));
+}
+
+#[test]
+fn router_skips_drained_shards_every_policy() {
+    for policy in RouterPolicy::ALL {
+        let s = states(3, 100);
+        s[1].set_weight(0);
+        let router = Router::new(policy);
+        for _ in 0..50 {
+            let idx = router.pick(Precision::Double, &s, 0).unwrap();
+            assert_ne!(idx, 1, "{policy:?} picked a drained shard");
+        }
+        // All drained: nothing to pick.
+        s[0].set_weight(0);
+        s[2].set_weight(0);
+        assert_eq!(router.pick(Precision::Double, &s, 0), None, "{policy:?}");
+    }
+}
+
+/// The satellite property: for every policy, simulated admission through
+/// the router (a) never exceeds any shard's in-flight bound, (b) accounts
+/// every submission as exactly one accept or one reject, and (c) never
+/// routes to a drained or already-tried shard.
+#[test]
+fn admission_respects_bounds_and_accounts_exactly() {
+    for (pi, policy) in RouterPolicy::ALL.into_iter().enumerate() {
+        forall(0x600 + pi as u64, 40, |rng| {
+            let n = rng.range(1, 6) as usize;
+            let s: Vec<Arc<ShardState>> =
+                (0..n).map(|_| Arc::new(ShardState::new(rng.range(1, 8)))).collect();
+            for st in &s {
+                st.set_weight(rng.below(3) * 8); // 0, 8 or 16 credits
+                st.set_quad_one_wave(rng.chance(0.7));
+                for prec in Precision::ALL {
+                    st.set_servable(prec, rng.chance(0.8));
+                }
+            }
+            let router = Router::new(policy);
+            let mut held: Vec<usize> = Vec::new();
+            let (mut accepted, mut rejected) = (0u64, 0u64);
+            let submitted = 200u64;
+            for _ in 0..submitted {
+                let precision = match rng.below(3) {
+                    0 => Precision::Single,
+                    1 => Precision::Double,
+                    _ => Precision::Quad,
+                };
+                let mut tried = 0u64;
+                let mut placed = None;
+                while let Some(idx) = router.pick(precision, &s, tried) {
+                    assert_eq!(tried & (1 << idx), 0, "router repeated a tried shard");
+                    assert!(s[idx].weight() > 0, "router picked a drained shard");
+                    assert!(s[idx].servable(precision), "router picked an unservable shard");
+                    tried |= 1 << idx;
+                    if s[idx].try_acquire() {
+                        placed = Some(idx);
+                        break;
+                    }
+                }
+                match placed {
+                    Some(idx) => {
+                        accepted += 1;
+                        held.push(idx);
+                    }
+                    None => rejected += 1,
+                }
+                for st in &s {
+                    assert!(st.inflight() <= st.max_inflight, "in-flight bound exceeded");
+                }
+                if !held.is_empty() && rng.chance(0.4) {
+                    let k = rng.below(held.len() as u64) as usize;
+                    s[held.swap_remove(k)].release();
+                }
+            }
+            assert_eq!(accepted + rejected, submitted);
+            if s.iter().all(|st| st.weight() == 0) {
+                assert_eq!(accepted, 0);
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cluster end-to-end (real shards, native backend)
+// ---------------------------------------------------------------------
+
+#[test]
+fn cluster_multiplies_correctly_and_releases_slots() {
+    let cluster = native(&small_cfg());
+    let one = one_bits(Precision::Double);
+    for i in 0..20u64 {
+        let rx = cluster.try_submit(i, Precision::Double, one, one).expect("capacity available");
+        assert_eq!(rx.recv().unwrap().bits, one);
+        drop(rx);
+    }
+    for st in cluster.states() {
+        assert_eq!(st.inflight(), 0, "reply drop must release the slot");
+    }
+    let report = cluster.shutdown();
+    assert_eq!(report.total_ops, 20);
+    assert_eq!(report.rejected_saturated, 0);
+}
+
+/// The accounting invariant across shards, for every policy: total
+/// executed ops across all shard op counters equals the number of
+/// accepted submissions, class by class.
+#[test]
+fn total_ops_across_shards_equals_submitted_every_policy() {
+    for policy in RouterPolicy::ALL {
+        let cfg = ClusterConfig { shards: 3, policy, ..small_cfg() };
+        let cluster = native(&cfg);
+        let plan = [(Precision::Single, 300u64), (Precision::Double, 200), (Precision::Quad, 100)];
+        let mut pending = Vec::new();
+        for &(precision, n) in &plan {
+            for i in 0..n {
+                pending.push(
+                    cluster
+                        .submit(i, precision, one_bits(precision), one_bits(precision))
+                        .expect("cluster open"),
+                );
+                if pending.len() >= 256 {
+                    for rx in pending.drain(..) {
+                        rx.recv().unwrap();
+                    }
+                }
+            }
+        }
+        for rx in pending {
+            rx.recv().unwrap();
+        }
+        let counts = cluster.op_counts();
+        for &(precision, n) in &plan {
+            let class = crate::fabric::OpClass { precision, organization: SchemeKind::Civp };
+            assert_eq!(counts.get(&class), Some(&n), "{policy:?} lost ops of {precision:?}");
+        }
+        let report = cluster.shutdown();
+        assert_eq!(report.total_ops, 600, "{policy:?}");
+        assert_eq!(report.accepted, 600, "{policy:?}");
+        assert_eq!(report.rejected_saturated, 0, "{policy:?}");
+    }
+}
+
+#[test]
+fn inflight_bound_is_hard_under_flood() {
+    // Slow drain (long linger, one worker) + tiny in-flight bound: the
+    // flood must stop at exactly bound × shards acceptances while nothing
+    // is released, and every shard must stay at or under its bound.
+    let cfg = ClusterConfig {
+        shards: 2,
+        service: ServiceConfig {
+            workers: 1,
+            max_batch: 8,
+            linger_us: 50_000,
+            ..Default::default()
+        },
+        policy: RouterPolicy::LeastLoaded,
+        max_inflight: 4,
+        spares_per_block: 0,
+    };
+    let cluster = native(&cfg);
+    let mut held = Vec::new();
+    let mut rejected = 0u64;
+    let one = one_bits(Precision::Double);
+    for i in 0..500u64 {
+        match cluster.try_submit(i, Precision::Double, one, one) {
+            Ok(rx) => held.push(rx),
+            Err(ClusterSubmitError::Saturated) => rejected += 1,
+            Err(e) => panic!("unexpected {e:?}"),
+        }
+        for st in cluster.states() {
+            assert!(st.inflight() <= 4, "bound exceeded: {}", st.inflight());
+        }
+    }
+    assert_eq!(held.len(), 8, "exactly bound × shards accepted");
+    assert_eq!(rejected, 492);
+    let snap = cluster.metrics();
+    assert_eq!(snap.counters["rejected_saturated"], 492);
+    assert!(snap.gauges["shard0_inflight"] <= 4);
+    for rx in held {
+        rx.recv().unwrap();
+    }
+    let report = cluster.shutdown();
+    assert_eq!(report.total_ops, 8);
+    assert_eq!(report.rejected_saturated, 492);
+}
+
+#[test]
+fn degraded_shard_loses_quad_affinity_and_traffic() {
+    let cfg = ClusterConfig { policy: RouterPolicy::PrecisionAffinity, ..small_cfg() };
+    let mut cluster = native(&cfg);
+    // Kill one 24x24 block on shard 0 (zero spares: one fault = one block).
+    let mut rng = Rng::new(42);
+    let out = cluster.degrade_shard(0, BlockKind::M24x24, 1, &mut rng);
+    assert_eq!(out.lost, 1);
+    let s0 = &cluster.states()[0];
+    assert!(!s0.quad_one_wave(), "15 of 16 24x24s cannot issue a quad in one wave");
+    assert!(s0.weight() < FULL_WEIGHT, "lost capacity must shed weight");
+    assert!(s0.weight() > 0, "still servable — not drained");
+    assert!(cluster.states()[1].quad_one_wave());
+    // Quad traffic now pins to shard 1; single traffic prefers shard 0.
+    for i in 0..40u64 {
+        let rx = cluster
+            .submit(i, Precision::Quad, one_bits(Precision::Quad), one_bits(Precision::Quad))
+            .unwrap();
+        assert_eq!(rx.shard(), 1);
+        rx.recv().unwrap();
+    }
+    for i in 0..40u64 {
+        let rx = cluster
+            .submit(i, Precision::Single, one_bits(Precision::Single), one_bits(Precision::Single))
+            .unwrap();
+        assert_eq!(rx.shard(), 0);
+        rx.recv().unwrap();
+    }
+    let quad = crate::fabric::OpClass {
+        precision: Precision::Quad,
+        organization: SchemeKind::Civp,
+    };
+    assert_eq!(cluster.shard(0).service().op_counts().get(&quad), None);
+    assert_eq!(cluster.shard(1).service().op_counts().get(&quad), Some(&40));
+    let report = cluster.shutdown();
+    assert_eq!(report.total_ops, 80);
+    assert!(report.shards[0].health < 1.0);
+    assert!(!report.shards[0].quad_one_wave);
+}
+
+#[test]
+fn partial_unservability_steers_per_precision_then_drains() {
+    let mut cluster = native(&small_cfg());
+    // Execute a few quads first so shard 0 has history in its counters.
+    for i in 0..10u64 {
+        let one = one_bits(Precision::Quad);
+        cluster.submit(i, Precision::Quad, one, one).unwrap().recv().unwrap();
+    }
+    // Kill all four 9x9 blocks on shard 0: CIVP double/quad lose a block
+    // kind there — but single-precision (pure 24x24) must keep serving.
+    let mut rng = Rng::new(7);
+    let out = cluster.degrade_shard(0, BlockKind::M9x9, 4, &mut rng);
+    assert_eq!(out.lost, 4);
+    let s0 = &cluster.states()[0];
+    assert!(s0.weight() > 0, "single-precision capacity remains — not drained");
+    assert!(s0.servable(Precision::Single));
+    assert!(!s0.servable(Precision::Double));
+    assert!(!s0.servable(Precision::Quad));
+    assert!(!s0.quad_one_wave());
+    // Doubles route around shard 0; singles still reach it (least-loaded
+    // tie breaks toward the lower index).
+    let one_d = one_bits(Precision::Double);
+    for i in 0..30u64 {
+        let rx = cluster.submit(i, Precision::Double, one_d, one_d).unwrap();
+        assert_eq!(rx.shard(), 1);
+        rx.recv().unwrap();
+    }
+    let one_s = one_bits(Precision::Single);
+    let rx = cluster.submit(40, Precision::Single, one_s, one_s).unwrap();
+    assert_eq!(rx.shard(), 0);
+    rx.recv().unwrap();
+    // Now kill the whole 24x24 pool too: nothing is servable -> drained.
+    let out = cluster.degrade_shard(0, BlockKind::M24x24, 16, &mut rng);
+    assert_eq!(out.lost, 16);
+    assert_eq!(cluster.states()[0].weight(), 0);
+    let rx = cluster.submit(41, Precision::Single, one_s, one_s).unwrap();
+    assert_eq!(rx.shard(), 1);
+    rx.recv().unwrap();
+    // The report still accounts shard 0's pre-degradation ops (pristine-
+    // fabric fallback for classes its dead pools can no longer schedule).
+    let report = cluster.shutdown();
+    assert_eq!(report.total_ops, 42);
+    let s0 = &report.shards[0];
+    assert_eq!(s0.weight, 0);
+    assert!(s0.fabric.total_ops > 0);
+}
+
+#[test]
+fn fully_drained_cluster_reports_unservable_not_saturated() {
+    // One shard, zero spares: 16 faults kill the whole 24x24 pool and
+    // nothing remains servable. Submitting must fail fast with
+    // `Unservable` (a retry loop on Saturated would spin forever).
+    let cfg = ClusterConfig { shards: 1, ..small_cfg() };
+    let mut cluster = native(&cfg);
+    let mut rng = Rng::new(5);
+    let out = cluster.degrade_shard(0, BlockKind::M24x24, 16, &mut rng);
+    assert_eq!(out.lost, 16);
+    assert_eq!(cluster.states()[0].weight(), 0);
+    let one = one_bits(Precision::Single);
+    let err = cluster.try_submit(0, Precision::Single, one, one).unwrap_err();
+    assert_eq!(err, ClusterSubmitError::Unservable);
+    let err = cluster.submit(1, Precision::Quad, one, one).unwrap_err();
+    assert_eq!(err, ClusterSubmitError::Unservable, "blocking submit must not spin");
+    let snap = cluster.metrics();
+    assert_eq!(snap.counters["rejected_unservable"], 2);
+    assert_eq!(snap.counters["rejected_saturated"], 0);
+    cluster.shutdown();
+}
+
+#[test]
+fn report_aggregates_sums_and_makespan() {
+    let cluster = native(&ClusterConfig { policy: RouterPolicy::RoundRobin, ..small_cfg() });
+    let one = one_bits(Precision::Double);
+    let mut pending = Vec::new();
+    for i in 0..200u64 {
+        pending.push(cluster.submit(i, Precision::Double, one, one).unwrap());
+    }
+    for rx in pending {
+        rx.recv().unwrap();
+    }
+    let report = cluster.report();
+    let sum: u64 = report.shards.iter().map(|s| s.fabric.total_ops).sum();
+    let max: u64 = report.shards.iter().map(|s| s.fabric.cycles).max().unwrap();
+    assert_eq!(report.total_ops, sum);
+    assert_eq!(report.total_ops, 200);
+    assert_eq!(report.wall_cycles, max);
+    // Round-robin over two healthy shards: both served some traffic.
+    for s in &report.shards {
+        assert!(s.fabric.total_ops > 0, "shard {} idle under round-robin", s.id);
+    }
+    let text = report.render();
+    assert!(text.contains("total"));
+    assert!(text.contains("accepted"));
+    cluster.shutdown();
+}
+
+#[test]
+fn shutdown_drains_inflight_ops_into_the_report() {
+    let cluster = native(&small_cfg());
+    let one = one_bits(Precision::Single);
+    let mut pending = Vec::new();
+    for i in 0..300u64 {
+        pending.push(cluster.submit(i, Precision::Single, one, one).unwrap());
+    }
+    // Shut down with replies still un-received: drain must execute and
+    // account every accepted op before the final report is built.
+    drop(pending);
+    let report = cluster.shutdown();
+    assert_eq!(report.total_ops, 300);
+    assert_eq!(report.accepted, 300);
+}

@@ -276,6 +276,14 @@ impl Service {
         self.report()
     }
 
+    /// Close queues and join workers *without* consuming the service —
+    /// the cluster layer drains every shard first, then reads the final
+    /// (now quiescent) op counters for the aggregated fabric report.
+    /// Idempotent; subsequent submits fail with `Closed`.
+    pub fn drain(&mut self) {
+        self.shutdown_inner();
+    }
+
     fn shutdown_inner(&mut self) {
         for b in &self.shared.batchers {
             b.close();

@@ -21,8 +21,13 @@ pub enum BlockKind {
 
 impl BlockKind {
     /// All kinds, for iteration / reporting.
-    pub const ALL: [BlockKind; 5] =
-        [BlockKind::M9x9, BlockKind::M18x18, BlockKind::M24x9, BlockKind::M25x18, BlockKind::M24x24];
+    pub const ALL: [BlockKind; 5] = [
+        BlockKind::M9x9,
+        BlockKind::M18x18,
+        BlockKind::M24x9,
+        BlockKind::M25x18,
+        BlockKind::M24x24,
+    ];
 
     /// Operand widths `(a_bits, b_bits)` with `a_bits >= b_bits`.
     pub const fn dims(self) -> (u32, u32) {
@@ -245,7 +250,7 @@ impl Scheme {
                 let padded_b: u32 = b.iter().sum();
                 let name = prec
                     .map(|p| format!("{}-{}", kind.name(), p.name()))
-                    .unwrap_or_else(|| format!("{}-int{}", kind.name(), width));
+                    .unwrap_or_else(|| format!("{}-int{width}", kind.name()));
                 return Scheme {
                     name,
                     kind,
@@ -260,7 +265,7 @@ impl Scheme {
         let padded: u32 = chunks.iter().sum();
         let name = prec
             .map(|p| format!("{}-{}", kind.name(), p.name()))
-            .unwrap_or_else(|| format!("{}-int{}", kind.name(), width));
+            .unwrap_or_else(|| format!("{}-int{width}", kind.name()));
         Scheme {
             name,
             kind,
@@ -303,7 +308,7 @@ impl Scheme {
             .copied()
             .filter(|k| k.fits(wa, wb))
             .min_by_key(|k| k.capacity())
-            .unwrap_or_else(|| panic!("no block in {:?} fits {}x{}", self.blocks, wa, wb))
+            .unwrap_or_else(|| panic!("no block in {:?} fits {wa}x{wb}", self.blocks))
     }
 
     /// Total number of dedicated blocks consumed by one multiplication.

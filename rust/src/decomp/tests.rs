@@ -132,7 +132,7 @@ fn dead_blocks_only_when_chunk_all_padding() {
     for prec in Precision::ALL {
         for kind in SchemeKind::ALL {
             let c = scheme_census(&Scheme::new(kind, prec));
-            assert_eq!(c.dead_blocks, 0, "{:?} {:?}", kind, prec);
+            assert_eq!(c.dead_blocks, 0, "{kind:?} {prec:?}");
         }
     }
 }
@@ -256,7 +256,7 @@ fn decomp_mul_all_baselines_agree_on_fp128() {
             if expect.is_nan() {
                 assert!(got.is_nan());
             } else {
-                assert_eq!(got.0, expect.0, "{:?}", kind);
+                assert_eq!(got.0, expect.0, "{kind:?}");
             }
         }
     });
@@ -356,7 +356,7 @@ fn plan_exact_for_random_sigs_every_scheme() {
                 let a = rng.sig(prec.sig_bits());
                 let b = rng.sig(prec.sig_bits());
                 let mut stats = ExecStats::default();
-                assert_eq!(plan.execute(a, b, &mut stats), mul_u128(a, b), "{:?} {:?}", kind, prec);
+                assert_eq!(plan.execute(a, b, &mut stats), mul_u128(a, b), "{kind:?} {prec:?}");
             }
         }
     });

@@ -119,7 +119,7 @@ impl RepairableFabric {
         let mut cfg = self.base.clone();
         cfg.name = format!("{}-degraded", self.base.name);
         for (kind, n) in cfg.instances.iter_mut() {
-            *n = self.live(*kind).max(0);
+            *n = self.live(*kind);
         }
         cfg.instances.retain(|_, n| *n > 0);
         cfg

@@ -21,6 +21,10 @@
 //! * [`coordinator`] — a variable-precision multiplication service (router,
 //!   dynamic batcher, worker pool, adaptive-precision escalation) — the
 //!   "multimedia processing" deployment shape the paper motivates.
+//! * [`cluster`] — sharded serving across N independent fabric columns:
+//!   pluggable routing policies (round-robin / least-loaded /
+//!   precision-affinity), per-shard admission control with spill-over,
+//!   and degradation-aware traffic weighting over [`fabric::repair`].
 //! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas numeric
 //!   backends (`artifacts/*.hlo.txt`).
 //! * [`trace`], [`metrics`], [`config`] — workload generation, telemetry
@@ -33,6 +37,7 @@
 
 pub mod benchx;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod decomp;

@@ -6,6 +6,8 @@
 //! * `serve`    — drive a synthetic multimedia trace through the service
 //!                (router → batcher → workers → backend) and print the
 //!                serving + fabric reports.
+//! * `cluster`  — drive a trace through the sharded multi-fabric cluster
+//!                (router policies, admission control, degradation demo).
 //! * `analyze`  — print the §III block/utilization analysis table (E6).
 //! * `predicates` — run the adaptive-precision geometric-predicate demo.
 //! * `info`     — load the PJRT engine and print artifact facts.
@@ -13,6 +15,7 @@
 //! Run `civp-server help` for options.
 
 use civp::cli::Args;
+use civp::cluster::{Cluster, ClusterConfig, RouterPolicy};
 use civp::error::{bail, err, Result};
 use civp::config::ServiceConfig;
 use civp::coordinator::{orient2d_adaptive, AdaptiveStats, BackendChoice, Service};
@@ -32,6 +35,7 @@ fn run() -> Result<()> {
     let args = Args::from_env()?;
     match args.command.as_deref() {
         Some("serve") => serve(&args),
+        Some("cluster") => cluster(&args),
         Some("analyze") => analyze(),
         Some("predicates") => predicates(&args),
         Some("info") => info(&args),
@@ -56,6 +60,15 @@ COMMANDS
                --workload <spec>    graphics|scientific|uniform|single-only
                --backend <b>        native|pjrt (default native)
                --artifacts <dir>    artifacts directory (pjrt backend)
+  cluster      run a synthetic trace through the sharded cluster
+               --shards <n>         shard count (default 4)
+               --policy <p>         round-robin|least-loaded|precision-affinity
+               --inflight <n>       per-shard in-flight bound (default 4096)
+               --spares <n>         spare sub-units per block (default 2)
+               --degrade <shard>    inject faults into one shard first
+               --faults <n>         fault count for --degrade (default 8)
+               --backend <b>        native|pjrt (default native)
+               (also accepts serve's --config/--requests/--workload/--artifacts)
   analyze      print the paper's block/utilization analysis table
   predicates   adaptive-precision orient2d demo
                --points <n>         number of predicates (default 2000)
@@ -126,6 +139,86 @@ fn serve(args: &Args) -> Result<()> {
     println!("dynamic energy       {:.1}", fabric.dyn_energy);
     println!("wasted energy        {:.1}%", fabric.wasted_fraction() * 100.0);
     println!("energy/op            {:.3}", fabric.energy_per_op());
+    Ok(())
+}
+
+fn cluster(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let shards = args.get_usize("shards", 4)?;
+    let policy_name = args.get_str("policy", "least-loaded");
+    let policy = RouterPolicy::parse(&policy_name)
+        .ok_or_else(|| err!("unknown policy {policy_name:?} (try `help`)"))?;
+    let ccfg = ClusterConfig {
+        shards,
+        service: cfg.clone(),
+        policy,
+        max_inflight: args.get_usize("inflight", 4096)? as u64,
+        spares_per_block: args.get_usize("spares", 2)? as u32,
+    };
+    let backend = match args.get_str("backend", "native").as_str() {
+        "native" => BackendChoice::Native(cfg.scheme),
+        "pjrt" => BackendChoice::Pjrt(EngineHandle::load(cfg.artifacts_dir.clone())?),
+        other => bail!("unknown backend {other:?}"),
+    };
+    println!(
+        "cluster: {shards} shards, policy `{}`, workload `{}`, {} requests",
+        policy.name(),
+        cfg.workload.name(),
+        cfg.requests
+    );
+    let mut cluster = Cluster::start(&ccfg, backend);
+    if let Some(d) = args.options.get("degrade") {
+        let shard: usize = d.parse()?;
+        if shard >= shards {
+            bail!("--degrade {shard} out of range (cluster has {shards} shards)");
+        }
+        let faults = args.get_usize("faults", 8)?;
+        let mut rng = civp::proput::Rng::new(cfg.seed);
+        let out = cluster.degrade_shard(shard, civp::decomp::BlockKind::M24x24, faults, &mut rng);
+        let st = &cluster.states()[shard];
+        println!(
+            "degraded shard {shard}: {} faults repaired, {} blocks lost -> weight {}/{}, \
+             quad-one-wave {}",
+            out.repaired,
+            out.lost,
+            st.weight(),
+            civp::cluster::FULL_WEIGHT,
+            st.quad_one_wave()
+        );
+    }
+    let mut gen = TraceGen::new(cfg.seed, cfg.workload.mix(), 0);
+    let t0 = Instant::now();
+    // Cap held replies below the cluster's total in-flight budget: every
+    // un-received reply pins a per-shard slot, so holding >= shards ×
+    // inflight of them would livelock the blocking submit.
+    let budget = (ccfg.max_inflight as usize).saturating_mul(shards);
+    let drain_at = 4096.min(budget / 2).max(1);
+    let mut pending = Vec::with_capacity(drain_at);
+    for req in gen.take(cfg.requests) {
+        let rx = cluster
+            .submit(req.id, req.precision, req.a, req.b)
+            .map_err(|e| err!("cluster submit failed: {e}"))?;
+        pending.push(rx);
+        if pending.len() >= drain_at {
+            for rx in pending.drain(..) {
+                let _ = rx.recv();
+            }
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed();
+    println!("\n== cluster metrics ==");
+    print!("{}", cluster.metrics().render());
+    let report = cluster.shutdown();
+    println!("\n== cluster report ==");
+    println!("wall time            {:.3} s", wall.as_secs_f64());
+    println!(
+        "throughput           {:.0} mult/s",
+        report.accepted as f64 / wall.as_secs_f64()
+    );
+    print!("{}", report.render());
     Ok(())
 }
 

@@ -1,4 +1,5 @@
-//! Telemetry substrate: counters and latency histograms for the service.
+//! Telemetry substrate: counters, gauges and latency histograms for the
+//! service and the cluster layer.
 //!
 //! Hot-path friendly: recording a latency is a few atomic increments into
 //! log-spaced buckets — no locks, no allocation.
@@ -9,4 +10,4 @@ mod registry;
 mod tests;
 
 pub use hist::Histogram;
-pub use registry::{Counter, Registry, Snapshot};
+pub use registry::{Counter, Gauge, Registry, Snapshot};

@@ -1,8 +1,8 @@
-//! Named counters + histograms with a point-in-time snapshot.
+//! Named counters, gauges and histograms with a point-in-time snapshot.
 
 use super::hist::Histogram;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// A monotonically increasing counter.
@@ -24,11 +24,42 @@ impl Counter {
     }
 }
 
-/// Registry of named counters and histograms. Lookup takes a read lock;
-/// the hot path holds `Arc`s to the instruments, so recording is lock-free.
+/// A settable instantaneous value (queue depths, in-flight requests,
+/// routing weights). Unlike [`Counter`] it can move in both directions;
+/// all operations are relaxed atomics — safe to touch from any thread.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Set the current value.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    /// Add `n` (may be negative).
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    /// Decrement by one.
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Registry of named counters, gauges and histograms. Lookup takes a read
+/// lock; the hot path holds `Arc`s to the instruments, so recording is
+/// lock-free.
 #[derive(Debug, Default)]
 pub struct Registry {
     counters: RwLock<BTreeMap<String, Arc<Counter>>>,
+    gauges: RwLock<BTreeMap<String, Arc<Gauge>>>,
     hists: RwLock<BTreeMap<String, Arc<Histogram>>>,
 }
 
@@ -45,6 +76,15 @@ impl Registry {
         }
         let mut w = self.counters.write().unwrap();
         w.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::default())).clone()
+    }
+
+    /// Get or create a gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        if let Some(g) = self.gauges.read().unwrap().get(name) {
+            return g.clone();
+        }
+        let mut w = self.gauges.write().unwrap();
+        w.entry(name.to_string()).or_insert_with(|| Arc::new(Gauge::default())).clone()
     }
 
     /// Get or create a histogram.
@@ -65,6 +105,13 @@ impl Registry {
             .iter()
             .map(|(k, v)| (k.clone(), v.get()))
             .collect();
+        let gauges = self
+            .gauges
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
         let hists = self
             .hists
             .read()
@@ -80,7 +127,7 @@ impl Registry {
                 })
             })
             .collect();
-        Snapshot { counters, hists }
+        Snapshot { counters, gauges, hists }
     }
 }
 
@@ -104,6 +151,8 @@ pub struct HistSummary {
 pub struct Snapshot {
     /// Counter values by name.
     pub counters: BTreeMap<String, u64>,
+    /// Gauge values by name.
+    pub gauges: BTreeMap<String, i64>,
     /// Histogram summaries by name.
     pub hists: BTreeMap<String, HistSummary>,
 }
@@ -113,6 +162,9 @@ impl Snapshot {
     pub fn render(&self) -> String {
         let mut out = String::new();
         for (k, v) in &self.counters {
+            out.push_str(&format!("{k:<40} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
             out.push_str(&format!("{k:<40} {v}\n"));
         }
         for (k, h) in &self.hists {

@@ -74,10 +74,49 @@ fn registry_dedup_and_snapshot() {
     c2.add(2);
     assert_eq!(r.counter("reqs").get(), 3);
     r.histogram("lat").record(42);
+    r.gauge("inflight").set(5);
     let snap = r.snapshot();
     assert_eq!(snap.counters["reqs"], 3);
+    assert_eq!(snap.gauges["inflight"], 5);
     assert_eq!(snap.hists["lat"].count, 1);
     let text = snap.render();
     assert!(text.contains("reqs"));
+    assert!(text.contains("inflight"));
     assert!(text.contains("lat"));
+}
+
+#[test]
+fn gauge_moves_both_directions() {
+    let r = Registry::new();
+    let g = r.gauge("depth");
+    g.inc();
+    g.inc();
+    g.dec();
+    assert_eq!(g.get(), 1);
+    g.add(-5);
+    assert_eq!(g.get(), -4);
+    g.set(7);
+    // same name resolves to the same instrument
+    assert_eq!(r.gauge("depth").get(), 7);
+}
+
+#[test]
+fn gauge_concurrent_inc_dec_balances() {
+    let r = Registry::new();
+    let g = r.gauge("inflight");
+    let threads: Vec<_> = (0..8)
+        .map(|_| {
+            let g = g.clone();
+            std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    g.inc();
+                    g.dec();
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(g.get(), 0);
 }

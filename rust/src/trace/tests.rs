@@ -79,6 +79,17 @@ fn closed_loop_all_at_zero() {
 }
 
 #[test]
+fn mixed_spec_carries_every_precision() {
+    let mut g = TraceGen::new(17, WorkloadSpec::Mixed.mix(), 0);
+    let reqs = g.take(20_000);
+    let n = reqs.len() as f64;
+    let frac = |p: Precision| reqs.iter().filter(|r| r.precision == p).count() as f64 / n;
+    assert!((frac(Precision::Single) - 0.50).abs() < 0.02, "single {}", frac(Precision::Single));
+    assert!((frac(Precision::Double) - 0.35).abs() < 0.02, "double {}", frac(Precision::Double));
+    assert!((frac(Precision::Quad) - 0.15).abs() < 0.02, "quad {}", frac(Precision::Quad));
+}
+
+#[test]
 fn spec_parse_roundtrip() {
     for spec in WorkloadSpec::ALL {
         assert_eq!(WorkloadSpec::parse(spec.name()), Some(spec));

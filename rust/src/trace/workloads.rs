@@ -47,15 +47,21 @@ pub enum WorkloadSpec {
     Uniform,
     /// Pure single precision (the CIFM [2] setting the paper extends).
     SingleOnly,
+    /// Cluster-serving mix: single-heavy with a significant quad tail —
+    /// enough quad mass that precision-affinity routing matters, enough
+    /// single/double that every shard stays busy. The `bench_cluster`
+    /// scaling curves run this spec.
+    Mixed,
 }
 
 impl WorkloadSpec {
     /// All named specs.
-    pub const ALL: [WorkloadSpec; 4] = [
+    pub const ALL: [WorkloadSpec; 5] = [
         WorkloadSpec::Graphics,
         WorkloadSpec::Scientific,
         WorkloadSpec::Uniform,
         WorkloadSpec::SingleOnly,
+        WorkloadSpec::Mixed,
     ];
 
     /// The precision mix for this spec.
@@ -65,6 +71,7 @@ impl WorkloadSpec {
             WorkloadSpec::Scientific => WorkloadMix { single: 0.10, double: 0.70, quad: 0.20 },
             WorkloadSpec::Uniform => WorkloadMix { single: 1.0, double: 1.0, quad: 1.0 },
             WorkloadSpec::SingleOnly => WorkloadMix { single: 1.0, double: 0.0, quad: 0.0 },
+            WorkloadSpec::Mixed => WorkloadMix { single: 0.50, double: 0.35, quad: 0.15 },
         }
     }
 
@@ -75,6 +82,7 @@ impl WorkloadSpec {
             WorkloadSpec::Scientific => "scientific",
             WorkloadSpec::Uniform => "uniform",
             WorkloadSpec::SingleOnly => "single-only",
+            WorkloadSpec::Mixed => "mixed",
         }
     }
 

@@ -187,7 +187,8 @@ fn dropped_receiver_does_not_wedge_service() {
         drop(rx);
     }
     // service still answers new requests
-    let bits = svc.mul_blocking(Precision::Double, (2.0f64).to_bits() as u128, (2.0f64).to_bits() as u128);
+    let two = (2.0f64).to_bits() as u128;
+    let bits = svc.mul_blocking(Precision::Double, two, two);
     assert_eq!(f64::from_bits(bits as u64), 4.0);
     let report = svc.shutdown();
     assert_eq!(report.responses, 201);

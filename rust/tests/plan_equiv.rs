@@ -46,7 +46,7 @@ fn plan_product_equals_direct_mul_random() {
                 let got = plan.execute(a, b, &mut stats);
                 // DirectMul's product IS the plain widening multiply.
                 let want = mul_u128(a, b);
-                assert_eq!(got, want, "{:?} {:?}", kind, prec);
+                assert_eq!(got, want, "{kind:?} {prec:?}");
             }
         }
     });
@@ -62,7 +62,7 @@ fn plan_product_equals_direct_mul_edge_cases() {
             for &a in &edges {
                 for &b in &edges {
                     let got = plan.execute(a, b, &mut stats);
-                    assert_eq!(got, mul_u128(a, b), "{:?} {:?}", kind, prec);
+                    assert_eq!(got, mul_u128(a, b), "{kind:?} {prec:?}");
                 }
             }
         }
@@ -84,14 +84,14 @@ fn plan_matches_rederived_tile_executor_and_stats() {
                 let mut ts = ExecStats::default();
                 let via_plan = plan.execute(a, b, &mut ps);
                 let via_tiles = execute(&scheme, a, b, &mut ts);
-                assert_eq!(via_plan, via_tiles, "{:?} {:?}", kind, prec);
+                assert_eq!(via_plan, via_tiles, "{kind:?} {prec:?}");
                 assert_eq!(ps.tiles, ts.tiles);
                 assert_eq!(ps.padded_tiles, ts.padded_tiles);
                 assert_eq!(ps.useful_bitops, ts.useful_bitops);
                 assert_eq!(ps.capacity_bitops, ts.capacity_bitops);
                 assert_eq!(ps.muls, ts.muls);
                 for bk in civp::decomp::BlockKind::ALL {
-                    assert_eq!(ps.ops(bk), ts.ops(bk), "{:?} {:?} {:?}", kind, prec, bk);
+                    assert_eq!(ps.ops(bk), ts.ops(bk), "{kind:?} {prec:?} {bk:?}");
                 }
             }
         }
@@ -108,7 +108,7 @@ fn plan_equivalence_for_integer_widths() {
             let a = rng.sig(width);
             let b = rng.sig(width);
             let mut stats = ExecStats::default();
-            assert_eq!(plan.execute(a, b, &mut stats), mul_u128(a, b), "{:?} w={width}", kind);
+            assert_eq!(plan.execute(a, b, &mut stats), mul_u128(a, b), "{kind:?} w={width}");
         }
     });
 }
@@ -132,8 +132,8 @@ fn full_ieee_pipeline_plan_vs_direct_all_modes() {
             for kind in SchemeKind::ALL {
                 let mut m = DecompMul::new(kind);
                 let (got, gf) = mul_bits(fmt, a, b, mode, &mut m);
-                assert_eq!(got, want, "{:?} {} {mode:?}", kind, fmt.name);
-                assert_eq!(gf, wf, "flags diverged: {:?} {}", kind, fmt.name);
+                assert_eq!(got, want, "{kind:?} {} {mode:?}", fmt.name);
+                assert_eq!(gf, wf, "flags diverged: {kind:?} {}", fmt.name);
             }
         }
     });
@@ -145,7 +145,7 @@ fn plan_cache_shares_one_plan_per_key() {
         for kind in SchemeKind::ALL {
             let a = PlanCache::get(kind, prec);
             let b = PlanCache::get(kind, prec);
-            assert!(Arc::ptr_eq(&a, &b), "{:?} {:?} not shared", kind, prec);
+            assert!(Arc::ptr_eq(&a, &b), "{kind:?} {prec:?} not shared");
             // IEEE widths route to the same shared plan
             let c = PlanCache::get_width(kind, prec.sig_bits());
             assert!(Arc::ptr_eq(&a, &c));

@@ -47,7 +47,7 @@ fn census_matches_exec_stats_for_all_precisions() {
             assert_eq!(stats.tiles, census.total_blocks as u64);
             assert_eq!(stats.padded_tiles, census.padded_blocks as u64);
             for (k, n) in &census.by_kind {
-                assert_eq!(stats.ops(*k), *n as u64, "{:?} {:?}", kind, prec);
+                assert_eq!(stats.ops(*k), *n as u64, "{kind:?} {prec:?}");
             }
         }
     }
