@@ -1,0 +1,141 @@
+//! §Perf — lane-fused batch execution vs the per-op path.
+//!
+//! The tentpole claim of the lane engine: for a fixed scheme, walking the
+//! compiled step table **once per block of operands** (tiles outer, lanes
+//! inner, SoA buffers — `Plan::execute_lanes`) beats walking it once per
+//! operand pair (`Plan::execute` in a loop, with per-element stats
+//! merges — the pre-lane `execute_batch` shape). Measured at the two
+//! levels the serving stack uses:
+//!
+//! * **raw significand products** — `lanes/civp-*/lane-path` vs
+//!   `lanes/civp-*/per-op-path` for single/double/quad and a 48-bit
+//!   "combined integer" width;
+//! * **full IEEE pipeline** — `lanes/fpu-*/fused-x256` (`FpuBatch`:
+//!   specials sidecar + one lane multiply + batched finish) vs
+//!   `lanes/fpu-*/per-op-x256` (`mul_bits_batch`, the scalar pipeline per
+//!   element — the pre-lane `NativeBackend` shape).
+//!
+//! Every measurement lands in `BENCH_lanes.json`; CI smoke-runs this
+//! target (`CIVP_BENCH_QUICK=1`) and `python/tools/check_bench.py`
+//! enforces the ratio invariant `lane p50 ≤ per-op p50` for every pair,
+//! so the lane path beating the per-op path gates every PR.
+
+use civp::benchx::{bb, bench, scaled, section, JsonReport};
+use civp::decomp::{DecompMul, ExecStats, PlanCache, Precision, SchemeKind};
+use civp::fpu::{mul_bits_batch, FpuBatch, RoundMode, DOUBLE, QUAD, SINGLE};
+use civp::proput::Rng;
+use civp::wideint::{mul_u128, U128, U256};
+
+const BATCH: usize = 256;
+
+fn main() {
+    let mut json = JsonReport::new();
+
+    section("raw significand products x256: lane path vs per-op path");
+    let mut verdicts: Vec<(String, f64)> = Vec::new();
+    let widths: Vec<(String, u32)> = Precision::ALL
+        .iter()
+        .map(|p| (format!("civp-{}", p.name()), p.sig_bits()))
+        .chain(std::iter::once(("civp-int48".to_string(), 48)))
+        .collect();
+    for (label, bits) in &widths {
+        let plan = PlanCache::get_width(SchemeKind::Civp, *bits);
+        let mut rng = Rng::new(0x1A5E ^ *bits as u64);
+        let a: Vec<U128> = (0..BATCH).map(|_| rng.sig(*bits)).collect();
+        let b: Vec<U128> = (0..BATCH).map(|_| rng.sig(*bits)).collect();
+
+        // Correctness cross-check before timing: lane ≡ per-op ≡ oracle.
+        let mut st = ExecStats::default();
+        let mut products: Vec<U256> = Vec::with_capacity(BATCH);
+        plan.execute_lanes(&a, &b, &mut st, &mut products);
+        assert_eq!(st.muls, BATCH as u64);
+        for i in 0..BATCH {
+            assert_eq!(products[i], mul_u128(a[i], b[i]), "lane path wrong at {i}");
+        }
+
+        let iters = scaled(2_000).max(4);
+        let mut stats = ExecStats::default();
+        let mut out: Vec<U256> = Vec::with_capacity(BATCH);
+        let lane = bench(&format!("{label:<12} lane-path x256"), 20, 30, iters, || {
+            plan.execute_lanes(&a, &b, &mut stats, &mut out);
+            bb(out.len());
+        });
+        let mut stats = ExecStats::default();
+        let mut out: Vec<U256> = Vec::with_capacity(BATCH);
+        let perop = bench(&format!("{label:<12} per-op-path x256"), 20, 30, iters, || {
+            // The pre-lane `execute_batch` shape: scalar kernel + one
+            // stats merge per element.
+            out.clear();
+            for (&x, &y) in a.iter().zip(&b) {
+                out.push(plan.execute(x, y, &mut stats));
+            }
+            bb(out.len());
+        });
+        json.push(&format!("lanes/{label}/lane-path"), lane);
+        json.push(&format!("lanes/{label}/per-op-path"), perop);
+        verdicts.push((label.clone(), perop.ns_per_op_p50 / lane.ns_per_op_p50));
+    }
+
+    section("full IEEE pipeline x256: FpuBatch fused vs per-op mul_bits_batch");
+    for prec in Precision::ALL {
+        let fmt = match prec {
+            Precision::Single => &SINGLE,
+            Precision::Double => &DOUBLE,
+            Precision::Quad => &QUAD,
+        };
+        let bits = fmt.total_bits();
+        let mask = if bits == 128 { u128::MAX } else { (1u128 << bits) - 1 };
+        let mut rng = Rng::new(0xF5E0 ^ bits as u64);
+        let a: Vec<u128> = (0..BATCH)
+            .map(|_| (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & mask)
+            .collect();
+        let b: Vec<u128> = (0..BATCH)
+            .map(|_| (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & mask)
+            .collect();
+
+        let mut fused = FpuBatch::new(DecompMul::new(SchemeKind::Civp));
+        let mut out: Vec<u128> = Vec::with_capacity(BATCH);
+        // Cross-check fused vs per-op before timing.
+        let mut dm = DecompMul::new(SchemeKind::Civp);
+        let mut want: Vec<u128> = Vec::new();
+        let wf = mul_bits_batch(fmt, &a, &b, RoundMode::NearestEven, &mut dm, &mut want);
+        let gf = fused.mul_batch_bits(fmt, &a, &b, RoundMode::NearestEven, &mut out);
+        assert_eq!(out, want, "fused pipeline diverged ({})", prec.name());
+        assert_eq!(gf, wf, "fused flags diverged ({})", prec.name());
+
+        let iters = scaled(500).max(2);
+        let fused_m = bench(&format!("fpu-{:<8} fused x256", prec.name()), 10, 30, iters, || {
+            fused.mul_batch_bits(fmt, &a, &b, RoundMode::NearestEven, &mut out);
+            bb(out.len());
+        });
+        let mut out2: Vec<u128> = Vec::with_capacity(BATCH);
+        let perop_m = bench(&format!("fpu-{:<8} per-op x256", prec.name()), 10, 30, iters, || {
+            mul_bits_batch(fmt, &a, &b, RoundMode::NearestEven, &mut dm, &mut out2);
+            bb(out2.len());
+        });
+        json.push(&format!("lanes/fpu-{}/fused-x256", prec.name()), fused_m);
+        json.push(&format!("lanes/fpu-{}/per-op-x256", prec.name()), perop_m);
+        verdicts.push((
+            format!("fpu-{}", prec.name()),
+            perop_m.ns_per_op_p50 / fused_m.ns_per_op_p50,
+        ));
+    }
+
+    section("verdict: lane/fused speedup over the per-op path (p50)");
+    let mut all_faster = true;
+    for (label, speedup) in &verdicts {
+        let verdict = if *speedup >= 1.0 { "faster" } else { "SLOWER" };
+        println!("{label:<20} {speedup:>6.2}x {verdict}");
+        all_faster &= *speedup >= 1.0;
+    }
+    println!(
+        "\n{}",
+        if all_faster {
+            "PASS: the lane path beats the per-op path on every measured configuration"
+        } else {
+            "FAIL: at least one configuration did not benefit from lane fusion"
+        }
+    );
+
+    json.write("BENCH_lanes.json").expect("write BENCH_lanes.json");
+}

@@ -12,7 +12,7 @@ use civp::config::ServiceConfig;
 use civp::coordinator::{BackendChoice, Service};
 use civp::decomp::{scheme_census, DecompMul, ExecStats, PlanCache, Precision, Scheme, SchemeKind};
 use civp::fabric::{schedule_op, CostModel, FabricConfig};
-use civp::fpu::{Fp128, Fp32, Fp64, RoundMode};
+use civp::fpu::{Fp128, Fp32, Fp64, FpuBatch, RoundMode};
 use civp::wideint::U128;
 
 fn main() {
@@ -91,6 +91,24 @@ fn main() {
     let mut stats = ExecStats::default();
     let p = plan.execute(U128::from_u64(3 << 50), U128::from_u64(5 << 50), &mut stats);
     println!("plan.execute(3<<50 x 5<<50) -> {} (stats: {} tiles)", p.to_hex(), stats.tiles);
+
+    // Batches take the lane path: tiles outer, lanes inner, over SoA
+    // blocks — one fused call multiplies the whole batch (specials are
+    // peeled into a scalar sidecar, so NaN/Inf/zero still come out
+    // bit-exact).
+    let mut fpu = FpuBatch::new(DecompMul::new(SchemeKind::Civp));
+    let xs: Vec<Fp64> = [1.5, -2.25, f64::INFINITY, 0.1].map(Fp64::from_f64).to_vec();
+    let ys: Vec<Fp64> = [4.0, 2.0, 0.0, 0.2].map(Fp64::from_f64).to_vec();
+    let mut prods = Vec::new();
+    let flags = fpu.mul_batch(&xs, &ys, RoundMode::NearestEven, &mut prods);
+    println!(
+        "lane batch: 1.5x4.0 = {}, -2.25x2.0 = {}, inf x 0 = {} (invalid={}), 0.1x0.2 = {:.17}",
+        prods[0].to_f64(),
+        prods[1].to_f64(),
+        prods[2].to_f64(),
+        flags.invalid,
+        prods[3].to_f64(),
+    );
 
     // ------------------------------------------------------------------
     // 4. The serving coordinator

@@ -24,6 +24,11 @@ artifacts (CI does this with CIVP_BENCH_QUICK=1). Three layers of checks:
      materializing and replaying the op stream;
    * compiled-plan execution is not >1.25x slower than per-call tile-DAG
      re-derivation for any scheme x precision;
+   * the lane-fused batch path is never slower than the per-op path it
+     replaced: for every `lanes/<cfg>/lane-path` vs `per-op-path` pair
+     and every `lanes/fpu-<prec>/fused-x256` vs `per-op-x256` pair in
+     `BENCH_lanes.json`, lane p50 <= per-op p50 (the `bench_lanes`
+     acceptance gate);
    * cluster fabric-model aggregate throughput (computed analytically —
      deterministic, machine-independent) increases monotonically with
      the shard count, strictly from 1 to 4 shards (the `bench_cluster`
@@ -47,7 +52,7 @@ import sys
 
 DEFAULT_TOLERANCE = 0.25
 REQUIRED_KEYS = ("name", "ns_per_op_p50", "ops_per_sec")
-REQUIRED_FILES = ("BENCH_e2e.json", "BENCH_plan.json", "BENCH_cluster.json")
+REQUIRED_FILES = ("BENCH_e2e.json", "BENCH_plan.json", "BENCH_cluster.json", "BENCH_lanes.json")
 MODEL_SCALING_RE = re.compile(r"^cluster/mixed/model-scaling-(\d+)shard$")
 # Single-shot wall-clock measurements (and the optional pjrt path): too
 # machine- and load-dependent to gate against a committed number, and the
@@ -143,6 +148,43 @@ def check_plan_invariants(current):
             )
     if len(failures) == before:
         print("invariant ok: compiled plans beat per-call derivation everywhere measured")
+
+
+# Sampling-noise allowance for the lane-vs-per-op gate: the two p50s are
+# independently timed medians, so in quick mode on a loaded runner the
+# faster side can still measure a few percent high. The real lane
+# advantage is >20%, so 5% slack keeps the gate meaningful (any genuine
+# inversion still fails) without flaking on scheduler jitter.
+LANES_NOISE_SLACK = 1.05
+
+
+def check_lanes_invariants(current):
+    """Lane-fused execution must never lose to the per-op path it replaced.
+
+    Machine-independent: both sides of each pair run in the same process
+    on the same operands, so runner speed cancels out. Gate: lane p50 <=
+    per-op p50 (modulo LANES_NOISE_SLACK for sampling noise).
+    """
+    before = len(failures)
+    pairs = 0
+    for name, p50 in sorted(current.items()):
+        m = re.match(r"^lanes/(.+)/(lane-path|fused-x256)$", name)
+        if not m:
+            continue
+        sibling = "lanes/{}/{}".format(
+            m.group(1), "per-op-path" if m.group(2) == "lane-path" else "per-op-x256"
+        )
+        if sibling not in current:
+            fail(f"`{name}` has no per-op sibling `{sibling}` — bench_lanes incomplete?")
+            continue
+        pairs += 1
+        if p50 > current[sibling] * LANES_NOISE_SLACK:
+            fail(
+                f"lane path slower than per-op path for {m.group(1)}: "
+                f"{p50:.1f} vs {current[sibling]:.1f} ns/op"
+            )
+    if pairs and len(failures) == before:
+        print(f"invariant ok: lane path beats per-op path on all {pairs} measured pairs")
 
 
 def check_cluster_scaling(current):
@@ -253,6 +295,7 @@ def main():
         "closed-form fabric report vs materialized stream replay",
     )
     check_plan_invariants(current)
+    check_lanes_invariants(current)
     check_cluster_scaling(current)
 
     if failures:

@@ -1,7 +1,12 @@
-//! One fabric shard: a complete PR-2 serving [`Service`] (its own
+//! One fabric shard: a complete serving [`Service`] (its own
 //! per-precision batchers, worker pool and lock-free op counters) bound to
 //! one simulated fabric column set, plus the lock-free routing state the
 //! cluster's [`super::Router`] reads on every submit.
+//!
+//! Execution inside a shard is the coordinator's lane path end-to-end:
+//! every worker drains batches into the native backend's lane-fused
+//! pipeline (`FpuBatch` → `Plan::execute_lanes`), so a multi-shard
+//! cluster runs N independent tile-major SoA engines in parallel.
 
 use crate::config::ServiceConfig;
 use crate::coordinator::{BackendChoice, Service, ServiceReport};

@@ -3,7 +3,7 @@
 
 use crate::decomp::{DecompMul, ExecStats, Precision, SchemeKind};
 use crate::error::{ensure, Result};
-use crate::fpu::{mul_bits_batch, RoundMode, DOUBLE, QUAD, SINGLE};
+use crate::fpu::{FpuBatch, RoundMode, DOUBLE, QUAD, SINGLE};
 use crate::runtime::EngineHandle;
 
 /// A batch executor for one precision class.
@@ -53,16 +53,20 @@ impl BackendChoice {
 /// Native softfloat backend: the IEEE pipeline with the CIVP (or baseline)
 /// decomposed significand multiplier. Tallies block usage per multiply.
 ///
-/// The multiplier executes through the shared [`crate::decomp::PlanCache`],
-/// so every worker in the pool reuses the same compiled tile plans.
+/// §Perf: batches run the **lane-fused** pipeline end-to-end — a
+/// [`FpuBatch`] peels specials into a scalar sidecar and streams every
+/// remaining significand product tile-major through the shared
+/// [`crate::decomp::PlanCache`] plans (`Plan::execute_lanes`), so every
+/// worker in the pool reuses the same compiled tile plans and the whole
+/// batch is accounted with one scaled stats merge.
 pub struct NativeBackend {
-    mul: DecompMul,
+    fpu: FpuBatch<DecompMul>,
 }
 
 impl NativeBackend {
     /// New backend with the given organization.
     pub fn new(kind: SchemeKind) -> NativeBackend {
-        NativeBackend { mul: DecompMul::new(kind) }
+        NativeBackend { fpu: FpuBatch::new(DecompMul::new(kind)) }
     }
 
     /// Multiply one batch, appending packed products to `out` (cleared
@@ -80,7 +84,7 @@ impl NativeBackend {
             Precision::Double => &DOUBLE,
             Precision::Quad => &QUAD,
         };
-        mul_bits_batch(fmt, a, b, RoundMode::NearestEven, &mut self.mul, out);
+        self.fpu.mul_batch_bits(fmt, a, b, RoundMode::NearestEven, out);
         Ok(())
     }
 }
@@ -101,7 +105,7 @@ impl Backend for NativeBackend {
     }
 
     fn exec_stats(&self) -> Option<&ExecStats> {
-        Some(&self.mul.stats)
+        Some(&self.fpu.multiplier().stats)
     }
 }
 

@@ -18,6 +18,12 @@
 //! counts, independent of how many requests were served. Responses travel
 //! back through pooled oneshot reply slots (`oneshot`), not per-request
 //! channels, keeping the steady-state submit→response path allocation-free.
+//!
+//! Each worker's native backend executes its drained batches through the
+//! lane-fused FP pipeline ([`crate::fpu::FpuBatch`] →
+//! `Plan::execute_lanes`): specials peel into a scalar sidecar and every
+//! remaining significand product streams tile-major through the shared
+//! compiled plans — the batch analogue of the paper's static tile wiring.
 
 mod adaptive;
 mod backend;

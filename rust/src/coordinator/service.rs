@@ -309,7 +309,11 @@ fn worker_loop(precision: Precision, shared: Arc<Shared>, backend: &mut dyn supe
     // Everything loop-invariant is resolved once: the precision's batcher,
     // the op-class counter slot, and the scratch buffers. With the backend
     // writing into `out` and the significand plans shared via `PlanCache`,
-    // the steady-state batch path performs no allocation (§Perf).
+    // the steady-state batch path performs no allocation; each drained
+    // batch then executes through the native backend's lane-fused pipeline
+    // (specials sidecar + tile-major `Plan::execute_lanes`), so the worker
+    // hands the whole batch to one fused call instead of N scalar
+    // pipeline passes (§Perf).
     let batcher = &shared.batchers[prec_idx(precision)];
     let op_counter = shared.op_counts.slot(OpClass { precision, organization: shared.scheme });
     let mut a: Vec<u128> = Vec::with_capacity(shared.max_batch);

@@ -1,11 +1,21 @@
 //! Exact tiled execution of a partition scheme, and the [`DecompMul`]
 //! adapter that plugs decomposed multiplication into the IEEE pipeline.
+//!
+//! §Perf — two execution modes share this module's accounting and the
+//! shared inner kernel `accumulate_shifted`:
+//!
+//! * **per-op** — [`SigMultiplier::mul_sig`] → [`Plan::execute`]: one
+//!   operand pair at a time, the latency path and the bit-exactness
+//!   oracle;
+//! * **lane** — [`SigBatchMultiplier::mul_sig_batch`] →
+//!   [`Plan::execute_lanes`]: tile-major SoA blocks with one scaled
+//!   stats merge per batch, the steady-state serving path.
 
 use super::plan::{Plan, PlanCache};
 use super::scheme::{BlockKind, Scheme, SchemeKind, Tile};
-use crate::fpu::SigMultiplier;
+use crate::fpu::{SigBatchMultiplier, SigMultiplier};
 use crate::wideint::{U128, U256};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
 /// Accounting from executed tile multiplications.
@@ -64,8 +74,10 @@ impl ExecStats {
         self.ops_by_kind[kind as usize]
     }
 
-    /// All non-zero per-kind counts (reporting).
-    pub fn by_kind(&self) -> HashMap<BlockKind, u64> {
+    /// All non-zero per-kind counts (reporting). Returned as a `BTreeMap`
+    /// so iteration order — and therefore report output and golden
+    /// comparisons — is deterministic across runs.
+    pub fn by_kind(&self) -> BTreeMap<BlockKind, u64> {
         BlockKind::ALL
             .into_iter()
             .filter(|k| self.ops(*k) > 0)
@@ -208,10 +220,7 @@ impl DecompMul {
     fn entry_for(&mut self, width: u32) -> &Arc<Plan> {
         let kind = self.kind;
         if let Some(slot) = ieee_slot(width) {
-            if self.ieee[slot].is_none() {
-                self.ieee[slot] = Some(PlanCache::get_width(kind, width));
-            }
-            return self.ieee[slot].as_ref().expect("slot populated above");
+            return self.ieee[slot].get_or_insert_with(|| PlanCache::get_width(kind, width));
         }
         self.plans.entry(width).or_insert_with(|| PlanCache::get_width(kind, width))
     }
@@ -246,5 +255,66 @@ impl SigMultiplier for DecompMul {
             debug_assert_eq!(out, crate::wideint::mul_u128(a, b));
         }
         out
+    }
+}
+
+impl SigBatchMultiplier for DecompMul {
+    /// The lane path: the whole batch executes tile-major through the
+    /// cached plan's [`Plan::execute_lanes`], with one scaled stats merge
+    /// — the batch counterpart of [`SigMultiplier::mul_sig`], and
+    /// bit-exact against it (pinned by `rust/tests/plan_equiv.rs`).
+    fn mul_sig_batch(&mut self, a: &[U128], b: &[U128], width: u32, out: &mut Vec<U256>) {
+        let mut stats = std::mem::take(&mut self.stats);
+        self.entry_for(width).execute_lanes(a, b, &mut stats, out);
+        self.stats = stats;
+        if self.verify {
+            for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+                let oracle = crate::wideint::mul_u128(x, y);
+                assert_eq!(out[i], oracle, "decomposed product mismatch (width={width}, i={i})");
+            }
+        } else {
+            debug_assert!(a
+                .iter()
+                .zip(b)
+                .zip(out.iter())
+                .all(|((&x, &y), &p)| p == crate::wideint::mul_u128(x, y)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod slot_tests {
+    use super::*;
+    use crate::decomp::Precision;
+
+    #[test]
+    fn ieee_widths_use_fast_slots_not_the_map() {
+        let mut m = DecompMul::new(SchemeKind::Civp);
+        assert!(m.ieee.iter().all(Option::is_none));
+        for prec in Precision::ALL {
+            let plan = m.plan_for(prec.sig_bits());
+            assert_eq!(plan.width(), prec.sig_bits());
+        }
+        // All three IEEE widths landed in the fast slots; the integer map
+        // stayed empty.
+        assert!(m.ieee.iter().all(Option::is_some));
+        assert!(m.plans.is_empty());
+        // Repeat lookups reuse the slot (same shared Arc).
+        let again = m.plan_for(53);
+        assert!(Arc::ptr_eq(&again, m.ieee[1].as_ref().unwrap()));
+    }
+
+    #[test]
+    fn integer_widths_use_only_the_map() {
+        let mut m = DecompMul::new(SchemeKind::Baseline18);
+        for w in [10, 40, 96] {
+            let plan = m.plan_for(w);
+            assert_eq!(plan.width(), w);
+        }
+        assert!(m.ieee.iter().all(Option::is_none));
+        assert_eq!(m.plans.len(), 3);
+        // Cached: a repeat lookup does not grow the map.
+        let _ = m.plan_for(40);
+        assert_eq!(m.plans.len(), 3);
     }
 }

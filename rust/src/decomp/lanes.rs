@@ -1,0 +1,269 @@
+//! Lane-fused, tile-major SoA execution of compiled plans.
+//!
+//! The paper's point is that for a fixed precision the partial-product
+//! array is *static hardware*: every multiplication fires the exact same
+//! blocks in the exact same order. [`super::Plan`] already exploits that
+//! per call (pre-resolved steps, no planning); this module exploits it per
+//! **batch**. Instead of walking the step table once per operand pair
+//! (operand-major, the per-op path), the lane engine walks it once per
+//! [`LANES`]-wide block of operands — **tiles outer, lanes inner** — the
+//! software analogue of streaming a batch through a deeply pipelined fixed
+//! datapath (de Fine Licht et al. 2022).
+//!
+//! Structure-of-arrays layout is what makes the inner loops branch-free
+//! and auto-vectorizable:
+//!
+//! * every per-step constant (chunk offsets, widths/masks, accumulator
+//!   limb index and in-limb shift) is decoded **once per step**, outside
+//!   the lane loop;
+//! * chunk values are extracted once per *chunk* (not once per tile that
+//!   reuses the chunk) into chunk-major `[u64; LANES]` buffers;
+//! * the accumulator is a 4-limb SoA array `[[u64; LANES]; 4]`, so the
+//!   shift/add/carry chain of one step runs as four flat lane sweeps.
+//!
+//! The kernels here are bit-identical to the scalar
+//! `exec::accumulate_shifted` dataflow; `rust/tests/plan_equiv.rs` pins
+//! `Plan::execute_lanes` against N× `Plan::execute` for every scheme
+//! kind, width and ragged tail length.
+
+use super::plan::low_mask;
+use super::scheme::{Scheme, Tile};
+use crate::wideint::{U128, U256};
+
+/// Operands processed per SoA block. Eight 64-bit lanes fill one AVX-512
+/// register (or two NEON/AVX2 registers) per sweep; the tail shorter than
+/// a block falls back to the scalar per-op kernel.
+pub const LANES: usize = 8;
+
+/// Upper bound on chunks per operand side. The narrowest chunk any
+/// organization uses is 9 bits and operand widths are ≤ 128, so
+/// `ceil(128 / 9) = 15` chunks is the worst case (9x9 baseline).
+pub const MAX_CHUNKS: usize = 16;
+
+/// Pre-decoded extraction recipe for one operand chunk: which [`U128`]
+/// limb it starts in, the in-limb shift, and the width mask. Decoded once
+/// at plan-compile time so the load loop does no division or width
+/// arithmetic.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneChunk {
+    /// Limb index of the chunk's low bit (`off / 64`).
+    pub limb: u32,
+    /// In-limb bit shift of the chunk's low bit (`off % 64`).
+    pub shift: u32,
+    /// Low `width`-bit mask.
+    pub mask: u64,
+}
+
+/// One tile of the lane plan, referencing pre-extracted chunks by index
+/// (chunk values are shared by every tile in that row/column of the
+/// partial-product array, so they are extracted once per block, not once
+/// per tile).
+#[derive(Clone, Copy, Debug)]
+pub struct LaneStep {
+    /// Index into the A-side chunk buffer.
+    pub ia: u32,
+    /// Index into the B-side chunk buffer.
+    pub ib: u32,
+    /// Accumulator limb index of `off_a + off_b`.
+    pub limb: u32,
+    /// In-limb bit shift of `off_a + off_b`.
+    pub shift: u32,
+}
+
+/// The tile-major recipe [`super::Plan`] compiles alongside its scalar
+/// step table: per-side chunk extraction specs plus the step list in
+/// chunk-index form. Everything the lane kernels read per step is a plain
+/// integer resolved at compile time.
+#[derive(Clone, Debug)]
+pub struct LanePlan {
+    /// Extraction recipes for operand A's chunks, least-significant first.
+    pub a_chunks: Box<[LaneChunk]>,
+    /// Extraction recipes for operand B's chunks.
+    pub b_chunks: Box<[LaneChunk]>,
+    /// All tiles, row-major, in chunk-index form.
+    pub steps: Box<[LaneStep]>,
+}
+
+impl LanePlan {
+    /// Lower a scheme's tile DAG into the lane form. Called once from
+    /// [`super::Plan::compile`]; never on the execute path.
+    pub fn compile(scheme: &Scheme, tiles: &[Tile]) -> LanePlan {
+        assert!(
+            scheme.a_chunks.len() <= MAX_CHUNKS && scheme.b_chunks.len() <= MAX_CHUNKS,
+            "scheme exceeds MAX_CHUNKS"
+        );
+        let chunk_specs = |widths: &[u32]| -> Box<[LaneChunk]> {
+            let mut off = 0u32;
+            widths
+                .iter()
+                .map(|&w| {
+                    // Chunks always *start* inside the real operand
+                    // (off < eff_bits <= 128); only their padding may
+                    // extend past it.
+                    debug_assert!(off < 128, "chunk start beyond operand container");
+                    let spec = LaneChunk { limb: off / 64, shift: off % 64, mask: low_mask(w) };
+                    off += w;
+                    spec
+                })
+                .collect()
+        };
+        let steps = tiles
+            .iter()
+            .map(|t| {
+                let off = t.off_a + t.off_b;
+                LaneStep { ia: t.i as u32, ib: t.j as u32, limb: off / 64, shift: off % 64 }
+            })
+            .collect();
+        LanePlan {
+            a_chunks: chunk_specs(&scheme.a_chunks),
+            b_chunks: chunk_specs(&scheme.b_chunks),
+            steps,
+        }
+    }
+}
+
+/// Reusable SoA scratch for one [`LANES`]-wide block of multiplications:
+/// chunk-major operand buffers and the 4-limb SoA accumulator. Lives on
+/// the stack of [`super::Plan::execute_lanes`] (~3 KiB); no allocation.
+pub struct LaneBlock {
+    /// `a[c][l]` = chunk `c` of lane `l`'s A operand.
+    a: [[u64; LANES]; MAX_CHUNKS],
+    /// `b[c][l]` = chunk `c` of lane `l`'s B operand.
+    b: [[u64; LANES]; MAX_CHUNKS],
+    /// SoA product accumulator: `acc[k][l]` = limb `k` of lane `l`.
+    acc: [[u64; LANES]; 4],
+}
+
+impl LaneBlock {
+    /// Fresh (zeroed) scratch.
+    pub fn new() -> LaneBlock {
+        LaneBlock {
+            a: [[0; LANES]; MAX_CHUNKS],
+            b: [[0; LANES]; MAX_CHUNKS],
+            acc: [[0; LANES]; 4],
+        }
+    }
+
+    /// Execute one full block: extract chunks, run every step tile-major,
+    /// and append the [`LANES`] products to `out`.
+    #[inline]
+    pub fn run(
+        &mut self,
+        plan: &LanePlan,
+        a: &[U128; LANES],
+        b: &[U128; LANES],
+        out: &mut Vec<U256>,
+    ) {
+        extract_chunks(&plan.a_chunks, a, &mut self.a);
+        extract_chunks(&plan.b_chunks, b, &mut self.b);
+        self.acc = [[0; LANES]; 4];
+        for step in plan.steps.iter() {
+            apply_step(&mut self.acc, &self.a[step.ia as usize], &self.b[step.ib as usize], step);
+        }
+        let [r0, r1, r2, r3] = &self.acc;
+        for (((&l0, &l1), &l2), &l3) in r0.iter().zip(r1).zip(r2).zip(r3) {
+            out.push(U256 { limbs: [l0, l1, l2, l3] });
+        }
+    }
+}
+
+impl Default for LaneBlock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Extract every chunk of one operand side for all lanes. Chunk-outer,
+/// lane-inner: the limb index, shift and mask are constants inside each
+/// lane sweep, and the cross-limb splice is computed branch-free (the
+/// `(hi << (63 - sh)) << 1` form is `hi << (64 - sh)` for `sh > 0` and
+/// exactly 0 for `sh == 0`, with no per-lane conditional).
+#[inline]
+fn extract_chunks(specs: &[LaneChunk], ops: &[U128; LANES], out: &mut [[u64; LANES]; MAX_CHUNKS]) {
+    for (spec, dst) in specs.iter().zip(out.iter_mut()) {
+        let li = spec.limb as usize;
+        let sh = spec.shift;
+        let mask = spec.mask;
+        if li == 0 {
+            // Chunk starts in limb 0: may splice bits in from limb 1.
+            for (d, x) in dst.iter_mut().zip(ops.iter()) {
+                let lo = x.limbs[0];
+                let hi = x.limbs[1];
+                *d = ((lo >> sh) | ((hi << (63 - sh)) << 1)) & mask;
+            }
+        } else {
+            // Chunk starts in limb 1: bits past the container read as 0,
+            // matching `U128::extract_u64`.
+            for (d, x) in dst.iter_mut().zip(ops.iter()) {
+                *d = (x.limbs[1] >> sh) & mask;
+            }
+        }
+    }
+}
+
+/// Apply one tile across all lanes: multiply the pre-extracted chunks and
+/// shift-accumulate into the SoA accumulator. Mirrors the scalar
+/// [`super::exec::accumulate_shifted`] exactly — the ≤50-bit product
+/// spans limbs `limb..limb+2` (three when the in-limb shift wraps), plus
+/// a carry ripple into `limb+3` — but each of those limb rows is one flat
+/// lane sweep with the row index and shift hoisted out of the loop.
+#[inline]
+fn apply_step(acc: &mut [[u64; LANES]; 4], pa: &[u64; LANES], pb: &[u64; LANES], step: &LaneStep) {
+    let sh = step.shift;
+    let limb = step.limb as usize;
+    // Split each lane's shifted product into its three limb parts,
+    // branch-free: `p1 = prod >> (64 - sh)` is `prod >> 64` when sh == 0,
+    // and `(prod >> (127 - sh)) >> 1` is `prod >> (128 - sh)` for sh > 0
+    // and 0 for sh == 0 — the same parts the scalar kernel computes.
+    let mut p0 = [0u64; LANES];
+    let mut p1 = [0u64; LANES];
+    let mut p2 = [0u64; LANES];
+    for (((d0, d1), d2), (&xa, &xb)) in
+        p0.iter_mut().zip(p1.iter_mut()).zip(p2.iter_mut()).zip(pa.iter().zip(pb))
+    {
+        let prod = (xa as u128) * (xb as u128);
+        *d0 = (prod << sh) as u64;
+        *d1 = (prod >> (64 - sh)) as u64;
+        *d2 = ((prod >> (127 - sh)) >> 1) as u64;
+    }
+    let mut carry = [0u64; LANES];
+    {
+        let row = &mut acc[limb];
+        for ((r, &p), c) in row.iter_mut().zip(p0.iter()).zip(carry.iter_mut()) {
+            let (v, cy) = r.overflowing_add(p);
+            *r = v;
+            *c = cy as u64;
+        }
+    }
+    if limb + 1 < 4 {
+        add_row(&mut acc[limb + 1], &p1, &mut carry);
+    } else {
+        debug_assert!(p1.iter().all(|&p| p == 0) && carry.iter().all(|&c| c == 0));
+    }
+    if limb + 2 < 4 {
+        add_row(&mut acc[limb + 2], &p2, &mut carry);
+    } else {
+        debug_assert!(p2.iter().all(|&p| p == 0) && carry.iter().all(|&c| c == 0));
+    }
+    if limb + 3 < 4 {
+        let row = &mut acc[limb + 3];
+        for (r, &c) in row.iter_mut().zip(carry.iter()) {
+            *r = r.wrapping_add(c);
+        }
+    } else {
+        debug_assert!(carry.iter().all(|&c| c == 0), "accumulator overflow");
+    }
+}
+
+/// One accumulator limb row += part + carry-in, producing carry-out.
+/// The two single-bit carries cannot both fire (the wrapped sum of
+/// `row + p` is at most `2^64 - 2`), so the out-carry stays 0/1.
+#[inline]
+fn add_row(row: &mut [u64; LANES], parts: &[u64; LANES], carry: &mut [u64; LANES]) {
+    for ((r, &p), c) in row.iter_mut().zip(parts.iter()).zip(carry.iter_mut()) {
+        let (v, c1) = r.overflowing_add(p);
+        let (v, c2) = v.overflowing_add(*c);
+        *r = v;
+        *c = (c1 as u64) + (c2 as u64);
+    }
+}

@@ -19,12 +19,17 @@
 //! [`plan`] layer compiles each `(SchemeKind, width)` pair once into a flat
 //! [`Plan`] and memoizes it process-wide in [`PlanCache`], so repeated
 //! multiplications run straight over pre-resolved offsets — the software
-//! analogue of the tile wiring being static hardware. Batches amortize the
-//! lookup through [`crate::fpu::mul_bits_batch`] (IEEE path) or
-//! [`Plan::execute_batch`] (raw significand products).
+//! analogue of the tile wiring being static hardware. Batches go further:
+//! [`Plan::execute_lanes`] (the target of every batch surface, from
+//! [`Plan::execute_batch`] up through [`crate::fpu::FpuBatch`] and the
+//! coordinator's native backend) runs the step table **tile-major** over
+//! [`lanes`] structure-of-arrays blocks, so a fixed scheme streams a whole
+//! batch through one decoded datapath — the software analogue of deep
+//! pipelining.
 
 pub mod analysis;
 pub mod exec;
+pub mod lanes;
 pub mod plan;
 pub mod scheme;
 #[cfg(test)]
@@ -32,5 +37,6 @@ mod tests;
 
 pub use analysis::{scheme_census, AnalysisRow, BlockCensus};
 pub use exec::{execute, DecompMul, ExecStats};
+pub use lanes::{LaneBlock, LanePlan, LANES};
 pub use plan::{Plan, PlanCache, PlanStep};
 pub use scheme::{BlockKind, Precision, Scheme, SchemeKind, Tile};

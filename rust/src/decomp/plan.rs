@@ -22,8 +22,22 @@
 //! `RwLock`ed map for arbitrary integer widths). Everything that multiplies
 //! in a loop — [`super::DecompMul`], the coordinator's native backend, the
 //! benches — shares the same compiled plans.
+//!
+//! §Perf — a plan executes in one of **two modes**:
+//!
+//! * **per-op** ([`Plan::execute`]) — operand-major: one pair at a time
+//!   through the width-specialized scalar kernel, one stats merge per
+//!   call. This is the latency path and the bit-exactness oracle.
+//! * **lane** ([`Plan::execute_lanes`], reached by every batch surface
+//!   through [`Plan::execute_batch`]) — tile-major over [`super::lanes`]
+//!   SoA blocks: each step's constants are decoded once per block of
+//!   [`super::lanes::LANES`] operands and applied with branch-free,
+//!   auto-vectorizable lane sweeps; the whole batch is accounted with a
+//!   single scaled stats merge. This is the throughput path the serving
+//!   stack runs in steady state.
 
 use super::exec::{accumulate_shifted, execute_tiles, ExecStats};
+use super::lanes::{LaneBlock, LanePlan, LANES};
 use super::scheme::{Precision, Scheme, SchemeKind};
 use crate::wideint::{U128, U256};
 use std::collections::HashMap;
@@ -100,6 +114,9 @@ pub struct Plan {
     steps: Box<[PlanStep]>,
     per_mul: ExecStats,
     kernel: Kernel,
+    /// Tile-major SoA lowering of the same step table (see
+    /// [`super::lanes`]); compiled once, used by [`Plan::execute_lanes`].
+    lanes: LanePlan,
 }
 
 impl Plan {
@@ -137,7 +154,8 @@ impl Plan {
         } else {
             Kernel::Generic
         };
-        Plan { scheme, steps: steps.into_boxed_slice(), per_mul, kernel }
+        let lanes = LanePlan::compile(&scheme, &tiles);
+        Plan { scheme, steps: steps.into_boxed_slice(), per_mul, kernel, lanes }
     }
 
     /// The scheme this plan was compiled from.
@@ -221,17 +239,14 @@ impl Plan {
     }
 
     /// Execute a whole batch of raw significand products through the
-    /// plan, appending them to `out` (cleared first). Zero allocations
-    /// beyond `out`'s (reusable) capacity, and the batch's accounting is
-    /// one scaled merge of the precomputed per-multiply delta — O(1) in
-    /// the batch size, not one merge per element (§Perf).
+    /// plan, appending them to `out` (cleared first).
     ///
-    /// This is the raw-integer batch surface (used by the benches and by
-    /// direct integer-multiply callers). The coordinator's IEEE batch
-    /// path amortizes the plan differently: one
-    /// [`crate::fpu::mul_bits_batch`] call per batch, whose
-    /// [`super::DecompMul`] resolves the cached plan through an O(1)
-    /// fast slot per element.
+    /// §Perf: this is the lane path — it forwards to
+    /// [`Plan::execute_lanes`], so steady-state batch serving runs the
+    /// tile-major SoA kernels end-to-end. The per-op mode
+    /// ([`Plan::execute`] in a loop) remains available as the
+    /// bit-exactness oracle; `rust/tests/plan_equiv.rs` pins the two
+    /// modes against each other for every scheme kind and width.
     ///
     /// # Panics
     ///
@@ -243,10 +258,59 @@ impl Plan {
         stats: &mut ExecStats,
         out: &mut Vec<U256>,
     ) {
+        self.execute_lanes(a, b, stats, out);
+    }
+
+    /// Tile-major, lane-fused batch execution (§Perf): process the batch
+    /// in [`LANES`]-wide SoA blocks, looping **tiles outer, lanes inner**
+    /// — each compiled step's offsets/widths/masks are decoded once and
+    /// applied across the whole block with branch-free inner loops (see
+    /// [`super::lanes`]). The ragged tail shorter than a block runs
+    /// through the scalar per-op kernel. Zero allocations beyond `out`'s
+    /// (reusable) capacity, and the batch's accounting is one scaled
+    /// merge of the precomputed per-multiply delta — O(1) in the batch
+    /// size.
+    ///
+    /// Bit-identical to `a.len()` calls of [`Plan::execute`] (the per-op
+    /// oracle), including the accumulated stats.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `a` and `b` have different lengths.
+    pub fn execute_lanes(
+        &self,
+        a: &[U128],
+        b: &[U128],
+        stats: &mut ExecStats,
+        out: &mut Vec<U256>,
+    ) {
         assert_eq!(a.len(), b.len(), "operand length mismatch");
         out.clear();
         out.reserve(a.len());
-        for (&x, &y) in a.iter().zip(b) {
+        if self.kernel == Kernel::Mono {
+            // One full-width firing per element (CIVP single precision):
+            // the SoA staging would only shuffle one chunk around, so the
+            // lane loop degenerates to a flat multiply sweep — still one
+            // scaled stats merge for the whole batch.
+            let step = &self.steps[0];
+            for (&x, &y) in a.iter().zip(b) {
+                let prod =
+                    ((x.limbs[0] & step.mask_a) as u128) * ((y.limbs[0] & step.mask_b) as u128);
+                out.push(U256::from_u128(prod));
+            }
+            stats.merge_scaled(&self.per_mul, a.len() as u64);
+            return;
+        }
+        let full = a.len() - a.len() % LANES;
+        let mut block = LaneBlock::new();
+        let mut i = 0;
+        while i < full {
+            let ba: &[U128; LANES] = a[i..i + LANES].try_into().expect("block width");
+            let bb: &[U128; LANES] = b[i..i + LANES].try_into().expect("block width");
+            block.run(&self.lanes, ba, bb, out);
+            i += LANES;
+        }
+        for (&x, &y) in a[full..].iter().zip(&b[full..]) {
             out.push(self.product(x, y));
         }
         stats.merge_scaled(&self.per_mul, a.len() as u64);
@@ -255,7 +319,7 @@ impl Plan {
 
 /// Low `w`-bit mask (`w <= 64`).
 #[inline]
-const fn low_mask(w: u32) -> u64 {
+pub(crate) const fn low_mask(w: u32) -> u64 {
     if w >= 64 {
         u64::MAX
     } else {

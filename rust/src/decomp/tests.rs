@@ -5,7 +5,7 @@
 use super::*;
 use crate::fpu::{DirectMul, Fp128, Fp32, Fp64, RoundMode};
 use crate::proput::forall;
-use crate::wideint::{mul_u128, U128};
+use crate::wideint::{mul_u128, U128, U256};
 
 
 // ---------------------------------------------------------------------
@@ -369,5 +369,124 @@ fn stats_utilization_bounds() {
         let s = Scheme::for_int(SchemeKind::Civp, width);
         let c = scheme_census(&s);
         assert!(c.utilization > 0.0 && c.utilization <= 1.0);
+    });
+}
+
+#[test]
+fn by_kind_is_deterministic_and_sorted() {
+    // `ExecStats::by_kind` returns a BTreeMap so report output and golden
+    // comparisons are stable run-to-run: keys iterate in `BlockKind`
+    // order, and two identical stat sets render identically.
+    let mut stats = ExecStats::default();
+    let plan = PlanCache::get(SchemeKind::Civp, Precision::Quad);
+    let a = U128::ONE.shl(112);
+    plan.execute(a, a, &mut stats);
+    let m = stats.by_kind();
+    let keys: Vec<BlockKind> = m.keys().copied().collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted, "by_kind iteration must be ordered");
+    assert_eq!(format!("{:?}", stats.by_kind()), format!("{m:?}"));
+    assert_eq!(m[&BlockKind::M24x24], 16); // Fig. 4 counts, in order
+}
+
+// ---------------------------------------------------------------------
+// accumulate_shifted — the shared inner kernel of the scalar and lane
+// executors. Edge cases: shift == 0, products wrapping a limb boundary,
+// and carries rippling into the top limb.
+// ---------------------------------------------------------------------
+
+/// Oracle: `acc + (prod << (64*limb + shift))` via plain wide arithmetic.
+fn acc_oracle(acc: U256, prod: u128, limb: usize, shift: u32) -> U256 {
+    acc.wrapping_add(&U256::from_u128(prod).shl(64 * limb as u32 + shift))
+}
+
+fn run_kernel(acc: U256, prod: u128, limb: usize, shift: u32) -> U256 {
+    let mut out = acc;
+    exec::accumulate_shifted(&mut out, prod, limb, shift);
+    out
+}
+
+#[test]
+fn accumulate_shifted_shift_zero() {
+    // shift == 0 must place the product exactly at the limb boundary,
+    // including a full-width 128-bit product (high half into limb+1).
+    for limb in 0..3usize {
+        for prod in [0u128, 1, u64::MAX as u128, (u64::MAX as u128) << 64 | 7, u128::MAX >> 1] {
+            let got = run_kernel(U256::ZERO, prod, limb, 0);
+            assert_eq!(got, acc_oracle(U256::ZERO, prod, limb, 0), "limb={limb} prod={prod:#x}");
+        }
+    }
+    // limb = 3 with shift 0: only the low 64 bits may be non-zero.
+    let got = run_kernel(U256::ZERO, 0xFFFF_FFFF_FFFF_FFFF, 3, 0);
+    assert_eq!(got.limbs, [0, 0, 0, u64::MAX]);
+}
+
+#[test]
+fn accumulate_shifted_limb_boundary_wrap() {
+    // A shifted product spans up to three limbs when the in-limb shift
+    // wraps; sweep every shift against the oracle at every base limb.
+    let prods = [
+        (1u128 << 50) - 1,          // max real tile product (25x25)
+        1u128 << 49,
+        0x000F_FFFF_FFFF_FFFF,
+        (1u128 << 63) | 1,
+        (1u128 << 64) | (1 << 13),  // > 64 bits: exercises the middle part
+    ];
+    for limb in 0..3usize {
+        for shift in 0..64u32 {
+            for &prod in &prods {
+                // Keep the shifted value inside 256 bits (the kernel
+                // debug-asserts on true overflow, as hardware would).
+                if 64 * limb as u32 + shift + 128 - prod.leading_zeros() > 255 {
+                    continue;
+                }
+                let got = run_kernel(U256::ZERO, prod, limb, shift);
+                assert_eq!(
+                    got,
+                    acc_oracle(U256::ZERO, prod, limb, shift),
+                    "limb={limb} shift={shift} prod={prod:#x}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn accumulate_shifted_carry_into_top_limb() {
+    // All-ones accumulator below the top limb: any addition ripples a
+    // carry chain all the way into limb 3.
+    let acc = U256 { limbs: [u64::MAX, u64::MAX, u64::MAX, 0] };
+    let got = run_kernel(acc, 1, 0, 0);
+    assert_eq!(got.limbs, [0, 0, 0, 1]);
+    // Carry generated by the middle part of a wrapped product.
+    let acc = U256 { limbs: [0, u64::MAX, u64::MAX, 41] };
+    let got = run_kernel(acc, 1u128 << 63, 0, 1); // adds 1 << 64
+    assert_eq!(got.limbs, [0, 0, 0, 42]);
+    // Carry out of the part written directly below the top limb.
+    let acc = U256 { limbs: [7, 0, u64::MAX, 9] };
+    let got = run_kernel(acc, 1, 2, 0);
+    assert_eq!(got.limbs, [7, 0, 0, 10]);
+    assert_eq!(got, acc_oracle(acc, 1, 2, 0));
+}
+
+#[test]
+fn accumulate_shifted_matches_oracle_random() {
+    forall(0x600, 4_000, |rng| {
+        // Random ≤50-bit products (the real tile range), random base
+        // position, random accumulator with top-limb headroom.
+        let prod = (rng.next_u64() as u128) & ((1u128 << 50) - 1);
+        let limb = rng.below(4) as usize;
+        let shift = if limb == 3 { rng.below(14) as u32 } else { rng.below(64) as u32 };
+        let acc = U256 {
+            limbs: [
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64() >> 2, // headroom: the oracle add cannot overflow
+            ],
+        };
+        let got = run_kernel(acc, prod, limb, shift);
+        assert_eq!(got, acc_oracle(acc, prod, limb, shift), "limb={limb} shift={shift}");
     });
 }

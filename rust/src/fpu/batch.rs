@@ -1,0 +1,267 @@
+//! The lane-fused batched FP pipeline: batched unpack/classify with a
+//! scalar specials sidecar, one lane-wise significand multiply per batch,
+//! and batched normalize/round.
+//!
+//! [`super::mul_bits`] runs the whole IEEE pipeline per element — unpack,
+//! special lattice, significand product (one virtual
+//! [`SigMultiplier`](super::SigMultiplier) call), round, pack. Correct, but on a batch it re-dispatches the
+//! multiplier and interleaves the branchy special handling with the
+//! numeric loop for every single element. [`FpuBatch`] restructures the
+//! batch into the stages the hardware pipeline of the paper (and the
+//! deep-pipelined FPGA FP cores in the related work) actually has:
+//!
+//! 1. **unpack/classify** — one pass over the operands; elements with a
+//!    special operand (NaN, ±∞, ±0) are resolved immediately through the
+//!    shared [`special_product`] lattice (the *scalar sidecar*), while
+//!    finite×finite elements deposit their normalized significands into
+//!    reusable SoA-feeding buffers, so the multiply stage sees no
+//!    branches;
+//! 2. **significand multiply** — one [`SigBatchMultiplier::mul_sig_batch`]
+//!    call for the whole batch. The decomposition implementation
+//!    (`decomp::DecompMul`) routes this through `Plan::execute_lanes`,
+//!    the tile-major SoA kernel;
+//! 3. **normalize/round/pack** — one pass over the exact products through
+//!    the shared [`finish_product`] stage, scattering results back to
+//!    their original batch positions and OR-ing the flag union.
+//!
+//! Because stages 1 and 3 call the *same* helpers as the scalar pipeline
+//! and stage 2 is pinned to the per-op multiplier by property tests, the
+//! fused path is bit-for-bit identical to N× [`super::mul_bits`]
+//! (`rust/tests/plan_equiv.rs`), specials, flags and all.
+
+use super::format::{FpFormat, DOUBLE, QUAD, SINGLE};
+use super::round::RoundMode;
+use super::softfp::{finish_product, special_product, DirectMul, Flags};
+use super::types::{Fp128, Fp32, Fp64};
+use crate::wideint::{mul_u128, U128, U256};
+
+/// Batch counterpart of [`SigMultiplier`](super::SigMultiplier): the
+/// exact integer multiplier for a whole batch of `width`-bit significand
+/// pairs, writing the double-width products into `out` (cleared first).
+///
+/// Implementations: [`DirectMul`] (a widening multiply per element — the
+/// oracle) and `decomp::DecompMul`, which executes the batch tile-major
+/// through `Plan::execute_lanes` and accounts the block usage with one
+/// scaled stats merge.
+pub trait SigBatchMultiplier {
+    /// Exact products of `a[i] × b[i]`, where `a[i], b[i] < 2^width`.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `a` and `b` have different lengths.
+    fn mul_sig_batch(&mut self, a: &[U128], b: &[U128], width: u32, out: &mut Vec<U256>);
+}
+
+impl SigBatchMultiplier for DirectMul {
+    fn mul_sig_batch(&mut self, a: &[U128], b: &[U128], _width: u32, out: &mut Vec<U256>) {
+        assert_eq!(a.len(), b.len(), "operand length mismatch");
+        out.clear();
+        out.reserve(a.len());
+        for (&x, &y) in a.iter().zip(b) {
+            out.push(mul_u128(x, y));
+        }
+    }
+}
+
+/// A packed IEEE scalar the batched pipeline can process: one of
+/// [`Fp32`], [`Fp64`], [`Fp128`]. Carries its format descriptor and the
+/// `u128` bit-pattern conversions the generic surface needs.
+pub trait FpScalar: Copy {
+    /// The IEEE interchange format of this scalar.
+    const FORMAT: FpFormat;
+    /// Raw bit pattern in the low bits of a `u128`.
+    fn to_bits_u128(self) -> u128;
+    /// Rebuild from a packed bit pattern.
+    fn from_bits_u128(bits: u128) -> Self;
+}
+
+impl FpScalar for Fp32 {
+    const FORMAT: FpFormat = SINGLE;
+    fn to_bits_u128(self) -> u128 {
+        self.0 as u128
+    }
+    fn from_bits_u128(bits: u128) -> Self {
+        Fp32(bits as u32)
+    }
+}
+
+impl FpScalar for Fp64 {
+    const FORMAT: FpFormat = DOUBLE;
+    fn to_bits_u128(self) -> u128 {
+        self.0 as u128
+    }
+    fn from_bits_u128(bits: u128) -> Self {
+        Fp64(bits as u64)
+    }
+}
+
+impl FpScalar for Fp128 {
+    const FORMAT: FpFormat = QUAD;
+    fn to_bits_u128(self) -> u128 {
+        self.0
+    }
+    fn from_bits_u128(bits: u128) -> Self {
+        Fp128(bits)
+    }
+}
+
+/// Metadata one finite×finite element carries from the classify stage to
+/// the finish stage.
+struct LaneMeta {
+    /// Index into the batch (and `out`).
+    idx: u32,
+    /// Result sign.
+    sign: bool,
+    /// Sum of the normalized operands' unbiased exponents.
+    exp_sum: i32,
+}
+
+/// The lane-fused batch FP engine: owns a batch significand multiplier
+/// plus the reusable stage buffers, so steady-state batches allocate
+/// nothing (the coordinator keeps one `FpuBatch` per worker).
+///
+/// ```
+/// use civp::decomp::{DecompMul, SchemeKind};
+/// use civp::fpu::{Fp64, FpuBatch, RoundMode};
+///
+/// let mut fpu = FpuBatch::new(DecompMul::new(SchemeKind::Civp));
+/// let a: Vec<Fp64> = [0.5, 3.0, f64::NAN].iter().map(|&v| Fp64::from_f64(v)).collect();
+/// let b: Vec<Fp64> = [4.0, 0.25, 1.0].iter().map(|&v| Fp64::from_f64(v)).collect();
+/// let mut out = Vec::new();
+/// fpu.mul_batch(&a, &b, RoundMode::NearestEven, &mut out);
+/// assert_eq!(out[0].to_f64(), 2.0);
+/// assert_eq!(out[1].to_f64(), 0.75);
+/// assert!(out[2].to_f64().is_nan()); // specials resolved in the sidecar
+/// ```
+pub struct FpuBatch<M> {
+    m: M,
+    sig_a: Vec<U128>,
+    sig_b: Vec<U128>,
+    prods: Vec<U256>,
+    meta: Vec<LaneMeta>,
+    bits_a: Vec<u128>,
+    bits_b: Vec<u128>,
+    bits_out: Vec<u128>,
+}
+
+impl<M: SigBatchMultiplier> FpuBatch<M> {
+    /// New engine around a batch significand multiplier.
+    pub fn new(m: M) -> FpuBatch<M> {
+        FpuBatch {
+            m,
+            sig_a: Vec::new(),
+            sig_b: Vec::new(),
+            prods: Vec::new(),
+            meta: Vec::new(),
+            bits_a: Vec::new(),
+            bits_b: Vec::new(),
+            bits_out: Vec::new(),
+        }
+    }
+
+    /// The underlying significand multiplier (e.g. to read
+    /// `DecompMul::stats`).
+    pub fn multiplier(&self) -> &M {
+        &self.m
+    }
+
+    /// Mutable access to the underlying multiplier.
+    pub fn multiplier_mut(&mut self) -> &mut M {
+        &mut self.m
+    }
+
+    /// Multiply a typed batch elementwise through the fused pipeline,
+    /// writing into `out` (cleared first) and returning the union of the
+    /// exception flags. Bit-identical to calling
+    /// [`Fp64::mul_with`](crate::fpu::Fp64::mul_with) (etc.) per element
+    /// with the equivalent scalar multiplier.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `a` and `b` have different lengths.
+    pub fn mul_batch<T: FpScalar>(
+        &mut self,
+        a: &[T],
+        b: &[T],
+        mode: RoundMode,
+        out: &mut Vec<T>,
+    ) -> Flags {
+        // Move the bit scratch out so `self` stays borrowable for the
+        // core call (plain Vec moves — no allocation, no copies beyond
+        // the packing itself).
+        let mut bits_a = std::mem::take(&mut self.bits_a);
+        let mut bits_b = std::mem::take(&mut self.bits_b);
+        let mut bits_out = std::mem::take(&mut self.bits_out);
+        bits_a.clear();
+        bits_a.extend(a.iter().map(|v| v.to_bits_u128()));
+        bits_b.clear();
+        bits_b.extend(b.iter().map(|v| v.to_bits_u128()));
+        let flags = self.mul_batch_bits(&T::FORMAT, &bits_a, &bits_b, mode, &mut bits_out);
+        out.clear();
+        out.extend(bits_out.iter().map(|&v| T::from_bits_u128(v)));
+        self.bits_a = bits_a;
+        self.bits_b = bits_b;
+        self.bits_out = bits_out;
+        flags
+    }
+
+    /// The bits-level entry point (what the coordinator's native backend
+    /// calls): multiply packed `fmt` patterns elementwise, writing packed
+    /// results into `out` (cleared first) and returning the flag union.
+    ///
+    /// The three stages described in the module docs run here: classify
+    /// with the specials sidecar, one batched significand multiply, then
+    /// the shared finish stage scattering results back into place.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `a` and `b` have different lengths.
+    pub fn mul_batch_bits(
+        &mut self,
+        fmt: &FpFormat,
+        a: &[u128],
+        b: &[u128],
+        mode: RoundMode,
+        out: &mut Vec<u128>,
+    ) -> Flags {
+        assert_eq!(a.len(), b.len(), "operand length mismatch");
+        assert!(a.len() <= u32::MAX as usize, "batch too large");
+        out.clear();
+        out.resize(a.len(), 0);
+        self.sig_a.clear();
+        self.sig_b.clear();
+        self.meta.clear();
+        let mut flags = Flags::default();
+
+        // --- Stage 1: unpack/classify; specials to the scalar sidecar ---
+        for (i, (&xa, &xb)) in a.iter().zip(b).enumerate() {
+            let pa = U128::from_u128(xa);
+            let pb = U128::from_u128(xb);
+            let ua = fmt.unpack(pa);
+            let ub = fmt.unpack(pb);
+            let sign = ua.sign ^ ub.sign;
+            if let Some(bits) = special_product(fmt, pa, pb, &ua, &ub, sign, &mut flags) {
+                out[i] = bits.as_u128();
+                continue;
+            }
+            let na = ua.normalize(fmt);
+            let nb = ub.normalize(fmt);
+            self.sig_a.push(na.sig);
+            self.sig_b.push(nb.sig);
+            self.meta.push(LaneMeta { idx: i as u32, sign, exp_sum: na.exp + nb.exp });
+        }
+
+        // --- Stage 2: one lane-wise significand multiply per batch ------
+        self.m.mul_sig_batch(&self.sig_a, &self.sig_b, fmt.sig_bits(), &mut self.prods);
+        debug_assert_eq!(self.prods.len(), self.meta.len());
+
+        // --- Stage 3: batched normalize/round/pack, scattered back ------
+        for (meta, &prod) in self.meta.iter().zip(self.prods.iter()) {
+            let mut ef = Flags::default();
+            let bits = finish_product(fmt, meta.sign, meta.exp_sum, prod, mode, &mut ef);
+            flags.merge(ef);
+            out[meta.idx as usize] = bits.as_u128();
+        }
+        flags
+    }
+}

@@ -13,7 +13,14 @@
 //! * binary32  — 1 sign, 8 exponent,  23 fraction (24-bit significand)
 //! * binary64  — 1 sign, 11 exponent, 52 fraction (53-bit significand)
 //! * binary128 — 1 sign, 15 exponent, 112 fraction (113-bit significand)
+//!
+//! Two execution shapes share the same stage implementations: the scalar
+//! per-op pipeline ([`mul_bits`], the oracle) and the lane-fused batch
+//! pipeline ([`FpuBatch`] over a [`SigBatchMultiplier`]), which peels
+//! specials into a scalar sidecar and multiplies all remaining
+//! significands in one tile-major batch call.
 
+mod batch;
 mod format;
 mod round;
 mod softfp;
@@ -23,6 +30,7 @@ mod tests;
 #[cfg(test)]
 mod golden;
 
+pub use batch::{FpScalar, FpuBatch, SigBatchMultiplier};
 pub use format::{FpClass, FpFormat, Unpacked, DOUBLE, QUAD, SINGLE};
 pub use round::RoundMode;
 pub use softfp::{mul_bits, mul_bits_batch, DirectMul, Flags, SigMultiplier};

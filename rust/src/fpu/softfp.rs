@@ -7,7 +7,7 @@
 //! so the CIVP decomposition and the 18x18 / 25x18 / 9x9 baselines can all
 //! drive a real FP multiply and be checked bit-for-bit against hardware.
 
-use super::format::{FpClass, FpFormat};
+use super::format::{FpClass, FpFormat, Unpacked};
 use super::round::{round_shift, RoundMode};
 use crate::wideint::{mul_u128, U128, U256};
 
@@ -53,56 +53,59 @@ impl SigMultiplier for DirectMul {
     }
 }
 
-/// Multiply two packed values of format `fmt` under rounding mode `mode`,
-/// computing the significand product through `m`. Returns the packed result
-/// and the exception flags.
-pub fn mul_bits(
+/// The special-case lattice shared by [`mul_bits`] and the batched
+/// pipeline in [`super::batch`]: returns `Some(packed_result)` when either
+/// operand short-circuits the multiply (NaN, 0 × ∞, ±∞, ±0), raising
+/// `invalid` into `flags` where IEEE-754 requires it. `None` means both
+/// operands are finite and non-zero — the caller multiplies significands.
+pub(super) fn special_product(
     fmt: &FpFormat,
     a: U128,
     b: U128,
-    mode: RoundMode,
-    m: &mut dyn SigMultiplier,
-) -> (U128, Flags) {
-    let mut flags = Flags::default();
-    let ua = fmt.unpack(a);
-    let ub = fmt.unpack(b);
-    let sign = ua.sign ^ ub.sign;
-
-    // --- Special-case lattice -------------------------------------------
+    ua: &Unpacked,
+    ub: &Unpacked,
+    sign: bool,
+    flags: &mut Flags,
+) -> Option<U128> {
     if ua.class == FpClass::Nan || ub.class == FpClass::Nan {
-        flags.invalid = fmt.is_signaling_nan(a) || fmt.is_signaling_nan(b);
-        return (fmt.quiet_nan(), flags);
+        flags.invalid |= fmt.is_signaling_nan(a) || fmt.is_signaling_nan(b);
+        return Some(fmt.quiet_nan());
     }
     match (ua.class, ub.class) {
         (FpClass::Infinite, FpClass::Zero) | (FpClass::Zero, FpClass::Infinite) => {
             flags.invalid = true;
-            return (fmt.quiet_nan(), flags);
+            Some(fmt.quiet_nan())
         }
-        (FpClass::Infinite, _) | (_, FpClass::Infinite) => {
-            return (fmt.inf(sign), flags);
-        }
-        (FpClass::Zero, _) | (_, FpClass::Zero) => {
-            return (fmt.zero(sign), flags);
-        }
-        _ => {}
+        (FpClass::Infinite, _) | (_, FpClass::Infinite) => Some(fmt.inf(sign)),
+        (FpClass::Zero, _) | (_, FpClass::Zero) => Some(fmt.zero(sign)),
+        _ => None,
     }
+}
 
-    // --- Normalize subnormal inputs --------------------------------------
-    let na = ua.normalize(fmt);
-    let nb = ub.normalize(fmt);
+/// Round, renormalize, detect underflow/overflow and pack an exact
+/// double-width significand product — the back half of the pipeline,
+/// shared by [`mul_bits`] and the batched path in [`super::batch`] so the
+/// two can never drift. `exp_sum` is the sum of the operands' normalized
+/// unbiased exponents; `inexact`/`underflow`/`overflow` are OR-ed into
+/// `flags`.
+pub(super) fn finish_product(
+    fmt: &FpFormat,
+    sign: bool,
+    exp_sum: i32,
+    prod: U256,
+    mode: RoundMode,
+    flags: &mut Flags,
+) -> U128 {
     let f = fmt.frac_bits;
-
-    // --- Exact significand product (the paper's block) -------------------
     // Both significands are in [2^f, 2^(f+1)), so the product is in
     // [2^(2f), 2^(2f+2)) — its MSB sits at bit 2f or 2f+1.
-    let prod = m.mul_sig(na.sig, nb.sig, fmt.sig_bits());
     debug_assert!(!prod.is_zero());
     let top = prod.bit_len() - 1;
     debug_assert!(top == 2 * f || top == 2 * f + 1);
 
     // Unbiased exponent of the product when its significand is interpreted
     // with the integer (hidden) bit at `top`.
-    let mut exp = na.exp + nb.exp + (top as i32 - 2 * f as i32);
+    let mut exp = exp_sum + (top as i32 - 2 * f as i32);
 
     // --- Shift down to sig_bits, handling underflow denormalization ------
     // Keeping f+1 bits means shifting right by (top - f).
@@ -116,7 +119,7 @@ pub fn mul_bits(
     }
 
     let rounded = round_shift(prod, shift, mode, sign);
-    flags.inexact = rounded.inexact;
+    flags.inexact |= rounded.inexact;
     let mut sig = rounded.sig;
 
     // Rounding may carry out one extra bit (e.g. 0b111..1 + 1): renormalize.
@@ -136,7 +139,7 @@ pub fn mul_bits(
     let sig128: U128 = sig.narrow();
     let is_subnormal_result =
         exp == fmt.emin() && sig128.cmp_wide(&hidden) == core::cmp::Ordering::Less;
-    if is_subnormal_result && flags.inexact {
+    if is_subnormal_result && rounded.inexact {
         flags.underflow = true;
     }
 
@@ -150,30 +153,61 @@ pub fn mul_bits(
             RoundMode::TowardPositive => !sign,
             RoundMode::TowardNegative => sign,
         };
-        return if to_inf {
-            (fmt.inf(sign), flags)
-        } else {
-            (fmt.max_finite(sign), flags)
-        };
+        return if to_inf { fmt.inf(sign) } else { fmt.max_finite(sign) };
     }
 
     if sig.is_zero() {
         // Complete underflow to zero.
-        return (fmt.zero(sign), flags);
+        return fmt.zero(sign);
     }
 
-    (fmt.pack(sign, exp, sig128), flags)
+    fmt.pack(sign, exp, sig128)
 }
 
-/// Multiply a whole batch of packed values elementwise, writing the packed
-/// products into `out` (cleared first) and returning the union of the
-/// exception flags raised.
+/// Multiply two packed values of format `fmt` under rounding mode `mode`,
+/// computing the significand product through `m`. Returns the packed result
+/// and the exception flags.
+pub fn mul_bits(
+    fmt: &FpFormat,
+    a: U128,
+    b: U128,
+    mode: RoundMode,
+    m: &mut dyn SigMultiplier,
+) -> (U128, Flags) {
+    let mut flags = Flags::default();
+    let ua = fmt.unpack(a);
+    let ub = fmt.unpack(b);
+    let sign = ua.sign ^ ub.sign;
+
+    // --- Special-case lattice -------------------------------------------
+    if let Some(bits) = special_product(fmt, a, b, &ua, &ub, sign, &mut flags) {
+        return (bits, flags);
+    }
+
+    // --- Normalize subnormal inputs --------------------------------------
+    let na = ua.normalize(fmt);
+    let nb = ub.normalize(fmt);
+
+    // --- Exact significand product (the paper's block) -------------------
+    let prod = m.mul_sig(na.sig, nb.sig, fmt.sig_bits());
+
+    // --- Round / renormalize / pack ---------------------------------------
+    let bits = finish_product(fmt, sign, na.exp + nb.exp, prod, mode, &mut flags);
+    (bits, flags)
+}
+
+/// Multiply a whole batch of packed values elementwise — **per-op mode**:
+/// each element runs the full scalar [`mul_bits`] pipeline in turn. Writes
+/// the packed products into `out` (cleared first) and returns the union of
+/// the exception flags raised.
 ///
-/// This is the coordinator's batch entry point: one call amortizes the
-/// multiplier's plan lookup and lets the caller reuse `out`'s allocation
-/// across batches (the worker pool keeps one scratch vector per worker).
-/// Operand patterns travel in the low bits of `u128` regardless of
-/// precision, mirroring [`crate::coordinator::Request`].
+/// §Perf: the serving stack no longer uses this path in steady state — it
+/// goes through the lane-fused [`super::batch::FpuBatch`], which peels
+/// specials into a scalar sidecar and streams the significand products
+/// tile-major through `Plan::execute_lanes`. This function remains the
+/// per-op reference the property tests and `bench_lanes` pin the fused
+/// path against. Operand patterns travel in the low bits of `u128`
+/// regardless of precision, mirroring [`crate::coordinator::Request`].
 ///
 /// # Panics
 ///

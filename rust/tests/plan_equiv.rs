@@ -3,11 +3,22 @@
 //! cached [`civp::decomp::Plan`] is bit-identical to the plain widening
 //! multiply — across random significands and the edge cases where
 //! rounding/accumulation bugs live (all-ones, single-bit, subnormal-range).
+//!
+//! The lane-fused batch paths are pinned here too: `Plan::execute_lanes`
+//! against N× `Plan::execute` (every scheme kind, IEEE + integer widths,
+//! every ragged tail length, stats included), and `FpuBatch::mul_batch`
+//! against N× `mul_bits` (specials, subnormals, every rounding mode,
+//! flag unions included).
 
-use civp::decomp::{execute, DecompMul, ExecStats, Plan, PlanCache, Precision, Scheme, SchemeKind};
-use civp::fpu::{mul_bits, DirectMul, RoundMode, DOUBLE, QUAD, SINGLE};
+use civp::decomp::{
+    execute, DecompMul, ExecStats, Plan, PlanCache, Precision, Scheme, SchemeKind, LANES,
+};
+use civp::fpu::{
+    mul_bits, mul_bits_batch, DirectMul, Flags, Fp128, Fp32, Fp64, FpuBatch, RoundMode, DOUBLE,
+    QUAD, SINGLE,
+};
 use civp::proput::{forall, Rng};
-use civp::wideint::{mul_u128, U128};
+use civp::wideint::{mul_u128, U128, U256};
 use std::sync::Arc;
 
 
@@ -174,4 +185,228 @@ fn plan_batch_matches_scalar_path() {
     }
     assert_eq!(batch_stats.muls, scalar_stats.muls);
     assert_eq!(batch_stats.tiles, scalar_stats.tiles);
+}
+
+// ---------------------------------------------------------------------
+// Lane-fused batch execution: `Plan::execute_lanes` and the batched FP
+// pipeline `FpuBatch`, pinned against the per-op oracles.
+// ---------------------------------------------------------------------
+
+fn assert_stats_eq(a: &ExecStats, b: &ExecStats, ctx: &str) {
+    assert_eq!(a.muls, b.muls, "{ctx}: muls");
+    assert_eq!(a.tiles, b.tiles, "{ctx}: tiles");
+    assert_eq!(a.padded_tiles, b.padded_tiles, "{ctx}: padded_tiles");
+    assert_eq!(a.useful_bitops, b.useful_bitops, "{ctx}: useful_bitops");
+    assert_eq!(a.capacity_bitops, b.capacity_bitops, "{ctx}: capacity_bitops");
+    for bk in civp::decomp::BlockKind::ALL {
+        assert_eq!(a.ops(bk), b.ops(bk), "{ctx}: ops({bk:?})");
+    }
+}
+
+#[test]
+fn execute_lanes_matches_per_op_all_schemes_and_tails() {
+    // Tile-major lane execution ≡ N× the scalar per-op kernel — products
+    // AND accounting — for every scheme kind, every IEEE width, and every
+    // ragged tail length around the LANES block size (including the
+    // empty batch and a batch smaller than one block).
+    let mut rng = Rng::new(0x710);
+    for prec in Precision::ALL {
+        for kind in SchemeKind::ALL {
+            let plan = PlanCache::get(kind, prec);
+            for n in [0, 1, LANES - 1, LANES, LANES + 1, 2 * LANES, 2 * LANES + 3, 67] {
+                let a: Vec<U128> = (0..n).map(|_| rng.sig(prec.sig_bits())).collect();
+                let b: Vec<U128> = (0..n).map(|_| rng.sig(prec.sig_bits())).collect();
+                let mut lane_stats = ExecStats::default();
+                let mut out: Vec<U256> = Vec::new();
+                plan.execute_lanes(&a, &b, &mut lane_stats, &mut out);
+                assert_eq!(out.len(), n, "{kind:?} {prec:?} n={n}");
+                let mut scalar_stats = ExecStats::default();
+                for i in 0..n {
+                    let want = plan.execute(a[i], b[i], &mut scalar_stats);
+                    assert_eq!(out[i], want, "{kind:?} {prec:?} n={n} i={i}");
+                }
+                assert_stats_eq(&lane_stats, &scalar_stats, &format!("{kind:?} {prec:?} n={n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn execute_lanes_matches_per_op_integer_widths() {
+    // The "combined integer" half rides the lane path too: arbitrary
+    // operand widths, batch sizes straddling the block boundary.
+    forall(0x711, 120, |rng| {
+        let width = rng.range(2, 128) as u32;
+        let n = rng.range(1, 3 * LANES as u64) as usize;
+        for kind in SchemeKind::ALL {
+            let plan = PlanCache::get_width(kind, width);
+            let a: Vec<U128> = (0..n).map(|_| rng.sig(width)).collect();
+            let b: Vec<U128> = (0..n).map(|_| rng.sig(width)).collect();
+            let mut stats = ExecStats::default();
+            let mut out: Vec<U256> = Vec::new();
+            plan.execute_lanes(&a, &b, &mut stats, &mut out);
+            for i in 0..n {
+                assert_eq!(out[i], mul_u128(a[i], b[i]), "{kind:?} w={width} i={i}");
+            }
+            assert_eq!(stats.muls, n as u64);
+        }
+    });
+}
+
+#[test]
+fn execute_lanes_edge_significands() {
+    // Edge significands (all-ones, single bits, low-half patterns) through
+    // full blocks: the SoA extraction and carry chains see the worst-case
+    // bit patterns in every lane position, for every scheme.
+    for prec in Precision::ALL {
+        let edges = edge_sigs(prec.sig_bits());
+        for kind in SchemeKind::ALL {
+            let plan = PlanCache::get(kind, prec);
+            // Pair every edge with every edge, processed in lane blocks.
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            for &x in &edges {
+                for &y in &edges {
+                    a.push(x);
+                    b.push(y);
+                }
+            }
+            let mut stats = ExecStats::default();
+            let mut out: Vec<U256> = Vec::new();
+            plan.execute_lanes(&a, &b, &mut stats, &mut out);
+            for i in 0..a.len() {
+                assert_eq!(out[i], mul_u128(a[i], b[i]), "{kind:?} {prec:?} i={i}");
+            }
+        }
+    }
+}
+
+/// Nasty packed bit patterns for a format: specials (NaN/Inf/zero),
+/// subnormals, boundary exponents, uniform noise.
+fn nasty_packed(rng: &mut Rng, total_bits: u32) -> u128 {
+    match total_bits {
+        32 => rng.nasty_bits32() as u128,
+        64 => rng.nasty_bits64() as u128,
+        _ => match rng.below(6) {
+            0 => 0,
+            1 => 0x7FFFu128 << 112,                     // ±inf
+            2 => (0x7FFFu128 << 112) | (1u128 << 111),  // qNaN
+            3 => rng.next_u64() as u128,                // deep subnormal
+            4 => ((rng.next_u64() as u128) << 64) | rng.next_u64() as u128,
+            _ => {
+                let sign = (rng.below(2) as u128) << 127;
+                let exp = rng.below(0x7FFF) as u128;
+                let frac = (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128)
+                    & ((1u128 << 112) - 1);
+                sign | (exp << 112) | frac
+            }
+        },
+    }
+}
+
+#[test]
+fn fpu_batch_matches_scalar_pipeline_with_specials() {
+    // The fused pipeline (specials sidecar + one lane multiply + batched
+    // finish) ≡ N× `mul_bits`, results AND flag union, across nasty
+    // inputs, every format, every rounding mode, ragged batch sizes.
+    forall(0x712, 250, |rng| {
+        let mode = RoundMode::ALL[rng.below(5) as usize];
+        for (fmt, bits) in [(&SINGLE, 32u32), (&DOUBLE, 64), (&QUAD, 128)] {
+            let n = rng.below(3 * LANES as u64 + 2) as usize;
+            let a: Vec<u128> = (0..n).map(|_| nasty_packed(rng, bits)).collect();
+            let b: Vec<u128> = (0..n).map(|_| nasty_packed(rng, bits)).collect();
+            let mut fused = FpuBatch::new(DecompMul::new(SchemeKind::Civp));
+            let mut out = Vec::new();
+            let got_flags = fused.mul_batch_bits(fmt, &a, &b, mode, &mut out);
+            assert_eq!(out.len(), n);
+
+            let mut dm = DecompMul::new(SchemeKind::Civp);
+            let mut want_flags = Flags::default();
+            for i in 0..n {
+                let (w, f) =
+                    mul_bits(fmt, U128::from_u128(a[i]), U128::from_u128(b[i]), mode, &mut dm);
+                want_flags.merge(f);
+                assert_eq!(out[i], w.as_u128(), "{} {mode:?} i={i}", fmt.name);
+            }
+            assert_eq!(got_flags, want_flags, "{} {mode:?} flag union", fmt.name);
+            // Block accounting parity: the sidecar skips exactly the
+            // elements the scalar pipeline never multiplies.
+            assert_stats_eq(&fused.multiplier().stats, &dm.stats, fmt.name);
+
+            // The per-op batch helper is the same oracle in batch shape.
+            let mut dm2 = DecompMul::new(SchemeKind::Civp);
+            let mut out2 = Vec::new();
+            let f2 = mul_bits_batch(fmt, &a, &b, mode, &mut dm2, &mut out2);
+            assert_eq!(out, out2, "{}", fmt.name);
+            assert_eq!(got_flags, f2, "{}", fmt.name);
+        }
+    });
+}
+
+#[test]
+fn fpu_batch_all_specials_runs_sidecar_only() {
+    let a = vec![
+        f64::NAN.to_bits() as u128,
+        f64::INFINITY.to_bits() as u128,
+        0u128,
+        f64::NEG_INFINITY.to_bits() as u128,
+    ];
+    let b = vec![
+        1.5f64.to_bits() as u128,
+        0u128,
+        (-0.0f64).to_bits() as u128,
+        2.0f64.to_bits() as u128,
+    ];
+    let mut fused = FpuBatch::new(DecompMul::new(SchemeKind::Civp));
+    let mut out = Vec::new();
+    let flags = fused.mul_batch_bits(&DOUBLE, &a, &b, RoundMode::NearestEven, &mut out);
+    assert!(f64::from_bits(out[0] as u64).is_nan());
+    assert!(f64::from_bits(out[1] as u64).is_nan(), "inf × 0 is invalid → qNaN");
+    assert!(flags.invalid);
+    assert_eq!(out[2] as u64, (-0.0f64).to_bits(), "+0 × -0 = -0");
+    assert_eq!(out[3] as u64, f64::NEG_INFINITY.to_bits());
+    // No significand product ever executed: the batch was pure sidecar.
+    assert_eq!(fused.multiplier().stats.muls, 0);
+    // An empty batch is fine too.
+    let empty: Vec<u128> = Vec::new();
+    let f = fused.mul_batch_bits(&DOUBLE, &empty, &empty, RoundMode::NearestEven, &mut out);
+    assert!(out.is_empty());
+    assert_eq!(f, Flags::default());
+}
+
+#[test]
+fn fpu_batch_typed_surface_all_three_widths() {
+    let mut fused = FpuBatch::new(DirectMul);
+
+    let a32: Vec<Fp32> = [1.5f32, -0.0, f32::MAX].map(Fp32::from_f32).to_vec();
+    let b32: Vec<Fp32> = [2.0f32, 5.0, 2.0].map(Fp32::from_f32).to_vec();
+    let mut out32 = Vec::new();
+    let fl = fused.mul_batch(&a32, &b32, RoundMode::NearestEven, &mut out32);
+    assert_eq!(out32[0].to_f32(), 3.0);
+    assert_eq!(out32[1].to_f32().to_bits(), (-0.0f32).to_bits());
+    assert!(out32[2].to_f32().is_infinite() && fl.overflow);
+
+    // f64: fused ≡ scalar typed multiply ≡ host hardware (non-NaN cases).
+    let mut rng = Rng::new(0x713);
+    let a64: Vec<Fp64> = (0..37).map(|_| Fp64(rng.nasty_bits64())).collect();
+    let b64: Vec<Fp64> = (0..37).map(|_| Fp64(rng.nasty_bits64())).collect();
+    let mut out64 = Vec::new();
+    fused.mul_batch(&a64, &b64, RoundMode::NearestEven, &mut out64);
+    for i in 0..a64.len() {
+        let want = a64[i].mul(b64[i]);
+        assert_eq!(out64[i].0, want.0, "i={i}");
+        let host = a64[i].to_f64() * b64[i].to_f64();
+        if !host.is_nan() {
+            assert_eq!(out64[i].to_f64().to_bits(), host.to_bits(), "i={i} vs hardware");
+        }
+    }
+
+    // f128: fused ≡ the scalar quad path (no hardware oracle exists).
+    let qa: Vec<Fp128> = [1e200, 1e-100, 2.0].map(Fp128::from_f64).to_vec();
+    let qb: Vec<Fp128> = [1e100, 1e-200, 0.5].map(Fp128::from_f64).to_vec();
+    let mut outq = Vec::new();
+    fused.mul_batch(&qa, &qb, RoundMode::NearestEven, &mut outq);
+    for i in 0..qa.len() {
+        assert_eq!(outq[i].0, qa[i].mul(qb[i]).0, "i={i}");
+    }
 }
