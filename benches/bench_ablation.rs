@@ -9,8 +9,8 @@
 use civp::benchx::section;
 use civp::config::ServiceConfig;
 use civp::coordinator::{BackendChoice, Service};
-use civp::decomp::{scheme_census, Scheme, SchemeKind};
-use civp::fabric::{simulate_stream, CostModel, FabricConfig, OpClass};
+use civp::decomp::{scheme_census, OpClass, Scheme, SchemeKind};
+use civp::fabric::{simulate_stream, CostModel, FabricConfig, FabricOp};
 use civp::trace::{TraceGen, WorkloadSpec};
 use civp::wideint::{mul_u128, U128};
 use std::time::Instant;
@@ -28,7 +28,7 @@ fn main() {
     ];
     println!("{:<36} {:>8} {:>8} {:>8}", "order", "padded", "util%", "exact?");
     for (label, chunks) in orders {
-        let mut scheme = Scheme::new(SchemeKind::Civp, civp::decomp::Precision::Double);
+        let mut scheme = Scheme::new(SchemeKind::Civp, civp::decomp::OpClass::Double);
         scheme.a_chunks = chunks.clone();
         scheme.b_chunks = chunks;
         let census = scheme_census(&scheme);
@@ -65,7 +65,7 @@ fn main() {
         let t0 = Instant::now();
         let mut pending = Vec::new();
         for req in &trace {
-            pending.push(svc.submit(req.id, req.precision, req.a, req.b).unwrap());
+            pending.push(svc.submit(req.id, req.class, req.a, req.b).unwrap());
             if pending.len() >= 2048 {
                 for rx in pending.drain(..) {
                     let _ = rx.recv();
@@ -99,10 +99,10 @@ fn main() {
     // ------------------------------------------------------------------
     section("E8c: fabric provisioning scale (uniform mix, 30k ops)");
     let cost = CostModel::default();
-    let ops: Vec<OpClass> = TraceGen::new(0xE8C, WorkloadSpec::Uniform.mix(), 0)
+    let ops: Vec<FabricOp> = TraceGen::new(0xE8C, WorkloadSpec::Uniform.mix(), 0)
         .take(30_000)
         .into_iter()
-        .map(|r| OpClass { precision: r.precision, organization: SchemeKind::Civp })
+        .map(|r| FabricOp { class: r.class, organization: SchemeKind::Civp })
         .collect();
     println!("{:<10} {:>10} {:>12} {:>12}", "scale", "cycles", "ops/cycle", "E/op");
     for scale in [1u32, 2, 4, 8] {
@@ -129,7 +129,7 @@ fn main() {
     for spares in [2u32] {
         let mut fab = RepairableFabric::new(FabricConfig::civp_scaled(1), spares);
         let mut rng = civp::proput::Rng::new(0xE8D);
-        let scheme = Scheme::new(SchemeKind::Civp, civp::decomp::Precision::Quad);
+        let scheme = Scheme::new(SchemeKind::Civp, civp::decomp::OpClass::Quad);
         let mut repaired = 0u64;
         let mut lost = 0u32;
         for injected in [0u32, 8, 16, 32, 48] {
@@ -159,7 +159,7 @@ fn main() {
         "\n{:<10} {:<8} {:>10} {:>10} {:>9}",
         "precision", "scheme", "fixed-E", "gated-E", "saving%"
     );
-    for prec in civp::decomp::Precision::ALL {
+    for prec in civp::decomp::OpClass::ALL {
         for kind in [SchemeKind::Civp, SchemeKind::Baseline18] {
             let tiles = Scheme::new(kind, prec).tiles();
             let (gated, fixed) = gating_report(&cost, &tiles);

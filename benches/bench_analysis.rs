@@ -7,8 +7,8 @@
 //! comparison the paper implies ("replace" = same silicon budget).
 
 use civp::benchx::section;
-use civp::decomp::{AnalysisRow, Precision, Scheme, SchemeKind};
-use civp::fabric::{schedule_op, simulate_stream, CostModel, FabricConfig, OpClass};
+use civp::decomp::{AnalysisRow, OpClass, Scheme, SchemeKind};
+use civp::fabric::{schedule_op, simulate_stream, CostModel, FabricConfig, FabricOp};
 
 fn main() {
     let cost = CostModel::default();
@@ -22,7 +22,7 @@ fn main() {
         let c = &row.census;
         println!(
             "{:<10} {:<8} {:>7} {:>8} {:>8.1} | {:>6} {:>6} {:>6} {:>6} {:>6}",
-            row.precision.name(),
+            row.class.name(),
             row.kind.name(),
             c.total_blocks,
             c.padded_blocks,
@@ -40,7 +40,7 @@ fn main() {
         "{:<10} {:<8} {:>10} {:>10} {:>9} {:>6} {:>5}",
         "precision", "scheme", "energy", "useful-E", "wasted%", "lat", "II"
     );
-    for prec in Precision::ALL {
+    for prec in OpClass::ALL {
         for kind in SchemeKind::ALL {
             let scheme = Scheme::new(kind, prec);
             let fabric = match kind {
@@ -75,12 +75,12 @@ fn main() {
         "\n{:<10} {:>12} {:>12} {:>12} {:>12} {:>10} {:>10}",
         "precision", "civp cyc", "iso18 cyc", "civp E/op", "iso18 E/op", "civp wst%", "iso wst%"
     );
-    for prec in Precision::ALL {
+    for prec in OpClass::ALL {
         let n = 10_000;
-        let civp_ops: Vec<OpClass> =
-            vec![OpClass { precision: prec, organization: SchemeKind::Civp }; n];
-        let b18_ops: Vec<OpClass> =
-            vec![OpClass { precision: prec, organization: SchemeKind::Baseline18 }; n];
+        let civp_ops: Vec<FabricOp> =
+            vec![FabricOp { class: prec, organization: SchemeKind::Civp }; n];
+        let b18_ops: Vec<FabricOp> =
+            vec![FabricOp { class: prec, organization: SchemeKind::Baseline18 }; n];
         let rc = simulate_stream(&civp_ops, &civp_fabric, &cost);
         let rb = simulate_stream(&b18_ops, &iso_fabric, &cost);
         println!(

@@ -21,7 +21,7 @@ use civp::cluster::{Cluster, ClusterConfig, RouterPolicy};
 use civp::config::ServiceConfig;
 use civp::coordinator::BackendChoice;
 use civp::decomp::SchemeKind;
-use civp::fabric::{simulate_counts, CostModel, FabricConfig, OpClass};
+use civp::fabric::{simulate_counts, CostModel, FabricConfig, FabricOp};
 use civp::trace::{TraceGen, TraceRequest, WorkloadSpec};
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -48,7 +48,7 @@ fn drive(cluster: &Cluster, trace: &[TraceRequest]) -> f64 {
     let mut pending = Vec::with_capacity(2048);
     for req in trace {
         let rx = cluster
-            .submit(req.id, req.precision, req.a, req.b)
+            .submit(req.id, req.class, req.a, req.b)
             .expect("cluster open");
         pending.push(rx);
         if pending.len() >= 2048 {
@@ -65,12 +65,12 @@ fn drive(cluster: &Cluster, trace: &[TraceRequest]) -> f64 {
 
 /// Deterministic fabric-model scaling: split the per-class counts evenly
 /// across `n` single-column CIVP shards, report the aggregate at 1 GHz.
-fn model_scaling(counts: &BTreeMap<OpClass, u64>, n: u64, cost: &CostModel) -> Measurement {
+fn model_scaling(counts: &BTreeMap<FabricOp, u64>, n: u64, cost: &CostModel) -> Measurement {
     let fabric = FabricConfig::civp_scaled(1);
     let mut wall_cycles = 0u64;
     let mut total_ops = 0u64;
     for shard in 0..n {
-        let mut share: BTreeMap<OpClass, u64> = BTreeMap::new();
+        let mut share: BTreeMap<FabricOp, u64> = BTreeMap::new();
         for (class, &count) in counts {
             let mine = count / n + u64::from(shard < count % n);
             if mine > 0 {
@@ -98,10 +98,10 @@ fn main() {
     let mut json = JsonReport::new();
     let n_requests = scaled(40_000) as usize;
     let trace = TraceGen::new(0xC1, WorkloadSpec::Mixed.mix(), 0).take(n_requests);
-    let mut counts: BTreeMap<OpClass, u64> = BTreeMap::new();
+    let mut counts: BTreeMap<FabricOp, u64> = BTreeMap::new();
     for r in &trace {
         *counts
-            .entry(OpClass { precision: r.precision, organization: SchemeKind::Civp })
+            .entry(FabricOp { class: r.class, organization: SchemeKind::Civp })
             .or_insert(0) += 1;
     }
     let cost = CostModel::default();

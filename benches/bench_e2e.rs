@@ -23,8 +23,8 @@
 use civp::benchx::{bb, bench, scaled, section, wall_measurement, JsonReport};
 use civp::config::ServiceConfig;
 use civp::coordinator::{BackendChoice, ReplyPool, Response, Service};
-use civp::decomp::{Precision, SchemeKind};
-use civp::fabric::{simulate_counts, simulate_stream, CostModel, FabricConfig, OpClass};
+use civp::decomp::{OpClass, SchemeKind};
+use civp::fabric::{simulate_counts, simulate_stream, CostModel, FabricConfig, FabricOp};
 use civp::runtime::EngineHandle;
 use civp::trace::{TraceGen, WorkloadSpec};
 use std::collections::BTreeMap;
@@ -38,7 +38,7 @@ fn drive(svc: &Service, trace: &[civp::trace::TraceRequest]) -> f64 {
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(4096);
     for req in trace {
-        pending.push(svc.submit(req.id, req.precision, req.a, req.b).unwrap());
+        pending.push(svc.submit(req.id, req.class, req.a, req.b).unwrap());
         if pending.len() >= 4096 {
             for rx in pending.drain(..) {
                 let _ = rx.recv();
@@ -73,7 +73,7 @@ fn main() {
             &format!("e2e/{}/native-submit-response", workload.name()),
             wall_measurement(n_requests as u64, wall),
         );
-        for p in ["single", "double", "quad"] {
+        for p in OpClass::ALL.map(|c| c.name()) {
             if let Some(h) = rep.snapshot.hists.get(&format!("latency_ns_{p}")) {
                 if h.count > 0 {
                     println!(
@@ -87,14 +87,14 @@ fn main() {
         // --- fabric layer: civp vs iso-area legacy ---------------------
         // Per-class counts are all the cycle/energy model needs; no
         // materialized op stream (§Perf).
-        let mut civp_counts: BTreeMap<OpClass, u64> = BTreeMap::new();
-        let mut b18_counts: BTreeMap<OpClass, u64> = BTreeMap::new();
+        let mut civp_counts: BTreeMap<FabricOp, u64> = BTreeMap::new();
+        let mut b18_counts: BTreeMap<FabricOp, u64> = BTreeMap::new();
         for r in &trace {
             *civp_counts
-                .entry(OpClass { precision: r.precision, organization: SchemeKind::Civp })
+                .entry(FabricOp { class: r.class, organization: SchemeKind::Civp })
                 .or_insert(0) += 1;
             *b18_counts
-                .entry(OpClass { precision: r.precision, organization: SchemeKind::Baseline18 })
+                .entry(FabricOp { class: r.class, organization: SchemeKind::Baseline18 })
                 .or_insert(0) += 1;
         }
         let rc = simulate_counts(&civp_counts, &FabricConfig::civp_scaled(1), &cost);
@@ -144,17 +144,17 @@ fn main() {
     // --- fabric report: O(#classes) counts vs O(#ops) replay -----------
     section("fabric report at 1M ops: simulate_counts vs materialized simulate_stream");
     let total: u64 = scaled(1_000_000);
-    let mut counts: BTreeMap<OpClass, u64> = BTreeMap::new();
+    let mut counts: BTreeMap<FabricOp, u64> = BTreeMap::new();
     counts.insert(
-        OpClass { precision: Precision::Single, organization: SchemeKind::Civp },
+        FabricOp { class: OpClass::Single, organization: SchemeKind::Civp },
         total / 2,
     );
     counts.insert(
-        OpClass { precision: Precision::Double, organization: SchemeKind::Civp },
+        FabricOp { class: OpClass::Double, organization: SchemeKind::Civp },
         total / 3,
     );
     counts.insert(
-        OpClass { precision: Precision::Quad, organization: SchemeKind::Civp },
+        FabricOp { class: OpClass::Quad, organization: SchemeKind::Civp },
         total - total / 2 - total / 3,
     );
     let fabric = FabricConfig::civp_scaled(1);
@@ -162,9 +162,9 @@ fn main() {
         bb(simulate_counts(&counts, &fabric, &cost));
     });
     let from_stream = bench("fabric_report: replay simulate_stream (pre-PR)", 2, 10, 1, || {
-        // The pre-PR shape: materialize one OpClass per executed multiply,
+        // The pre-PR shape: materialize one FabricOp per executed multiply,
         // then aggregate it all over again.
-        let mut ops: Vec<OpClass> = Vec::with_capacity(total as usize);
+        let mut ops: Vec<FabricOp> = Vec::with_capacity(total as usize);
         for (class, n) in &counts {
             for _ in 0..*n {
                 ops.push(*class);

@@ -5,14 +5,14 @@
 //! §II.B, and measures the software pipeline under both.
 
 use civp::benchx::{bb, bench, section};
-use civp::decomp::{scheme_census, BlockKind, DecompMul, Precision, Scheme, SchemeKind};
+use civp::decomp::{scheme_census, BlockKind, DecompMul, OpClass, Scheme, SchemeKind};
 use civp::fabric::{schedule_op, CostModel, FabricConfig};
 use civp::fpu::{Fp64, RoundMode};
 use civp::proput::Rng;
 
 fn main() {
     section("E3 static: Fig. 2(b) — 57x57 double-precision partitioning");
-    let civp = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Double));
+    let civp = scheme_census(&Scheme::new(SchemeKind::Civp, OpClass::Double));
     println!(
         "civp-double: padded {} bits, {} blocks = {} x24x24 + {} x24x9 + {} x9x9",
         civp.padded_bits,
@@ -33,7 +33,7 @@ fn main() {
     );
     let cost = CostModel::default();
     for kind in SchemeKind::ALL {
-        let scheme = Scheme::new(kind, Precision::Double);
+        let scheme = Scheme::new(kind, OpClass::Double);
         let census = scheme_census(&scheme);
         let fabric = match kind {
             SchemeKind::Civp => FabricConfig::civp_default(),

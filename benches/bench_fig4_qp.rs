@@ -8,14 +8,14 @@
 
 use civp::benchx::{bb, bench, section};
 use civp::decomp::analysis::{PAPER_CLAIMED_QP_TOTAL_18X18, PAPER_CLAIMED_QP_WASTED_18X18};
-use civp::decomp::{scheme_census, BlockKind, DecompMul, Precision, Scheme, SchemeKind};
+use civp::decomp::{scheme_census, BlockKind, DecompMul, OpClass, Scheme, SchemeKind};
 use civp::fabric::{schedule_op, CostModel, FabricConfig};
 use civp::fpu::{Fp128, RoundMode};
 use civp::proput::Rng;
 
 fn main() {
     section("E4 static: Fig. 4 — 114x114 quad partitioning");
-    let civp = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Quad));
+    let civp = scheme_census(&Scheme::new(SchemeKind::Civp, OpClass::Quad));
     println!(
         "civp-quad: padded {} bits, {} blocks = {} x24x24 + {} x24x9 + {} x9x9",
         civp.padded_bits,
@@ -26,7 +26,7 @@ fn main() {
     );
     assert_eq!(civp.total_blocks, 36);
 
-    let b18 = scheme_census(&Scheme::new(SchemeKind::Baseline18, Precision::Quad));
+    let b18 = scheme_census(&Scheme::new(SchemeKind::Baseline18, OpClass::Quad));
     println!(
         "18x18-quad: padded {} bits, {} blocks ({} padded)",
         b18.padded_bits, b18.total_blocks, b18.padded_blocks
@@ -68,7 +68,7 @@ fn main() {
         "scheme", "blocks", "energy", "useful-E", "wasted%", "lat"
     );
     for kind in SchemeKind::ALL {
-        let scheme = Scheme::new(kind, Precision::Quad);
+        let scheme = Scheme::new(kind, OpClass::Quad);
         let fabric = match kind {
             SchemeKind::Civp => FabricConfig::civp_default(),
             _ => FabricConfig::legacy_default(),

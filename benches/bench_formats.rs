@@ -1,0 +1,127 @@
+//! Per-class format benchmarks over the open op-class registry: the lane
+//! path vs the per-op path for *every* served class — the paper's three
+//! precisions plus the sub-single formats (binary16, bfloat16) landed by
+//! the registry refactor.
+//!
+//! Two levels per class, mirroring `bench_lanes`:
+//!
+//! * **raw significand products** — `formats/civp-<class>/lane-path` vs
+//!   `formats/civp-<class>/per-op-path` (`Plan::execute_lanes` vs
+//!   `Plan::execute` in a loop);
+//! * **full IEEE pipeline** — `formats/fpu-<class>/fused-x256`
+//!   (`FpuBatch`) vs `formats/fpu-<class>/per-op-x256` (`mul_bits_batch`).
+//!
+//! Every measurement lands in `BENCH_formats.json`; CI smoke-runs this
+//! target and `python/tools/check_bench.py` enforces `lane p50 ≤ per-op
+//! p50` per pair, so the sub-single classes gate regressions exactly like
+//! the original three.
+
+use civp::benchx::{bb, bench, scaled, section, JsonReport};
+use civp::decomp::{DecompMul, ExecStats, OpClass, PlanCache, SchemeKind};
+use civp::fpu::{mul_bits_batch, FpuBatch, RoundMode};
+use civp::proput::Rng;
+use civp::wideint::{mul_u128, U128, U256};
+
+const BATCH: usize = 256;
+
+fn main() {
+    let mut json = JsonReport::new();
+
+    section("raw significand products x256 per registry class");
+    let mut verdicts: Vec<(String, f64)> = Vec::new();
+    for class in OpClass::ALL {
+        let label = format!("civp-{}", class.name());
+        let bits = class.sig_bits();
+        let plan = PlanCache::get(SchemeKind::Civp, class);
+        let mut rng = Rng::new(0xF0A7 ^ bits as u64);
+        let a: Vec<U128> = (0..BATCH).map(|_| rng.sig(bits)).collect();
+        let b: Vec<U128> = (0..BATCH).map(|_| rng.sig(bits)).collect();
+
+        // Correctness cross-check before timing: lane ≡ oracle.
+        let mut st = ExecStats::default();
+        let mut products: Vec<U256> = Vec::with_capacity(BATCH);
+        plan.execute_lanes(&a, &b, &mut st, &mut products);
+        for i in 0..BATCH {
+            assert_eq!(products[i], mul_u128(a[i], b[i]), "{label} lane path wrong at {i}");
+        }
+
+        let iters = scaled(2_000).max(4);
+        let mut stats = ExecStats::default();
+        let mut out: Vec<U256> = Vec::with_capacity(BATCH);
+        let lane = bench(&format!("{label:<12} lane-path x256"), 20, 30, iters, || {
+            plan.execute_lanes(&a, &b, &mut stats, &mut out);
+            bb(out.len());
+        });
+        let mut stats = ExecStats::default();
+        let mut out: Vec<U256> = Vec::with_capacity(BATCH);
+        let perop = bench(&format!("{label:<12} per-op-path x256"), 20, 30, iters, || {
+            out.clear();
+            for (&x, &y) in a.iter().zip(&b) {
+                out.push(plan.execute(x, y, &mut stats));
+            }
+            bb(out.len());
+        });
+        json.push(&format!("formats/{label}/lane-path"), lane);
+        json.push(&format!("formats/{label}/per-op-path"), perop);
+        verdicts.push((label, perop.ns_per_op_p50 / lane.ns_per_op_p50));
+    }
+
+    section("full IEEE pipeline x256 per registry class: fused vs per-op");
+    for class in OpClass::ALL {
+        let fmt = class.format();
+        let bits = fmt.total_bits();
+        let mask = if bits == 128 { u128::MAX } else { (1u128 << bits) - 1 };
+        let mut rng = Rng::new(0xF0E0 ^ bits as u64);
+        let a: Vec<u128> = (0..BATCH)
+            .map(|_| (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & mask)
+            .collect();
+        let b: Vec<u128> = (0..BATCH)
+            .map(|_| (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & mask)
+            .collect();
+
+        let mut fused = FpuBatch::new(DecompMul::new(SchemeKind::Civp));
+        let mut out: Vec<u128> = Vec::with_capacity(BATCH);
+        // Cross-check fused vs per-op before timing.
+        let mut dm = DecompMul::new(SchemeKind::Civp);
+        let mut want: Vec<u128> = Vec::new();
+        let wf = mul_bits_batch(fmt, &a, &b, RoundMode::NearestEven, &mut dm, &mut want);
+        let gf = fused.mul_batch_bits(fmt, &a, &b, RoundMode::NearestEven, &mut out);
+        assert_eq!(out, want, "fused pipeline diverged ({})", class.name());
+        assert_eq!(gf, wf, "fused flags diverged ({})", class.name());
+
+        let iters = scaled(500).max(2);
+        let fused_m = bench(&format!("fpu-{:<8} fused x256", class.name()), 10, 30, iters, || {
+            fused.mul_batch_bits(fmt, &a, &b, RoundMode::NearestEven, &mut out);
+            bb(out.len());
+        });
+        let mut out2: Vec<u128> = Vec::with_capacity(BATCH);
+        let perop_m = bench(&format!("fpu-{:<8} per-op x256", class.name()), 10, 30, iters, || {
+            mul_bits_batch(fmt, &a, &b, RoundMode::NearestEven, &mut dm, &mut out2);
+            bb(out2.len());
+        });
+        json.push(&format!("formats/fpu-{}/fused-x256", class.name()), fused_m);
+        json.push(&format!("formats/fpu-{}/per-op-x256", class.name()), perop_m);
+        verdicts.push((
+            format!("fpu-{}", class.name()),
+            perop_m.ns_per_op_p50 / fused_m.ns_per_op_p50,
+        ));
+    }
+
+    section("verdict: lane/fused speedup per class (p50)");
+    let mut all_faster = true;
+    for (label, speedup) in &verdicts {
+        let verdict = if *speedup >= 1.0 { "faster" } else { "SLOWER" };
+        println!("{label:<20} {speedup:>6.2}x {verdict}");
+        all_faster &= *speedup >= 1.0;
+    }
+    println!(
+        "\n{}",
+        if all_faster {
+            "PASS: the lane path beats the per-op path on every registry class"
+        } else {
+            "FAIL: at least one class did not benefit from lane fusion"
+        }
+    );
+
+    json.write("BENCH_formats.json").expect("write BENCH_formats.json");
+}

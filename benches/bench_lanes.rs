@@ -21,8 +21,8 @@
 //! so the lane path beating the per-op path gates every PR.
 
 use civp::benchx::{bb, bench, scaled, section, JsonReport};
-use civp::decomp::{DecompMul, ExecStats, PlanCache, Precision, SchemeKind};
-use civp::fpu::{mul_bits_batch, FpuBatch, RoundMode, DOUBLE, QUAD, SINGLE};
+use civp::decomp::{DecompMul, ExecStats, OpClass, PlanCache, SchemeKind};
+use civp::fpu::{mul_bits_batch, FpuBatch, RoundMode};
 use civp::proput::Rng;
 use civp::wideint::{mul_u128, U128, U256};
 
@@ -33,7 +33,7 @@ fn main() {
 
     section("raw significand products x256: lane path vs per-op path");
     let mut verdicts: Vec<(String, f64)> = Vec::new();
-    let widths: Vec<(String, u32)> = Precision::ALL
+    let widths: Vec<(String, u32)> = OpClass::ALL
         .iter()
         .map(|p| (format!("civp-{}", p.name()), p.sig_bits()))
         .chain(std::iter::once(("civp-int48".to_string(), 48)))
@@ -77,12 +77,8 @@ fn main() {
     }
 
     section("full IEEE pipeline x256: FpuBatch fused vs per-op mul_bits_batch");
-    for prec in Precision::ALL {
-        let fmt = match prec {
-            Precision::Single => &SINGLE,
-            Precision::Double => &DOUBLE,
-            Precision::Quad => &QUAD,
-        };
+    for prec in OpClass::ALL {
+        let fmt = prec.format();
         let bits = fmt.total_bits();
         let mask = if bits == 128 { u128::MAX } else { (1u128 << bits) - 1 };
         let mut rng = Rng::new(0xF5E0 ^ bits as u64);

@@ -20,14 +20,14 @@
 
 use civp::benchx::{bb, bench, scaled, section, JsonReport};
 use civp::coordinator::NativeBackend;
-use civp::decomp::{execute, ExecStats, PlanCache, Precision, Scheme, SchemeKind};
-use civp::fpu::{mul_bits, DirectMul, RoundMode, DOUBLE, QUAD, SINGLE};
+use civp::decomp::{execute, ExecStats, OpClass, PlanCache, Scheme, SchemeKind};
+use civp::fpu::{mul_bits, DirectMul, RoundMode};
 use civp::proput::Rng;
 use civp::wideint::{mul_u128, U128, U256};
 
 
 fn main() {
-    let precisions = [Precision::Single, Precision::Double, Precision::Quad];
+    let precisions = OpClass::ALL; // the full registry, sub-single included
     let kinds = SchemeKind::ALL; // civp + all three baselines
     let mut json = JsonReport::new();
     let iters = scaled(10_000);
@@ -103,11 +103,7 @@ fn main() {
 
     section("coordinator batch path: mul_batch (reused scratch) vs per-call pipeline");
     for prec in precisions {
-        let fmt = match prec {
-            Precision::Single => &SINGLE,
-            Precision::Double => &DOUBLE,
-            Precision::Quad => &QUAD,
-        };
+        let fmt = prec.format();
         let bits = fmt.total_bits();
         let mut rng = Rng::new(0xABCD ^ bits as u64);
         let mask = if bits == 128 { u128::MAX } else { (1u128 << bits) - 1 };

@@ -7,7 +7,7 @@
 //! shared).
 
 use civp::benchx::{bb, bench, section};
-use civp::decomp::{scheme_census, DecompMul, Precision, Scheme, SchemeKind};
+use civp::decomp::{scheme_census, DecompMul, OpClass, Scheme, SchemeKind};
 use civp::fabric::{schedule_op, CostModel, FabricConfig};
 use civp::fpu::{Fp32, RoundMode};
 use civp::proput::Rng;
@@ -20,7 +20,7 @@ fn main() {
     );
     let cost = CostModel::default();
     for kind in SchemeKind::ALL {
-        let scheme = Scheme::new(kind, Precision::Single);
+        let scheme = Scheme::new(kind, OpClass::Single);
         let census = scheme_census(&scheme);
         let fabric = match kind {
             SchemeKind::Civp => FabricConfig::civp_default(),

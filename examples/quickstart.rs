@@ -10,7 +10,7 @@
 
 use civp::config::ServiceConfig;
 use civp::coordinator::{BackendChoice, Service};
-use civp::decomp::{scheme_census, DecompMul, ExecStats, PlanCache, Precision, Scheme, SchemeKind};
+use civp::decomp::{scheme_census, DecompMul, ExecStats, OpClass, PlanCache, Scheme, SchemeKind};
 use civp::fabric::{schedule_op, CostModel, FabricConfig};
 use civp::fpu::{Fp128, Fp32, Fp64, FpuBatch, RoundMode};
 use civp::wideint::U128;
@@ -48,7 +48,7 @@ fn main() {
     let cost = CostModel::default();
     let civp_fabric = FabricConfig::civp_default();
     let legacy_fabric = FabricConfig::legacy_default();
-    for prec in Precision::ALL {
+    for prec in OpClass::ALL {
         let civp = schedule_op(&Scheme::new(SchemeKind::Civp, prec), &civp_fabric, &cost);
         let legacy = schedule_op(&Scheme::new(SchemeKind::Baseline18, prec), &legacy_fabric, &cost);
         println!(
@@ -64,7 +64,7 @@ fn main() {
     }
 
     // Block counts straight from the paper's figures:
-    let fig2 = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Double));
+    let fig2 = scheme_census(&Scheme::new(SchemeKind::Civp, OpClass::Double));
     println!(
         "\nFig. 2(b) check — double precision: {} blocks ({} 24x24 + {} 24x9 + {} 9x9)",
         fig2.total_blocks,
@@ -77,7 +77,7 @@ fn main() {
     // 3. Compiled tile plans — the hot path behind every multiply above
     // ------------------------------------------------------------------
     println!("\n== 3. compiled tile plans (process-wide cache) ==");
-    for prec in Precision::ALL {
+    for prec in OpClass::ALL {
         let plan = PlanCache::get(SchemeKind::Civp, prec);
         println!(
             "{:<7} plan: {} pre-resolved steps for a {}-bit product",
@@ -87,7 +87,7 @@ fn main() {
         );
     }
     // A plan executes the exact integer product with no per-call planning:
-    let plan = PlanCache::get(SchemeKind::Civp, Precision::Double);
+    let plan = PlanCache::get(SchemeKind::Civp, OpClass::Double);
     let mut stats = ExecStats::default();
     let p = plan.execute(U128::from_u64(3 << 50), U128::from_u64(5 << 50), &mut stats);
     println!("plan.execute(3<<50 x 5<<50) -> {} (stats: {} tiles)", p.to_hex(), stats.tiles);
@@ -117,7 +117,7 @@ fn main() {
     let cfg = ServiceConfig::default();
     let svc = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
     let product = svc.mul_blocking(
-        Precision::Double,
+        OpClass::Double,
         (6.0f64).to_bits() as u128,
         (7.0f64).to_bits() as u128,
     );

@@ -32,7 +32,7 @@ fn drive(svc: &Service, trace: &[TraceRequest]) -> (f64, Vec<u128>) {
     let mut results = vec![0u128; trace.len()];
     let mut pending: Vec<(usize, civp::coordinator::ReplyHandle)> = Vec::with_capacity(4096);
     for (idx, req) in trace.iter().enumerate() {
-        pending.push((idx, svc.submit(req.id, req.precision, req.a, req.b).unwrap()));
+        pending.push((idx, svc.submit(req.id, req.class, req.a, req.b).unwrap()));
         if pending.len() >= 4096 {
             for (i, rx) in pending.drain(..) {
                 results[i] = rx.recv().unwrap().bits;
@@ -48,16 +48,22 @@ fn drive(svc: &Service, trace: &[TraceRequest]) -> (f64, Vec<u128>) {
 fn verify_against_softfloat(trace: &[TraceRequest], results: &[u128]) -> usize {
     let mut checked = 0;
     for (req, &got) in trace.iter().zip(results) {
-        let want = match req.precision {
-            civp::decomp::Precision::Single => {
+        let want = match req.class {
+            civp::decomp::OpClass::Bf16 => {
+                civp::fpu::Bf16(req.a as u16).mul(civp::fpu::Bf16(req.b as u16)).0 as u128
+            }
+            civp::decomp::OpClass::Half => {
+                civp::fpu::Fp16(req.a as u16).mul(civp::fpu::Fp16(req.b as u16)).0 as u128
+            }
+            civp::decomp::OpClass::Single => {
                 Fp32(req.a as u32).mul(Fp32(req.b as u32)).0 as u128
             }
-            civp::decomp::Precision::Double => {
+            civp::decomp::OpClass::Double => {
                 Fp64(req.a as u64).mul(Fp64(req.b as u64)).0 as u128
             }
-            civp::decomp::Precision::Quad => Fp128(req.a).mul(Fp128(req.b)).0,
+            civp::decomp::OpClass::Quad => Fp128(req.a).mul(Fp128(req.b)).0,
         };
-        assert_eq!(got, want, "req {} ({:?}) diverged", req.id, req.precision);
+        assert_eq!(got, want, "req {} ({:?}) diverged", req.id, req.class);
         checked += 1;
     }
     checked
@@ -70,7 +76,7 @@ fn report(label: &str, svc: Service, wall: f64, n: usize) {
     println!("requests        {n}");
     println!("wall            {wall:.3} s");
     println!("throughput      {:.0} mult/s", n as f64 / wall);
-    for p in ["single", "double", "quad"] {
+    for p in civp::decomp::OpClass::ALL.map(|c| c.name()) {
         if let Some(h) = rep.snapshot.hists.get(&format!("latency_ns_{p}")) {
             println!(
                 "latency {p:<7} p50={:>9} ns   p99={:>9} ns   (n={})",
@@ -91,9 +97,9 @@ fn main() {
         "workload `{}`: {} requests ({} single / {} double / {} quad)",
         workload.name(),
         trace.len(),
-        trace.iter().filter(|r| r.precision == civp::decomp::Precision::Single).count(),
-        trace.iter().filter(|r| r.precision == civp::decomp::Precision::Double).count(),
-        trace.iter().filter(|r| r.precision == civp::decomp::Precision::Quad).count(),
+        trace.iter().filter(|r| r.class == civp::decomp::OpClass::Single).count(),
+        trace.iter().filter(|r| r.class == civp::decomp::OpClass::Double).count(),
+        trace.iter().filter(|r| r.class == civp::decomp::OpClass::Quad).count(),
     );
 
     // ------------------------------------------------------------------

@@ -16,6 +16,7 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parents[2]
 GENERATOR = REPO / "python" / "tools" / "gen_golden_fp128.py"
+SMALLFP_GENERATOR = REPO / "python" / "tools" / "gen_golden_smallfp.py"
 GOLDEN_RS = REPO / "rust" / "src" / "fpu" / "golden.rs"
 
 TUPLE_RE = re.compile(r"^\s*\(([^)]+)\),\s*$")
@@ -44,24 +45,49 @@ def parse_arrays(text):
     return arrays
 
 
-def test_generator_matches_checked_in_golden_vectors():
-    generated = subprocess.run(
-        [sys.executable, str(GENERATOR)],
+def run_generator(path):
+    out = subprocess.run(
+        [sys.executable, str(path)],
         capture_output=True,
         text=True,
         check=True,
     ).stdout
-    gen = parse_arrays(generated)
-    rust = parse_arrays(GOLDEN_RS.read_text())
+    return parse_arrays(out)
 
-    for name in ("GOLDEN_FP128_MUL_RNE", "GOLDEN_FP128_MUL_MODES"):
+
+def assert_arrays_match(gen, rust, names, generator):
+    for name in names:
         assert name in gen, f"generator no longer emits {name}"
         assert name in rust, f"golden.rs no longer contains {name}"
         assert gen[name], f"generator emitted an empty {name}"
         assert gen[name] == rust[name], (
-            f"{name} drifted: regenerate with `python3 {GENERATOR.relative_to(REPO)}` "
+            f"{name} drifted: regenerate with `python3 {generator.relative_to(REPO)}` "
             f"and paste into {GOLDEN_RS.relative_to(REPO)} (first mismatch at index "
             f"{next(i for i, (a, b) in enumerate(zip(gen[name], rust[name])) if a != b)})"
             if len(gen[name]) == len(rust[name])
             else f"{name} length drifted: generator {len(gen[name])} vs rust {len(rust[name])}"
         )
+
+
+def test_generator_matches_checked_in_golden_vectors():
+    gen = run_generator(GENERATOR)
+    rust = parse_arrays(GOLDEN_RS.read_text())
+    assert_arrays_match(
+        gen, rust, ("GOLDEN_FP128_MUL_RNE", "GOLDEN_FP128_MUL_MODES"), GENERATOR
+    )
+
+
+def test_smallfp_generator_matches_checked_in_golden_vectors():
+    gen = run_generator(SMALLFP_GENERATOR)
+    rust = parse_arrays(GOLDEN_RS.read_text())
+    assert_arrays_match(
+        gen,
+        rust,
+        (
+            "GOLDEN_FP16_MUL_RNE",
+            "GOLDEN_FP16_MUL_MODES",
+            "GOLDEN_BF16_MUL_RNE",
+            "GOLDEN_BF16_MUL_MODES",
+        ),
+        SMALLFP_GENERATOR,
+    )

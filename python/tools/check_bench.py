@@ -29,6 +29,9 @@ artifacts (CI does this with CIVP_BENCH_QUICK=1). Three layers of checks:
      and every `lanes/fpu-<prec>/fused-x256` vs `per-op-x256` pair in
      `BENCH_lanes.json`, lane p50 <= per-op p50 (the `bench_lanes`
      acceptance gate);
+   * the same lane-vs-per-op invariant holds per registry op class in
+     `BENCH_formats.json` (`formats/...` rows) — binary16 and bfloat16
+     gate regressions exactly like single/double/quad;
    * cluster fabric-model aggregate throughput (computed analytically —
      deterministic, machine-independent) increases monotonically with
      the shard count, strictly from 1 to 4 shards (the `bench_cluster`
@@ -52,7 +55,13 @@ import sys
 
 DEFAULT_TOLERANCE = 0.25
 REQUIRED_KEYS = ("name", "ns_per_op_p50", "ops_per_sec")
-REQUIRED_FILES = ("BENCH_e2e.json", "BENCH_plan.json", "BENCH_cluster.json", "BENCH_lanes.json")
+REQUIRED_FILES = (
+    "BENCH_e2e.json",
+    "BENCH_plan.json",
+    "BENCH_cluster.json",
+    "BENCH_lanes.json",
+    "BENCH_formats.json",
+)
 MODEL_SCALING_RE = re.compile(r"^cluster/mixed/model-scaling-(\d+)shard$")
 # Single-shot wall-clock measurements (and the optional pjrt path): too
 # machine- and load-dependent to gate against a committed number, and the
@@ -158,33 +167,37 @@ def check_plan_invariants(current):
 LANES_NOISE_SLACK = 1.05
 
 
-def check_lanes_invariants(current):
+def check_lanes_invariants(current, prefix="lanes"):
     """Lane-fused execution must never lose to the per-op path it replaced.
 
     Machine-independent: both sides of each pair run in the same process
     on the same operands, so runner speed cancels out. Gate: lane p50 <=
-    per-op p50 (modulo LANES_NOISE_SLACK for sampling noise).
+    per-op p50 (modulo LANES_NOISE_SLACK for sampling noise). Applied to
+    the `lanes/...` rows and, with prefix="formats", to the per-registry-
+    class rows of BENCH_formats.json.
     """
     before = len(failures)
     pairs = 0
     for name, p50 in sorted(current.items()):
-        m = re.match(r"^lanes/(.+)/(lane-path|fused-x256)$", name)
+        m = re.match(rf"^{prefix}/(.+)/(lane-path|fused-x256)$", name)
         if not m:
             continue
-        sibling = "lanes/{}/{}".format(
-            m.group(1), "per-op-path" if m.group(2) == "lane-path" else "per-op-x256"
+        sibling = "{}/{}/{}".format(
+            prefix, m.group(1), "per-op-path" if m.group(2) == "lane-path" else "per-op-x256"
         )
         if sibling not in current:
-            fail(f"`{name}` has no per-op sibling `{sibling}` — bench_lanes incomplete?")
+            fail(f"`{name}` has no per-op sibling `{sibling}` — bench target incomplete?")
             continue
         pairs += 1
         if p50 > current[sibling] * LANES_NOISE_SLACK:
             fail(
-                f"lane path slower than per-op path for {m.group(1)}: "
+                f"lane path slower than per-op path for {prefix}/{m.group(1)}: "
                 f"{p50:.1f} vs {current[sibling]:.1f} ns/op"
             )
     if pairs and len(failures) == before:
-        print(f"invariant ok: lane path beats per-op path on all {pairs} measured pairs")
+        print(
+            f"invariant ok: {prefix} lane path beats per-op path on all {pairs} measured pairs"
+        )
 
 
 def check_cluster_scaling(current):
@@ -296,6 +309,7 @@ def main():
     )
     check_plan_invariants(current)
     check_lanes_invariants(current)
+    check_lanes_invariants(current, prefix="formats")
     check_cluster_scaling(current)
 
     if failures:

@@ -1,0 +1,188 @@
+"""Generate binary16 / bfloat16 multiplication golden vectors with
+pure-integer math.
+
+Sibling of `gen_golden_fp128.py`, generalized over (exp_bits, frac_bits):
+an independent oracle for the Rust softfloat's sub-single registry classes
+— no code shared with the Rust pipeline. Output is Rust array literals
+pasted into `rust/src/fpu/golden.rs`.
+"""
+import random
+
+
+class Fmt:
+    def __init__(self, tag, exp_bits, frac_bits):
+        self.tag = tag
+        self.exp_bits = exp_bits
+        self.frac_bits = frac_bits
+        self.bias = (1 << (exp_bits - 1)) - 1
+        self.emin = 1 - self.bias
+        self.emax = self.bias
+        self.exp_mask = (1 << exp_bits) - 1
+        self.total = 1 + exp_bits + frac_bits
+
+    def unpack(self, bits):
+        sign = bits >> (self.total - 1)
+        biased = (bits >> self.frac_bits) & self.exp_mask
+        frac = bits & ((1 << self.frac_bits) - 1)
+        if biased == self.exp_mask:
+            return (sign, 'nan' if frac else 'inf', 0, 0)
+        if biased == 0:
+            if frac == 0:
+                return (sign, 'zero', 0, 0)
+            return (sign, 'fin', self.emin, frac)  # subnormal, no hidden bit
+        return (sign, 'fin', biased - self.bias, frac | (1 << self.frac_bits))
+
+    def mul_mode(self, a_bits, b_bits, mode):
+        """IEEE multiply under any rounding-direction attribute.
+
+        mode: 'rne' | 'rna' | 'rtz' | 'rup' | 'rdn'
+        """
+        f = self.frac_bits
+        sa, ca, ea, ma = self.unpack(a_bits)
+        sb, cb, eb, mb = self.unpack(b_bits)
+        sign = sa ^ sb
+        qnan = (self.exp_mask << f) | (1 << (f - 1))
+        inf = self.exp_mask << f
+        top_bit = self.total - 1
+        if ca == 'nan' or cb == 'nan':
+            return qnan
+        if (ca == 'inf' and cb == 'zero') or (ca == 'zero' and cb == 'inf'):
+            return qnan
+        if ca == 'inf' or cb == 'inf':
+            return (sign << top_bit) | inf
+        if ca == 'zero' or cb == 'zero':
+            return sign << top_bit
+        while ma < (1 << f):
+            ma <<= 1
+            ea -= 1
+        while mb < (1 << f):
+            mb <<= 1
+            eb -= 1
+        prod = ma * mb
+        top = prod.bit_length() - 1
+        exp = ea + eb + (top - 2 * f)
+        shift = top - f
+        if exp < self.emin:
+            shift += self.emin - exp
+            exp = self.emin
+        kept = prod >> shift
+        rem = prod & ((1 << shift) - 1) if shift > 0 else 0
+        half = 1 << (shift - 1) if shift > 0 else 0
+        inc = False
+        if rem:
+            if mode == 'rne':
+                inc = rem > half or (rem == half and kept & 1)
+            elif mode == 'rna':
+                inc = rem >= half
+            elif mode == 'rtz':
+                inc = False
+            elif mode == 'rup':
+                inc = sign == 0
+            elif mode == 'rdn':
+                inc = sign == 1
+        if inc:
+            kept += 1
+        if kept.bit_length() > f + 1:
+            kept >>= 1
+            exp += 1
+        if exp > self.emax:
+            to_inf = mode in ('rne', 'rna') or (mode == 'rup' and sign == 0) or (
+                mode == 'rdn' and sign == 1)
+            if to_inf:
+                return (sign << top_bit) | inf
+            return (sign << top_bit) | ((self.exp_mask - 1) << f) | ((1 << f) - 1)
+        if kept == 0:
+            return sign << top_bit
+        if kept < (1 << f):
+            return (sign << top_bit) | kept  # subnormal (exp == emin)
+        return (sign << top_bit) | ((exp + self.bias) << f) | (kept - (1 << f))
+
+    def rand_bits(self, rng):
+        f = self.frac_bits
+        kind = rng.randrange(8)
+        if kind == 0:
+            return rng.getrandbits(self.total)
+        if kind == 1:
+            return rng.getrandbits(f)  # subnormal
+        if kind == 2:  # near overflow
+            return ((self.exp_mask - 1 - rng.randrange(3)) << f) | rng.getrandbits(f)
+        if kind == 3:  # near underflow
+            return ((1 + rng.randrange(3)) << f) | rng.getrandbits(f)
+        if kind == 4:  # all-ones significand
+            return (rng.randrange(self.exp_mask) << f) | ((1 << f) - 1)
+        if kind == 5:  # power of two
+            return rng.randrange(self.exp_mask) << f
+        if kind == 6:  # sparse significand
+            return (rng.randrange(self.exp_mask) << f) | (1 << rng.randrange(f))
+        return rng.getrandbits(self.total) | (1 << (self.total - 1))  # negative
+
+
+MODES = ['rne', 'rna', 'rtz', 'rup', 'rdn']
+
+
+def exact_tie_case(fmt):
+    """Smallest normal pair whose product is an exact round-bit tie with an
+    *even* kept significand — the one case where NearestEven (stay) and
+    NearestAway (up) give different answers, so the all-modes vectors can
+    catch an RNA tie-handling regression."""
+    f = fmt.frac_bits
+    for sa in range(1 << f, (1 << (f + 1))):
+        a = (fmt.bias << f) | (sa - (1 << f))
+        for sb in range(1 << f, (1 << (f + 1))):
+            prod = sa * sb
+            top = prod.bit_length() - 1
+            shift = top - f
+            if shift <= 0:
+                continue
+            kept = prod >> shift
+            rem = prod & ((1 << shift) - 1)
+            if rem == 1 << (shift - 1) and kept % 2 == 0:
+                b = (fmt.bias << f) | (sb - (1 << f))
+                assert fmt.mul_mode(a, b, 'rne') != fmt.mul_mode(a, b, 'rna')
+                return (a, b)
+    raise AssertionError("no exact tie with even kept significand found")
+
+
+def emit(fmt, seed):
+    rng = random.Random(seed)
+    f = fmt.frac_bits
+    one = fmt.bias << f
+    max_finite = ((fmt.exp_mask - 1) << f) | ((1 << f) - 1)
+    directed = [
+        (one, one),
+        (one, 1),  # 1 * min_subnormal
+        ((1 << f) - 1, (1 << f) - 1),  # max subnormal^2 -> 0
+        (max_finite, max_finite),  # max_finite^2 -> overflow
+        ((fmt.bias - 1) << f, 1 << f),  # 0.5 * min_normal
+        (one | ((1 << f) - 1), one | ((1 << f) - 1)),  # (2-ulp)^2 round
+        exact_tie_case(fmt),  # RNE stays even, RNA rounds away
+    ]
+    cases = [(a, b, fmt.mul_mode(a, b, 'rne')) for a, b in directed]
+    while len(cases) < 64:
+        a, b = fmt.rand_bits(rng), fmt.rand_bits(rng)
+        cases.append((a, b, fmt.mul_mode(a, b, 'rne')))
+    tag = fmt.tag
+    print(f"pub const GOLDEN_{tag}_MUL_RNE: &[(u16, u16, u16)] = &[")
+    for a, b, r in cases:
+        print(f"    ({a:#06x}, {b:#06x}, {r:#06x}),")
+    print("];")
+    print()
+    # mode order matches RoundMode::ALL = [NearestEven, NearestAway,
+    # TowardZero, TowardPositive, TowardNegative]
+    print(f"pub const GOLDEN_{tag}_MUL_MODES: &[(u8, u16, u16, u16)] = &[")
+    for mi, mode in enumerate(MODES):
+        for a, b, _ in cases[:24]:
+            r = fmt.mul_mode(a, b, mode)
+            print(f"    ({mi}, {a:#06x}, {b:#06x}, {r:#06x}),")
+    print("];")
+
+
+def main():
+    print("// @generated by python/tools/gen_golden_smallfp.py — do not edit.")
+    emit(Fmt('FP16', exp_bits=5, frac_bits=10), seed=20260729)
+    print()
+    emit(Fmt('BF16', exp_bits=8, frac_bits=7), seed=20260730)
+
+
+if __name__ == "__main__":
+    main()

@@ -63,7 +63,9 @@ pub fn bench(
         let dt = t0.elapsed().as_nanos() as f64;
         per_sample.push(dt / iters_per_sample as f64);
     }
-    per_sample.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN sample (e.g. a zero-duration division artifact)
+    // must sort deterministically instead of panicking the harness.
+    per_sample.sort_by(f64::total_cmp);
     let m = Measurement {
         ns_per_op_p50: per_sample[per_sample.len() / 2],
         ns_per_op_mean: per_sample.iter().sum::<f64>() / per_sample.len() as f64,

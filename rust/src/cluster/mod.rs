@@ -25,9 +25,9 @@
 //! Degradation is first-class: faults injected through
 //! [`crate::fabric::repair`] reduce a shard's routing weight in proportion
 //! to the block capacity it lost; a shard whose pools no longer issue a
-//! quad in one wave drops out of the quad-affinity set; a precision whose
-//! block kinds are entirely gone has its servable bit cleared so only
-//! that traffic routes around the shard — the run-time-reconfigurable
+//! quad in one wave drops out of the quad-affinity set; a registry class
+//! whose block kinds are entirely gone has its servable bit cleared so
+//! only that traffic routes around the shard — the run-time-reconfigurable
 //! multiplier line of work (Arish & Sharma) routing around degraded IP
 //! cores.
 
@@ -45,8 +45,8 @@ use crate::config::ServiceConfig;
 use crate::coordinator::{
     BackendChoice, RecvError, ReplyHandle, Response, SubmitError, TryRecvError,
 };
-use crate::decomp::{BlockKind, Precision};
-use crate::fabric::OpClass;
+use crate::decomp::{BlockKind, OpClass};
+use crate::fabric::FabricOp;
 use crate::metrics::{Counter, Gauge, Registry, Snapshot};
 use crate::proput::Rng;
 use std::collections::BTreeMap;
@@ -60,8 +60,8 @@ pub enum ClusterSubmitError {
     /// cluster-wide backpressure. Transient: retrying can succeed once
     /// replies are consumed.
     Saturated,
-    /// No live shard can serve this precision at all (every shard is
-    /// drained or has lost the block kinds the precision needs). Not
+    /// No live shard can serve this op class at all (every shard is
+    /// drained or has lost the block kinds the class needs). Not
     /// backpressure — retrying cannot succeed until capacity is restored,
     /// so [`Cluster::submit`] returns this instead of spinning.
     Unservable,
@@ -74,7 +74,7 @@ impl core::fmt::Display for ClusterSubmitError {
         match self {
             ClusterSubmitError::Saturated => write!(f, "all shards saturated"),
             ClusterSubmitError::Unservable => {
-                write!(f, "no live shard can serve this precision")
+                write!(f, "no live shard can serve this op class")
             }
             ClusterSubmitError::Closed => write!(f, "cluster closed"),
         }
@@ -236,7 +236,7 @@ impl Cluster {
     pub fn try_submit(
         &self,
         id: u64,
-        precision: Precision,
+        class: OpClass,
         a: u128,
         b: u128,
     ) -> Result<ClusterReply, ClusterSubmitError> {
@@ -246,14 +246,14 @@ impl Cluster {
         // request that every shard refuses counts once as rejected, not
         // as a spill too).
         let mut spilled_from: Option<usize> = None;
-        while let Some(idx) = self.router.pick(precision, &self.states, tried) {
+        while let Some(idx) = self.router.pick(class, &self.states, tried) {
             tried |= 1u64 << idx;
             let state = &self.states[idx];
             if !state.try_acquire() {
                 spilled_from.get_or_insert(idx);
                 continue;
             }
-            match self.shards[idx].service().try_submit(id, precision, a, b) {
+            match self.shards[idx].service().try_submit(id, class, a, b) {
                 Ok(rx) => {
                     self.instruments[idx].accepted.inc();
                     if let Some(from) = spilled_from {
@@ -273,7 +273,7 @@ impl Cluster {
         }
         if tried == 0 {
             // The router had no candidate at all: nothing live can serve
-            // this precision — permanent until capacity is restored, so
+            // this class — permanent until capacity is restored, so
             // it must not read as retryable backpressure.
             self.unservable.inc();
             return Err(ClusterSubmitError::Unservable);
@@ -289,12 +289,12 @@ impl Cluster {
     pub fn submit(
         &self,
         id: u64,
-        precision: Precision,
+        class: OpClass,
         a: u128,
         b: u128,
     ) -> Result<ClusterReply, ClusterSubmitError> {
         loop {
-            match self.try_submit(id, precision, a, b) {
+            match self.try_submit(id, class, a, b) {
                 Err(ClusterSubmitError::Saturated) => {
                     std::thread::sleep(Duration::from_micros(20));
                 }
@@ -319,8 +319,8 @@ impl Cluster {
 
     /// Aggregated per-class op counts across all shards (the cluster-wide
     /// analogue of [`crate::coordinator::Service::op_counts`]).
-    pub fn op_counts(&self) -> BTreeMap<OpClass, u64> {
-        let mut out: BTreeMap<OpClass, u64> = BTreeMap::new();
+    pub fn op_counts(&self) -> BTreeMap<FabricOp, u64> {
+        let mut out: BTreeMap<FabricOp, u64> = BTreeMap::new();
         for shard in &self.shards {
             for (class, n) in shard.service().op_counts() {
                 *out.entry(class).or_insert(0) += n;

@@ -8,7 +8,7 @@
 //! the next one) allocation-free.
 
 use super::shard::ShardState;
-use crate::decomp::Precision;
+use crate::decomp::OpClass;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -70,33 +70,34 @@ impl Router {
         self.policy
     }
 
-    /// Pick the next candidate shard for `precision`, excluding the
+    /// Pick the next candidate shard for `class`, excluding the
     /// indices set in the `tried` bitmask. Returns `None` when no live
-    /// (weight > 0, precision-servable) untried shard remains. Lock-free
+    /// (weight > 0, class-servable) untried shard remains. Lock-free
     /// and allocation-free: a couple of passes over the state slice
     /// reading relaxed atomics.
     pub fn pick(
         &self,
-        precision: Precision,
+        class: OpClass,
         shards: &[Arc<ShardState>],
         tried: u64,
     ) -> Option<usize> {
         debug_assert!(shards.len() <= MAX_SHARDS);
         match self.policy {
-            RouterPolicy::RoundRobin => self.pick_weighted_rr(precision, shards, tried),
-            RouterPolicy::LeastLoaded => pick_least_loaded(precision, shards, tried, |_| true),
+            RouterPolicy::RoundRobin => self.pick_weighted_rr(class, shards, tried),
+            RouterPolicy::LeastLoaded => pick_least_loaded(class, shards, tried, |_| true),
             RouterPolicy::PrecisionAffinity => {
                 // Phase 1: the affine candidate set. Quads want one-wave
-                // shards; single/double keep those shards free while any
-                // other live capacity exists.
-                let affine: fn(&ShardState) -> bool = match precision {
-                    Precision::Quad => |s| s.quad_one_wave(),
+                // shards; every lighter class (sub-single through double)
+                // keeps those shards free while any other live capacity
+                // exists.
+                let affine: fn(&ShardState) -> bool = match class {
+                    OpClass::Quad => |s| s.quad_one_wave(),
                     _ => |s| !s.quad_one_wave(),
                 };
-                pick_least_loaded(precision, shards, tried, affine)
+                pick_least_loaded(class, shards, tried, affine)
                     // Phase 2: any live shard (affinity is a preference,
                     // not a partition — capacity beats placement).
-                    .or_else(|| pick_least_loaded(precision, shards, tried, |_| true))
+                    .or_else(|| pick_least_loaded(class, shards, tried, |_| true))
             }
         }
     }
@@ -105,12 +106,12 @@ impl Router {
     /// cumulative weight distribution of the live candidates.
     fn pick_weighted_rr(
         &self,
-        precision: Precision,
+        class: OpClass,
         shards: &[Arc<ShardState>],
         tried: u64,
     ) -> Option<usize> {
         let live = |i: usize, s: &ShardState| {
-            tried & (1u64 << i) == 0 && s.weight() > 0 && s.servable(precision)
+            tried & (1u64 << i) == 0 && s.weight() > 0 && s.servable(class)
         };
         let total: u64 =
             shards.iter().enumerate().filter(|(i, s)| live(*i, s)).map(|(_, s)| s.weight()).sum();
@@ -135,17 +136,17 @@ impl Router {
 }
 
 /// Argmin of in-flight-per-weight-credit over the eligible live shards
-/// that can still serve `precision`; ties break toward the lower absolute
+/// that can still serve `class`; ties break toward the lower absolute
 /// in-flight count, then the lower index (deterministic).
 fn pick_least_loaded(
-    precision: Precision,
+    class: OpClass,
     shards: &[Arc<ShardState>],
     tried: u64,
     eligible: impl Fn(&ShardState) -> bool,
 ) -> Option<usize> {
     let mut best: Option<(u128, u64, usize)> = None;
     for (i, s) in shards.iter().enumerate() {
-        if tried & (1u64 << i) != 0 || !eligible(s) || !s.servable(precision) {
+        if tried & (1u64 << i) != 0 || !eligible(s) || !s.servable(class) {
             continue;
         }
         let w = s.weight();

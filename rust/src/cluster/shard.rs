@@ -10,7 +10,7 @@
 
 use crate::config::ServiceConfig;
 use crate::coordinator::{BackendChoice, Service, ServiceReport};
-use crate::decomp::{BlockKind, Precision, Scheme, SchemeKind};
+use crate::decomp::{BlockKind, OpClass, Scheme, SchemeKind};
 use crate::fabric::{
     schedule_op, simulate_counts, CostModel, FabricConfig, FabricKind, FaultOutcome,
     RepairableFabric, StreamReport,
@@ -23,14 +23,15 @@ use std::sync::Arc;
 /// shard's weight down proportionally to the block capacity it has lost.
 pub const FULL_WEIGHT: u64 = 16;
 
+/// One servability bit per registry class (the mask fits a `u8` as long as
+/// the registry stays ≤ 8 classes — asserted in the fpu registry tests).
 #[inline]
-fn prec_bit(p: Precision) -> u8 {
-    match p {
-        Precision::Single => 1 << 0,
-        Precision::Double => 1 << 1,
-        Precision::Quad => 1 << 2,
-    }
+fn class_bit(c: OpClass) -> u8 {
+    1 << c.index()
 }
+
+/// All-classes-servable mask for a healthy shard.
+const ALL_SERVABLE: u8 = (1 << OpClass::COUNT) - 1;
 
 /// Routing-visible state of one shard. Every field the router reads is an
 /// atomic, so shard selection takes no lock; degradation events (rare,
@@ -45,10 +46,12 @@ pub struct ShardState {
     /// Routing weight in credits ([`FULL_WEIGHT`] = healthy, `0` =
     /// drained — the router never selects a zero-weight shard).
     weight: AtomicU64,
-    /// Per-precision servability bits (one per [`Precision`], all set on
-    /// a healthy shard): degradation that kills every block of a kind
-    /// steers only the precisions that *need* that kind away, so a shard
-    /// that lost its 9x9 pool keeps serving single-precision traffic.
+    /// Per-class servability bits (one per [`OpClass`] registry entry, all
+    /// set on a healthy shard): degradation that kills every block of a
+    /// kind steers only the classes that *need* that kind away, so a shard
+    /// that lost its 9x9 pool keeps serving single-precision (pure 24x24)
+    /// and binary16 (pure 24x9) traffic while bf16/double/quad route
+    /// around it.
     servable: AtomicU8,
     /// True while the shard's (possibly degraded) block pools still issue
     /// one quadruple-precision multiplication per wave — the
@@ -64,7 +67,7 @@ impl ShardState {
             max_inflight,
             inflight: AtomicU64::new(0),
             weight: AtomicU64::new(FULL_WEIGHT),
-            servable: AtomicU8::new(0b111),
+            servable: AtomicU8::new(ALL_SERVABLE),
             quad_one_wave: AtomicBool::new(true),
         }
     }
@@ -105,9 +108,9 @@ impl ShardState {
         self.quad_one_wave.load(Ordering::Relaxed)
     }
 
-    /// Whether this shard's block pools can still schedule `precision`.
-    pub fn servable(&self, precision: Precision) -> bool {
-        self.servable.load(Ordering::Relaxed) & prec_bit(precision) != 0
+    /// Whether this shard's block pools can still schedule `class`.
+    pub fn servable(&self, class: OpClass) -> bool {
+        self.servable.load(Ordering::Relaxed) & class_bit(class) != 0
     }
 
     /// Set the routing weight (degradation control plane).
@@ -115,12 +118,12 @@ impl ShardState {
         self.weight.store(w, Ordering::Relaxed);
     }
 
-    /// Set one precision's servability bit.
-    pub fn set_servable(&self, precision: Precision, v: bool) {
+    /// Set one class's servability bit.
+    pub fn set_servable(&self, class: OpClass, v: bool) {
         if v {
-            self.servable.fetch_or(prec_bit(precision), Ordering::Relaxed);
+            self.servable.fetch_or(class_bit(class), Ordering::Relaxed);
         } else {
-            self.servable.fetch_and(!prec_bit(precision), Ordering::Relaxed);
+            self.servable.fetch_and(!class_bit(class), Ordering::Relaxed);
         }
     }
 
@@ -224,21 +227,22 @@ impl Shard {
         out
     }
 
-    /// Recompute `weight` / per-precision servability / `quad_one_wave`
-    /// from the fabric's condition. A precision whose block kinds are all
-    /// gone is steered away individually (its servable bit clears); the
-    /// whole shard drains to weight 0 only when *no* precision remains
-    /// servable.
+    /// Recompute `weight` / per-class servability / `quad_one_wave` from
+    /// the fabric's condition. A class whose block kinds are all gone is
+    /// steered away individually (its servable bit clears — e.g. a dead
+    /// 9x9 pool under CIVP clears bf16/double/quad but keeps single and
+    /// binary16 servable); the whole shard drains to weight 0 only when
+    /// *no* registry class remains servable.
     pub fn refresh_routing(&mut self) {
         let effective = self.fabric.effective_config();
         let mut any = false;
         let mut quad_servable = false;
-        for prec in Precision::ALL {
-            let scheme = Scheme::new(self.scheme, prec);
+        for class in OpClass::ALL {
+            let scheme = Scheme::new(self.scheme, class);
             let ok = effective.can_serve(scheme.tiles().iter().map(|t| t.kind));
-            self.state.set_servable(prec, ok);
+            self.state.set_servable(class, ok);
             any |= ok;
-            if prec == Precision::Quad {
+            if class == OpClass::Quad {
                 quad_servable = ok;
             }
         }
@@ -250,7 +254,7 @@ impl Shard {
         let weight = ((self.fabric.health() * FULL_WEIGHT as f64).round() as u64).max(1);
         self.state.set_weight(weight);
         let one_wave = quad_servable && {
-            let quad = Scheme::new(self.scheme, Precision::Quad);
+            let quad = Scheme::new(self.scheme, OpClass::Quad);
             schedule_op(&quad, &effective, &self.cost).initiation_interval == 1
         };
         self.state.set_quad_one_wave(one_wave);

@@ -5,16 +5,13 @@
 use super::*;
 use crate::config::ServiceConfig;
 use crate::coordinator::BackendChoice;
-use crate::decomp::{BlockKind, Precision, SchemeKind};
+use crate::decomp::{BlockKind, OpClass, SchemeKind};
 use crate::proput::{forall, Rng};
 use std::sync::Arc;
 
-fn one_bits(p: Precision) -> u128 {
-    match p {
-        Precision::Single => 0x3F80_0000u128,
-        Precision::Double => 0x3FF0_0000_0000_0000u128,
-        Precision::Quad => 0x3FFFu128 << 112,
-    }
+fn one_bits(class: OpClass) -> u128 {
+    // 1.0 in the class's packed bits, derived from the registry format.
+    class.format().one()
 }
 
 fn small_cfg() -> ClusterConfig {
@@ -55,7 +52,7 @@ fn round_robin_distributes_exactly_by_weight() {
     let router = Router::new(RouterPolicy::RoundRobin);
     let mut hits = [0u64; 2];
     for _ in 0..2400 {
-        hits[router.pick(Precision::Double, &s, 0).unwrap()] += 1;
+        hits[router.pick(OpClass::Double, &s, 0).unwrap()] += 1;
     }
     // ticket space cycles through 24 credits: 8 then 16, exactly.
     assert_eq!(hits, [800, 1600]);
@@ -67,7 +64,7 @@ fn least_loaded_balances_alternately() {
     let router = Router::new(RouterPolicy::LeastLoaded);
     let mut hits = [0u64; 2];
     for _ in 0..10 {
-        let idx = router.pick(Precision::Single, &s, 0).unwrap();
+        let idx = router.pick(OpClass::Single, &s, 0).unwrap();
         assert!(s[idx].try_acquire());
         hits[idx] += 1;
     }
@@ -87,7 +84,7 @@ fn least_loaded_weighs_load_per_credit() {
         assert!(s[1].try_acquire());
     }
     let router = Router::new(RouterPolicy::LeastLoaded);
-    assert_eq!(router.pick(Precision::Double, &s, 0), Some(0));
+    assert_eq!(router.pick(OpClass::Double, &s, 0), Some(0));
 }
 
 #[test]
@@ -97,13 +94,13 @@ fn affinity_pins_quads_and_reserves_quad_columns() {
     s[1].set_quad_one_wave(false);
     let router = Router::new(RouterPolicy::PrecisionAffinity);
     // Quads go to the one-wave shard; single/double keep it free.
-    assert_eq!(router.pick(Precision::Quad, &s, 0), Some(0));
-    assert_eq!(router.pick(Precision::Single, &s, 0), Some(1));
-    assert_eq!(router.pick(Precision::Double, &s, 0), Some(1));
+    assert_eq!(router.pick(OpClass::Quad, &s, 0), Some(0));
+    assert_eq!(router.pick(OpClass::Single, &s, 0), Some(1));
+    assert_eq!(router.pick(OpClass::Double, &s, 0), Some(1));
     // Spill-over: once the affine shard has been tried, fall back to the
     // other (capacity beats placement).
-    assert_eq!(router.pick(Precision::Quad, &s, 1 << 0), Some(1));
-    assert_eq!(router.pick(Precision::Single, &s, 1 << 1), Some(0));
+    assert_eq!(router.pick(OpClass::Quad, &s, 1 << 0), Some(1));
+    assert_eq!(router.pick(OpClass::Single, &s, 1 << 1), Some(0));
 }
 
 #[test]
@@ -113,13 +110,13 @@ fn router_skips_drained_shards_every_policy() {
         s[1].set_weight(0);
         let router = Router::new(policy);
         for _ in 0..50 {
-            let idx = router.pick(Precision::Double, &s, 0).unwrap();
+            let idx = router.pick(OpClass::Double, &s, 0).unwrap();
             assert_ne!(idx, 1, "{policy:?} picked a drained shard");
         }
         // All drained: nothing to pick.
         s[0].set_weight(0);
         s[2].set_weight(0);
-        assert_eq!(router.pick(Precision::Double, &s, 0), None, "{policy:?}");
+        assert_eq!(router.pick(OpClass::Double, &s, 0), None, "{policy:?}");
     }
 }
 
@@ -137,8 +134,8 @@ fn admission_respects_bounds_and_accounts_exactly() {
             for st in &s {
                 st.set_weight(rng.below(3) * 8); // 0, 8 or 16 credits
                 st.set_quad_one_wave(rng.chance(0.7));
-                for prec in Precision::ALL {
-                    st.set_servable(prec, rng.chance(0.8));
+                for class in OpClass::ALL {
+                    st.set_servable(class, rng.chance(0.8));
                 }
             }
             let router = Router::new(policy);
@@ -146,17 +143,13 @@ fn admission_respects_bounds_and_accounts_exactly() {
             let (mut accepted, mut rejected) = (0u64, 0u64);
             let submitted = 200u64;
             for _ in 0..submitted {
-                let precision = match rng.below(3) {
-                    0 => Precision::Single,
-                    1 => Precision::Double,
-                    _ => Precision::Quad,
-                };
+                let class = OpClass::from_index(rng.below(OpClass::COUNT as u64) as usize);
                 let mut tried = 0u64;
                 let mut placed = None;
-                while let Some(idx) = router.pick(precision, &s, tried) {
+                while let Some(idx) = router.pick(class, &s, tried) {
                     assert_eq!(tried & (1 << idx), 0, "router repeated a tried shard");
                     assert!(s[idx].weight() > 0, "router picked a drained shard");
-                    assert!(s[idx].servable(precision), "router picked an unservable shard");
+                    assert!(s[idx].servable(class), "router picked an unservable shard");
                     tried |= 1 << idx;
                     if s[idx].try_acquire() {
                         placed = Some(idx);
@@ -193,9 +186,9 @@ fn admission_respects_bounds_and_accounts_exactly() {
 #[test]
 fn cluster_multiplies_correctly_and_releases_slots() {
     let cluster = native(&small_cfg());
-    let one = one_bits(Precision::Double);
+    let one = one_bits(OpClass::Double);
     for i in 0..20u64 {
-        let rx = cluster.try_submit(i, Precision::Double, one, one).expect("capacity available");
+        let rx = cluster.try_submit(i, OpClass::Double, one, one).expect("capacity available");
         assert_eq!(rx.recv().unwrap().bits, one);
         drop(rx);
     }
@@ -215,13 +208,19 @@ fn total_ops_across_shards_equals_submitted_every_policy() {
     for policy in RouterPolicy::ALL {
         let cfg = ClusterConfig { shards: 3, policy, ..small_cfg() };
         let cluster = native(&cfg);
-        let plan = [(Precision::Single, 300u64), (Precision::Double, 200), (Precision::Quad, 100)];
+        let plan = [
+            (OpClass::Bf16, 150u64),
+            (OpClass::Half, 150),
+            (OpClass::Single, 300),
+            (OpClass::Double, 200),
+            (OpClass::Quad, 100),
+        ];
         let mut pending = Vec::new();
-        for &(precision, n) in &plan {
+        for &(class, n) in &plan {
             for i in 0..n {
                 pending.push(
                     cluster
-                        .submit(i, precision, one_bits(precision), one_bits(precision))
+                        .submit(i, class, one_bits(class), one_bits(class))
                         .expect("cluster open"),
                 );
                 if pending.len() >= 256 {
@@ -235,13 +234,13 @@ fn total_ops_across_shards_equals_submitted_every_policy() {
             rx.recv().unwrap();
         }
         let counts = cluster.op_counts();
-        for &(precision, n) in &plan {
-            let class = crate::fabric::OpClass { precision, organization: SchemeKind::Civp };
-            assert_eq!(counts.get(&class), Some(&n), "{policy:?} lost ops of {precision:?}");
+        for &(class, n) in &plan {
+            let op = crate::fabric::FabricOp { class, organization: SchemeKind::Civp };
+            assert_eq!(counts.get(&op), Some(&n), "{policy:?} lost ops of {class:?}");
         }
         let report = cluster.shutdown();
-        assert_eq!(report.total_ops, 600, "{policy:?}");
-        assert_eq!(report.accepted, 600, "{policy:?}");
+        assert_eq!(report.total_ops, 900, "{policy:?}");
+        assert_eq!(report.accepted, 900, "{policy:?}");
         assert_eq!(report.rejected_saturated, 0, "{policy:?}");
     }
 }
@@ -266,9 +265,9 @@ fn inflight_bound_is_hard_under_flood() {
     let cluster = native(&cfg);
     let mut held = Vec::new();
     let mut rejected = 0u64;
-    let one = one_bits(Precision::Double);
+    let one = one_bits(OpClass::Double);
     for i in 0..500u64 {
-        match cluster.try_submit(i, Precision::Double, one, one) {
+        match cluster.try_submit(i, OpClass::Double, one, one) {
             Ok(rx) => held.push(rx),
             Err(ClusterSubmitError::Saturated) => rejected += 1,
             Err(e) => panic!("unexpected {e:?}"),
@@ -306,22 +305,19 @@ fn degraded_shard_loses_quad_affinity_and_traffic() {
     // Quad traffic now pins to shard 1; single traffic prefers shard 0.
     for i in 0..40u64 {
         let rx = cluster
-            .submit(i, Precision::Quad, one_bits(Precision::Quad), one_bits(Precision::Quad))
+            .submit(i, OpClass::Quad, one_bits(OpClass::Quad), one_bits(OpClass::Quad))
             .unwrap();
         assert_eq!(rx.shard(), 1);
         rx.recv().unwrap();
     }
     for i in 0..40u64 {
         let rx = cluster
-            .submit(i, Precision::Single, one_bits(Precision::Single), one_bits(Precision::Single))
+            .submit(i, OpClass::Single, one_bits(OpClass::Single), one_bits(OpClass::Single))
             .unwrap();
         assert_eq!(rx.shard(), 0);
         rx.recv().unwrap();
     }
-    let quad = crate::fabric::OpClass {
-        precision: Precision::Quad,
-        organization: SchemeKind::Civp,
-    };
+    let quad = crate::fabric::FabricOp { class: OpClass::Quad, organization: SchemeKind::Civp };
     assert_eq!(cluster.shard(0).service().op_counts().get(&quad), None);
     assert_eq!(cluster.shard(1).service().op_counts().get(&quad), Some(&40));
     let report = cluster.shutdown();
@@ -335,37 +331,48 @@ fn partial_unservability_steers_per_precision_then_drains() {
     let mut cluster = native(&small_cfg());
     // Execute a few quads first so shard 0 has history in its counters.
     for i in 0..10u64 {
-        let one = one_bits(Precision::Quad);
-        cluster.submit(i, Precision::Quad, one, one).unwrap().recv().unwrap();
+        let one = one_bits(OpClass::Quad);
+        cluster.submit(i, OpClass::Quad, one, one).unwrap().recv().unwrap();
     }
-    // Kill all four 9x9 blocks on shard 0: CIVP double/quad lose a block
-    // kind there — but single-precision (pure 24x24) must keep serving.
+    // Kill all four 9x9 blocks on shard 0: CIVP bf16/double/quad lose a
+    // block kind there — but single (pure 24x24) and binary16 (pure 24x9)
+    // must keep serving.
     let mut rng = Rng::new(7);
     let out = cluster.degrade_shard(0, BlockKind::M9x9, 4, &mut rng);
     assert_eq!(out.lost, 4);
     let s0 = &cluster.states()[0];
-    assert!(s0.weight() > 0, "single-precision capacity remains — not drained");
-    assert!(s0.servable(Precision::Single));
-    assert!(!s0.servable(Precision::Double));
-    assert!(!s0.servable(Precision::Quad));
+    assert!(s0.weight() > 0, "single/half capacity remains — not drained");
+    assert!(s0.servable(OpClass::Single));
+    assert!(s0.servable(OpClass::Half), "binary16 needs only the live 24x9 pool");
+    assert!(!s0.servable(OpClass::Bf16), "bf16 needs the dead 9x9 pool");
+    assert!(!s0.servable(OpClass::Double));
+    assert!(!s0.servable(OpClass::Quad));
     assert!(!s0.quad_one_wave());
     // Doubles route around shard 0; singles still reach it (least-loaded
     // tie breaks toward the lower index).
-    let one_d = one_bits(Precision::Double);
+    let one_d = one_bits(OpClass::Double);
     for i in 0..30u64 {
-        let rx = cluster.submit(i, Precision::Double, one_d, one_d).unwrap();
+        let rx = cluster.submit(i, OpClass::Double, one_d, one_d).unwrap();
         assert_eq!(rx.shard(), 1);
         rx.recv().unwrap();
     }
-    let one_s = one_bits(Precision::Single);
-    let rx = cluster.submit(40, Precision::Single, one_s, one_s).unwrap();
+    let one_s = one_bits(OpClass::Single);
+    let rx = cluster.submit(40, OpClass::Single, one_s, one_s).unwrap();
     assert_eq!(rx.shard(), 0);
     rx.recv().unwrap();
-    // Now kill the whole 24x24 pool too: nothing is servable -> drained.
+    // Kill the 24x24 pool too: binary16 (24x9-only) still holds the shard
+    // above weight 0 — the open registry makes "fully drained" strictly
+    // harder to reach than in the 3-class world.
     let out = cluster.degrade_shard(0, BlockKind::M24x24, 16, &mut rng);
     assert_eq!(out.lost, 16);
+    assert!(cluster.states()[0].weight() > 0, "half still servable via 24x9");
+    assert!(cluster.states()[0].servable(OpClass::Half));
+    assert!(!cluster.states()[0].servable(OpClass::Single));
+    // Only killing the 24x9 pool as well drains the shard completely.
+    let out = cluster.degrade_shard(0, BlockKind::M24x9, 16, &mut rng);
+    assert_eq!(out.lost, 16);
     assert_eq!(cluster.states()[0].weight(), 0);
-    let rx = cluster.submit(41, Precision::Single, one_s, one_s).unwrap();
+    let rx = cluster.submit(41, OpClass::Single, one_s, one_s).unwrap();
     assert_eq!(rx.shard(), 1);
     rx.recv().unwrap();
     // The report still accounts shard 0's pre-degradation ops (pristine-
@@ -379,19 +386,25 @@ fn partial_unservability_steers_per_precision_then_drains() {
 
 #[test]
 fn fully_drained_cluster_reports_unservable_not_saturated() {
-    // One shard, zero spares: 16 faults kill the whole 24x24 pool and
-    // nothing remains servable. Submitting must fail fast with
-    // `Unservable` (a retry loop on Saturated would spin forever).
+    // One shard, zero spares: killing every pool (24x24, 24x9 and 9x9 —
+    // the registry's sub-single classes hold the shard up until the small
+    // pools die too) leaves nothing servable. Submitting must fail fast
+    // with `Unservable` (a retry loop on Saturated would spin forever).
     let cfg = ClusterConfig { shards: 1, ..small_cfg() };
     let mut cluster = native(&cfg);
     let mut rng = Rng::new(5);
     let out = cluster.degrade_shard(0, BlockKind::M24x24, 16, &mut rng);
     assert_eq!(out.lost, 16);
+    assert!(cluster.states()[0].weight() > 0, "sub-single classes still servable");
+    let out = cluster.degrade_shard(0, BlockKind::M24x9, 16, &mut rng);
+    assert_eq!(out.lost, 16);
+    let out = cluster.degrade_shard(0, BlockKind::M9x9, 4, &mut rng);
+    assert_eq!(out.lost, 4);
     assert_eq!(cluster.states()[0].weight(), 0);
-    let one = one_bits(Precision::Single);
-    let err = cluster.try_submit(0, Precision::Single, one, one).unwrap_err();
+    let one = one_bits(OpClass::Single);
+    let err = cluster.try_submit(0, OpClass::Single, one, one).unwrap_err();
     assert_eq!(err, ClusterSubmitError::Unservable);
-    let err = cluster.submit(1, Precision::Quad, one, one).unwrap_err();
+    let err = cluster.submit(1, OpClass::Quad, one, one).unwrap_err();
     assert_eq!(err, ClusterSubmitError::Unservable, "blocking submit must not spin");
     let snap = cluster.metrics();
     assert_eq!(snap.counters["rejected_unservable"], 2);
@@ -402,10 +415,10 @@ fn fully_drained_cluster_reports_unservable_not_saturated() {
 #[test]
 fn report_aggregates_sums_and_makespan() {
     let cluster = native(&ClusterConfig { policy: RouterPolicy::RoundRobin, ..small_cfg() });
-    let one = one_bits(Precision::Double);
+    let one = one_bits(OpClass::Double);
     let mut pending = Vec::new();
     for i in 0..200u64 {
-        pending.push(cluster.submit(i, Precision::Double, one, one).unwrap());
+        pending.push(cluster.submit(i, OpClass::Double, one, one).unwrap());
     }
     for rx in pending {
         rx.recv().unwrap();
@@ -429,10 +442,10 @@ fn report_aggregates_sums_and_makespan() {
 #[test]
 fn shutdown_drains_inflight_ops_into_the_report() {
     let cluster = native(&small_cfg());
-    let one = one_bits(Precision::Single);
+    let one = one_bits(OpClass::Single);
     let mut pending = Vec::new();
     for i in 0..300u64 {
-        pending.push(cluster.submit(i, Precision::Single, one, one).unwrap());
+        pending.push(cluster.submit(i, OpClass::Single, one, one).unwrap());
     }
     // Shut down with replies still un-received: drain must execute and
     // account every accepted op before the final report is built.

@@ -1,9 +1,9 @@
 //! Typed service configuration with defaults, file loading and validation.
 
 use super::toml::{parse_toml, TomlValue};
-use crate::decomp::SchemeKind;
+use crate::decomp::{OpClass, SchemeKind};
 use crate::fabric::FabricKind;
-use crate::trace::WorkloadSpec;
+use crate::trace::{WorkloadMix, WorkloadSpec};
 use crate::error::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -30,6 +30,10 @@ pub struct ServiceConfig {
     pub fabric_scale: u32,
     /// Workload for built-in generators.
     pub workload: WorkloadSpec,
+    /// Explicit per-class weight overrides (`workload.mix_<class>` TOML
+    /// keys or the CLI `--mix` option). When any weight is set the custom
+    /// mix replaces the named spec's distribution.
+    pub custom_mix: Option<WorkloadMix>,
     /// Number of requests for batch/bench runs.
     pub requests: usize,
     /// PRNG seed.
@@ -50,6 +54,7 @@ impl Default for ServiceConfig {
             fabric: FabricKind::Civp,
             fabric_scale: 1,
             workload: WorkloadSpec::Graphics,
+            custom_mix: None,
             requests: 10_000,
             seed: 20260710,
             use_pjrt: true,
@@ -72,6 +77,23 @@ impl ServiceConfig {
         cfg.apply(&kv)?;
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The effective op-class mix: the custom per-class weights when any
+    /// were configured, otherwise the named spec's distribution.
+    pub fn mix(&self) -> WorkloadMix {
+        self.custom_mix.unwrap_or_else(|| self.workload.mix())
+    }
+
+    /// Set one class's custom-mix weight (lazily initializing the custom
+    /// mix to all-zero so only explicitly listed classes carry mass).
+    pub fn set_mix_weight(&mut self, class: OpClass, weight: f64) -> Result<()> {
+        if !weight.is_finite() || weight < 0.0 {
+            bail!("mix weight for {} must be a finite non-negative number", class.name());
+        }
+        let mix = self.custom_mix.get_or_insert(WorkloadMix::ZERO);
+        mix.weights[class.index()] = weight;
+        Ok(())
     }
 
     fn apply(&mut self, kv: &BTreeMap<String, TomlValue>) -> Result<()> {
@@ -112,7 +134,21 @@ impl ServiceConfig {
                 }
                 "workload.requests" => self.requests = req_usize(key, value)?,
                 "workload.seed" => self.seed = req_usize(key, value)? as u64,
-                other => bail!("unknown config key {other:?}"),
+                other => {
+                    // `workload.mix_<class>` — one optional weight per
+                    // registry class; the accepted key set grows with the
+                    // registry automatically.
+                    if let Some(class) =
+                        other.strip_prefix("workload.mix_").and_then(OpClass::parse)
+                    {
+                        let w = value
+                            .as_float()
+                            .with_context(|| format!("{key} must be a number"))?;
+                        self.set_mix_weight(class, w)?;
+                    } else {
+                        bail!("unknown config key {other:?}");
+                    }
+                }
             }
         }
         Ok(())
@@ -135,6 +171,13 @@ impl ServiceConfig {
         }
         if self.fabric_scale == 0 {
             bail!("fabric.scale must be >= 1");
+        }
+        // Weights are individually finite and non-negative (enforced in
+        // `set_mix_weight`), so a zero-or-less total means no mass at all.
+        if let Some(mix) = &self.custom_mix {
+            if mix.total() <= 0.0 {
+                bail!("workload.mix_* weights must carry positive total mass");
+            }
         }
         // scheme/fabric compatibility mirrors `FabricConfig::can_serve`:
         // CIVP tiles need 24x24/24x9 blocks (CIVP fabric only); 18x18 and

@@ -106,6 +106,30 @@ seed = 99
 #[test]
 fn config_rejects_unknown_key() {
     assert!(ServiceConfig::from_toml("[service]\nbogus = 1\n").is_err());
+    assert!(ServiceConfig::from_toml("[workload]\nmix_float8 = 0.5\n").is_err());
+}
+
+#[test]
+fn config_custom_mix_over_registry_classes() {
+    use crate::decomp::OpClass;
+    let cfg = ServiceConfig::from_toml(
+        "[workload]\nspec = \"graphics\"\nmix_half = 0.25\nmix_bf16 = 0.5\nmix_single = 0.25\n",
+    )
+    .unwrap();
+    let mix = cfg.mix();
+    assert_eq!(mix.weight(OpClass::Bf16), 0.5);
+    assert_eq!(mix.weight(OpClass::Half), 0.25);
+    assert_eq!(mix.weight(OpClass::Single), 0.25);
+    // Custom weights replace the named spec entirely: unlisted classes
+    // carry zero mass.
+    assert_eq!(mix.weight(OpClass::Double), 0.0);
+    assert_eq!(mix.weight(OpClass::Quad), 0.0);
+    // Without mix_* keys, the named spec's distribution applies.
+    let spec_only = ServiceConfig::from_toml("[workload]\nspec = \"ml\"\n").unwrap();
+    assert_eq!(spec_only.mix(), WorkloadSpec::MlInference.mix());
+    // All-zero custom mass is rejected.
+    assert!(ServiceConfig::from_toml("[workload]\nmix_half = 0.0\n").is_err());
+    assert!(ServiceConfig::from_toml("[workload]\nmix_half = -1.0\n").is_err());
 }
 
 #[test]

@@ -1,12 +1,12 @@
 //! Execution backends: native softfloat (+CIVP decomposition accounting)
 //! and the AOT PJRT engine.
 
-use crate::decomp::{DecompMul, ExecStats, Precision, SchemeKind};
+use crate::decomp::{DecompMul, ExecStats, OpClass, SchemeKind};
 use crate::error::{ensure, Result};
-use crate::fpu::{FpuBatch, RoundMode, DOUBLE, QUAD, SINGLE};
+use crate::fpu::{FpuBatch, RoundMode};
 use crate::runtime::EngineHandle;
 
-/// A batch executor for one precision class.
+/// A batch executor for one op class.
 ///
 /// `execute` writes into a caller-owned output vector so the worker pool
 /// can reuse one scratch allocation across batches — together with the
@@ -15,10 +15,10 @@ use crate::runtime::EngineHandle;
 pub trait Backend: Send {
     /// Multiply packed bit patterns elementwise. `a` and `b` must have
     /// equal length; `out` is cleared and filled with packed patterns of
-    /// the same precision (one per input pair).
+    /// the same class (one per input pair).
     fn execute(
         &mut self,
-        precision: Precision,
+        class: OpClass,
         a: &[u128],
         b: &[u128],
         out: &mut Vec<u128>,
@@ -71,20 +71,18 @@ impl NativeBackend {
 
     /// Multiply one batch, appending packed products to `out` (cleared
     /// first). Exposed for direct (service-less) batch callers and benches.
+    /// The format descriptor comes straight off the [`OpClass`] registry,
+    /// so every served class — sub-single formats included — runs the same
+    /// lane-fused pipeline.
     pub fn mul_batch(
         &mut self,
-        precision: Precision,
+        class: OpClass,
         a: &[u128],
         b: &[u128],
         out: &mut Vec<u128>,
     ) -> Result<()> {
         ensure!(a.len() == b.len(), "operand length mismatch");
-        let fmt = match precision {
-            Precision::Single => &SINGLE,
-            Precision::Double => &DOUBLE,
-            Precision::Quad => &QUAD,
-        };
-        self.fpu.mul_batch_bits(fmt, a, b, RoundMode::NearestEven, out);
+        self.fpu.mul_batch_bits(class.format(), a, b, RoundMode::NearestEven, out);
         Ok(())
     }
 }
@@ -92,12 +90,12 @@ impl NativeBackend {
 impl Backend for NativeBackend {
     fn execute(
         &mut self,
-        precision: Precision,
+        class: OpClass,
         a: &[u128],
         b: &[u128],
         out: &mut Vec<u128>,
     ) -> Result<()> {
-        self.mul_batch(precision, a, b, out)
+        self.mul_batch(class, a, b, out)
     }
 
     fn name(&self) -> &'static str {
@@ -110,31 +108,43 @@ impl Backend for NativeBackend {
 }
 
 /// PJRT backend: batches go through the compiled HLO artifacts on the
-/// pinned executor thread.
+/// pinned executor thread. The artifacts cover the paper's three classes
+/// (single/double/quad); sub-single batches fall back to the embedded
+/// native lane-fused pipeline, so a PJRT service still serves the whole
+/// registry.
 pub struct PjrtBackend {
     handle: EngineHandle,
+    /// Native fallback for classes without a compiled artifact.
+    native: NativeBackend,
 }
 
 impl PjrtBackend {
     /// New backend sharing a loaded engine.
     pub fn new(handle: EngineHandle) -> PjrtBackend {
-        PjrtBackend { handle }
+        PjrtBackend { handle, native: NativeBackend::new(SchemeKind::Civp) }
     }
 }
 
 impl Backend for PjrtBackend {
     fn execute(
         &mut self,
-        precision: Precision,
+        class: OpClass,
         a: &[u128],
         b: &[u128],
         out: &mut Vec<u128>,
     ) -> Result<()> {
         ensure!(a.len() == b.len(), "operand length mismatch");
-        let bits = self.handle.mul(precision, a.to_vec(), b.to_vec())?;
-        out.clear();
-        out.extend(bits);
-        Ok(())
+        match class {
+            // No fp16/bf16 artifacts exist yet: serve these natively
+            // instead of erroring the batch (and dropping its replies).
+            OpClass::Bf16 | OpClass::Half => self.native.execute(class, a, b, out),
+            _ => {
+                let bits = self.handle.mul(class, a.to_vec(), b.to_vec())?;
+                out.clear();
+                out.extend(bits);
+                Ok(())
+            }
+        }
     }
 
     fn name(&self) -> &'static str {

@@ -1,16 +1,16 @@
 //! Request/response types for the multiplication service.
 
-use crate::decomp::Precision;
+use crate::decomp::OpClass;
 use std::time::Instant;
 
-/// A multiplication request. Operand bits are packed IEEE patterns of the
-/// request's precision, carried in the low bits of a `u128`.
+/// A multiplication request. Operand bits are packed interchange patterns
+/// of the request's op class, carried in the low bits of a `u128`.
 #[derive(Clone, Copy, Debug)]
 pub struct Request {
     /// Client-assigned id, echoed in the response.
     pub id: u64,
-    /// IEEE precision of the operands and result.
-    pub precision: Precision,
+    /// Operation class of the operands and result.
+    pub class: OpClass,
     /// Packed operand A.
     pub a: u128,
     /// Packed operand B.

@@ -1,4 +1,4 @@
-//! The service: router → per-precision batchers → worker pool → backend,
+//! The service: router → per-class batchers → worker pool → backend,
 //! with fabric accounting and telemetry.
 
 use super::backend::BackendChoice;
@@ -6,8 +6,8 @@ use super::batcher::{Batcher, SubmitError};
 use super::oneshot::{ReplyHandle, ReplyPool, ReplySender};
 use super::request::{Request, Response};
 use crate::config::ServiceConfig;
-use crate::decomp::{Precision, SchemeKind};
-use crate::fabric::{simulate_counts, CostModel, FabricConfig, FabricKind, OpClass, StreamReport};
+use crate::decomp::{OpClass, SchemeKind};
+use crate::fabric::{simulate_counts, CostModel, FabricConfig, FabricKind, FabricOp, StreamReport};
 use crate::metrics::Registry;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -21,20 +21,20 @@ struct Item {
 }
 
 struct Shared {
-    /// One batcher per precision, indexed by [`prec_idx`] — a flat array
-    /// lookup on the submit and worker paths (no map walk — §Perf).
-    batchers: [Batcher<Item>; 3],
+    /// One batcher per op class, indexed by [`OpClass::index`] — a flat
+    /// array lookup on the submit and worker paths (no map walk — §Perf).
+    batchers: [Batcher<Item>; OpClass::COUNT],
     metrics: Registry,
     /// Hot-path instruments, resolved once (no registry lookup or string
     /// formatting per request — §Perf).
     hot: HotMetrics,
     /// Lock-free per-class op counters for the fabric report.
     op_counts: OpCounters,
-    /// Recycled oneshot reply slots, one pool per precision (no
+    /// Recycled oneshot reply slots, one pool per op class (no
     /// per-request channel allocation, and the free-list mutex shares the
-    /// serialization domain of that precision's batcher instead of being a
-    /// single cross-precision contention point).
-    pools: [ReplyPool; 3],
+    /// serialization domain of that class's batcher instead of being a
+    /// single cross-class contention point).
+    pools: [ReplyPool; OpClass::COUNT],
     max_batch: usize,
     linger: Duration,
     scheme: SchemeKind,
@@ -42,7 +42,7 @@ struct Shared {
 
 struct HotMetrics {
     requests_total: std::sync::Arc<crate::metrics::Counter>,
-    requests_by_prec: [std::sync::Arc<crate::metrics::Counter>; 3],
+    requests_by_class: [std::sync::Arc<crate::metrics::Counter>; OpClass::COUNT],
     rejected: std::sync::Arc<crate::metrics::Counter>,
 }
 
@@ -50,36 +50,15 @@ impl HotMetrics {
     fn resolve(metrics: &Registry) -> HotMetrics {
         HotMetrics {
             requests_total: metrics.counter("requests_total"),
-            requests_by_prec: [
-                metrics.counter("requests_single"),
-                metrics.counter("requests_double"),
-                metrics.counter("requests_quad"),
-            ],
+            requests_by_class: core::array::from_fn(|i| {
+                metrics.counter(&format!("requests_{}", OpClass::from_index(i).name()))
+            }),
             rejected: metrics.counter("rejected_queue_full"),
         }
     }
 }
 
-#[inline]
-fn prec_idx(p: Precision) -> usize {
-    match p {
-        Precision::Single => 0,
-        Precision::Double => 1,
-        Precision::Quad => 2,
-    }
-}
-
-#[inline]
-fn kind_idx(k: SchemeKind) -> usize {
-    match k {
-        SchemeKind::Civp => 0,
-        SchemeKind::Baseline18 => 1,
-        SchemeKind::Baseline25x18 => 2,
-        SchemeKind::Baseline9 => 3,
-    }
-}
-
-/// Flat array of per-(organization × precision) operation counters.
+/// Flat array of per-(organization × class) operation counters.
 ///
 /// Workers bump one [`AtomicU64`] per *batch* (relaxed ordering); report
 /// readers snapshot the whole array without taking any lock. The
@@ -89,8 +68,8 @@ fn kind_idx(k: SchemeKind) -> usize {
 /// has observed the response — so a client that got its answer always sees
 /// its op in [`Service::fabric_report`].
 struct OpCounters {
-    /// Indexed `kind_idx(kind) * 3 + prec_idx(precision)`.
-    counts: [AtomicU64; 12],
+    /// Indexed `kind.index() * OpClass::COUNT + class.index()`.
+    counts: [AtomicU64; SchemeKind::COUNT * OpClass::COUNT],
 }
 
 /// `const` initializer usable for array repetition.
@@ -99,23 +78,23 @@ const ZERO_COUNTER: AtomicU64 = AtomicU64::new(0);
 
 impl OpCounters {
     fn new() -> OpCounters {
-        OpCounters { counts: [ZERO_COUNTER; 12] }
+        OpCounters { counts: [ZERO_COUNTER; SchemeKind::COUNT * OpClass::COUNT] }
     }
 
     #[inline]
-    fn slot(&self, class: OpClass) -> &AtomicU64 {
-        &self.counts[kind_idx(class.organization) * 3 + prec_idx(class.precision)]
+    fn slot(&self, op: FabricOp) -> &AtomicU64 {
+        &self.counts[op.organization.index() * OpClass::COUNT + op.class.index()]
     }
 
     /// Lock-free snapshot of all non-zero classes.
-    fn snapshot(&self) -> BTreeMap<OpClass, u64> {
+    fn snapshot(&self) -> BTreeMap<FabricOp, u64> {
         let mut out = BTreeMap::new();
         for kind in SchemeKind::ALL {
-            for precision in Precision::ALL {
-                let class = OpClass { precision, organization: kind };
-                let n = self.slot(class).load(Ordering::Relaxed);
+            for class in OpClass::ALL {
+                let op = FabricOp { class, organization: kind };
+                let n = self.slot(op).load(Ordering::Relaxed);
                 if n > 0 {
-                    out.insert(class, n);
+                    out.insert(op, n);
                 }
             }
         }
@@ -125,7 +104,7 @@ impl OpCounters {
 
 /// The running multiplication service.
 ///
-/// `submit` routes a request to its precision queue and returns a reply
+/// `submit` routes a request to its op-class queue and returns a reply
 /// handle for the response; `mul_blocking` is the convenience wrapper.
 /// Dropping the service (or calling [`Service::shutdown`]) drains queues
 /// and joins the workers.
@@ -156,17 +135,17 @@ impl Service {
             BackendChoice::Native(_) => "native",
             BackendChoice::Pjrt(_) => "pjrt",
         };
-        // One worker set per precision queue; each worker owns a backend
+        // One worker set per op-class queue; each worker owns a backend
         // instance (op classes tallied lock-free into `op_counts`).
         let mut workers = Vec::new();
-        for p in Precision::ALL {
+        for class in OpClass::ALL {
             for w in 0..cfg.workers {
                 let shared = shared.clone();
                 let mut be = backend.build();
                 workers.push(
                     std::thread::Builder::new()
-                        .name(format!("civp-{}-{w}", p.name()))
-                        .spawn(move || worker_loop(p, shared, be.as_mut()))
+                        .name(format!("civp-{}-{w}", class.name()))
+                        .spawn(move || worker_loop(class, shared, be.as_mut()))
                         .expect("spawn worker"),
                 );
             }
@@ -179,43 +158,43 @@ impl Service {
     }
 
     /// Submit a request; returns the reply handle. Blocks on backpressure
-    /// when the precision queue is full.
+    /// when the class queue is full.
     ///
     /// Request counters are bumped only once the batcher has *accepted*
-    /// the item, so `requests_total` / `requests_{prec}` count exactly the
+    /// the item, so `requests_total` / `requests_{class}` count exactly the
     /// requests that will receive a reply (or be drained at shutdown).
     pub fn submit(
         &self,
         id: u64,
-        precision: Precision,
+        class: OpClass,
         a: u128,
         b: u128,
     ) -> Result<ReplyHandle, SubmitError> {
-        let (tx, rx) = self.shared.pools[prec_idx(precision)].acquire();
-        let req = Request { id, precision, a, b, enqueued: Instant::now() };
-        self.shared.batchers[prec_idx(precision)].submit(Item { req, reply: tx })?;
+        let (tx, rx) = self.shared.pools[class.index()].acquire();
+        let req = Request { id, class, a, b, enqueued: Instant::now() };
+        self.shared.batchers[class.index()].submit(Item { req, reply: tx })?;
         self.shared.hot.requests_total.inc();
-        self.shared.hot.requests_by_prec[prec_idx(precision)].inc();
+        self.shared.hot.requests_by_class[class.index()].inc();
         Ok(rx)
     }
 
     /// Submit without blocking; `QueueFull` applies backpressure to the
     /// caller. Accounting matches [`Service::submit`]: accepted requests
-    /// bump `requests_total` and the per-precision counter exactly once;
+    /// bump `requests_total` and the per-class counter exactly once;
     /// rejected ones bump only `rejected_queue_full`.
     pub fn try_submit(
         &self,
         id: u64,
-        precision: Precision,
+        class: OpClass,
         a: u128,
         b: u128,
     ) -> Result<ReplyHandle, SubmitError> {
-        let (tx, rx) = self.shared.pools[prec_idx(precision)].acquire();
-        let req = Request { id, precision, a, b, enqueued: Instant::now() };
-        match self.shared.batchers[prec_idx(precision)].try_submit(Item { req, reply: tx }) {
+        let (tx, rx) = self.shared.pools[class.index()].acquire();
+        let req = Request { id, class, a, b, enqueued: Instant::now() };
+        match self.shared.batchers[class.index()].try_submit(Item { req, reply: tx }) {
             Ok(()) => {
                 self.shared.hot.requests_total.inc();
-                self.shared.hot.requests_by_prec[prec_idx(precision)].inc();
+                self.shared.hot.requests_by_class[class.index()].inc();
                 Ok(rx)
             }
             Err(e) => {
@@ -228,8 +207,8 @@ impl Service {
     }
 
     /// Convenience: submit and wait.
-    pub fn mul_blocking(&self, precision: Precision, a: u128, b: u128) -> u128 {
-        let rx = self.submit(0, precision, a, b).expect("service closed");
+    pub fn mul_blocking(&self, class: OpClass, a: u128, b: u128) -> u128 {
+        let rx = self.submit(0, class, a, b).expect("service closed");
         rx.recv().expect("worker dropped reply").bits
     }
 
@@ -244,7 +223,7 @@ impl Service {
     /// replies, so a caller that has received a response is guaranteed to
     /// see that op included here. No lock is held while reading; a
     /// snapshot taken concurrently with in-flight batches may trail them.
-    pub fn op_counts(&self) -> BTreeMap<OpClass, u64> {
+    pub fn op_counts(&self) -> BTreeMap<FabricOp, u64> {
         self.shared.op_counts.snapshot()
     }
 
@@ -300,22 +279,22 @@ impl Drop for Service {
     }
 }
 
-fn worker_loop(precision: Precision, shared: Arc<Shared>, backend: &mut dyn super::Backend) {
-    let lat = shared.metrics.histogram(&format!("latency_ns_{}", precision.name()));
-    let bsize = shared.metrics.histogram(&format!("batch_size_{}", precision.name()));
+fn worker_loop(class: OpClass, shared: Arc<Shared>, backend: &mut dyn super::Backend) {
+    let lat = shared.metrics.histogram(&format!("latency_ns_{}", class.name()));
+    let bsize = shared.metrics.histogram(&format!("batch_size_{}", class.name()));
     let responses = shared.metrics.counter("responses_total");
     let batches = shared.metrics.counter("batches_total");
     let errors = shared.metrics.counter("backend_errors");
-    // Everything loop-invariant is resolved once: the precision's batcher,
-    // the op-class counter slot, and the scratch buffers. With the backend
+    // Everything loop-invariant is resolved once: the class's batcher,
+    // the op counter slot, and the scratch buffers. With the backend
     // writing into `out` and the significand plans shared via `PlanCache`,
     // the steady-state batch path performs no allocation; each drained
     // batch then executes through the native backend's lane-fused pipeline
     // (specials sidecar + tile-major `Plan::execute_lanes`), so the worker
     // hands the whole batch to one fused call instead of N scalar
     // pipeline passes (§Perf).
-    let batcher = &shared.batchers[prec_idx(precision)];
-    let op_counter = shared.op_counts.slot(OpClass { precision, organization: shared.scheme });
+    let batcher = &shared.batchers[class.index()];
+    let op_counter = shared.op_counts.slot(FabricOp { class, organization: shared.scheme });
     let mut a: Vec<u128> = Vec::with_capacity(shared.max_batch);
     let mut b: Vec<u128> = Vec::with_capacity(shared.max_batch);
     let mut out: Vec<u128> = Vec::with_capacity(shared.max_batch);
@@ -327,7 +306,7 @@ fn worker_loop(precision: Precision, shared: Arc<Shared>, backend: &mut dyn supe
         a.extend(batch.iter().map(|i| i.req.a));
         b.clear();
         b.extend(batch.iter().map(|i| i.req.b));
-        match backend.execute(precision, &a, &b, &mut out) {
+        match backend.execute(class, &a, &b, &mut out) {
             Ok(()) => {
                 debug_assert_eq!(out.len(), n, "backend produced wrong batch size");
                 // Account the ops *before* releasing replies so a client
@@ -354,7 +333,7 @@ fn worker_loop(precision: Precision, shared: Arc<Shared>, backend: &mut dyn supe
                 eprintln!(
                     "civp worker: backend {} failed on {} batch: {e:#}",
                     backend.name(),
-                    precision.name()
+                    class.name()
                 );
                 // Drop replies: receivers observe a closed slot.
             }

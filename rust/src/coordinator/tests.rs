@@ -3,7 +3,7 @@
 
 use super::*;
 use crate::config::ServiceConfig;
-use crate::decomp::{Precision, SchemeKind};
+use crate::decomp::{OpClass, SchemeKind};
 use crate::proput::forall;
 use std::sync::Arc;
 use std::time::Duration;
@@ -14,6 +14,12 @@ fn native_cfg() -> ServiceConfig {
 
 fn native_service(cfg: &ServiceConfig) -> Service {
     Service::start(cfg, BackendChoice::Native(SchemeKind::Civp))
+}
+
+/// 1.0 in each registry format's packed bits (1.0 × 1.0 is exact
+/// everywhere) — derived from the registry, no hand-mirrored table.
+fn one_bits(class: OpClass) -> u128 {
+    class.format().one()
 }
 
 // ---------------------------------------------------------------------
@@ -110,7 +116,7 @@ fn service_multiplies_correctly_all_precisions() {
             return;
         }
         let out = svc.mul_blocking(
-            Precision::Double,
+            OpClass::Double,
             crate::fpu::Fp64::from_f64(a).0 as u128,
             crate::fpu::Fp64::from_f64(b).0 as u128,
         );
@@ -121,7 +127,7 @@ fn service_multiplies_correctly_all_precisions() {
         let af = a as f32;
         let bf = b as f32;
         let out = svc.mul_blocking(
-            Precision::Single,
+            OpClass::Single,
             af.to_bits() as u128,
             bf.to_bits() as u128,
         );
@@ -147,7 +153,7 @@ fn service_batches_concurrent_submissions() {
                 for i in 0..100u64 {
                     let x = 1.0 + (t as f64) + i as f64;
                     let bits = crate::fpu::Fp64::from_f64(x).0 as u128;
-                    rxs.push((x, svc.submit(i, Precision::Double, bits, bits).unwrap()));
+                    rxs.push((x, svc.submit(i, OpClass::Double, bits, bits).unwrap()));
                 }
                 for (x, rx) in rxs {
                     let resp = rx.recv().unwrap();
@@ -168,15 +174,47 @@ fn service_batches_concurrent_submissions() {
 fn service_fabric_report_tracks_mix() {
     let svc = native_service(&native_cfg());
     for _ in 0..10 {
-        svc.mul_blocking(Precision::Double, 1u128 << 62, 1u128 << 62);
+        svc.mul_blocking(OpClass::Double, 1u128 << 62, 1u128 << 62);
     }
     for _ in 0..5 {
-        svc.mul_blocking(Precision::Single, 0x3F80_0000, 0x3F80_0000);
+        svc.mul_blocking(OpClass::Single, 0x3F80_0000, 0x3F80_0000);
     }
     let report = svc.fabric_report();
     assert_eq!(report.total_ops, 15);
     assert_eq!(report.per_class.len(), 2);
     assert!(report.dyn_energy > 0.0);
+}
+
+#[test]
+fn service_serves_sub_single_classes_end_to_end() {
+    // binary16 and bfloat16 ride the same submit → batcher → lane-fused
+    // backend path; results check against the typed scalar pipeline (and,
+    // for half, the f32 hardware oracle inside `Fp16` tests).
+    use crate::fpu::{Bf16, Fp16};
+    let svc = native_service(&native_cfg());
+    let mut rng = crate::proput::Rng::new(0x5AB);
+    for i in 0..300u64 {
+        let (a, b) = (rng.next_u64() as u16, rng.next_u64() as u16);
+        let got = svc.mul_blocking(OpClass::Half, a as u128, b as u128);
+        let want = Fp16(a).mul(Fp16(b));
+        if want.is_nan() {
+            assert!(Fp16(got as u16).is_nan(), "i={i}");
+        } else {
+            assert_eq!(got as u16, want.0, "half i={i} a={a:#06x} b={b:#06x}");
+        }
+        let got = svc.mul_blocking(OpClass::Bf16, a as u128, b as u128);
+        let want = Bf16(a).mul(Bf16(b));
+        if want.is_nan() {
+            assert!(Bf16(got as u16).is_nan(), "i={i}");
+        } else {
+            assert_eq!(got as u16, want.0, "bf16 i={i} a={a:#06x} b={b:#06x}");
+        }
+    }
+    let fabric = svc.fabric_report();
+    let labels: Vec<&str> = fabric.per_class.iter().map(|c| c.label.as_str()).collect();
+    assert!(labels.contains(&"civp-half"), "per-class accounting rows: {labels:?}");
+    assert!(labels.contains(&"civp-bf16"), "per-class accounting rows: {labels:?}");
+    svc.shutdown();
 }
 
 #[test]
@@ -193,7 +231,7 @@ fn service_try_submit_backpressure() {
     // Stuff the double queue faster than the single worker drains.
     let mut rejected = 0;
     for i in 0..5_000u64 {
-        match svc.try_submit(i, Precision::Double, 1u128 << 62, 1u128 << 62) {
+        match svc.try_submit(i, OpClass::Double, 1u128 << 62, 1u128 << 62) {
             Ok(_rx) => {}
             Err(SubmitError::QueueFull) => rejected += 1,
             Err(e) => panic!("unexpected {e:?}"),
@@ -210,7 +248,7 @@ fn service_shutdown_drains_inflight() {
     let mut rxs = Vec::new();
     for i in 0..500u64 {
         let bits = crate::fpu::Fp64::from_f64(i as f64).0 as u128;
-        rxs.push(svc.submit(i, Precision::Double, bits, bits).unwrap());
+        rxs.push(svc.submit(i, OpClass::Double, bits, bits).unwrap());
     }
     let report = svc.shutdown();
     // every accepted request got an answer before shutdown returned
@@ -221,48 +259,37 @@ fn service_shutdown_drains_inflight() {
 }
 
 #[test]
-fn service_try_submit_counts_per_precision_exactly_once() {
+fn service_try_submit_counts_per_class_exactly_once() {
     // Accounting contract: accepted requests bump `requests_total` AND the
-    // per-precision counter exactly once; nothing is rejected when the
-    // queues have room.
+    // per-class counter exactly once, for every registry class; nothing is
+    // rejected when the queues have room.
     let cfg = ServiceConfig { workers: 2, max_batch: 64, linger_us: 100, ..Default::default() };
     let svc = native_service(&cfg);
-    let (mut n_single, mut n_double, mut n_quad) = (0u64, 0u64, 0u64);
+    let mut per_class = [0u64; OpClass::COUNT];
     let mut rxs = Vec::new();
-    for i in 0..900u64 {
-        let precision = match i % 3 {
-            0 => {
-                n_single += 1;
-                Precision::Single
-            }
-            1 => {
-                n_double += 1;
-                Precision::Double
-            }
-            _ => {
-                n_quad += 1;
-                Precision::Quad
-            }
-        };
+    for i in 0..1000u64 {
+        let class = OpClass::from_index((i % OpClass::COUNT as u64) as usize);
+        per_class[class.index()] += 1;
         // 1.0 in each format's packed bits: 1.0 * 1.0 is exact everywhere.
-        let one = match precision {
-            Precision::Single => 0x3F80_0000u128,
-            Precision::Double => 0x3FF0_0000_0000_0000u128,
-            Precision::Quad => 0x3FFF_u128 << 112,
-        };
-        rxs.push(svc.try_submit(i, precision, one, one).expect("queue has room"));
+        let one = one_bits(class);
+        rxs.push(svc.try_submit(i, class, one, one).expect("queue has room"));
     }
     for rx in rxs {
         rx.recv().unwrap();
     }
     let snap = svc.metrics();
-    assert_eq!(snap.counters["requests_single"], n_single);
-    assert_eq!(snap.counters["requests_double"], n_double);
-    assert_eq!(snap.counters["requests_quad"], n_quad);
-    assert_eq!(snap.counters["requests_total"], n_single + n_double + n_quad);
+    for class in OpClass::ALL {
+        assert_eq!(
+            snap.counters[&format!("requests_{}", class.name())],
+            per_class[class.index()],
+            "{}",
+            class.name()
+        );
+    }
+    assert_eq!(snap.counters["requests_total"], per_class.iter().sum::<u64>());
     let report = svc.shutdown();
     assert_eq!(report.rejected, 0);
-    assert_eq!(report.responses, 900);
+    assert_eq!(report.responses, 1000);
 }
 
 #[test]
@@ -270,23 +297,27 @@ fn service_fabric_report_is_count_based_and_matches_stream_oracle() {
     // Acceptance gate: after >= 100k executed ops the report must still be
     // computed from per-class counts (no per-op replay buffer) and agree
     // bit-for-bit with the materialized-stream oracle.
-    use crate::fabric::{simulate_stream, CostModel, FabricConfig, OpClass};
+    use crate::fabric::{simulate_stream, CostModel, FabricConfig, FabricOp};
     let cfg = ServiceConfig { workers: 2, max_batch: 512, linger_us: 100, ..Default::default() };
     let svc = native_service(&cfg);
-    // 70k single + 25k double + 5k quad = 100k ops. Exact values (1.0) keep
-    // the debug-mode oracle cross-check cheap.
-    let plan: [(Precision, u128, u64); 3] = [
-        (Precision::Single, 0x3F80_0000u128, 70_000),
-        (Precision::Double, 0x3FF0_0000_0000_0000u128, 25_000),
-        (Precision::Quad, 0x3FFF_u128 << 112, 5_000),
+    // 10k bf16 + 10k half + 55k single + 20k double + 5k quad = 100k ops —
+    // the full registry, sub-single classes included. Exact values (1.0)
+    // keep the debug-mode oracle cross-check cheap.
+    let plan: [(OpClass, u64); 5] = [
+        (OpClass::Bf16, 10_000),
+        (OpClass::Half, 10_000),
+        (OpClass::Single, 55_000),
+        (OpClass::Double, 20_000),
+        (OpClass::Quad, 5_000),
     ];
-    let mut expected_ops: Vec<OpClass> = Vec::new();
+    let mut expected_ops: Vec<FabricOp> = Vec::new();
     let mut pending = Vec::with_capacity(1024);
-    for &(precision, one, n) in &plan {
-        let class = OpClass { precision, organization: SchemeKind::Civp };
+    for &(class, n) in &plan {
+        let one = one_bits(class);
+        let op = FabricOp { class, organization: SchemeKind::Civp };
         for i in 0..n {
-            expected_ops.push(class);
-            pending.push(svc.submit(i, precision, one, one).unwrap());
+            expected_ops.push(op);
+            pending.push(svc.submit(i, class, one, one).unwrap());
             if pending.len() == 1024 {
                 for rx in pending.drain(..) {
                     rx.recv().unwrap();
@@ -300,7 +331,7 @@ fn service_fabric_report_is_count_based_and_matches_stream_oracle() {
     // Every response observed => every op is visible in the counters.
     let counts = svc.op_counts();
     assert_eq!(counts.values().sum::<u64>(), 100_000);
-    assert_eq!(counts.len(), 3, "one entry per executed class: {counts:?}");
+    assert_eq!(counts.len(), 5, "one entry per executed class: {counts:?}");
     let report = svc.fabric_report();
     let oracle =
         simulate_stream(&expected_ops, &FabricConfig::civp_scaled(1), &CostModel::default());
@@ -314,7 +345,7 @@ fn service_reply_slots_are_recycled() {
     // reuse one pooled slot instead of allocating per request.
     let svc = native_service(&native_cfg());
     for _ in 0..50 {
-        svc.mul_blocking(Precision::Double, 0x3FF0_0000_0000_0000u128, 0x3FF0_0000_0000_0000u128);
+        svc.mul_blocking(OpClass::Double, 0x3FF0_0000_0000_0000u128, 0x3FF0_0000_0000_0000u128);
     }
     // The pool is service-internal; observable contract: requests completed
     // and nothing leaked enough to matter. Covered directly by the oneshot

@@ -2,7 +2,8 @@
 //! §II and §III of the paper: block counts by kind, padded ("wasted")
 //! blocks, and aggregate multiplier-array utilization.
 
-use super::scheme::{BlockKind, Precision, Scheme, SchemeKind, Tile};
+use super::scheme::{BlockKind, Scheme, SchemeKind, Tile};
+use crate::fpu::OpClass;
 use std::collections::BTreeMap;
 
 /// Paper §II.C: the authors state that 17 of the 49 `18x18` blocks in a
@@ -85,12 +86,14 @@ pub fn scheme_census(scheme: &Scheme) -> BlockCensus {
     }
 }
 
-/// One row of the §III analysis table (E6): a (precision, organization)
-/// pair with its census.
+/// One row of the §III analysis table (E6): a (class, organization) pair
+/// with its census. The table now extends the paper's census *downward*
+/// past single precision: the sub-single registry classes (binary16,
+/// bfloat16) get the same block/wastage accounting against every baseline.
 #[derive(Clone, Debug)]
 pub struct AnalysisRow {
-    /// IEEE precision.
-    pub precision: Precision,
+    /// Operation class.
+    pub class: OpClass,
     /// Organization family.
     pub kind: SchemeKind,
     /// Census for the scheme.
@@ -98,13 +101,14 @@ pub struct AnalysisRow {
 }
 
 impl AnalysisRow {
-    /// Build the full cross-product table the paper's §III argues from.
+    /// Build the full registry × organization cross-product table the
+    /// paper's §III argues from.
     pub fn full_table() -> Vec<AnalysisRow> {
         let mut rows = Vec::new();
-        for prec in Precision::ALL {
+        for class in OpClass::ALL {
             for kind in SchemeKind::ALL {
-                let scheme = Scheme::new(kind, prec);
-                rows.push(AnalysisRow { precision: prec, kind, census: scheme_census(&scheme) });
+                let scheme = Scheme::new(kind, class);
+                rows.push(AnalysisRow { class, kind, census: scheme_census(&scheme) });
             }
         }
         rows

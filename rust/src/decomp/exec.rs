@@ -13,7 +13,7 @@
 
 use super::plan::{Plan, PlanCache};
 use super::scheme::{BlockKind, Scheme, SchemeKind, Tile};
-use crate::fpu::{SigBatchMultiplier, SigMultiplier};
+use crate::fpu::{OpClass, SigBatchMultiplier, SigMultiplier};
 use crate::wideint::{U128, U256};
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
@@ -170,13 +170,13 @@ pub(crate) fn accumulate_shifted(acc: &mut U256, prod: u128, limb: usize, shift:
 /// via [`PlanCache`] — the paper's point is precisely that the tile wiring
 /// is static hardware, so re-deriving the tile DAG per multiplication
 /// would be both slow and unfaithful. The adapter holds `Arc` handles in
-/// fast slots for the three IEEE widths, so the hot path is an array index,
+/// one fast slot per registry class, so the hot path is an array index,
 /// not a hash lookup.
 #[derive(Clone, Debug)]
 pub struct DecompMul {
     kind: SchemeKind,
-    /// Fast slots for the three IEEE widths (24 / 53 / 113).
-    ieee: [Option<Arc<Plan>>; 3],
+    /// Fast slots, one per [`OpClass`] significand width (8/11/24/53/113).
+    classes: [Option<Arc<Plan>>; OpClass::COUNT],
     /// Cached plans for other (integer) widths.
     plans: HashMap<u32, Arc<Plan>>,
     /// Accumulated usage across all multiplications.
@@ -186,15 +186,10 @@ pub struct DecompMul {
     pub verify: bool,
 }
 
-/// Fast-slot index for IEEE significand widths.
+/// Fast-slot index for registry significand widths.
 #[inline]
-fn ieee_slot(width: u32) -> Option<usize> {
-    match width {
-        24 => Some(0),
-        53 => Some(1),
-        113 => Some(2),
-        _ => None,
-    }
+fn class_slot(width: u32) -> Option<usize> {
+    OpClass::from_sig_bits(width).map(OpClass::index)
 }
 
 impl DecompMul {
@@ -202,7 +197,7 @@ impl DecompMul {
     pub fn new(kind: SchemeKind) -> DecompMul {
         DecompMul {
             kind,
-            ieee: [None, None, None],
+            classes: core::array::from_fn(|_| None),
             plans: HashMap::new(),
             stats: ExecStats::default(),
             verify: false,
@@ -219,8 +214,8 @@ impl DecompMul {
     #[inline]
     fn entry_for(&mut self, width: u32) -> &Arc<Plan> {
         let kind = self.kind;
-        if let Some(slot) = ieee_slot(width) {
-            return self.ieee[slot].get_or_insert_with(|| PlanCache::get_width(kind, width));
+        if let Some(slot) = class_slot(width) {
+            return self.classes[slot].get_or_insert_with(|| PlanCache::get_width(kind, width));
         }
         self.plans.entry(width).or_insert_with(|| PlanCache::get_width(kind, width))
     }
@@ -285,23 +280,22 @@ impl SigBatchMultiplier for DecompMul {
 #[cfg(test)]
 mod slot_tests {
     use super::*;
-    use crate::decomp::Precision;
 
     #[test]
-    fn ieee_widths_use_fast_slots_not_the_map() {
+    fn class_widths_use_fast_slots_not_the_map() {
         let mut m = DecompMul::new(SchemeKind::Civp);
-        assert!(m.ieee.iter().all(Option::is_none));
-        for prec in Precision::ALL {
-            let plan = m.plan_for(prec.sig_bits());
-            assert_eq!(plan.width(), prec.sig_bits());
+        assert!(m.classes.iter().all(Option::is_none));
+        for class in OpClass::ALL {
+            let plan = m.plan_for(class.sig_bits());
+            assert_eq!(plan.width(), class.sig_bits());
         }
-        // All three IEEE widths landed in the fast slots; the integer map
+        // Every registry width landed in the fast slots; the integer map
         // stayed empty.
-        assert!(m.ieee.iter().all(Option::is_some));
+        assert!(m.classes.iter().all(Option::is_some));
         assert!(m.plans.is_empty());
         // Repeat lookups reuse the slot (same shared Arc).
         let again = m.plan_for(53);
-        assert!(Arc::ptr_eq(&again, m.ieee[1].as_ref().unwrap()));
+        assert!(Arc::ptr_eq(&again, m.classes[OpClass::Double.index()].as_ref().unwrap()));
     }
 
     #[test]
@@ -311,7 +305,7 @@ mod slot_tests {
             let plan = m.plan_for(w);
             assert_eq!(plan.width(), w);
         }
-        assert!(m.ieee.iter().all(Option::is_none));
+        assert!(m.classes.iter().all(Option::is_none));
         assert_eq!(m.plans.len(), 3);
         // Cached: a repeat lookup does not grow the map.
         let _ = m.plan_for(40);

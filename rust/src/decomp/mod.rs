@@ -7,7 +7,10 @@
 //! paper) cut a padded 57-bit double-precision operand into `[24, 24, 9]`
 //! and a padded 114-bit quad operand into two 57-bit halves; the baselines
 //! tile with `18x18` (existing Xilinx/Altera fabric), `25x18` (DSP48E-style)
-//! or `9x9` blocks.
+//! or `9x9` blocks. The open [`OpClass`] registry extends the same block
+//! set below single precision: a bfloat16 significand product is one `9x9`
+//! firing and a binary16 product is two `24x9` firings, so `Scheme::new`
+//! accepts any registry class.
 //!
 //! [`exec::execute`] runs a scheme *exactly* (bit-for-bit) and tallies which
 //! blocks fired and how full they were — the quantity all of the paper's
@@ -39,4 +42,6 @@ pub use analysis::{scheme_census, AnalysisRow, BlockCensus};
 pub use exec::{execute, DecompMul, ExecStats};
 pub use lanes::{LaneBlock, LanePlan, LANES};
 pub use plan::{Plan, PlanCache, PlanStep};
-pub use scheme::{BlockKind, Precision, Scheme, SchemeKind, Tile};
+pub use scheme::{BlockKind, Scheme, SchemeKind, Tile};
+
+pub use crate::fpu::OpClass;

@@ -17,11 +17,12 @@
 //! * a precomputed per-multiplication [`ExecStats`] delta, so executing a
 //!   plan does one `merge` instead of five counter updates per tile.
 //!
-//! [`PlanCache`] memoizes plans process-wide, keyed by scheme × precision
-//! (lock-free `OnceLock` fast slots for the 12 IEEE combinations, an
-//! `RwLock`ed map for arbitrary integer widths). Everything that multiplies
-//! in a loop — [`super::DecompMul`], the coordinator's native backend, the
-//! benches — shares the same compiled plans.
+//! [`PlanCache`] memoizes plans process-wide, keyed by scheme × op class
+//! (lock-free `OnceLock` fast slots for every `SchemeKind × OpClass`
+//! registry combination, an `RwLock`ed map for arbitrary integer widths).
+//! Everything that multiplies in a loop — [`super::DecompMul`], the
+//! coordinator's native backend, the benches — shares the same compiled
+//! plans.
 //!
 //! §Perf — a plan executes in one of **two modes**:
 //!
@@ -38,7 +39,8 @@
 
 use super::exec::{accumulate_shifted, execute_tiles, ExecStats};
 use super::lanes::{LaneBlock, LanePlan, LANES};
-use super::scheme::{Precision, Scheme, SchemeKind};
+use super::scheme::{Scheme, SchemeKind};
+use crate::fpu::OpClass;
 use crate::wideint::{U128, U256};
 use std::collections::HashMap;
 use std::sync::{Arc, OnceLock, RwLock};
@@ -98,10 +100,10 @@ enum Kernel {
 /// scheme × precision pair.
 ///
 /// ```
-/// use civp::decomp::{ExecStats, PlanCache, Precision, SchemeKind};
+/// use civp::decomp::{ExecStats, OpClass, PlanCache, SchemeKind};
 /// use civp::wideint::U128;
 ///
-/// let plan = PlanCache::get(SchemeKind::Civp, Precision::Double);
+/// let plan = PlanCache::get(SchemeKind::Civp, OpClass::Double);
 /// let mut stats = ExecStats::default();
 /// let product = plan.execute(U128::from_u64(3), U128::from_u64(5), &mut stats);
 /// assert_eq!(product.as_u64(), 15);
@@ -329,16 +331,20 @@ pub(crate) const fn low_mask(w: u32) -> u64 {
 
 /// Process-wide cache of compiled [`Plan`]s, keyed by scheme × width.
 ///
-/// The 12 IEEE combinations (4 [`SchemeKind`]s × 3 [`Precision`]s) live in
-/// static `OnceLock` slots — after first use a lookup is one atomic load
-/// and an `Arc` clone. Integer widths go through an `RwLock`ed map.
+/// Every registry combination ([`SchemeKind::COUNT`] organizations ×
+/// [`OpClass::COUNT`] classes) lives in a static `OnceLock` slot indexed
+/// densely by `SchemeKind::index() * OpClass::COUNT + OpClass::index()` —
+/// after first use a lookup is one atomic load and an `Arc` clone. The
+/// slot table sizes itself from the registry, so landing a new served
+/// class never touches this file. Integer widths go through an `RwLock`ed
+/// map.
 ///
 /// ```
-/// use civp::decomp::{PlanCache, Precision, SchemeKind};
+/// use civp::decomp::{OpClass, PlanCache, SchemeKind};
 /// use std::sync::Arc;
 ///
-/// let a = PlanCache::get(SchemeKind::Civp, Precision::Quad);
-/// let b = PlanCache::get(SchemeKind::Civp, Precision::Quad);
+/// let a = PlanCache::get(SchemeKind::Civp, OpClass::Quad);
+/// let b = PlanCache::get(SchemeKind::Civp, OpClass::Quad);
 /// assert!(Arc::ptr_eq(&a, &b)); // compiled once, shared process-wide
 /// assert_eq!(a.steps().len(), 36); // Fig. 4: 36 blocks per quad multiply
 /// ```
@@ -351,61 +357,45 @@ pub struct PlanCache {
 #[allow(clippy::declare_interior_mutable_const)]
 const EMPTY_SLOT: OnceLock<Arc<Plan>> = OnceLock::new();
 
-/// Fast slots: `kind_index * 3 + precision_index`.
-static IEEE_PLANS: [OnceLock<Arc<Plan>>; 12] = [EMPTY_SLOT; 12];
+/// One fast slot per `SchemeKind × OpClass` registry combination.
+const N_CLASS_SLOTS: usize = SchemeKind::COUNT * OpClass::COUNT;
 
-/// Plans for non-IEEE (integer) widths.
+/// Fast slots: `kind.index() * OpClass::COUNT + class.index()`.
+static CLASS_PLANS: [OnceLock<Arc<Plan>>; N_CLASS_SLOTS] = [EMPTY_SLOT; N_CLASS_SLOTS];
+
+/// Plans for non-class (integer) widths.
 static INT_PLANS: OnceLock<RwLock<HashMap<(SchemeKind, u32), Arc<Plan>>>> = OnceLock::new();
 
-fn kind_index(kind: SchemeKind) -> usize {
-    match kind {
-        SchemeKind::Civp => 0,
-        SchemeKind::Baseline18 => 1,
-        SchemeKind::Baseline25x18 => 2,
-        SchemeKind::Baseline9 => 3,
-    }
-}
-
-fn prec_index(prec: Precision) -> usize {
-    match prec {
-        Precision::Single => 0,
-        Precision::Double => 1,
-        Precision::Quad => 2,
-    }
-}
-
 impl PlanCache {
-    /// The shared plan for an IEEE precision (compiled on first use).
-    pub fn get(kind: SchemeKind, prec: Precision) -> Arc<Plan> {
-        let slot = &IEEE_PLANS[kind_index(kind) * 3 + prec_index(prec)];
-        slot.get_or_init(|| Arc::new(Plan::compile(Scheme::new(kind, prec)))).clone()
+    /// The shared plan for a served op class (compiled on first use).
+    pub fn get(kind: SchemeKind, class: OpClass) -> Arc<Plan> {
+        let slot = &CLASS_PLANS[kind.index() * OpClass::COUNT + class.index()];
+        slot.get_or_init(|| Arc::new(Plan::compile(Scheme::new(kind, class)))).clone()
     }
 
-    /// The shared plan for an arbitrary operand width. IEEE significand
-    /// widths (24 / 53 / 113) route to the paper's exact partitions via
+    /// The shared plan for an arbitrary operand width. Registry significand
+    /// widths (8 / 11 / 24 / 53 / 113) route to the class partitions via
     /// [`PlanCache::get`]; anything else compiles an integer scheme.
     pub fn get_width(kind: SchemeKind, width: u32) -> Arc<Plan> {
-        match width {
-            24 => Self::get(kind, Precision::Single),
-            53 => Self::get(kind, Precision::Double),
-            113 => Self::get(kind, Precision::Quad),
-            w => {
+        match OpClass::from_sig_bits(width) {
+            Some(class) => Self::get(kind, class),
+            None => {
                 let map = INT_PLANS.get_or_init(|| RwLock::new(HashMap::new()));
-                if let Some(p) = map.read().unwrap().get(&(kind, w)) {
+                if let Some(p) = map.read().unwrap().get(&(kind, width)) {
                     return p.clone();
                 }
                 // Compile outside the write lock; a racing thread's entry
                 // wins via the `or_insert` below, so all callers still
                 // share one plan.
-                let plan = Arc::new(Plan::compile(Scheme::for_int(kind, w)));
-                map.write().unwrap().entry((kind, w)).or_insert(plan).clone()
+                let plan = Arc::new(Plan::compile(Scheme::for_int(kind, width)));
+                map.write().unwrap().entry((kind, width)).or_insert(plan).clone()
             }
         }
     }
 
-    /// Number of IEEE fast slots populated so far (diagnostics).
-    pub fn ieee_cached() -> usize {
-        IEEE_PLANS.iter().filter(|s| s.get().is_some()).count()
+    /// Number of class fast slots populated so far (diagnostics).
+    pub fn class_cached() -> usize {
+        CLASS_PLANS.iter().filter(|s| s.get().is_some()).count()
     }
 
     /// Number of integer-width plans cached so far (diagnostics).

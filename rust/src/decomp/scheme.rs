@@ -1,5 +1,7 @@
 //! Partition schemes: operand chunking + tile-to-block assignment.
 
+use crate::fpu::OpClass;
+
 /// A dedicated hardware multiplier block kind.
 ///
 /// `M18x18`, `M25x18` and `M9x9` are the blocks shipped by Xilinx/Altera
@@ -65,50 +67,6 @@ impl BlockKind {
     }
 }
 
-/// The three IEEE precisions the paper targets.
-///
-/// ```
-/// use civp::decomp::Precision;
-///
-/// // Significand widths (with the hidden bit) drive every block-count
-/// // claim in the paper: 24 / 53 / 113 bits.
-/// assert_eq!(Precision::Single.sig_bits(), 24);
-/// assert_eq!(Precision::Double.sig_bits(), 53);
-/// assert_eq!(Precision::Quad.sig_bits(), 113);
-/// ```
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub enum Precision {
-    /// binary32 — 24-bit significand.
-    Single,
-    /// binary64 — 53-bit significand.
-    Double,
-    /// binary128 — 113-bit significand.
-    Quad,
-}
-
-impl Precision {
-    /// All precisions, low to high.
-    pub const ALL: [Precision; 3] = [Precision::Single, Precision::Double, Precision::Quad];
-
-    /// Significand width including the hidden bit.
-    pub const fn sig_bits(self) -> u32 {
-        match self {
-            Precision::Single => 24,
-            Precision::Double => 53,
-            Precision::Quad => 113,
-        }
-    }
-
-    /// Display name.
-    pub const fn name(self) -> &'static str {
-        match self {
-            Precision::Single => "single",
-            Precision::Double => "double",
-            Precision::Quad => "quad",
-        }
-    }
-}
-
 /// Which multiplier organization a scheme models.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum SchemeKind {
@@ -130,6 +88,15 @@ impl SchemeKind {
         SchemeKind::Baseline25x18,
         SchemeKind::Baseline9,
     ];
+
+    /// Number of organizations (sizes `kind × class` flat arrays).
+    pub const COUNT: usize = Self::ALL.len();
+
+    /// Dense index into kind-indexed arrays (position in [`SchemeKind::ALL`]).
+    #[inline]
+    pub const fn index(self) -> usize {
+        self as usize
+    }
 
     /// Display name.
     pub const fn name(self) -> &'static str {
@@ -185,16 +152,21 @@ impl Tile {
 /// A complete partition scheme for one `W x W` significand multiplication.
 ///
 /// ```
-/// use civp::decomp::{BlockKind, Precision, Scheme, SchemeKind};
+/// use civp::decomp::{BlockKind, OpClass, Scheme, SchemeKind};
 ///
 /// // Fig. 2: a double-precision operand (53 bits) pads to 57 = 24+24+9,
 /// // so the product needs 3x3 = 9 dedicated blocks.
-/// let s = Scheme::new(SchemeKind::Civp, Precision::Double);
+/// let s = Scheme::new(SchemeKind::Civp, OpClass::Double);
 /// assert_eq!(s.padded_bits, 57);
 /// assert_eq!(s.a_chunks, vec![24, 24, 9]);
 /// let tiles = s.tiles();
 /// assert_eq!(tiles.len(), 9);
 /// assert_eq!(tiles.iter().filter(|t| t.kind == BlockKind::M24x24).count(), 4);
+///
+/// // Sub-single classes tile the small-block end of the set: a bf16
+/// // product is one 9x9 firing, a binary16 product two 24x9 firings.
+/// assert_eq!(Scheme::new(SchemeKind::Civp, OpClass::Bf16).tiles().len(), 1);
+/// assert_eq!(Scheme::new(SchemeKind::Civp, OpClass::Half).tiles().len(), 2);
 ///
 /// // The same blocks serve plain integer multiplication ("combined
 /// // integer"): a 48-bit operand tiles two 24-bit chunks exactly.
@@ -220,9 +192,10 @@ pub struct Scheme {
 }
 
 impl Scheme {
-    /// Build a scheme for `kind` at IEEE precision `prec`.
-    pub fn new(kind: SchemeKind, prec: Precision) -> Scheme {
-        Self::for_width(kind, prec.sig_bits(), Some(prec))
+    /// Build a scheme for `kind` at operation class `class` — any entry of
+    /// the open [`OpClass`] registry, sub-single formats included.
+    pub fn new(kind: SchemeKind, class: OpClass) -> Scheme {
+        Self::for_width(kind, class.sig_bits(), Some(class))
     }
 
     /// Build a scheme for an arbitrary integer operand width (the "combined
@@ -232,47 +205,38 @@ impl Scheme {
         Self::for_width(kind, width, None)
     }
 
-    fn for_width(kind: SchemeKind, width: u32, prec: Option<Precision>) -> Scheme {
+    fn for_width(kind: SchemeKind, width: u32, class: Option<OpClass>) -> Scheme {
         assert!(width >= 1 && width <= 128, "operand width out of range");
-        let (chunks, blocks) = match kind {
-            SchemeKind::Civp => (civp_chunks(width, prec), vec![
-                BlockKind::M24x24,
-                BlockKind::M24x9,
-                BlockKind::M9x9,
-            ]),
-            SchemeKind::Baseline18 => (uniform_chunks(width, 18), vec![BlockKind::M18x18]),
-            SchemeKind::Baseline9 => (uniform_chunks(width, 9), vec![BlockKind::M9x9]),
+        let name = class
+            .map(|c| format!("{}-{}", kind.name(), c.name()))
+            .unwrap_or_else(|| format!("{}-int{width}", kind.name()));
+        let (a_chunks, b_chunks, blocks) = match kind {
+            SchemeKind::Civp => {
+                let (a, b) = civp_chunks(width, class);
+                (a, b, vec![BlockKind::M24x24, BlockKind::M24x9, BlockKind::M9x9])
+            }
+            SchemeKind::Baseline18 => {
+                let c = uniform_chunks(width, 18);
+                (c.clone(), c, vec![BlockKind::M18x18])
+            }
+            SchemeKind::Baseline9 => {
+                let c = uniform_chunks(width, 9);
+                (c.clone(), c, vec![BlockKind::M9x9])
+            }
             SchemeKind::Baseline25x18 => {
                 // Asymmetric: A side in 25-bit chunks, B side in 18-bit.
-                let a = uniform_chunks(width, 25);
-                let b = uniform_chunks(width, 18);
-                let padded_a: u32 = a.iter().sum();
-                let padded_b: u32 = b.iter().sum();
-                let name = prec
-                    .map(|p| format!("{}-{}", kind.name(), p.name()))
-                    .unwrap_or_else(|| format!("{}-int{width}", kind.name()));
-                return Scheme {
-                    name,
-                    kind,
-                    eff_bits: width,
-                    padded_bits: padded_a.max(padded_b),
-                    a_chunks: a,
-                    b_chunks: b,
-                    blocks: vec![BlockKind::M25x18],
-                };
+                (uniform_chunks(width, 25), uniform_chunks(width, 18), vec![BlockKind::M25x18])
             }
         };
-        let padded: u32 = chunks.iter().sum();
-        let name = prec
-            .map(|p| format!("{}-{}", kind.name(), p.name()))
-            .unwrap_or_else(|| format!("{}-int{width}", kind.name()));
+        let padded_a: u32 = a_chunks.iter().sum();
+        let padded_b: u32 = b_chunks.iter().sum();
         Scheme {
             name,
             kind,
             eff_bits: width,
-            padded_bits: padded,
-            a_chunks: chunks.clone(),
-            b_chunks: chunks,
+            padded_bits: padded_a.max(padded_b),
+            a_chunks,
+            b_chunks,
             blocks,
         }
     }
@@ -317,22 +281,37 @@ impl Scheme {
     }
 }
 
-/// Chunk widths for the CIVP organization, least-significant first.
+/// Chunk widths `(a_chunks, b_chunks)` for the CIVP organization,
+/// least-significant first.
 ///
-/// IEEE precisions follow the paper exactly:
+/// The paper's precisions follow §II exactly:
 /// * single — 24 = one `24` chunk (§II.A);
 /// * double — 53 → pad to 57 = `[24, 24, 9]` (Fig. 2: A3/A2 24-bit low
 ///   parts, A1 9-bit high part);
 /// * quad — 113 → pad to 114 = two 57-bit halves, each `[24, 24, 9]`
 ///   (Fig. 4 over Fig. 2).
 ///
+/// The sub-single classes extend the same block set *downward* (§II census
+/// continued below single precision):
+/// * bf16 — 8 → pad to 9 = one `[9]` chunk per side: the whole significand
+///   product is a single `9x9` firing;
+/// * half — 11-bit operands don't fit a `9x9` and would waste a `24x24`
+///   almost entirely, so the A side stays whole (`[11]`, on the 24-bit
+///   port) and the B side splits `[9, 2]` across the 9-bit port: two
+///   `24x9` firings, zero padding bits.
+///
 /// Other integer widths chunk greedily with 24s and close with a 9 where the
 /// remainder allows, mirroring the same block set.
-fn civp_chunks(width: u32, prec: Option<Precision>) -> Vec<u32> {
-    match prec {
-        Some(Precision::Single) => return vec![24],
-        Some(Precision::Double) => return vec![24, 24, 9],
-        Some(Precision::Quad) => return vec![24, 24, 9, 24, 24, 9],
+fn civp_chunks(width: u32, class: Option<OpClass>) -> (Vec<u32>, Vec<u32>) {
+    match class {
+        Some(OpClass::Bf16) => return (vec![9], vec![9]),
+        Some(OpClass::Half) => return (vec![11], vec![9, 2]),
+        Some(OpClass::Single) => return (vec![24], vec![24]),
+        Some(OpClass::Double) => return (vec![24, 24, 9], vec![24, 24, 9]),
+        Some(OpClass::Quad) => {
+            let half = [24, 24, 9, 24, 24, 9];
+            return (half.to_vec(), half.to_vec());
+        }
         None => {}
     }
     // Greedy integer chunking: as many 24s as possible, remainder served by
@@ -351,7 +330,7 @@ fn civp_chunks(width: u32, prec: Option<Precision>) -> Vec<u32> {
             rem = 0;
         }
     }
-    chunks
+    (chunks.clone(), chunks)
 }
 
 /// `ceil(width / w)` chunks of width `w` (last one padded).

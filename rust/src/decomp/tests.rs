@@ -15,7 +15,7 @@ use crate::wideint::{mul_u128, U128, U256};
 #[test]
 fn sp_civp_uses_one_24x24() {
     // §II.A: single precision = one 24x24 block.
-    let c = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Single));
+    let c = scheme_census(&Scheme::new(SchemeKind::Civp, OpClass::Single));
     assert_eq!(c.total_blocks, 1);
     assert_eq!(c.count(BlockKind::M24x24), 1);
     assert_eq!(c.padded_blocks, 0);
@@ -25,7 +25,7 @@ fn sp_civp_uses_one_24x24() {
 #[test]
 fn sp_baseline18_uses_four_blocks() {
     // §II.A context: 24x24 on an 18x18 fabric needs 2x2 = 4 blocks.
-    let c = scheme_census(&Scheme::new(SchemeKind::Baseline18, Precision::Single));
+    let c = scheme_census(&Scheme::new(SchemeKind::Baseline18, OpClass::Single));
     assert_eq!(c.total_blocks, 4);
     assert_eq!(c.count(BlockKind::M18x18), 4);
     assert!(c.padded_blocks > 0); // 24 = 18 + 6: padding in the top chunk
@@ -35,7 +35,7 @@ fn sp_baseline18_uses_four_blocks() {
 #[test]
 fn dp_civp_matches_fig2() {
     // Fig. 2(b): 57x57 = four 24x24 + four 24x9 + one 9x9 = 9 blocks.
-    let c = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Double));
+    let c = scheme_census(&Scheme::new(SchemeKind::Civp, OpClass::Double));
     assert_eq!(c.padded_bits, 57);
     assert_eq!(c.total_blocks, 9);
     assert_eq!(c.count(BlockKind::M24x24), 4);
@@ -47,7 +47,7 @@ fn dp_civp_matches_fig2() {
 fn dp_baseline18_uses_nine_blocks() {
     // §II.B: "The 54x54 bit multiplication can be achieved using nine 18x18
     // bit multipliers".
-    let c = scheme_census(&Scheme::new(SchemeKind::Baseline18, Precision::Double));
+    let c = scheme_census(&Scheme::new(SchemeKind::Baseline18, OpClass::Double));
     assert_eq!(c.padded_bits, 54);
     assert_eq!(c.total_blocks, 9);
     assert_eq!(c.count(BlockKind::M18x18), 9);
@@ -56,7 +56,7 @@ fn dp_baseline18_uses_nine_blocks() {
 #[test]
 fn qp_civp_matches_fig4() {
     // Fig. 4: 114x114 = 4 x 57x57 = 16 x 24x24 + 16 x 24x9 + 4 x 9x9 = 36.
-    let c = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Quad));
+    let c = scheme_census(&Scheme::new(SchemeKind::Civp, OpClass::Quad));
     assert_eq!(c.padded_bits, 114);
     assert_eq!(c.total_blocks, 36);
     assert_eq!(c.count(BlockKind::M24x24), 16);
@@ -67,7 +67,7 @@ fn qp_civp_matches_fig4() {
 #[test]
 fn qp_baseline18_is_49_blocks() {
     // §II.C: "it will require 49 18x18 bit multipliers" (7x7 over 126 bits).
-    let c = scheme_census(&Scheme::new(SchemeKind::Baseline18, Precision::Quad));
+    let c = scheme_census(&Scheme::new(SchemeKind::Baseline18, OpClass::Quad));
     assert_eq!(c.padded_bits, 126);
     assert_eq!(c.total_blocks, analysis::PAPER_CLAIMED_QP_TOTAL_18X18);
     assert_eq!(c.count(BlockKind::M18x18), 49);
@@ -78,7 +78,7 @@ fn qp_baseline18_wastage_recomputed_vs_paper() {
     // The paper claims 17/49 wasted blocks (35%). Recomputed: the top chunk
     // holds 5 real bits, so padded tiles = 7 + 7 - 1 = 13 (26.5%). We pin
     // the recomputed value and keep the paper's constant for reporting.
-    let c = scheme_census(&Scheme::new(SchemeKind::Baseline18, Precision::Quad));
+    let c = scheme_census(&Scheme::new(SchemeKind::Baseline18, OpClass::Quad));
     assert_eq!(c.padded_blocks, 13);
     assert_ne!(c.padded_blocks, analysis::PAPER_CLAIMED_QP_WASTED_18X18);
     // Direction of the claim holds: a significant fraction is padded.
@@ -89,9 +89,9 @@ fn qp_baseline18_wastage_recomputed_vs_paper() {
 fn qp_civp_near_perfect_utilization() {
     // CIVP pads 113 -> 114: exactly one padding bit. Only tiles touching
     // the top 9-bit chunk see it.
-    let c = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Quad));
+    let c = scheme_census(&Scheme::new(SchemeKind::Civp, OpClass::Quad));
     assert!(c.utilization > 0.98, "civp quad utilization {}", c.utilization);
-    let b18 = scheme_census(&Scheme::new(SchemeKind::Baseline18, Precision::Quad));
+    let b18 = scheme_census(&Scheme::new(SchemeKind::Baseline18, OpClass::Quad));
     assert!(c.utilization > b18.utilization);
 }
 
@@ -100,8 +100,8 @@ fn dp_civp_utilization_beats_what_paper_concedes() {
     // §II.B concedes 18x18 "seems the better choice" for DP in block count
     // (9 vs 9) — but CIVP still wins utilization because 54 pads 1 bit vs
     // 57 pads 4.
-    let civp = scheme_census(&Scheme::new(SchemeKind::Civp, Precision::Double));
-    let b18 = scheme_census(&Scheme::new(SchemeKind::Baseline18, Precision::Double));
+    let civp = scheme_census(&Scheme::new(SchemeKind::Civp, OpClass::Double));
+    let b18 = scheme_census(&Scheme::new(SchemeKind::Baseline18, OpClass::Double));
     assert_eq!(civp.total_blocks, b18.total_blocks);
     // Paper's concession: same block count; CIVP's capacity is larger
     // (24-bit ports), so raw utilization is lower — record the real numbers.
@@ -109,27 +109,81 @@ fn dp_civp_utilization_beats_what_paper_concedes() {
     assert!(b18.utilization > 0.9);
 }
 
+// ---------------------------------------------------------------------
+// Sub-single classes: the §II census extended downward (binary16 and
+// bfloat16 on the same block sets).
+// ---------------------------------------------------------------------
+
+#[test]
+fn bf16_civp_is_one_9x9() {
+    // An 8-bit significand pads to 9: the whole product is a single 9x9
+    // firing with one padding bit per port.
+    let c = scheme_census(&Scheme::new(SchemeKind::Civp, OpClass::Bf16));
+    assert_eq!(c.padded_bits, 9);
+    assert_eq!(c.total_blocks, 1);
+    assert_eq!(c.count(BlockKind::M9x9), 1);
+    assert_eq!(c.padded_blocks, 1);
+    assert!((c.utilization - 64.0 / 81.0).abs() < 1e-12);
+}
+
+#[test]
+fn half_civp_is_two_24x9() {
+    // 11-bit operands: A stays whole on the 24 port, B splits [9, 2] on
+    // the 9 port — two 24x9 firings, zero padding bits (11 = 9 + 2).
+    let s = Scheme::new(SchemeKind::Civp, OpClass::Half);
+    assert_eq!(s.a_chunks, vec![11]);
+    assert_eq!(s.b_chunks, vec![9, 2]);
+    assert_eq!(s.padded_bits, 11);
+    let c = scheme_census(&s);
+    assert_eq!(c.total_blocks, 2);
+    assert_eq!(c.count(BlockKind::M24x9), 2);
+    assert_eq!(c.padded_blocks, 0, "11 = 9 + 2 tiles exactly");
+    assert!((c.utilization - 121.0 / 432.0).abs() < 1e-12);
+}
+
+#[test]
+fn sub_single_wastage_on_18x18_baseline() {
+    // The paper's wasted-block criterion applied below single precision:
+    // an 18x18 block multiplying 11- or 8-bit operands is mostly padding.
+    let half18 = scheme_census(&Scheme::new(SchemeKind::Baseline18, OpClass::Half));
+    assert_eq!(half18.total_blocks, 1);
+    assert_eq!(half18.padded_blocks, 1);
+    assert!((half18.utilization - 121.0 / 324.0).abs() < 1e-12);
+    let bf18 = scheme_census(&Scheme::new(SchemeKind::Baseline18, OpClass::Bf16));
+    assert_eq!(bf18.total_blocks, 1);
+    assert!((bf18.utilization - 64.0 / 324.0).abs() < 1e-12);
+    // bf16 is where CIVP's 9x9 pool wins outright: ~4x the utilization of
+    // one 18x18. Binary16 is the honest trade: two 24x9s carry more raw
+    // capacity (432 vs 324 bit-cells) but keep the big 24x24 pool free —
+    // the census records both.
+    let bf_civp = scheme_census(&Scheme::new(SchemeKind::Civp, OpClass::Bf16));
+    assert!(bf_civp.utilization > bf18.utilization * 3.0);
+    let half_civp = scheme_census(&Scheme::new(SchemeKind::Civp, OpClass::Half));
+    assert_eq!(half_civp.count(BlockKind::M24x24), 0, "half never touches the 24x24 pool");
+    assert!(half_civp.utilization < half18.utilization, "capacity cost recorded honestly");
+}
+
 #[test]
 fn baseline25x18_counts() {
     // DSP48E-style: A in 25s, B in 18s.
-    let sp = scheme_census(&Scheme::new(SchemeKind::Baseline25x18, Precision::Single));
+    let sp = scheme_census(&Scheme::new(SchemeKind::Baseline25x18, OpClass::Single));
     assert_eq!(sp.total_blocks, 1 * 2); // 24->one 25-chunk, 24->two 18-chunks
-    let qp = scheme_census(&Scheme::new(SchemeKind::Baseline25x18, Precision::Quad));
+    let qp = scheme_census(&Scheme::new(SchemeKind::Baseline25x18, OpClass::Quad));
     assert_eq!(qp.total_blocks, 5 * 7);
 }
 
 #[test]
 fn baseline9_counts() {
-    let sp = scheme_census(&Scheme::new(SchemeKind::Baseline9, Precision::Single));
+    let sp = scheme_census(&Scheme::new(SchemeKind::Baseline9, OpClass::Single));
     assert_eq!(sp.total_blocks, 9); // 27x27 in 9s
-    let qp = scheme_census(&Scheme::new(SchemeKind::Baseline9, Precision::Quad));
+    let qp = scheme_census(&Scheme::new(SchemeKind::Baseline9, OpClass::Quad));
     assert_eq!(qp.total_blocks, 13 * 13);
 }
 
 #[test]
 fn dead_blocks_only_when_chunk_all_padding() {
     // No scheme for IEEE precisions produces an all-padding chunk.
-    for prec in Precision::ALL {
+    for prec in OpClass::ALL {
         for kind in SchemeKind::ALL {
             let c = scheme_census(&Scheme::new(kind, prec));
             assert_eq!(c.dead_blocks, 0, "{kind:?} {prec:?}");
@@ -139,7 +193,7 @@ fn dead_blocks_only_when_chunk_all_padding() {
 
 #[test]
 fn tile_offsets_cover_operand_exactly() {
-    for prec in Precision::ALL {
+    for prec in OpClass::ALL {
         for kind in SchemeKind::ALL {
             let s = Scheme::new(kind, prec);
             let sum_a: u32 = s.a_chunks.iter().sum();
@@ -164,7 +218,7 @@ fn tile_offsets_cover_operand_exactly() {
 #[test]
 fn execute_exact_all_schemes_all_precisions() {
     forall(0x200, 2_000, |rng| {
-        for prec in Precision::ALL {
+        for prec in OpClass::ALL {
             for kind in SchemeKind::ALL {
                 let s = Scheme::new(kind, prec);
                 let a = rng.sig(prec.sig_bits());
@@ -199,7 +253,7 @@ fn execute_exact_integer_widths() {
 fn execute_edge_operands() {
     // all-zeros (denormal path feeds normalized values, but the executor
     // must still be exact), all-ones, single-bit.
-    for prec in Precision::ALL {
+    for prec in OpClass::ALL {
         let bits = prec.sig_bits();
         let ones = U128::ONE.shl(bits).wrapping_sub(&U128::ONE);
         let one = U128::ONE;
@@ -290,11 +344,11 @@ fn decomp_mul_verified_mode() {
 #[test]
 fn analysis_full_table_shape() {
     let table = AnalysisRow::full_table();
-    assert_eq!(table.len(), 12); // 3 precisions x 4 organizations
+    assert_eq!(table.len(), OpClass::COUNT * SchemeKind::COUNT); // full registry cross-product
     // CIVP quad row repeats Fig. 4 counts.
     let qp_civp = table
         .iter()
-        .find(|r| r.precision == Precision::Quad && r.kind == SchemeKind::Civp)
+        .find(|r| r.class == OpClass::Quad && r.kind == SchemeKind::Civp)
         .unwrap();
     assert_eq!(qp_civp.census.total_blocks, 36);
 }
@@ -305,7 +359,7 @@ fn analysis_full_table_shape() {
 
 #[test]
 fn plan_steps_mirror_tiles() {
-    for prec in Precision::ALL {
+    for prec in OpClass::ALL {
         for kind in SchemeKind::ALL {
             let scheme = Scheme::new(kind, prec);
             let tiles = scheme.tiles();
@@ -323,7 +377,7 @@ fn plan_steps_mirror_tiles() {
 
 #[test]
 fn plan_per_mul_stats_are_one_multiply() {
-    let plan = PlanCache::get(SchemeKind::Civp, Precision::Double);
+    let plan = PlanCache::get(SchemeKind::Civp, OpClass::Double);
     let pm = plan.per_mul_stats();
     assert_eq!(pm.muls, 1);
     assert_eq!(pm.tiles, 9);
@@ -350,7 +404,7 @@ fn decomp_mul_shares_cached_plans() {
 #[test]
 fn plan_exact_for_random_sigs_every_scheme() {
     forall(0x210, 1_000, |rng| {
-        for prec in Precision::ALL {
+        for prec in OpClass::ALL {
             for kind in SchemeKind::ALL {
                 let plan = PlanCache::get(kind, prec);
                 let a = rng.sig(prec.sig_bits());
@@ -378,7 +432,7 @@ fn by_kind_is_deterministic_and_sorted() {
     // comparisons are stable run-to-run: keys iterate in `BlockKind`
     // order, and two identical stat sets render identically.
     let mut stats = ExecStats::default();
-    let plan = PlanCache::get(SchemeKind::Civp, Precision::Quad);
+    let plan = PlanCache::get(SchemeKind::Civp, OpClass::Quad);
     let a = U128::ONE.shl(112);
     plan.execute(a, a, &mut stats);
     let m = stats.by_kind();

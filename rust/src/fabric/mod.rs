@@ -29,4 +29,4 @@ pub use cost::{adder_tree_depth, CostModel};
 pub use pool::{FabricConfig, FabricKind};
 pub use repair::{gated_tile_energy, gating_report, FaultOutcome, RepairableFabric};
 pub use report::{FabricReport, StreamReport};
-pub use sched::{schedule_op, simulate_counts, simulate_stream, OpClass, ScheduledOp};
+pub use sched::{schedule_op, simulate_counts, simulate_stream, FabricOp, ScheduledOp};

@@ -181,7 +181,7 @@ pub fn gating_report(cost: &CostModel, tiles: &[Tile]) -> (f64, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::decomp::{Precision, Scheme, SchemeKind};
+    use crate::decomp::{OpClass, Scheme, SchemeKind};
     use crate::fabric::{schedule_op, CostModel};
 
     #[test]
@@ -250,7 +250,7 @@ mod tests {
             }
         }
         let cost = CostModel::default();
-        let scheme = Scheme::new(SchemeKind::Civp, Precision::Quad);
+        let scheme = Scheme::new(SchemeKind::Civp, OpClass::Quad);
         let healthy = schedule_op(&scheme, &FabricConfig::civp_default(), &cost);
         let degraded = schedule_op(&scheme, &f.effective_config(), &cost);
         assert_eq!(healthy.initiation_interval, 1);
@@ -261,15 +261,15 @@ mod tests {
     fn gating_saves_energy_exactly_where_padding_lives() {
         let cost = CostModel::default();
         // Single precision on CIVP: zero padding -> gating saves nothing.
-        let sp = Scheme::new(SchemeKind::Civp, Precision::Single).tiles();
+        let sp = Scheme::new(SchemeKind::Civp, OpClass::Single).tiles();
         let (gated, fixed) = gating_report(&cost, &sp);
         assert!((gated - fixed).abs() < 1e-9, "fully-used block gains nothing");
         // Quad on 18x18: 13 padded tiles -> gating must save energy.
-        let qp18 = Scheme::new(SchemeKind::Baseline18, Precision::Quad).tiles();
+        let qp18 = Scheme::new(SchemeKind::Baseline18, OpClass::Quad).tiles();
         let (gated, fixed) = gating_report(&cost, &qp18);
         assert!(gated < fixed * 0.95, "gated {gated} vs fixed {fixed}");
         // And gated energy is never more than fixed for any scheme.
-        for prec in Precision::ALL {
+        for prec in OpClass::ALL {
             for kind in SchemeKind::ALL {
                 let tiles = Scheme::new(kind, prec).tiles();
                 let (g, f) = gating_report(&cost, &tiles);

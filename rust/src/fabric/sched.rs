@@ -9,23 +9,23 @@
 use super::cost::CostModel;
 use super::pool::FabricConfig;
 use super::report::{FabricReport, StreamReport};
-use crate::decomp::{Precision, Scheme, SchemeKind};
+use crate::decomp::{OpClass, Scheme, SchemeKind};
 use std::collections::BTreeMap;
 
-/// One operation class flowing through the fabric: a significand multiply
-/// of `precision` under `organization`.
+/// One operation kind flowing through the fabric: a significand multiply
+/// of registry class `class` under `organization`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct OpClass {
-    /// IEEE precision of the multiply.
-    pub precision: Precision,
+pub struct FabricOp {
+    /// Operation class of the multiply (any [`OpClass`] registry entry).
+    pub class: OpClass,
     /// Partition organization executing it.
     pub organization: SchemeKind,
 }
 
-impl OpClass {
-    /// The scheme for this class.
+impl FabricOp {
+    /// The scheme for this op kind.
     pub fn scheme(&self) -> Scheme {
-        Scheme::new(self.organization, self.precision)
+        Scheme::new(self.organization, self.class)
     }
 }
 
@@ -91,11 +91,11 @@ pub fn schedule_op(scheme: &Scheme, fabric: &FabricConfig, cost: &CostModel) -> 
 /// closed form from per-class counts, and the property tests pin the two
 /// bit-for-bit against each other.
 pub fn simulate_stream(
-    ops: &[OpClass],
+    ops: &[FabricOp],
     fabric: &FabricConfig,
     cost: &CostModel,
 ) -> StreamReport {
-    let mut per_class: BTreeMap<OpClass, u64> = BTreeMap::new();
+    let mut per_class: BTreeMap<FabricOp, u64> = BTreeMap::new();
     for op in ops {
         *per_class.entry(*op).or_insert(0) += 1;
     }
@@ -125,7 +125,7 @@ pub fn simulate_stream(
         dyn_energy += s.dyn_energy * *count as f64;
         useful_energy += s.useful_energy * *count as f64;
         per_class_reports.push(FabricReport {
-            label: format!("{}-{}", class.organization.name(), class.precision.name()),
+            label: format!("{}-{}", class.organization.name(), class.class.name()),
             ops: *count,
             cycles: issue + s.latency_cycles as u64,
             dyn_energy: s.dyn_energy * *count as f64,
@@ -165,7 +165,7 @@ pub fn simulate_stream(
 /// the service's lock-free per-class counters: reporting cost no longer
 /// grows with traffic.
 pub fn simulate_counts(
-    counts: &BTreeMap<OpClass, u64>,
+    counts: &BTreeMap<FabricOp, u64>,
     fabric: &FabricConfig,
     cost: &CostModel,
 ) -> StreamReport {
@@ -196,7 +196,7 @@ pub fn simulate_counts(
         dyn_energy += s.dyn_energy * count as f64;
         useful_energy += s.useful_energy * count as f64;
         per_class_reports.push(FabricReport {
-            label: format!("{}-{}", class.organization.name(), class.precision.name()),
+            label: format!("{}-{}", class.organization.name(), class.class.name()),
             ops: count,
             cycles: issue + s.latency_cycles as u64,
             dyn_energy: s.dyn_energy * count as f64,

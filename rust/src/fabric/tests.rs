@@ -2,7 +2,7 @@
 //! the paper's §II.C power argument reproduced quantitatively.
 
 use super::*;
-use crate::decomp::{BlockKind, Precision, Scheme, SchemeKind};
+use crate::decomp::{BlockKind, OpClass, Scheme, SchemeKind};
 use crate::proput::forall;
 
 #[test]
@@ -60,13 +60,13 @@ fn schedule_qp_single_wave_on_default_fabrics() {
     // Both default fabrics are sized for one quad multiply per wave.
     let cm = CostModel::default();
     let civp = schedule_op(
-        &Scheme::new(SchemeKind::Civp, Precision::Quad),
+        &Scheme::new(SchemeKind::Civp, OpClass::Quad),
         &FabricConfig::civp_default(),
         &cm,
     );
     assert_eq!(civp.initiation_interval, 1);
     let legacy = schedule_op(
-        &Scheme::new(SchemeKind::Baseline18, Precision::Quad),
+        &Scheme::new(SchemeKind::Baseline18, OpClass::Quad),
         &FabricConfig::legacy_default(),
         &cm,
     );
@@ -82,12 +82,12 @@ fn paper_power_claim_qp() {
     // none.
     let cm = CostModel::default();
     let civp = schedule_op(
-        &Scheme::new(SchemeKind::Civp, Precision::Quad),
+        &Scheme::new(SchemeKind::Civp, OpClass::Quad),
         &FabricConfig::civp_default(),
         &cm,
     );
     let legacy = schedule_op(
-        &Scheme::new(SchemeKind::Baseline18, Precision::Quad),
+        &Scheme::new(SchemeKind::Baseline18, OpClass::Quad),
         &FabricConfig::legacy_default(),
         &cm,
     );
@@ -106,7 +106,7 @@ fn schedule_waves_scale_with_undersized_fabric() {
     for n in fabric.instances.values_mut() {
         *n = (*n).div_ceil(2);
     }
-    let s = schedule_op(&Scheme::new(SchemeKind::Civp, Precision::Quad), &fabric, &cm);
+    let s = schedule_op(&Scheme::new(SchemeKind::Civp, OpClass::Quad), &fabric, &cm);
     assert_eq!(s.initiation_interval, 2);
 }
 
@@ -115,7 +115,7 @@ fn schedule_waves_scale_with_undersized_fabric() {
 fn schedule_panics_on_missing_kind() {
     let cm = CostModel::default();
     schedule_op(
-        &Scheme::new(SchemeKind::Civp, Precision::Quad),
+        &Scheme::new(SchemeKind::Civp, OpClass::Quad),
         &FabricConfig::legacy_default(),
         &cm,
     );
@@ -125,12 +125,12 @@ fn schedule_panics_on_missing_kind() {
 fn can_serve_routes_correctly() {
     let civp = FabricConfig::civp_default();
     let legacy = FabricConfig::legacy_default();
-    let needs_civp = Scheme::new(SchemeKind::Civp, Precision::Quad)
+    let needs_civp = Scheme::new(SchemeKind::Civp, OpClass::Quad)
         .tiles()
         .iter()
         .map(|t| t.kind)
         .collect::<Vec<_>>();
-    let needs_18 = Scheme::new(SchemeKind::Baseline18, Precision::Quad)
+    let needs_18 = Scheme::new(SchemeKind::Baseline18, OpClass::Quad)
         .tiles()
         .iter()
         .map(|t| t.kind)
@@ -144,8 +144,8 @@ fn can_serve_routes_correctly() {
 #[test]
 fn stream_throughput_monotone_in_fabric_size() {
     let cm = CostModel::default();
-    let ops: Vec<OpClass> = (0..100)
-        .map(|_| OpClass { precision: Precision::Double, organization: SchemeKind::Civp })
+    let ops: Vec<FabricOp> = (0..100)
+        .map(|_| FabricOp { class: OpClass::Double, organization: SchemeKind::Civp })
         .collect();
     let r1 = simulate_stream(&ops, &FabricConfig::civp_scaled(1), &cm);
     let r4 = simulate_stream(&ops, &FabricConfig::civp_scaled(4), &cm);
@@ -156,20 +156,16 @@ fn stream_throughput_monotone_in_fabric_size() {
 }
 
 #[test]
-fn stream_mixed_precisions() {
+fn stream_mixed_classes_full_registry() {
     let cm = CostModel::default();
     let mut ops = Vec::new();
-    for i in 0..300 {
-        let precision = match i % 3 {
-            0 => Precision::Single,
-            1 => Precision::Double,
-            _ => Precision::Quad,
-        };
-        ops.push(OpClass { precision, organization: SchemeKind::Civp });
+    for i in 0..300usize {
+        let class = OpClass::from_index(i % OpClass::COUNT);
+        ops.push(FabricOp { class, organization: SchemeKind::Civp });
     }
     let r = simulate_stream(&ops, &FabricConfig::civp_scaled(2), &cm);
     assert_eq!(r.total_ops, 300);
-    assert_eq!(r.per_class.len(), 3);
+    assert_eq!(r.per_class.len(), OpClass::COUNT);
     assert!(r.cycles > 0);
     assert!(r.wasted_fraction() < 0.15);
 }
@@ -178,7 +174,7 @@ fn stream_mixed_precisions() {
 fn simulate_counts_matches_stream_oracle() {
     // The closed-form count simulator must agree *bit-for-bit* with the
     // materialized-stream oracle, over random op mixes covering all four
-    // organizations and all three precisions (counts 0..1000). Each fabric
+    // organizations and every registry class (counts 0..1000). Each fabric
     // only serves the organizations whose block kinds it ships.
     use std::collections::BTreeMap;
     let cm = CostModel::default();
@@ -191,19 +187,19 @@ fn simulate_counts_matches_stream_oracle() {
     ];
     forall(0x301, 50, |rng| {
         for (fabric, kinds) in &fabric_classes {
-            let mut counts: BTreeMap<OpClass, u64> = BTreeMap::new();
-            let mut ops: Vec<OpClass> = Vec::new();
+            let mut counts: BTreeMap<FabricOp, u64> = BTreeMap::new();
+            let mut ops: Vec<FabricOp> = Vec::new();
             for &organization in kinds {
-                for precision in Precision::ALL {
+                for class in OpClass::ALL {
                     let n = rng.below(1000);
-                    let class = OpClass { precision, organization };
+                    let op = FabricOp { class, organization };
                     if n > 0 {
-                        counts.insert(class, n);
-                        ops.extend(std::iter::repeat(class).take(n as usize));
+                        counts.insert(op, n);
+                        ops.extend(std::iter::repeat(op).take(n as usize));
                     } else if rng.chance(0.5) {
                         // Zero-count entries must be ignored, matching a
                         // stream in which the class never appears.
-                        counts.insert(class, 0);
+                        counts.insert(op, 0);
                     }
                 }
             }
@@ -228,14 +224,10 @@ fn stream_energy_accounting_consistent() {
     forall(0x300, 100, |rng| {
         let cm = CostModel::default();
         let n = rng.range(1, 50);
-        let ops: Vec<OpClass> = (0..n)
+        let ops: Vec<FabricOp> = (0..n)
             .map(|_| {
-                let precision = match rng.below(3) {
-                    0 => Precision::Single,
-                    1 => Precision::Double,
-                    _ => Precision::Quad,
-                };
-                OpClass { precision, organization: SchemeKind::Civp }
+                let class = OpClass::from_index(rng.below(OpClass::COUNT as u64) as usize);
+                FabricOp { class, organization: SchemeKind::Civp }
             })
             .collect();
         let r = simulate_stream(&ops, &FabricConfig::civp_scaled(1), &cm);

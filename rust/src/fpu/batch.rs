@@ -29,10 +29,10 @@
 //! fused path is bit-for-bit identical to N× [`super::mul_bits`]
 //! (`rust/tests/plan_equiv.rs`), specials, flags and all.
 
-use super::format::{FpFormat, DOUBLE, QUAD, SINGLE};
+use super::format::{FpFormat, BF16, DOUBLE, HALF, QUAD, SINGLE};
 use super::round::RoundMode;
 use super::softfp::{finish_product, special_product, DirectMul, Flags};
-use super::types::{Fp128, Fp32, Fp64};
+use super::types::{Bf16, Fp128, Fp16, Fp32, Fp64};
 use crate::wideint::{mul_u128, U128, U256};
 
 /// Batch counterpart of [`SigMultiplier`](super::SigMultiplier): the
@@ -64,8 +64,9 @@ impl SigBatchMultiplier for DirectMul {
 }
 
 /// A packed IEEE scalar the batched pipeline can process: one of
-/// [`Fp32`], [`Fp64`], [`Fp128`]. Carries its format descriptor and the
-/// `u128` bit-pattern conversions the generic surface needs.
+/// [`Bf16`], [`Fp16`], [`Fp32`], [`Fp64`], [`Fp128`] — one per
+/// [`super::OpClass`]. Carries its format descriptor and the `u128`
+/// bit-pattern conversions the generic surface needs.
 pub trait FpScalar: Copy {
     /// The IEEE interchange format of this scalar.
     const FORMAT: FpFormat;
@@ -73,6 +74,26 @@ pub trait FpScalar: Copy {
     fn to_bits_u128(self) -> u128;
     /// Rebuild from a packed bit pattern.
     fn from_bits_u128(bits: u128) -> Self;
+}
+
+impl FpScalar for Bf16 {
+    const FORMAT: FpFormat = BF16;
+    fn to_bits_u128(self) -> u128 {
+        self.0 as u128
+    }
+    fn from_bits_u128(bits: u128) -> Self {
+        Bf16(bits as u16)
+    }
+}
+
+impl FpScalar for Fp16 {
+    const FORMAT: FpFormat = HALF;
+    fn to_bits_u128(self) -> u128 {
+        self.0 as u128
+    }
+    fn from_bits_u128(bits: u128) -> Self {
+        Fp16(bits as u16)
+    }
 }
 
 impl FpScalar for Fp32 {

@@ -1,0 +1,174 @@
+//! The open operation-class registry.
+//!
+//! Every layer of the system — scheme construction, plan caching, batcher
+//! routing, op counters, cluster servability masks, workload mixes, the
+//! CLI — iterates or indexes over [`OpClass::ALL`] instead of hard-coding
+//! the paper's three IEEE precisions. Adding a served format is therefore
+//! one edit here (a variant, its [`FpFormat`] in [`super::format`], and a
+//! `civp_chunks` arm in `decomp::scheme`); the rest of the stack sizes
+//! itself from [`OpClass::COUNT`].
+//!
+//! The registry currently serves five classes, ordered by significand
+//! width: bfloat16 (8), binary16 (11), binary32 (24), binary64 (53) and
+//! binary128 (113). The two sub-single formats extend the paper's §II
+//! census *downward*: a bf16 significand product fits one `9x9` block and
+//! a binary16 product tiles onto the `24x9` block, so the CIVP block set
+//! serves them without touching the `24x24` pool.
+
+use super::format::{FpFormat, BF16, DOUBLE, HALF, QUAD, SINGLE};
+
+/// One served floating-point operation class (a packed interchange format
+/// whose multiplications the system batches, executes and accounts).
+///
+/// ```
+/// use civp::fpu::OpClass;
+///
+/// // The registry drives every class-indexed structure in the stack.
+/// assert_eq!(OpClass::COUNT, 5);
+/// for (i, class) in OpClass::ALL.into_iter().enumerate() {
+///     assert_eq!(class.index(), i);
+///     assert_eq!(OpClass::from_index(i), class);
+///     assert_eq!(OpClass::parse(class.name()), Some(class));
+/// }
+/// // Significand widths drive the block-count claims: 8/11/24/53/113.
+/// assert_eq!(OpClass::Half.sig_bits(), 11);
+/// assert_eq!(OpClass::Quad.sig_bits(), 113);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpClass {
+    /// bfloat16 — 8-bit significand (one `9x9` block).
+    Bf16,
+    /// binary16 — 11-bit significand (two `24x9` firings).
+    Half,
+    /// binary32 — 24-bit significand.
+    Single,
+    /// binary64 — 53-bit significand.
+    Double,
+    /// binary128 — 113-bit significand.
+    Quad,
+}
+
+impl OpClass {
+    /// All served classes, ascending significand width. This array IS the
+    /// registry: every `[T; OpClass::COUNT]` structure in the stack is
+    /// indexed by position in it.
+    pub const ALL: [OpClass; 5] =
+        [OpClass::Bf16, OpClass::Half, OpClass::Single, OpClass::Double, OpClass::Quad];
+
+    /// Number of served classes (sizes the flat arrays everywhere).
+    pub const COUNT: usize = Self::ALL.len();
+
+    /// Dense index into class-indexed arrays (position in [`OpClass::ALL`]).
+    #[inline]
+    pub const fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Inverse of [`OpClass::index`].
+    ///
+    /// # Panics
+    ///
+    /// Panics if `i >= OpClass::COUNT`.
+    #[inline]
+    pub const fn from_index(i: usize) -> OpClass {
+        Self::ALL[i]
+    }
+
+    /// The interchange format descriptor — the single source of truth for
+    /// exponent/fraction widths (trace generation, tests and the schemes
+    /// all read from here).
+    pub const fn format(self) -> &'static FpFormat {
+        match self {
+            OpClass::Bf16 => &BF16,
+            OpClass::Half => &HALF,
+            OpClass::Single => &SINGLE,
+            OpClass::Double => &DOUBLE,
+            OpClass::Quad => &QUAD,
+        }
+    }
+
+    /// Significand width including the hidden bit — the integer multiplier
+    /// width handed to the block array (8 / 11 / 24 / 53 / 113).
+    pub const fn sig_bits(self) -> u32 {
+        self.format().sig_bits()
+    }
+
+    /// Total packed storage width (16 / 16 / 32 / 64 / 128).
+    pub const fn total_bits(self) -> u32 {
+        self.format().total_bits()
+    }
+
+    /// Display / CLI / metrics name.
+    pub const fn name(self) -> &'static str {
+        self.format().name
+    }
+
+    /// Parse from a CLI / config string (accepts the display name plus the
+    /// IEEE interchange aliases, for every class).
+    pub fn parse(s: &str) -> Option<OpClass> {
+        match s {
+            "bfloat16" => return Some(OpClass::Bf16),
+            "binary16" | "fp16" => return Some(OpClass::Half),
+            "binary32" | "fp32" => return Some(OpClass::Single),
+            "binary64" | "fp64" => return Some(OpClass::Double),
+            "binary128" | "fp128" => return Some(OpClass::Quad),
+            _ => {}
+        }
+        Self::ALL.into_iter().find(|c| c.name() == s)
+    }
+
+    /// The class whose significand is exactly `width` bits, if any — how
+    /// width-keyed caches route IEEE widths to the class plans.
+    pub const fn from_sig_bits(width: u32) -> Option<OpClass> {
+        match width {
+            8 => Some(OpClass::Bf16),
+            11 => Some(OpClass::Half),
+            24 => Some(OpClass::Single),
+            53 => Some(OpClass::Double),
+            113 => Some(OpClass::Quad),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_dense_and_ordered_by_width() {
+        let mut last = 0;
+        for (i, class) in OpClass::ALL.into_iter().enumerate() {
+            assert_eq!(class.index(), i);
+            assert_eq!(OpClass::from_index(i), class);
+            assert!(class.sig_bits() > last, "ALL must ascend by significand width");
+            last = class.sig_bits();
+            assert_eq!(OpClass::from_sig_bits(class.sig_bits()), Some(class));
+        }
+        assert_eq!(OpClass::from_sig_bits(48), None);
+    }
+
+    #[test]
+    fn parse_roundtrip_and_aliases() {
+        for class in OpClass::ALL {
+            assert_eq!(OpClass::parse(class.name()), Some(class));
+        }
+        assert_eq!(OpClass::parse("binary16"), Some(OpClass::Half));
+        assert_eq!(OpClass::parse("fp16"), Some(OpClass::Half));
+        assert_eq!(OpClass::parse("bfloat16"), Some(OpClass::Bf16));
+        assert_eq!(OpClass::parse("binary32"), Some(OpClass::Single));
+        assert_eq!(OpClass::parse("fp64"), Some(OpClass::Double));
+        assert_eq!(OpClass::parse("binary128"), Some(OpClass::Quad));
+        assert_eq!(OpClass::parse("nope"), None);
+    }
+
+    #[test]
+    fn formats_are_the_fpu_descriptors() {
+        assert_eq!(OpClass::Single.format(), &SINGLE);
+        assert_eq!(OpClass::Half.total_bits(), 16);
+        assert_eq!(OpClass::Bf16.total_bits(), 16);
+        assert_eq!(OpClass::Quad.sig_bits(), 113);
+        // Class bitmasks across the stack fit one byte.
+        assert!(OpClass::COUNT <= 8);
+    }
+}

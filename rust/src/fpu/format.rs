@@ -34,6 +34,13 @@ pub struct FpFormat {
     pub frac_bits: u32,
 }
 
+/// bfloat16: the ML truncated-single format — 8-bit significand. Sub-single:
+/// the whole significand product fits one `9x9` CIVP block.
+pub const BF16: FpFormat = FpFormat { name: "bf16", exp_bits: 8, frac_bits: 7 };
+/// binary16 ("half") — 11-bit significand. Sub-single: tiles onto the `24x9`
+/// CIVP block (one whole 11-bit operand on the 24 port, the other split
+/// `[9, 2]` across the 9 port).
+pub const HALF: FpFormat = FpFormat { name: "half", exp_bits: 5, frac_bits: 10 };
 /// binary32: the paper's "single precision" — 24-bit significand.
 pub const SINGLE: FpFormat = FpFormat { name: "single", exp_bits: 8, frac_bits: 23 };
 /// binary64: Fig. 1 — 53-bit significand.
@@ -95,6 +102,13 @@ impl FpFormat {
             v.set_bit(self.total_bits() - 1);
         }
         v
+    }
+
+    /// Positive one's bit pattern (biased exponent = bias, zero fraction) —
+    /// the registry-derived constant tests and examples use instead of
+    /// hand-mirrored per-format tables.
+    pub const fn one(&self) -> u128 {
+        (self.bias() as u128) << self.frac_bits
     }
 
     /// ±0 bit pattern.
@@ -205,6 +219,55 @@ impl Unpacked {
 #[cfg(test)]
 mod format_tests {
     use super::*;
+
+    #[test]
+    fn sub_single_field_widths() {
+        // binary16: 1 + 5 + 10; hidden bit -> 11-bit significand.
+        assert_eq!(HALF.total_bits(), 16);
+        assert_eq!(HALF.sig_bits(), 11);
+        assert_eq!(HALF.bias(), 15);
+        assert_eq!(HALF.emin(), -14);
+        assert_eq!(HALF.emax(), 15);
+        // bfloat16: 1 + 8 + 7; hidden bit -> 8-bit significand. Same
+        // exponent range as binary32.
+        assert_eq!(BF16.total_bits(), 16);
+        assert_eq!(BF16.sig_bits(), 8);
+        assert_eq!(BF16.bias(), 127);
+        assert_eq!(BF16.emin(), SINGLE.emin());
+    }
+
+    #[test]
+    fn sub_single_special_patterns() {
+        // binary16 constants: +inf 0x7C00, qNaN 0x7E00, max 0x7BFF.
+        assert_eq!(HALF.inf(false).as_u64(), 0x7C00);
+        assert_eq!(HALF.quiet_nan().as_u64(), 0x7E00);
+        assert_eq!(HALF.max_finite(false).as_u64(), 0x7BFF);
+        assert_eq!(HALF.zero(true).as_u64(), 0x8000);
+        // bfloat16 constants: +inf 0x7F80, qNaN 0x7FC0, max 0x7F7F.
+        assert_eq!(BF16.inf(false).as_u64(), 0x7F80);
+        assert_eq!(BF16.quiet_nan().as_u64(), 0x7FC0);
+        assert_eq!(BF16.max_finite(false).as_u64(), 0x7F7F);
+        // 1.0 derived from the registry format, every class.
+        assert_eq!(HALF.one(), 0x3C00);
+        assert_eq!(BF16.one(), 0x3F80);
+        assert_eq!(SINGLE.one(), 0x3F80_0000);
+        assert_eq!(DOUBLE.one(), 0x3FF0_0000_0000_0000);
+        assert_eq!(QUAD.one(), 0x3FFF_u128 << 112);
+    }
+
+    #[test]
+    fn sub_single_unpack_pack_roundtrip() {
+        for fmt in [&HALF, &BF16] {
+            for bits in 0..(1u64 << 16) {
+                let raw = U128::from_u64(bits);
+                let u = fmt.unpack(raw);
+                if u.class == FpClass::Nan {
+                    continue; // NaN payloads canonicalize
+                }
+                assert_eq!(fmt.pack(u.sign, u.exp, u.sig), raw, "{} {bits:#06x}", fmt.name);
+            }
+        }
+    }
 
     #[test]
     fn field_widths_match_paper_figures() {

@@ -2,14 +2,16 @@
 //!
 //! The paper's contribution is a *significand-multiplier organization*;
 //! everything around it (unpack, normalize, round, pack, special cases) is
-//! standard IEEE-754. This module implements that standard machinery for
-//! the three precisions the paper targets — single (binary32), double
-//! (binary64) and quadruple (binary128) — with the significand multiplier
-//! left pluggable via [`SigMultiplier`], so the CIVP decomposition engine
-//! (and the baseline 18x18 / 25x18 tilings) can be dropped into a real FP
+//! standard IEEE-754. This module implements that standard machinery
+//! generically over an [`FpFormat`], with the significand multiplier left
+//! pluggable via [`SigMultiplier`], so the CIVP decomposition engine (and
+//! the baseline 18x18 / 25x18 tilings) can be dropped into a real FP
 //! multiply and verified bit-exactly against hardware.
 //!
-//! Layout (Fig. 1 / Fig. 3 of the paper):
+//! The served formats live in the open [`OpClass`] registry — the paper's
+//! three precisions plus two sub-single classes:
+//! * bfloat16  — 1 sign, 8 exponent,  7 fraction  (8-bit significand)
+//! * binary16  — 1 sign, 5 exponent,  10 fraction (11-bit significand)
 //! * binary32  — 1 sign, 8 exponent,  23 fraction (24-bit significand)
 //! * binary64  — 1 sign, 11 exponent, 52 fraction (53-bit significand)
 //! * binary128 — 1 sign, 15 exponent, 112 fraction (113-bit significand)
@@ -21,6 +23,7 @@
 //! significands in one tile-major batch call.
 
 mod batch;
+mod class;
 mod format;
 mod round;
 mod softfp;
@@ -31,7 +34,8 @@ mod tests;
 mod golden;
 
 pub use batch::{FpScalar, FpuBatch, SigBatchMultiplier};
-pub use format::{FpClass, FpFormat, Unpacked, DOUBLE, QUAD, SINGLE};
+pub use class::OpClass;
+pub use format::{FpClass, FpFormat, Unpacked, BF16, DOUBLE, HALF, QUAD, SINGLE};
 pub use round::RoundMode;
 pub use softfp::{mul_bits, mul_bits_batch, DirectMul, Flags, SigMultiplier};
-pub use types::{Fp128, Fp32, Fp64};
+pub use types::{Bf16, Fp128, Fp16, Fp32, Fp64};

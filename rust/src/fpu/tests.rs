@@ -327,13 +327,35 @@ fn fp128_overflow_underflow() {
 }
 
 #[test]
-fn all_round_modes_run_every_precision() {
+fn all_round_modes_run_every_class() {
     for mode in RoundMode::ALL {
+        let (r, _) = Bf16::from_f32(1.5).mul_with(Bf16::from_f32(2.5), mode, &mut DirectMul);
+        assert_eq!(r.to_f32(), 3.75); // exact in every mode
+        let (r, _) = Fp16::from_f32(1.5).mul_with(Fp16::from_f32(2.5), mode, &mut DirectMul);
+        assert_eq!(r.to_f32(), 3.75);
         let (r, _) = Fp32::from_f32(1.1).mul_with(Fp32::from_f32(2.2), mode, &mut DirectMul);
         assert!((r.to_f32() - 2.42).abs() < 1e-5);
         let (r, _) = Fp64::from_f64(1.1).mul_with(Fp64::from_f64(2.2), mode, &mut DirectMul);
         assert!((r.to_f64() - 2.42).abs() < 1e-12);
         let (r, _) = Fp128::from_f64(1.5).mul_with(Fp128::from_f64(2.5), mode, &mut DirectMul);
         assert_eq!(r.to_f64_lossy(), 3.75);
+    }
+}
+
+#[test]
+fn fp16_exhaustive_vs_f32_oracle_sample_plane() {
+    // Exhaustive over one full operand plane: every binary16 value times a
+    // fixed set of multipliers, against the exact-f32-product oracle.
+    for b in [0x3C00u16, 0x0001, 0x7BFF, 0x0400, 0xBC01] {
+        for a_bits in 0..=u16::MAX {
+            let a = Fp16(a_bits);
+            let got = a.mul(Fp16(b));
+            let want = Fp16::from_f32(a.to_f32() * Fp16(b).to_f32());
+            if want.is_nan() {
+                assert!(got.is_nan(), "a={a_bits:#06x} b={b:#06x}");
+            } else {
+                assert_eq!(got.0, want.0, "a={a_bits:#06x} b={b:#06x}");
+            }
+        }
     }
 }

@@ -1,6 +1,6 @@
 //! Ergonomic typed wrappers over the generic bit-level pipeline.
 
-use super::format::{FpClass, FpFormat, DOUBLE, QUAD, SINGLE};
+use super::format::{FpClass, FpFormat, BF16, DOUBLE, HALF, QUAD, SINGLE};
 use super::round::RoundMode;
 use super::softfp::{mul_bits, DirectMul, Flags, SigMultiplier};
 use crate::wideint::U128;
@@ -46,6 +46,135 @@ macro_rules! common_impl {
         }
     };
 }
+
+/// IEEE binary16 ("half") value carried as raw bits — the first sub-single
+/// class the open op-class registry serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fp16(/** Raw IEEE binary16 bit pattern. */ pub u16);
+
+impl Fp16 {
+    /// Convert from a native `f32` with round-to-nearest-even (the IEEE
+    /// `convertFormat` operation, subnormals and overflow included).
+    pub fn from_f32(v: f32) -> Self {
+        let bits = v.to_bits();
+        let sign = ((bits >> 31) as u16) << 15;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let frac = bits & 0x007F_FFFF;
+        if exp == 0xFF {
+            // Inf stays Inf; NaN canonicalizes to a quiet NaN.
+            return Fp16(if frac == 0 { sign | 0x7C00 } else { sign | 0x7E00 });
+        }
+        if exp == 0 {
+            // f32 subnormals are < 2^-126, far below half's 2^-24 ulp: they
+            // round to signed zero under RNE.
+            return Fp16(sign);
+        }
+        // Normal f32: 24-bit significand with the hidden bit at 23.
+        let sig = frac | 0x0080_0000;
+        let mut e = exp - 127; // unbiased
+        // Keep 11 bits: shift right by 13, more if the result denormalizes.
+        let mut shift = 13u32;
+        if e < -14 {
+            shift += ((-14 - e) as u32).min(32);
+            e = -14;
+        }
+        let (kept, round, sticky) = if shift >= 32 {
+            (0u32, false, sig != 0)
+        } else {
+            (
+                sig >> shift,
+                (sig >> (shift - 1)) & 1 == 1,
+                sig & ((1 << (shift - 1)) - 1) != 0,
+            )
+        };
+        let mut kept = kept;
+        if round && (sticky || kept & 1 == 1) {
+            kept += 1; // RNE; may carry into the exponent
+        }
+        if kept >= 1 << 11 {
+            kept >>= 1;
+            e += 1;
+        }
+        if kept >= 1 << 10 {
+            // Normal (the carry above may have renormalized a subnormal).
+            if e > 15 {
+                return Fp16(sign | 0x7C00); // overflow to inf (RNE)
+            }
+            Fp16(sign | (((e + 15) as u16) << 10) | (kept as u16 & 0x03FF))
+        } else {
+            // Subnormal or zero (e == -14 here).
+            Fp16(sign | kept as u16)
+        }
+    }
+
+    /// Widen exactly to a native `f32` (every binary16 is representable).
+    pub fn to_f32(self) -> f32 {
+        let sign = ((self.0 >> 15) as u32) << 31;
+        let exp = ((self.0 >> 10) & 0x1F) as u32;
+        let frac = (self.0 & 0x03FF) as u32;
+        let bits = if exp == 0x1F {
+            // Inf / NaN: payload shifts into the f32 fraction field.
+            sign | 0x7F80_0000 | (frac << 13)
+        } else if exp == 0 {
+            if frac == 0 {
+                sign
+            } else {
+                // Subnormal: value = frac * 2^-24; normalize into f32.
+                let lz = frac.leading_zeros() - 22; // zeros within 10 bits
+                let nfrac = (frac << (lz + 1)) & 0x03FF; // drop hidden
+                let e = -14 - (lz as i32 + 1) + 127;
+                sign | ((e as u32) << 23) | (nfrac << 13)
+            }
+        } else {
+            sign | ((exp + 127 - 15) << 23) | (frac << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    fn to_u128(self) -> U128 {
+        U128::from_u64(self.0 as u64)
+    }
+    fn from_u128(v: U128) -> Self {
+        Fp16(v.as_u64() as u16)
+    }
+}
+common_impl!(Fp16, HALF);
+
+/// bfloat16 value carried as raw bits — the truncated-single ML format,
+/// the second sub-single class the registry serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Bf16(/** Raw bfloat16 bit pattern. */ pub u16);
+
+impl Bf16 {
+    /// Convert from a native `f32` with round-to-nearest-even. bfloat16
+    /// shares binary32's exponent range, so this is rounding the low 16
+    /// fraction bits off (a fraction carry correctly ripples into the
+    /// exponent, max-finite rounding up to infinity included).
+    pub fn from_f32(v: f32) -> Self {
+        let bits = v.to_bits();
+        if v.is_nan() {
+            return Bf16((((bits >> 31) as u16) << 15) | 0x7FC0);
+        }
+        let kept = bits >> 16;
+        let round = (bits >> 15) & 1 == 1;
+        let sticky = bits & 0x7FFF != 0;
+        let inc = round && (sticky || kept & 1 == 1);
+        Bf16((kept + inc as u32) as u16)
+    }
+
+    /// Widen exactly to a native `f32` (bit pattern `<< 16`).
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    fn to_u128(self) -> U128 {
+        U128::from_u64(self.0 as u64)
+    }
+    fn from_u128(v: U128) -> Self {
+        Bf16(v.as_u64() as u16)
+    }
+}
+common_impl!(Bf16, BF16);
 
 /// IEEE binary32 value carried as raw bits.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -239,6 +368,81 @@ mod tests {
     fn fp128_roundtrip_extremes() {
         for v in [f64::MAX, f64::MIN_POSITIVE, 1e-300, 1e300] {
             assert_eq!(Fp128::from_f64(v).to_f64_lossy(), v);
+        }
+    }
+
+    #[test]
+    fn fp16_roundtrip_exhaustive() {
+        // to_f32 is exact, so from_f32 ∘ to_f32 must be the identity on
+        // every non-NaN binary16 pattern — all 65536 checked.
+        for bits in 0..=u16::MAX {
+            let h = Fp16(bits);
+            if h.is_nan() {
+                assert!(h.to_f32().is_nan());
+                assert!(Fp16::from_f32(h.to_f32()).is_nan());
+                continue;
+            }
+            assert_eq!(Fp16::from_f32(h.to_f32()).0, bits, "{bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_exhaustive() {
+        for bits in 0..=u16::MAX {
+            let b = Bf16(bits);
+            if b.is_nan() {
+                assert!(b.to_f32().is_nan());
+                assert!(Bf16::from_f32(b.to_f32()).is_nan());
+                continue;
+            }
+            assert_eq!(Bf16::from_f32(b.to_f32()).0, bits, "{bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn fp16_from_f32_directed() {
+        assert_eq!(Fp16::from_f32(1.0).0, 0x3C00);
+        assert_eq!(Fp16::from_f32(-2.0).0, 0xC000);
+        assert_eq!(Fp16::from_f32(65504.0).0, 0x7BFF); // max finite
+        assert_eq!(Fp16::from_f32(65520.0).0, 0x7C00); // rounds to inf
+        assert_eq!(Fp16::from_f32(f32::INFINITY).0, 0x7C00);
+        assert!(Fp16::from_f32(f32::NAN).is_nan());
+        // min subnormal 2^-24; half of it ties to even (zero).
+        assert_eq!(Fp16::from_f32(5.9604645e-8).0, 0x0001);
+        assert_eq!(Fp16::from_f32(2.9802322e-8).0, 0x0000);
+        assert_eq!(Fp16::from_f32(-0.0).0, 0x8000);
+        // f32 subnormals collapse to signed zero.
+        assert_eq!(Fp16::from_f32(f32::from_bits(1)).0, 0x0000);
+    }
+
+    #[test]
+    fn bf16_from_f32_directed() {
+        assert_eq!(Bf16::from_f32(1.0).0, 0x3F80);
+        assert_eq!(Bf16::from_f32(-1.5).0, 0xBFC0);
+        assert_eq!(Bf16::from_f32(f32::MAX).0, 0x7F80); // rounds to inf
+        assert_eq!(Bf16::from_f32(f32::INFINITY).0, 0x7F80);
+        assert!(Bf16::from_f32(f32::NAN).is_nan());
+        // RNE on the dropped 16 bits: 1 + 2^-8 is a tie -> stays even.
+        assert_eq!(Bf16::from_f32(f32::from_bits(0x3F80_8000)).0, 0x3F80);
+        assert_eq!(Bf16::from_f32(f32::from_bits(0x3F80_8001)).0, 0x3F81);
+    }
+
+    #[test]
+    fn fp16_mul_matches_f32_reference() {
+        // An 11x11-bit product is exact in f32 and the exponent range
+        // fits, so f32 multiply + one RNE narrowing is the correctly
+        // rounded binary16 product — a hardware-backed oracle.
+        let mut rng = crate::proput::Rng::new(0x16A);
+        for _ in 0..20_000 {
+            let a = Fp16(rng.next_u64() as u16);
+            let b = Fp16(rng.next_u64() as u16);
+            let got = a.mul(b);
+            let want = Fp16::from_f32(a.to_f32() * b.to_f32());
+            if want.is_nan() {
+                assert!(got.is_nan(), "a={:#06x} b={:#06x}", a.0, b.0);
+            } else {
+                assert_eq!(got.0, want.0, "a={:#06x} b={:#06x}", a.0, b.0);
+            }
         }
     }
 }

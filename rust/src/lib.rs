@@ -11,8 +11,10 @@
 //! needed to evaluate that claim end-to-end:
 //!
 //! * [`wideint`] — exact multi-limb integers (the 226-bit quad product).
-//! * [`fpu`] — full IEEE-754 softfloat for binary32/64/128 with a pluggable
-//!   significand multiplier, verified bit-exactly against hardware.
+//! * [`fpu`] — full IEEE-754 softfloat over the open [`OpClass`] format
+//!   registry (bfloat16 / binary16 / binary32 / binary64 / binary128) with
+//!   a pluggable significand multiplier, verified bit-exactly against
+//!   hardware where hardware exists.
 //! * [`decomp`] — the paper's contribution: partition schemes (CIVP Fig. 2 /
 //!   Fig. 4 and the 18x18 / 25x18 / 9x9 baselines), tile-DAG generation and
 //!   exact tiled execution with per-block utilization accounting.
@@ -50,5 +52,5 @@ pub mod runtime;
 pub mod trace;
 pub mod wideint;
 
-pub use decomp::{Plan, PlanCache, Precision, Scheme, SchemeKind};
-pub use fpu::{Fp128, Fp32, Fp64, RoundMode};
+pub use decomp::{OpClass, Plan, PlanCache, Scheme, SchemeKind};
+pub use fpu::{Bf16, Fp128, Fp16, Fp32, Fp64, RoundMode};

@@ -19,7 +19,7 @@ use civp::cluster::{Cluster, ClusterConfig, RouterPolicy};
 use civp::error::{bail, err, Result};
 use civp::config::ServiceConfig;
 use civp::coordinator::{orient2d_adaptive, AdaptiveStats, BackendChoice, Service};
-use civp::decomp::{AnalysisRow, Precision, SchemeKind};
+use civp::decomp::{AnalysisRow, OpClass, SchemeKind};
 use civp::runtime::EngineHandle;
 use civp::trace::{TraceGen, WorkloadSpec};
 use std::time::Instant;
@@ -57,7 +57,9 @@ COMMANDS
   serve        run a synthetic trace through the service
                --config <file>      TOML config (see ServiceConfig)
                --requests <n>       override request count
-               --workload <spec>    graphics|scientific|uniform|single-only
+               --workload <spec>    graphics|scientific|uniform|single-only|mixed|ml
+               --mix <spec>         custom class weights, e.g.
+                                    half=0.2,bf16=0.3,single=0.5 (overrides --workload)
                --backend <b>        native|pjrt (default native)
                --artifacts <dir>    artifacts directory (pjrt backend)
   cluster      run a synthetic trace through the sharded cluster
@@ -68,7 +70,7 @@ COMMANDS
                --degrade <shard>    inject faults into one shard first
                --faults <n>         fault count for --degrade (default 8)
                --backend <b>        native|pjrt (default native)
-               (also accepts serve's --config/--requests/--workload/--artifacts)
+               (also accepts serve's --config/--requests/--workload/--mix/--artifacts)
   analyze      print the paper's block/utilization analysis table
   predicates   adaptive-precision orient2d demo
                --points <n>         number of predicates (default 2000)
@@ -90,9 +92,22 @@ fn load_config(args: &Args) -> Result<ServiceConfig> {
         cfg.workload =
             WorkloadSpec::parse(w).ok_or_else(|| err!("unknown workload {w:?}"))?;
     }
+    if let Some(spec) = args.options.get("mix") {
+        // `--mix half=0.2,bf16=0.3,...` — explicit per-class weights over
+        // the open registry; unlisted classes get zero mass.
+        for part in spec.split(',').filter(|p| !p.is_empty()) {
+            let (name, weight) = part
+                .split_once('=')
+                .ok_or_else(|| err!("--mix entries are class=weight, got {part:?}"))?;
+            let class = OpClass::parse(name.trim())
+                .ok_or_else(|| err!("unknown op class {name:?} in --mix"))?;
+            cfg.set_mix_weight(class, weight.trim().parse()?)?;
+        }
+    }
     if let Some(dir) = args.options.get("artifacts") {
         cfg.artifacts_dir = dir.clone();
     }
+    cfg.validate()?;
     Ok(cfg)
 }
 
@@ -111,11 +126,11 @@ fn serve(args: &Args) -> Result<()> {
         cfg.fabric
     );
     let svc = Service::start(&cfg, backend);
-    let mut gen = TraceGen::new(cfg.seed, cfg.workload.mix(), 0);
+    let mut gen = TraceGen::new(cfg.seed, cfg.mix(), 0);
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(4096);
     for req in gen.take(cfg.requests) {
-        pending.push(svc.submit(req.id, req.precision, req.a, req.b).expect("service closed"));
+        pending.push(svc.submit(req.id, req.class, req.a, req.b).expect("service closed"));
         // cap in-flight to keep memory bounded
         if pending.len() >= 4096 {
             for rx in pending.drain(..) {
@@ -134,6 +149,9 @@ fn serve(args: &Args) -> Result<()> {
     println!("throughput           {:.0} mult/s", report.responses as f64 / wall.as_secs_f64());
     print!("{}", report.snapshot.render());
     println!("\n== fabric report ({}) ==", fabric.fabric);
+    for class in &fabric.per_class {
+        println!("  {:<16} {:>10} ops", class.label, class.ops);
+    }
     println!("cycles               {}", fabric.cycles);
     println!("ops/cycle            {:.3}", fabric.throughput());
     println!("dynamic energy       {:.1}", fabric.dyn_energy);
@@ -186,7 +204,7 @@ fn cluster(args: &Args) -> Result<()> {
             st.quad_one_wave()
         );
     }
-    let mut gen = TraceGen::new(cfg.seed, cfg.workload.mix(), 0);
+    let mut gen = TraceGen::new(cfg.seed, cfg.mix(), 0);
     let t0 = Instant::now();
     // Cap held replies below the cluster's total in-flight budget: every
     // un-received reply pins a per-shard slot, so holding >= shards ×
@@ -196,7 +214,7 @@ fn cluster(args: &Args) -> Result<()> {
     let mut pending = Vec::with_capacity(drain_at);
     for req in gen.take(cfg.requests) {
         let rx = cluster
-            .submit(req.id, req.precision, req.a, req.b)
+            .submit(req.id, req.class, req.a, req.b)
             .map_err(|e| err!("cluster submit failed: {e}"))?;
         pending.push(rx);
         if pending.len() >= drain_at {
@@ -226,13 +244,13 @@ fn analyze() -> Result<()> {
     println!("== paper §III analysis: blocks per multiplication ==\n");
     println!(
         "{:<10} {:<8} {:>6} {:>7} {:>7} {:>6} {:>6} {:>8} {:>8}",
-        "precision", "scheme", "blocks", "24x24", "24x9", "9x9", "18x18", "padded", "util%"
+        "class", "scheme", "blocks", "24x24", "24x9", "9x9", "18x18", "padded", "util%"
     );
     for row in AnalysisRow::full_table() {
         let c = &row.census;
         println!(
             "{:<10} {:<8} {:>6} {:>7} {:>7} {:>6} {:>6} {:>8} {:>8.1}",
-            row.precision.name(),
+            row.class.name(),
             row.kind.name(),
             c.total_blocks,
             c.count(civp::decomp::BlockKind::M24x24),
@@ -291,10 +309,10 @@ fn info(args: &Args) -> Result<()> {
     let info = handle.info()?;
     println!("platform   {}", info.platform);
     println!("batch      {}", info.batch);
-    println!("precisions {:?}", info.loaded);
+    println!("classes    {:?}", info.loaded);
     // smoke multiply
     let out = handle.mul(
-        Precision::Double,
+        OpClass::Double,
         vec![(2.0f64).to_bits() as u128],
         vec![(3.0f64).to_bits() as u128],
     )?;

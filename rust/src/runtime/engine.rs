@@ -46,7 +46,7 @@ pub use xla_impl::Engine;
 #[cfg(not(feature = "pjrt-xla"))]
 mod stub {
     use super::EngineStats;
-    use crate::decomp::Precision;
+    use crate::decomp::OpClass;
     use crate::error::{bail, Result};
     use std::path::Path;
 
@@ -75,8 +75,8 @@ mod stub {
             bail!("{UNAVAILABLE} (found {} artifact entries)", manifest.entries.len());
         }
 
-        /// Which precisions are loaded (always none in the stub).
-        pub fn loaded(&self) -> Vec<Precision> {
+        /// Which op classes are loaded (always none in the stub).
+        pub fn loaded(&self) -> Vec<OpClass> {
             Vec::new()
         }
 
@@ -107,7 +107,7 @@ mod stub {
 mod xla_impl {
     use super::super::artifact::Manifest;
     use super::EngineStats;
-    use crate::decomp::Precision;
+    use crate::decomp::OpClass;
     use crate::error::{bail, ensure, Context, Result};
     use std::path::Path;
     use std::sync::atomic::Ordering;
@@ -176,17 +176,17 @@ mod xla_impl {
             Ok(Entry { exe })
         }
 
-        /// Which precisions are loaded.
-        pub fn loaded(&self) -> Vec<Precision> {
+        /// Which op classes are loaded.
+        pub fn loaded(&self) -> Vec<OpClass> {
             let mut v = Vec::new();
             if self.fp32.is_some() {
-                v.push(Precision::Single);
+                v.push(OpClass::Single);
             }
             if self.fp64.is_some() {
-                v.push(Precision::Double);
+                v.push(OpClass::Double);
             }
             if self.fp128.is_some() {
-                v.push(Precision::Quad);
+                v.push(OpClass::Quad);
             }
             v
         }

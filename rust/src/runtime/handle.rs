@@ -8,7 +8,7 @@
 //! cheap; all clones feed the same executor (PJRT CPU execution is
 //! serialized anyway).
 
-use crate::decomp::Precision;
+use crate::decomp::OpClass;
 use crate::error::{err, Result};
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -17,7 +17,7 @@ use std::thread::JoinHandle;
 
 enum Job {
     Mul {
-        precision: Precision,
+        class: OpClass,
         a: Vec<u128>,
         b: Vec<u128>,
         reply: mpsc::Sender<Result<Vec<u128>>>,
@@ -35,8 +35,8 @@ pub struct EngineInfo {
     pub batch: usize,
     /// PJRT platform name.
     pub platform: String,
-    /// Loaded precisions.
-    pub loaded: Vec<Precision>,
+    /// Loaded op classes.
+    pub loaded: Vec<OpClass>,
     /// Padding fraction so far (see `EngineStats`).
     pub padding_fraction: f64,
 }
@@ -74,23 +74,33 @@ impl EngineHandle {
                 };
                 for job in rx {
                     match job {
-                        Job::Mul { precision, a, b, reply } => {
-                            let out = match precision {
-                                Precision::Single => {
+                        Job::Mul { class, a, b, reply } => {
+                            let out = match class {
+                                OpClass::Single => {
                                     let xa: Vec<u32> = a.iter().map(|&v| v as u32).collect();
                                     let xb: Vec<u32> = b.iter().map(|&v| v as u32).collect();
                                     engine.mul_fp32(&xa, &xb).map(|v| {
                                         v.into_iter().map(|x| x as u128).collect()
                                     })
                                 }
-                                Precision::Double => {
+                                OpClass::Double => {
                                     let xa: Vec<u64> = a.iter().map(|&v| v as u64).collect();
                                     let xb: Vec<u64> = b.iter().map(|&v| v as u64).collect();
                                     engine.mul_fp64(&xa, &xb).map(|v| {
                                         v.into_iter().map(|x| x as u128).collect()
                                     })
                                 }
-                                Precision::Quad => engine.mul_fp128(&a, &b),
+                                OpClass::Quad => engine.mul_fp128(&a, &b),
+                                // No sub-single artifacts are compiled yet;
+                                // `PjrtBackend` serves these through its
+                                // embedded native fallback, so reaching the
+                                // engine with one is a caller error, not a
+                                // panic.
+                                OpClass::Half | OpClass::Bf16 => Err(err!(
+                                    "pjrt engine has no {} artifact (use the native backend \
+                                     for sub-single classes)",
+                                    class.name()
+                                )),
                             };
                             let _ = reply.send(out);
                         }
@@ -111,11 +121,11 @@ impl EngineHandle {
     }
 
     /// Batched multiply of packed bit patterns (any length).
-    pub fn mul(&self, precision: Precision, a: Vec<u128>, b: Vec<u128>) -> Result<Vec<u128>> {
+    pub fn mul(&self, class: OpClass, a: Vec<u128>, b: Vec<u128>) -> Result<Vec<u128>> {
         let (reply, rx) = mpsc::channel();
         self.inner
             .tx
-            .send(Job::Mul { precision, a, b, reply })
+            .send(Job::Mul { class, a, b, reply })
             .map_err(|_| err!("engine executor stopped"))?;
         rx.recv().map_err(|_| err!("engine executor dropped reply"))?
     }

@@ -1,7 +1,7 @@
 //! Deterministic trace generation.
 
 use super::workloads::WorkloadMix;
-use crate::decomp::Precision;
+use crate::decomp::OpClass;
 use crate::proput::Rng;
 
 /// One multiplication request in a trace.
@@ -9,9 +9,9 @@ use crate::proput::Rng;
 pub struct TraceRequest {
     /// Request id (sequential).
     pub id: u64,
-    /// Precision demanded by the application.
-    pub precision: Precision,
-    /// Packed operand A bits (low `total_bits` of the precision are valid).
+    /// Op class demanded by the application.
+    pub class: OpClass,
+    /// Packed operand A bits (low `total_bits` of the class are valid).
     pub a: u128,
     /// Packed operand B bits.
     pub b: u128,
@@ -36,23 +36,29 @@ impl TraceGen {
         TraceGen { rng: Rng::new(seed), mix, next_id: 0, clock_ns: 0, mean_gap_ns }
     }
 
-    /// Generate finite operand bits for `prec` — realistic magnitudes
+    /// Generate finite operand bits for `class` — realistic magnitudes
     /// (media-processing values cluster near 1.0; exponents within ±40 of
-    /// bias) with adversarial significands.
-    fn operand(&mut self, prec: Precision) -> u128 {
-        let (exp_bits, frac_bits) = match prec {
-            Precision::Single => (8u32, 23u32),
-            Precision::Double => (11, 52),
-            Precision::Quad => (15, 112),
-        };
-        let bias = (1u64 << (exp_bits - 1)) - 1;
-        let e_span = 80u64;
-        let biased = bias - e_span / 2 + self.rng.below(e_span);
+    /// bias, clamped to the format's range) with adversarial significands.
+    ///
+    /// Field widths come straight from the class's [`crate::fpu::FpFormat`]
+    /// descriptor — the registry is the single source of truth; no
+    /// per-format table is duplicated here.
+    fn operand(&mut self, class: OpClass) -> u128 {
+        let fmt = class.format();
+        let (exp_bits, frac_bits) = (fmt.exp_bits, fmt.frac_bits);
+        let bias = fmt.bias() as u64;
+        let exp_mask = fmt.exp_mask() as u64;
+        // Biased exponent window: ±40 around the bias, clamped into the
+        // finite normal range [1, exp_mask - 1] (binary16's 5-bit exponent
+        // spans less than the window).
+        let lo = bias.saturating_sub(40).max(1);
+        let hi = (bias + 40).min(exp_mask - 1);
+        let biased = lo + self.rng.below(hi - lo + 1);
         let frac = if frac_bits <= 64 {
             (self.rng.next_u64() & ((1u64 << frac_bits) - 1)) as u128
         } else {
-            let hi = self.rng.next_u64() as u128 & ((1u128 << (frac_bits - 64)) - 1);
-            (hi << 64) | self.rng.next_u64() as u128
+            let hi64 = self.rng.next_u64() as u128 & ((1u128 << (frac_bits - 64)) - 1);
+            (hi64 << 64) | self.rng.next_u64() as u128
         };
         let sign = (self.rng.below(2) as u128) << (exp_bits + frac_bits);
         sign | ((biased as u128) << frac_bits) | frac
@@ -60,9 +66,9 @@ impl TraceGen {
 
     /// Next request.
     pub fn next(&mut self) -> TraceRequest {
-        let precision = self.mix.pick(self.rng.f64());
-        let a = self.operand(precision);
-        let b = self.operand(precision);
+        let class = self.mix.pick(self.rng.f64());
+        let a = self.operand(class);
+        let b = self.operand(class);
         let id = self.next_id;
         self.next_id += 1;
         if self.mean_gap_ns > 0 {
@@ -71,7 +77,7 @@ impl TraceGen {
             let gap = (-(u.ln()) * self.mean_gap_ns as f64) as u64;
             self.clock_ns += gap;
         }
-        TraceRequest { id, precision, a, b, arrival_ns: self.clock_ns }
+        TraceRequest { id, class, a, b, arrival_ns: self.clock_ns }
     }
 
     /// Generate `n` requests.

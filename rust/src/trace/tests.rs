@@ -1,7 +1,10 @@
 //! Trace generator tests: determinism, mix fidelity, operand validity.
+//!
+//! Format field widths come from the [`OpClass`] registry (one source of
+//! truth in `fpu::format`) — no hand-copied `(exp_bits, frac_bits)` tables.
 
 use super::*;
-use crate::decomp::Precision;
+use crate::decomp::OpClass;
 
 #[test]
 fn deterministic_for_fixed_seed() {
@@ -21,8 +24,8 @@ fn different_seeds_differ() {
 fn mix_fractions_respected() {
     let mut g = TraceGen::new(11, WorkloadSpec::Graphics.mix(), 0);
     let reqs = g.take(20_000);
-    let singles = reqs.iter().filter(|r| r.precision == Precision::Single).count() as f64;
-    let quads = reqs.iter().filter(|r| r.precision == Precision::Quad).count() as f64;
+    let singles = reqs.iter().filter(|r| r.class == OpClass::Single).count() as f64;
+    let quads = reqs.iter().filter(|r| r.class == OpClass::Quad).count() as f64;
     let n = reqs.len() as f64;
     assert!((singles / n - 0.80).abs() < 0.02, "single frac {}", singles / n);
     assert!((quads / n - 0.03).abs() < 0.01, "quad frac {}", quads / n);
@@ -31,31 +34,35 @@ fn mix_fractions_respected() {
 #[test]
 fn single_only_is_single_only() {
     let mut g = TraceGen::new(3, WorkloadSpec::SingleOnly.mix(), 0);
-    assert!(g.take(1000).iter().all(|r| r.precision == Precision::Single));
+    assert!(g.take(1000).iter().all(|r| r.class == OpClass::Single));
 }
 
 #[test]
-fn operands_fit_format_and_are_finite() {
+fn operands_fit_format_and_are_finite_every_class() {
     let mut g = TraceGen::new(5, WorkloadSpec::Uniform.mix(), 0);
     for r in g.take(5000) {
-        let total = match r.precision {
-            Precision::Single => 32,
-            Precision::Double => 64,
-            Precision::Quad => 128,
-        };
+        // Field widths read off the registry format — the single source of
+        // truth (no local (exp_bits, frac_bits) mirror).
+        let fmt = r.class.format();
+        let total = fmt.total_bits();
         if total < 128 {
             assert!(r.a < (1u128 << total), "operand overflows format");
             assert!(r.b < (1u128 << total));
         }
         // finite: biased exponent below the all-ones marker
-        let (eb, fb) = match r.precision {
-            Precision::Single => (8, 23),
-            Precision::Double => (11, 52),
-            Precision::Quad => (15, 112),
-        };
-        let emask = (1u128 << eb) - 1;
-        assert_ne!((r.a >> fb) & emask, emask, "operand must be finite");
-        assert_ne!((r.b >> fb) & emask, emask);
+        let emask = fmt.exp_mask() as u128;
+        assert_ne!((r.a >> fmt.frac_bits) & emask, emask, "operand must be finite");
+        assert_ne!((r.b >> fmt.frac_bits) & emask, emask);
+    }
+}
+
+#[test]
+fn uniform_mix_exercises_every_registry_class() {
+    let mut g = TraceGen::new(19, WorkloadSpec::Uniform.mix(), 0);
+    let reqs = g.take(10_000);
+    for class in OpClass::ALL {
+        let n = reqs.iter().filter(|r| r.class == class).count();
+        assert!(n > 0, "uniform mix never produced {}", class.name());
     }
 }
 
@@ -79,14 +86,46 @@ fn closed_loop_all_at_zero() {
 }
 
 #[test]
-fn mixed_spec_carries_every_precision() {
+fn mixed_spec_carries_every_class() {
     let mut g = TraceGen::new(17, WorkloadSpec::Mixed.mix(), 0);
     let reqs = g.take(20_000);
     let n = reqs.len() as f64;
-    let frac = |p: Precision| reqs.iter().filter(|r| r.precision == p).count() as f64 / n;
-    assert!((frac(Precision::Single) - 0.50).abs() < 0.02, "single {}", frac(Precision::Single));
-    assert!((frac(Precision::Double) - 0.35).abs() < 0.02, "double {}", frac(Precision::Double));
-    assert!((frac(Precision::Quad) - 0.15).abs() < 0.02, "quad {}", frac(Precision::Quad));
+    let frac = |c: OpClass| reqs.iter().filter(|r| r.class == c).count() as f64 / n;
+    let mix = WorkloadSpec::Mixed.mix();
+    let total = mix.total();
+    for class in OpClass::ALL {
+        let want = mix.weight(class) / total;
+        assert!(want > 0.0, "mixed spec must carry {}", class.name());
+        assert!(
+            (frac(class) - want).abs() < 0.02,
+            "{}: got {} want {want}",
+            class.name(),
+            frac(class)
+        );
+    }
+}
+
+#[test]
+fn ml_spec_is_sub_single_dominant() {
+    let mut g = TraceGen::new(23, WorkloadSpec::MlInference.mix(), 0);
+    let reqs = g.take(10_000);
+    let n = reqs.len() as f64;
+    let sub_single = reqs
+        .iter()
+        .filter(|r| matches!(r.class, OpClass::Bf16 | OpClass::Half))
+        .count() as f64;
+    assert!(sub_single / n > 0.80, "ml mix sub-single frac {}", sub_single / n);
+    assert!(reqs.iter().all(|r| r.class != OpClass::Quad && r.class != OpClass::Double));
+}
+
+#[test]
+fn custom_mix_builder_routes_all_mass() {
+    let mix = WorkloadMix::ZERO.with(OpClass::Half, 1.0).with(OpClass::Bf16, 3.0);
+    let mut g = TraceGen::new(29, mix, 0);
+    let reqs = g.take(8_000);
+    let bf = reqs.iter().filter(|r| r.class == OpClass::Bf16).count() as f64;
+    assert!(reqs.iter().all(|r| matches!(r.class, OpClass::Bf16 | OpClass::Half)));
+    assert!((bf / reqs.len() as f64 - 0.75).abs() < 0.03);
 }
 
 #[test]

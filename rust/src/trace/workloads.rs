@@ -1,37 +1,65 @@
-//! Workload mixes: named precision distributions modeled on the paper's
-//! motivating applications.
+//! Workload mixes: named op-class distributions modeled on the paper's
+//! motivating applications, generalized over the open [`OpClass`] registry
+//! (the ML-inference mixes exercise the sub-single classes).
 
-use crate::decomp::Precision;
+use crate::decomp::OpClass;
 
-/// A precision mix (weights need not sum to 1; they are normalized).
+/// An op-class mix: one weight per registry class (weights need not sum to
+/// 1; they are normalized).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct WorkloadMix {
-    /// Weight of single-precision requests.
-    pub single: f64,
-    /// Weight of double-precision requests.
-    pub double: f64,
-    /// Weight of quad-precision requests.
-    pub quad: f64,
+    /// Weight per class, indexed by [`OpClass::index`].
+    pub weights: [f64; OpClass::COUNT],
 }
 
 impl WorkloadMix {
-    /// Normalize to a cumulative distribution (single, single+double).
-    pub fn cdf(&self) -> (f64, f64) {
-        let total = self.single + self.double + self.quad;
-        assert!(total > 0.0, "workload mix has zero mass");
-        ((self.single) / total, (self.single + self.double) / total)
+    /// A mix with zero mass everywhere (build up with [`WorkloadMix::with`]).
+    pub const ZERO: WorkloadMix = WorkloadMix { weights: [0.0; OpClass::COUNT] };
+
+    /// Build from explicit `(class, weight)` pairs; unlisted classes get
+    /// zero mass.
+    pub fn from_pairs(pairs: &[(OpClass, f64)]) -> WorkloadMix {
+        let mut mix = Self::ZERO;
+        for &(class, w) in pairs {
+            mix.weights[class.index()] = w;
+        }
+        mix
     }
 
-    /// Pick a precision from a uniform sample in [0, 1).
-    pub fn pick(&self, u: f64) -> Precision {
-        let (c1, c2) = self.cdf();
-        if u < c1 {
-            Precision::Single
-        } else if u < c2 {
-            Precision::Double
-        } else {
-            Precision::Quad
+    /// Builder-style single-class weight override.
+    pub fn with(mut self, class: OpClass, w: f64) -> WorkloadMix {
+        self.weights[class.index()] = w;
+        self
+    }
+
+    /// Weight of one class.
+    pub fn weight(&self, class: OpClass) -> f64 {
+        self.weights[class.index()]
+    }
+
+    /// Total mass (before normalization).
+    pub fn total(&self) -> f64 {
+        self.weights.iter().sum()
+    }
+
+    /// Pick a class from a uniform sample in [0, 1) by walking the
+    /// cumulative distribution over the registry.
+    pub fn pick(&self, u: f64) -> OpClass {
+        let total = self.total();
+        assert!(total > 0.0, "workload mix has zero mass");
+        let mut acc = 0.0;
+        for class in OpClass::ALL {
+            acc += self.weight(class) / total;
+            if u < acc {
+                return class;
+            }
         }
+        // Floating-point slack at u ≈ 1.0: the last class with mass.
+        OpClass::ALL
+            .into_iter()
+            .rev()
+            .find(|c| self.weight(*c) > 0.0)
+            .expect("workload mix has zero mass")
     }
 }
 
@@ -43,35 +71,57 @@ pub enum WorkloadSpec {
     Graphics,
     /// Scientific post-processing: double-dominant with quad refinement.
     Scientific,
-    /// Stress mix: equal thirds — the worst case for a fixed-block fabric.
+    /// Stress mix: equal mass on every registry class — the worst case for
+    /// a fixed-block fabric.
     Uniform,
     /// Pure single precision (the CIFM [2] setting the paper extends).
     SingleOnly,
-    /// Cluster-serving mix: single-heavy with a significant quad tail —
-    /// enough quad mass that precision-affinity routing matters, enough
-    /// single/double that every shard stays busy. The `bench_cluster`
-    /// scaling curves run this spec.
+    /// Cluster-serving mix: the full registry in one stream — sub-single
+    /// ML traffic (half/bf16) riding alongside the paper's three classes,
+    /// with enough quad mass that precision-affinity routing matters. The
+    /// `bench_cluster` scaling curves run this spec.
     Mixed,
+    /// ML inference: bf16-dominant with a binary16 side channel and a
+    /// single-precision accumulation tail — the run-time multi-precision
+    /// workload of the related reconfigurable-multiplier line of work.
+    MlInference,
 }
 
 impl WorkloadSpec {
     /// All named specs.
-    pub const ALL: [WorkloadSpec; 5] = [
+    pub const ALL: [WorkloadSpec; 6] = [
         WorkloadSpec::Graphics,
         WorkloadSpec::Scientific,
         WorkloadSpec::Uniform,
         WorkloadSpec::SingleOnly,
         WorkloadSpec::Mixed,
+        WorkloadSpec::MlInference,
     ];
 
-    /// The precision mix for this spec.
+    /// The op-class mix for this spec.
     pub fn mix(self) -> WorkloadMix {
+        use OpClass::*;
         match self {
-            WorkloadSpec::Graphics => WorkloadMix { single: 0.80, double: 0.17, quad: 0.03 },
-            WorkloadSpec::Scientific => WorkloadMix { single: 0.10, double: 0.70, quad: 0.20 },
-            WorkloadSpec::Uniform => WorkloadMix { single: 1.0, double: 1.0, quad: 1.0 },
-            WorkloadSpec::SingleOnly => WorkloadMix { single: 1.0, double: 0.0, quad: 0.0 },
-            WorkloadSpec::Mixed => WorkloadMix { single: 0.50, double: 0.35, quad: 0.15 },
+            WorkloadSpec::Graphics => {
+                WorkloadMix::from_pairs(&[(Single, 0.80), (Double, 0.17), (Quad, 0.03)])
+            }
+            WorkloadSpec::Scientific => {
+                WorkloadMix::from_pairs(&[(Single, 0.10), (Double, 0.70), (Quad, 0.20)])
+            }
+            WorkloadSpec::Uniform => WorkloadMix { weights: [1.0; OpClass::COUNT] },
+            WorkloadSpec::SingleOnly => WorkloadMix::from_pairs(&[(Single, 1.0)]),
+            WorkloadSpec::Mixed => WorkloadMix::from_pairs(&[
+                (Bf16, 0.15),
+                (Half, 0.10),
+                (Single, 0.35),
+                (Double, 0.25),
+                (Quad, 0.15),
+            ]),
+            WorkloadSpec::MlInference => WorkloadMix::from_pairs(&[
+                (Bf16, 0.55),
+                (Half, 0.30),
+                (Single, 0.15),
+            ]),
         }
     }
 
@@ -83,6 +133,7 @@ impl WorkloadSpec {
             WorkloadSpec::Uniform => "uniform",
             WorkloadSpec::SingleOnly => "single-only",
             WorkloadSpec::Mixed => "mixed",
+            WorkloadSpec::MlInference => "ml",
         }
     }
 

@@ -4,9 +4,9 @@
 
 use civp::config::ServiceConfig;
 use civp::coordinator::{Backend, BackendChoice, Service};
-use civp::decomp::{Precision, SchemeKind};
+use civp::decomp::{OpClass, SchemeKind};
 use civp::fabric::FabricKind;
-use civp::fpu::{Fp128, Fp32, Fp64};
+use civp::fpu::{Bf16, Fp128, Fp16, Fp32, Fp64};
 use civp::proput::Rng;
 use civp::runtime::EngineHandle;
 use civp::trace::{TraceGen, WorkloadSpec};
@@ -40,11 +40,13 @@ fn config_file_drives_service_end_to_end() {
     let svc = Service::start(&cfg, BackendChoice::Native(cfg.scheme));
     let mut gen = TraceGen::new(cfg.seed, cfg.workload.mix(), 0);
     for req in gen.take(300) {
-        let got = svc.mul_blocking(req.precision, req.a, req.b);
-        let want = match req.precision {
-            Precision::Single => Fp32(req.a as u32).mul(Fp32(req.b as u32)).0 as u128,
-            Precision::Double => Fp64(req.a as u64).mul(Fp64(req.b as u64)).0 as u128,
-            Precision::Quad => Fp128(req.a).mul(Fp128(req.b)).0,
+        let got = svc.mul_blocking(req.class, req.a, req.b);
+        let want = match req.class {
+            OpClass::Bf16 => Bf16(req.a as u16).mul(Bf16(req.b as u16)).0 as u128,
+            OpClass::Half => Fp16(req.a as u16).mul(Fp16(req.b as u16)).0 as u128,
+            OpClass::Single => Fp32(req.a as u32).mul(Fp32(req.b as u32)).0 as u128,
+            OpClass::Double => Fp64(req.a as u64).mul(Fp64(req.b as u64)).0 as u128,
+            OpClass::Quad => Fp128(req.a).mul(Fp128(req.b)).0,
         };
         assert_eq!(got, want);
     }
@@ -69,12 +71,19 @@ fn pjrt_service_agrees_with_native_service() {
     let pjrt = Service::start(&cfg, BackendChoice::Pjrt(handle.clone()));
     let native = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
 
-    let trace = TraceGen::new(99, WorkloadSpec::Uniform.mix(), 0).take(600);
+    // The PJRT artifacts cover the paper's three classes only; sub-single
+    // formats are native-backend-only until fp16/bf16 artifacts exist.
+    let mix = civp::trace::WorkloadMix::from_pairs(&[
+        (OpClass::Single, 1.0),
+        (OpClass::Double, 1.0),
+        (OpClass::Quad, 1.0),
+    ]);
+    let trace = TraceGen::new(99, mix, 0).take(600);
     let mut pjrt_rx = Vec::new();
     let mut native_rx = Vec::new();
     for req in &trace {
-        pjrt_rx.push(pjrt.submit(req.id, req.precision, req.a, req.b).unwrap());
-        native_rx.push(native.submit(req.id, req.precision, req.a, req.b).unwrap());
+        pjrt_rx.push(pjrt.submit(req.id, req.class, req.a, req.b).unwrap());
+        native_rx.push(native.submit(req.id, req.class, req.a, req.b).unwrap());
     }
     for (i, (p, n)) in pjrt_rx.into_iter().zip(native_rx).enumerate() {
         let pv = p.recv().unwrap().bits;
@@ -103,7 +112,7 @@ fn engine_handle_concurrent_clients() {
                         (0..100).map(|_| (rng.nasty_bits64()) as u128).collect();
                     let b: Vec<u128> =
                         (0..100).map(|_| (rng.nasty_bits64()) as u128).collect();
-                    let out = h.mul(Precision::Double, a.clone(), b.clone()).unwrap();
+                    let out = h.mul(OpClass::Double, a.clone(), b.clone()).unwrap();
                     for i in 0..100 {
                         let want = Fp64(a[i] as u64).mul(Fp64(b[i] as u64));
                         if !want.is_nan() {
@@ -137,7 +146,7 @@ struct FlakyBackend {
 impl Backend for FlakyBackend {
     fn execute(
         &mut self,
-        _precision: Precision,
+        _class: OpClass,
         a: &[u128],
         _b: &[u128],
         out: &mut Vec<u128>,
@@ -166,7 +175,7 @@ fn worker_survives_backend_failures() {
     let mut ok = 0;
     let mut failed = 0;
     for _ in 0..9 {
-        match be.execute(Precision::Double, &[1, 2], &[3, 4], &mut out) {
+        match be.execute(OpClass::Double, &[1, 2], &[3, 4], &mut out) {
             Ok(()) => {
                 assert_eq!(out, vec![1, 2]);
                 ok += 1;
@@ -183,12 +192,12 @@ fn dropped_receiver_does_not_wedge_service() {
     let svc = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
     // submit and immediately drop receivers
     for i in 0..200u64 {
-        let rx = svc.submit(i, Precision::Double, 1u128 << 62, 1u128 << 62).unwrap();
+        let rx = svc.submit(i, OpClass::Double, 1u128 << 62, 1u128 << 62).unwrap();
         drop(rx);
     }
     // service still answers new requests
     let two = (2.0f64).to_bits() as u128;
-    let bits = svc.mul_blocking(Precision::Double, two, two);
+    let bits = svc.mul_blocking(OpClass::Double, two, two);
     assert_eq!(f64::from_bits(bits as u64), 4.0);
     let report = svc.shutdown();
     assert_eq!(report.responses, 201);
@@ -202,15 +211,24 @@ fn service_under_all_workload_mixes() {
         let trace = TraceGen::new(5, spec.mix(), 0).take(400);
         let mut rxs = Vec::new();
         for req in &trace {
-            rxs.push(svc.submit(req.id, req.precision, req.a, req.b).unwrap());
+            rxs.push(svc.submit(req.id, req.class, req.a, req.b).unwrap());
         }
         for rx in rxs {
             rx.recv().unwrap();
         }
         let fabric = svc.fabric_report();
         assert_eq!(fabric.total_ops, 400, "{}", spec.name());
-        // CIVP fabric keeps waste low on every mix
-        assert!(fabric.wasted_fraction() < 0.15, "{}: {}", spec.name(), fabric.wasted_fraction());
+        // CIVP fabric keeps waste low on every mix the paper's classes
+        // dominate. The ml mix is sub-single-heavy: binary16's two-24x9
+        // mapping pays extra array capacity for keeping the 24x24 pool
+        // free, so its waste ceiling is documentedly higher.
+        let ceiling = if spec == WorkloadSpec::MlInference { 0.45 } else { 0.15 };
+        assert!(
+            fabric.wasted_fraction() < ceiling,
+            "{}: {}",
+            spec.name(),
+            fabric.wasted_fraction()
+        );
     }
 }
 
@@ -224,7 +242,7 @@ fn legacy_vs_civp_fabric_headline_on_uniform_mix() {
         let trace = TraceGen::new(11, WorkloadSpec::Uniform.mix(), 0).take(600);
         let mut rxs = Vec::new();
         for req in &trace {
-            rxs.push(svc.submit(req.id, req.precision, req.a, req.b).unwrap());
+            rxs.push(svc.submit(req.id, req.class, req.a, req.b).unwrap());
         }
         for rx in rxs {
             rx.recv().unwrap();

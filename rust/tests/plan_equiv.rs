@@ -1,5 +1,5 @@
 //! Property tests pinning the compiled-plan executor to the `DirectMul`
-//! oracle: for every `(SchemeKind, Precision)` pair, executing through a
+//! oracle: for every `(SchemeKind, OpClass)` pair, executing through a
 //! cached [`civp::decomp::Plan`] is bit-identical to the plain widening
 //! multiply — across random significands and the edge cases where
 //! rounding/accumulation bugs live (all-ones, single-bit, subnormal-range).
@@ -11,11 +11,11 @@
 //! flag unions included).
 
 use civp::decomp::{
-    execute, DecompMul, ExecStats, Plan, PlanCache, Precision, Scheme, SchemeKind, LANES,
+    execute, DecompMul, ExecStats, OpClass, Plan, PlanCache, Scheme, SchemeKind, LANES,
 };
 use civp::fpu::{
-    mul_bits, mul_bits_batch, DirectMul, Flags, Fp128, Fp32, Fp64, FpuBatch, RoundMode, DOUBLE,
-    QUAD, SINGLE,
+    mul_bits, mul_bits_batch, DirectMul, Flags, Fp128, Fp32, Fp64, FpFormat, FpuBatch, RoundMode,
+    BF16, DOUBLE, HALF, QUAD, SINGLE,
 };
 use civp::proput::{forall, Rng};
 use civp::wideint::{mul_u128, U128, U256};
@@ -48,7 +48,7 @@ fn plan_product_equals_direct_mul_random() {
     // The cached plan's integer product == DirectMul's widening multiply,
     // for every scheme x precision, over random normalized significands.
     forall(0x700, 2_000, |rng| {
-        for prec in Precision::ALL {
+        for prec in OpClass::ALL {
             for kind in SchemeKind::ALL {
                 let plan = PlanCache::get(kind, prec);
                 let a = rng.sig(prec.sig_bits());
@@ -65,7 +65,7 @@ fn plan_product_equals_direct_mul_random() {
 
 #[test]
 fn plan_product_equals_direct_mul_edge_cases() {
-    for prec in Precision::ALL {
+    for prec in OpClass::ALL {
         let edges = edge_sigs(prec.sig_bits());
         for kind in SchemeKind::ALL {
             let plan = PlanCache::get(kind, prec);
@@ -85,7 +85,7 @@ fn plan_matches_rederived_tile_executor_and_stats() {
     // The compiled plan is a pure lowering: product AND accounting must be
     // identical to deriving the tile DAG per call.
     forall(0x701, 500, |rng| {
-        for prec in Precision::ALL {
+        for prec in OpClass::ALL {
             for kind in SchemeKind::ALL {
                 let scheme = Scheme::new(kind, prec);
                 let plan = PlanCache::get(kind, prec);
@@ -130,7 +130,8 @@ fn full_ieee_pipeline_plan_vs_direct_all_modes() {
     // through DirectMul, for every scheme, precision and rounding mode.
     forall(0x703, 800, |rng| {
         let mode = RoundMode::ALL[rng.below(5) as usize];
-        for (fmt, bits) in [(&SINGLE, 32u32), (&DOUBLE, 64), (&QUAD, 128)] {
+        for fmt in [&BF16, &HALF, &SINGLE, &DOUBLE, &QUAD] {
+            let bits = fmt.total_bits();
             let mut raw_a = U128::ZERO;
             raw_a.limbs[0] = rng.next_u64();
             raw_a.limbs[1] = rng.next_u64();
@@ -152,7 +153,7 @@ fn full_ieee_pipeline_plan_vs_direct_all_modes() {
 
 #[test]
 fn plan_cache_shares_one_plan_per_key() {
-    for prec in Precision::ALL {
+    for prec in OpClass::ALL {
         for kind in SchemeKind::ALL {
             let a = PlanCache::get(kind, prec);
             let b = PlanCache::get(kind, prec);
@@ -165,13 +166,13 @@ fn plan_cache_shares_one_plan_per_key() {
     let w1 = PlanCache::get_width(SchemeKind::Civp, 40);
     let w2 = PlanCache::get_width(SchemeKind::Civp, 40);
     assert!(Arc::ptr_eq(&w1, &w2));
-    assert!(PlanCache::ieee_cached() > 0);
+    assert!(PlanCache::class_cached() > 0);
     assert!(PlanCache::int_cached() > 0);
 }
 
 #[test]
 fn plan_batch_matches_scalar_path() {
-    let plan: Arc<Plan> = PlanCache::get(SchemeKind::Civp, Precision::Double);
+    let plan: Arc<Plan> = PlanCache::get(SchemeKind::Civp, OpClass::Double);
     let mut rng = Rng::new(0x704);
     let a: Vec<U128> = (0..257).map(|_| rng.sig(53)).collect();
     let b: Vec<U128> = (0..257).map(|_| rng.sig(53)).collect();
@@ -210,7 +211,7 @@ fn execute_lanes_matches_per_op_all_schemes_and_tails() {
     // ragged tail length around the LANES block size (including the
     // empty batch and a batch smaller than one block).
     let mut rng = Rng::new(0x710);
-    for prec in Precision::ALL {
+    for prec in OpClass::ALL {
         for kind in SchemeKind::ALL {
             let plan = PlanCache::get(kind, prec);
             for n in [0, 1, LANES - 1, LANES, LANES + 1, 2 * LANES, 2 * LANES + 3, 67] {
@@ -258,7 +259,7 @@ fn execute_lanes_edge_significands() {
     // Edge significands (all-ones, single bits, low-half patterns) through
     // full blocks: the SoA extraction and carry chains see the worst-case
     // bit patterns in every lane position, for every scheme.
-    for prec in Precision::ALL {
+    for prec in OpClass::ALL {
         let edges = edge_sigs(prec.sig_bits());
         for kind in SchemeKind::ALL {
             let plan = PlanCache::get(kind, prec);
@@ -281,26 +282,33 @@ fn execute_lanes_edge_significands() {
     }
 }
 
-/// Nasty packed bit patterns for a format: specials (NaN/Inf/zero),
-/// subnormals, boundary exponents, uniform noise.
-fn nasty_packed(rng: &mut Rng, total_bits: u32) -> u128 {
-    match total_bits {
-        32 => rng.nasty_bits32() as u128,
-        64 => rng.nasty_bits64() as u128,
-        _ => match rng.below(6) {
-            0 => 0,
-            1 => 0x7FFFu128 << 112,                     // ±inf
-            2 => (0x7FFFu128 << 112) | (1u128 << 111),  // qNaN
-            3 => rng.next_u64() as u128,                // deep subnormal
-            4 => ((rng.next_u64() as u128) << 64) | rng.next_u64() as u128,
-            _ => {
-                let sign = (rng.below(2) as u128) << 127;
-                let exp = rng.below(0x7FFF) as u128;
-                let frac = (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128)
-                    & ((1u128 << 112) - 1);
-                sign | (exp << 112) | frac
-            }
-        },
+/// Nasty packed bit patterns for any registry format: specials
+/// (NaN/Inf/zero), subnormals, boundary exponents, uniform noise — built
+/// from the format descriptor, so the sub-single classes get the same
+/// adversarial coverage as the paper's three.
+fn nasty_packed(rng: &mut Rng, fmt: &FpFormat) -> u128 {
+    let frac_mask = (1u128 << fmt.frac_bits) - 1;
+    let rand_wide = |rng: &mut Rng| ((rng.next_u64() as u128) << 64) | rng.next_u64() as u128;
+    match rng.below(7) {
+        0 => 0,
+        1 => ((fmt.exp_mask() as u128) << fmt.frac_bits)
+            | ((rng.below(2) as u128) << (fmt.total_bits() - 1)), // ±inf
+        2 => ((fmt.exp_mask() as u128) << fmt.frac_bits) | (1u128 << (fmt.frac_bits - 1)), // qNaN
+        3 => rand_wide(rng) & frac_mask, // subnormal
+        4 => {
+            // boundary exponents: emin and emax neighbourhoods
+            let biased = if rng.below(2) == 0 {
+                1 + rng.below(3)
+            } else {
+                fmt.exp_mask() as u64 - 1 - rng.below(3)
+            };
+            ((biased as u128) << fmt.frac_bits) | (rand_wide(rng) & frac_mask)
+        }
+        _ => {
+            let sign = (rng.below(2) as u128) << (fmt.total_bits() - 1);
+            let exp = rng.below(fmt.exp_mask() as u64) as u128;
+            sign | (exp << fmt.frac_bits) | (rand_wide(rng) & frac_mask)
+        }
     }
 }
 
@@ -311,10 +319,10 @@ fn fpu_batch_matches_scalar_pipeline_with_specials() {
     // inputs, every format, every rounding mode, ragged batch sizes.
     forall(0x712, 250, |rng| {
         let mode = RoundMode::ALL[rng.below(5) as usize];
-        for (fmt, bits) in [(&SINGLE, 32u32), (&DOUBLE, 64), (&QUAD, 128)] {
+        for fmt in [&BF16, &HALF, &SINGLE, &DOUBLE, &QUAD] {
             let n = rng.below(3 * LANES as u64 + 2) as usize;
-            let a: Vec<u128> = (0..n).map(|_| nasty_packed(rng, bits)).collect();
-            let b: Vec<u128> = (0..n).map(|_| nasty_packed(rng, bits)).collect();
+            let a: Vec<u128> = (0..n).map(|_| nasty_packed(rng, fmt)).collect();
+            let b: Vec<u128> = (0..n).map(|_| nasty_packed(rng, fmt)).collect();
             let mut fused = FpuBatch::new(DecompMul::new(SchemeKind::Civp));
             let mut out = Vec::new();
             let got_flags = fused.mul_batch_bits(fmt, &a, &b, mode, &mut out);
@@ -372,6 +380,45 @@ fn fpu_batch_all_specials_runs_sidecar_only() {
     let f = fused.mul_batch_bits(&DOUBLE, &empty, &empty, RoundMode::NearestEven, &mut out);
     assert!(out.is_empty());
     assert_eq!(f, Flags::default());
+}
+
+#[test]
+fn fpu_batch_typed_surface_sub_single() {
+    use civp::fpu::{Bf16, Fp16};
+    let mut fused = FpuBatch::new(DecompMul::new(SchemeKind::Civp));
+
+    // binary16: fused batch ≡ scalar typed multiply ≡ the f32 hardware
+    // oracle (11-bit products are exact in f32, so f32-mul + one RNE
+    // narrowing is the correctly rounded binary16 product).
+    let mut rng = Rng::new(0x714);
+    let a16: Vec<Fp16> = (0..3 * LANES + 5).map(|_| Fp16(rng.next_u64() as u16)).collect();
+    let b16: Vec<Fp16> = (0..a16.len()).map(|_| Fp16(rng.next_u64() as u16)).collect();
+    let mut out16 = Vec::new();
+    fused.mul_batch(&a16, &b16, RoundMode::NearestEven, &mut out16);
+    for i in 0..a16.len() {
+        let want = a16[i].mul(b16[i]);
+        assert_eq!(out16[i].0, want.0, "i={i}");
+        let hw = Fp16::from_f32(a16[i].to_f32() * b16[i].to_f32());
+        if !hw.is_nan() {
+            assert_eq!(out16[i].0, hw.0, "i={i} vs f32 oracle");
+        } else {
+            assert!(out16[i].is_nan(), "i={i}");
+        }
+    }
+
+    // bfloat16: fused ≡ scalar typed multiply, specials and carry cases.
+    let abf: Vec<Bf16> = (0..2 * LANES + 3).map(|_| Bf16(rng.next_u64() as u16)).collect();
+    let bbf: Vec<Bf16> = (0..abf.len()).map(|_| Bf16(rng.next_u64() as u16)).collect();
+    let mut outbf = Vec::new();
+    fused.mul_batch(&abf, &bbf, RoundMode::NearestEven, &mut outbf);
+    for i in 0..abf.len() {
+        let want = abf[i].mul(bbf[i]);
+        if want.is_nan() {
+            assert!(outbf[i].is_nan(), "i={i}");
+        } else {
+            assert_eq!(outbf[i].0, want.0, "i={i}");
+        }
+    }
 }
 
 #[test]

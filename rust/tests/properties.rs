@@ -1,8 +1,8 @@
 //! Cross-cutting property tests over the public API: algebraic laws that
 //! must hold across precisions, schemes, rounding modes and backends.
 
-use civp::decomp::{scheme_census, DecompMul, ExecStats, Precision, Scheme, SchemeKind};
-use civp::fpu::{DirectMul, Fp128, Fp32, Fp64, FpClass, RoundMode, DOUBLE, QUAD, SINGLE};
+use civp::decomp::{scheme_census, DecompMul, ExecStats, OpClass, Scheme, SchemeKind};
+use civp::fpu::{DirectMul, Fp128, Fp32, Fp64, FpClass, RoundMode, BF16, DOUBLE, HALF, QUAD, SINGLE};
 use civp::proput::{forall, Rng};
 use civp::wideint::{mul_u128, U128};
 
@@ -37,7 +37,7 @@ fn every_scheme_is_exact_for_every_width_exhaustive_small() {
 #[test]
 fn census_matches_exec_stats_for_all_precisions() {
     // Static census and dynamic execution must agree on what fired.
-    for prec in Precision::ALL {
+    for prec in OpClass::ALL {
         for kind in SchemeKind::ALL {
             let s = Scheme::new(kind, prec);
             let census = scheme_census(&s);
@@ -170,7 +170,8 @@ fn flags_consistency_across_precisions() {
 #[test]
 fn pack_unpack_roundtrip_all_formats() {
     forall(0x604, 5_000, |rng| {
-        for (fmt, bits) in [(&SINGLE, 32u32), (&DOUBLE, 64), (&QUAD, 128)] {
+        for fmt in [&BF16, &HALF, &SINGLE, &DOUBLE, &QUAD] {
+            let bits = fmt.total_bits();
             let raw = rand_bits(rng, bits);
             let u = fmt.unpack(raw);
             if matches!(u.class, FpClass::Nan) {
