@@ -1,0 +1,130 @@
+//! §Perf — multi-core batch execution through the work-stealing
+//! [`Executor`] at 1/2/4/8 cores, batch sizes spanning the parallel
+//! threshold (256): 128 stays sequential, 1024 and 8192 fan out.
+//!
+//! Two families of measurements land in `BENCH_parallel.json`:
+//!
+//! * `parallel/wall-double-b{N}/cores-{c}` — real wall time of
+//!   `Executor::execute_batch` on this machine. Machine-dependent (CI
+//!   runners may have fewer cores than workers), so these rows are
+//!   excluded from baseline ratio gating.
+//! * `parallel/model-scaling-b{N}-{c}core` — the deterministic makespan
+//!   model over the executor's **actual** [`chunk_plan`] split: an ideal
+//!   `c`-core machine runs `ceil(n_chunks / c)` chunk-waves of
+//!   `chunk × tiles_per_op` tile-cycles (plus the ragged tail on the
+//!   submitter), at a nominal 1 GHz. Machine-*independent* — the CI gate
+//!   (`python/tools/check_bench.py`) enforces that each batch row is
+//!   monotonically non-increasing in cores and that the largest batch
+//!   reaches ≥ 2x at 4 cores, so a regression in the splitting policy
+//!   (chunks too coarse to spread, threshold misrouting) fails the PR.
+//!
+//! Correctness is cross-checked against the sequential path before any
+//! timing. `CIVP_BENCH_QUICK=1` shrinks iteration counts for CI smoke.
+
+use civp::benchx::{bb, bench, scaled, section, JsonReport, Measurement};
+use civp::decomp::{chunk_plan, ExecStats, Executor, OpClass, PlanCache, SchemeKind, LANES};
+use civp::proput::Rng;
+use civp::wideint::{U128, U256};
+
+const CORES: [usize; 4] = [1, 2, 4, 8];
+const SIZES: [usize; 3] = [128, 1024, 8192];
+const THRESHOLD: usize = 256;
+
+/// Ideal-`cores` makespan of one `n`-element double-precision batch, in
+/// nanoseconds per op at 1 tile-cycle = 1 ns: below the threshold the
+/// batch runs sequentially (`n` element-slots); above it the executor's
+/// own `chunk_plan` split runs in `ceil(n_chunks / cores)` waves of one
+/// chunk each, with the ragged tail on the submitting thread.
+fn model_row(n: usize, cores: usize, tiles_per_op: u64) -> Measurement {
+    let full = n - n % LANES;
+    let tail = n - full;
+    let (chunk, n_chunks) = chunk_plan(full, cores);
+    let element_slots = if n < THRESHOLD || n_chunks < 2 {
+        n
+    } else {
+        n_chunks.div_ceil(cores) * chunk + tail
+    };
+    let cycles_total = element_slots as u64 * tiles_per_op;
+    let ns_per_op = cycles_total as f64 / n as f64;
+    Measurement {
+        ns_per_op_p50: ns_per_op,
+        ns_per_op_mean: ns_per_op,
+        ns_per_op_min: ns_per_op,
+        total_ops: n as u64,
+    }
+}
+
+fn main() {
+    let mut json = JsonReport::new();
+    let plan = PlanCache::get(SchemeKind::Civp, OpClass::Double);
+
+    // Tiles per double multiply, taken from the plan itself so the model
+    // tracks the real scheme (CIVP double = [24,24,9] x [24,24,9] tiles).
+    let mut probe = ExecStats::default();
+    let mut rng = Rng::new(0x9A7);
+    plan.execute(rng.sig(53), rng.sig(53), &mut probe);
+    let tiles_per_op = probe.tiles;
+
+    section("multi-core wall time: Executor::execute_batch (double, CIVP)");
+    for &n in &SIZES {
+        let a: Vec<U128> = (0..n).map(|_| rng.sig(53)).collect();
+        let b: Vec<U128> = (0..n).map(|_| rng.sig(53)).collect();
+        // Sequential oracle once per size.
+        let mut seq_stats = ExecStats::default();
+        let mut want: Vec<U256> = Vec::new();
+        plan.execute_batch(&a, &b, &mut seq_stats, &mut want);
+        for &cores in &CORES {
+            let exec = Executor::with_threshold(cores, THRESHOLD);
+            // Cross-check before timing: bit-identical products + stats.
+            let mut par_stats = ExecStats::default();
+            let mut out: Vec<U256> = Vec::new();
+            exec.execute_batch(&plan, &a, &b, &mut par_stats, &mut out);
+            assert_eq!(out, want, "parallel diverged at n={n} cores={cores}");
+            assert_eq!(par_stats.tiles, seq_stats.tiles, "stats diverged at n={n}");
+
+            let iters = scaled(20_000 / n.max(1) as u64).max(2);
+            let m = bench(&format!("b{n:<5} cores={cores} x{n}"), 5, 20, iters, || {
+                exec.execute_batch(&plan, &a, &b, &mut par_stats, &mut out);
+                bb(out.len());
+            });
+            json.push(&format!("parallel/wall-double-b{n}/cores-{cores}"), m);
+        }
+    }
+
+    section("deterministic chunk-plan makespan model @ 1 tile-cycle/ns");
+    let mut ok = true;
+    for &n in &SIZES {
+        let mut prev = f64::INFINITY;
+        let mut at: Vec<(usize, f64)> = Vec::new();
+        for &cores in &CORES {
+            let m = model_row(n, cores, tiles_per_op);
+            if m.ns_per_op_p50 > prev {
+                ok = false;
+            }
+            prev = m.ns_per_op_p50;
+            at.push((cores, m.ns_per_op_p50));
+            json.push(&format!("parallel/model-scaling-b{n}-{cores}core"), m);
+        }
+        let base = at[0].1;
+        let line: Vec<String> =
+            at.iter().map(|(c, p)| format!("{c}c: {:.2}x", base / p)).collect();
+        println!("b{n:<5} {}", line.join("  "));
+        if n == *SIZES.last().unwrap() {
+            let four = at.iter().find(|(c, _)| *c == 4).unwrap().1;
+            if base / four < 2.0 {
+                ok = false;
+            }
+        }
+    }
+    println!(
+        "\n{}",
+        if ok {
+            "PASS: model speedup is monotonic in cores and >= 2x at 4 cores on the largest batch"
+        } else {
+            "FAIL: the chunk-plan split does not spread across cores as required"
+        }
+    );
+    assert!(ok, "parallel-efficiency invariant violated");
+
+    json.write("BENCH_parallel.json").expect("write BENCH_parallel.json");
+}

@@ -1,0 +1,125 @@
+"""Exercise `tools/check_bench.py` itself — both verdicts.
+
+The bench gate is load-bearing CI: a bug that makes it vacuously pass
+would silently disable every perf invariant in the repo. These tests
+drive the script as a subprocess over synthetic artifacts and pin the
+parallel-executor efficiency gate added with `BENCH_parallel.json`:
+
+* pass path — monotone model curves with >= 2x speedup at 4 cores;
+* fail paths — a non-monotonic curve, an insufficient speedup, and a
+  missing core point each exit 1 with a targeted message;
+* `parallel/wall-*` rows are wall-clock: never written into the
+  baseline by `--update`, so runner core counts cannot gate PRs.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+CHECK = REPO / "python" / "tools" / "check_bench.py"
+
+
+def row(name, p50):
+    return {"name": name, "ns_per_op_p50": p50, "ops_per_sec": 1e9 / p50 if p50 else 0.0}
+
+
+def write_artifact(path, rows):
+    path.write_text(json.dumps(rows))
+    return path
+
+
+def run_gate(tmp_path, *args):
+    """Run check_bench.py from `tmp_path`; returns (exit_code, stdout)."""
+    proc = subprocess.run(
+        [sys.executable, str(CHECK), *map(str, args)],
+        cwd=tmp_path,
+        capture_output=True,
+        text=True,
+    )
+    return proc.returncode, proc.stdout + proc.stderr
+
+
+def parallel_rows(curves):
+    """`{batch: {cores: p50}}` -> model rows plus one wall row."""
+    rows = [row("parallel/wall-double-b1024/cores-4", 123.0)]
+    for batch, by_cores in curves.items():
+        for cores, p50 in by_cores.items():
+            rows.append(row(f"parallel/model-scaling-b{batch}-{cores}core", p50))
+    return rows
+
+
+GOOD_CURVES = {
+    128: {1: 40.0, 2: 40.0, 4: 40.0, 8: 40.0},  # below threshold: flat is legal
+    8192: {1: 100.0, 2: 50.0, 4: 25.0, 8: 12.5},  # 4x at 4 cores
+}
+
+
+def test_parallel_gate_passes_on_monotone_curves(tmp_path):
+    art = write_artifact(tmp_path / "BENCH_parallel.json", parallel_rows(GOOD_CURVES))
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 0, out
+    assert "parallel scaling (ok)" in out
+
+
+def test_parallel_gate_fails_on_non_monotonic_curve(tmp_path):
+    bad = {8192: {1: 100.0, 2: 50.0, 4: 60.0, 8: 12.5}}  # 4 cores slower than 2
+    art = write_artifact(tmp_path / "BENCH_parallel.json", parallel_rows(bad))
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "not monotonic" in out
+
+
+def test_parallel_gate_fails_on_insufficient_speedup(tmp_path):
+    bad = {8192: {1: 100.0, 2: 90.0, 4: 80.0, 8: 70.0}}  # only 1.25x at 4 cores
+    art = write_artifact(tmp_path / "BENCH_parallel.json", parallel_rows(bad))
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "parallel speedup" in out and "2.0" in out
+
+
+def test_parallel_gate_fails_on_missing_core_point(tmp_path):
+    bad = {8192: {1: 100.0, 2: 50.0, 8: 12.5}}  # no 4-core row
+    art = write_artifact(tmp_path / "BENCH_parallel.json", parallel_rows(bad))
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "missing the 1-core or 4-core point" in out
+
+
+def test_update_never_baselines_wall_rows(tmp_path):
+    art = write_artifact(tmp_path / "BENCH_parallel.json", parallel_rows(GOOD_CURVES))
+    code, out = run_gate(tmp_path, art.name, "--update", "--baseline", "BL.json")
+    assert code == 0, out
+    names = [r["name"] for r in json.loads((tmp_path / "BL.json").read_text())]
+    assert not any(n.startswith("parallel/wall-") for n in names), names
+    assert any(n.startswith("parallel/model-scaling-") for n in names), names
+
+
+def test_baseline_regression_still_fires_on_model_rows(tmp_path):
+    # The parallel model rows are deterministic, so they DO gate against
+    # the committed baseline: a 2x regression must fail.
+    art = write_artifact(tmp_path / "BENCH_parallel.json", parallel_rows(GOOD_CURVES))
+    write_artifact(
+        tmp_path / "BL.json", [{"name": "parallel/model-scaling-b8192-4core", "ns_per_op_p50": 10.0}]
+    )
+    code, out = run_gate(tmp_path, art.name, "--baseline", "BL.json")
+    assert code == 1, out
+    assert "regressed" in out
+
+
+def test_strict_mode_requires_parallel_artifact(tmp_path):
+    # CI runs with no file args: every required artifact must exist, and
+    # BENCH_parallel.json is now one of them.
+    required = [
+        "BENCH_e2e.json",
+        "BENCH_plan.json",
+        "BENCH_cluster.json",
+        "BENCH_lanes.json",
+        "BENCH_formats.json",
+    ]
+    for name in required:
+        write_artifact(tmp_path / name, [row("dummy/" + name, 1.0)])
+    code, out = run_gate(tmp_path)
+    assert code == 1, out
+    assert "required artifact BENCH_parallel.json missing" in out

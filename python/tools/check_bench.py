@@ -35,7 +35,13 @@ artifacts (CI does this with CIVP_BENCH_QUICK=1). Three layers of checks:
    * cluster fabric-model aggregate throughput (computed analytically —
      deterministic, machine-independent) increases monotonically with
      the shard count, strictly from 1 to 4 shards (the `bench_cluster`
-     scaling acceptance gate).
+     scaling acceptance gate);
+   * parallel-executor efficiency (`BENCH_parallel.json`): the
+     deterministic chunk-plan makespan model's per-op cycles are
+     monotonically non-increasing in cores for every batch size, and the
+     largest batch reaches >= 2x speedup at 4 cores (the `bench_parallel`
+     acceptance gate). The `parallel/wall-*` rows are real wall time and
+     are never baselined — CI runners may have fewer cores than workers.
 
 When run with no file arguments (the CI shape), the three artifacts the
 bench targets write are REQUIRED to exist, and every baselined
@@ -61,13 +67,20 @@ REQUIRED_FILES = (
     "BENCH_cluster.json",
     "BENCH_lanes.json",
     "BENCH_formats.json",
+    "BENCH_parallel.json",
 )
 MODEL_SCALING_RE = re.compile(r"^cluster/mixed/model-scaling-(\d+)shard$")
+PARALLEL_SCALING_RE = re.compile(r"^parallel/model-scaling-b(\d+)-(\d+)core$")
+# Speedup the largest batch's model row must reach at this core count.
+PARALLEL_SPEEDUP_CORES = 4
+PARALLEL_MIN_SPEEDUP = 2.0
 # Single-shot wall-clock measurements (and the optional pjrt path): too
 # machine- and load-dependent to gate against a committed number, and the
 # pjrt row does not exist on runners without artifacts. --update never
 # writes these into the baseline.
-UNBASELINEABLE_RE = re.compile(r"^(e2e/|cluster/mixed/wall-|cluster/mixed/policy-)")
+UNBASELINEABLE_RE = re.compile(
+    r"^(e2e/|cluster/mixed/wall-|cluster/mixed/policy-|parallel/wall-)"
+)
 # Headroom --update applies on top of the measured p50 so a baseline
 # refreshed on a fast machine doesn't fail the 25% gate on a slower one.
 UPDATE_SLACK = 2.0
@@ -229,6 +242,56 @@ def check_cluster_scaling(current):
     print(f"cluster scaling ({status}): {curve}")
 
 
+def check_parallel_scaling(current):
+    """Parallel-efficiency gate over the deterministic makespan model.
+
+    For every batch size: per-op model cycles must be monotonically
+    non-increasing as cores grow (adding cores never loses throughput in
+    the ideal model — a violation means the chunk split stopped
+    spreading). For the largest batch: >= PARALLEL_MIN_SPEEDUP speedup at
+    PARALLEL_SPEEDUP_CORES cores, pinning that big batches actually split
+    into enough chunks to occupy a multi-core pool.
+    """
+    before = len(failures)
+    curves = {}
+    for name, p50 in current.items():
+        m = PARALLEL_SCALING_RE.match(name)
+        if m:
+            curves.setdefault(int(m.group(1)), []).append((int(m.group(2)), p50))
+    if not curves:
+        return
+    for batch, points in sorted(curves.items()):
+        points.sort()
+        prev_c, prev = points[0]
+        for cores, p50 in points[1:]:
+            if p50 > prev:
+                fail(
+                    f"parallel model not monotonic for b{batch}: {cores} cores = "
+                    f"{p50:.1f} ns/op > {prev_c} cores = {prev:.1f} ns/op"
+                )
+            prev_c, prev = cores, p50
+    largest = max(curves)
+    by_cores = dict(curves[largest])
+    if 1 in by_cores and PARALLEL_SPEEDUP_CORES in by_cores:
+        speedup = by_cores[1] / by_cores[PARALLEL_SPEEDUP_CORES]
+        if speedup < PARALLEL_MIN_SPEEDUP:
+            fail(
+                f"parallel speedup at {PARALLEL_SPEEDUP_CORES} cores on b{largest} is "
+                f"{speedup:.2f}x < required {PARALLEL_MIN_SPEEDUP}x"
+            )
+    else:
+        fail(
+            f"parallel model rows for b{largest} missing the 1-core or "
+            f"{PARALLEL_SPEEDUP_CORES}-core point"
+        )
+    status = "ok" if len(failures) == before else "VIOLATED"
+    curve = "  ".join(
+        f"b{b}:{dict(pts)[1] / min(p for _, p in pts):.1f}x" for b, pts in sorted(curves.items())
+        if 1 in dict(pts)
+    )
+    print(f"parallel scaling ({status}): best speedups {curve}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("files", nargs="*", help="BENCH_*.json artifacts (default: glob repo root)")
@@ -311,6 +374,7 @@ def main():
     check_lanes_invariants(current)
     check_lanes_invariants(current, prefix="formats")
     check_cluster_scaling(current)
+    check_parallel_scaling(current)
 
     if failures:
         print(f"\nbench gate FAILED: {len(failures)} failure(s)")

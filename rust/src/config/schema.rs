@@ -16,6 +16,14 @@ pub struct ServiceConfig {
     pub artifacts_dir: String,
     /// Worker threads per precision queue.
     pub workers: usize,
+    /// Work-stealing lane-executor cores (`--cores`). `0` disables the
+    /// parallel executor: every batch runs single-threaded on its
+    /// submitting service worker.
+    pub cores: usize,
+    /// Minimum batch size that fans out across the lane executor
+    /// (`--par-threshold`); smaller batches stay sequential where the
+    /// split/steal overhead would dominate.
+    pub par_threshold: usize,
     /// Max requests per batch (dispatch earlier on timeout).
     pub max_batch: usize,
     /// Batch linger: how long to wait filling a batch, in microseconds.
@@ -47,6 +55,8 @@ impl Default for ServiceConfig {
         ServiceConfig {
             artifacts_dir: "artifacts".to_string(),
             workers: 2,
+            cores: 0,
+            par_threshold: crate::decomp::DEFAULT_PAR_THRESHOLD,
             max_batch: 256,
             linger_us: 200,
             queue_depth: 4096,
@@ -101,6 +111,8 @@ impl ServiceConfig {
             match key.as_str() {
                 "service.artifacts_dir" => self.artifacts_dir = req_str(key, value)?,
                 "service.workers" => self.workers = req_usize(key, value)?,
+                "service.cores" => self.cores = req_usize(key, value)?,
+                "service.par_threshold" => self.par_threshold = req_usize(key, value)?,
                 "service.use_pjrt" => {
                     self.use_pjrt =
                         value.as_bool().with_context(|| format!("{key} must be bool"))?
@@ -161,6 +173,9 @@ impl ServiceConfig {
         }
         if self.max_batch == 0 {
             bail!("batcher.max_batch must be >= 1");
+        }
+        if self.par_threshold == 0 {
+            bail!("service.par_threshold must be >= 1");
         }
         if self.queue_depth < self.max_batch {
             bail!(

@@ -104,6 +104,24 @@ seed = 99
 }
 
 #[test]
+fn config_parallel_executor_keys() {
+    // Defaults: parallel executor disabled, threshold at the library
+    // default so a bare `--cores N` flag is immediately useful.
+    let cfg = ServiceConfig::default();
+    assert_eq!(cfg.cores, 0);
+    assert_eq!(cfg.par_threshold, crate::decomp::DEFAULT_PAR_THRESHOLD);
+    // Overrides round-trip.
+    let cfg =
+        ServiceConfig::from_toml("[service]\ncores = 4\npar_threshold = 128\n").unwrap();
+    assert_eq!(cfg.cores, 4);
+    assert_eq!(cfg.par_threshold, 128);
+    // A zero threshold would make the sequential fallback unreachable.
+    assert!(ServiceConfig::from_toml("[service]\npar_threshold = 0\n").is_err());
+    // cores = 0 is the documented "disabled" value, not an error.
+    ServiceConfig::from_toml("[service]\ncores = 0\n").unwrap();
+}
+
+#[test]
 fn config_rejects_unknown_key() {
     assert!(ServiceConfig::from_toml("[service]\nbogus = 1\n").is_err());
     assert!(ServiceConfig::from_toml("[workload]\nmix_float8 = 0.5\n").is_err());

@@ -1,10 +1,11 @@
 //! Execution backends: native softfloat (+CIVP decomposition accounting)
 //! and the AOT PJRT engine.
 
-use crate::decomp::{DecompMul, ExecStats, OpClass, SchemeKind};
+use crate::decomp::{DecompMul, ExecStats, Executor, OpClass, SchemeKind};
 use crate::error::{ensure, Result};
 use crate::fpu::{FpuBatch, RoundMode};
 use crate::runtime::EngineHandle;
+use std::sync::Arc;
 
 /// A batch executor for one op class.
 ///
@@ -36,6 +37,11 @@ pub trait Backend: Send {
 pub enum BackendChoice {
     /// Native softfloat with the given partition organization.
     Native(SchemeKind),
+    /// Native softfloat whose large batches fan out across the shared
+    /// work-stealing lane executor (`--cores`). Every worker's backend
+    /// holds the same `Arc` — the executor's worker pool is a machine
+    /// resource shared by the whole service.
+    NativeParallel(SchemeKind, Arc<Executor>),
     /// AOT JAX/Pallas artifacts through PJRT (pinned executor thread).
     Pjrt(EngineHandle),
 }
@@ -45,7 +51,18 @@ impl BackendChoice {
     pub fn build(&self) -> Box<dyn Backend> {
         match self {
             BackendChoice::Native(kind) => Box::new(NativeBackend::new(*kind)),
+            BackendChoice::NativeParallel(kind, exec) => {
+                Box::new(NativeBackend::with_executor(*kind, exec.clone()))
+            }
             BackendChoice::Pjrt(handle) => Box::new(PjrtBackend::new(handle.clone())),
+        }
+    }
+
+    /// The shared lane executor, when this choice carries one.
+    pub fn executor(&self) -> Option<&Arc<Executor>> {
+        match self {
+            BackendChoice::NativeParallel(_, exec) => Some(exec),
+            _ => None,
         }
     }
 }
@@ -67,6 +84,15 @@ impl NativeBackend {
     /// New backend with the given organization.
     pub fn new(kind: SchemeKind) -> NativeBackend {
         NativeBackend { fpu: FpuBatch::new(DecompMul::new(kind)) }
+    }
+
+    /// New backend sharing a work-stealing [`Executor`]: significand
+    /// batches at or above the executor's threshold split into
+    /// lane-aligned chunks across its worker pool (§Perf), bit-for-bit
+    /// identical to [`NativeBackend::new`]'s single-threaded path —
+    /// results, flags and stats (pinned by `rust/tests/parallel_equiv.rs`).
+    pub fn with_executor(kind: SchemeKind, exec: Arc<Executor>) -> NativeBackend {
+        NativeBackend { fpu: FpuBatch::new(DecompMul::with_executor(kind, exec)) }
     }
 
     /// Multiply one batch, appending packed products to `out` (cleared

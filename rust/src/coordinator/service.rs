@@ -110,7 +110,14 @@ impl OpCounters {
 /// and joins the workers.
 pub struct Service {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
+    /// Worker handles, behind a mutex so [`Service::drain`] works from
+    /// `&self` (and therefore through an `Arc<Service>` shared with
+    /// submitting threads). Joining happens *inside* the lock, so every
+    /// concurrent drain caller returns only once the pool is quiescent.
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    /// Shared lane executor when the backend choice carries one —
+    /// kept so telemetry snapshots can publish its counters.
+    executor: Option<Arc<crate::decomp::Executor>>,
     fabric: FabricConfig,
     cost: CostModel,
     backend_name: &'static str,
@@ -133,8 +140,10 @@ impl Service {
         });
         let backend_name = match &backend {
             BackendChoice::Native(_) => "native",
+            BackendChoice::NativeParallel(..) => "native",
             BackendChoice::Pjrt(_) => "pjrt",
         };
+        let executor = backend.executor().cloned();
         // One worker set per op-class queue; each worker owns a backend
         // instance (op classes tallied lock-free into `op_counts`).
         let mut workers = Vec::new();
@@ -154,7 +163,14 @@ impl Service {
             FabricKind::Civp => FabricConfig::civp_scaled(cfg.fabric_scale),
             FabricKind::Legacy => FabricConfig::legacy_scaled(cfg.fabric_scale),
         };
-        Service { shared, workers, fabric, cost: CostModel::default(), backend_name }
+        Service {
+            shared,
+            workers: Mutex::new(workers),
+            executor,
+            fabric,
+            cost: CostModel::default(),
+            backend_name,
+        }
     }
 
     /// Submit a request; returns the reply handle. Blocks on backpressure
@@ -212,8 +228,13 @@ impl Service {
         rx.recv().expect("worker dropped reply").bits
     }
 
-    /// Telemetry snapshot.
+    /// Telemetry snapshot. When the backend runs on the shared lane
+    /// executor, its per-worker steal/execute counters are published
+    /// into the registry (as gauges) before the snapshot is taken.
     pub fn metrics(&self) -> crate::metrics::Snapshot {
+        if let Some(exec) = &self.executor {
+            exec.publish(&self.shared.metrics);
+        }
         self.shared.metrics.snapshot()
     }
 
@@ -250,7 +271,7 @@ impl Service {
     }
 
     /// Close queues and join workers (drains in-flight batches).
-    pub fn shutdown(mut self) -> ServiceReport {
+    pub fn shutdown(self) -> ServiceReport {
         self.shutdown_inner();
         self.report()
     }
@@ -258,16 +279,28 @@ impl Service {
     /// Close queues and join workers *without* consuming the service —
     /// the cluster layer drains every shard first, then reads the final
     /// (now quiescent) op counters for the aggregated fabric report.
-    /// Idempotent; subsequent submits fail with `Closed`.
-    pub fn drain(&mut self) {
+    ///
+    /// Takes `&self`, so any thread holding an `Arc<Service>` may drain
+    /// while others are still submitting (late submits fail with
+    /// `Closed`; everything accepted before the close still gets exactly
+    /// one reply). Idempotent and safe to race with itself: concurrent
+    /// drains serialize on the worker-handle lock, and every caller
+    /// returns only after the worker pool is quiescent — so the op
+    /// counters a drainer reads afterwards are final. Pinned by
+    /// `service_concurrent_drain_under_load_loses_nothing`.
+    pub fn drain(&self) {
         self.shutdown_inner();
     }
 
-    fn shutdown_inner(&mut self) {
+    fn shutdown_inner(&self) {
         for b in &self.shared.batchers {
             b.close();
         }
-        for w in self.workers.drain(..) {
+        // Join while holding the lock: a concurrent drain caller blocks
+        // here until the first finishes joining, so *every* drain returns
+        // with the pool stopped (not just the winner of the race).
+        let mut workers = self.workers.lock().unwrap();
+        for w in workers.drain(..) {
             let _ = w.join();
         }
     }

@@ -340,6 +340,80 @@ fn service_fabric_report_is_count_based_and_matches_stream_oracle() {
 }
 
 #[test]
+fn service_concurrent_drain_under_load_loses_nothing() {
+    // Satellite of the parallel-executor PR: `drain` takes `&self`, so any
+    // number of threads may drain a shared service while submitters are
+    // still pushing. Contract under that race:
+    //   * every *accepted* submit (Ok handle) gets exactly one reply;
+    //   * late submits fail with `Closed`, never hang or half-enqueue;
+    //   * after any drain returns the pool is quiescent, so
+    //     requests_total == responses_total == sum of per-class op counts.
+    // The backend runs on a shared 2-core lane executor with a tiny fan-out
+    // threshold, so drains also race the work-stealing chunk path.
+    use crate::decomp::Executor;
+    let cfg = ServiceConfig { workers: 2, max_batch: 64, linger_us: 200, ..Default::default() };
+    let exec = Arc::new(Executor::with_threshold(2, 16));
+    let svc = Arc::new(Service::start(
+        &cfg,
+        BackendChoice::NativeParallel(SchemeKind::Civp, exec),
+    ));
+    let submitters: Vec<_> = (0..6)
+        .map(|t| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let mut accepted = 0u64;
+                let mut rxs = Vec::new();
+                for i in 0..3_000u64 {
+                    let class = OpClass::from_index(((t + i) % OpClass::COUNT as u64) as usize);
+                    let one = one_bits(class);
+                    match svc.submit(i, class, one, one) {
+                        Ok(rx) => {
+                            accepted += 1;
+                            rxs.push((one, rx));
+                        }
+                        Err(SubmitError::Closed) => break,
+                        Err(e) => panic!("unexpected {e:?}"),
+                    }
+                }
+                for (one, rx) in rxs {
+                    // exactly one reply per accepted request, even for the
+                    // tail accepted just before the queues closed
+                    let resp = rx.recv().expect("accepted request lost its reply");
+                    assert_eq!(resp.bits, one, "1.0 * 1.0 must be exact");
+                }
+                accepted
+            })
+        })
+        .collect();
+    let drainers: Vec<_> = (0..2)
+        .map(|_| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(5));
+                svc.drain();
+                // drain returned => the pool is stopped for *this* caller
+                // too (not just the race winner): submits must refuse.
+                assert_eq!(
+                    svc.submit(0, OpClass::Double, 1u128 << 62, 1u128 << 62).err(),
+                    Some(SubmitError::Closed)
+                );
+            })
+        })
+        .collect();
+    let accepted: u64 = submitters.into_iter().map(|h| h.join().unwrap()).sum();
+    for d in drainers {
+        d.join().unwrap();
+    }
+    assert!(accepted > 0, "drain raced ahead of every submit");
+    svc.drain(); // idempotent
+    let snap = svc.metrics();
+    assert_eq!(snap.counters["requests_total"], accepted);
+    assert_eq!(snap.counters["responses_total"], accepted);
+    assert_eq!(snap.counters["rejected_queue_full"], 0);
+    assert_eq!(svc.op_counts().values().sum::<u64>(), accepted);
+}
+
+#[test]
 fn service_reply_slots_are_recycled() {
     // Steady-state allocation check by proxy: sequential blocking requests
     // reuse one pooled slot instead of allocating per request.

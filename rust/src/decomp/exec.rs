@@ -11,6 +11,7 @@
 //!   [`Plan::execute_lanes`]: tile-major SoA blocks with one scaled
 //!   stats merge per batch, the steady-state serving path.
 
+use super::parallel::Executor;
 use super::plan::{Plan, PlanCache};
 use super::scheme::{BlockKind, Scheme, SchemeKind, Tile};
 use crate::fpu::{OpClass, SigBatchMultiplier, SigMultiplier};
@@ -22,7 +23,7 @@ use std::sync::Arc;
 ///
 /// Hot-path representation: per-kind counters are a fixed array indexed by
 /// the `BlockKind` discriminant (no hashing on the multiply path — §Perf).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ExecStats {
     /// Multiplications performed, indexed by `BlockKind as usize`.
     ops_by_kind: [u64; 5],
@@ -184,6 +185,11 @@ pub struct DecompMul {
     /// Cross-check every product against the direct widening multiply
     /// (debug builds always do; this forces it in release too).
     pub verify: bool,
+    /// Shared work-stealing executor: batches at or above its threshold
+    /// fan out across cores ([`Executor::execute_batch`], bit-for-bit
+    /// equivalent to the single-threaded lane path). `None` keeps every
+    /// batch on the submitting thread.
+    par: Option<Arc<Executor>>,
 }
 
 /// Fast-slot index for registry significand widths.
@@ -201,6 +207,7 @@ impl DecompMul {
             plans: HashMap::new(),
             stats: ExecStats::default(),
             verify: false,
+            par: None,
         }
     }
 
@@ -209,6 +216,24 @@ impl DecompMul {
         let mut m = Self::new(kind);
         m.verify = true;
         m
+    }
+
+    /// New adapter whose batches fan out across the shared work-stealing
+    /// executor (batches below the executor's threshold stay inline).
+    pub fn with_executor(kind: SchemeKind, exec: Arc<Executor>) -> DecompMul {
+        let mut m = Self::new(kind);
+        m.par = Some(exec);
+        m
+    }
+
+    /// Attach (or detach, with `None`) a shared executor.
+    pub fn set_executor(&mut self, exec: Option<Arc<Executor>>) {
+        self.par = exec;
+    }
+
+    /// The attached executor, if any.
+    pub fn executor(&self) -> Option<&Arc<Executor>> {
+        self.par.as_ref()
     }
 
     #[inline]
@@ -257,10 +282,17 @@ impl SigBatchMultiplier for DecompMul {
     /// The lane path: the whole batch executes tile-major through the
     /// cached plan's [`Plan::execute_lanes`], with one scaled stats merge
     /// — the batch counterpart of [`SigMultiplier::mul_sig`], and
-    /// bit-exact against it (pinned by `rust/tests/plan_equiv.rs`).
+    /// bit-exact against it (pinned by `rust/tests/plan_equiv.rs`). With
+    /// an attached [`Executor`], batches at or above its threshold fan
+    /// out across cores — still bit-exact, outputs and stats (pinned by
+    /// `rust/tests/parallel_equiv.rs`).
     fn mul_sig_batch(&mut self, a: &[U128], b: &[U128], width: u32, out: &mut Vec<U256>) {
         let mut stats = std::mem::take(&mut self.stats);
-        self.entry_for(width).execute_lanes(a, b, &mut stats, out);
+        let plan = self.entry_for(width).clone();
+        match &self.par {
+            Some(exec) => exec.execute_batch(&plan, a, b, &mut stats, out),
+            None => plan.execute_lanes(a, b, &mut stats, out),
+        }
         self.stats = stats;
         if self.verify {
             for (i, (&x, &y)) in a.iter().zip(b).enumerate() {

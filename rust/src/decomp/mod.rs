@@ -28,11 +28,16 @@
 //! coordinator's native backend) runs the step table **tile-major** over
 //! [`lanes`] structure-of-arrays blocks, so a fixed scheme streams a whole
 //! batch through one decoded datapath — the software analogue of deep
-//! pipelining.
+//! pipelining. Large batches go further still: the [`parallel`] module's
+//! work-stealing [`Executor`] splits a batch into lane-aligned chunks and
+//! fans them out across per-core workers, bit-for-bit equivalent to the
+//! single-threaded path (outputs *and* merged stats — pinned by
+//! `rust/tests/parallel_equiv.rs`).
 
 pub mod analysis;
 pub mod exec;
 pub mod lanes;
+pub mod parallel;
 pub mod plan;
 pub mod scheme;
 #[cfg(test)]
@@ -41,6 +46,7 @@ mod tests;
 pub use analysis::{scheme_census, AnalysisRow, BlockCensus};
 pub use exec::{execute, DecompMul, ExecStats};
 pub use lanes::{LaneBlock, LanePlan, LANES};
+pub use parallel::{chunk_plan, Executor, ExecutorCounters, WorkerCounters, DEFAULT_PAR_THRESHOLD};
 pub use plan::{Plan, PlanCache, PlanStep};
 pub use scheme::{BlockKind, Scheme, SchemeKind, Tile};
 

@@ -1,0 +1,599 @@
+//! Work-stealing multi-core batch executor for the lane engine.
+//!
+//! The lane engine ([`Plan::execute_lanes`]) is 8-wide SoA but
+//! single-threaded: one large batch saturates one core while the rest of
+//! the machine idles. The CIVP decomposition makes every wide multiply a
+//! DAG of *independent* tile products, so a batch splits perfectly — this
+//! module adds the missing axis of parallelism without changing a single
+//! result bit.
+//!
+//! Design (std-only — the build environment has no crossbeam):
+//!
+//! * an [`Executor`] owns a fixed pool of per-core worker threads, each
+//!   with its own chunk deque (a `Mutex<VecDeque>` — the critical section
+//!   is a pointer-sized pop, so contention is negligible next to the
+//!   multi-microsecond chunk execution it guards);
+//! * a submitted batch is split into **lane-aligned chunks** (every chunk
+//!   length is a multiple of [`LANES`], so the parallel block
+//!   decomposition is *identical* to the sequential one) and scattered
+//!   round-robin across the worker deques; the scalar ragged tail
+//!   (`len % LANES`) stays on the submitting thread;
+//! * workers pop from the front of their own deque; an idle worker
+//!   **steals from the back of the busiest deque** (largest depth), so
+//!   load imbalance self-corrects without a global queue;
+//! * the submitting thread *helps*: while its batch is in flight it
+//!   drains chunks like a worker, then parks on the batch's completion
+//!   condvar — so even a 1-worker executor makes progress and a storm of
+//!   submitters cannot starve itself;
+//! * each chunk writes its products into a disjoint range of the output
+//!   buffer and its [`ExecStats`] into a per-chunk slot; after the last
+//!   chunk completes, the submitter merges the slots **in chunk order**
+//!   (then the tail), so the merged stats are bit-for-bit identical to
+//!   the sequential path regardless of which worker ran what when.
+//!
+//! Equivalence with the sequential [`Plan::execute_batch`] — outputs,
+//! flag unions through [`crate::fpu::FpuBatch`], and merged stats — is
+//! pinned by `rust/tests/parallel_equiv.rs` (property tests over every
+//! `SchemeKind × OpClass`, ragged tails, worker counts 1–8 and batch
+//! sizes straddling the threshold) and hammered from many submitting
+//! threads by `rust/tests/parallel_stress.rs`.
+
+use super::exec::ExecStats;
+use super::lanes::LANES;
+use super::plan::Plan;
+use crate::wideint::{U128, U256};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Default minimum batch size fanned out across the executor; smaller
+/// batches keep the single-threaded lane path (the fan-out fixed cost —
+/// queue pushes, a wakeup, a condvar wait — only pays for itself on
+/// batches at least this large). Matches the default `batcher.max_batch`,
+/// so a service that opts in with `--cores` parallelizes exactly its full
+/// batches.
+pub const DEFAULT_PAR_THRESHOLD: usize = 256;
+
+/// Smallest chunk the splitter produces (in elements). Chunks are the
+/// steal granularity: too small and the deque traffic dominates, too
+/// large and stealing cannot rebalance. Must be a multiple of [`LANES`].
+const MIN_CHUNK: usize = 4 * LANES;
+
+/// Target number of chunks per worker, so idle workers always find
+/// something to steal while the batch is in flight.
+const CHUNKS_PER_WORKER: usize = 4;
+
+/// How long an idle worker parks between wakeup checks. The wake protocol
+/// notifies on every submit; the timeout only bounds the cost of a lost
+/// race, it is not the steady-state latency.
+const IDLE_PARK: Duration = Duration::from_millis(1);
+
+/// The lane-aligned chunk split for a batch: `(chunk_len, n_chunks)` over
+/// the `full` lane-aligned prefix (`full % LANES == 0`). Exposed so the
+/// bench model (`benches/bench_parallel.rs`) and the gate
+/// (`python/tools/check_bench.py`) reason about the *actual* splitting
+/// policy rather than a parallel re-implementation of it.
+pub fn chunk_plan(full: usize, workers: usize) -> (usize, usize) {
+    debug_assert_eq!(full % LANES, 0, "chunk_plan takes the lane-aligned prefix");
+    if full == 0 {
+        return (MIN_CHUNK, 0);
+    }
+    let target = (full / (workers.max(1) * CHUNKS_PER_WORKER)).max(MIN_CHUNK);
+    // Round up to a LANES multiple so every chunk boundary is a block
+    // boundary — the parallel block decomposition is then identical to
+    // the sequential one, which is what makes the outputs bit-exact.
+    let chunk = target.div_ceil(LANES) * LANES;
+    (chunk, full.div_ceil(chunk))
+}
+
+/// One chunk's worth of per-slot stats, written by exactly one executor
+/// thread and read by the submitter only after the completion barrier.
+struct StatSlot(std::cell::UnsafeCell<ExecStats>);
+
+// SAFETY: each slot is written by the single thread that executes its
+// chunk (disjoint indices), and read by the submitting thread only after
+// `BatchJob::remaining` has reached zero — the AcqRel decrement plus the
+// completion-mutex handoff order every write before every read.
+unsafe impl Sync for StatSlot {}
+
+/// A batch in flight: type-erased pointers into the caller's slices plus
+/// the completion state. The submitting thread keeps the borrows alive
+/// for the whole job lifetime (it blocks in [`Executor::execute_batch`]
+/// until `remaining == 0`), which is what makes the raw pointers sound.
+struct BatchJob {
+    plan: *const Plan,
+    a: *const U128,
+    b: *const U128,
+    /// Output base for the lane-aligned prefix (disjoint per-chunk
+    /// ranges; the ragged tail is a separate slice on the submitter).
+    out: *mut U256,
+    full: usize,
+    chunk: usize,
+    n_chunks: usize,
+    stats: Box<[StatSlot]>,
+    remaining: AtomicUsize,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// SAFETY: the pointees are borrowed slices owned by the submitting
+// thread, which outlives the job (see `BatchJob` docs); all mutable
+// access is to disjoint chunk ranges, and the completion protocol
+// (AcqRel `remaining` + mutex) sequences writes before the final read.
+unsafe impl Send for BatchJob {}
+unsafe impl Sync for BatchJob {}
+
+impl BatchJob {
+    /// Element range of chunk `index`.
+    #[inline]
+    fn range(&self, index: usize) -> (usize, usize) {
+        let start = index * self.chunk;
+        (start, (start + self.chunk).min(self.full))
+    }
+
+    /// Record one finished chunk; the last one flips the done flag and
+    /// wakes the submitter.
+    fn complete_one(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut done = self.done.lock().unwrap();
+            *done = true;
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+/// One queued chunk.
+struct Task {
+    job: Arc<BatchJob>,
+    index: usize,
+}
+
+/// Steal/execute counters for one worker (see [`Executor::counters`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerCounters {
+    /// Chunks this worker executed (own-queue pops and steals).
+    pub executed: u64,
+    /// Of those, chunks stolen from another worker's deque.
+    pub stolen: u64,
+}
+
+/// Point-in-time executor telemetry (see [`Executor::counters`]).
+#[derive(Clone, Debug, Default)]
+pub struct ExecutorCounters {
+    /// Per-worker execute/steal counts.
+    pub workers: Vec<WorkerCounters>,
+    /// Chunks executed inline by submitting threads while helping.
+    pub helper_executed: u64,
+    /// Batches that took the parallel fan-out path.
+    pub parallel_batches: u64,
+    /// Batches below the threshold that stayed single-threaded.
+    pub sequential_batches: u64,
+}
+
+struct ExecShared {
+    /// One chunk deque per worker. Owners pop the front; thieves pop the
+    /// back of the deepest deque.
+    queues: Vec<Mutex<VecDeque<Task>>>,
+    /// Queue depths mirrored outside the locks so the busiest-queue scan
+    /// is lock-free.
+    depths: Vec<AtomicUsize>,
+    /// Idle-park mutex/condvar pair for workers with empty deques.
+    idle: Mutex<()>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+    /// Round-robin cursor so successive batches start scattering at
+    /// different queues (keeps concurrent submitters off one deque).
+    next_queue: AtomicUsize,
+    executed: Vec<AtomicU64>,
+    stolen: Vec<AtomicU64>,
+    helper_executed: AtomicU64,
+    parallel_batches: AtomicU64,
+    sequential_batches: AtomicU64,
+}
+
+impl ExecShared {
+    /// Pop from worker `i`'s own deque (front — FIFO keeps chunk latency
+    /// roughly submission-ordered).
+    fn pop_local(&self, i: usize) -> Option<Task> {
+        let task = self.queues[i].lock().unwrap().pop_front();
+        if task.is_some() {
+            self.depths[i].fetch_sub(1, Ordering::Relaxed);
+        }
+        task
+    }
+
+    /// Steal from the back of the busiest deque (`!= me` when `me` is a
+    /// worker; submitting threads pass `None` and may take from anyone).
+    fn steal(&self, me: Option<usize>) -> Option<Task> {
+        loop {
+            let mut best = None;
+            let mut best_depth = 0;
+            for (j, depth) in self.depths.iter().enumerate() {
+                if Some(j) == me {
+                    continue;
+                }
+                let d = depth.load(Ordering::Relaxed);
+                if d > best_depth {
+                    best_depth = d;
+                    best = Some(j);
+                }
+            }
+            let j = best?;
+            let task = self.queues[j].lock().unwrap().pop_back();
+            match task {
+                Some(t) => {
+                    self.depths[j].fetch_sub(1, Ordering::Relaxed);
+                    return Some(t);
+                }
+                // Raced another thief for the last chunk — rescan.
+                None => continue,
+            }
+        }
+    }
+
+    /// Execute one chunk: run the lane kernel over the chunk's range into
+    /// `scratch`, copy into the job's disjoint output range, park the
+    /// stats in the chunk's slot, and tick the completion count.
+    fn run_task(&self, task: Task, scratch: &mut Vec<U256>) {
+        let job = &*task.job;
+        let (start, end) = job.range(task.index);
+        // SAFETY: the submitting thread keeps the slices alive until the
+        // job completes, and `[start, end)` ranges are disjoint per chunk
+        // (see `BatchJob`).
+        let (plan, a, b) = unsafe {
+            (
+                &*job.plan,
+                std::slice::from_raw_parts(job.a.add(start), end - start),
+                std::slice::from_raw_parts(job.b.add(start), end - start),
+            )
+        };
+        let mut stats = ExecStats::default();
+        plan.execute_lanes(a, b, &mut stats, scratch);
+        unsafe {
+            std::ptr::copy_nonoverlapping(scratch.as_ptr(), job.out.add(start), end - start);
+            *job.stats[task.index].0.get() = stats;
+        }
+        job.complete_one();
+    }
+
+    fn worker_loop(&self, i: usize) {
+        let mut scratch: Vec<U256> = Vec::new();
+        loop {
+            if let Some(task) = self.pop_local(i) {
+                self.run_task(task, &mut scratch);
+                self.executed[i].fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            if let Some(task) = self.steal(Some(i)) {
+                self.run_task(task, &mut scratch);
+                self.executed[i].fetch_add(1, Ordering::Relaxed);
+                self.stolen[i].fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            if self.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            // Park until a submit notifies (the timeout only bounds a
+            // lost wakeup race; submits always notify under this mutex).
+            let guard = self.idle.lock().unwrap();
+            if self.depths.iter().any(|d| d.load(Ordering::Relaxed) > 0)
+                || self.shutdown.load(Ordering::Acquire)
+            {
+                continue;
+            }
+            let _unused = self.work_cv.wait_timeout(guard, IDLE_PARK).unwrap();
+        }
+    }
+}
+
+/// The shared work-stealing batch executor (see the module docs).
+///
+/// One `Executor` is created per process deployment (the CLI builds it
+/// from `--cores` / `service.cores`) and shared by every
+/// [`crate::coordinator::NativeBackend`] via `Arc` — the worker pool is a
+/// machine resource, not a per-backend one.
+///
+/// ```
+/// use civp::decomp::{Executor, ExecStats, OpClass, PlanCache, SchemeKind};
+/// use civp::proput::Rng;
+///
+/// let exec = Executor::with_threshold(2, 64);
+/// let plan = PlanCache::get(SchemeKind::Civp, OpClass::Double);
+/// let mut rng = Rng::new(7);
+/// let a: Vec<_> = (0..200).map(|_| rng.sig(53)).collect();
+/// let b: Vec<_> = (0..200).map(|_| rng.sig(53)).collect();
+/// let (mut seq, mut par) = (ExecStats::default(), ExecStats::default());
+/// let (mut out_seq, mut out_par) = (Vec::new(), Vec::new());
+/// plan.execute_batch(&a, &b, &mut seq, &mut out_seq);
+/// exec.execute_batch(&plan, &a, &b, &mut par, &mut out_par);
+/// assert_eq!(out_seq, out_par); // bit-for-bit, stats included
+/// assert_eq!(seq.muls, par.muls);
+/// ```
+pub struct Executor {
+    shared: Arc<ExecShared>,
+    workers: Vec<JoinHandle<()>>,
+    threshold: usize,
+}
+
+impl Executor {
+    /// Spawn an executor with `workers` worker threads and the default
+    /// parallel threshold ([`DEFAULT_PAR_THRESHOLD`]).
+    pub fn new(workers: usize) -> Executor {
+        Self::with_threshold(workers, DEFAULT_PAR_THRESHOLD)
+    }
+
+    /// Spawn an executor with an explicit parallel threshold: batches
+    /// shorter than `par_threshold` run the single-threaded lane path on
+    /// the submitting thread, untouched.
+    pub fn with_threshold(workers: usize, par_threshold: usize) -> Executor {
+        let n = workers.max(1);
+        let shared = Arc::new(ExecShared {
+            queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            depths: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            idle: Mutex::new(()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            next_queue: AtomicUsize::new(0),
+            executed: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            stolen: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            helper_executed: AtomicU64::new(0),
+            parallel_batches: AtomicU64::new(0),
+            sequential_batches: AtomicU64::new(0),
+        });
+        let handles = (0..n)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("civp-par-{i}"))
+                    .spawn(move || shared.worker_loop(i))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Executor { shared, workers: handles, threshold: par_threshold.max(1) }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The configured parallel threshold.
+    pub fn par_threshold(&self) -> usize {
+        self.threshold
+    }
+
+    /// Execute a whole batch through the compiled plan — the parallel
+    /// counterpart of [`Plan::execute_batch`], and bit-for-bit identical
+    /// to it: products, output order and the stats merged into `stats`
+    /// (per-chunk stats are merged deterministically in chunk order).
+    ///
+    /// Batches shorter than the threshold (or too small to split into
+    /// two chunks) run the sequential lane path inline.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `a` and `b` have different lengths.
+    pub fn execute_batch(
+        &self,
+        plan: &Plan,
+        a: &[U128],
+        b: &[U128],
+        stats: &mut ExecStats,
+        out: &mut Vec<U256>,
+    ) {
+        assert_eq!(a.len(), b.len(), "operand length mismatch");
+        let n = a.len();
+        let full = n - n % LANES;
+        let (chunk, n_chunks) = chunk_plan(full, self.workers.len());
+        if n < self.threshold || n_chunks < 2 {
+            self.shared.sequential_batches.fetch_add(1, Ordering::Relaxed);
+            plan.execute_batch(a, b, stats, out);
+            return;
+        }
+        self.shared.parallel_batches.fetch_add(1, Ordering::Relaxed);
+        out.clear();
+        out.resize(n, U256::ZERO);
+        let (body, tail_out) = out.split_at_mut(full);
+        let job = Arc::new(BatchJob {
+            plan,
+            a: a.as_ptr(),
+            b: b.as_ptr(),
+            out: body.as_mut_ptr(),
+            full,
+            chunk,
+            n_chunks,
+            stats: (0..n_chunks)
+                .map(|_| StatSlot(std::cell::UnsafeCell::new(ExecStats::default())))
+                .collect(),
+            remaining: AtomicUsize::new(n_chunks),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        // Scatter the chunks round-robin across the worker deques,
+        // starting at a rotating queue, then wake everyone.
+        let shared = &*self.shared;
+        let start = shared.next_queue.fetch_add(1, Ordering::Relaxed);
+        for index in 0..n_chunks {
+            let q = (start + index) % shared.queues.len();
+            shared.queues[q].lock().unwrap().push_back(Task { job: job.clone(), index });
+            shared.depths[q].fetch_add(1, Ordering::Relaxed);
+        }
+        {
+            let _guard = shared.idle.lock().unwrap();
+            shared.work_cv.notify_all();
+        }
+        // The scalar ragged tail stays on the submitting thread.
+        let mut tail_stats = ExecStats::default();
+        for (slot, (&x, &y)) in tail_out.iter_mut().zip(a[full..].iter().zip(&b[full..])) {
+            *slot = plan.execute(x, y, &mut tail_stats);
+        }
+        // Help drain while the batch is in flight, then park on the
+        // completion condvar.
+        let mut scratch: Vec<U256> = Vec::new();
+        while job.remaining.load(Ordering::Acquire) > 0 {
+            match shared.steal(None) {
+                Some(task) => {
+                    shared.run_task(task, &mut scratch);
+                    shared.helper_executed.fetch_add(1, Ordering::Relaxed);
+                }
+                None => {
+                    let mut done = job.done.lock().unwrap();
+                    while !*done {
+                        done = job.done_cv.wait(done).unwrap();
+                    }
+                    break;
+                }
+            }
+        }
+        // Deterministic merge: chunk slots in chunk order, then the tail.
+        // SAFETY: `remaining == 0` (AcqRel handoff) — every slot write
+        // happened-before this read and no thread touches the job again.
+        for slot in job.stats.iter() {
+            stats.merge(unsafe { &*slot.0.get() });
+        }
+        stats.merge(&tail_stats);
+    }
+
+    /// Snapshot of the per-worker steal/execute counters and batch-path
+    /// totals.
+    pub fn counters(&self) -> ExecutorCounters {
+        let s = &*self.shared;
+        ExecutorCounters {
+            workers: (0..self.workers.len())
+                .map(|i| WorkerCounters {
+                    executed: s.executed[i].load(Ordering::Relaxed),
+                    stolen: s.stolen[i].load(Ordering::Relaxed),
+                })
+                .collect(),
+            helper_executed: s.helper_executed.load(Ordering::Relaxed),
+            parallel_batches: s.parallel_batches.load(Ordering::Relaxed),
+            sequential_batches: s.sequential_batches.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Publish the executor telemetry into a metrics registry as gauges
+    /// (`par_worker{i}_executed` / `par_worker{i}_stolen` /
+    /// `par_helper_executed` / `par_batches_{parallel,sequential}`).
+    /// Gauges, not counters: the executor owns the monotonic state and a
+    /// snapshot publisher must be idempotent.
+    pub fn publish(&self, registry: &crate::metrics::Registry) {
+        let c = self.counters();
+        for (i, w) in c.workers.iter().enumerate() {
+            registry.gauge(&format!("par_worker{i}_executed")).set(w.executed as i64);
+            registry.gauge(&format!("par_worker{i}_stolen")).set(w.stolen as i64);
+        }
+        registry.gauge("par_helper_executed").set(c.helper_executed as i64);
+        registry.gauge("par_batches_parallel").set(c.parallel_batches as i64);
+        registry.gauge("par_batches_sequential").set(c.sequential_batches as i64);
+    }
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor")
+            .field("workers", &self.workers.len())
+            .field("par_threshold", &self.threshold)
+            .finish()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        // No batch can be in flight here (`execute_batch` borrows `self`
+        // until its job completes), so the deques are empty.
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _guard = self.shared.idle.lock().unwrap();
+            self.shared.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::{OpClass, PlanCache, SchemeKind};
+    use crate::proput::Rng;
+
+    #[test]
+    fn chunk_plan_is_lane_aligned_and_covers() {
+        for workers in 1..=8 {
+            for n in [0usize, 8, 64, 256, 1000, 4096, 65536] {
+                let full = n - n % LANES;
+                let (chunk, count) = chunk_plan(full, workers);
+                assert_eq!(chunk % LANES, 0, "chunk not lane-aligned");
+                assert!(chunk >= MIN_CHUNK);
+                if full == 0 {
+                    assert_eq!(count, 0);
+                } else {
+                    assert_eq!(count, full.div_ceil(chunk));
+                    assert!((count - 1) * chunk < full && count * chunk >= full);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn below_threshold_stays_sequential() {
+        let exec = Executor::with_threshold(2, 256);
+        let plan = PlanCache::get(SchemeKind::Civp, OpClass::Double);
+        let mut rng = Rng::new(3);
+        let a: Vec<U128> = (0..100).map(|_| rng.sig(53)).collect();
+        let b: Vec<U128> = (0..100).map(|_| rng.sig(53)).collect();
+        let mut stats = ExecStats::default();
+        let mut out = Vec::new();
+        exec.execute_batch(&plan, &a, &b, &mut stats, &mut out);
+        let c = exec.counters();
+        assert_eq!(c.sequential_batches, 1);
+        assert_eq!(c.parallel_batches, 0);
+        assert_eq!(stats.muls, 100);
+    }
+
+    #[test]
+    fn parallel_path_counts_and_matches() {
+        let exec = Executor::with_threshold(3, 64);
+        let plan = PlanCache::get(SchemeKind::Civp, OpClass::Quad);
+        let mut rng = Rng::new(11);
+        let n = 777; // ragged tail of 1
+        let a: Vec<U128> = (0..n).map(|_| rng.sig(113)).collect();
+        let b: Vec<U128> = (0..n).map(|_| rng.sig(113)).collect();
+        let (mut seq, mut par) = (ExecStats::default(), ExecStats::default());
+        let (mut out_seq, mut out_par) = (Vec::new(), Vec::new());
+        plan.execute_batch(&a, &b, &mut seq, &mut out_seq);
+        exec.execute_batch(&plan, &a, &b, &mut par, &mut out_par);
+        assert_eq!(out_seq, out_par);
+        assert_eq!(seq.muls, par.muls);
+        assert_eq!(seq.tiles, par.tiles);
+        assert_eq!(seq.useful_bitops, par.useful_bitops);
+        let c = exec.counters();
+        assert_eq!(c.parallel_batches, 1);
+        let ran: u64 =
+            c.workers.iter().map(|w| w.executed).sum::<u64>() + c.helper_executed;
+        let full = n - n % LANES;
+        let (_, chunks) = chunk_plan(full, exec.workers());
+        assert_eq!(ran as usize, chunks, "every chunk executed exactly once");
+    }
+
+    #[test]
+    fn publish_exports_gauges() {
+        let exec = Executor::with_threshold(2, 32);
+        let plan = PlanCache::get(SchemeKind::Civp, OpClass::Single);
+        let mut rng = Rng::new(5);
+        let a: Vec<U128> = (0..512).map(|_| rng.sig(24)).collect();
+        let b: Vec<U128> = (0..512).map(|_| rng.sig(24)).collect();
+        let mut stats = ExecStats::default();
+        let mut out = Vec::new();
+        exec.execute_batch(&plan, &a, &b, &mut stats, &mut out);
+        let registry = crate::metrics::Registry::new();
+        exec.publish(&registry);
+        let snap = registry.snapshot();
+        assert!(snap.gauges.contains_key("par_worker0_executed"));
+        assert!(snap.gauges.contains_key("par_worker1_stolen"));
+        assert_eq!(snap.gauges["par_batches_parallel"], 1);
+    }
+}

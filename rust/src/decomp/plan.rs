@@ -248,7 +248,12 @@ impl Plan {
     /// tile-major SoA kernels end-to-end. The per-op mode
     /// ([`Plan::execute`] in a loop) remains available as the
     /// bit-exactness oracle; `rust/tests/plan_equiv.rs` pins the two
-    /// modes against each other for every scheme kind and width.
+    /// modes against each other for every scheme kind and width. The
+    /// multi-core counterpart is
+    /// [`Executor::execute_batch`](super::parallel::Executor::execute_batch),
+    /// which splits large batches into lane-aligned chunks across a
+    /// work-stealing worker pool — bit-for-bit equivalent to this method,
+    /// stats included (`rust/tests/parallel_equiv.rs`).
     ///
     /// # Panics
     ///

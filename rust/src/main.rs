@@ -22,6 +22,7 @@ use civp::coordinator::{orient2d_adaptive, AdaptiveStats, BackendChoice, Service
 use civp::decomp::{AnalysisRow, OpClass, SchemeKind};
 use civp::runtime::EngineHandle;
 use civp::trace::{TraceGen, WorkloadSpec};
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
@@ -62,6 +63,9 @@ COMMANDS
                                     half=0.2,bf16=0.3,single=0.5 (overrides --workload)
                --backend <b>        native|pjrt (default native)
                --artifacts <dir>    artifacts directory (pjrt backend)
+               --cores <n>          work-stealing lane-executor cores
+                                    (0 = single-threaded, the default)
+               --par-threshold <n>  min batch size that fans out (default 256)
   cluster      run a synthetic trace through the sharded cluster
                --shards <n>         shard count (default 4)
                --policy <p>         round-robin|least-loaded|precision-affinity
@@ -70,7 +74,8 @@ COMMANDS
                --degrade <shard>    inject faults into one shard first
                --faults <n>         fault count for --degrade (default 8)
                --backend <b>        native|pjrt (default native)
-               (also accepts serve's --config/--requests/--workload/--mix/--artifacts)
+               (also accepts serve's --config/--requests/--workload/--mix/
+                --artifacts/--cores/--par-threshold)
   analyze      print the paper's block/utilization analysis table
   predicates   adaptive-precision orient2d demo
                --points <n>         number of predicates (default 2000)
@@ -107,23 +112,42 @@ fn load_config(args: &Args) -> Result<ServiceConfig> {
     if let Some(dir) = args.options.get("artifacts") {
         cfg.artifacts_dir = dir.clone();
     }
+    if let Some(n) = args.options.get("cores") {
+        cfg.cores = n.parse()?;
+    }
+    if let Some(n) = args.options.get("par-threshold") {
+        cfg.par_threshold = n.parse()?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
-fn serve(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
-    let backend = match args.get_str("backend", "native").as_str() {
+/// Resolve `--backend` (+ `--cores`) into a worker-backend choice. With
+/// `--cores N` (N > 0) the native backend fans large batches out across a
+/// shared work-stealing lane executor; results stay bit-for-bit identical
+/// to the single-threaded path.
+fn make_backend(args: &Args, cfg: &ServiceConfig) -> Result<BackendChoice> {
+    Ok(match args.get_str("backend", "native").as_str() {
+        "native" if cfg.cores > 0 => BackendChoice::NativeParallel(
+            cfg.scheme,
+            Arc::new(civp::decomp::Executor::with_threshold(cfg.cores, cfg.par_threshold)),
+        ),
         "native" => BackendChoice::Native(cfg.scheme),
         "pjrt" => BackendChoice::Pjrt(EngineHandle::load(cfg.artifacts_dir.clone())?),
         other => bail!("unknown backend {other:?}"),
-    };
+    })
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let backend = make_backend(args, &cfg)?;
     println!(
-        "serving {} requests of workload `{}` (scheme {:?}, fabric {:?})",
+        "serving {} requests of workload `{}` (scheme {:?}, fabric {:?}, cores {})",
         cfg.requests,
         cfg.workload.name(),
         cfg.scheme,
-        cfg.fabric
+        cfg.fabric,
+        cfg.cores
     );
     let svc = Service::start(&cfg, backend);
     let mut gen = TraceGen::new(cfg.seed, cfg.mix(), 0);
@@ -173,11 +197,7 @@ fn cluster(args: &Args) -> Result<()> {
         max_inflight: args.get_usize("inflight", 4096)? as u64,
         spares_per_block: args.get_usize("spares", 2)? as u32,
     };
-    let backend = match args.get_str("backend", "native").as_str() {
-        "native" => BackendChoice::Native(cfg.scheme),
-        "pjrt" => BackendChoice::Pjrt(EngineHandle::load(cfg.artifacts_dir.clone())?),
-        other => bail!("unknown backend {other:?}"),
-    };
+    let backend = make_backend(args, &cfg)?;
     println!(
         "cluster: {shards} shards, policy `{}`, workload `{}`, {} requests",
         policy.name(),

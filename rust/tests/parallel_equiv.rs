@@ -1,0 +1,219 @@
+//! Parallel-equivalence harness: the work-stealing [`Executor`] must be
+//! **bit-for-bit** indistinguishable from the single-threaded lane path —
+//! products, output order, merged [`ExecStats`], and (through
+//! [`FpuBatch`]) IEEE results and flag unions — for every `SchemeKind ×
+//! OpClass`, every ragged tail, worker counts 1–8 and batch sizes
+//! straddling the parallel threshold.
+//!
+//! These tests pin the executor's one hard promise: turning on `--cores`
+//! changes wall-clock time and *nothing else*.
+
+use civp::decomp::{
+    chunk_plan, DecompMul, ExecStats, Executor, OpClass, PlanCache, SchemeKind, LANES,
+};
+use civp::fpu::{FpFormat, FpuBatch, RoundMode, BF16, DOUBLE, HALF, QUAD, SINGLE};
+use civp::proput::{forall, Rng};
+use civp::wideint::{U128, U256};
+use std::sync::Arc;
+
+/// Batch sizes worth pinning: empty, sub-block, block ± 1, straddling the
+/// test threshold (64) and well past it with every tail residue.
+const SIZES: [usize; 10] = [0, 1, 7, 63, 64, 65, 256, 257, 777, 1024];
+
+fn run_seq(
+    plan: &civp::decomp::Plan,
+    a: &[U128],
+    b: &[U128],
+) -> (Vec<U256>, ExecStats) {
+    let mut stats = ExecStats::default();
+    let mut out = Vec::new();
+    plan.execute_batch(a, b, &mut stats, &mut out);
+    (out, stats)
+}
+
+fn run_par(
+    exec: &Executor,
+    plan: &civp::decomp::Plan,
+    a: &[U128],
+    b: &[U128],
+) -> (Vec<U256>, ExecStats) {
+    let mut stats = ExecStats::default();
+    let mut out = Vec::new();
+    exec.execute_batch(plan, a, b, &mut stats, &mut out);
+    (out, stats)
+}
+
+#[test]
+fn executor_matches_sequential_every_class_scheme_and_tail() {
+    // The core property: for every registry class × scheme organization ×
+    // batch size (ragged tails included), the parallel path produces the
+    // same products in the same order with the same merged stats.
+    let exec = Executor::with_threshold(3, 64);
+    let mut rng = Rng::new(0x720);
+    for prec in OpClass::ALL {
+        for kind in SchemeKind::ALL {
+            let plan = PlanCache::get(kind, prec);
+            for n in SIZES {
+                let a: Vec<U128> = (0..n).map(|_| rng.sig(prec.sig_bits())).collect();
+                let b: Vec<U128> = (0..n).map(|_| rng.sig(prec.sig_bits())).collect();
+                let (out_seq, seq) = run_seq(&plan, &a, &b);
+                let (out_par, par) = run_par(&exec, &plan, &a, &b);
+                assert_eq!(out_seq, out_par, "{kind:?} {prec:?} n={n}");
+                assert_eq!(seq, par, "{kind:?} {prec:?} n={n} stats diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn executor_matches_sequential_for_worker_counts_1_through_8() {
+    // The worker count is a pure throughput knob: 1 worker, 8 workers and
+    // an oversubscribed pool (more workers than chunks, more chunks than
+    // workers) all produce identical bits. Sizes straddle the threshold so
+    // both the sequential fallback and the fan-out path are exercised at
+    // every pool size.
+    let plan = PlanCache::get(SchemeKind::Civp, OpClass::Double);
+    let mut rng = Rng::new(0x721);
+    for workers in 1..=8 {
+        let exec = Executor::with_threshold(workers, 64);
+        assert_eq!(exec.workers(), workers);
+        for n in [63, 64, 65, 512, 1000] {
+            let a: Vec<U128> = (0..n).map(|_| rng.sig(53)).collect();
+            let b: Vec<U128> = (0..n).map(|_| rng.sig(53)).collect();
+            let (out_seq, seq) = run_seq(&plan, &a, &b);
+            let (out_par, par) = run_par(&exec, &plan, &a, &b);
+            assert_eq!(out_seq, out_par, "workers={workers} n={n}");
+            assert_eq!(seq, par, "workers={workers} n={n} stats diverged");
+        }
+        // The big batches really fanned out (512 and 1000 always split
+        // into >= 2 chunks at every pool size), and every chunk ran
+        // exactly once — across workers and helping submitters.
+        let c = exec.counters();
+        assert!(c.parallel_batches >= 2, "workers={workers}: {c:?}");
+        let full = 512 - 512 % LANES;
+        let (_, chunks) = chunk_plan(full, workers);
+        assert!(chunks >= 2, "chunk_plan must split 512 at workers={workers}");
+        let ran: u64 = c.workers.iter().map(|w| w.executed).sum::<u64>() + c.helper_executed;
+        assert!(ran > 0, "workers={workers}: no chunk ever executed");
+    }
+}
+
+#[test]
+fn executor_matches_sequential_randomized() {
+    // Randomized sweep: random class, scheme, size (biased around the
+    // threshold) and a shared executor — the configuration space between
+    // the pinned sizes above.
+    let exec = Executor::with_threshold(4, 64);
+    forall(0x722, 60, |rng| {
+        let prec = OpClass::from_index(rng.below(OpClass::COUNT as u64) as usize);
+        let kind = SchemeKind::ALL[rng.below(SchemeKind::ALL.len() as u64) as usize];
+        let plan = PlanCache::get(kind, prec);
+        let n = rng.range(1, 700) as usize;
+        let a: Vec<U128> = (0..n).map(|_| rng.sig(prec.sig_bits())).collect();
+        let b: Vec<U128> = (0..n).map(|_| rng.sig(prec.sig_bits())).collect();
+        let (out_seq, seq) = run_seq(&plan, &a, &b);
+        let (out_par, par) = run_par(&exec, &plan, &a, &b);
+        assert_eq!(out_seq, out_par, "{kind:?} {prec:?} n={n}");
+        assert_eq!(seq, par, "{kind:?} {prec:?} n={n} stats diverged");
+    });
+}
+
+#[test]
+fn executor_integer_widths_match_sequential() {
+    // The "combined integer" half rides the executor too: arbitrary
+    // operand widths through `PlanCache::get_width`.
+    let exec = Executor::with_threshold(2, 64);
+    forall(0x723, 40, |rng| {
+        let width = rng.range(2, 128) as u32;
+        let kind = SchemeKind::ALL[rng.below(SchemeKind::ALL.len() as u64) as usize];
+        let plan = PlanCache::get_width(kind, width);
+        let n = rng.range(64, 400) as usize;
+        let a: Vec<U128> = (0..n).map(|_| rng.sig(width)).collect();
+        let b: Vec<U128> = (0..n).map(|_| rng.sig(width)).collect();
+        let (out_seq, seq) = run_seq(&plan, &a, &b);
+        let (out_par, par) = run_par(&exec, &plan, &a, &b);
+        assert_eq!(out_seq, out_par, "{kind:?} w={width} n={n}");
+        assert_eq!(seq, par, "{kind:?} w={width} n={n} stats diverged");
+    });
+}
+
+/// Nasty packed bit patterns for any registry format (specials included),
+/// mirrored from `plan_equiv.rs` — specials exercise the sidecar peel
+/// *around* the parallel significand multiply.
+fn nasty_packed(rng: &mut Rng, fmt: &FpFormat) -> u128 {
+    let frac_mask = (1u128 << fmt.frac_bits) - 1;
+    let rand_wide = |rng: &mut Rng| ((rng.next_u64() as u128) << 64) | rng.next_u64() as u128;
+    match rng.below(7) {
+        0 => 0,
+        1 => ((fmt.exp_mask() as u128) << fmt.frac_bits)
+            | ((rng.below(2) as u128) << (fmt.total_bits() - 1)), // ±inf
+        2 => ((fmt.exp_mask() as u128) << fmt.frac_bits) | (1u128 << (fmt.frac_bits - 1)), // qNaN
+        3 => rand_wide(rng) & frac_mask, // subnormal
+        _ => {
+            let sign = (rng.below(2) as u128) << (fmt.total_bits() - 1);
+            let exp = rng.below(fmt.exp_mask() as u64) as u128;
+            sign | (exp << fmt.frac_bits) | (rand_wide(rng) & frac_mask)
+        }
+    }
+}
+
+#[test]
+fn fpu_batch_on_executor_matches_sequential_results_flags_and_stats() {
+    // End to end through the IEEE pipeline: an `FpuBatch` whose multiplier
+    // fans out across the executor ≡ the plain single-threaded `FpuBatch`
+    // — packed results, the batch flag union, and the multiplier's block
+    // accounting — over nasty inputs (specials, subnormals), every
+    // registry format and every rounding mode.
+    let exec = Arc::new(Executor::with_threshold(4, 16));
+    forall(0x724, 40, |rng| {
+        let mode = RoundMode::ALL[rng.below(5) as usize];
+        for fmt in [&BF16, &HALF, &SINGLE, &DOUBLE, &QUAD] {
+            let n = rng.range(200, 600) as usize;
+            let a: Vec<u128> = (0..n).map(|_| nasty_packed(rng, fmt)).collect();
+            let b: Vec<u128> = (0..n).map(|_| nasty_packed(rng, fmt)).collect();
+
+            let mut par = FpuBatch::new(DecompMul::with_executor(SchemeKind::Civp, exec.clone()));
+            let mut out_par = Vec::new();
+            let flags_par = par.mul_batch_bits(fmt, &a, &b, mode, &mut out_par);
+
+            let mut seq = FpuBatch::new(DecompMul::new(SchemeKind::Civp));
+            let mut out_seq = Vec::new();
+            let flags_seq = seq.mul_batch_bits(fmt, &a, &b, mode, &mut out_seq);
+
+            assert_eq!(out_par, out_seq, "{} {mode:?}", fmt.name);
+            assert_eq!(flags_par, flags_seq, "{} {mode:?} flag union", fmt.name);
+            assert_eq!(
+                par.multiplier().stats,
+                seq.multiplier().stats,
+                "{} {mode:?} stats",
+                fmt.name
+            );
+        }
+    });
+    // The big nasty batches really exercised the fan-out path.
+    assert!(exec.counters().parallel_batches > 0, "{:?}", exec.counters());
+}
+
+#[test]
+fn executor_is_shareable_and_reusable_across_plans() {
+    // One executor serves interleaved batches from different plans and
+    // widths without cross-talk — the deployment shape (`Arc` shared by
+    // every backend) in miniature, sequentially.
+    let exec = Arc::new(Executor::with_threshold(2, 64));
+    let mut rng = Rng::new(0x725);
+    for round in 0..3 {
+        for prec in OpClass::ALL {
+            let plan = PlanCache::get(SchemeKind::Civp, prec);
+            let n = 300 + 17 * round;
+            let a: Vec<U128> = (0..n).map(|_| rng.sig(prec.sig_bits())).collect();
+            let b: Vec<U128> = (0..n).map(|_| rng.sig(prec.sig_bits())).collect();
+            let (out_seq, seq) = run_seq(&plan, &a, &b);
+            let (out_par, par) = run_par(&exec, &plan, &a, &b);
+            assert_eq!(out_seq, out_par, "{prec:?} round={round}");
+            assert_eq!(seq, par, "{prec:?} round={round}");
+        }
+    }
+    let c = exec.counters();
+    assert_eq!(c.workers.len(), 2);
+    assert!(c.parallel_batches + c.sequential_batches >= 15);
+}

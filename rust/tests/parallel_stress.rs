@@ -1,0 +1,175 @@
+//! Concurrency stress harness for the work-stealing [`Executor`]: many
+//! submitting threads hammer ONE shared executor across every registry
+//! class and scheme organization, each checking its own batches
+//! bit-for-bit against the single-threaded oracle. This is the test the
+//! raw-pointer `BatchJob` protocol answers to — disjoint chunk writes,
+//! the AcqRel completion handoff, helper draining and steal races all
+//! run hot here.
+//!
+//! Iteration counts default to a CI-friendly size so tier-1 `cargo test`
+//! stays quick; the dedicated CI stress job sets `CIVP_STRESS_FULL=1`
+//! (release mode) to multiply the load.
+
+use civp::config::ServiceConfig;
+use civp::coordinator::{BackendChoice, Service, SubmitError};
+use civp::decomp::{DecompMul, ExecStats, Executor, OpClass, PlanCache, SchemeKind};
+use civp::fpu::{FpuBatch, RoundMode};
+use civp::proput::Rng;
+use civp::wideint::U128;
+use std::sync::Arc;
+
+/// Stress scale: (submitting threads, batches per thread).
+fn scale() -> (usize, usize) {
+    if std::env::var_os("CIVP_STRESS_FULL").is_some() {
+        (8, 150)
+    } else {
+        (4, 25)
+    }
+}
+
+#[test]
+fn many_submitters_one_executor_all_classes_and_schemes() {
+    // Every thread draws random (class, scheme, size) batches, runs them
+    // through the shared executor and through a private sequential plan,
+    // and asserts bit-equality of products and merged stats. Any lost
+    // chunk, double-executed chunk, torn write or misordered stats merge
+    // shows up as a mismatch on some thread.
+    let (threads, iters) = scale();
+    let exec = Arc::new(Executor::with_threshold(4, 64));
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let exec = exec.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0x730 + t as u64);
+                for i in 0..iters {
+                    let prec = OpClass::from_index(rng.below(OpClass::COUNT as u64) as usize);
+                    let kind =
+                        SchemeKind::ALL[rng.below(SchemeKind::ALL.len() as u64) as usize];
+                    let plan = PlanCache::get(kind, prec);
+                    let n = rng.range(64, 1500) as usize;
+                    let a: Vec<U128> = (0..n).map(|_| rng.sig(prec.sig_bits())).collect();
+                    let b: Vec<U128> = (0..n).map(|_| rng.sig(prec.sig_bits())).collect();
+                    let (mut seq, mut par) = (ExecStats::default(), ExecStats::default());
+                    let (mut out_seq, mut out_par) = (Vec::new(), Vec::new());
+                    plan.execute_batch(&a, &b, &mut seq, &mut out_seq);
+                    exec.execute_batch(&plan, &a, &b, &mut par, &mut out_par);
+                    assert_eq!(out_seq, out_par, "t={t} i={i} {kind:?} {prec:?} n={n}");
+                    assert_eq!(seq, par, "t={t} i={i} {kind:?} {prec:?} n={n} stats");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Accounting stayed coherent under contention: chunks executed is
+    // consistent with batches fanned out (every parallel batch has >= 2
+    // chunks), and the big batches did fan out.
+    let c = exec.counters();
+    assert!(c.parallel_batches > 0, "{c:?}");
+    let ran: u64 = c.workers.iter().map(|w| w.executed).sum::<u64>() + c.helper_executed;
+    assert!(ran >= 2 * c.parallel_batches, "{c:?}");
+}
+
+#[test]
+fn many_submitters_fpu_pipeline_with_specials() {
+    // Same hammer one layer up: concurrent `FpuBatch` pipelines (specials
+    // sidecar + parallel significand multiply + batched finish) against
+    // private sequential pipelines — results, flag unions and block
+    // accounting — so the executor races inside its real call site.
+    let (threads, iters) = scale();
+    let iters = iters / 2 + 1;
+    let exec = Arc::new(Executor::with_threshold(4, 16));
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let exec = exec.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0x731 + t as u64);
+                let mut par =
+                    FpuBatch::new(DecompMul::with_executor(SchemeKind::Civp, exec.clone()));
+                let mut seq = FpuBatch::new(DecompMul::new(SchemeKind::Civp));
+                for i in 0..iters {
+                    let prec = OpClass::from_index(rng.below(OpClass::COUNT as u64) as usize);
+                    let fmt = prec.format();
+                    let mode = RoundMode::ALL[rng.below(5) as usize];
+                    let n = rng.range(100, 800) as usize;
+                    let wide = |rng: &mut Rng| {
+                        (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128)
+                            & ((1u128 << (fmt.total_bits() - 1)) | ((1u128 << (fmt.total_bits() - 1)) - 1))
+                    };
+                    let a: Vec<u128> = (0..n).map(|_| wide(&mut rng)).collect();
+                    let b: Vec<u128> = (0..n).map(|_| wide(&mut rng)).collect();
+                    let (mut out_par, mut out_seq) = (Vec::new(), Vec::new());
+                    let fp = par.mul_batch_bits(fmt, &a, &b, mode, &mut out_par);
+                    let fs = seq.mul_batch_bits(fmt, &a, &b, mode, &mut out_seq);
+                    assert_eq!(out_par, out_seq, "t={t} i={i} {} {mode:?}", fmt.name);
+                    assert_eq!(fp, fs, "t={t} i={i} {} {mode:?} flags", fmt.name);
+                }
+                assert_eq!(
+                    par.multiplier().stats,
+                    seq.multiplier().stats,
+                    "t={t} accumulated stats"
+                );
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn service_on_shared_executor_under_concurrent_load() {
+    // The full deployment shape: a `Service` whose worker backends all
+    // share one executor, hammered by concurrent submitters over every
+    // registry class, then drained. Every accepted request must get its
+    // (exact, 1.0 × 1.0) reply and the counters must balance.
+    let (threads, iters) = scale();
+    let per_thread = (iters * 20) as u64;
+    let cfg = ServiceConfig {
+        workers: 2,
+        max_batch: 256,
+        linger_us: 200,
+        ..ServiceConfig::default()
+    };
+    let exec = Arc::new(Executor::with_threshold(2, 64));
+    let svc = Arc::new(Service::start(
+        &cfg,
+        BackendChoice::NativeParallel(SchemeKind::Civp, exec.clone()),
+    ));
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let mut pending = Vec::new();
+                for i in 0..per_thread {
+                    let class =
+                        OpClass::from_index(((t as u64 + i) % OpClass::COUNT as u64) as usize);
+                    let one = class.format().one();
+                    match svc.submit(i, class, one, one) {
+                        Ok(rx) => pending.push((one, rx)),
+                        Err(SubmitError::Closed) => unreachable!("nobody closes during load"),
+                        Err(e) => panic!("unexpected {e:?}"),
+                    }
+                    if pending.len() >= 512 {
+                        for (one, rx) in pending.drain(..) {
+                            assert_eq!(rx.recv().unwrap().bits, one);
+                        }
+                    }
+                }
+                for (one, rx) in pending {
+                    assert_eq!(rx.recv().unwrap().bits, one);
+                }
+                per_thread
+            })
+        })
+        .collect();
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    svc.drain();
+    let snap = svc.metrics();
+    assert_eq!(snap.counters["requests_total"], total);
+    assert_eq!(snap.counters["responses_total"], total);
+    assert_eq!(svc.op_counts().values().sum::<u64>(), total);
+    // The executor's telemetry made it into the service snapshot.
+    assert!(snap.gauges.contains_key("par_worker0_executed"), "{:?}", snap.gauges.keys());
+}
