@@ -16,7 +16,7 @@
 //! p50` per pair, so the sub-single classes gate regressions exactly like
 //! the original three.
 
-use civp::benchx::{bb, bench, scaled, section, JsonReport};
+use civp::benchx::{bb, bench, scaled, section, verdict_table, JsonReport};
 use civp::decomp::{DecompMul, ExecStats, OpClass, PlanCache, SchemeKind};
 use civp::fpu::{mul_bits_batch, FpuBatch, RoundMode};
 use civp::proput::Rng;
@@ -63,7 +63,7 @@ fn main() {
         });
         json.push(&format!("formats/{label}/lane-path"), lane);
         json.push(&format!("formats/{label}/per-op-path"), perop);
-        verdicts.push((label, perop.ns_per_op_p50 / lane.ns_per_op_p50));
+        verdicts.push((label, lane.p50_speedup_over(&perop)));
     }
 
     section("full IEEE pipeline x256 per registry class: fused vs per-op");
@@ -101,26 +101,14 @@ fn main() {
         });
         json.push(&format!("formats/fpu-{}/fused-x256", class.name()), fused_m);
         json.push(&format!("formats/fpu-{}/per-op-x256", class.name()), perop_m);
-        verdicts.push((
-            format!("fpu-{}", class.name()),
-            perop_m.ns_per_op_p50 / fused_m.ns_per_op_p50,
-        ));
+        verdicts.push((format!("fpu-{}", class.name()), fused_m.p50_speedup_over(&perop_m)));
     }
 
-    section("verdict: lane/fused speedup per class (p50)");
-    let mut all_faster = true;
-    for (label, speedup) in &verdicts {
-        let verdict = if *speedup >= 1.0 { "faster" } else { "SLOWER" };
-        println!("{label:<20} {speedup:>6.2}x {verdict}");
-        all_faster &= *speedup >= 1.0;
-    }
-    println!(
-        "\n{}",
-        if all_faster {
-            "PASS: the lane path beats the per-op path on every registry class"
-        } else {
-            "FAIL: at least one class did not benefit from lane fusion"
-        }
+    verdict_table(
+        "verdict: lane/fused speedup per class (p50)",
+        &verdicts,
+        "the lane path beats the per-op path on every registry class",
+        "at least one class did not benefit from lane fusion",
     );
 
     json.write("BENCH_formats.json").expect("write BENCH_formats.json");

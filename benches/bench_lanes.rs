@@ -1,4 +1,5 @@
-//! §Perf — lane-fused batch execution vs the per-op path.
+//! §Perf — lane-fused batch execution vs the per-op path, and the lane
+//! width × vector-ISA ablation matrix.
 //!
 //! The tentpole claim of the lane engine: for a fixed scheme, walking the
 //! compiled step table **once per block of operands** (tiles outer, lanes
@@ -15,13 +16,23 @@
 //!   `lanes/fpu-*/per-op-x256` (`mul_bits_batch`, the scalar pipeline per
 //!   element — the pre-lane `NativeBackend` shape).
 //!
+//! The **ablation matrix** then sweeps the width-parameterized engine:
+//! `lanes/simd-<class>/w{8,16,32}-{scalar,avx2,avx512,neon}` measures
+//! `Plan::execute_lanes_cfg` for every block width × every vector ISA the
+//! host offers (scalar rows always exist; SIMD rows only under
+//! `--features simd` on a capable host). Every configuration is
+//! cross-checked bit-identical to the per-op oracle before timing.
+//!
 //! Every measurement lands in `BENCH_lanes.json`; CI smoke-runs this
 //! target (`CIVP_BENCH_QUICK=1`) and `python/tools/check_bench.py`
-//! enforces the ratio invariant `lane p50 ≤ per-op p50` for every pair,
-//! so the lane path beating the per-op path gates every PR.
+//! enforces `lane p50 ≤ per-op p50` for every pair and `simd p50 ≤
+//! scalar p50` for every matrix row with a same-width scalar sibling, so
+//! both the lane path and the SIMD sweeps gate every PR.
 
-use civp::benchx::{bb, bench, scaled, section, JsonReport};
-use civp::decomp::{DecompMul, ExecStats, OpClass, PlanCache, SchemeKind};
+use civp::benchx::{bb, bench, scaled, section, verdict_table, JsonReport};
+use civp::decomp::{
+    DecompMul, ExecStats, LaneConfig, LaneWidth, OpClass, PlanCache, SchemeKind, SimdIsa,
+};
 use civp::fpu::{mul_bits_batch, FpuBatch, RoundMode};
 use civp::proput::Rng;
 use civp::wideint::{mul_u128, U128, U256};
@@ -73,7 +84,7 @@ fn main() {
         });
         json.push(&format!("lanes/{label}/lane-path"), lane);
         json.push(&format!("lanes/{label}/per-op-path"), perop);
-        verdicts.push((label.clone(), perop.ns_per_op_p50 / lane.ns_per_op_p50));
+        verdicts.push((label.clone(), lane.p50_speedup_over(&perop)));
     }
 
     section("full IEEE pipeline x256: FpuBatch fused vs per-op mul_bits_batch");
@@ -111,27 +122,83 @@ fn main() {
         });
         json.push(&format!("lanes/fpu-{}/fused-x256", prec.name()), fused_m);
         json.push(&format!("lanes/fpu-{}/per-op-x256", prec.name()), perop_m);
-        verdicts.push((
-            format!("fpu-{}", prec.name()),
-            perop_m.ns_per_op_p50 / fused_m.ns_per_op_p50,
-        ));
+        verdicts.push((format!("fpu-{}", prec.name()), fused_m.p50_speedup_over(&perop_m)));
     }
 
-    section("verdict: lane/fused speedup over the per-op path (p50)");
-    let mut all_faster = true;
-    for (label, speedup) in &verdicts {
-        let verdict = if *speedup >= 1.0 { "faster" } else { "SLOWER" };
-        println!("{label:<20} {speedup:>6.2}x {verdict}");
-        all_faster &= *speedup >= 1.0;
-    }
+    section("ablation matrix: block width x vector ISA (execute_lanes_cfg)");
     println!(
-        "\n{}",
-        if all_faster {
-            "PASS: the lane path beats the per-op path on every measured configuration"
-        } else {
-            "FAIL: at least one configuration did not benefit from lane fusion"
-        }
+        "host ISA: best available = {} (simd feature {})",
+        SimdIsa::detect().name(),
+        if cfg!(feature = "simd") { "on" } else { "off" }
     );
+    let mut simd_verdicts: Vec<(String, f64)> = Vec::new();
+    for class in OpClass::ALL {
+        let bits = class.sig_bits();
+        let plan = PlanCache::get(SchemeKind::Civp, class);
+        let mut rng = Rng::new(0x51D0 ^ bits as u64);
+        let a: Vec<U128> = (0..BATCH).map(|_| rng.sig(bits)).collect();
+        let b: Vec<U128> = (0..BATCH).map(|_| rng.sig(bits)).collect();
+        let iters = scaled(1_000).max(4);
+        for width in LaneWidth::ALL {
+            let mut scalar_p50 = None;
+            for isa in SimdIsa::ALL {
+                if !isa.available() {
+                    continue;
+                }
+                let cfg = LaneConfig { width, isa };
+                // Cross-check before timing: every width × ISA is
+                // bit-identical to the per-op oracle.
+                let mut st = ExecStats::default();
+                let mut products: Vec<U256> = Vec::with_capacity(BATCH);
+                plan.execute_lanes_cfg(cfg, &a, &b, &mut st, &mut products);
+                for i in 0..BATCH {
+                    assert_eq!(
+                        products[i],
+                        mul_u128(a[i], b[i]),
+                        "{} {} diverged at {i}",
+                        class.name(),
+                        cfg.kernel_name()
+                    );
+                }
+                let mut stats = ExecStats::default();
+                let mut out: Vec<U256> = Vec::with_capacity(BATCH);
+                let label = format!("{:<8} {}", class.name(), cfg.kernel_name());
+                let m = bench(&label, 20, 30, iters, || {
+                    plan.execute_lanes_cfg(cfg, &a, &b, &mut stats, &mut out);
+                    bb(out.len());
+                });
+                json.push(
+                    &format!("lanes/simd-{}/{}-{}", class.name(), width.name(), isa.name()),
+                    m,
+                );
+                match isa {
+                    SimdIsa::Scalar => scalar_p50 = Some(m),
+                    _ => {
+                        let scalar = scalar_p50.expect("scalar ISA measured first");
+                        simd_verdicts.push((
+                            format!("{}/{}", class.name(), cfg.kernel_name()),
+                            m.p50_speedup_over(&scalar),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    verdict_table(
+        "verdict: lane/fused speedup over the per-op path (p50)",
+        &verdicts,
+        "the lane path beats the per-op path on every measured configuration",
+        "at least one configuration did not benefit from lane fusion",
+    );
+    if !simd_verdicts.is_empty() {
+        verdict_table(
+            "verdict: SIMD sweep speedup over same-width scalar (p50)",
+            &simd_verdicts,
+            "every dispatched SIMD kernel beats its same-width scalar sweep",
+            "at least one SIMD kernel ran slower than its scalar sibling",
+        );
+    }
 
     json.write("BENCH_lanes.json").expect("write BENCH_lanes.json");
 }

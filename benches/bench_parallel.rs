@@ -38,20 +38,14 @@ const THRESHOLD: usize = 256;
 fn model_row(n: usize, cores: usize, tiles_per_op: u64) -> Measurement {
     let full = n - n % LANES;
     let tail = n - full;
-    let (chunk, n_chunks) = chunk_plan(full, cores);
+    let (chunk, n_chunks) = chunk_plan(full, cores, LANES);
     let element_slots = if n < THRESHOLD || n_chunks < 2 {
         n
     } else {
         n_chunks.div_ceil(cores) * chunk + tail
     };
     let cycles_total = element_slots as u64 * tiles_per_op;
-    let ns_per_op = cycles_total as f64 / n as f64;
-    Measurement {
-        ns_per_op_p50: ns_per_op,
-        ns_per_op_mean: ns_per_op,
-        ns_per_op_min: ns_per_op,
-        total_ops: n as u64,
-    }
+    Measurement::uniform(cycles_total as f64 / n as f64, n as u64)
 }
 
 fn main() {

@@ -108,6 +108,66 @@ def test_baseline_regression_still_fires_on_model_rows(tmp_path):
     assert "regressed" in out
 
 
+def simd_rows(matrix):
+    """`{(class, width): {isa: p50}}` -> ablation-matrix rows."""
+    rows = []
+    for (cls, width), by_isa in matrix.items():
+        for isa, p50 in by_isa.items():
+            rows.append(row(f"lanes/simd-{cls}/{width}-{isa}", p50))
+    return rows
+
+
+GOOD_MATRIX = {
+    ("double", "w8"): {"scalar": 100.0, "avx2": 60.0},
+    ("double", "w16"): {"scalar": 95.0, "avx2": 55.0, "avx512": 40.0},
+    ("quad", "w8"): {"scalar": 400.0},  # scalar-only host: no pair to gate
+}
+
+
+def test_simd_gate_passes_when_simd_beats_scalar(tmp_path):
+    art = write_artifact(tmp_path / "BENCH_lanes.json", simd_rows(GOOD_MATRIX))
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 0, out
+    assert "simd sweeps beat same-width scalar on all 3 measured rows" in out
+
+
+def test_simd_gate_fails_when_simd_slower_than_scalar(tmp_path):
+    bad = {("double", "w16"): {"scalar": 95.0, "avx2": 120.0}}  # inversion
+    art = write_artifact(tmp_path / "BENCH_lanes.json", simd_rows(bad))
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "simd sweep slower than scalar for double w16-avx2" in out
+
+
+def test_simd_gate_fails_on_missing_scalar_sibling(tmp_path):
+    bad = {("double", "w16"): {"avx2": 55.0}}  # no scalar row for the width
+    art = write_artifact(tmp_path / "BENCH_lanes.json", simd_rows(bad))
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "no scalar sibling" in out
+
+
+def test_simd_gate_tolerates_small_noise(tmp_path):
+    # Within LANES_NOISE_SLACK (5%) the gate must not flake.
+    noisy = {("double", "w8"): {"scalar": 100.0, "avx2": 104.0}}
+    art = write_artifact(tmp_path / "BENCH_lanes.json", simd_rows(noisy))
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 0, out
+
+
+def test_update_never_baselines_simd_rows(tmp_path):
+    # The matrix rows depend on which ISA the runner offers, so --update
+    # must not pin them (a baselined avx512 row would fail strict mode on
+    # a runner without avx512).
+    rows = simd_rows(GOOD_MATRIX) + [row("lanes/civp-double/lane-path", 80.0)]
+    art = write_artifact(tmp_path / "BENCH_lanes.json", rows)
+    code, out = run_gate(tmp_path, art.name, "--update", "--baseline", "BL.json")
+    assert code == 0, out
+    names = [r["name"] for r in json.loads((tmp_path / "BL.json").read_text())]
+    assert not any(n.startswith("lanes/simd-") for n in names), names
+    assert "lanes/civp-double/lane-path" in names
+
+
 def test_strict_mode_requires_parallel_artifact(tmp_path):
     # CI runs with no file args: every required artifact must exist, and
     # BENCH_parallel.json is now one of them.

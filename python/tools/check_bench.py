@@ -32,6 +32,12 @@ artifacts (CI does this with CIVP_BENCH_QUICK=1). Three layers of checks:
    * the same lane-vs-per-op invariant holds per registry op class in
      `BENCH_formats.json` (`formats/...` rows) — binary16 and bfloat16
      gate regressions exactly like single/double/quad;
+   * the width x ISA ablation matrix (`lanes/simd-<class>/w<W>-<isa>`
+     rows): every SIMD-dispatched sweep must have a same-(class, width)
+     scalar sibling in the run and must not be slower than it — a
+     vectorized kernel that loses to the scalar sweep it replaces fails
+     the gate. These rows depend on which ISA the runner offers, so they
+     are never baselined;
    * cluster fabric-model aggregate throughput (computed analytically —
      deterministic, machine-independent) increases monotonically with
      the shard count, strictly from 1 to 4 shards (the `bench_cluster`
@@ -79,7 +85,7 @@ PARALLEL_MIN_SPEEDUP = 2.0
 # pjrt row does not exist on runners without artifacts. --update never
 # writes these into the baseline.
 UNBASELINEABLE_RE = re.compile(
-    r"^(e2e/|cluster/mixed/wall-|cluster/mixed/policy-|parallel/wall-)"
+    r"^(e2e/|cluster/mixed/wall-|cluster/mixed/policy-|parallel/wall-|lanes/simd-)"
 )
 # Headroom --update applies on top of the measured p50 so a baseline
 # refreshed on a fast machine doesn't fail the 25% gate on a slower one.
@@ -211,6 +217,40 @@ def check_lanes_invariants(current, prefix="lanes"):
         print(
             f"invariant ok: {prefix} lane path beats per-op path on all {pairs} measured pairs"
         )
+
+
+SIMD_ROW_RE = re.compile(r"^lanes/simd-(.+)/(w\d+)-(\w+)$")
+
+
+def check_simd_invariants(current):
+    """SIMD sweeps must never lose to the same-width scalar sweep.
+
+    The ablation matrix rows are `lanes/simd-<class>/w<W>-<isa>`. The
+    scalar row per (class, width) always exists (the scalar ISA is
+    unconditionally available); any other ISA row was runtime-dispatched
+    on this runner, so both sides ran in the same process on the same
+    operands and runner speed cancels out. Gate: simd p50 <= scalar p50
+    (modulo LANES_NOISE_SLACK, same rationale as the lane-vs-per-op
+    gate).
+    """
+    before = len(failures)
+    pairs = 0
+    for name, p50 in sorted(current.items()):
+        m = SIMD_ROW_RE.match(name)
+        if not m or m.group(3) == "scalar":
+            continue
+        sibling = f"lanes/simd-{m.group(1)}/{m.group(2)}-scalar"
+        if sibling not in current:
+            fail(f"`{name}` has no scalar sibling `{sibling}` — bench target incomplete?")
+            continue
+        pairs += 1
+        if p50 > current[sibling] * LANES_NOISE_SLACK:
+            fail(
+                f"simd sweep slower than scalar for {m.group(1)} {m.group(2)}-{m.group(3)}: "
+                f"{p50:.1f} vs {current[sibling]:.1f} ns/op"
+            )
+    if pairs and len(failures) == before:
+        print(f"invariant ok: simd sweeps beat same-width scalar on all {pairs} measured rows")
 
 
 def check_cluster_scaling(current):
@@ -373,6 +413,7 @@ def main():
     check_plan_invariants(current)
     check_lanes_invariants(current)
     check_lanes_invariants(current, prefix="formats")
+    check_simd_invariants(current)
     check_cluster_scaling(current)
     check_parallel_scaling(current)
 

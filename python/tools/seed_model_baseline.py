@@ -1,0 +1,277 @@
+#!/usr/bin/env python3
+"""Recompute the deterministic model-scaling baseline rows offline.
+
+Two families of `BENCH_baseline.json` rows are *models*, not wall-clock
+measurements — they depend only on committed constants, so their exact
+values can be reproduced without a Rust toolchain:
+
+* `cluster/mixed/model-scaling-{n}shard` — `benches/bench_cluster.rs`:
+  the per-class op counts of the seeded mixed trace (`TraceGen::new(0xC1,
+  Mixed, 0)`, 40 000 requests in full mode) split evenly across `n`
+  one-column CIVP fabrics, each run through the closed-form
+  `simulate_counts` schedule, aggregated with makespan semantics at
+  1 GHz.
+* `parallel/model-scaling-b{N}-{c}core` — `benches/bench_parallel.rs`:
+  the chunk-plan makespan model over the executor's actual block-aligned
+  split (`chunk_plan(full, cores, LANES)`), 9 tiles per double multiply.
+
+This script reimplements both models bit-for-bit (SplitMix64 stream,
+draw-for-draw trace generation, the same integer schedule arithmetic) and
+rewrites those rows in the baseline with the same `UPDATE_SLACK` headroom
+`check_bench.py --update` applies. It also simulates the CI quick-mode
+run (`scaled(40_000)` = 800 requests) and asserts the quick values pass
+the gate tolerance against the refreshed baseline, so a refresh can never
+land a row that CI immediately fails.
+
+Usage:
+    python3 python/tools/seed_model_baseline.py           # report only
+    python3 python/tools/seed_model_baseline.py --write   # update baseline
+
+Keep the constants below in sync with their Rust sources (each block
+cites its origin); `test_check_bench.py` does not cover this script, but
+a drifted constant shows up as a baseline-gate failure in the first CI
+run after the Rust side changes.
+"""
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+MASK64 = (1 << 64) - 1
+
+# check_bench.py --update conventions.
+UPDATE_SLACK = 2.0
+GATE_TOLERANCE = 0.25
+
+# trace::TraceGen seed and request counts (benches/bench_cluster.rs).
+TRACE_SEED = 0xC1
+FULL_REQUESTS = 40_000
+QUICK_REQUESTS = FULL_REQUESTS // 50  # benchx::scaled under CIVP_BENCH_QUICK
+SHARD_COUNTS = (1, 2, 4, 8)
+
+# decomp::OpClass::ALL order (drives WorkloadMix::pick's cumulative walk).
+CLASSES = ("bf16", "half", "single", "double", "quad")
+
+# trace::WorkloadSpec::Mixed.mix().
+MIXED_WEIGHTS = {"bf16": 0.15, "half": 0.10, "single": 0.35, "double": 0.25, "quad": 0.15}
+
+# fpu::FpFormat frac_bits per class — fixes the number of RNG draws one
+# operand consumes in TraceGen::operand (1 exponent + 1-or-2 fraction +
+# 1 sign).
+FRAC_BITS = {"bf16": 7, "half": 10, "single": 23, "double": 52, "quad": 112}
+
+# CIVP tile multiset per class (decomp::Scheme::tiles with the civp chunk
+# table: bf16=[9]x[9], half=[11]x[9,2], single=[24]x[24],
+# double=[24,24,9]^2, quad=[24,24,9,24,24,9]^2; smallest fitting block).
+TILE_NEED = {
+    "bf16": {"9x9": 1},
+    "half": {"24x9": 2},
+    "single": {"24x24": 1},
+    "double": {"24x24": 4, "24x9": 4, "9x9": 1},
+    "quad": {"24x24": 16, "24x9": 16, "9x9": 4},
+}
+
+# fabric::FabricConfig::civp_scaled(1) instance counts.
+FABRIC = {"24x24": 16, "24x9": 16, "9x9": 4}
+
+# fabric::CostModel::default latency constants.
+BLOCK_LATENCY = 2
+ADDER_LEVEL_LATENCY = 1
+
+# decomp::parallel chunk-plan constants (LANES = default W8 lane width).
+LANES = 8
+MIN_CHUNK_BLOCKS = 4
+CHUNKS_PER_WORKER = 4
+PAR_THRESHOLD = 256  # benches/bench_parallel.rs THRESHOLD
+PARALLEL_SIZES = (128, 1024, 8192)
+PARALLEL_CORES = (1, 2, 4, 8)
+DOUBLE_TILES = 9  # CIVP double = [24,24,9] x [24,24,9]
+
+
+class SplitMix64:
+    """proput::Rng — SplitMix64, same stream for the same seed."""
+
+    GAMMA = 0x9E3779B97F4A7C15
+
+    def __init__(self, seed):
+        self.state = (seed + self.GAMMA) & MASK64
+
+    def next_u64(self):
+        self.state = (self.state + self.GAMMA) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def below(self, n):
+        return (self.next_u64() * n) >> 64
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+def pick_class(u):
+    """WorkloadMix::pick over the Mixed weights in registry order."""
+    total = sum(MIXED_WEIGHTS.values())
+    acc = 0.0
+    for cls in CLASSES:
+        acc += MIXED_WEIGHTS[cls] / total
+        if u < acc:
+            return cls
+    return CLASSES[-1]
+
+
+def trace_counts(n_requests):
+    """Per-class counts of TraceGen::new(0xC1, Mixed, 0).take(n).
+
+    Only the class sequence matters for the model, but the RNG must
+    advance exactly as TraceGen::operand does: per operand one `below`
+    for the biased exponent, one `next_u64` per 64 fraction bits (quad's
+    112-bit fraction takes two), one `below(2)` for the sign.
+    """
+    rng = SplitMix64(TRACE_SEED)
+    counts = dict.fromkeys(CLASSES, 0)
+    for _ in range(n_requests):
+        cls = pick_class(rng.f64())
+        counts[cls] += 1
+        draws_per_operand = 2 + (2 if FRAC_BITS[cls] > 64 else 1)
+        for _ in range(2 * draws_per_operand):
+            rng.next_u64()
+    return counts
+
+
+def class_latency(cls):
+    """schedule_op latency on civp_scaled(1): waves-1 + block pipeline +
+    ceil(log2 tiles) adder levels (waves = 1 for every class on one
+    column)."""
+    need = TILE_NEED[cls]
+    waves = max(-(-n // FABRIC[k]) for k, n in need.items())
+    tiles = sum(need.values())
+    depth = 0 if tiles <= 1 else (tiles - 1).bit_length()
+    return waves - 1 + BLOCK_LATENCY + ADDER_LEVEL_LATENCY * depth
+
+
+def shard_cycles(share):
+    """simulate_counts cycles for one shard's per-class counts."""
+    cycles = 0
+    last_latency = 0
+    for cls in CLASSES:
+        count = share.get(cls, 0)
+        if count == 0:
+            continue
+        issue = max(1, max(-(-(count * n) // FABRIC[k]) for k, n in TILE_NEED[cls].items()))
+        cycles += issue
+        last_latency = max(last_latency, class_latency(cls))
+    return cycles + last_latency
+
+
+def cluster_model_rows(n_requests):
+    """bench_cluster model_scaling: even split, makespan aggregate, 1 GHz."""
+    counts = trace_counts(n_requests)
+    rows = {}
+    for shards in SHARD_COUNTS:
+        wall = 0
+        total = 0
+        for shard in range(shards):
+            share = {
+                cls: c // shards + (1 if shard < c % shards else 0) for cls, c in counts.items()
+            }
+            if not any(share.values()):
+                continue
+            wall = max(wall, shard_cycles(share))
+            total += sum(share.values())
+        rows[f"cluster/mixed/model-scaling-{shards}shard"] = wall / max(total, 1)
+    return counts, rows
+
+
+def chunk_plan(full, workers, block):
+    """decomp::parallel::chunk_plan — block-aligned split."""
+    min_chunk = MIN_CHUNK_BLOCKS * block
+    if full == 0:
+        return (min_chunk, 0)
+    target = max(full // (max(workers, 1) * CHUNKS_PER_WORKER), min_chunk)
+    chunk = -(-target // block) * block
+    return (chunk, -(-full // chunk))
+
+
+def parallel_model_rows():
+    """bench_parallel model_row over every (batch, cores) point."""
+    rows = {}
+    for n in PARALLEL_SIZES:
+        full = n - n % LANES
+        tail = n - full
+        for cores in PARALLEL_CORES:
+            chunk, n_chunks = chunk_plan(full, cores, LANES)
+            if n < PAR_THRESHOLD or n_chunks < 2:
+                slots = n
+            else:
+                slots = -(-n_chunks // cores) * chunk + tail
+            rows[f"parallel/model-scaling-b{n}-{cores}core"] = slots * DOUBLE_TILES / n
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument(
+        "--write", action="store_true", help="rewrite the model rows in the baseline file"
+    )
+    args = ap.parse_args()
+
+    full_counts, full_rows = cluster_model_rows(FULL_REQUESTS)
+    _, quick_rows = cluster_model_rows(QUICK_REQUESTS)
+    par_rows = parallel_model_rows()
+
+    print(f"mixed trace class counts @ {FULL_REQUESTS} requests: {full_counts}")
+    print(f"{'row':<44} {'full ns/op':>12} {'quick ns/op':>12} {'baseline':>10}")
+    model = {}
+    ok = True
+    for name in sorted(full_rows):
+        base = round(full_rows[name] * UPDATE_SLACK, 3)
+        model[name] = base
+        quick = quick_rows[name]
+        gate_ok = quick <= base * (1.0 + GATE_TOLERANCE)
+        ok &= gate_ok
+        print(
+            f"{name:<44} {full_rows[name]:>12.6f} {quick:>12.6f} {base:>10.3f}"
+            f"{'' if gate_ok else '  << quick run would FAIL the gate'}"
+        )
+    for name in sorted(par_rows):
+        base = round(par_rows[name] * UPDATE_SLACK, 3)
+        model[name] = base
+        # The parallel model is request-count independent (same split in
+        # quick mode), so the gate check is the model itself.
+        print(f"{name:<44} {par_rows[name]:>12.6f} {par_rows[name]:>12.6f} {base:>10.3f}")
+    if not ok:
+        print("refusing: quick-mode values exceed the gate tolerance", file=sys.stderr)
+        return 1
+
+    # The cluster curve must satisfy check_cluster_scaling on both modes.
+    for label, rows in (("full", full_rows), ("quick", quick_rows)):
+        ops = [1e9 / rows[f"cluster/mixed/model-scaling-{n}shard"] for n in SHARD_COUNTS]
+        assert all(b >= a for a, b in zip(ops, ops[1:])), f"{label} curve not monotonic"
+        assert ops[2] > ops[0], f"{label} curve not strict 1->4"
+
+    if not args.write:
+        print("\ndry run — pass --write to update the baseline")
+        return 0
+
+    path = Path(args.baseline)
+    rows = json.loads(path.read_text())
+    replaced = 0
+    for row in rows:
+        if row["name"] in model:
+            row["ns_per_op_p50"] = model.pop(row["name"])
+            replaced += 1
+    for name, p50 in sorted(model.items()):
+        rows.append({"name": name, "ns_per_op_p50": p50})
+    rows.sort(key=lambda r: r["name"])
+    path.write_text(json.dumps(rows, indent=2) + "\n")
+    print(f"\nwrote {path}: {replaced} rows refreshed, {len(model)} added")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,6 +41,25 @@ impl Measurement {
         }
         1e9 / self.ns_per_op_p50
     }
+
+    /// A degenerate measurement where every percentile equals
+    /// `ns_per_op` — the shape for one-shot wall timings and
+    /// closed-form model rows, which have no sample distribution.
+    pub fn uniform(ns_per_op: f64, total_ops: u64) -> Measurement {
+        Measurement {
+            ns_per_op_p50: ns_per_op,
+            ns_per_op_mean: ns_per_op,
+            ns_per_op_min: ns_per_op,
+            total_ops,
+        }
+    }
+
+    /// Median speedup of `self` over `slower` (`slower p50 / self p50`):
+    /// ≥ 1.0 means `self` is at least as fast. The ratio the bench
+    /// verdict tables and the JSON gate invariants are computed from.
+    pub fn p50_speedup_over(&self, slower: &Measurement) -> f64 {
+        slower.ns_per_op_p50 / self.ns_per_op_p50
+    }
 }
 
 /// Time `op` (which should perform ONE operation per call).
@@ -90,13 +109,24 @@ pub fn bb<T>(v: T) -> T {
 /// [`Measurement`], so one-shot end-to-end timings land in the JSON
 /// artifacts alongside the sampled benches.
 pub fn wall_measurement(ops: u64, wall_s: f64) -> Measurement {
-    let ns_per_op = wall_s * 1e9 / ops.max(1) as f64;
-    Measurement {
-        ns_per_op_p50: ns_per_op,
-        ns_per_op_mean: ns_per_op,
-        ns_per_op_min: ns_per_op,
-        total_ops: ops,
+    Measurement::uniform(wall_s * 1e9 / ops.max(1) as f64, ops)
+}
+
+/// Render the bench-closing speedup table shared by the lane/format
+/// benches: one `label  N.NNx faster|SLOWER` line per entry (ratios from
+/// [`Measurement::p50_speedup_over`]), then `PASS: {pass}` when every
+/// entry is ≥ 1.0 or `FAIL: {fail}` otherwise. Returns that verdict so
+/// callers can also assert on it.
+pub fn verdict_table(title: &str, rows: &[(String, f64)], pass: &str, fail: &str) -> bool {
+    section(title);
+    let mut all_faster = true;
+    for (label, speedup) in rows {
+        let verdict = if *speedup >= 1.0 { "faster" } else { "SLOWER" };
+        println!("{label:<20} {speedup:>6.2}x {verdict}");
+        all_faster &= *speedup >= 1.0;
     }
+    println!("\n{}", if all_faster { format!("PASS: {pass}") } else { format!("FAIL: {fail}") });
+    all_faster
 }
 
 /// True when `CIVP_BENCH_QUICK` is set (to anything but `0`): benches
@@ -195,6 +225,25 @@ pub fn row(cols: &[&str], widths: &[usize]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn uniform_measurement_and_speedup() {
+        let slow = Measurement::uniform(4.0, 10);
+        let fast = Measurement::uniform(2.0, 10);
+        assert_eq!(slow.ns_per_op_p50, slow.ns_per_op_min);
+        assert_eq!(slow.ns_per_op_p50, slow.ns_per_op_mean);
+        assert_eq!(fast.p50_speedup_over(&slow), 2.0);
+        assert_eq!(slow.p50_speedup_over(&fast), 0.5);
+        assert_eq!(wall_measurement(10, 40e-9).ns_per_op_p50, 4.0);
+    }
+
+    #[test]
+    fn verdict_table_verdict() {
+        let ok = vec![("a".to_string(), 1.5), ("b".to_string(), 1.0)];
+        assert!(verdict_table("t", &ok, "p", "f"));
+        let bad = vec![("a".to_string(), 1.5), ("b".to_string(), 0.9)];
+        assert!(!verdict_table("t", &bad, "p", "f"));
+    }
 
     #[test]
     fn json_report_shape() {

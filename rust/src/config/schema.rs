@@ -24,6 +24,11 @@ pub struct ServiceConfig {
     /// (`--par-threshold`); smaller batches stay sequential where the
     /// split/steal overhead would dominate.
     pub par_threshold: usize,
+    /// SoA lane-block width (`--lane-width`): operands per
+    /// structure-of-arrays block on the batch path. One of 8, 16 or 32;
+    /// every width is bit-identical, wider blocks feed the wider SIMD
+    /// sweeps when the `simd` feature and the host ISA allow it.
+    pub lane_width: usize,
     /// Max requests per batch (dispatch earlier on timeout).
     pub max_batch: usize,
     /// Batch linger: how long to wait filling a batch, in microseconds.
@@ -57,6 +62,7 @@ impl Default for ServiceConfig {
             workers: 2,
             cores: 0,
             par_threshold: crate::decomp::DEFAULT_PAR_THRESHOLD,
+            lane_width: crate::decomp::LANES,
             max_batch: 256,
             linger_us: 200,
             queue_depth: 4096,
@@ -113,6 +119,7 @@ impl ServiceConfig {
                 "service.workers" => self.workers = req_usize(key, value)?,
                 "service.cores" => self.cores = req_usize(key, value)?,
                 "service.par_threshold" => self.par_threshold = req_usize(key, value)?,
+                "service.lane_width" => self.lane_width = req_usize(key, value)?,
                 "service.use_pjrt" => {
                     self.use_pjrt =
                         value.as_bool().with_context(|| format!("{key} must be bool"))?
@@ -176,6 +183,12 @@ impl ServiceConfig {
         }
         if self.par_threshold == 0 {
             bail!("service.par_threshold must be >= 1");
+        }
+        if crate::decomp::LaneWidth::from_width(self.lane_width).is_none() {
+            bail!(
+                "service.lane_width must be one of 8, 16 or 32 (got {})",
+                self.lane_width
+            );
         }
         if self.queue_depth < self.max_batch {
             bail!(

@@ -1,7 +1,7 @@
 //! Execution backends: native softfloat (+CIVP decomposition accounting)
 //! and the AOT PJRT engine.
 
-use crate::decomp::{DecompMul, ExecStats, Executor, OpClass, SchemeKind};
+use crate::decomp::{DecompMul, ExecStats, Executor, LaneConfig, OpClass, SchemeKind};
 use crate::error::{ensure, Result};
 use crate::fpu::{FpuBatch, RoundMode};
 use crate::runtime::EngineHandle;
@@ -30,13 +30,24 @@ pub trait Backend: Send {
     fn exec_stats(&self) -> Option<&ExecStats> {
         None
     }
+    /// The lane configuration (SoA width × dispatched vector ISA) this
+    /// backend's batches run under, when it has one (native backends).
+    fn lane_config(&self) -> Option<LaneConfig> {
+        None
+    }
 }
 
 /// How a service should construct its workers' backends.
 #[derive(Clone)]
 pub enum BackendChoice {
-    /// Native softfloat with the given partition organization.
+    /// Native softfloat with the given partition organization (default
+    /// scalar `LANES`-wide lane blocks).
     Native(SchemeKind),
+    /// Native softfloat with an explicit lane configuration: SoA block
+    /// width (`service.lane_width` / `--lane-width`) × the dispatched
+    /// vector ISA. Bit-identical to [`BackendChoice::Native`] for every
+    /// width and ISA.
+    NativeLane(SchemeKind, LaneConfig),
     /// Native softfloat whose large batches fan out across the shared
     /// work-stealing lane executor (`--cores`). Every worker's backend
     /// holds the same `Arc` — the executor's worker pool is a machine
@@ -51,6 +62,9 @@ impl BackendChoice {
     pub fn build(&self) -> Box<dyn Backend> {
         match self {
             BackendChoice::Native(kind) => Box::new(NativeBackend::new(*kind)),
+            BackendChoice::NativeLane(kind, lane) => {
+                Box::new(NativeBackend::with_lane(*kind, *lane))
+            }
             BackendChoice::NativeParallel(kind, exec) => {
                 Box::new(NativeBackend::with_executor(*kind, exec.clone()))
             }
@@ -63,6 +77,17 @@ impl BackendChoice {
         match self {
             BackendChoice::NativeParallel(_, exec) => Some(exec),
             _ => None,
+        }
+    }
+
+    /// The lane configuration the built backends will batch under
+    /// (native choices only — PJRT batches bypass the lane engine).
+    pub fn lane_config(&self) -> Option<LaneConfig> {
+        match self {
+            BackendChoice::Native(_) => Some(LaneConfig::SCALAR),
+            BackendChoice::NativeLane(_, lane) => Some(*lane),
+            BackendChoice::NativeParallel(_, exec) => Some(exec.lane_config()),
+            BackendChoice::Pjrt(_) => None,
         }
     }
 }
@@ -93,6 +118,13 @@ impl NativeBackend {
     /// results, flags and stats (pinned by `rust/tests/parallel_equiv.rs`).
     pub fn with_executor(kind: SchemeKind, exec: Arc<Executor>) -> NativeBackend {
         NativeBackend { fpu: FpuBatch::new(DecompMul::with_executor(kind, exec)) }
+    }
+
+    /// New backend with an explicit lane configuration for its inline
+    /// batches. Every width × ISA combination is bit-identical to
+    /// [`NativeBackend::new`] (pinned by the lane property tests).
+    pub fn with_lane(kind: SchemeKind, lane: LaneConfig) -> NativeBackend {
+        NativeBackend { fpu: FpuBatch::new(DecompMul::with_lane(kind, lane)) }
     }
 
     /// Multiply one batch, appending packed products to `out` (cleared
@@ -130,6 +162,10 @@ impl Backend for NativeBackend {
 
     fn exec_stats(&self) -> Option<&ExecStats> {
         Some(&self.fpu.multiplier().stats)
+    }
+
+    fn lane_config(&self) -> Option<LaneConfig> {
+        Some(self.fpu.multiplier().lane_config())
     }
 }
 

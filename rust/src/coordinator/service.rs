@@ -11,7 +11,7 @@ use crate::fabric::{simulate_counts, CostModel, FabricConfig, FabricKind, Fabric
 use crate::metrics::Registry;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -118,6 +118,9 @@ pub struct Service {
     /// Shared lane executor when the backend choice carries one —
     /// kept so telemetry snapshots can publish its counters.
     executor: Option<Arc<crate::decomp::Executor>>,
+    /// Lane configuration the workers batch under (native backends) —
+    /// published as the `lane_width` / `lane_kernel_*` gauges.
+    lane: Option<crate::decomp::LaneConfig>,
     fabric: FabricConfig,
     cost: CostModel,
     backend_name: &'static str,
@@ -140,10 +143,12 @@ impl Service {
         });
         let backend_name = match &backend {
             BackendChoice::Native(_) => "native",
+            BackendChoice::NativeLane(..) => "native",
             BackendChoice::NativeParallel(..) => "native",
             BackendChoice::Pjrt(_) => "pjrt",
         };
         let executor = backend.executor().cloned();
+        let lane = backend.lane_config();
         // One worker set per op-class queue; each worker owns a backend
         // instance (op classes tallied lock-free into `op_counts`).
         let mut workers = Vec::new();
@@ -167,6 +172,7 @@ impl Service {
             shared,
             workers: Mutex::new(workers),
             executor,
+            lane,
             fabric,
             cost: CostModel::default(),
             backend_name,
@@ -231,9 +237,20 @@ impl Service {
     /// Telemetry snapshot. When the backend runs on the shared lane
     /// executor, its per-worker steal/execute counters are published
     /// into the registry (as gauges) before the snapshot is taken.
+    /// Native backends also publish the lane configuration: the
+    /// `lane_width` gauge carries the SoA block width and the
+    /// `lane_kernel_{isa}-{width}` gauge (value 1) names the dispatched
+    /// sweep kernel, e.g. `lane_kernel_avx2-w16`.
     pub fn metrics(&self) -> crate::metrics::Snapshot {
         if let Some(exec) = &self.executor {
             exec.publish(&self.shared.metrics);
+        }
+        if let Some(lane) = self.lane {
+            self.shared.metrics.gauge("lane_width").set(lane.width.width() as i64);
+            self.shared
+                .metrics
+                .gauge(&format!("lane_kernel_{}", lane.kernel_name()))
+                .set(1);
         }
         self.shared.metrics.snapshot()
     }

@@ -11,6 +11,7 @@
 //!   [`Plan::execute_lanes`]: tile-major SoA blocks with one scaled
 //!   stats merge per batch, the steady-state serving path.
 
+use super::lanes::LaneConfig;
 use super::parallel::Executor;
 use super::plan::{Plan, PlanCache};
 use super::scheme::{BlockKind, Scheme, SchemeKind, Tile};
@@ -190,6 +191,11 @@ pub struct DecompMul {
     /// equivalent to the single-threaded lane path). `None` keeps every
     /// batch on the submitting thread.
     par: Option<Arc<Executor>>,
+    /// Lane configuration (SoA block width × vector ISA) for inline
+    /// batches. With an attached executor the executor's own
+    /// configuration governs instead (its chunk alignment must match its
+    /// width). Every configuration is bit-identical.
+    lane: LaneConfig,
 }
 
 /// Fast-slot index for registry significand widths.
@@ -208,6 +214,7 @@ impl DecompMul {
             stats: ExecStats::default(),
             verify: false,
             par: None,
+            lane: LaneConfig::SCALAR,
         }
     }
 
@@ -234,6 +241,28 @@ impl DecompMul {
     /// The attached executor, if any.
     pub fn executor(&self) -> Option<&Arc<Executor>> {
         self.par.as_ref()
+    }
+
+    /// New adapter with an explicit lane configuration for inline
+    /// batches (width-parameterized SoA blocks, optionally SIMD-swept).
+    pub fn with_lane(kind: SchemeKind, lane: LaneConfig) -> DecompMul {
+        let mut m = Self::new(kind);
+        m.lane = lane;
+        m
+    }
+
+    /// Set the lane configuration for inline batches.
+    pub fn set_lane_config(&mut self, lane: LaneConfig) {
+        self.lane = lane;
+    }
+
+    /// The lane configuration governing this adapter's batches: the
+    /// attached executor's if one is attached, the inline one otherwise.
+    pub fn lane_config(&self) -> LaneConfig {
+        match &self.par {
+            Some(exec) => exec.lane_config(),
+            None => self.lane,
+        }
     }
 
     #[inline]
@@ -291,7 +320,7 @@ impl SigBatchMultiplier for DecompMul {
         let plan = self.entry_for(width).clone();
         match &self.par {
             Some(exec) => exec.execute_batch(&plan, a, b, &mut stats, out),
-            None => plan.execute_lanes(a, b, &mut stats, out),
+            None => plan.execute_lanes_cfg(self.lane, a, b, &mut stats, out),
         }
         self.stats = stats;
         if self.verify {

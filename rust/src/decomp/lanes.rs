@@ -6,8 +6,8 @@
 //! per call (pre-resolved steps, no planning); this module exploits it per
 //! **batch**. Instead of walking the step table once per operand pair
 //! (operand-major, the per-op path), the lane engine walks it once per
-//! [`LANES`]-wide block of operands — **tiles outer, lanes inner** — the
-//! software analogue of streaming a batch through a deeply pipelined fixed
+//! block of operands — **tiles outer, lanes inner** — the software
+//! analogue of streaming a batch through a deeply pipelined fixed
 //! datapath (de Fine Licht et al. 2022).
 //!
 //! Structure-of-arrays layout is what makes the inner loops branch-free
@@ -17,28 +17,230 @@
 //!   limb index and in-limb shift) is decoded **once per step**, outside
 //!   the lane loop;
 //! * chunk values are extracted once per *chunk* (not once per tile that
-//!   reuses the chunk) into chunk-major `[u64; LANES]` buffers;
-//! * the accumulator is a 4-limb SoA array `[[u64; LANES]; 4]`, so the
+//!   reuses the chunk) into chunk-major `[u64; W]` buffers;
+//! * the accumulator is a 4-limb SoA array `[[u64; W]; 4]`, so the
 //!   shift/add/carry chain of one step runs as four flat lane sweeps.
+//!
+//! The block width is a const generic `W ∈ {8, 16, 32}`
+//! ([`LaneScratch`]), selected at run time through [`LaneWidth`] —
+//! the software analogue of Arish & Sharma's run-time reconfigurable
+//! datapath width. With the `simd` cargo feature the three hot sweeps
+//! (chunk extraction, the widening 32x32→64 multiply, the shift/carry
+//! accumulate) additionally dispatch to `core::arch` kernels selected by
+//! [`SimdIsa::detect`]; the scalar sweeps below remain the oracle and the
+//! fallback, so the default build stays std-only and dependency-free.
 //!
 //! The kernels here are bit-identical to the scalar
 //! `exec::accumulate_shifted` dataflow; `rust/tests/plan_equiv.rs` pins
 //! `Plan::execute_lanes` against N× `Plan::execute` for every scheme
-//! kind, width and ragged tail length.
+//! kind, width and ragged tail length, and the `width_equiv` tests pin
+//! every `W`/ISA combination against the `W = 8` scalar path.
 
 use super::plan::low_mask;
 use super::scheme::{Scheme, Tile};
 use crate::wideint::{U128, U256};
 
-/// Operands processed per SoA block. Eight 64-bit lanes fill one AVX-512
-/// register (or two NEON/AVX2 registers) per sweep; the tail shorter than
-/// a block falls back to the scalar per-op kernel.
+/// Default operands processed per SoA block. Eight 64-bit lanes fill one
+/// AVX-512 register (or two NEON/AVX2 registers) per sweep; the tail
+/// shorter than a block falls back to the scalar per-op kernel.
 pub const LANES: usize = 8;
 
-/// Upper bound on chunks per operand side. The narrowest chunk any
-/// organization uses is 9 bits and operand widths are ≤ 128, so
-/// `ceil(128 / 9) = 15` chunks is the worst case (9x9 baseline).
-pub const MAX_CHUNKS: usize = 16;
+/// Operand container width in bits (two 64-bit limbs). Everything the
+/// engine multiplies arrives as a [`U128`]; the compile-time assert below
+/// keeps [`MAX_CHUNKS`] honest if the container ever grows.
+pub const MAX_OPERAND_BITS: usize = 64 * 2;
+
+/// Narrowest *uniform* chunk width any organization in the registry
+/// emits: the `9x9` baseline tiles the whole operand in 9-bit chunks.
+/// (CIVP's half-precision side emits one 2-bit *remainder* chunk, but at
+/// most one per side — covered by the `+ 1` headroom in [`MAX_CHUNKS`].)
+pub const NARROWEST_UNIFORM_CHUNK: usize = 9;
+
+/// Upper bound on chunks per operand side, derived from the registry's
+/// narrowest uniform chunk width plus one sub-width remainder chunk —
+/// `ceil(128 / 9) + 1 = 16`. [`LanePlan::compile`] asserts every scheme
+/// fits, so a wider future `OpClass` (ROADMAP item 2) that overflows this
+/// bound fails loudly instead of silently truncating the scratch arrays.
+pub const MAX_CHUNKS: usize = MAX_OPERAND_BITS.div_ceil(NARROWEST_UNIFORM_CHUNK) + 1;
+
+// If the operand container grows (e.g. Fp256 via a U256 operand type),
+// MAX_OPERAND_BITS — and with it MAX_CHUNKS and the extraction kernels'
+// two-limb splice — must be revisited. Fail the build, not the data.
+const _: () = assert!(MAX_OPERAND_BITS == std::mem::size_of::<U128>() * 8);
+const _: () = assert!(MAX_CHUNKS >= MAX_OPERAND_BITS.div_ceil(NARROWEST_UNIFORM_CHUNK));
+
+/// Runtime-selectable SoA block width. The three widths are the
+/// monomorphized [`LaneScratch`] instantiations the crate ships: `W8`
+/// (one AVX-512 register per sweep), `W16` and `W32` (deeper software
+/// pipelining per step-table walk, amortizing the per-step constant
+/// decode across more operands).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LaneWidth {
+    /// 8 operands per block (the pre-width-parameterization default).
+    W8,
+    /// 16 operands per block.
+    W16,
+    /// 32 operands per block.
+    W32,
+}
+
+impl LaneWidth {
+    /// Every supported width, narrowest first.
+    pub const ALL: [LaneWidth; 3] = [LaneWidth::W8, LaneWidth::W16, LaneWidth::W32];
+
+    /// The block width as a lane count.
+    pub const fn width(self) -> usize {
+        match self {
+            LaneWidth::W8 => 8,
+            LaneWidth::W16 => 16,
+            LaneWidth::W32 => 32,
+        }
+    }
+
+    /// Display name (`w8` / `w16` / `w32`).
+    pub const fn name(self) -> &'static str {
+        match self {
+            LaneWidth::W8 => "w8",
+            LaneWidth::W16 => "w16",
+            LaneWidth::W32 => "w32",
+        }
+    }
+
+    /// Parse a lane count (`8` / `16` / `32`).
+    pub fn from_width(w: usize) -> Option<LaneWidth> {
+        match w {
+            8 => Some(LaneWidth::W8),
+            16 => Some(LaneWidth::W16),
+            32 => Some(LaneWidth::W32),
+            _ => None,
+        }
+    }
+}
+
+impl Default for LaneWidth {
+    fn default() -> Self {
+        LaneWidth::W8
+    }
+}
+
+/// Vector ISA backing the three hot sweeps. Variants exist on every
+/// target so config files and CLI flags parse everywhere; whether a
+/// variant can actually *dispatch* on this build + CPU is
+/// [`SimdIsa::available`]. Detection order on x86_64 is AVX-512 → AVX2 →
+/// scalar; aarch64 dispatches NEON (baseline on that architecture);
+/// every other target — and any build without the `simd` cargo feature —
+/// runs the scalar sweeps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SimdIsa {
+    /// Portable scalar lane sweeps (the oracle every other path is pinned
+    /// against).
+    Scalar,
+    /// x86_64 AVX2: 4 lanes per 256-bit sweep.
+    Avx2,
+    /// x86_64 AVX-512F: 8 lanes per 512-bit sweep.
+    Avx512,
+    /// aarch64 NEON: 2 lanes per 128-bit sweep.
+    Neon,
+}
+
+impl SimdIsa {
+    /// Every ISA variant, scalar first.
+    pub const ALL: [SimdIsa; 4] = [SimdIsa::Scalar, SimdIsa::Avx2, SimdIsa::Avx512, SimdIsa::Neon];
+
+    /// Display name (`scalar` / `avx2` / `avx512` / `neon`).
+    pub const fn name(self) -> &'static str {
+        match self {
+            SimdIsa::Scalar => "scalar",
+            SimdIsa::Avx2 => "avx2",
+            SimdIsa::Avx512 => "avx512",
+            SimdIsa::Neon => "neon",
+        }
+    }
+
+    /// Best ISA this build + CPU can dispatch: AVX-512 → AVX2 → scalar on
+    /// x86_64, NEON on aarch64, scalar everywhere else (and always scalar
+    /// without the `simd` cargo feature).
+    pub fn detect() -> SimdIsa {
+        Self::detect_impl()
+    }
+
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    fn detect_impl() -> SimdIsa {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            SimdIsa::Avx512
+        } else if std::arch::is_x86_feature_detected!("avx2") {
+            SimdIsa::Avx2
+        } else {
+            SimdIsa::Scalar
+        }
+    }
+
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    fn detect_impl() -> SimdIsa {
+        // NEON is a baseline feature of aarch64; no runtime probe needed.
+        SimdIsa::Neon
+    }
+
+    #[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    fn detect_impl() -> SimdIsa {
+        SimdIsa::Scalar
+    }
+
+    /// Whether this ISA can dispatch on the current build + CPU. The lane
+    /// engine re-checks this before entering a vector kernel (calling a
+    /// `#[target_feature]` function on a CPU without the feature is UB),
+    /// falling back to the scalar sweeps otherwise.
+    pub fn available(self) -> bool {
+        match self {
+            SimdIsa::Scalar => true,
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            SimdIsa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            SimdIsa::Avx512 => std::arch::is_x86_feature_detected!("avx512f"),
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            SimdIsa::Neon => true,
+            #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+            SimdIsa::Avx2 | SimdIsa::Avx512 => false,
+            #[cfg(not(all(feature = "simd", target_arch = "aarch64")))]
+            SimdIsa::Neon => false,
+        }
+    }
+}
+
+impl Default for SimdIsa {
+    fn default() -> Self {
+        SimdIsa::Scalar
+    }
+}
+
+/// Lane-engine configuration: block width × vector ISA. The default is
+/// the scalar `W = 8` engine — exactly the pre-parameterization behavior,
+/// which keeps every equivalence oracle and the committed parallel
+/// baselines byte-identical. Serving entry points (`--lane-width`,
+/// `service.lane_width`) construct one with [`LaneConfig::detect`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LaneConfig {
+    /// SoA block width.
+    pub width: LaneWidth,
+    /// Vector ISA for the hot sweeps.
+    pub isa: SimdIsa,
+}
+
+impl LaneConfig {
+    /// The scalar `W = 8` reference configuration.
+    pub const SCALAR: LaneConfig = LaneConfig { width: LaneWidth::W8, isa: SimdIsa::Scalar };
+
+    /// `width` with the best ISA this build + CPU dispatches.
+    pub fn detect(width: LaneWidth) -> LaneConfig {
+        LaneConfig { width, isa: SimdIsa::detect() }
+    }
+
+    /// The dispatched-kernel label published as a metrics gauge and
+    /// printed by `serve` (e.g. `avx2-w16`, `scalar-w8`).
+    pub fn kernel_name(&self) -> String {
+        format!("{}-{}", self.isa.name(), self.width.name())
+    }
+}
 
 /// Pre-decoded extraction recipe for one operand chunk: which [`U128`]
 /// limb it starts in, the in-limb shift, and the width mask. Decoded once
@@ -92,6 +294,14 @@ impl LanePlan {
             scheme.a_chunks.len() <= MAX_CHUNKS && scheme.b_chunks.len() <= MAX_CHUNKS,
             "scheme exceeds MAX_CHUNKS"
         );
+        // The SIMD kernels' contract: chunk values fit 32 bits, so the
+        // widening multiply is an exact 32x32→64 (`mul_epu32` /
+        // `vmull_u32`) and the ≤64-bit product never reaches the third
+        // limb part (`p2 ≡ 0` for every in-limb shift). Every registry
+        // organization is ≤25-bit chunks; assert rather than assume.
+        for &w in scheme.a_chunks.iter().chain(scheme.b_chunks.iter()) {
+            assert!(w <= 32, "chunk width {w} breaks the 32x32->64 lane-kernel contract");
+        }
         let chunk_specs = |widths: &[u32]| -> Box<[LaneChunk]> {
             let mut off = 0u32;
             widths
@@ -122,44 +332,78 @@ impl LanePlan {
     }
 }
 
-/// Reusable SoA scratch for one [`LANES`]-wide block of multiplications:
+/// Reusable SoA scratch for one `W`-wide block of multiplications:
 /// chunk-major operand buffers and the 4-limb SoA accumulator. Lives on
-/// the stack of [`super::Plan::execute_lanes`] (~3 KiB); no allocation.
-pub struct LaneBlock {
+/// the stack of [`super::Plan::execute_lanes`] (~3 KiB at `W = 8`,
+/// ~9 KiB at `W = 32`); no allocation.
+pub struct LaneScratch<const W: usize> {
     /// `a[c][l]` = chunk `c` of lane `l`'s A operand.
-    a: [[u64; LANES]; MAX_CHUNKS],
+    pub(crate) a: [[u64; W]; MAX_CHUNKS],
     /// `b[c][l]` = chunk `c` of lane `l`'s B operand.
-    b: [[u64; LANES]; MAX_CHUNKS],
+    pub(crate) b: [[u64; W]; MAX_CHUNKS],
     /// SoA product accumulator: `acc[k][l]` = limb `k` of lane `l`.
-    acc: [[u64; LANES]; 4],
+    pub(crate) acc: [[u64; W]; 4],
 }
 
-impl LaneBlock {
+/// The default-width scratch (the pre-parameterization `LaneBlock` name).
+pub type LaneBlock = LaneScratch<LANES>;
+
+impl<const W: usize> LaneScratch<W> {
     /// Fresh (zeroed) scratch.
-    pub fn new() -> LaneBlock {
-        LaneBlock {
-            a: [[0; LANES]; MAX_CHUNKS],
-            b: [[0; LANES]; MAX_CHUNKS],
-            acc: [[0; LANES]; 4],
-        }
+    pub fn new() -> LaneScratch<W> {
+        LaneScratch { a: [[0; W]; MAX_CHUNKS], b: [[0; W]; MAX_CHUNKS], acc: [[0; W]; 4] }
     }
 
-    /// Execute one full block: extract chunks, run every step tile-major,
-    /// and append the [`LANES`] products to `out`.
+    /// Execute one full block with the scalar sweeps: extract chunks, run
+    /// every step tile-major, and append the `W` products to `out`.
     #[inline]
-    pub fn run(
-        &mut self,
-        plan: &LanePlan,
-        a: &[U128; LANES],
-        b: &[U128; LANES],
-        out: &mut Vec<U256>,
-    ) {
+    pub fn run(&mut self, plan: &LanePlan, a: &[U128; W], b: &[U128; W], out: &mut Vec<U256>) {
         extract_chunks(&plan.a_chunks, a, &mut self.a);
         extract_chunks(&plan.b_chunks, b, &mut self.b);
-        self.acc = [[0; LANES]; 4];
+        self.acc = [[0; W]; 4];
         for step in plan.steps.iter() {
             apply_step(&mut self.acc, &self.a[step.ia as usize], &self.b[step.ib as usize], step);
         }
+        self.push_products(out);
+    }
+
+    /// Execute one full block on `isa`, falling back to the scalar sweeps
+    /// when the ISA is not dispatchable on this build + CPU. Every ISA
+    /// path is bit-identical to [`LaneScratch::run`] (pinned by the
+    /// `simd` module's directed tests and the `width_equiv` properties).
+    #[inline]
+    pub fn run_with(
+        &mut self,
+        plan: &LanePlan,
+        a: &[U128; W],
+        b: &[U128; W],
+        out: &mut Vec<U256>,
+        isa: SimdIsa,
+    ) {
+        match isa {
+            SimdIsa::Scalar => self.run(plan, a, b, out),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            SimdIsa::Avx2 if SimdIsa::Avx2.available() => {
+                // SAFETY: AVX2 presence just verified on this CPU.
+                unsafe { super::simd::run_avx2(self, plan, a, b, out) }
+            }
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            SimdIsa::Avx512 if SimdIsa::Avx512.available() => {
+                // SAFETY: AVX-512F presence just verified on this CPU.
+                unsafe { super::simd::run_avx512(self, plan, a, b, out) }
+            }
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            SimdIsa::Neon => {
+                // SAFETY: NEON is baseline on aarch64.
+                unsafe { super::simd::run_neon(self, plan, a, b, out) }
+            }
+            _ => self.run(plan, a, b, out),
+        }
+    }
+
+    /// Transpose the SoA accumulator back to AoS [`U256`] products.
+    #[inline]
+    pub(crate) fn push_products(&self, out: &mut Vec<U256>) {
         let [r0, r1, r2, r3] = &self.acc;
         for (((&l0, &l1), &l2), &l3) in r0.iter().zip(r1).zip(r2).zip(r3) {
             out.push(U256 { limbs: [l0, l1, l2, l3] });
@@ -167,7 +411,7 @@ impl LaneBlock {
     }
 }
 
-impl Default for LaneBlock {
+impl<const W: usize> Default for LaneScratch<W> {
     fn default() -> Self {
         Self::new()
     }
@@ -179,7 +423,11 @@ impl Default for LaneBlock {
 /// `(hi << (63 - sh)) << 1` form is `hi << (64 - sh)` for `sh > 0` and
 /// exactly 0 for `sh == 0`, with no per-lane conditional).
 #[inline]
-fn extract_chunks(specs: &[LaneChunk], ops: &[U128; LANES], out: &mut [[u64; LANES]; MAX_CHUNKS]) {
+pub(crate) fn extract_chunks<const W: usize>(
+    specs: &[LaneChunk],
+    ops: &[U128; W],
+    out: &mut [[u64; W]; MAX_CHUNKS],
+) {
     for (spec, dst) in specs.iter().zip(out.iter_mut()) {
         let li = spec.limb as usize;
         let sh = spec.shift;
@@ -208,16 +456,21 @@ fn extract_chunks(specs: &[LaneChunk], ops: &[U128; LANES], out: &mut [[u64; LAN
 /// a carry ripple into `limb+3` — but each of those limb rows is one flat
 /// lane sweep with the row index and shift hoisted out of the loop.
 #[inline]
-fn apply_step(acc: &mut [[u64; LANES]; 4], pa: &[u64; LANES], pb: &[u64; LANES], step: &LaneStep) {
+pub(crate) fn apply_step<const W: usize>(
+    acc: &mut [[u64; W]; 4],
+    pa: &[u64; W],
+    pb: &[u64; W],
+    step: &LaneStep,
+) {
     let sh = step.shift;
     let limb = step.limb as usize;
     // Split each lane's shifted product into its three limb parts,
     // branch-free: `p1 = prod >> (64 - sh)` is `prod >> 64` when sh == 0,
     // and `(prod >> (127 - sh)) >> 1` is `prod >> (128 - sh)` for sh > 0
     // and 0 for sh == 0 — the same parts the scalar kernel computes.
-    let mut p0 = [0u64; LANES];
-    let mut p1 = [0u64; LANES];
-    let mut p2 = [0u64; LANES];
+    let mut p0 = [0u64; W];
+    let mut p1 = [0u64; W];
+    let mut p2 = [0u64; W];
     for (((d0, d1), d2), (&xa, &xb)) in
         p0.iter_mut().zip(p1.iter_mut()).zip(p2.iter_mut()).zip(pa.iter().zip(pb))
     {
@@ -226,7 +479,7 @@ fn apply_step(acc: &mut [[u64; LANES]; 4], pa: &[u64; LANES], pb: &[u64; LANES],
         *d1 = (prod >> (64 - sh)) as u64;
         *d2 = ((prod >> (127 - sh)) >> 1) as u64;
     }
-    let mut carry = [0u64; LANES];
+    let mut carry = [0u64; W];
     {
         let row = &mut acc[limb];
         for ((r, &p), c) in row.iter_mut().zip(p0.iter()).zip(carry.iter_mut()) {
@@ -259,11 +512,45 @@ fn apply_step(acc: &mut [[u64; LANES]; 4], pa: &[u64; LANES], pb: &[u64; LANES],
 /// The two single-bit carries cannot both fire (the wrapped sum of
 /// `row + p` is at most `2^64 - 2`), so the out-carry stays 0/1.
 #[inline]
-fn add_row(row: &mut [u64; LANES], parts: &[u64; LANES], carry: &mut [u64; LANES]) {
+fn add_row<const W: usize>(row: &mut [u64; W], parts: &[u64; W], carry: &mut [u64; W]) {
     for ((r, &p), c) in row.iter_mut().zip(parts.iter()).zip(carry.iter_mut()) {
         let (v, c1) = r.overflowing_add(p);
         let (v, c2) = v.overflowing_add(*c);
         *r = v;
         *c = (c1 as u64) + (c2 as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_chunks_covers_the_densest_organization() {
+        // Baseline9 tiles a full 128-bit container in 9-bit chunks.
+        assert!(MAX_CHUNKS >= 128usize.div_ceil(9));
+    }
+
+    #[test]
+    fn lane_width_roundtrips() {
+        for w in LaneWidth::ALL {
+            assert_eq!(LaneWidth::from_width(w.width()), Some(w));
+        }
+        assert_eq!(LaneWidth::from_width(12), None);
+        assert_eq!(LaneWidth::default(), LaneWidth::W8);
+    }
+
+    #[test]
+    fn scalar_isa_is_always_available() {
+        assert!(SimdIsa::Scalar.available());
+        // Whatever detect() returns must itself be dispatchable.
+        assert!(SimdIsa::detect().available());
+    }
+
+    #[test]
+    fn kernel_name_composes_isa_and_width() {
+        assert_eq!(LaneConfig::SCALAR.kernel_name(), "scalar-w8");
+        let cfg = LaneConfig { width: LaneWidth::W32, isa: SimdIsa::Avx2 };
+        assert_eq!(cfg.kernel_name(), "avx2-w32");
     }
 }

@@ -40,12 +40,14 @@ pub mod lanes;
 pub mod parallel;
 pub mod plan;
 pub mod scheme;
+#[cfg(feature = "simd")]
+mod simd;
 #[cfg(test)]
 mod tests;
 
 pub use analysis::{scheme_census, AnalysisRow, BlockCensus};
 pub use exec::{execute, DecompMul, ExecStats};
-pub use lanes::{LaneBlock, LanePlan, LANES};
+pub use lanes::{LaneBlock, LaneConfig, LanePlan, LaneScratch, LaneWidth, SimdIsa, LANES};
 pub use parallel::{chunk_plan, Executor, ExecutorCounters, WorkerCounters, DEFAULT_PAR_THRESHOLD};
 pub use plan::{Plan, PlanCache, PlanStep};
 pub use scheme::{BlockKind, Scheme, SchemeKind, Tile};

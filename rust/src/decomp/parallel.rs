@@ -13,11 +13,13 @@
 //!   with its own chunk deque (a `Mutex<VecDeque>` — the critical section
 //!   is a pointer-sized pop, so contention is negligible next to the
 //!   multi-microsecond chunk execution it guards);
-//! * a submitted batch is split into **lane-aligned chunks** (every chunk
-//!   length is a multiple of [`LANES`], so the parallel block
-//!   decomposition is *identical* to the sequential one) and scattered
-//!   round-robin across the worker deques; the scalar ragged tail
-//!   (`len % LANES`) stays on the submitting thread;
+//! * a submitted batch is split into **block-aligned chunks** (every
+//!   chunk length is a multiple of the executor's SoA lane width —
+//!   [`super::lanes::LANES`] by default, or the [`LaneConfig`] width it
+//!   was built with — so the parallel block decomposition is *identical*
+//!   to the sequential one) and scattered round-robin across the worker
+//!   deques; the scalar ragged tail (`len % width`) stays on the
+//!   submitting thread;
 //! * workers pop from the front of their own deque; an idle worker
 //!   **steals from the back of the busiest deque** (largest depth), so
 //!   load imbalance self-corrects without a global queue;
@@ -39,7 +41,7 @@
 //! threads by `rust/tests/parallel_stress.rs`.
 
 use super::exec::ExecStats;
-use super::lanes::LANES;
+use super::lanes::LaneConfig;
 use super::plan::Plan;
 use crate::wideint::{U128, U256};
 use std::collections::VecDeque;
@@ -56,10 +58,13 @@ use std::time::Duration;
 /// batches.
 pub const DEFAULT_PAR_THRESHOLD: usize = 256;
 
-/// Smallest chunk the splitter produces (in elements). Chunks are the
-/// steal granularity: too small and the deque traffic dominates, too
-/// large and stealing cannot rebalance. Must be a multiple of [`LANES`].
-const MIN_CHUNK: usize = 4 * LANES;
+/// Smallest chunk the splitter produces, in SoA blocks of the executor's
+/// lane width. Chunks are the steal granularity: too small and the deque
+/// traffic dominates, too large and stealing cannot rebalance. At the
+/// default width this is the pre-parameterization `4 * LANES = 32`
+/// elements, so the default split — and with it the committed
+/// `parallel/model-scaling-*` baselines — is unchanged.
+const MIN_CHUNK_BLOCKS: usize = 4;
 
 /// Target number of chunks per worker, so idle workers always find
 /// something to steal while the batch is in flight.
@@ -70,21 +75,25 @@ const CHUNKS_PER_WORKER: usize = 4;
 /// race, it is not the steady-state latency.
 const IDLE_PARK: Duration = Duration::from_millis(1);
 
-/// The lane-aligned chunk split for a batch: `(chunk_len, n_chunks)` over
-/// the `full` lane-aligned prefix (`full % LANES == 0`). Exposed so the
-/// bench model (`benches/bench_parallel.rs`) and the gate
+/// The block-aligned chunk split for a batch: `(chunk_len, n_chunks)`
+/// over the `full` block-aligned prefix (`full % block == 0`, where
+/// `block` is the executor's SoA lane width — [`super::lanes::LANES`]
+/// by default).
+/// Exposed so the bench model (`benches/bench_parallel.rs`) and the gate
 /// (`python/tools/check_bench.py`) reason about the *actual* splitting
 /// policy rather than a parallel re-implementation of it.
-pub fn chunk_plan(full: usize, workers: usize) -> (usize, usize) {
-    debug_assert_eq!(full % LANES, 0, "chunk_plan takes the lane-aligned prefix");
+pub fn chunk_plan(full: usize, workers: usize, block: usize) -> (usize, usize) {
+    debug_assert!(block > 0, "chunk_plan needs a positive block width");
+    debug_assert_eq!(full % block, 0, "chunk_plan takes the block-aligned prefix");
+    let min_chunk = MIN_CHUNK_BLOCKS * block;
     if full == 0 {
-        return (MIN_CHUNK, 0);
+        return (min_chunk, 0);
     }
-    let target = (full / (workers.max(1) * CHUNKS_PER_WORKER)).max(MIN_CHUNK);
-    // Round up to a LANES multiple so every chunk boundary is a block
+    let target = (full / (workers.max(1) * CHUNKS_PER_WORKER)).max(min_chunk);
+    // Round up to a block multiple so every chunk boundary is a block
     // boundary — the parallel block decomposition is then identical to
     // the sequential one, which is what makes the outputs bit-exact.
-    let chunk = target.div_ceil(LANES) * LANES;
+    let chunk = target.div_ceil(block) * block;
     (chunk, full.div_ceil(chunk))
 }
 
@@ -191,6 +200,10 @@ struct ExecShared {
     helper_executed: AtomicU64,
     parallel_batches: AtomicU64,
     sequential_batches: AtomicU64,
+    /// Lane configuration every chunk executes under (chunk boundaries
+    /// are aligned to its width, so parallel ≡ sequential stays exact at
+    /// every width/ISA).
+    lane: LaneConfig,
 }
 
 impl ExecShared {
@@ -250,7 +263,7 @@ impl ExecShared {
             )
         };
         let mut stats = ExecStats::default();
-        plan.execute_lanes(a, b, &mut stats, scratch);
+        plan.execute_lanes_cfg(self.lane, a, b, &mut stats, scratch);
         unsafe {
             std::ptr::copy_nonoverlapping(scratch.as_ptr(), job.out.add(start), end - start);
             *job.stats[task.index].0.get() = stats;
@@ -326,8 +339,17 @@ impl Executor {
 
     /// Spawn an executor with an explicit parallel threshold: batches
     /// shorter than `par_threshold` run the single-threaded lane path on
-    /// the submitting thread, untouched.
+    /// the submitting thread, untouched. Uses the scalar default lane
+    /// configuration (`W = 8`).
     pub fn with_threshold(workers: usize, par_threshold: usize) -> Executor {
+        Self::with_config(workers, par_threshold, LaneConfig::SCALAR)
+    }
+
+    /// Spawn an executor with an explicit parallel threshold and lane
+    /// configuration. Chunk boundaries are aligned to the configured
+    /// width, so every chunk is whole SoA blocks and the parallel
+    /// decomposition equals the sequential one at that width.
+    pub fn with_config(workers: usize, par_threshold: usize, lane: LaneConfig) -> Executor {
         let n = workers.max(1);
         let shared = Arc::new(ExecShared {
             queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
@@ -341,6 +363,7 @@ impl Executor {
             helper_executed: AtomicU64::new(0),
             parallel_batches: AtomicU64::new(0),
             sequential_batches: AtomicU64::new(0),
+            lane,
         });
         let handles = (0..n)
             .map(|i| {
@@ -364,6 +387,12 @@ impl Executor {
         self.threshold
     }
 
+    /// The lane configuration (SoA width × vector ISA) every chunk
+    /// executes under.
+    pub fn lane_config(&self) -> LaneConfig {
+        self.shared.lane
+    }
+
     /// Execute a whole batch through the compiled plan — the parallel
     /// counterpart of [`Plan::execute_batch`], and bit-for-bit identical
     /// to it: products, output order and the stats merged into `stats`
@@ -385,11 +414,12 @@ impl Executor {
     ) {
         assert_eq!(a.len(), b.len(), "operand length mismatch");
         let n = a.len();
-        let full = n - n % LANES;
-        let (chunk, n_chunks) = chunk_plan(full, self.workers.len());
+        let block = self.shared.lane.width.width();
+        let full = n - n % block;
+        let (chunk, n_chunks) = chunk_plan(full, self.workers.len(), block);
         if n < self.threshold || n_chunks < 2 {
             self.shared.sequential_batches.fetch_add(1, Ordering::Relaxed);
-            plan.execute_batch(a, b, stats, out);
+            plan.execute_batch_cfg(self.shared.lane, a, b, stats, out);
             return;
         }
         self.shared.parallel_batches.fetch_add(1, Ordering::Relaxed);
@@ -487,6 +517,7 @@ impl Executor {
         registry.gauge("par_helper_executed").set(c.helper_executed as i64);
         registry.gauge("par_batches_parallel").set(c.parallel_batches as i64);
         registry.gauge("par_batches_sequential").set(c.sequential_batches as i64);
+        registry.gauge("par_lane_width").set(self.shared.lane.width.width() as i64);
     }
 }
 
@@ -517,25 +548,56 @@ impl Drop for Executor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::decomp::{OpClass, PlanCache, SchemeKind};
+    use crate::decomp::{LaneWidth, OpClass, PlanCache, SchemeKind, SimdIsa, LANES};
     use crate::proput::Rng;
 
     #[test]
-    fn chunk_plan_is_lane_aligned_and_covers() {
-        for workers in 1..=8 {
-            for n in [0usize, 8, 64, 256, 1000, 4096, 65536] {
-                let full = n - n % LANES;
-                let (chunk, count) = chunk_plan(full, workers);
-                assert_eq!(chunk % LANES, 0, "chunk not lane-aligned");
-                assert!(chunk >= MIN_CHUNK);
-                if full == 0 {
-                    assert_eq!(count, 0);
-                } else {
-                    assert_eq!(count, full.div_ceil(chunk));
-                    assert!((count - 1) * chunk < full && count * chunk >= full);
+    fn chunk_plan_is_block_aligned_and_covers_every_width() {
+        for width in LaneWidth::ALL {
+            let block = width.width();
+            for workers in 1..=8 {
+                for n in [0usize, 8, 64, 256, 1000, 4096, 65536] {
+                    let full = n - n % block;
+                    let (chunk, count) = chunk_plan(full, workers, block);
+                    assert_eq!(chunk % block, 0, "chunk not block-aligned");
+                    assert!(chunk >= MIN_CHUNK_BLOCKS * block);
+                    if full == 0 {
+                        assert_eq!(count, 0);
+                    } else {
+                        assert_eq!(count, full.div_ceil(chunk));
+                        assert!((count - 1) * chunk < full && count * chunk >= full);
+                    }
                 }
             }
         }
+    }
+
+    /// The default width must reproduce the pre-parameterization split
+    /// exactly — the committed `parallel/model-scaling-*` baselines are
+    /// derived from it.
+    #[test]
+    fn default_width_split_matches_legacy_constants() {
+        assert_eq!(chunk_plan(0, 4, LANES), (32, 0));
+        assert_eq!(chunk_plan(1024, 4, LANES), (64, 16));
+        assert_eq!(chunk_plan(8192, 8, LANES), (256, 32));
+    }
+
+    #[test]
+    fn executor_carries_its_lane_config() {
+        let cfg = LaneConfig { width: LaneWidth::W16, isa: SimdIsa::Scalar };
+        let exec = Executor::with_config(2, 64, cfg);
+        assert_eq!(exec.lane_config(), cfg);
+        let plan = PlanCache::get(SchemeKind::Civp, OpClass::Double);
+        let mut rng = Rng::new(17);
+        let n = 333; // ragged under both widths
+        let a: Vec<U128> = (0..n).map(|_| rng.sig(53)).collect();
+        let b: Vec<U128> = (0..n).map(|_| rng.sig(53)).collect();
+        let (mut seq, mut par) = (ExecStats::default(), ExecStats::default());
+        let (mut out_seq, mut out_par) = (Vec::new(), Vec::new());
+        plan.execute_batch(&a, &b, &mut seq, &mut out_seq);
+        exec.execute_batch(&plan, &a, &b, &mut par, &mut out_par);
+        assert_eq!(out_seq, out_par, "W16 executor diverges from scalar sequential");
+        assert_eq!(seq.muls, par.muls);
     }
 
     #[test]
@@ -575,7 +637,7 @@ mod tests {
         let ran: u64 =
             c.workers.iter().map(|w| w.executed).sum::<u64>() + c.helper_executed;
         let full = n - n % LANES;
-        let (_, chunks) = chunk_plan(full, exec.workers());
+        let (_, chunks) = chunk_plan(full, exec.workers(), LANES);
         assert_eq!(ran as usize, chunks, "every chunk executed exactly once");
     }
 

@@ -38,7 +38,7 @@
 //!   stack runs in steady state.
 
 use super::exec::{accumulate_shifted, execute_tiles, ExecStats};
-use super::lanes::{LaneBlock, LanePlan, LANES};
+use super::lanes::{LaneConfig, LanePlan, LaneScratch, LaneWidth, SimdIsa};
 use super::scheme::{Scheme, SchemeKind};
 use crate::fpu::OpClass;
 use crate::wideint::{U128, U256};
@@ -268,8 +268,24 @@ impl Plan {
         self.execute_lanes(a, b, stats, out);
     }
 
+    /// [`Plan::execute_batch`] under an explicit lane configuration
+    /// (block width × vector ISA); the plain method is this with
+    /// [`LaneConfig::SCALAR`].
+    pub fn execute_batch_cfg(
+        &self,
+        cfg: LaneConfig,
+        a: &[U128],
+        b: &[U128],
+        stats: &mut ExecStats,
+        out: &mut Vec<U256>,
+    ) {
+        self.execute_lanes_cfg(cfg, a, b, stats, out);
+    }
+
     /// Tile-major, lane-fused batch execution (§Perf): process the batch
-    /// in [`LANES`]-wide SoA blocks, looping **tiles outer, lanes inner**
+    /// in [`super::lanes::LANES`]-wide SoA blocks (the scalar default
+    /// configuration; see [`Plan::execute_lanes_cfg`] for the
+    /// width/ISA-parameterized form), looping **tiles outer, lanes inner**
     /// — each compiled step's offsets/widths/masks are decoded once and
     /// applied across the whole block with branch-free inner loops (see
     /// [`super::lanes`]). The ragged tail shorter than a block runs
@@ -286,6 +302,45 @@ impl Plan {
     /// Panics if `a` and `b` have different lengths.
     pub fn execute_lanes(
         &self,
+        a: &[U128],
+        b: &[U128],
+        stats: &mut ExecStats,
+        out: &mut Vec<U256>,
+    ) {
+        self.execute_lanes_cfg(LaneConfig::SCALAR, a, b, stats, out);
+    }
+
+    /// [`Plan::execute_lanes`] under an explicit lane configuration: the
+    /// SoA block width (`W ∈ {8, 16, 32}`, monomorphized per
+    /// [`LaneWidth`]) and the vector ISA backing the hot sweeps. Every
+    /// combination is bit-identical to the scalar `W = 8` path —
+    /// including the accumulated stats — pinned by the `width_equiv`
+    /// property tests; an ISA the build/CPU cannot dispatch falls back
+    /// to the scalar sweeps at the selected width.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `a` and `b` have different lengths.
+    pub fn execute_lanes_cfg(
+        &self,
+        cfg: LaneConfig,
+        a: &[U128],
+        b: &[U128],
+        stats: &mut ExecStats,
+        out: &mut Vec<U256>,
+    ) {
+        match cfg.width {
+            LaneWidth::W8 => self.execute_lanes_w::<8>(cfg.isa, a, b, stats, out),
+            LaneWidth::W16 => self.execute_lanes_w::<16>(cfg.isa, a, b, stats, out),
+            LaneWidth::W32 => self.execute_lanes_w::<32>(cfg.isa, a, b, stats, out),
+        }
+    }
+
+    /// The width-monomorphized lane loop behind
+    /// [`Plan::execute_lanes_cfg`].
+    fn execute_lanes_w<const W: usize>(
+        &self,
+        isa: SimdIsa,
         a: &[U128],
         b: &[U128],
         stats: &mut ExecStats,
@@ -308,14 +363,14 @@ impl Plan {
             stats.merge_scaled(&self.per_mul, a.len() as u64);
             return;
         }
-        let full = a.len() - a.len() % LANES;
-        let mut block = LaneBlock::new();
+        let full = a.len() - a.len() % W;
+        let mut block = LaneScratch::<W>::new();
         let mut i = 0;
         while i < full {
-            let ba: &[U128; LANES] = a[i..i + LANES].try_into().expect("block width");
-            let bb: &[U128; LANES] = b[i..i + LANES].try_into().expect("block width");
-            block.run(&self.lanes, ba, bb, out);
-            i += LANES;
+            let ba: &[U128; W] = a[i..i + W].try_into().expect("block width");
+            let bb: &[U128; W] = b[i..i + W].try_into().expect("block width");
+            block.run_with(&self.lanes, ba, bb, out, isa);
+            i += W;
         }
         for (&x, &y) in a[full..].iter().zip(&b[full..]) {
             out.push(self.product(x, y));

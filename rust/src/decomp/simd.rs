@@ -1,0 +1,552 @@
+//! `core::arch` kernels for the three hot lane sweeps.
+//!
+//! Compiled only with the `simd` cargo feature; dispatched at run time by
+//! [`super::lanes::LaneScratch::run_with`] after an
+//! [`super::lanes::SimdIsa::available`] probe (AVX-512F → AVX2 on x86_64,
+//! NEON on aarch64). Everything here is pinned bit-identical to the
+//! scalar sweeps in `lanes.rs` by the directed tests below plus the
+//! `width_equiv` property tests.
+//!
+//! The kernels rely on one invariant that `LanePlan::compile` *asserts*
+//! rather than assumes: **every chunk is ≤ 32 bits** (the registry's
+//! widest is 25, from the `25x18` legacy organization). That buys two
+//! simplifications over the scalar u128 dataflow:
+//!
+//! * the widening multiply is an exact 32x32→64 (`mul_epu32` /
+//!   `vmull_u32`): both chunk values sit in the low half of their 64-bit
+//!   lane, so the single-instruction low-half product is the full
+//!   product;
+//! * the ≤50-bit product never reaches the scalar kernel's third limb
+//!   part (`p2 = prod >> (128 - sh)` with `sh ≤ 63` is identically 0),
+//!   so each step is two shifted parts plus the carry ripple.
+//!
+//! Layout note: operands arrive AoS (`[U128; W]`). Each block first
+//! deinterleaves them into contiguous `lo`/`hi` staging rows (a scalar
+//! copy), after which every sweep — chunk extraction, multiply,
+//! shift/carry accumulate — is a unit-stride vector loop. The vector
+//! kernels are deliberately **non-generic** (`&[u64]` slices, lane count
+//! at run time): `#[target_feature]` functions stay monomorphic, and the
+//! generic `run_*` drivers pass `W` through as a slice length. Each
+//! kernel keeps a scalar remainder loop so any `W` is correct even
+//! though the shipped widths (8/16/32) are multiples of every vector
+//! width.
+
+#![allow(dead_code)] // non-native-arch builds compile only the drivers' deps
+
+use super::lanes::{LanePlan, LaneScratch};
+use crate::wideint::{U128, U256};
+
+/// Split AoS operands into contiguous low/high limb rows.
+#[inline]
+fn deinterleave<const W: usize>(ops: &[U128; W], lo: &mut [u64; W], hi: &mut [u64; W]) {
+    for ((x, l), h) in ops.iter().zip(lo.iter_mut()).zip(hi.iter_mut()) {
+        *l = x.limbs[0];
+        *h = x.limbs[1];
+    }
+}
+
+/// View the 4×W SoA accumulator as one contiguous row-major slice
+/// (nested arrays have guaranteed contiguous layout).
+#[inline]
+fn acc_flat<const W: usize>(acc: &mut [[u64; W]; 4]) -> &mut [u64] {
+    unsafe { core::slice::from_raw_parts_mut(acc.as_mut_ptr() as *mut u64, 4 * W) }
+}
+
+/// Scalar tail shared by every ISA's extraction kernel — identical math
+/// to `lanes::extract_chunks`.
+#[inline]
+fn extract_tail(lo: &[u64], hi: &[u64], limb: u32, sh: u32, mask: u64, dst: &mut [u64], from: usize) {
+    for i in from..dst.len() {
+        dst[i] = if limb == 0 {
+            ((lo[i] >> sh) | ((hi[i] << (63 - sh)) << 1)) & mask
+        } else {
+            (hi[i] >> sh) & mask
+        };
+    }
+}
+
+/// Scalar tail shared by every ISA's step kernel — identical math to
+/// `lanes::apply_step` under the ≤32-bit chunk contract (`p2 ≡ 0`).
+#[inline]
+fn step_tail(acc: &mut [u64], w: usize, limb: usize, sh: u32, pa: &[u64], pb: &[u64], from: usize) {
+    for i in from..w {
+        let prod = pa[i].wrapping_mul(pb[i]); // exact: both < 2^32
+        let p0 = prod << sh;
+        let p1 = if sh == 0 { 0 } else { prod >> (64 - sh) };
+        let (v, c0) = acc[limb * w + i].overflowing_add(p0);
+        acc[limb * w + i] = v;
+        let mut carry = c0 as u64;
+        if limb + 1 < 4 {
+            let r = &mut acc[(limb + 1) * w + i];
+            let (v, c1) = r.overflowing_add(p1);
+            let (v, c2) = v.overflowing_add(carry);
+            *r = v;
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if limb + 2 < 4 {
+            let r = &mut acc[(limb + 2) * w + i];
+            let (v, c) = r.overflowing_add(carry);
+            *r = v;
+            carry = c as u64;
+        }
+        if limb + 3 < 4 {
+            let r = &mut acc[(limb + 3) * w + i];
+            *r = r.wrapping_add(carry);
+        }
+    }
+}
+
+/// Extract every chunk of both operand sides through `$extract`, then
+/// run the step table through `$step` — the shared driver each ISA's
+/// `run_*` instantiates with its kernels. The kernels are called by path
+/// (never through a function pointer — `#[target_feature]` functions
+/// don't coerce to pointers), so each stays a direct unsafe call from
+/// the monomorphized driver.
+macro_rules! define_run {
+    ($(#[$doc:meta])* $name:ident, $extract:path, $step:path) => {
+        $(#[$doc])*
+        pub(crate) unsafe fn $name<const W: usize>(
+            s: &mut LaneScratch<W>,
+            plan: &LanePlan,
+            a: &[U128; W],
+            b: &[U128; W],
+            out: &mut Vec<U256>,
+        ) {
+            let (mut lo, mut hi) = ([0u64; W], [0u64; W]);
+            deinterleave(a, &mut lo, &mut hi);
+            for (spec, dst) in plan.a_chunks.iter().zip(s.a.iter_mut()) {
+                unsafe { $extract(&lo, &hi, spec.limb, spec.shift, spec.mask, dst) };
+            }
+            deinterleave(b, &mut lo, &mut hi);
+            for (spec, dst) in plan.b_chunks.iter().zip(s.b.iter_mut()) {
+                unsafe { $extract(&lo, &hi, spec.limb, spec.shift, spec.mask, dst) };
+            }
+            s.acc = [[0; W]; 4];
+            let acc = acc_flat(&mut s.acc);
+            for step in plan.steps.iter() {
+                let (ia, ib) = (step.ia as usize, step.ib as usize);
+                unsafe {
+                    $step(acc, W, step.limb as usize, step.shift, &s.a[ia], &s.b[ib]);
+                }
+            }
+            s.push_products(out);
+        }
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::*;
+    use core::arch::x86_64::*;
+
+    /// Unsigned 64-bit per-lane `a < b`, as a 0/1 carry vector. AVX2 has
+    /// no unsigned compare; biasing both sides by `i64::MIN` turns the
+    /// signed compare into the unsigned one.
+    #[inline(always)]
+    unsafe fn ltu256(a: __m256i, b: __m256i) -> __m256i {
+        unsafe {
+            let sign = _mm256_set1_epi64x(i64::MIN);
+            let m = _mm256_cmpgt_epi64(_mm256_xor_si256(b, sign), _mm256_xor_si256(a, sign));
+            _mm256_srli_epi64(m, 63)
+        }
+    }
+
+    /// AVX2 chunk-extraction sweep (4 lanes per iteration).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn extract_avx2(
+        lo: &[u64],
+        hi: &[u64],
+        limb: u32,
+        sh: u32,
+        mask: u64,
+        dst: &mut [u64],
+    ) {
+        unsafe {
+            let n = dst.len();
+            let vmask = _mm256_set1_epi64x(mask as i64);
+            let vsh = _mm_cvtsi32_si128(sh as i32);
+            let vsh63 = _mm_cvtsi32_si128(63 - sh as i32);
+            let mut i = 0;
+            while i + 4 <= n {
+                let v = if limb == 0 {
+                    let vlo = _mm256_loadu_si256(lo.as_ptr().add(i) as *const __m256i);
+                    let vhi = _mm256_loadu_si256(hi.as_ptr().add(i) as *const __m256i);
+                    _mm256_or_si256(
+                        _mm256_srl_epi64(vlo, vsh),
+                        _mm256_slli_epi64(_mm256_sll_epi64(vhi, vsh63), 1),
+                    )
+                } else {
+                    let vhi = _mm256_loadu_si256(hi.as_ptr().add(i) as *const __m256i);
+                    _mm256_srl_epi64(vhi, vsh)
+                };
+                let v = _mm256_and_si256(v, vmask);
+                _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, v);
+                i += 4;
+            }
+            extract_tail(lo, hi, limb, sh, mask, dst, i);
+        }
+    }
+
+    /// AVX2 multiply + shift/carry accumulate sweep (4 lanes per
+    /// iteration). `_mm256_srl_epi64` yields 0 for counts ≥ 64, so the
+    /// `sh == 0` middle part needs no branch: `prod >> 64 = 0`, exactly
+    /// the scalar value for a ≤64-bit product.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn step_avx2(
+        acc: &mut [u64],
+        w: usize,
+        limb: usize,
+        sh: u32,
+        pa: &[u64],
+        pb: &[u64],
+    ) {
+        unsafe {
+            debug_assert_eq!(acc.len(), 4 * w);
+            let vsh = _mm_cvtsi32_si128(sh as i32);
+            let vshr = _mm_cvtsi32_si128(64 - sh as i32);
+            let base = acc.as_mut_ptr();
+            let mut i = 0;
+            while i + 4 <= w {
+                let va = _mm256_loadu_si256(pa.as_ptr().add(i) as *const __m256i);
+                let vb = _mm256_loadu_si256(pb.as_ptr().add(i) as *const __m256i);
+                let prod = _mm256_mul_epu32(va, vb); // exact: both < 2^32
+                let p0 = _mm256_sll_epi64(prod, vsh);
+                let p1 = _mm256_srl_epi64(prod, vshr);
+                let r0p = base.add(limb * w + i) as *mut __m256i;
+                let s0 = _mm256_add_epi64(_mm256_loadu_si256(r0p), p0);
+                let mut carry = ltu256(s0, p0);
+                _mm256_storeu_si256(r0p, s0);
+                if limb + 1 < 4 {
+                    let rp = base.add((limb + 1) * w + i) as *mut __m256i;
+                    let v1 = _mm256_add_epi64(_mm256_loadu_si256(rp), p1);
+                    let c1 = ltu256(v1, p1);
+                    let v2 = _mm256_add_epi64(v1, carry);
+                    let c2 = ltu256(v2, carry);
+                    _mm256_storeu_si256(rp, v2);
+                    carry = _mm256_add_epi64(c1, c2);
+                }
+                if limb + 2 < 4 {
+                    let rp = base.add((limb + 2) * w + i) as *mut __m256i;
+                    let v = _mm256_add_epi64(_mm256_loadu_si256(rp), carry);
+                    let c = ltu256(v, carry);
+                    _mm256_storeu_si256(rp, v);
+                    carry = c;
+                }
+                if limb + 3 < 4 {
+                    let rp = base.add((limb + 3) * w + i) as *mut __m256i;
+                    _mm256_storeu_si256(rp, _mm256_add_epi64(_mm256_loadu_si256(rp), carry));
+                }
+                i += 4;
+            }
+            step_tail(acc, w, limb, sh, pa, pb, i);
+        }
+    }
+
+    /// AVX-512F chunk-extraction sweep (8 lanes per iteration).
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn extract_avx512(
+        lo: &[u64],
+        hi: &[u64],
+        limb: u32,
+        sh: u32,
+        mask: u64,
+        dst: &mut [u64],
+    ) {
+        unsafe {
+            let n = dst.len();
+            let vmask = _mm512_set1_epi64(mask as i64);
+            let vsh = _mm_cvtsi32_si128(sh as i32);
+            let vsh63 = _mm_cvtsi32_si128(63 - sh as i32);
+            let mut i = 0;
+            while i + 8 <= n {
+                let v = if limb == 0 {
+                    let vlo = _mm512_loadu_epi64(lo.as_ptr().add(i) as *const i64);
+                    let vhi = _mm512_loadu_epi64(hi.as_ptr().add(i) as *const i64);
+                    _mm512_or_si512(
+                        _mm512_srl_epi64(vlo, vsh),
+                        _mm512_slli_epi64(_mm512_sll_epi64(vhi, vsh63), 1),
+                    )
+                } else {
+                    let vhi = _mm512_loadu_epi64(hi.as_ptr().add(i) as *const i64);
+                    _mm512_srl_epi64(vhi, vsh)
+                };
+                let v = _mm512_and_si512(v, vmask);
+                _mm512_storeu_epi64(dst.as_mut_ptr().add(i) as *mut i64, v);
+                i += 8;
+            }
+            extract_tail(lo, hi, limb, sh, mask, dst, i);
+        }
+    }
+
+    /// AVX-512F multiply + shift/carry accumulate sweep (8 lanes per
+    /// iteration); carries come straight from the native unsigned
+    /// compare-into-mask.
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn step_avx512(
+        acc: &mut [u64],
+        w: usize,
+        limb: usize,
+        sh: u32,
+        pa: &[u64],
+        pb: &[u64],
+    ) {
+        unsafe {
+            debug_assert_eq!(acc.len(), 4 * w);
+            let vsh = _mm_cvtsi32_si128(sh as i32);
+            let vshr = _mm_cvtsi32_si128(64 - sh as i32);
+            let base = acc.as_mut_ptr();
+            let mut i = 0;
+            while i + 8 <= w {
+                let va = _mm512_loadu_epi64(pa.as_ptr().add(i) as *const i64);
+                let vb = _mm512_loadu_epi64(pb.as_ptr().add(i) as *const i64);
+                let prod = _mm512_mul_epu32(va, vb); // exact: both < 2^32
+                let p0 = _mm512_sll_epi64(prod, vsh);
+                let p1 = _mm512_srl_epi64(prod, vshr);
+                let r0p = base.add(limb * w + i) as *mut i64;
+                let s0 = _mm512_add_epi64(_mm512_loadu_epi64(r0p), p0);
+                let mut carry = _mm512_maskz_set1_epi64(_mm512_cmplt_epu64_mask(s0, p0), 1);
+                _mm512_storeu_epi64(r0p, s0);
+                if limb + 1 < 4 {
+                    let rp = base.add((limb + 1) * w + i) as *mut i64;
+                    let v1 = _mm512_add_epi64(_mm512_loadu_epi64(rp), p1);
+                    let c1 = _mm512_maskz_set1_epi64(_mm512_cmplt_epu64_mask(v1, p1), 1);
+                    let v2 = _mm512_add_epi64(v1, carry);
+                    let c2 = _mm512_maskz_set1_epi64(_mm512_cmplt_epu64_mask(v2, carry), 1);
+                    _mm512_storeu_epi64(rp, v2);
+                    carry = _mm512_add_epi64(c1, c2);
+                }
+                if limb + 2 < 4 {
+                    let rp = base.add((limb + 2) * w + i) as *mut i64;
+                    let v = _mm512_add_epi64(_mm512_loadu_epi64(rp), carry);
+                    let c = _mm512_maskz_set1_epi64(_mm512_cmplt_epu64_mask(v, carry), 1);
+                    _mm512_storeu_epi64(rp, v);
+                    carry = c;
+                }
+                if limb + 3 < 4 {
+                    let rp = base.add((limb + 3) * w + i) as *mut i64;
+                    _mm512_storeu_epi64(rp, _mm512_add_epi64(_mm512_loadu_epi64(rp), carry));
+                }
+                i += 8;
+            }
+            step_tail(acc, w, limb, sh, pa, pb, i);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::*;
+    use core::arch::aarch64::*;
+
+    /// NEON chunk-extraction sweep (2 lanes per iteration).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn extract_neon(
+        lo: &[u64],
+        hi: &[u64],
+        limb: u32,
+        sh: u32,
+        mask: u64,
+        dst: &mut [u64],
+    ) {
+        unsafe {
+            let n = dst.len();
+            let vmask = vdupq_n_u64(mask);
+            let vshr = vdupq_n_s64(-(sh as i64)); // negative USHL = right shift
+            let vshl63 = vdupq_n_s64((63 - sh) as i64);
+            let vone = vdupq_n_s64(1);
+            let mut i = 0;
+            while i + 2 <= n {
+                let v = if limb == 0 {
+                    let vlo = vld1q_u64(lo.as_ptr().add(i));
+                    let vhi = vld1q_u64(hi.as_ptr().add(i));
+                    vorrq_u64(
+                        vshlq_u64(vlo, vshr),
+                        vshlq_u64(vshlq_u64(vhi, vshl63), vone),
+                    )
+                } else {
+                    vshlq_u64(vld1q_u64(hi.as_ptr().add(i)), vshr)
+                };
+                vst1q_u64(dst.as_mut_ptr().add(i), vandq_u64(v, vmask));
+                i += 2;
+            }
+            extract_tail(lo, hi, limb, sh, mask, dst, i);
+        }
+    }
+
+    /// NEON multiply + shift/carry accumulate sweep (2 lanes per
+    /// iteration): `vmull_u32` over the narrowed low halves is the exact
+    /// 32x32→64 product; unsigned compares give the carries directly.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn step_neon(
+        acc: &mut [u64],
+        w: usize,
+        limb: usize,
+        sh: u32,
+        pa: &[u64],
+        pb: &[u64],
+    ) {
+        unsafe {
+            debug_assert_eq!(acc.len(), 4 * w);
+            let vshl = vdupq_n_s64(sh as i64);
+            let vshr = vdupq_n_s64(-((64 - sh) as i64));
+            let base = acc.as_mut_ptr();
+            let mut i = 0;
+            while i + 2 <= w {
+                let va = vld1q_u64(pa.as_ptr().add(i));
+                let vb = vld1q_u64(pb.as_ptr().add(i));
+                let prod = vmull_u32(vmovn_u64(va), vmovn_u64(vb)); // exact: both < 2^32
+                let p0 = vshlq_u64(prod, vshl);
+                let p1 = if sh == 0 { vdupq_n_u64(0) } else { vshlq_u64(prod, vshr) };
+                let r0p = base.add(limb * w + i);
+                let s0 = vaddq_u64(vld1q_u64(r0p), p0);
+                let mut carry = vshrq_n_u64(vcltq_u64(s0, p0), 63);
+                vst1q_u64(r0p, s0);
+                if limb + 1 < 4 {
+                    let rp = base.add((limb + 1) * w + i);
+                    let v1 = vaddq_u64(vld1q_u64(rp), p1);
+                    let c1 = vshrq_n_u64(vcltq_u64(v1, p1), 63);
+                    let v2 = vaddq_u64(v1, carry);
+                    let c2 = vshrq_n_u64(vcltq_u64(v2, carry), 63);
+                    vst1q_u64(rp, v2);
+                    carry = vaddq_u64(c1, c2);
+                }
+                if limb + 2 < 4 {
+                    let rp = base.add((limb + 2) * w + i);
+                    let v = vaddq_u64(vld1q_u64(rp), carry);
+                    let c = vshrq_n_u64(vcltq_u64(v, carry), 63);
+                    vst1q_u64(rp, v);
+                    carry = c;
+                }
+                if limb + 3 < 4 {
+                    let rp = base.add((limb + 3) * w + i);
+                    vst1q_u64(rp, vaddq_u64(vld1q_u64(rp), carry));
+                }
+                i += 2;
+            }
+            step_tail(acc, w, limb, sh, pa, pb, i);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+define_run!(
+    /// Full-block AVX2 path. SAFETY: caller verified AVX2 is available.
+    run_avx2,
+    x86::extract_avx2,
+    x86::step_avx2
+);
+
+#[cfg(target_arch = "x86_64")]
+define_run!(
+    /// Full-block AVX-512F path. SAFETY: caller verified AVX-512F is
+    /// available.
+    run_avx512,
+    x86::extract_avx512,
+    x86::step_avx512
+);
+
+#[cfg(target_arch = "aarch64")]
+define_run!(
+    /// Full-block NEON path. SAFETY: NEON is baseline on aarch64.
+    run_neon,
+    arm::extract_neon,
+    arm::step_neon
+);
+
+#[cfg(all(test, any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod tests {
+    use super::super::lanes::{LaneScratch, SimdIsa};
+    use super::super::scheme::Scheme;
+    use super::super::{LanePlan, OpClass, SchemeKind};
+    use crate::proput::Rng;
+    use crate::wideint::{U128, U256};
+
+    /// The ISAs this build + CPU can actually dispatch (besides scalar).
+    fn dispatchable() -> Vec<SimdIsa> {
+        [SimdIsa::Avx2, SimdIsa::Avx512, SimdIsa::Neon]
+            .into_iter()
+            .filter(|isa| isa.available())
+            .collect()
+    }
+
+    fn lane_plan(class: OpClass) -> (Scheme, LanePlan) {
+        let scheme = Scheme::new(SchemeKind::Civp, class);
+        let tiles = scheme.tiles();
+        let plan = LanePlan::compile(&scheme, &tiles);
+        (scheme, plan)
+    }
+
+    fn compare_block<const W: usize>(plan: &LanePlan, a: &[U128; W], b: &[U128; W]) {
+        let mut scratch = LaneScratch::<W>::new();
+        let mut want: Vec<U256> = Vec::new();
+        scratch.run(plan, a, b, &mut want);
+        for isa in dispatchable() {
+            let mut got: Vec<U256> = Vec::new();
+            scratch.run_with(plan, a, b, &mut got, isa);
+            assert_eq!(got, want, "isa {} diverges from scalar sweeps", isa.name());
+        }
+    }
+
+    fn splat<const W: usize>(bits: u128) -> [U128; W] {
+        [U128::from_u128(bits); W]
+    }
+
+    /// All-ones operands: every chunk at its max, so every step's
+    /// product is maximal and the add/carry chain ripples on every lane.
+    #[test]
+    fn carry_chain_pattern_matches_scalar() {
+        for class in OpClass::ALL {
+            let (scheme, plan) = lane_plan(class);
+            let ones = (1u128 << scheme.eff_bits.min(127)) - 1;
+            compare_block::<8>(&plan, &splat(ones), &splat(ones));
+            compare_block::<16>(&plan, &splat(ones), &splat(ones));
+            compare_block::<32>(&plan, &splat(ones), &splat(ones));
+        }
+    }
+
+    /// Quad operands with only the top limb populated: accumulation lands
+    /// in the highest product limbs, exercising the `limb + k < 4` row
+    /// clipping and the final carry ripple into limb 3.
+    #[test]
+    fn top_limb_overflow_pattern_matches_scalar() {
+        let (scheme, plan) = lane_plan(OpClass::Quad);
+        let top = ((1u128 << (scheme.eff_bits - 64)) - 1) << 64;
+        compare_block::<8>(&plan, &splat(top), &splat(top));
+        compare_block::<16>(&plan, &splat(top), &splat(top));
+        compare_block::<32>(&plan, &splat(top), &splat(top));
+    }
+
+    /// Randomized operands per class: every dispatchable ISA at every
+    /// width must match the scalar sweeps bit-for-bit.
+    #[test]
+    fn randomized_blocks_match_scalar() {
+        let mut rng = Rng::new(0x51D_0001);
+        for class in OpClass::ALL {
+            let (scheme, plan) = lane_plan(class);
+            let mask = if scheme.eff_bits >= 128 {
+                u128::MAX
+            } else {
+                (1u128 << scheme.eff_bits) - 1
+            };
+            for _ in 0..16 {
+                let mut a = [U128::ZERO; 32];
+                let mut b = [U128::ZERO; 32];
+                for l in 0..32 {
+                    a[l] = U128::from_u128(
+                        (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & mask,
+                    );
+                    b[l] = U128::from_u128(
+                        (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & mask,
+                    );
+                }
+                compare_block::<32>(&plan, &a, &b);
+                let a8: [U128; 8] = a[..8].try_into().unwrap();
+                let b8: [U128; 8] = b[..8].try_into().unwrap();
+                compare_block::<8>(&plan, &a8, &b8);
+                let a16: [U128; 16] = a[..16].try_into().unwrap();
+                let b16: [U128; 16] = b[..16].try_into().unwrap();
+                compare_block::<16>(&plan, &a16, &b16);
+            }
+        }
+    }
+}

@@ -19,7 +19,7 @@ use civp::cluster::{Cluster, ClusterConfig, RouterPolicy};
 use civp::error::{bail, err, Result};
 use civp::config::ServiceConfig;
 use civp::coordinator::{orient2d_adaptive, AdaptiveStats, BackendChoice, Service};
-use civp::decomp::{AnalysisRow, OpClass, SchemeKind};
+use civp::decomp::{AnalysisRow, LaneConfig, LaneWidth, OpClass, SchemeKind};
 use civp::runtime::EngineHandle;
 use civp::trace::{TraceGen, WorkloadSpec};
 use std::sync::Arc;
@@ -66,6 +66,9 @@ COMMANDS
                --cores <n>          work-stealing lane-executor cores
                                     (0 = single-threaded, the default)
                --par-threshold <n>  min batch size that fans out (default 256)
+               --lane-width <n>     SoA lane-block width: 8|16|32 (default 8);
+                                    wider blocks feed the SIMD sweeps when the
+                                    `simd` build and the host ISA allow it
   cluster      run a synthetic trace through the sharded cluster
                --shards <n>         shard count (default 4)
                --policy <p>         round-robin|least-loaded|precision-affinity
@@ -75,7 +78,7 @@ COMMANDS
                --faults <n>         fault count for --degrade (default 8)
                --backend <b>        native|pjrt (default native)
                (also accepts serve's --config/--requests/--workload/--mix/
-                --artifacts/--cores/--par-threshold)
+                --artifacts/--cores/--par-threshold/--lane-width)
   analyze      print the paper's block/utilization analysis table
   predicates   adaptive-precision orient2d demo
                --points <n>         number of predicates (default 2000)
@@ -118,21 +121,38 @@ fn load_config(args: &Args) -> Result<ServiceConfig> {
     if let Some(n) = args.options.get("par-threshold") {
         cfg.par_threshold = n.parse()?;
     }
+    if let Some(n) = args.options.get("lane-width") {
+        cfg.lane_width = n.parse()?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
-/// Resolve `--backend` (+ `--cores`) into a worker-backend choice. With
-/// `--cores N` (N > 0) the native backend fans large batches out across a
-/// shared work-stealing lane executor; results stay bit-for-bit identical
-/// to the single-threaded path.
+/// Resolve the configured lane width plus the best vector ISA the host
+/// offers (AVX-512 → AVX2 → scalar on x86_64, NEON on aarch64; always
+/// scalar without the `simd` feature).
+fn lane_config(cfg: &ServiceConfig) -> Result<LaneConfig> {
+    let width = LaneWidth::from_width(cfg.lane_width)
+        .ok_or_else(|| err!("--lane-width must be 8, 16 or 32 (got {})", cfg.lane_width))?;
+    Ok(LaneConfig::detect(width))
+}
+
+/// Resolve `--backend` (+ `--cores`/`--lane-width`) into a worker-backend
+/// choice. With `--cores N` (N > 0) the native backend fans large batches
+/// out across a shared work-stealing lane executor; results stay
+/// bit-for-bit identical to the single-threaded path for every width and
+/// dispatched ISA.
 fn make_backend(args: &Args, cfg: &ServiceConfig) -> Result<BackendChoice> {
     Ok(match args.get_str("backend", "native").as_str() {
         "native" if cfg.cores > 0 => BackendChoice::NativeParallel(
             cfg.scheme,
-            Arc::new(civp::decomp::Executor::with_threshold(cfg.cores, cfg.par_threshold)),
+            Arc::new(civp::decomp::Executor::with_config(
+                cfg.cores,
+                cfg.par_threshold,
+                lane_config(cfg)?,
+            )),
         ),
-        "native" => BackendChoice::Native(cfg.scheme),
+        "native" => BackendChoice::NativeLane(cfg.scheme, lane_config(cfg)?),
         "pjrt" => BackendChoice::Pjrt(EngineHandle::load(cfg.artifacts_dir.clone())?),
         other => bail!("unknown backend {other:?}"),
     })
@@ -142,12 +162,14 @@ fn serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let backend = make_backend(args, &cfg)?;
     println!(
-        "serving {} requests of workload `{}` (scheme {:?}, fabric {:?}, cores {})",
+        "serving {} requests of workload `{}` (scheme {:?}, fabric {:?}, cores {}, \
+         lane kernel {})",
         cfg.requests,
         cfg.workload.name(),
         cfg.scheme,
         cfg.fabric,
-        cfg.cores
+        cfg.cores,
+        backend.lane_config().map_or_else(|| "pjrt".to_string(), |l| l.kernel_name())
     );
     let svc = Service::start(&cfg, backend);
     let mut gen = TraceGen::new(cfg.seed, cfg.mix(), 0);

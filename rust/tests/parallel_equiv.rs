@@ -9,7 +9,8 @@
 //! changes wall-clock time and *nothing else*.
 
 use civp::decomp::{
-    chunk_plan, DecompMul, ExecStats, Executor, OpClass, PlanCache, SchemeKind, LANES,
+    chunk_plan, DecompMul, ExecStats, Executor, LaneConfig, LaneWidth, OpClass, PlanCache,
+    SchemeKind, SimdIsa, LANES,
 };
 use civp::fpu::{FpFormat, FpuBatch, RoundMode, BF16, DOUBLE, HALF, QUAD, SINGLE};
 use civp::proput::{forall, Rng};
@@ -91,10 +92,79 @@ fn executor_matches_sequential_for_worker_counts_1_through_8() {
         let c = exec.counters();
         assert!(c.parallel_batches >= 2, "workers={workers}: {c:?}");
         let full = 512 - 512 % LANES;
-        let (_, chunks) = chunk_plan(full, workers);
+        let (_, chunks) = chunk_plan(full, workers, LANES);
         assert!(chunks >= 2, "chunk_plan must split 512 at workers={workers}");
         let ran: u64 = c.workers.iter().map(|w| w.executed).sum::<u64>() + c.helper_executed;
         assert!(ran > 0, "workers={workers}: no chunk ever executed");
+    }
+}
+
+#[test]
+fn executor_matches_sequential_every_lane_width_and_isa() {
+    // The width-parameterized engine keeps the executor's one hard
+    // promise at every block width × every ISA this build + CPU can
+    // dispatch: chunks stay block-aligned to the configured width, and
+    // products / order / merged stats are identical to the scalar
+    // sequential path. Sizes cover every residue class mod the widest
+    // block so each width sees full blocks, a ragged lane tail, and the
+    // chunked fan-out path.
+    let mut rng = Rng::new(0x726);
+    for width in LaneWidth::ALL {
+        for isa in SimdIsa::ALL {
+            if !isa.available() {
+                continue;
+            }
+            let lane = LaneConfig { width, isa };
+            let exec = Executor::with_config(3, 64, lane);
+            assert_eq!(exec.lane_config(), lane);
+            for prec in [OpClass::Single, OpClass::Double, OpClass::Quad] {
+                let plan = PlanCache::get(SchemeKind::Civp, prec);
+                for n in [0, 1, width.width() - 1, width.width() + 1, 256, 256 + 7, 777] {
+                    let a: Vec<U128> = (0..n).map(|_| rng.sig(prec.sig_bits())).collect();
+                    let b: Vec<U128> = (0..n).map(|_| rng.sig(prec.sig_bits())).collect();
+                    let (out_seq, seq) = run_seq(&plan, &a, &b);
+                    let (out_par, par) = run_par(&exec, &plan, &a, &b);
+                    assert_eq!(out_seq, out_par, "{} {prec:?} n={n}", lane.kernel_name());
+                    assert_eq!(seq, par, "{} {prec:?} n={n} stats", lane.kernel_name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fpu_batch_matches_across_lane_widths_end_to_end() {
+    // Full IEEE pipeline: a parallel FpuBatch at each width ≡ the plain
+    // single-threaded one — packed results, flag unions, and stats —
+    // over nasty inputs (specials, subnormals).
+    let mut rng = Rng::new(0x727);
+    for width in LaneWidth::ALL {
+        let lane = LaneConfig::detect(width);
+        let exec = Arc::new(Executor::with_config(4, 16, lane));
+        for fmt in [&HALF, &DOUBLE, &QUAD] {
+            let n = 300 + width.width();
+            let a: Vec<u128> = (0..n).map(|_| nasty_packed(&mut rng, fmt)).collect();
+            let b: Vec<u128> = (0..n).map(|_| nasty_packed(&mut rng, fmt)).collect();
+
+            let mut par = FpuBatch::new(DecompMul::with_executor(SchemeKind::Civp, exec.clone()));
+            let mut out_par = Vec::new();
+            let flags_par = par.mul_batch_bits(fmt, &a, &b, RoundMode::NearestEven, &mut out_par);
+
+            let mut seq = FpuBatch::new(DecompMul::new(SchemeKind::Civp));
+            let mut out_seq = Vec::new();
+            let flags_seq = seq.mul_batch_bits(fmt, &a, &b, RoundMode::NearestEven, &mut out_seq);
+
+            assert_eq!(out_par, out_seq, "{} {}", lane.kernel_name(), fmt.name);
+            assert_eq!(flags_par, flags_seq, "{} {} flags", lane.kernel_name(), fmt.name);
+            assert_eq!(
+                par.multiplier().stats,
+                seq.multiplier().stats,
+                "{} {} stats",
+                lane.kernel_name(),
+                fmt.name
+            );
+        }
+        assert!(exec.counters().parallel_batches > 0, "{width:?} never fanned out");
     }
 }
 

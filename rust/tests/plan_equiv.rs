@@ -11,7 +11,8 @@
 //! flag unions included).
 
 use civp::decomp::{
-    execute, DecompMul, ExecStats, OpClass, Plan, PlanCache, Scheme, SchemeKind, LANES,
+    execute, DecompMul, ExecStats, LaneConfig, LaneWidth, OpClass, Plan, PlanCache, Scheme,
+    SchemeKind, SimdIsa, LANES,
 };
 use civp::fpu::{
     mul_bits, mul_bits_batch, DirectMul, Flags, Fp128, Fp32, Fp64, FpFormat, FpuBatch, RoundMode,
@@ -227,6 +228,90 @@ fn execute_lanes_matches_per_op_all_schemes_and_tails() {
                     assert_eq!(out[i], want, "{kind:?} {prec:?} n={n} i={i}");
                 }
                 assert_stats_eq(&lane_stats, &scalar_stats, &format!("{kind:?} {prec:?} n={n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn execute_lanes_cfg_every_width_isa_and_tail_residue() {
+    // The width-parameterized engine at every block width × every ISA
+    // this build + CPU can dispatch, pinned against the scalar per-op
+    // oracle at **every** tail residue class `n % W` (one full block
+    // plus a tail of each possible length, including the block-aligned
+    // residue 0). Products and merged stats both.
+    let mut rng = Rng::new(0x715);
+    for width in LaneWidth::ALL {
+        let w = width.width();
+        for isa in SimdIsa::ALL {
+            if !isa.available() {
+                continue;
+            }
+            let cfg = LaneConfig { width, isa };
+            for prec in OpClass::ALL {
+                let plan = PlanCache::get(SchemeKind::Civp, prec);
+                for residue in 0..w {
+                    let n = w + residue;
+                    let a: Vec<U128> = (0..n).map(|_| rng.sig(prec.sig_bits())).collect();
+                    let b: Vec<U128> = (0..n).map(|_| rng.sig(prec.sig_bits())).collect();
+                    let mut lane_stats = ExecStats::default();
+                    let mut out: Vec<U256> = Vec::new();
+                    plan.execute_lanes_cfg(cfg, &a, &b, &mut lane_stats, &mut out);
+                    assert_eq!(out.len(), n);
+                    let mut scalar_stats = ExecStats::default();
+                    for i in 0..n {
+                        let want = plan.execute(a[i], b[i], &mut scalar_stats);
+                        assert_eq!(
+                            out[i],
+                            want,
+                            "{} {prec:?} n={n} i={i}",
+                            cfg.kernel_name()
+                        );
+                    }
+                    assert_stats_eq(
+                        &lane_stats,
+                        &scalar_stats,
+                        &format!("{} {prec:?} n={n}", cfg.kernel_name()),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn execute_lanes_cfg_edge_significands_every_width() {
+    // Worst-case bit patterns (all-ones carry chains, single bits, top-
+    // limb-only values) through every width × dispatched ISA — the lane
+    // positions where SIMD carry propagation bugs would live.
+    for width in LaneWidth::ALL {
+        for isa in SimdIsa::ALL {
+            if !isa.available() {
+                continue;
+            }
+            let cfg = LaneConfig { width, isa };
+            for prec in [OpClass::Double, OpClass::Quad] {
+                let edges = edge_sigs(prec.sig_bits());
+                let plan = PlanCache::get(SchemeKind::Civp, prec);
+                let mut a = Vec::new();
+                let mut b = Vec::new();
+                for &x in &edges {
+                    for &y in &edges {
+                        a.push(x);
+                        b.push(y);
+                    }
+                }
+                let mut stats = ExecStats::default();
+                let mut out: Vec<U256> = Vec::new();
+                plan.execute_lanes_cfg(cfg, &a, &b, &mut stats, &mut out);
+                for i in 0..a.len() {
+                    assert_eq!(
+                        out[i],
+                        mul_u128(a[i], b[i]),
+                        "{} {prec:?} i={i}",
+                        cfg.kernel_name()
+                    );
+                }
             }
         }
     }
