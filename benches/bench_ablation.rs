@@ -60,7 +60,7 @@ fn main() {
             queue_depth: 8192.max(max_batch),
             ..Default::default()
         };
-        let svc = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
+        let svc = Service::start(&cfg, BackendChoice::native(SchemeKind::Civp));
         let trace = TraceGen::new(0xE8, WorkloadSpec::Graphics.mix(), 0).take(10_000);
         let t0 = Instant::now();
         let mut pending = Vec::new();

@@ -110,7 +110,7 @@ fn main() {
     for shards in SHARD_COUNTS {
         let cluster = Cluster::start(
             &cluster_cfg(shards, RouterPolicy::LeastLoaded),
-            BackendChoice::Native(SchemeKind::Civp),
+            BackendChoice::native(SchemeKind::Civp),
         );
         let wall = drive(&cluster, &trace);
         let report = cluster.shutdown();
@@ -145,7 +145,7 @@ fn main() {
     section("policy comparison at 4 shards (mixed workload)");
     for policy in RouterPolicy::ALL {
         let cluster =
-            Cluster::start(&cluster_cfg(4, policy), BackendChoice::Native(SchemeKind::Civp));
+            Cluster::start(&cluster_cfg(4, policy), BackendChoice::native(SchemeKind::Civp));
         let wall = drive(&cluster, &trace);
         let report = cluster.shutdown();
         assert_eq!(report.total_ops, n_requests as u64);

@@ -62,7 +62,7 @@ fn main() {
 
         // --- serving layer (native backend) ---------------------------
         let cfg = ServiceConfig::default();
-        let svc = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
+        let svc = Service::start(&cfg, BackendChoice::native(SchemeKind::Civp));
         let wall = drive(&svc, &trace);
         let rep = svc.shutdown();
         println!(

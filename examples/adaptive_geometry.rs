@@ -67,7 +67,7 @@ fn hull(points: &[P], mut orient: impl FnMut(P, P, P) -> i32) -> Vec<P> {
 
 fn main() {
     let cfg = ServiceConfig::default();
-    let svc = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
+    let svc = Service::start(&cfg, BackendChoice::native(SchemeKind::Civp));
     let mut stats = AdaptiveStats::default();
 
     // Points on a tilted lattice: coordinates i*2^12 + j*2^-26 (exactly

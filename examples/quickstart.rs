@@ -115,7 +115,7 @@ fn main() {
     // ------------------------------------------------------------------
     println!("\n== 4. variable-precision multiplication service ==");
     let cfg = ServiceConfig::default();
-    let svc = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
+    let svc = Service::start(&cfg, BackendChoice::native(SchemeKind::Civp));
     let product = svc.mul_blocking(
         OpClass::Double,
         (6.0f64).to_bits() as u128,

@@ -130,7 +130,7 @@ fn main() {
     // 2. Fabric comparison: CIVP vs legacy 18x18 on the same trace.
     // ------------------------------------------------------------------
     let civp_cfg = ServiceConfig::default();
-    let svc = Service::start(&civp_cfg, BackendChoice::Native(SchemeKind::Civp));
+    let svc = Service::start(&civp_cfg, BackendChoice::native(SchemeKind::Civp));
     let (wall, civp_results) = drive(&svc, &trace);
     report("native backend, CIVP fabric", svc, wall, trace.len());
 
@@ -139,7 +139,7 @@ fn main() {
         fabric: FabricKind::Legacy,
         ..ServiceConfig::default()
     };
-    let svc = Service::start(&legacy_cfg, BackendChoice::Native(SchemeKind::Baseline18));
+    let svc = Service::start(&legacy_cfg, BackendChoice::native(SchemeKind::Baseline18));
     let (wall, legacy_results) = drive(&svc, &trace);
     assert_eq!(civp_results, legacy_results, "organizations must agree bit-for-bit");
     report("native backend, legacy 18x18 fabric", svc, wall, trace.len());

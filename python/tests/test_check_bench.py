@@ -177,9 +177,96 @@ def test_strict_mode_requires_parallel_artifact(tmp_path):
         "BENCH_cluster.json",
         "BENCH_lanes.json",
         "BENCH_formats.json",
+        "BENCH_net.json",
     ]
     for name in required:
         write_artifact(tmp_path / name, [row("dummy/" + name, 1.0)])
     code, out = run_gate(tmp_path)
     assert code == 1, out
     assert "required artifact BENCH_parallel.json missing" in out
+
+
+def count_row(name, n):
+    """A loadgen count row: the count lives in total_ops, timings zeroed."""
+    return {
+        "name": name,
+        "ns_per_op_p50": 0.0,
+        "ns_per_op_mean": 0.0,
+        "ns_per_op_min": 0.0,
+        "ops_per_sec": 0.0,
+        "total_ops": n,
+    }
+
+
+def net_rows(mix, p50, p99, p999, sent, ok, saturated, other, lost):
+    prefix = f"net/{mix}"
+    return [
+        row(f"{prefix}/latency-p50", p50),
+        row(f"{prefix}/latency-p99", p99),
+        row(f"{prefix}/latency-p999", p999),
+        row(f"{prefix}/throughput", 500.0),
+        count_row(f"{prefix}/frames-sent", sent),
+        count_row(f"{prefix}/replies-ok", ok),
+        count_row(f"{prefix}/replies-saturated", saturated),
+        count_row(f"{prefix}/replies-other", other),
+        count_row(f"{prefix}/lost", lost),
+    ]
+
+
+GOOD_NET = net_rows("mixed", 1000.0, 5000.0, 9000.0, 2000, 1900, 100, 0, 0) + net_rows(
+    "ml", 800.0, 4000.0, 7000.0, 2000, 2000, 0, 0, 0
+)
+
+
+def test_net_gate_passes_on_conserved_replies(tmp_path):
+    art = write_artifact(tmp_path / "BENCH_net.json", GOOD_NET)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 0, out
+    assert "net percentile order + reply conservation over 2 mix(es)" in out
+
+
+def test_net_gate_fails_on_percentile_inversion(tmp_path):
+    bad = net_rows("mixed", 5000.0, 1000.0, 9000.0, 100, 100, 0, 0, 0)  # p50 > p99
+    art = write_artifact(tmp_path / "BENCH_net.json", bad)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "latency percentiles out of order" in out
+
+
+def test_net_gate_fails_on_lost_replies(tmp_path):
+    bad = net_rows("mixed", 1000.0, 5000.0, 9000.0, 2000, 1990, 0, 0, 10)
+    art = write_artifact(tmp_path / "BENCH_net.json", bad)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "10 lost replies" in out
+
+
+def test_net_gate_fails_when_replies_not_conserved(tmp_path):
+    # Saturated replies must show up in the totals: ok + saturated +
+    # other + lost != sent means the server double-replied or the
+    # generator miscounted.
+    bad = net_rows("mixed", 1000.0, 5000.0, 9000.0, 2000, 1900, 50, 0, 0)
+    art = write_artifact(tmp_path / "BENCH_net.json", bad)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "replies not conserved" in out
+
+
+def test_net_gate_fails_on_missing_count_row(tmp_path):
+    rows = [r for r in GOOD_NET if r["name"] != "net/mixed/replies-saturated"]
+    art = write_artifact(tmp_path / "BENCH_net.json", rows)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "count row `replies-saturated` missing" in out
+
+
+def test_update_never_baselines_net_rows(tmp_path):
+    # net latencies are wall time over a real socket — pinning them would
+    # gate PRs on runner load.
+    rows = GOOD_NET + [row("lanes/civp-double/lane-path", 80.0)]
+    art = write_artifact(tmp_path / "BENCH_net.json", rows)
+    code, out = run_gate(tmp_path, art.name, "--update", "--baseline", "BL.json")
+    assert code == 0, out
+    names = [r["name"] for r in json.loads((tmp_path / "BL.json").read_text())]
+    assert not any(n.startswith("net/") for n in names), names
+    assert "lanes/civp-double/lane-path" in names

@@ -48,6 +48,11 @@ artifacts (CI does this with CIVP_BENCH_QUICK=1). Three layers of checks:
      largest batch reaches >= 2x speedup at 4 cores (the `bench_parallel`
      acceptance gate). The `parallel/wall-*` rows are real wall time and
      are never baselined — CI runners may have fewer cores than workers.
+   * network-edge loadgen rows (`net/<mix>/...`, from `civp-server
+     loadgen`): latency percentiles in order (p50 <= p99 <= p999), zero
+     lost replies, and reply conservation (ok + saturated + other + lost
+     == frames sent). Latency/throughput magnitudes are wall time over a
+     real socket, so `net/` rows are never baselined.
 
 When run with no file arguments (the CI shape), the three artifacts the
 bench targets write are REQUIRED to exist, and every baselined
@@ -74,6 +79,7 @@ REQUIRED_FILES = (
     "BENCH_lanes.json",
     "BENCH_formats.json",
     "BENCH_parallel.json",
+    "BENCH_net.json",
 )
 MODEL_SCALING_RE = re.compile(r"^cluster/mixed/model-scaling-(\d+)shard$")
 PARALLEL_SCALING_RE = re.compile(r"^parallel/model-scaling-b(\d+)-(\d+)core$")
@@ -85,7 +91,7 @@ PARALLEL_MIN_SPEEDUP = 2.0
 # pjrt row does not exist on runners without artifacts. --update never
 # writes these into the baseline.
 UNBASELINEABLE_RE = re.compile(
-    r"^(e2e/|cluster/mixed/wall-|cluster/mixed/policy-|parallel/wall-|lanes/simd-)"
+    r"^(e2e/|cluster/mixed/wall-|cluster/mixed/policy-|parallel/wall-|lanes/simd-|net/)"
 )
 # Headroom --update applies on top of the measured p50 so a baseline
 # refreshed on a fast machine doesn't fail the 25% gate on a slower one.
@@ -332,6 +338,65 @@ def check_parallel_scaling(current):
     print(f"parallel scaling ({status}): best speedups {curve}")
 
 
+NET_LATENCY_RE = re.compile(r"^net/([^/]+)/latency-p50$")
+# Count rows emitted by the load generator, carrying their count in
+# `total_ops` (latencies zeroed): conservation can be checked without
+# parsing row names beyond the suffix.
+NET_COUNT_SUFFIXES = ("frames-sent", "replies-ok", "replies-saturated", "replies-other", "lost")
+
+
+def check_net_invariants(current, totals):
+    """Machine-independent gates over the loadgen rows (`net/<mix>/...`).
+
+    Latency and throughput magnitudes are runner-dependent (never
+    baselined), but three properties hold on any machine:
+
+    * percentile ordering: p50 <= p99 <= p999 within one run;
+    * zero lost replies: every frame the generator sent was answered
+      (a lost reply means the server dropped a connection instead of
+      answering with a status code);
+    * reply conservation: ok + saturated + other + lost == frames sent —
+      `Saturated` is an answered admission outcome, so saturation shifts
+      replies between statuses without changing the total.
+    """
+    before = len(failures)
+    mixes = sorted(m.group(1) for m in filter(None, map(NET_LATENCY_RE.match, current)))
+    for mix in mixes:
+        prefix = f"net/{mix}"
+        p50 = current.get(f"{prefix}/latency-p50")
+        p99 = current.get(f"{prefix}/latency-p99")
+        p999 = current.get(f"{prefix}/latency-p999")
+        if None in (p99, p999):
+            fail(f"{prefix}: latency-p50 present but p99/p999 missing")
+            continue
+        if not p50 <= p99 <= p999:
+            fail(
+                f"{prefix}: latency percentiles out of order: "
+                f"p50={p50:.0f} p99={p99:.0f} p999={p999:.0f} ns"
+            )
+        counts = {}
+        for suffix in NET_COUNT_SUFFIXES:
+            name = f"{prefix}/{suffix}"
+            if name not in totals:
+                fail(f"{prefix}: count row `{suffix}` missing")
+                break
+            counts[suffix] = totals[name]
+        if len(counts) != len(NET_COUNT_SUFFIXES):
+            continue
+        if counts["lost"] != 0:
+            fail(f"{prefix}: {counts['lost']} lost replies (must be 0)")
+        answered = sum(counts[s] for s in NET_COUNT_SUFFIXES if s != "frames-sent")
+        if answered != counts["frames-sent"]:
+            fail(
+                f"{prefix}: replies not conserved: ok+saturated+other+lost = {answered} "
+                f"!= frames-sent = {counts['frames-sent']}"
+            )
+        if counts["frames-sent"] == 0:
+            fail(f"{prefix}: loadgen sent no frames")
+    if mixes and len(failures) == before:
+        print(f"invariant ok: net percentile order + reply conservation over {len(mixes)} mix(es)")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("files", nargs="*", help="BENCH_*.json artifacts (default: glob repo root)")
@@ -364,9 +429,11 @@ def main():
                 fail(f"required artifact {required} missing — did its bench target run?")
 
     current = {}
+    totals = {}
     for path in files:
         for row in load_rows(path):
             current[row["name"]] = row["ns_per_op_p50"]
+            totals[row["name"]] = row.get("total_ops", 0)
 
     if args.update:
         rows = [
@@ -416,6 +483,7 @@ def main():
     check_simd_invariants(current)
     check_cluster_scaling(current)
     check_parallel_scaling(current)
+    check_net_invariants(current, totals)
 
     if failures:
         print(f"\nbench gate FAILED: {len(failures)} failure(s)")

@@ -1,10 +1,22 @@
-//! Minimal argument parser (offline build — no clap).
+//! Minimal argument parser (offline build — no clap), plus the shared
+//! flag surface every serving command resolves through.
 //!
-//! Supports `binary <command> [--key value] [--flag]` invocations, which is
-//! all `civp-server` needs.
+//! Supports `binary <command> [--key value] [--flag]` invocations. The
+//! `serve`, `cluster`, `serve-net` and `loadgen` commands all accept the
+//! same common knobs (`--mix`, `--cores`, `--lane-width`, `--policy`,
+//! `--inflight`, ...); [`Args::service_config`], [`Args::backend_choice`]
+//! and [`Args::cluster_config`] are the one parsing path those knobs go
+//! through, so a flag means the same thing under every command.
 
-use crate::error::{bail, Result};
+use crate::cluster::{ClusterConfig, RouterPolicy};
+use crate::config::ServiceConfig;
+use crate::coordinator::{BackendChoice, NativeOptions};
+use crate::decomp::{Executor, LaneConfig, LaneWidth, OpClass};
+use crate::error::{bail, err, Result};
+use crate::runtime::EngineHandle;
+use crate::trace::WorkloadSpec;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Parsed command line: a positional command plus `--key value` options.
 #[derive(Clone, Debug, Default)]
@@ -63,6 +75,120 @@ impl Args {
     pub fn get_flag(&self, key: &str) -> bool {
         self.options.get(key).map(|v| v == "true").unwrap_or(false)
     }
+
+    /// Float option with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    /// Resolve the shared service knobs — `--config`, `--requests`,
+    /// `--workload`, `--mix`, `--artifacts`, `--cores`,
+    /// `--par-threshold`, `--lane-width` — into a validated
+    /// [`ServiceConfig`]. Every serving command parses through here.
+    pub fn service_config(&self) -> Result<ServiceConfig> {
+        let mut cfg = match self.options.get("config") {
+            Some(path) => ServiceConfig::from_file(path)?,
+            None => ServiceConfig::default(),
+        };
+        if let Some(n) = self.options.get("requests") {
+            cfg.requests = n.parse()?;
+        }
+        if let Some(w) = self.options.get("workload") {
+            cfg.workload =
+                WorkloadSpec::parse(w).ok_or_else(|| err!("unknown workload {w:?}"))?;
+        }
+        if let Some(spec) = self.options.get("mix") {
+            // `--mix half=0.2,bf16=0.3,...` — explicit per-class weights
+            // over the open registry; unlisted classes get zero mass.
+            for part in spec.split(',').filter(|p| !p.is_empty()) {
+                let (name, weight) = part
+                    .split_once('=')
+                    .ok_or_else(|| err!("--mix entries are class=weight, got {part:?}"))?;
+                let class = OpClass::parse(name.trim())
+                    .ok_or_else(|| err!("unknown op class {name:?} in --mix"))?;
+                cfg.set_mix_weight(class, weight.trim().parse()?)?;
+            }
+        }
+        if let Some(dir) = self.options.get("artifacts") {
+            cfg.artifacts_dir = dir.clone();
+        }
+        if let Some(n) = self.options.get("cores") {
+            cfg.cores = n.parse()?;
+        }
+        if let Some(n) = self.options.get("par-threshold") {
+            cfg.par_threshold = n.parse()?;
+        }
+        if let Some(n) = self.options.get("lane-width") {
+            cfg.lane_width = n.parse()?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Resolve `--backend` (+ the lane/executor knobs already folded into
+    /// `cfg`) into a [`BackendChoice`]. With `--cores N` (N > 0) the
+    /// native options carry a shared work-stealing lane executor; results
+    /// stay bit-for-bit identical to the single-threaded path for every
+    /// width and dispatched ISA.
+    pub fn backend_choice(&self, cfg: &ServiceConfig) -> Result<BackendChoice> {
+        Ok(match self.get_str("backend", "native").as_str() {
+            "native" => {
+                let mut opts = NativeOptions::new(cfg.scheme);
+                opts = if cfg.cores > 0 {
+                    opts.executor(Arc::new(Executor::with_config(
+                        cfg.cores,
+                        cfg.par_threshold,
+                        lane_config(cfg)?,
+                    )))
+                } else {
+                    opts.lane_config(lane_config(cfg)?)
+                };
+                BackendChoice::Native(opts)
+            }
+            "pjrt" => BackendChoice::Pjrt(EngineHandle::load(cfg.artifacts_dir.clone())?),
+            other => bail!("unknown backend {other:?}"),
+        })
+    }
+
+    /// Resolve the cluster knobs — `--shards`, `--policy`, `--inflight`,
+    /// `--spares` — around an already-resolved per-shard service config.
+    pub fn cluster_config(&self, service: ServiceConfig) -> Result<ClusterConfig> {
+        let policy_name = self.get_str("policy", "least-loaded");
+        let policy = RouterPolicy::parse(&policy_name)
+            .ok_or_else(|| err!("unknown policy {policy_name:?} (try `help`)"))?;
+        Ok(ClusterConfig {
+            shards: self.get_usize("shards", 4)?,
+            service,
+            policy,
+            max_inflight: self.get_usize("inflight", 4096)? as u64,
+            spares_per_block: self.get_usize("spares", 2)? as u32,
+        })
+    }
+
+    /// Resolve `--workloads` (comma-separated [`WorkloadSpec`] names) for
+    /// the load generator; `default` when absent.
+    pub fn workloads(&self, default: &str) -> Result<Vec<WorkloadSpec>> {
+        self.get_str("workloads", default)
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                WorkloadSpec::parse(s.trim())
+                    .ok_or_else(|| err!("unknown workload {s:?} in --workloads"))
+            })
+            .collect()
+    }
+}
+
+/// Resolve the configured lane width plus the best vector ISA the host
+/// offers (AVX-512 → AVX2 → scalar on x86_64, NEON on aarch64; always
+/// scalar without the `simd` feature).
+fn lane_config(cfg: &ServiceConfig) -> Result<LaneConfig> {
+    let width = LaneWidth::from_width(cfg.lane_width)
+        .ok_or_else(|| err!("--lane-width must be 8, 16 or 32 (got {})", cfg.lane_width))?;
+    Ok(LaneConfig::detect(width))
 }
 
 #[cfg(test)]
@@ -95,5 +221,57 @@ mod tests {
         let a = p(&["run", "--flag", "--n", "3"]);
         assert!(a.get_flag("flag"));
         assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn shared_service_knobs_resolve_one_way() {
+        let a = p(&[
+            "serve",
+            "--requests",
+            "123",
+            "--workload",
+            "ml",
+            "--cores",
+            "2",
+            "--lane-width",
+            "16",
+            "--mix",
+            "half=0.5,single=0.5",
+        ]);
+        let cfg = a.service_config().unwrap();
+        assert_eq!(cfg.requests, 123);
+        assert_eq!(cfg.cores, 2);
+        assert_eq!(cfg.lane_width, 16);
+        // --mix overrides the named workload's weights entirely.
+        assert!(cfg.mix().weight(OpClass::Half) > 0.0);
+        let backend = a.backend_choice(&cfg).unwrap();
+        assert!(backend.executor().is_some(), "--cores 2 must share an executor");
+        assert!(p(&["serve", "--workload", "nope"]).service_config().is_err());
+        assert!(p(&["serve", "--mix", "half-0.5"]).service_config().is_err());
+    }
+
+    #[test]
+    fn cluster_knobs_resolve_under_any_command() {
+        for cmd in ["cluster", "serve-net", "loadgen"] {
+            let a = p(&[cmd, "--shards", "2", "--policy", "round-robin", "--inflight", "7"]);
+            let ccfg = a.cluster_config(ServiceConfig::default()).unwrap();
+            assert_eq!(ccfg.shards, 2);
+            assert_eq!(ccfg.policy, RouterPolicy::RoundRobin);
+            assert_eq!(ccfg.max_inflight, 7);
+        }
+        let bad = p(&["cluster", "--policy", "nope"]);
+        assert!(bad.cluster_config(ServiceConfig::default()).is_err());
+    }
+
+    #[test]
+    fn workload_lists_and_floats() {
+        let a = p(&["loadgen", "--workloads", "mixed, ml", "--rate", "2.5"]);
+        let specs = a.workloads("mixed").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name(), "mixed");
+        assert_eq!(specs[1].name(), "ml");
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_f64("missing", 1.5).unwrap(), 1.5);
+        assert!(p(&["loadgen", "--workloads", "nope"]).workloads("mixed").is_err());
     }
 }

@@ -42,46 +42,15 @@ pub use router::{Router, RouterPolicy, MAX_SHARDS};
 pub use shard::{DegradeOutcome, Shard, ShardState, FULL_WEIGHT};
 
 use crate::config::ServiceConfig;
-use crate::coordinator::{
-    BackendChoice, RecvError, ReplyHandle, Response, SubmitError, TryRecvError,
-};
+use crate::coordinator::{BackendChoice, RecvError, ReplyHandle, Response, TryRecvError};
 use crate::decomp::{BlockKind, OpClass};
 use crate::fabric::FabricOp;
 use crate::metrics::{Counter, Gauge, Registry, Snapshot};
 use crate::proput::Rng;
+use crate::serve::AdmissionError;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
-
-/// Why a cluster submit failed.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ClusterSubmitError {
-    /// Every live shard is at its in-flight bound or queue capacity —
-    /// cluster-wide backpressure. Transient: retrying can succeed once
-    /// replies are consumed.
-    Saturated,
-    /// No live shard can serve this op class at all (every shard is
-    /// drained or has lost the block kinds the class needs). Not
-    /// backpressure — retrying cannot succeed until capacity is restored,
-    /// so [`Cluster::submit`] returns this instead of spinning.
-    Unservable,
-    /// The cluster (or a shard it routed to) has shut down.
-    Closed,
-}
-
-impl core::fmt::Display for ClusterSubmitError {
-    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
-        match self {
-            ClusterSubmitError::Saturated => write!(f, "all shards saturated"),
-            ClusterSubmitError::Unservable => {
-                write!(f, "no live shard can serve this op class")
-            }
-            ClusterSubmitError::Closed => write!(f, "cluster closed"),
-        }
-    }
-}
-
-impl std::error::Error for ClusterSubmitError {}
 
 /// Cluster deployment shape.
 #[derive(Clone, Debug)]
@@ -231,7 +200,7 @@ impl Cluster {
     /// Submit without blocking. The router proposes shards in policy
     /// order; admission reserves an in-flight slot on the first shard with
     /// room, spilling to the next candidate when a shard is at its bound
-    /// or its precision queue is full. [`ClusterSubmitError::Saturated`]
+    /// or its precision queue is full. [`AdmissionError::Saturated`]
     /// is cluster-wide backpressure.
     pub fn try_submit(
         &self,
@@ -239,7 +208,7 @@ impl Cluster {
         class: OpClass,
         a: u128,
         b: u128,
-    ) -> Result<ClusterReply, ClusterSubmitError> {
+    ) -> Result<ClusterReply, AdmissionError> {
         let mut tried: u64 = 0;
         // The first shard that turns the request away; charged with one
         // `spilled` only if the request is later accepted elsewhere (a
@@ -261,13 +230,15 @@ impl Cluster {
                     }
                     return Ok(ClusterReply { shard: idx, state: state.clone(), inner: rx });
                 }
-                Err(SubmitError::QueueFull) => {
+                Err(AdmissionError::Saturated) => {
                     state.release();
                     spilled_from.get_or_insert(idx);
                 }
-                Err(SubmitError::Closed) => {
+                Err(e) => {
+                    // `Draining`: the shard has shut down — surface it as
+                    // a terminal admission outcome, not backpressure.
                     state.release();
-                    return Err(ClusterSubmitError::Closed);
+                    return Err(e);
                 }
             }
         }
@@ -276,15 +247,15 @@ impl Cluster {
             // this class — permanent until capacity is restored, so
             // it must not read as retryable backpressure.
             self.unservable.inc();
-            return Err(ClusterSubmitError::Unservable);
+            return Err(AdmissionError::Unservable);
         }
         self.rejected.inc();
-        Err(ClusterSubmitError::Saturated)
+        Err(AdmissionError::Saturated)
     }
 
     /// Submit, parking briefly under cluster-wide backpressure until a
     /// shard frees up. The blocking analogue of [`Cluster::try_submit`].
-    /// Does NOT retry on [`ClusterSubmitError::Unservable`] — waiting
+    /// Does NOT retry on [`AdmissionError::Unservable`] — waiting
     /// cannot conjure back a block kind the fabric has lost.
     pub fn submit(
         &self,
@@ -292,10 +263,10 @@ impl Cluster {
         class: OpClass,
         a: u128,
         b: u128,
-    ) -> Result<ClusterReply, ClusterSubmitError> {
+    ) -> Result<ClusterReply, AdmissionError> {
         loop {
             match self.try_submit(id, class, a, b) {
-                Err(ClusterSubmitError::Saturated) => {
+                Err(AdmissionError::Saturated) => {
                     std::thread::sleep(Duration::from_micros(20));
                 }
                 other => return other,
@@ -365,12 +336,22 @@ impl Cluster {
         self.instruments.iter().map(|i| i.spilled.get()).sum()
     }
 
-    /// Drain every shard (close queues, join workers — op counters are
-    /// final afterwards) and return the final aggregated report.
-    pub fn shutdown(mut self) -> ClusterReport {
-        for shard in &mut self.shards {
+    /// Drain every shard (close queues, join workers) *without* consuming
+    /// the cluster, so any thread holding an `Arc<Cluster>` — the network
+    /// listener does — can stop admission and quiesce the worker pools.
+    /// Late submits fail with [`AdmissionError::Draining`]; everything
+    /// accepted before the close still gets exactly one reply. Idempotent
+    /// (delegates to the shards' idempotent [`Shard::drain`]).
+    pub fn drain(&self) {
+        for shard in &self.shards {
             shard.drain();
         }
+    }
+
+    /// Drain every shard (op counters are final afterwards) and return
+    /// the final aggregated report.
+    pub fn shutdown(self) -> ClusterReport {
+        self.drain();
         self.report()
     }
 }

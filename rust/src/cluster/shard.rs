@@ -277,8 +277,10 @@ impl Shard {
 
     /// Close the shard's queues and join its workers; the op counters are
     /// final afterwards, so a subsequent [`Shard::fabric_report`] covers
-    /// every op the shard ever executed. Idempotent.
-    pub fn drain(&mut self) {
+    /// every op the shard ever executed. Idempotent, and `&self` so a
+    /// shared cluster ([`super::Cluster::drain`]) can quiesce its shards
+    /// while other threads still hold references.
+    pub fn drain(&self) {
         self.service.drain();
     }
 

@@ -7,6 +7,7 @@ use crate::config::ServiceConfig;
 use crate::coordinator::BackendChoice;
 use crate::decomp::{BlockKind, OpClass, SchemeKind};
 use crate::proput::{forall, Rng};
+use crate::serve::AdmissionError;
 use std::sync::Arc;
 
 fn one_bits(class: OpClass) -> u128 {
@@ -25,7 +26,7 @@ fn small_cfg() -> ClusterConfig {
 }
 
 fn native(cfg: &ClusterConfig) -> Cluster {
-    Cluster::start(cfg, BackendChoice::Native(SchemeKind::Civp))
+    Cluster::start(cfg, BackendChoice::native(SchemeKind::Civp))
 }
 
 // ---------------------------------------------------------------------
@@ -269,7 +270,7 @@ fn inflight_bound_is_hard_under_flood() {
     for i in 0..500u64 {
         match cluster.try_submit(i, OpClass::Double, one, one) {
             Ok(rx) => held.push(rx),
-            Err(ClusterSubmitError::Saturated) => rejected += 1,
+            Err(AdmissionError::Saturated) => rejected += 1,
             Err(e) => panic!("unexpected {e:?}"),
         }
         for st in cluster.states() {
@@ -403,9 +404,9 @@ fn fully_drained_cluster_reports_unservable_not_saturated() {
     assert_eq!(cluster.states()[0].weight(), 0);
     let one = one_bits(OpClass::Single);
     let err = cluster.try_submit(0, OpClass::Single, one, one).unwrap_err();
-    assert_eq!(err, ClusterSubmitError::Unservable);
+    assert_eq!(err, AdmissionError::Unservable);
     let err = cluster.submit(1, OpClass::Quad, one, one).unwrap_err();
-    assert_eq!(err, ClusterSubmitError::Unservable, "blocking submit must not spin");
+    assert_eq!(err, AdmissionError::Unservable, "blocking submit must not spin");
     let snap = cluster.metrics();
     assert_eq!(snap.counters["rejected_unservable"], 2);
     assert_eq!(snap.counters["rejected_saturated"], 0);

@@ -37,37 +37,113 @@ pub trait Backend: Send {
     }
 }
 
+/// Native-backend construction options: one builder for every native
+/// shape instead of the accreted `Native` / `NativeLane` /
+/// `NativeParallel` variant triple this replaced.
+///
+/// Start from [`NativeOptions::new`] (scheme only — default scalar
+/// `LANES`-wide lane blocks) and chain:
+///
+/// * [`lane_config`](NativeOptions::lane_config) — explicit SoA block
+///   width × dispatched vector ISA (`--lane-width`). Bit-identical to
+///   the default for every width and ISA.
+/// * [`executor`](NativeOptions::executor) — share a work-stealing lane
+///   [`Executor`] (`--cores`): large batches fan out across its worker
+///   pool. The executor carries its own lane configuration, which takes
+///   precedence over [`lane_config`](NativeOptions::lane_config).
+///
+/// ```
+/// use civp::coordinator::{BackendChoice, NativeOptions};
+/// use civp::decomp::{LaneConfig, LaneWidth, SchemeKind};
+///
+/// let plain = BackendChoice::native(SchemeKind::Civp);
+/// let lanes = BackendChoice::Native(
+///     NativeOptions::new(SchemeKind::Civp)
+///         .lane_config(LaneConfig::detect(LaneWidth::W16)),
+/// );
+/// assert_eq!(plain.lane_config().unwrap().width, LaneWidth::W8);
+/// assert_eq!(lanes.lane_config().unwrap().width, LaneWidth::W16);
+/// ```
+#[derive(Clone)]
+pub struct NativeOptions {
+    scheme: SchemeKind,
+    lane: Option<LaneConfig>,
+    executor: Option<Arc<Executor>>,
+}
+
+impl NativeOptions {
+    /// Options for the given partition organization, with the default
+    /// scalar lane configuration and no shared executor.
+    pub fn new(scheme: SchemeKind) -> NativeOptions {
+        NativeOptions { scheme, lane: None, executor: None }
+    }
+
+    /// Override the partition organization.
+    pub fn scheme(mut self, scheme: SchemeKind) -> NativeOptions {
+        self.scheme = scheme;
+        self
+    }
+
+    /// Explicit lane configuration for inline batches (ignored when an
+    /// [`executor`](NativeOptions::executor) is also set — the executor's
+    /// own lane configuration wins).
+    pub fn lane_config(mut self, lane: LaneConfig) -> NativeOptions {
+        self.lane = Some(lane);
+        self
+    }
+
+    /// Share a work-stealing lane executor across every worker's backend
+    /// (the executor's worker pool is a machine resource shared by the
+    /// whole service).
+    pub fn executor(mut self, exec: Arc<Executor>) -> NativeOptions {
+        self.executor = Some(exec);
+        self
+    }
+
+    /// The configured partition organization.
+    pub fn scheme_kind(&self) -> SchemeKind {
+        self.scheme
+    }
+
+    /// The lane configuration batches built from these options run under.
+    pub fn effective_lane_config(&self) -> LaneConfig {
+        match (&self.executor, self.lane) {
+            (Some(exec), _) => exec.lane_config(),
+            (None, Some(lane)) => lane,
+            (None, None) => LaneConfig::SCALAR,
+        }
+    }
+
+    fn build(&self) -> NativeBackend {
+        match (&self.executor, self.lane) {
+            (Some(exec), _) => NativeBackend::with_executor(self.scheme, exec.clone()),
+            (None, Some(lane)) => NativeBackend::with_lane(self.scheme, lane),
+            (None, None) => NativeBackend::new(self.scheme),
+        }
+    }
+}
+
 /// How a service should construct its workers' backends.
 #[derive(Clone)]
 pub enum BackendChoice {
-    /// Native softfloat with the given partition organization (default
-    /// scalar `LANES`-wide lane blocks).
-    Native(SchemeKind),
-    /// Native softfloat with an explicit lane configuration: SoA block
-    /// width (`service.lane_width` / `--lane-width`) × the dispatched
-    /// vector ISA. Bit-identical to [`BackendChoice::Native`] for every
-    /// width and ISA.
-    NativeLane(SchemeKind, LaneConfig),
-    /// Native softfloat whose large batches fan out across the shared
-    /// work-stealing lane executor (`--cores`). Every worker's backend
-    /// holds the same `Arc` — the executor's worker pool is a machine
-    /// resource shared by the whole service.
-    NativeParallel(SchemeKind, Arc<Executor>),
+    /// Native softfloat, configured through one [`NativeOptions`] builder
+    /// (scheme × lane configuration × optional shared executor).
+    Native(NativeOptions),
     /// AOT JAX/Pallas artifacts through PJRT (pinned executor thread).
     Pjrt(EngineHandle),
 }
 
 impl BackendChoice {
+    /// Convenience: a plain native choice for `scheme` with default
+    /// options (scalar lane blocks, no shared executor).
+    pub fn native(scheme: SchemeKind) -> BackendChoice {
+        BackendChoice::Native(NativeOptions::new(scheme))
+    }
+
     /// Instantiate a backend for one worker.
     pub fn build(&self) -> Box<dyn Backend> {
         match self {
-            BackendChoice::Native(kind) => Box::new(NativeBackend::new(*kind)),
-            BackendChoice::NativeLane(kind, lane) => {
-                Box::new(NativeBackend::with_lane(*kind, *lane))
-            }
-            BackendChoice::NativeParallel(kind, exec) => {
-                Box::new(NativeBackend::with_executor(*kind, exec.clone()))
-            }
+            BackendChoice::Native(opts) => Box::new(opts.build()),
             BackendChoice::Pjrt(handle) => Box::new(PjrtBackend::new(handle.clone())),
         }
     }
@@ -75,8 +151,8 @@ impl BackendChoice {
     /// The shared lane executor, when this choice carries one.
     pub fn executor(&self) -> Option<&Arc<Executor>> {
         match self {
-            BackendChoice::NativeParallel(_, exec) => Some(exec),
-            _ => None,
+            BackendChoice::Native(opts) => opts.executor.as_ref(),
+            BackendChoice::Pjrt(_) => None,
         }
     }
 
@@ -84,9 +160,7 @@ impl BackendChoice {
     /// (native choices only — PJRT batches bypass the lane engine).
     pub fn lane_config(&self) -> Option<LaneConfig> {
         match self {
-            BackendChoice::Native(_) => Some(LaneConfig::SCALAR),
-            BackendChoice::NativeLane(_, lane) => Some(*lane),
-            BackendChoice::NativeParallel(_, exec) => Some(exec.lane_config()),
+            BackendChoice::Native(opts) => Some(opts.effective_lane_config()),
             BackendChoice::Pjrt(_) => None,
         }
     }

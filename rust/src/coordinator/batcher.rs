@@ -1,18 +1,14 @@
 //! Bounded dynamic batcher: size + linger dispatch policy, blocking or
 //! failing submit (backpressure), condvar-based (no busy wait).
+//!
+//! Rejections speak the unified serving vocabulary
+//! ([`crate::serve::AdmissionError`]): a full queue is `Saturated`
+//! (transient backpressure), a closed batcher is `Draining`.
 
+use crate::serve::AdmissionError;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
-
-/// Why a submit failed.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SubmitError {
-    /// Queue at capacity (try_submit only).
-    QueueFull,
-    /// Batcher shut down.
-    Closed,
-}
 
 struct Inner<T> {
     queue: VecDeque<T>,
@@ -57,14 +53,14 @@ impl<T> Batcher<T> {
         self.len() == 0
     }
 
-    /// Non-blocking submit; fails when full or closed.
-    pub fn try_submit(&self, item: T) -> Result<(), SubmitError> {
+    /// Non-blocking submit; `Saturated` when full, `Draining` when closed.
+    pub fn try_submit(&self, item: T) -> Result<(), AdmissionError> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
-            return Err(SubmitError::Closed);
+            return Err(AdmissionError::Draining);
         }
         if g.queue.len() >= self.depth {
-            return Err(SubmitError::QueueFull);
+            return Err(AdmissionError::Saturated);
         }
         g.queue.push_back(item);
         drop(g);
@@ -72,12 +68,13 @@ impl<T> Batcher<T> {
         Ok(())
     }
 
-    /// Blocking submit: waits for space (backpressure) unless closed.
-    pub fn submit(&self, item: T) -> Result<(), SubmitError> {
+    /// Blocking submit: waits for space (backpressure) unless closed
+    /// (`Draining`).
+    pub fn submit(&self, item: T) -> Result<(), AdmissionError> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if g.closed {
-                return Err(SubmitError::Closed);
+                return Err(AdmissionError::Draining);
             }
             if g.queue.len() < self.depth {
                 g.queue.push_back(item);

@@ -35,8 +35,8 @@ mod service;
 mod tests;
 
 pub use adaptive::{orient2d_adaptive, AdaptiveStats, Orient};
-pub use backend::{Backend, BackendChoice, NativeBackend, PjrtBackend};
-pub use batcher::{Batcher, SubmitError};
+pub use backend::{Backend, BackendChoice, NativeBackend, NativeOptions, PjrtBackend};
+pub use batcher::Batcher;
 pub use oneshot::{RecvError, ReplyHandle, ReplyPool, ReplySender, TryRecvError};
 pub use request::{Request, Response};
 pub use service::{Service, ServiceReport};

@@ -2,8 +2,9 @@
 //! with fabric accounting and telemetry.
 
 use super::backend::BackendChoice;
-use super::batcher::{Batcher, SubmitError};
+use super::batcher::Batcher;
 use super::oneshot::{ReplyHandle, ReplyPool, ReplySender};
+use crate::serve::AdmissionError;
 use super::request::{Request, Response};
 use crate::config::ServiceConfig;
 use crate::decomp::{OpClass, SchemeKind};
@@ -143,8 +144,6 @@ impl Service {
         });
         let backend_name = match &backend {
             BackendChoice::Native(_) => "native",
-            BackendChoice::NativeLane(..) => "native",
-            BackendChoice::NativeParallel(..) => "native",
             BackendChoice::Pjrt(_) => "pjrt",
         };
         let executor = backend.executor().cloned();
@@ -191,7 +190,7 @@ impl Service {
         class: OpClass,
         a: u128,
         b: u128,
-    ) -> Result<ReplyHandle, SubmitError> {
+    ) -> Result<ReplyHandle, AdmissionError> {
         let (tx, rx) = self.shared.pools[class.index()].acquire();
         let req = Request { id, class, a, b, enqueued: Instant::now() };
         self.shared.batchers[class.index()].submit(Item { req, reply: tx })?;
@@ -200,7 +199,7 @@ impl Service {
         Ok(rx)
     }
 
-    /// Submit without blocking; `QueueFull` applies backpressure to the
+    /// Submit without blocking; `Saturated` applies backpressure to the
     /// caller. Accounting matches [`Service::submit`]: accepted requests
     /// bump `requests_total` and the per-class counter exactly once;
     /// rejected ones bump only `rejected_queue_full`.
@@ -210,7 +209,7 @@ impl Service {
         class: OpClass,
         a: u128,
         b: u128,
-    ) -> Result<ReplyHandle, SubmitError> {
+    ) -> Result<ReplyHandle, AdmissionError> {
         let (tx, rx) = self.shared.pools[class.index()].acquire();
         let req = Request { id, class, a, b, enqueued: Instant::now() };
         match self.shared.batchers[class.index()].try_submit(Item { req, reply: tx }) {
@@ -220,7 +219,7 @@ impl Service {
                 Ok(rx)
             }
             Err(e) => {
-                if e == SubmitError::QueueFull {
+                if e == AdmissionError::Saturated {
                     self.shared.hot.rejected.inc();
                 }
                 Err(e)
@@ -299,7 +298,7 @@ impl Service {
     ///
     /// Takes `&self`, so any thread holding an `Arc<Service>` may drain
     /// while others are still submitting (late submits fail with
-    /// `Closed`; everything accepted before the close still gets exactly
+    /// `Draining`; everything accepted before the close still gets exactly
     /// one reply). Idempotent and safe to race with itself: concurrent
     /// drains serialize on the worker-handle lock, and every caller
     /// returns only after the worker pool is quiescent — so the op

@@ -5,6 +5,7 @@ use super::*;
 use crate::config::ServiceConfig;
 use crate::decomp::{OpClass, SchemeKind};
 use crate::proput::forall;
+use crate::serve::AdmissionError;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -13,7 +14,7 @@ fn native_cfg() -> ServiceConfig {
 }
 
 fn native_service(cfg: &ServiceConfig) -> Service {
-    Service::start(cfg, BackendChoice::Native(SchemeKind::Civp))
+    Service::start(cfg, BackendChoice::native(SchemeKind::Civp))
 }
 
 /// 1.0 in each registry format's packed bits (1.0 × 1.0 is exact
@@ -53,7 +54,7 @@ fn batcher_try_submit_backpressure() {
     let b: Batcher<u32> = Batcher::new(2);
     b.try_submit(1).unwrap();
     b.try_submit(2).unwrap();
-    assert_eq!(b.try_submit(3), Err(SubmitError::QueueFull));
+    assert_eq!(b.try_submit(3), Err(AdmissionError::Saturated));
     let _ = b.next_batch(2, Duration::ZERO);
     b.try_submit(3).unwrap();
 }
@@ -63,7 +64,7 @@ fn batcher_close_semantics() {
     let b: Batcher<u32> = Batcher::new(4);
     b.submit(1).unwrap();
     b.close();
-    assert_eq!(b.submit(2), Err(SubmitError::Closed));
+    assert_eq!(b.submit(2), Err(AdmissionError::Draining));
     // drains remaining, then None
     assert_eq!(b.next_batch(4, Duration::ZERO), Some(vec![1]));
     assert_eq!(b.next_batch(4, Duration::ZERO), None);
@@ -233,7 +234,7 @@ fn service_try_submit_backpressure() {
     for i in 0..5_000u64 {
         match svc.try_submit(i, OpClass::Double, 1u128 << 62, 1u128 << 62) {
             Ok(_rx) => {}
-            Err(SubmitError::QueueFull) => rejected += 1,
+            Err(AdmissionError::Saturated) => rejected += 1,
             Err(e) => panic!("unexpected {e:?}"),
         }
     }
@@ -355,7 +356,7 @@ fn service_concurrent_drain_under_load_loses_nothing() {
     let exec = Arc::new(Executor::with_threshold(2, 16));
     let svc = Arc::new(Service::start(
         &cfg,
-        BackendChoice::NativeParallel(SchemeKind::Civp, exec),
+        BackendChoice::Native(NativeOptions::new(SchemeKind::Civp).executor(exec)),
     ));
     let submitters: Vec<_> = (0..6)
         .map(|t| {
@@ -371,7 +372,7 @@ fn service_concurrent_drain_under_load_loses_nothing() {
                             accepted += 1;
                             rxs.push((one, rx));
                         }
-                        Err(SubmitError::Closed) => break,
+                        Err(AdmissionError::Draining) => break,
                         Err(e) => panic!("unexpected {e:?}"),
                     }
                 }
@@ -395,7 +396,7 @@ fn service_concurrent_drain_under_load_loses_nothing() {
                 // too (not just the race winner): submits must refuse.
                 assert_eq!(
                     svc.submit(0, OpClass::Double, 1u128 << 62, 1u128 << 62).err(),
-                    Some(SubmitError::Closed)
+                    Some(AdmissionError::Draining)
                 );
             })
         })

@@ -98,6 +98,13 @@ impl SchemeKind {
         self as usize
     }
 
+    /// Inverse of [`SchemeKind::index`]; `None` for out-of-range indices
+    /// (the checked path wire decoding needs).
+    #[inline]
+    pub fn from_index(i: usize) -> Option<SchemeKind> {
+        Self::ALL.get(i).copied()
+    }
+
     /// Display name.
     pub const fn name(self) -> &'static str {
         match self {

@@ -30,6 +30,22 @@ impl RoundMode {
         RoundMode::TowardPositive,
         RoundMode::TowardNegative,
     ];
+
+    /// Number of modes.
+    pub const COUNT: usize = Self::ALL.len();
+
+    /// Dense index (position in [`RoundMode::ALL`]) — the wire encoding.
+    #[inline]
+    pub const fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Inverse of [`RoundMode::index`]; `None` for out-of-range indices
+    /// (the checked path wire decoding needs).
+    #[inline]
+    pub fn from_index(i: usize) -> Option<RoundMode> {
+        Self::ALL.get(i).copied()
+    }
 }
 
 /// Outcome of [`round_shift`].

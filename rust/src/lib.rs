@@ -27,6 +27,11 @@
 //!   pluggable routing policies (round-robin / least-loaded /
 //!   precision-affinity), per-shard admission control with spill-over,
 //!   and degradation-aware traffic weighting over [`fabric::repair`].
+//! * [`net`] — the network serving edge: a length-prefixed binary wire
+//!   protocol, a std-only multi-threaded TCP listener feeding the cluster
+//!   router, and a built-in open-loop load generator.
+//! * [`serve`] — the unified admission vocabulary
+//!   ([`serve::AdmissionError`]) shared by coordinator, cluster and wire.
 //! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas numeric
 //!   backends (`artifacts/*.hlo.txt`).
 //! * [`trace`], [`metrics`], [`config`] — workload generation, telemetry
@@ -47,10 +52,13 @@ pub mod error;
 pub mod fabric;
 pub mod fpu;
 pub mod metrics;
+pub mod net;
 pub mod proput;
 pub mod runtime;
+pub mod serve;
 pub mod trace;
 pub mod wideint;
 
 pub use decomp::{OpClass, Plan, PlanCache, Scheme, SchemeKind};
 pub use fpu::{Bf16, Fp128, Fp16, Fp32, Fp64, RoundMode};
+pub use serve::AdmissionError;

@@ -3,27 +3,36 @@
 //!
 //! Commands:
 //!
-//! * `serve`    — drive a synthetic multimedia trace through the service
-//!                (router → batcher → workers → backend) and print the
-//!                serving + fabric reports.
-//! * `cluster`  — drive a trace through the sharded multi-fabric cluster
-//!                (router policies, admission control, degradation demo).
-//! * `analyze`  — print the §III block/utilization analysis table (E6).
+//! * `serve`     — drive a synthetic multimedia trace through the service
+//!                 (router → batcher → workers → backend) and print the
+//!                 serving + fabric reports.
+//! * `cluster`   — drive a trace through the sharded multi-fabric cluster
+//!                 (router policies, admission control, degradation demo).
+//! * `serve-net` — expose the cluster over TCP (length-prefixed binary
+//!                 protocol; see `civp::net::wire`).
+//! * `loadgen`   — open-loop load generator against a `serve-net`
+//!                 listener (or an embedded loopback one), emitting
+//!                 latency/throughput rows as `BENCH_net.json`.
+//! * `analyze`   — print the §III block/utilization analysis table (E6).
 //! * `predicates` — run the adaptive-precision geometric-predicate demo.
-//! * `info`     — load the PJRT engine and print artifact facts.
+//! * `info`      — load the PJRT engine and print artifact facts.
 //!
-//! Run `civp-server help` for options.
+//! The serving commands share one flag surface: `--mix`, `--cores`,
+//! `--lane-width`, `--policy`, `--inflight` and friends resolve through
+//! the same `civp::cli` helpers under every command. Run
+//! `civp-server help` for options.
 
+use civp::benchx::JsonReport;
 use civp::cli::Args;
-use civp::cluster::{Cluster, ClusterConfig, RouterPolicy};
-use civp::error::{bail, err, Result};
+use civp::cluster::Cluster;
 use civp::config::ServiceConfig;
 use civp::coordinator::{orient2d_adaptive, AdaptiveStats, BackendChoice, Service};
-use civp::decomp::{AnalysisRow, LaneConfig, LaneWidth, OpClass, SchemeKind};
+use civp::decomp::{AnalysisRow, OpClass, SchemeKind};
+use civp::error::{bail, err, Result};
+use civp::net::{LoadgenConfig, NetServer, NetServerConfig};
 use civp::runtime::EngineHandle;
-use civp::trace::{TraceGen, WorkloadSpec};
-use std::sync::Arc;
-use std::time::Instant;
+use civp::trace::TraceGen;
+use std::time::{Duration, Instant};
 
 fn main() {
     if let Err(e) = run() {
@@ -37,6 +46,8 @@ fn run() -> Result<()> {
     match args.command.as_deref() {
         Some("serve") => serve(&args),
         Some("cluster") => cluster(&args),
+        Some("serve-net") => serve_net(&args),
+        Some("loadgen") => loadgen(&args),
         Some("analyze") => analyze(),
         Some("predicates") => predicates(&args),
         Some("info") => info(&args),
@@ -54,113 +65,59 @@ fn print_help() {
 
 USAGE: civp-server <command> [options]
 
+SHARED OPTIONS (serve / cluster / serve-net / loadgen)
+  --config <file>      TOML config (see ServiceConfig)
+  --requests <n>       override request count
+  --workload <spec>    graphics|scientific|uniform|single-only|mixed|ml
+  --mix <spec>         custom class weights, e.g.
+                       half=0.2,bf16=0.3,single=0.5 (overrides --workload)
+  --backend <b>        native|pjrt (default native)
+  --artifacts <dir>    artifacts directory (pjrt backend)
+  --cores <n>          work-stealing lane-executor cores
+                       (0 = single-threaded, the default)
+  --par-threshold <n>  min batch size that fans out (default 256)
+  --lane-width <n>     SoA lane-block width: 8|16|32 (default 8)
+
+CLUSTER OPTIONS (cluster / serve-net / loadgen's embedded server)
+  --shards <n>         shard count (default 4)
+  --policy <p>         round-robin|least-loaded|precision-affinity
+  --inflight <n>       per-shard in-flight bound (default 4096)
+  --spares <n>         spare sub-units per block (default 2)
+
 COMMANDS
-  serve        run a synthetic trace through the service
-               --config <file>      TOML config (see ServiceConfig)
-               --requests <n>       override request count
-               --workload <spec>    graphics|scientific|uniform|single-only|mixed|ml
-               --mix <spec>         custom class weights, e.g.
-                                    half=0.2,bf16=0.3,single=0.5 (overrides --workload)
-               --backend <b>        native|pjrt (default native)
-               --artifacts <dir>    artifacts directory (pjrt backend)
-               --cores <n>          work-stealing lane-executor cores
-                                    (0 = single-threaded, the default)
-               --par-threshold <n>  min batch size that fans out (default 256)
-               --lane-width <n>     SoA lane-block width: 8|16|32 (default 8);
-                                    wider blocks feed the SIMD sweeps when the
-                                    `simd` build and the host ISA allow it
+  serve        run a synthetic trace through the in-process service
   cluster      run a synthetic trace through the sharded cluster
-               --shards <n>         shard count (default 4)
-               --policy <p>         round-robin|least-loaded|precision-affinity
-               --inflight <n>       per-shard in-flight bound (default 4096)
-               --spares <n>         spare sub-units per block (default 2)
                --degrade <shard>    inject faults into one shard first
                --faults <n>         fault count for --degrade (default 8)
-               --backend <b>        native|pjrt (default native)
-               (also accepts serve's --config/--requests/--workload/--mix/
-                --artifacts/--cores/--par-threshold/--lane-width)
+  serve-net    expose the cluster over TCP
+               --addr <host:port>   bind address (default 127.0.0.1:7070;
+                                    port 0 picks an ephemeral port)
+               --duration <secs>    serve this long then report (0 =
+                                    forever, the default)
+               --writer-queue <n>   per-connection reply queue bound
+                                    (default 256)
+  loadgen      drive open-loop load at a serve-net listener
+               --addr <host:port>   target server; omit to run against an
+                                    embedded loopback server
+               --workloads <list>   comma-separated mixes (default the
+                                    --workload value, default mixed)
+               --conns <n>          connections (default 4)
+               --rate <r/s>         offered load, 0 = closed-loop flood
+                                    (the default)
+               --warmup <n>         leading requests excluded from latency
+                                    stats (default requests/20)
+               --json <path>        write bench rows (BENCH_net.json)
   analyze      print the paper's block/utilization analysis table
   predicates   adaptive-precision orient2d demo
                --points <n>         number of predicates (default 2000)
   info         print loaded-engine facts
-               --artifacts <dir>    artifacts directory
   help         this text"
     );
 }
 
-fn load_config(args: &Args) -> Result<ServiceConfig> {
-    let mut cfg = match args.options.get("config") {
-        Some(path) => ServiceConfig::from_file(path)?,
-        None => ServiceConfig::default(),
-    };
-    if let Some(n) = args.options.get("requests") {
-        cfg.requests = n.parse()?;
-    }
-    if let Some(w) = args.options.get("workload") {
-        cfg.workload =
-            WorkloadSpec::parse(w).ok_or_else(|| err!("unknown workload {w:?}"))?;
-    }
-    if let Some(spec) = args.options.get("mix") {
-        // `--mix half=0.2,bf16=0.3,...` — explicit per-class weights over
-        // the open registry; unlisted classes get zero mass.
-        for part in spec.split(',').filter(|p| !p.is_empty()) {
-            let (name, weight) = part
-                .split_once('=')
-                .ok_or_else(|| err!("--mix entries are class=weight, got {part:?}"))?;
-            let class = OpClass::parse(name.trim())
-                .ok_or_else(|| err!("unknown op class {name:?} in --mix"))?;
-            cfg.set_mix_weight(class, weight.trim().parse()?)?;
-        }
-    }
-    if let Some(dir) = args.options.get("artifacts") {
-        cfg.artifacts_dir = dir.clone();
-    }
-    if let Some(n) = args.options.get("cores") {
-        cfg.cores = n.parse()?;
-    }
-    if let Some(n) = args.options.get("par-threshold") {
-        cfg.par_threshold = n.parse()?;
-    }
-    if let Some(n) = args.options.get("lane-width") {
-        cfg.lane_width = n.parse()?;
-    }
-    cfg.validate()?;
-    Ok(cfg)
-}
-
-/// Resolve the configured lane width plus the best vector ISA the host
-/// offers (AVX-512 → AVX2 → scalar on x86_64, NEON on aarch64; always
-/// scalar without the `simd` feature).
-fn lane_config(cfg: &ServiceConfig) -> Result<LaneConfig> {
-    let width = LaneWidth::from_width(cfg.lane_width)
-        .ok_or_else(|| err!("--lane-width must be 8, 16 or 32 (got {})", cfg.lane_width))?;
-    Ok(LaneConfig::detect(width))
-}
-
-/// Resolve `--backend` (+ `--cores`/`--lane-width`) into a worker-backend
-/// choice. With `--cores N` (N > 0) the native backend fans large batches
-/// out across a shared work-stealing lane executor; results stay
-/// bit-for-bit identical to the single-threaded path for every width and
-/// dispatched ISA.
-fn make_backend(args: &Args, cfg: &ServiceConfig) -> Result<BackendChoice> {
-    Ok(match args.get_str("backend", "native").as_str() {
-        "native" if cfg.cores > 0 => BackendChoice::NativeParallel(
-            cfg.scheme,
-            Arc::new(civp::decomp::Executor::with_config(
-                cfg.cores,
-                cfg.par_threshold,
-                lane_config(cfg)?,
-            )),
-        ),
-        "native" => BackendChoice::NativeLane(cfg.scheme, lane_config(cfg)?),
-        "pjrt" => BackendChoice::Pjrt(EngineHandle::load(cfg.artifacts_dir.clone())?),
-        other => bail!("unknown backend {other:?}"),
-    })
-}
-
 fn serve(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
-    let backend = make_backend(args, &cfg)?;
+    let cfg = args.service_config()?;
+    let backend = args.backend_choice(&cfg)?;
     println!(
         "serving {} requests of workload `{}` (scheme {:?}, fabric {:?}, cores {}, \
          lane kernel {})",
@@ -207,22 +164,13 @@ fn serve(args: &Args) -> Result<()> {
 }
 
 fn cluster(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
-    let shards = args.get_usize("shards", 4)?;
-    let policy_name = args.get_str("policy", "least-loaded");
-    let policy = RouterPolicy::parse(&policy_name)
-        .ok_or_else(|| err!("unknown policy {policy_name:?} (try `help`)"))?;
-    let ccfg = ClusterConfig {
-        shards,
-        service: cfg.clone(),
-        policy,
-        max_inflight: args.get_usize("inflight", 4096)? as u64,
-        spares_per_block: args.get_usize("spares", 2)? as u32,
-    };
-    let backend = make_backend(args, &cfg)?;
+    let cfg = args.service_config()?;
+    let ccfg = args.cluster_config(cfg.clone())?;
+    let backend = args.backend_choice(&cfg)?;
+    let shards = ccfg.shards;
     println!(
         "cluster: {shards} shards, policy `{}`, workload `{}`, {} requests",
-        policy.name(),
+        ccfg.policy.name(),
         cfg.workload.name(),
         cfg.requests
     );
@@ -282,6 +230,99 @@ fn cluster(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn serve_net(args: &Args) -> Result<()> {
+    let cfg = args.service_config()?;
+    let net_cfg = NetServerConfig {
+        addr: args.get_str("addr", "127.0.0.1:7070"),
+        cluster: args.cluster_config(cfg.clone())?,
+        writer_queue: args.get_usize("writer-queue", 256)?,
+    };
+    let backend = args.backend_choice(&cfg)?;
+    let shards = net_cfg.cluster.shards;
+    let policy = net_cfg.cluster.policy;
+    let server = NetServer::start(&net_cfg, backend)?;
+    println!(
+        "serve-net: listening on {} (scheme {:?}, {shards} shards, policy `{}`, \
+         per-shard inflight {})",
+        server.local_addr(),
+        cfg.scheme,
+        policy.name(),
+        net_cfg.cluster.max_inflight
+    );
+    let duration = args.get_usize("duration", 0)?;
+    if duration == 0 {
+        println!("serving until killed (pass --duration <secs> for a bounded run)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(duration as u64));
+    let report = server.stop();
+    println!("\n== cluster report ==");
+    print!("{}", report.render());
+    Ok(())
+}
+
+fn loadgen(args: &Args) -> Result<()> {
+    let cfg = args.service_config()?;
+    let specs = args.workloads(cfg.workload.name())?;
+    let external_addr = args.options.get("addr").cloned();
+    let mut json = JsonReport::new();
+    for spec in specs {
+        // Each mix gets a fresh server in embedded mode, so the per-class
+        // op counters it reports cover exactly this run.
+        let (addr, server) = match &external_addr {
+            Some(addr) => (addr.clone(), None),
+            None => {
+                let net_cfg = NetServerConfig {
+                    addr: "127.0.0.1:0".to_string(),
+                    cluster: args.cluster_config(cfg.clone())?,
+                    writer_queue: args.get_usize("writer-queue", 256)?,
+                };
+                let server = NetServer::start(&net_cfg, args.backend_choice(&cfg)?)?;
+                (server.local_addr().to_string(), Some(server))
+            }
+        };
+        let lg = LoadgenConfig {
+            addr,
+            conns: args.get_usize("conns", 4)?,
+            requests: cfg.requests as u64,
+            warmup: args.get_usize("warmup", (cfg.requests / 20).max(1))? as u64,
+            rate: args.get_f64("rate", 0.0)?,
+            mix: spec.mix(),
+            mix_name: spec.name().to_string(),
+            scheme: cfg.scheme,
+            seed: cfg.seed,
+            ..LoadgenConfig::default()
+        };
+        println!(
+            "loadgen: mix `{}`, {} requests over {} conns at {} -> {}",
+            lg.mix_name,
+            lg.requests,
+            lg.conns,
+            if lg.rate > 0.0 { format!("{} req/s", lg.rate) } else { "flood".to_string() },
+            lg.addr
+        );
+        let report = civp::net::loadgen::run(&lg)?;
+        print!("{}", report.render());
+        if let Some(server) = server {
+            // Embedded mode doubles as the e2e oracle: everything the
+            // generator sent must be visible in the cluster's counters.
+            let executed: u64 = server.cluster().op_counts().values().sum();
+            let cluster_report = server.stop();
+            println!(
+                "  server executed {executed} ops ({} accepted, {} saturated)",
+                cluster_report.accepted, cluster_report.rejected_saturated
+            );
+        }
+        report.push_bench_rows(&mut json);
+    }
+    if let Some(path) = args.options.get("json") {
+        json.write(path)?;
+    }
+    Ok(())
+}
+
 fn analyze() -> Result<()> {
     println!("== paper §III analysis: blocks per multiplication ==\n");
     println!(
@@ -315,7 +356,7 @@ fn analyze() -> Result<()> {
 fn predicates(args: &Args) -> Result<()> {
     let n = args.get_usize("points", 2000)?;
     let cfg = ServiceConfig::default();
-    let svc = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
+    let svc = Service::start(&cfg, BackendChoice::native(SchemeKind::Civp));
     let mut stats = AdaptiveStats::default();
     let mut rng = civp::proput::Rng::new(7);
     let t0 = Instant::now();

@@ -1,0 +1,419 @@
+//! Built-in load generator for the network serving edge.
+//!
+//! Open-loop by default: each connection draws arrivals from a
+//! [`TraceGen`] with exponential inter-arrival gaps sized so the
+//! connections together offer `rate` requests/second, and sends each
+//! request at its trace arrival time regardless of replies — the offered
+//! load does not slow down when the server does, which is what makes
+//! [`Status::Saturated`] responses observable. `rate == 0` switches to a
+//! closed-loop flood (send as fast as the socket accepts).
+//!
+//! Per connection, a paired reader thread consumes responses (FIFO, per
+//! the listener's ordering guarantee) under a read timeout, so replies
+//! the server never delivers surface as a `lost` count instead of a
+//! hang. The first `warmup` requests per connection are excluded from
+//! the latency distribution; every reply is still counted by status.
+//! Latency percentiles are exact (all post-warmup samples are kept and
+//! sorted — at bench scale this is a few MB, not a reservoir's
+//! approximation).
+
+use super::wire::{self, FrameRead, Request, Response, Status};
+use crate::benchx::{wall_measurement, JsonReport, Measurement};
+use crate::decomp::{OpClass, SchemeKind};
+use crate::error::{err, Context, Result};
+use crate::fpu::RoundMode;
+use crate::trace::{TraceGen, WorkloadMix};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Load-generation shape for one run (one workload mix).
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Concurrent connections (each a sender/reader thread pair).
+    pub conns: usize,
+    /// Total requests across all connections.
+    pub requests: u64,
+    /// Leading requests per run excluded from latency stats (split
+    /// across connections like `requests`).
+    pub warmup: u64,
+    /// Offered load in requests/second across all connections;
+    /// `0.0` floods closed-loop.
+    pub rate: f64,
+    /// Class mix to draw requests from.
+    pub mix: WorkloadMix,
+    /// Mix label for reports and bench-row names.
+    pub mix_name: String,
+    /// Scheme stamped on every request (must match the server's).
+    pub scheme: SchemeKind,
+    /// Rounding mode stamped on every request.
+    pub round: RoundMode,
+    /// Trace seed (connection `i` uses `seed + i`).
+    pub seed: u64,
+    /// Reader-side timeout: replies slower than this count as lost.
+    pub reply_timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: String::new(),
+            conns: 4,
+            requests: 10_000,
+            warmup: 500,
+            rate: 0.0,
+            mix: WorkloadMix::ZERO,
+            mix_name: String::new(),
+            scheme: SchemeKind::Civp,
+            round: RoundMode::NearestEven,
+            seed: 20260808,
+            reply_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Merged outcome of one load-generation run.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    /// Mix label the run drew from.
+    pub mix_name: String,
+    /// Frames sent.
+    pub sent: u64,
+    /// `Ok` replies.
+    pub ok: u64,
+    /// `Saturated` replies (admission backpressure made visible).
+    pub saturated: u64,
+    /// Replies with any other non-`Ok` status.
+    pub other: u64,
+    /// Frames sent that never got a reply before timeout/close.
+    pub lost: u64,
+    /// Wall time of the whole run (connect to last reply), seconds.
+    pub wall_s: f64,
+    /// Exact latency percentiles over post-warmup replies, nanoseconds.
+    pub p50_ns: u64,
+    /// 99th percentile latency (ns).
+    pub p99_ns: u64,
+    /// 99.9th percentile latency (ns).
+    pub p999_ns: u64,
+    /// Frames sent per op class (the e2e oracle against the server's
+    /// per-class op counters).
+    pub per_class_sent: [u64; OpClass::COUNT],
+}
+
+impl LoadgenReport {
+    /// Replies received, any status.
+    pub fn replies(&self) -> u64 {
+        self.ok + self.saturated + self.other
+    }
+
+    /// Sustained reply throughput over the run (replies/second).
+    pub fn throughput(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.replies() as f64 / self.wall_s
+    }
+
+    /// Human-readable summary block.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "mix {:<10} sent {:>8}  ok {:>8}  saturated {:>6}  other {:>4}  lost {:>4}\n",
+            self.mix_name, self.sent, self.ok, self.saturated, self.other, self.lost
+        ));
+        out.push_str(&format!(
+            "  throughput {:>10.0} replies/s over {:.3} s\n",
+            self.throughput(),
+            self.wall_s
+        ));
+        out.push_str(&format!(
+            "  latency    p50 {:>9} ns   p99 {:>9} ns   p999 {:>9} ns\n",
+            self.p50_ns, self.p99_ns, self.p999_ns
+        ));
+        for class in OpClass::ALL {
+            let n = self.per_class_sent[class.index()];
+            if n > 0 {
+                out.push_str(&format!("  sent[{:<9}] {n}\n", class.name()));
+            }
+        }
+        out
+    }
+
+    /// Append this run's bench rows to a [`JsonReport`] under
+    /// `net/<mix>/...`. Latency rows carry nanoseconds in the
+    /// `ns_per_op_*` fields; count rows (`frames-sent`, `replies-*`,
+    /// `lost`) carry their count in `total_ops` with zeroed timings, so
+    /// the bench gate can check conservation without parsing names.
+    pub fn push_bench_rows(&self, report: &mut JsonReport) {
+        let prefix = format!("net/{}", self.mix_name);
+        let replies = self.replies();
+        for (suffix, ns) in [
+            ("latency-p50", self.p50_ns),
+            ("latency-p99", self.p99_ns),
+            ("latency-p999", self.p999_ns),
+        ] {
+            report.push(&format!("{prefix}/{suffix}"), Measurement::uniform(ns as f64, replies));
+        }
+        report.push(
+            &format!("{prefix}/throughput"),
+            wall_measurement(replies.max(1), self.wall_s.max(1e-9)),
+        );
+        for (suffix, n) in [
+            ("frames-sent", self.sent),
+            ("replies-ok", self.ok),
+            ("replies-saturated", self.saturated),
+            ("replies-other", self.other),
+            ("lost", self.lost),
+        ] {
+            report.push(&format!("{prefix}/{suffix}"), Measurement::uniform(0.0, n));
+        }
+    }
+}
+
+/// What one connection's reader thread tallied.
+#[derive(Default)]
+struct ReaderTally {
+    received: u64,
+    ok: u64,
+    saturated: u64,
+    other: u64,
+    latencies_ns: Vec<u64>,
+}
+
+/// Drive one run against `cfg.addr` and merge the per-connection tallies.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    if cfg.conns == 0 || cfg.requests == 0 {
+        return Err(err!("loadgen needs at least 1 connection and 1 request"));
+    }
+    if cfg.conns > u32::MAX as usize {
+        return Err(err!("connection count does not fit the id space"));
+    }
+    let per_conn = split(cfg.requests, cfg.conns);
+    let warmup_per_conn = split(cfg.warmup.min(cfg.requests), cfg.conns);
+    // Each connection carries rate/conns; exponential gaps at that mean
+    // superpose to the configured aggregate offered load.
+    let mean_gap_ns = if cfg.rate > 0.0 {
+        (cfg.conns as f64 * 1e9 / cfg.rate) as u64
+    } else {
+        0
+    };
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..cfg.conns)
+        .map(|i| {
+            let cfg = cfg.clone();
+            let (n, warm) = (per_conn[i], warmup_per_conn[i]);
+            std::thread::spawn(move || run_conn(&cfg, i as u32, n, warm, mean_gap_ns))
+        })
+        .collect();
+    let mut report = LoadgenReport {
+        mix_name: cfg.mix_name.clone(),
+        sent: 0,
+        ok: 0,
+        saturated: 0,
+        other: 0,
+        lost: 0,
+        wall_s: 0.0,
+        p50_ns: 0,
+        p99_ns: 0,
+        p999_ns: 0,
+        per_class_sent: [0; OpClass::COUNT],
+    };
+    let mut latencies: Vec<u64> = Vec::new();
+    for worker in workers {
+        let conn = worker.join().map_err(|_| err!("loadgen connection thread panicked"))??;
+        report.sent += conn.sent;
+        report.ok += conn.tally.ok;
+        report.saturated += conn.tally.saturated;
+        report.other += conn.tally.other;
+        report.lost += conn.sent - conn.tally.received;
+        for class in OpClass::ALL {
+            report.per_class_sent[class.index()] += conn.per_class[class.index()];
+        }
+        latencies.extend(conn.tally.latencies_ns);
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    latencies.sort_unstable();
+    report.p50_ns = quantile(&latencies, 0.50);
+    report.p99_ns = quantile(&latencies, 0.99);
+    report.p999_ns = quantile(&latencies, 0.999);
+    Ok(report)
+}
+
+/// Spread `total` over `parts` buckets, remainder on the leading ones.
+fn split(total: u64, parts: usize) -> Vec<u64> {
+    let base = total / parts as u64;
+    let rem = (total % parts as u64) as usize;
+    (0..parts).map(|i| base + u64::from(i < rem)).collect()
+}
+
+/// Exact quantile of a sorted sample (nearest-rank on the closed index).
+fn quantile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+struct ConnResult {
+    sent: u64,
+    per_class: [u64; OpClass::COUNT],
+    tally: ReaderTally,
+}
+
+fn run_conn(
+    cfg: &LoadgenConfig,
+    conn_idx: u32,
+    n: u64,
+    warmup: u64,
+    mean_gap_ns: u64,
+) -> Result<ConnResult> {
+    let stream = TcpStream::connect(&cfg.addr)
+        .with_context(|| format!("connecting to {}", cfg.addr))?;
+    let _ = stream.set_nodelay(true);
+    let reader_stream = stream.try_clone().context("cloning stream for the reader")?;
+    reader_stream
+        .set_read_timeout(Some(cfg.reply_timeout))
+        .context("setting reply timeout")?;
+    // Send timestamps indexed by per-connection sequence number, written
+    // by the sender before each frame and read by the reader on reply.
+    let send_ns: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+    let start = Instant::now();
+    let reader = {
+        let send_ns = send_ns.clone();
+        std::thread::spawn(move || read_replies(reader_stream, n, warmup, &send_ns, start))
+    };
+    let mut gen = TraceGen::new(cfg.seed.wrapping_add(conn_idx as u64), cfg.mix, mean_gap_ns);
+    let mut writer = BufWriter::new(stream);
+    let mut buf = Vec::with_capacity(64);
+    let mut per_class = [0u64; OpClass::COUNT];
+    let mut sent = 0u64;
+    for seq in 0..n {
+        let trace = gen.next();
+        if mean_gap_ns > 0 {
+            // Open loop: release at the trace arrival time, replies or not.
+            let target = Duration::from_nanos(trace.arrival_ns);
+            let elapsed = start.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+        }
+        let req = Request {
+            id: (u64::from(conn_idx) << 32) | seq,
+            class: trace.class,
+            scheme: cfg.scheme,
+            round: cfg.round,
+            a: trace.a,
+            b: trace.b,
+        };
+        buf.clear();
+        req.encode(&mut buf);
+        send_ns[seq as usize].store(start.elapsed().as_nanos() as u64, Ordering::Release);
+        if writer.write_all(&buf).is_err() || writer.flush().is_err() {
+            break; // server closed; the reader tallies what came back
+        }
+        per_class[trace.class.index()] += 1;
+        sent += 1;
+    }
+    let tally = reader.join().map_err(|_| err!("loadgen reader thread panicked"))?;
+    Ok(ConnResult { sent, per_class, tally })
+}
+
+/// Consume replies until `expect` arrived or the stream times out/closes.
+fn read_replies(
+    stream: TcpStream,
+    expect: u64,
+    warmup: u64,
+    send_ns: &[AtomicU64],
+    start: Instant,
+) -> ReaderTally {
+    let mut tally = ReaderTally::default();
+    let mut reader = BufReader::new(stream);
+    let mut payload = Vec::with_capacity(64);
+    while tally.received < expect {
+        match wire::read_frame(&mut reader, &mut payload) {
+            Ok(FrameRead::Frame) => {}
+            // EOF, framing loss, or timeout: the rest counts as lost.
+            _ => break,
+        }
+        let resp = match Response::decode(&payload) {
+            Ok(resp) => resp,
+            Err(_) => break,
+        };
+        tally.received += 1;
+        match resp.status {
+            Status::Ok => tally.ok += 1,
+            Status::Saturated => tally.saturated += 1,
+            _ => tally.other += 1,
+        }
+        let seq = resp.id & 0xffff_ffff;
+        if seq >= warmup && (seq as usize) < send_ns.len() {
+            let sent_at = send_ns[seq as usize].load(Ordering::Acquire);
+            let now = start.elapsed().as_nanos() as u64;
+            tally.latencies_ns.push(now.saturating_sub(sent_at));
+        }
+    }
+    tally
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_conserves_and_balances() {
+        assert_eq!(split(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(split(3, 4), vec![1, 1, 1, 0]);
+        assert_eq!(split(8, 2).iter().sum::<u64>(), 8);
+    }
+
+    #[test]
+    fn quantiles_are_exact_on_small_samples() {
+        assert_eq!(quantile(&[], 0.5), 0);
+        assert_eq!(quantile(&[7], 0.999), 7);
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(quantile(&v, 0.50), 50);
+        assert_eq!(quantile(&v, 0.99), 99);
+        assert_eq!(quantile(&v, 0.999), 100);
+    }
+
+    #[test]
+    fn bench_rows_follow_the_net_schema() {
+        let report = LoadgenReport {
+            mix_name: "mixed".to_string(),
+            sent: 100,
+            ok: 90,
+            saturated: 8,
+            other: 2,
+            lost: 0,
+            wall_s: 0.5,
+            p50_ns: 1000,
+            p99_ns: 5000,
+            p999_ns: 9000,
+            per_class_sent: [20; OpClass::COUNT],
+        };
+        let mut json = JsonReport::new();
+        report.push_bench_rows(&mut json);
+        let text = json.to_json();
+        for name in [
+            "net/mixed/latency-p50",
+            "net/mixed/latency-p99",
+            "net/mixed/latency-p999",
+            "net/mixed/throughput",
+            "net/mixed/frames-sent",
+            "net/mixed/replies-ok",
+            "net/mixed/replies-saturated",
+            "net/mixed/replies-other",
+            "net/mixed/lost",
+        ] {
+            assert!(text.contains(&format!("\"name\": \"{name}\"")), "{name} missing");
+        }
+        assert_eq!(report.replies(), 100);
+        assert_eq!(report.throughput(), 200.0);
+        assert!(report.render().contains("saturated"));
+    }
+}

@@ -1,0 +1,33 @@
+//! Layer-5 network serving edge: the cluster behind a TCP socket.
+//!
+//! Everything below this layer speaks in-process Rust (`Cluster::submit`
+//! returns a [`crate::cluster::ClusterReply`]); this module is the wire
+//! boundary — the deployment shape where the variable-precision
+//! multiplication service is a network service:
+//!
+//! * [`wire`] — the length-prefixed binary protocol: version byte,
+//!   registry-indexed class/scheme/rounding-mode bytes, operands at the
+//!   class's packed width, and a status byte on every response. Decoding
+//!   is total — malformed frames become [`wire::Status::BadRequest`]
+//!   responses, never panics or hangs.
+//! * [`server`] — a std-only multi-threaded listener (`civp-server
+//!   serve-net`): per-connection reader/writer thread pairs around a
+//!   bounded FIFO reply queue, decoding frames into
+//!   [`crate::cluster::Cluster::try_submit`]. Admission outcomes
+//!   ([`crate::serve::AdmissionError`]) map 1:1 onto wire status codes,
+//!   so a saturated cluster answers `Saturated` instead of dropping the
+//!   connection, and a full writer queue stops the socket reads — TCP
+//!   backpressure end to end.
+//! * [`loadgen`] — the built-in open-loop load generator (`civp-server
+//!   loadgen`): exponential arrivals over the [`crate::trace`] workload
+//!   mixes, connection fan-out, warmup exclusion, exact p50/p99/p999
+//!   latency percentiles and sustained throughput, emitted as
+//!   `BENCH_net.json` rows the bench gate validates.
+
+pub mod loadgen;
+pub mod server;
+pub mod wire;
+
+pub use loadgen::{LoadgenConfig, LoadgenReport};
+pub use server::{NetServer, NetServerConfig};
+pub use wire::Status;

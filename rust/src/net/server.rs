@@ -1,0 +1,348 @@
+//! Std-only multi-threaded TCP listener feeding the cluster router.
+//!
+//! Thread model (no async runtime — blocking I/O end to end):
+//!
+//! ```text
+//!   accept thread ── one per listener, spawns per-connection pairs
+//!     ├─ reader thread ── read_frame → decode → Cluster::try_submit
+//!     │                    │ admission/decode errors become status
+//!     │                    ▼ responses, never dropped connections
+//!     │    bounded writer queue (reader blocks when full ⇒ it stops
+//!     │    reading the socket ⇒ TCP backpressure reaches the client)
+//!     │                    ▼
+//!     └─ writer thread ── FIFO: ClusterReply::recv → encode → write
+//! ```
+//!
+//! Responses are written in request order per connection (the writer
+//! drains its queue FIFO), trading head-of-line latency for a protocol
+//! with no reordering to track. Cross-connection parallelism comes from
+//! the per-connection thread pairs; within the cluster, batching and the
+//! shard worker pools parallelize as in the in-process paths.
+//!
+//! Framing-level failures (truncated stream, oversized length prefix)
+//! get one [`Status::BadRequest`] response and then the connection
+//! closes — the byte stream cannot be resynchronized. In-frame decode
+//! failures (bad version, unknown class index, length mismatch against a
+//! valid prefix) also answer `BadRequest` but keep the connection open:
+//! framing is intact, so subsequent frames still parse.
+
+use super::wire::{self, FrameRead, Request, Response, Status};
+use crate::cluster::{Cluster, ClusterConfig, ClusterReply, ClusterReport};
+use crate::coordinator::BackendChoice;
+use crate::decomp::{OpClass, SchemeKind};
+use crate::error::{Context, Result};
+use crate::fpu::RoundMode;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Listener deployment shape.
+#[derive(Clone, Debug)]
+pub struct NetServerConfig {
+    /// Bind address (`host:port`; port 0 picks an ephemeral port).
+    pub addr: String,
+    /// The cluster behind the listener (shards, policy, in-flight bound).
+    /// Its `service.scheme` is the one partition organization this
+    /// listener serves; requests for any other scheme — or for a rounding
+    /// mode other than round-to-nearest-even, the only mode the batch
+    /// backends run — are answered [`Status::Unsupported`].
+    pub cluster: ClusterConfig,
+    /// Per-connection bound on replies awaiting the writer. When full,
+    /// the reader stops pulling frames off the socket, which is the
+    /// mechanism that turns cluster latency into TCP backpressure.
+    pub writer_queue: usize,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            cluster: ClusterConfig::default(),
+            writer_queue: 256,
+        }
+    }
+}
+
+/// One entry in a connection's FIFO writer queue.
+enum Pending {
+    /// Admitted into the cluster; the writer blocks on the reply.
+    Submitted {
+        id: u64,
+        class: OpClass,
+        reply: ClusterReply,
+    },
+    /// Already resolved at the reader (admission/decode/validation
+    /// outcome) — encoded as-is, in order.
+    Immediate(Response),
+}
+
+/// A running network serving edge: TCP listener + cluster.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    cluster: Arc<Cluster>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept: JoinHandle<()>,
+}
+
+impl NetServer {
+    /// Bind, start the cluster and the accept thread, return immediately.
+    pub fn start(cfg: &NetServerConfig, backend: BackendChoice) -> Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding listener on {}", cfg.addr))?;
+        let local_addr = listener.local_addr().context("resolving bound address")?;
+        let cluster = Arc::new(Cluster::start(&cfg.cluster, backend));
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let cluster = cluster.clone();
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let scheme = cfg.cluster.service.scheme;
+            let writer_queue = cfg.writer_queue.max(1);
+            std::thread::spawn(move || {
+                let mut workers: Vec<JoinHandle<()>> = Vec::new();
+                for incoming in listener.incoming() {
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let stream = match incoming {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    // Keep a handle for forced shutdown; readers blocked in
+                    // `read` see EOF when `stop` shuts these down.
+                    if let Ok(clone) = stream.try_clone() {
+                        conns.lock().unwrap().push(clone);
+                    }
+                    let cluster = cluster.clone();
+                    workers.push(std::thread::spawn(move || {
+                        handle_conn(stream, &cluster, scheme, writer_queue);
+                    }));
+                }
+                for w in workers {
+                    let _ = w.join();
+                }
+            })
+        };
+        Ok(NetServer { local_addr, cluster, stop, conns, accept })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The cluster behind the listener (op counters, metrics — the e2e
+    /// oracle that per-class executed counts match frames sent).
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// Stop accepting, close every live connection, join every thread,
+    /// then drain the cluster and return its final report.
+    pub fn stop(self) -> ClusterReport {
+        let NetServer { local_addr, cluster, stop, conns, accept } = self;
+        stop.store(true, Ordering::Release);
+        // Unblock the accept loop (it re-checks `stop` per connection).
+        let _ = TcpStream::connect(local_addr);
+        for s in conns.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let _ = accept.join();
+        match Arc::try_unwrap(cluster) {
+            Ok(c) => c.shutdown(),
+            // Defensive: joining the accept thread joined every reader and
+            // writer, so no clone should survive — but never panic in
+            // shutdown.
+            Err(shared) => {
+                shared.drain();
+                shared.report()
+            }
+        }
+    }
+}
+
+/// Serve one connection: spawn the writer, run the reader inline, join.
+fn handle_conn(stream: TcpStream, cluster: &Cluster, scheme: SchemeKind, writer_queue: usize) {
+    let _ = stream.set_nodelay(true);
+    let writer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = sync_channel::<Pending>(writer_queue);
+    let writer = std::thread::spawn(move || write_loop(writer_stream, rx));
+    read_loop(stream, cluster, scheme, &tx);
+    drop(tx); // writer drains the queue FIFO, then exits
+    let _ = writer.join();
+}
+
+/// Decode frames and resolve admission until EOF / framing loss / error.
+fn read_loop(stream: TcpStream, cluster: &Cluster, scheme: SchemeKind, tx: &SyncSender<Pending>) {
+    let mut reader = BufReader::new(stream);
+    let mut payload = Vec::with_capacity(wire::MAX_REQUEST_PAYLOAD);
+    loop {
+        match wire::read_frame(&mut reader, &mut payload) {
+            // Transport error: the peer is unreachable, nothing to answer.
+            Err(_) => return,
+            Ok(FrameRead::Eof) => return,
+            Ok(FrameRead::Truncated) | Ok(FrameRead::Oversized(_)) => {
+                // Framing lost: answer once, then close.
+                let resp = Response::error(Status::BadRequest, OpClass::from_index(0), 0);
+                let _ = tx.send(Pending::Immediate(resp));
+                return;
+            }
+            Ok(FrameRead::Frame) => {}
+        }
+        let req = match Request::decode(&payload) {
+            Ok(req) => req,
+            Err(_) => {
+                // In-frame error: framing intact, connection stays open.
+                let resp = Response::error(Status::BadRequest, OpClass::from_index(0), 0);
+                if tx.send(Pending::Immediate(resp)).is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
+        let pending = if req.scheme != scheme || req.round != RoundMode::NearestEven {
+            Pending::Immediate(Response::error(Status::Unsupported, req.class, req.id))
+        } else {
+            match cluster.try_submit(req.id, req.class, req.a, req.b) {
+                Ok(reply) => Pending::Submitted { id: req.id, class: req.class, reply },
+                // Backpressure and shutdown become status responses — the
+                // connection survives a saturated cluster.
+                Err(e) => Pending::Immediate(Response::error(Status::from(e), req.class, req.id)),
+            }
+        };
+        if tx.send(pending).is_err() {
+            return; // writer side is gone
+        }
+    }
+}
+
+/// Drain the FIFO queue: wait for each admitted reply, encode, write.
+fn write_loop(stream: TcpStream, rx: Receiver<Pending>) {
+    let mut writer = BufWriter::new(stream);
+    let mut buf = Vec::with_capacity(64);
+    while let Ok(pending) = rx.recv() {
+        let resp = match pending {
+            Pending::Immediate(resp) => resp,
+            Pending::Submitted { id, class, reply } => match reply.recv() {
+                Ok(done) => Response::ok(class, id, done.bits),
+                // Admitted but the shard died before replying: the client
+                // still gets exactly one response for the frame.
+                Err(_) => Response::error(Status::Internal, class, id),
+            },
+        };
+        buf.clear();
+        resp.encode(&mut buf);
+        if writer.write_all(&buf).is_err() || writer.flush().is_err() {
+            return; // peer gone; remaining replies are dropped with the queue
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServiceConfig;
+
+    fn tiny_config() -> NetServerConfig {
+        NetServerConfig {
+            cluster: ClusterConfig {
+                shards: 1,
+                service: ServiceConfig {
+                    workers: 1,
+                    max_batch: 32,
+                    linger_us: 100,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    fn send_recv(stream: &mut TcpStream, frame: &[u8]) -> Response {
+        stream.write_all(frame).unwrap();
+        let mut payload = Vec::new();
+        assert_eq!(wire::read_frame(stream, &mut payload).unwrap(), FrameRead::Frame);
+        Response::decode(&payload).unwrap()
+    }
+
+    #[test]
+    fn loopback_multiply_and_unsupported() {
+        let server = NetServer::start(
+            &tiny_config(),
+            BackendChoice::native(SchemeKind::Civp),
+        )
+        .unwrap();
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        let one = OpClass::Double.format().one();
+        let mut frame = Vec::new();
+        Request {
+            id: 42,
+            class: OpClass::Double,
+            scheme: SchemeKind::Civp,
+            round: RoundMode::NearestEven,
+            a: one,
+            b: one,
+        }
+        .encode(&mut frame);
+        let resp = send_recv(&mut stream, &frame);
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(resp.id, 42);
+        assert_eq!(resp.bits, one, "1.0 * 1.0 is exact over the wire too");
+        // Wrong scheme for this server: a status response, not a close.
+        frame.clear();
+        Request {
+            id: 43,
+            class: OpClass::Double,
+            scheme: SchemeKind::Baseline18,
+            round: RoundMode::NearestEven,
+            a: one,
+            b: one,
+        }
+        .encode(&mut frame);
+        let resp = send_recv(&mut stream, &frame);
+        assert_eq!(resp.status, Status::Unsupported);
+        assert_eq!(resp.id, 43);
+        // The connection survived both: one more good request.
+        frame.clear();
+        Request {
+            id: 44,
+            class: OpClass::Double,
+            scheme: SchemeKind::Civp,
+            round: RoundMode::NearestEven,
+            a: one,
+            b: one,
+        }
+        .encode(&mut frame);
+        assert_eq!(send_recv(&mut stream, &frame).status, Status::Ok);
+        drop(stream);
+        let report = server.stop();
+        assert_eq!(report.total_ops, 2, "only the two supported requests executed");
+    }
+
+    #[test]
+    fn malformed_frame_gets_bad_request_not_a_hang() {
+        let server = NetServer::start(
+            &tiny_config(),
+            BackendChoice::native(SchemeKind::Civp),
+        )
+        .unwrap();
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        // Oversized length prefix: one BadRequest, then the server closes.
+        stream.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        let mut payload = Vec::new();
+        assert_eq!(wire::read_frame(&mut stream, &mut payload).unwrap(), FrameRead::Frame);
+        let resp = Response::decode(&payload).unwrap();
+        assert_eq!(resp.status, Status::BadRequest);
+        assert_eq!(wire::read_frame(&mut stream, &mut payload).unwrap(), FrameRead::Eof);
+        server.stop();
+    }
+}

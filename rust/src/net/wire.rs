@@ -1,0 +1,519 @@
+//! Length-prefixed binary wire protocol for the network serving edge.
+//!
+//! Every frame on the wire is a little-endian `u32` payload length
+//! followed by exactly that many payload bytes. Operand width is the op
+//! class's packed size (`total_bits / 8`), so a bfloat16 request is 16
+//! payload bytes and a binary128 request is [`MAX_REQUEST_PAYLOAD`]:
+//!
+//! ```text
+//!   request  = len:u32 | ver:u8 | class:u8 | scheme:u8 | round:u8
+//!            | id:u64 | a:[u8; w] | b:[u8; w]            (w = bits/8)
+//!   response = len:u32 | ver:u8 | status:u8 | class:u8
+//!            | id:u64 | bits:[u8; w]                     (bits iff Ok)
+//! ```
+//!
+//! `class`, `scheme` and `round` are the registry indices
+//! ([`OpClass::index`], [`SchemeKind::index`], [`RoundMode::index`]), so
+//! the wire vocabulary is derived from the in-process registries instead
+//! of a hand-mirrored table. Decoding is total: every malformed payload
+//! maps to a [`WireError`] (never a panic), which the listener answers
+//! with [`Status::BadRequest`].
+//!
+//! Admission outcomes map 1:1 onto status codes —
+//! [`crate::serve::AdmissionError`] `impl`s `Into<Status>` — so cluster
+//! backpressure reaches the client as a [`Status::Saturated`] *response*,
+//! not a dropped connection.
+
+use crate::decomp::{OpClass, SchemeKind};
+use crate::fpu::RoundMode;
+use crate::serve::AdmissionError;
+use std::io;
+
+/// Protocol version carried in every frame.
+pub const VERSION: u8 = 1;
+
+/// Fixed request-payload bytes before the operands.
+const REQ_FIXED: usize = 12;
+
+/// Fixed response-payload bytes before the (optional) result bits.
+const RESP_FIXED: usize = 11;
+
+/// Largest legal request payload (binary128: 12 + 2×16 bytes).
+pub const MAX_REQUEST_PAYLOAD: usize = REQ_FIXED + 32;
+
+/// Hard bound on any frame's payload length. A length prefix above this
+/// is a framing error ([`FrameRead::Oversized`]) — the reader refuses to
+/// allocate or skip it, answers `BadRequest` and closes.
+pub const MAX_FRAME: u32 = 64;
+
+/// Packed operand width in bytes for one op class.
+pub const fn operand_bytes(class: OpClass) -> usize {
+    (class.total_bits() / 8) as usize
+}
+
+/// Response status codes. `Saturated`/`Unservable`/`Draining` mirror
+/// [`AdmissionError`] (the unified admission vocabulary); the rest are
+/// wire-layer outcomes with no in-process admission analogue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Status {
+    /// Executed; the response carries the product bits.
+    Ok = 0,
+    /// Cluster-wide backpressure ([`AdmissionError::Saturated`]) —
+    /// transient, retry after draining replies.
+    Saturated = 1,
+    /// No live capacity serves this class
+    /// ([`AdmissionError::Unservable`]) — do not retry.
+    Unservable = 2,
+    /// Server shutting down ([`AdmissionError::Draining`]).
+    Draining = 3,
+    /// The frame did not decode ([`WireError`]).
+    BadRequest = 4,
+    /// Decoded fine, but asks for a scheme or rounding mode this server
+    /// is not configured to serve.
+    Unsupported = 5,
+    /// The request was admitted but its reply was lost server-side.
+    Internal = 6,
+}
+
+impl Status {
+    /// Every status, indexed by wire code.
+    pub const ALL: [Status; 7] = [
+        Status::Ok,
+        Status::Saturated,
+        Status::Unservable,
+        Status::Draining,
+        Status::BadRequest,
+        Status::Unsupported,
+        Status::Internal,
+    ];
+
+    /// Wire code.
+    pub const fn code(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`Status::code`]; `None` for unknown codes.
+    pub fn from_code(code: u8) -> Option<Status> {
+        Self::ALL.get(code as usize).copied()
+    }
+
+    /// Stable display name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Saturated => "saturated",
+            Status::Unservable => "unservable",
+            Status::Draining => "draining",
+            Status::BadRequest => "bad-request",
+            Status::Unsupported => "unsupported",
+            Status::Internal => "internal",
+        }
+    }
+}
+
+impl From<AdmissionError> for Status {
+    fn from(e: AdmissionError) -> Status {
+        match e {
+            AdmissionError::Saturated => Status::Saturated,
+            AdmissionError::Unservable => Status::Unservable,
+            AdmissionError::Draining => Status::Draining,
+        }
+    }
+}
+
+/// Why a payload failed to decode. Exhaustive and panic-free: the
+/// listener turns any of these into one [`Status::BadRequest`] response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Payload shorter than the fixed header.
+    Truncated,
+    /// Unknown protocol version byte.
+    BadVersion(u8),
+    /// Class index outside the [`OpClass`] registry.
+    BadClass(u8),
+    /// Scheme index outside [`SchemeKind::ALL`].
+    BadScheme(u8),
+    /// Rounding-mode index outside [`RoundMode::ALL`].
+    BadRound(u8),
+    /// Status code outside [`Status::ALL`] (response decode).
+    BadStatus(u8),
+    /// Payload length inconsistent with the class's operand width.
+    LengthMismatch {
+        /// Length the decoded header implies.
+        expect: usize,
+        /// Length actually received.
+        got: usize,
+    },
+}
+
+impl core::fmt::Display for WireError {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "payload shorter than fixed header"),
+            WireError::BadVersion(v) => write!(f, "unknown protocol version {v}"),
+            WireError::BadClass(c) => write!(f, "class index {c} outside registry"),
+            WireError::BadScheme(s) => write!(f, "scheme index {s} outside registry"),
+            WireError::BadRound(r) => write!(f, "rounding-mode index {r} out of range"),
+            WireError::BadStatus(s) => write!(f, "unknown status code {s}"),
+            WireError::LengthMismatch { expect, got } => {
+                write!(f, "payload length {got} != {expect} implied by header")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One multiplication request as it crosses the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Request {
+    /// Client-chosen request id, echoed verbatim in the response.
+    pub id: u64,
+    /// Op class of both operands and the result.
+    pub class: OpClass,
+    /// Partition organization the client expects to be serving.
+    pub scheme: SchemeKind,
+    /// Rounding mode.
+    pub round: RoundMode,
+    /// Packed operand A (low `total_bits` valid).
+    pub a: u128,
+    /// Packed operand B.
+    pub b: u128,
+}
+
+impl Request {
+    /// Append the full frame (length prefix + payload) to `buf`.
+    /// Operands are truncated to the class's packed width.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        let w = operand_bytes(self.class);
+        buf.extend_from_slice(&((REQ_FIXED + 2 * w) as u32).to_le_bytes());
+        buf.push(VERSION);
+        buf.push(self.class.index() as u8);
+        buf.push(self.scheme.index() as u8);
+        buf.push(self.round.index() as u8);
+        buf.extend_from_slice(&self.id.to_le_bytes());
+        buf.extend_from_slice(&self.a.to_le_bytes()[..w]);
+        buf.extend_from_slice(&self.b.to_le_bytes()[..w]);
+    }
+
+    /// Decode a request payload (the bytes *after* the length prefix).
+    pub fn decode(payload: &[u8]) -> Result<Request, WireError> {
+        if payload.len() < REQ_FIXED {
+            return Err(WireError::Truncated);
+        }
+        if payload[0] != VERSION {
+            return Err(WireError::BadVersion(payload[0]));
+        }
+        if payload[1] as usize >= OpClass::COUNT {
+            return Err(WireError::BadClass(payload[1]));
+        }
+        let class = OpClass::from_index(payload[1] as usize);
+        let scheme = SchemeKind::from_index(payload[2] as usize)
+            .ok_or(WireError::BadScheme(payload[2]))?;
+        let round = RoundMode::from_index(payload[3] as usize)
+            .ok_or(WireError::BadRound(payload[3]))?;
+        let id = u64::from_le_bytes(payload[4..12].try_into().unwrap());
+        let w = operand_bytes(class);
+        let expect = REQ_FIXED + 2 * w;
+        if payload.len() != expect {
+            return Err(WireError::LengthMismatch { expect, got: payload.len() });
+        }
+        let a = read_u128(&payload[REQ_FIXED..REQ_FIXED + w]);
+        let b = read_u128(&payload[REQ_FIXED + w..]);
+        Ok(Request { id, class, scheme, round, a, b })
+    }
+}
+
+/// One response as it crosses the wire. `bits` is meaningful only when
+/// `status` is [`Status::Ok`]; `class` on an error response echoes the
+/// request's class when it decoded (placeholder index 0 otherwise).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Response {
+    /// Outcome.
+    pub status: Status,
+    /// Op class (sizes the result field when `Ok`).
+    pub class: OpClass,
+    /// Request id echoed back (0 when the request never decoded).
+    pub id: u64,
+    /// Packed product bits (`Ok` only).
+    pub bits: u128,
+}
+
+impl Response {
+    /// A successful response carrying the product bits.
+    pub fn ok(class: OpClass, id: u64, bits: u128) -> Response {
+        Response { status: Status::Ok, class, id, bits }
+    }
+
+    /// A non-`Ok` response (no result bits on the wire).
+    pub fn error(status: Status, class: OpClass, id: u64) -> Response {
+        debug_assert!(status != Status::Ok, "error responses carry no bits");
+        Response { status, class, id, bits: 0 }
+    }
+
+    /// Append the full frame (length prefix + payload) to `buf`.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        let w = if self.status == Status::Ok { operand_bytes(self.class) } else { 0 };
+        buf.extend_from_slice(&((RESP_FIXED + w) as u32).to_le_bytes());
+        buf.push(VERSION);
+        buf.push(self.status.code());
+        buf.push(self.class.index() as u8);
+        buf.extend_from_slice(&self.id.to_le_bytes());
+        if self.status == Status::Ok {
+            buf.extend_from_slice(&self.bits.to_le_bytes()[..w]);
+        }
+    }
+
+    /// Decode a response payload (the bytes *after* the length prefix).
+    pub fn decode(payload: &[u8]) -> Result<Response, WireError> {
+        if payload.len() < RESP_FIXED {
+            return Err(WireError::Truncated);
+        }
+        if payload[0] != VERSION {
+            return Err(WireError::BadVersion(payload[0]));
+        }
+        let status = Status::from_code(payload[1]).ok_or(WireError::BadStatus(payload[1]))?;
+        if payload[2] as usize >= OpClass::COUNT {
+            return Err(WireError::BadClass(payload[2]));
+        }
+        let class = OpClass::from_index(payload[2] as usize);
+        let id = u64::from_le_bytes(payload[3..11].try_into().unwrap());
+        let expect = RESP_FIXED + if status == Status::Ok { operand_bytes(class) } else { 0 };
+        if payload.len() != expect {
+            return Err(WireError::LengthMismatch { expect, got: payload.len() });
+        }
+        let bits = if status == Status::Ok { read_u128(&payload[RESP_FIXED..]) } else { 0 };
+        Ok(Response { status, class, id, bits })
+    }
+}
+
+/// Zero-extend up to 16 little-endian bytes into a `u128`.
+fn read_u128(bytes: &[u8]) -> u128 {
+    let mut buf = [0u8; 16];
+    buf[..bytes.len()].copy_from_slice(bytes);
+    u128::from_le_bytes(buf)
+}
+
+/// Outcome of one [`read_frame`] call.
+#[derive(Debug, PartialEq, Eq)]
+pub enum FrameRead {
+    /// A complete payload was read into the buffer.
+    Frame,
+    /// Clean end of stream at a frame boundary.
+    Eof,
+    /// The stream ended mid-header or mid-payload.
+    Truncated,
+    /// The length prefix is 0 or exceeds [`MAX_FRAME`] — framing is lost
+    /// and the stream cannot be resynchronized.
+    Oversized(u32),
+}
+
+/// Read one frame's payload into `buf` (cleared first). Transport errors
+/// (including read timeouts) surface as `Err`; protocol-shaped failures
+/// surface as non-`Frame` variants so callers can answer before closing.
+pub fn read_frame(r: &mut impl io::Read, buf: &mut Vec<u8>) -> io::Result<FrameRead> {
+    let mut len_bytes = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        let n = r.read(&mut len_bytes[got..])?;
+        if n == 0 {
+            return Ok(if got == 0 { FrameRead::Eof } else { FrameRead::Truncated });
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len_bytes);
+    if len == 0 || len > MAX_FRAME {
+        return Ok(FrameRead::Oversized(len));
+    }
+    buf.clear();
+    buf.resize(len as usize, 0);
+    let mut filled = 0;
+    while filled < buf.len() {
+        let n = r.read(&mut buf[filled..])?;
+        if n == 0 {
+            return Ok(FrameRead::Truncated);
+        }
+        filled += n;
+    }
+    Ok(FrameRead::Frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proput::forall;
+
+    fn mask(class: OpClass) -> u128 {
+        let bits = class.total_bits();
+        if bits == 128 {
+            u128::MAX
+        } else {
+            (1u128 << bits) - 1
+        }
+    }
+
+    /// Decode one frame from raw bytes (length prefix included), the way
+    /// the listener sees it.
+    fn decode_stream(bytes: &[u8]) -> (FrameRead, Vec<u8>) {
+        let mut cursor = std::io::Cursor::new(bytes);
+        let mut buf = Vec::new();
+        let fr = read_frame(&mut cursor, &mut buf).unwrap();
+        (fr, buf)
+    }
+
+    #[test]
+    fn request_roundtrip_every_class_scheme_round() {
+        // The satellite property: every registry class × every partition
+        // scheme × every rounding mode survives encode → frame → decode
+        // bit-exactly, with random (masked) operand bits.
+        forall(0x9E7, 500, |rng| {
+            for class in OpClass::ALL {
+                for scheme in SchemeKind::ALL {
+                    for round in RoundMode::ALL {
+                        let m = mask(class);
+                        let req = Request {
+                            id: rng.next_u64(),
+                            class,
+                            scheme,
+                            round,
+                            a: (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & m,
+                            b: (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & m,
+                        };
+                        let mut buf = Vec::new();
+                        req.encode(&mut buf);
+                        assert!(buf.len() <= 4 + MAX_REQUEST_PAYLOAD);
+                        let (fr, payload) = decode_stream(&buf);
+                        assert_eq!(fr, FrameRead::Frame);
+                        assert_eq!(Request::decode(&payload), Ok(req));
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn response_roundtrip_ok_and_every_error_status() {
+        forall(0x9E8, 2000, |rng| {
+            let class = OpClass::from_index(rng.below(OpClass::COUNT as u64) as usize);
+            let id = rng.next_u64();
+            let ok = Response::ok(
+                class,
+                id,
+                (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & mask(class),
+            );
+            let mut buf = Vec::new();
+            ok.encode(&mut buf);
+            let (fr, payload) = decode_stream(&buf);
+            assert_eq!(fr, FrameRead::Frame);
+            assert_eq!(Response::decode(&payload), Ok(ok));
+            for status in Status::ALL {
+                if status == Status::Ok {
+                    continue;
+                }
+                let err = Response::error(status, class, id);
+                buf.clear();
+                err.encode(&mut buf);
+                let (fr, payload) = decode_stream(&buf);
+                assert_eq!(fr, FrameRead::Frame);
+                assert_eq!(Response::decode(&payload), Ok(err));
+            }
+        });
+    }
+
+    #[test]
+    fn status_codes_are_stable_and_mirror_admission_errors() {
+        for (i, s) in Status::ALL.into_iter().enumerate() {
+            assert_eq!(s.code() as usize, i);
+            assert_eq!(Status::from_code(s.code()), Some(s));
+        }
+        assert_eq!(Status::from_code(7), None);
+        assert_eq!(Status::from(AdmissionError::Saturated), Status::Saturated);
+        assert_eq!(Status::from(AdmissionError::Unservable), Status::Unservable);
+        assert_eq!(Status::from(AdmissionError::Draining), Status::Draining);
+    }
+
+    fn valid_request_frame() -> Vec<u8> {
+        let req = Request {
+            id: 7,
+            class: OpClass::Single,
+            scheme: SchemeKind::Civp,
+            round: RoundMode::NearestEven,
+            a: 0x3F80_0000,
+            b: 0x3F80_0000,
+        };
+        let mut buf = Vec::new();
+        req.encode(&mut buf);
+        buf
+    }
+
+    #[test]
+    fn malformed_bad_version() {
+        let mut frame = valid_request_frame();
+        frame[4] = 99; // version byte is first payload byte
+        let (fr, payload) = decode_stream(&frame);
+        assert_eq!(fr, FrameRead::Frame);
+        assert_eq!(Request::decode(&payload), Err(WireError::BadVersion(99)));
+    }
+
+    #[test]
+    fn malformed_unknown_indices() {
+        let mut frame = valid_request_frame();
+        frame[5] = OpClass::COUNT as u8;
+        let (_, payload) = decode_stream(&frame);
+        assert_eq!(Request::decode(&payload), Err(WireError::BadClass(OpClass::COUNT as u8)));
+
+        let mut frame = valid_request_frame();
+        frame[6] = 200;
+        let (_, payload) = decode_stream(&frame);
+        assert_eq!(Request::decode(&payload), Err(WireError::BadScheme(200)));
+
+        let mut frame = valid_request_frame();
+        frame[7] = RoundMode::COUNT as u8;
+        let (_, payload) = decode_stream(&frame);
+        assert_eq!(Request::decode(&payload), Err(WireError::BadRound(RoundMode::COUNT as u8)));
+    }
+
+    #[test]
+    fn malformed_length_mismatch() {
+        // Claim Single (needs 12 + 8) but frame only 12 + 4 payload bytes.
+        let frame = valid_request_frame();
+        let short = &frame[..4 + REQ_FIXED + 4];
+        let mut with_len = ((REQ_FIXED + 4) as u32).to_le_bytes().to_vec();
+        with_len.extend_from_slice(&short[4..]);
+        let (fr, payload) = decode_stream(&with_len);
+        assert_eq!(fr, FrameRead::Frame);
+        assert_eq!(
+            Request::decode(&payload),
+            Err(WireError::LengthMismatch { expect: REQ_FIXED + 8, got: REQ_FIXED + 4 })
+        );
+    }
+
+    #[test]
+    fn malformed_truncated_header_and_payload() {
+        // Stream ends inside the 4-byte length prefix.
+        let (fr, _) = decode_stream(&[0x10, 0x00]);
+        assert_eq!(fr, FrameRead::Truncated);
+        // Stream ends inside the payload.
+        let frame = valid_request_frame();
+        let (fr, _) = decode_stream(&frame[..frame.len() - 3]);
+        assert_eq!(fr, FrameRead::Truncated);
+        // Empty stream is a clean EOF, not an error.
+        let (fr, _) = decode_stream(&[]);
+        assert_eq!(fr, FrameRead::Eof);
+    }
+
+    #[test]
+    fn malformed_oversized_and_zero_length() {
+        let (fr, _) = decode_stream(&u32::MAX.to_le_bytes());
+        assert_eq!(fr, FrameRead::Oversized(u32::MAX));
+        let (fr, _) = decode_stream(&0u32.to_le_bytes());
+        assert_eq!(fr, FrameRead::Oversized(0));
+        // MAX_FRAME itself is fine (boundary).
+        let mut frame = (MAX_FRAME).to_le_bytes().to_vec();
+        frame.extend_from_slice(&vec![0u8; MAX_FRAME as usize]);
+        let (fr, payload) = decode_stream(&frame);
+        assert_eq!(fr, FrameRead::Frame);
+        assert_eq!(payload.len(), MAX_FRAME as usize);
+    }
+}

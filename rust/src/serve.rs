@@ -1,0 +1,85 @@
+//! Serving-layer admission vocabulary shared by every submit path.
+//!
+//! Before the network edge landed, each layer spelled "request turned
+//! away" differently: the batcher had `SubmitError::{QueueFull, Closed}`,
+//! the cluster had `ClusterSubmitError::{Saturated, Unservable, Closed}`,
+//! and a wire protocol would have needed a third spelling. This module is
+//! the single vocabulary: [`AdmissionError`] is returned by
+//! [`crate::coordinator::Service::try_submit`], by
+//! [`crate::cluster::Cluster::try_submit`], and mapped 1:1 onto the wire
+//! status codes in [`crate::net::wire::Status`] — one admission-error type
+//! across coordinator, cluster and net.
+
+/// Why a submit was not admitted.
+///
+/// The three outcomes have distinct retry semantics, which is why they
+/// must not collapse into one "error" blob on the wire:
+///
+/// * [`Saturated`](AdmissionError::Saturated) — transient backpressure;
+///   retrying after replies drain can succeed.
+/// * [`Unservable`](AdmissionError::Unservable) — no live capacity for
+///   this op class at all; retrying cannot succeed until capacity is
+///   restored, so blocking submit paths fail fast instead of spinning.
+/// * [`Draining`](AdmissionError::Draining) — the serving layer is
+///   shutting down; the connection/client should go elsewhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AdmissionError {
+    /// Every candidate queue or shard is at its bound — cluster- or
+    /// service-wide backpressure. Transient: retrying can succeed once
+    /// in-flight replies are consumed.
+    Saturated,
+    /// No live shard can serve this op class (drained, or the block kinds
+    /// the class needs are gone). Not backpressure — permanent until
+    /// capacity is restored.
+    Unservable,
+    /// The service, shard or cluster has closed its queues and is
+    /// draining; no new work is admitted.
+    Draining,
+}
+
+impl AdmissionError {
+    /// Stable display / wire name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            AdmissionError::Saturated => "saturated",
+            AdmissionError::Unservable => "unservable",
+            AdmissionError::Draining => "draining",
+        }
+    }
+}
+
+impl core::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        match self {
+            AdmissionError::Saturated => write!(f, "all queues saturated (backpressure)"),
+            AdmissionError::Unservable => {
+                write!(f, "no live capacity can serve this op class")
+            }
+            AdmissionError::Draining => write!(f, "serving layer draining (shutdown)"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_stable_and_distinct() {
+        let all = [
+            AdmissionError::Saturated,
+            AdmissionError::Unservable,
+            AdmissionError::Draining,
+        ];
+        for (i, a) in all.iter().enumerate() {
+            for b in &all[i + 1..] {
+                assert_ne!(a, b);
+                assert_ne!(a.name(), b.name());
+            }
+            assert!(!format!("{a}").is_empty());
+        }
+        assert_eq!(AdmissionError::Saturated.name(), "saturated");
+    }
+}

@@ -69,7 +69,7 @@ fn pjrt_service_agrees_with_native_service() {
     .expect("engine load");
     let cfg = ServiceConfig { workers: 1, max_batch: 256, linger_us: 300, ..Default::default() };
     let pjrt = Service::start(&cfg, BackendChoice::Pjrt(handle.clone()));
-    let native = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
+    let native = Service::start(&cfg, BackendChoice::native(SchemeKind::Civp));
 
     // The PJRT artifacts cover the paper's three classes only; sub-single
     // formats are native-backend-only until fp16/bf16 artifacts exist.
@@ -189,7 +189,7 @@ fn worker_survives_backend_failures() {
 #[test]
 fn dropped_receiver_does_not_wedge_service() {
     let cfg = ServiceConfig { workers: 1, max_batch: 8, linger_us: 50, ..Default::default() };
-    let svc = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
+    let svc = Service::start(&cfg, BackendChoice::native(SchemeKind::Civp));
     // submit and immediately drop receivers
     for i in 0..200u64 {
         let rx = svc.submit(i, OpClass::Double, 1u128 << 62, 1u128 << 62).unwrap();
@@ -207,7 +207,7 @@ fn dropped_receiver_does_not_wedge_service() {
 fn service_under_all_workload_mixes() {
     for spec in WorkloadSpec::ALL {
         let cfg = ServiceConfig::default();
-        let svc = Service::start(&cfg, BackendChoice::Native(SchemeKind::Civp));
+        let svc = Service::start(&cfg, BackendChoice::native(SchemeKind::Civp));
         let trace = TraceGen::new(5, spec.mix(), 0).take(400);
         let mut rxs = Vec::new();
         for req in &trace {

@@ -1,0 +1,184 @@
+//! End-to-end tests for the network serving edge: the built-in load
+//! generator against a loopback `NetServer`, plus socket-level protocol
+//! abuse. These are the integration-level counterparts of the unit tests
+//! inside `civp::net` — full frames over real TCP connections, checked
+//! against the cluster's own per-class op counters.
+
+use civp::cluster::ClusterConfig;
+use civp::config::ServiceConfig;
+use civp::coordinator::BackendChoice;
+use civp::decomp::{OpClass, SchemeKind};
+use civp::fpu::RoundMode;
+use civp::net::wire::{self, FrameRead, Request, Response};
+use civp::net::{LoadgenConfig, NetServer, NetServerConfig, Status};
+use civp::trace::WorkloadSpec;
+use std::io::Write;
+use std::net::TcpStream;
+
+fn small_server(max_inflight: u64) -> NetServer {
+    let cfg = NetServerConfig {
+        cluster: ClusterConfig {
+            shards: 2,
+            service: ServiceConfig {
+                workers: 2,
+                max_batch: 64,
+                linger_us: 50,
+                ..Default::default()
+            },
+            max_inflight,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    NetServer::start(&cfg, BackendChoice::native(SchemeKind::Civp)).unwrap()
+}
+
+fn loadgen_config(server: &NetServer, spec: WorkloadSpec, requests: u64) -> LoadgenConfig {
+    LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        conns: 3,
+        requests,
+        warmup: requests / 20,
+        mix: spec.mix(),
+        mix_name: spec.name().to_string(),
+        ..LoadgenConfig::default()
+    }
+}
+
+/// The acceptance-criterion run: `mixed` and `ml` mixes over loopback,
+/// every frame answered exactly once, and the per-class frame counts the
+/// generator sent equal to the per-class op counts the cluster executed.
+#[test]
+fn loopback_mixes_lose_nothing_and_counters_match() {
+    for spec in [WorkloadSpec::Mixed, WorkloadSpec::MlInference] {
+        let server = small_server(4096);
+        let cfg = loadgen_config(&server, spec, 2000);
+        let report = civp::net::loadgen::run(&cfg).unwrap();
+        assert_eq!(report.sent, 2000, "{spec:?}: every request must go out");
+        assert_eq!(report.lost, 0, "{spec:?}: no reply may be dropped");
+        assert_eq!(
+            report.replies(),
+            report.sent,
+            "{spec:?}: exactly one reply per frame (no loss, no duplication)"
+        );
+        // Uncontended in-flight budget: everything is admitted and executed.
+        assert_eq!(report.ok, report.sent, "{spec:?}: all replies Ok");
+        // The e2e oracle: what the generator stamped per class is what the
+        // fabric executed per class.
+        let mut executed = [0u64; OpClass::COUNT];
+        for (op, n) in server.cluster().op_counts() {
+            executed[op.class.index()] += n;
+        }
+        assert_eq!(
+            executed, report.per_class_sent,
+            "{spec:?}: per-class executed ops must match per-class frames sent"
+        );
+        // The ml mix must actually exercise more than one class end to end.
+        let classes_hit = report.per_class_sent.iter().filter(|&&n| n > 0).count();
+        assert!(classes_hit >= 2, "{spec:?}: expected a multi-class mix, hit {classes_hit}");
+        let cluster_report = server.stop();
+        assert_eq!(cluster_report.total_ops, 2000);
+        assert_eq!(cluster_report.rejected_saturated, 0);
+    }
+}
+
+/// Saturation is a wire status, not a dropped connection: with a one-slot
+/// in-flight budget and a closed-loop flood, some frames must come back
+/// `Saturated`, every frame still gets exactly one reply, and the wire
+/// counts agree with the cluster's admission counters.
+#[test]
+fn saturated_cluster_answers_with_status_codes() {
+    let cfg = NetServerConfig {
+        cluster: ClusterConfig {
+            shards: 1,
+            service: ServiceConfig {
+                workers: 1,
+                max_batch: 8,
+                linger_us: 200,
+                ..Default::default()
+            },
+            max_inflight: 1,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = NetServer::start(&cfg, BackendChoice::native(SchemeKind::Civp)).unwrap();
+    let lg = LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        conns: 4,
+        requests: 800,
+        warmup: 0,
+        mix: WorkloadSpec::Mixed.mix(),
+        mix_name: "mixed".to_string(),
+        ..LoadgenConfig::default()
+    };
+    let report = civp::net::loadgen::run(&lg).unwrap();
+    assert_eq!(report.lost, 0, "saturation must not cost replies");
+    assert_eq!(report.replies(), report.sent);
+    assert!(report.saturated > 0, "a one-slot cluster under flood must push back");
+    assert!(report.ok > 0, "admitted requests still complete");
+    assert_eq!(report.other, 0, "only Ok and Saturated can occur here");
+    let cluster_report = server.stop();
+    assert_eq!(
+        cluster_report.rejected_saturated, report.saturated,
+        "wire Saturated replies must equal cluster admission rejections"
+    );
+    assert_eq!(cluster_report.total_ops, report.ok, "executed ops equal Ok replies");
+}
+
+/// Socket-level protocol abuse: in-frame garbage answers `BadRequest` and
+/// keeps the connection usable; a framing-level lie (oversized length
+/// prefix) answers `BadRequest` once and then the server closes.
+#[test]
+fn malformed_frames_get_error_responses_not_hangs() {
+    let server = small_server(4096);
+    let one = OpClass::Single.format().one();
+
+    // A well-formed frame with a bad version byte: BadRequest, then the
+    // same connection still serves a valid request.
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut frame = Vec::new();
+    Request {
+        id: 7,
+        class: OpClass::Single,
+        scheme: SchemeKind::Civp,
+        round: RoundMode::NearestEven,
+        a: one,
+        b: one,
+    }
+    .encode(&mut frame);
+    let mut bad = frame.clone();
+    bad[4] = 0x7f; // version byte lives right after the length prefix
+    stream.write_all(&bad).unwrap();
+    let mut payload = Vec::new();
+    assert_eq!(wire::read_frame(&mut stream, &mut payload).unwrap(), FrameRead::Frame);
+    assert_eq!(Response::decode(&payload).unwrap().status, Status::BadRequest);
+    stream.write_all(&frame).unwrap();
+    assert_eq!(wire::read_frame(&mut stream, &mut payload).unwrap(), FrameRead::Frame);
+    let resp = Response::decode(&payload).unwrap();
+    assert_eq!(resp.status, Status::Ok);
+    assert_eq!(resp.id, 7);
+    drop(stream);
+
+    // An oversized length prefix: one BadRequest, then a clean close.
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    assert_eq!(wire::read_frame(&mut stream, &mut payload).unwrap(), FrameRead::Frame);
+    assert_eq!(Response::decode(&payload).unwrap().status, Status::BadRequest);
+    assert_eq!(wire::read_frame(&mut stream, &mut payload).unwrap(), FrameRead::Eof);
+    drop(stream);
+
+    // A truncated header (connection dies mid-prefix): the server must
+    // just close its side without wedging the listener.
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream.write_all(&[0x01, 0x02]).unwrap();
+    drop(stream);
+
+    // The listener survived all three: a fresh connection still works.
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    stream.write_all(&frame).unwrap();
+    assert_eq!(wire::read_frame(&mut stream, &mut payload).unwrap(), FrameRead::Frame);
+    assert_eq!(Response::decode(&payload).unwrap().status, Status::Ok);
+    drop(stream);
+    server.stop();
+}

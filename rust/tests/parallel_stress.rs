@@ -11,7 +11,8 @@
 //! (release mode) to multiply the load.
 
 use civp::config::ServiceConfig;
-use civp::coordinator::{BackendChoice, Service, SubmitError};
+use civp::coordinator::{BackendChoice, NativeOptions, Service};
+use civp::serve::AdmissionError;
 use civp::decomp::{DecompMul, ExecStats, Executor, OpClass, PlanCache, SchemeKind};
 use civp::fpu::{FpuBatch, RoundMode};
 use civp::proput::Rng;
@@ -135,7 +136,7 @@ fn service_on_shared_executor_under_concurrent_load() {
     let exec = Arc::new(Executor::with_threshold(2, 64));
     let svc = Arc::new(Service::start(
         &cfg,
-        BackendChoice::NativeParallel(SchemeKind::Civp, exec.clone()),
+        BackendChoice::Native(NativeOptions::new(SchemeKind::Civp).executor(exec.clone())),
     ));
     let handles: Vec<_> = (0..threads)
         .map(|t| {
@@ -148,7 +149,9 @@ fn service_on_shared_executor_under_concurrent_load() {
                     let one = class.format().one();
                     match svc.submit(i, class, one, one) {
                         Ok(rx) => pending.push((one, rx)),
-                        Err(SubmitError::Closed) => unreachable!("nobody closes during load"),
+                        Err(AdmissionError::Draining) => {
+                            unreachable!("nobody closes during load")
+                        }
                         Err(e) => panic!("unexpected {e:?}"),
                     }
                     if pending.len() >= 512 {
