@@ -178,6 +178,7 @@ def test_strict_mode_requires_parallel_artifact(tmp_path):
         "BENCH_lanes.json",
         "BENCH_formats.json",
         "BENCH_net.json",
+        "BENCH_net_sweep.json",
     ]
     for name in required:
         write_artifact(tmp_path / name, [row("dummy/" + name, 1.0)])
@@ -262,11 +263,79 @@ def test_net_gate_fails_on_missing_count_row(tmp_path):
 
 def test_update_never_baselines_net_rows(tmp_path):
     # net latencies are wall time over a real socket — pinning them would
-    # gate PRs on runner load.
-    rows = GOOD_NET + [row("lanes/civp-double/lane-path", 80.0)]
+    # gate PRs on runner load. Sweep rows share the net/ prefix, so they
+    # are equally unbaselineable.
+    rows = (
+        GOOD_NET
+        + sweep_rows("mixed", 4, [("1000", 1000.0, 0), ("2000", 1200.0, 0)])
+        + [row("lanes/civp-double/lane-path", 80.0)]
+    )
     art = write_artifact(tmp_path / "BENCH_net.json", rows)
     code, out = run_gate(tmp_path, art.name, "--update", "--baseline", "BL.json")
     assert code == 0, out
     names = [r["name"] for r in json.loads((tmp_path / "BL.json").read_text())]
     assert not any(n.startswith("net/") for n in names), names
     assert "lanes/civp-double/lane-path" in names
+
+
+def sweep_rows(mix, workers, points):
+    """`points` = [(rate_label, p99_ns, lost)] -> offered-load sweep rows."""
+    prefix = f"net/{mix}"
+    rows = [count_row(f"{prefix}/sweep-workers", workers)] if workers else []
+    for label, p99, lost in points:
+        rows.append(row(f"{prefix}/p50@{label}", p99 / 2.0))
+        rows.append(row(f"{prefix}/p99@{label}", p99))
+        rows.append(count_row(f"{prefix}/lost@{label}", lost))
+    return rows
+
+
+# Flat through 2000 req/s (p99 within 3x of the best), blows up at 4000:
+# the knee sits at 2000, comfortably above 4 workers x 50 req/s = 200.
+GOOD_SWEEP = sweep_rows(
+    "mixed", 4, [("1000", 1000.0, 0), ("2000", 1800.0, 0), ("4000", 9000.0, 0)]
+)
+
+
+def test_knee_gate_passes_and_locates_the_knee(tmp_path):
+    art = write_artifact(tmp_path / "BENCH_net_sweep.json", GOOD_SWEEP)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 0, out
+    assert "net knee ok (mixed): knee @ 2000 req/s" in out
+
+
+def test_knee_gate_fails_when_knee_below_worker_floor(tmp_path):
+    # 4 workers -> floor 200 req/s; a curve already past 3x slack at
+    # 150 req/s pins the knee at 100, below the floor.
+    bad = sweep_rows("mixed", 4, [("100", 1000.0, 0), ("150", 5000.0, 0)])
+    art = write_artifact(tmp_path / "BENCH_net_sweep.json", bad)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "below the floor 200" in out
+
+
+def test_knee_gate_fails_on_lost_replies_at_any_rate(tmp_path):
+    bad = sweep_rows("mixed", 4, [("1000", 1000.0, 0), ("2000", 1800.0, 3)])
+    art = write_artifact(tmp_path / "BENCH_net_sweep.json", bad)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "3 lost replies at swept rate 2000" in out
+
+
+def test_knee_gate_fails_without_sweep_workers_row(tmp_path):
+    # Without the pool size the floor is meaningless — the run must
+    # declare what it was sized for.
+    bad = sweep_rows("mixed", None, [("1000", 1000.0, 0), ("2000", 1800.0, 0)])
+    art = write_artifact(tmp_path / "BENCH_net_sweep.json", bad)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "`sweep-workers` row is missing" in out
+
+
+def test_knee_gate_fails_when_curve_has_no_flat_region(tmp_path):
+    # p99 at the lowest rate is already past 3x the sweep's best: no
+    # prefix qualifies, so there is no knee to locate.
+    bad = sweep_rows("mixed", 4, [("100", 9000.0, 0), ("200", 1000.0, 0)])
+    art = write_artifact(tmp_path / "BENCH_net_sweep.json", bad)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "no flat region" in out

@@ -52,7 +52,16 @@ artifacts (CI does this with CIVP_BENCH_QUICK=1). Three layers of checks:
      loadgen`): latency percentiles in order (p50 <= p99 <= p999), zero
      lost replies, and reply conservation (ok + saturated + other + lost
      == frames sent). Latency/throughput magnitudes are wall time over a
-     real socket, so `net/` rows are never baselined.
+     real socket, so `net/` rows are never baselined;
+   * the offered-load sweep knee gate (`net/<mix>/p99@<rate>` rows from
+     `civp-server loadgen --sweep`, with `lost@<rate>` count rows and a
+     `sweep-workers` row stating the server's connection-worker pool
+     size): the knee is the largest swept rate whose prefix of the curve
+     keeps p99 within NET_KNEE_SLACK of the sweep's best p99. Every
+     swept point must lose zero replies, and the knee must not regress
+     below `workers x CIVP_NET_KNEE_FLOOR` req/s — gating knee
+     *location* (a machine-independent shape property of one run), never
+     absolute latency.
 
 When run with no file arguments (the CI shape), the three artifacts the
 bench targets write are REQUIRED to exist, and every baselined
@@ -80,6 +89,7 @@ REQUIRED_FILES = (
     "BENCH_formats.json",
     "BENCH_parallel.json",
     "BENCH_net.json",
+    "BENCH_net_sweep.json",
 )
 MODEL_SCALING_RE = re.compile(r"^cluster/mixed/model-scaling-(\d+)shard$")
 PARALLEL_SCALING_RE = re.compile(r"^parallel/model-scaling-b(\d+)-(\d+)core$")
@@ -397,6 +407,88 @@ def check_net_invariants(current, totals):
         print(f"invariant ok: net percentile order + reply conservation over {len(mixes)} mix(es)")
 
 
+NET_SWEEP_P99_RE = re.compile(r"^net/([^/]+)/p99@([0-9.]+)$")
+# p99 at a swept rate at-or-below the knee may exceed the sweep's best
+# p99 by at most this factor; the first rate whose curve prefix breaks
+# it is past the knee.
+NET_KNEE_SLACK = float(os.environ.get("CIVP_NET_KNEE_SLACK", 3.0))
+# The knee must sit at or above this many req/s per connection worker —
+# the regression contract is knee *location* relative to the pool size,
+# not absolute throughput.
+NET_KNEE_FLOOR_PER_WORKER = float(os.environ.get("CIVP_NET_KNEE_FLOOR", 50.0))
+
+
+def check_net_knee(current, totals):
+    """Knee-location gate over the offered-load sweep rows.
+
+    For each mix with `net/<mix>/p99@<rate>` rows: sort points by rate,
+    take the sweep's best (minimum) p99 as the flat-region reference,
+    and walk the curve upward — the knee is the last rate whose entire
+    prefix keeps p99 within NET_KNEE_SLACK of that best. Gates:
+
+    * every swept point has a `lost@<rate>` row equal to 0 (the sweep
+      is closed-loop, so a lost reply is a server drop, not overload);
+    * a `sweep-workers` count row states the server's pool size;
+    * some rate qualifies as the knee at all (a curve that blows up
+      immediately means the edge lost its flat region);
+    * knee_rate >= workers x NET_KNEE_FLOOR_PER_WORKER — the knee may
+      not regress below what the worker pool is sized to absorb.
+
+    Both sides of every comparison come from one run on one machine, so
+    runner speed cancels out: only the curve's *shape* is gated.
+    """
+    sweeps = {}
+    for name, p50 in current.items():
+        m = NET_SWEEP_P99_RE.match(name)
+        if m:
+            sweeps.setdefault(m.group(1), []).append((float(m.group(2)), m.group(2), p50))
+    if not sweeps:
+        return
+    for mix, points in sorted(sweeps.items()):
+        points.sort()
+        prefix = f"net/{mix}"
+        workers = totals.get(f"{prefix}/sweep-workers")
+        if not workers:
+            fail(f"{prefix}: sweep rows present but the `sweep-workers` row is missing")
+            continue
+        bad = False
+        for _rate, label, _p99 in points:
+            lost = totals.get(f"{prefix}/lost@{label}")
+            if lost is None:
+                fail(f"{prefix}: swept rate {label} has no `lost@{label}` row")
+                bad = True
+            elif lost != 0:
+                fail(f"{prefix}: {lost} lost replies at swept rate {label} (must be 0)")
+                bad = True
+        if bad:
+            continue
+        min_p99 = min(p99 for _, _, p99 in points)
+        if min_p99 <= 0:
+            fail(f"{prefix}: degenerate sweep (best p99 = {min_p99})")
+            continue
+        knee = None
+        for rate, _label, p99 in points:
+            if p99 <= min_p99 * NET_KNEE_SLACK:
+                knee = rate
+            else:
+                break
+        if knee is None:
+            fail(
+                f"{prefix}: no swept rate keeps p99 within {NET_KNEE_SLACK:g}x of the "
+                f"best ({min_p99:.0f} ns) — the curve has no flat region"
+            )
+            continue
+        floor = workers * NET_KNEE_FLOOR_PER_WORKER
+        curve = "  ".join(f"{label}:{p99:.0f}ns" for _, label, p99 in points)
+        if knee < floor:
+            fail(
+                f"{prefix}: knee at {knee:g} req/s is below the floor {floor:g} "
+                f"({workers:g} workers x {NET_KNEE_FLOOR_PER_WORKER:g} req/s) [{curve}]"
+            )
+        else:
+            print(f"net knee ok ({mix}): knee @ {knee:g} req/s >= floor {floor:g} [{curve}]")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("files", nargs="*", help="BENCH_*.json artifacts (default: glob repo root)")
@@ -484,6 +576,7 @@ def main():
     check_cluster_scaling(current)
     check_parallel_scaling(current)
     check_net_invariants(current, totals)
+    check_net_knee(current, totals)
 
     if failures:
         print(f"\nbench gate FAILED: {len(failures)} failure(s)")

@@ -11,8 +11,9 @@
 use crate::cluster::{ClusterConfig, RouterPolicy};
 use crate::config::ServiceConfig;
 use crate::coordinator::{BackendChoice, NativeOptions};
-use crate::decomp::{Executor, LaneConfig, LaneWidth, OpClass};
+use crate::decomp::{Executor, LaneConfig, LaneWidth, OpClass, SchemeKind};
 use crate::error::{bail, err, Result};
+use crate::net::server::{NetServerConfig, DEFAULT_NET_WORKERS, DEFAULT_PIPELINE_DEPTH};
 use crate::runtime::EngineHandle;
 use crate::trace::WorkloadSpec;
 use std::collections::BTreeMap;
@@ -168,6 +169,69 @@ impl Args {
         })
     }
 
+    /// Resolve the network-edge knobs — `--addr`, `--writer-queue`
+    /// (defaulting to the resolved `service.net_writer_queue`),
+    /// `--net-workers`, `--pipeline-depth`, `--schemes` (extra
+    /// [`SchemeKind`]s this listener serves through their own clusters)
+    /// — around an already-resolved cluster config.
+    pub fn net_server_config(
+        &self,
+        default_addr: &str,
+        cluster: ClusterConfig,
+    ) -> Result<NetServerConfig> {
+        let writer_queue = self.get_usize("writer-queue", cluster.service.net_writer_queue)?;
+        if writer_queue == 0 {
+            bail!("--writer-queue must be >= 1");
+        }
+        let net_workers = self.get_usize("net-workers", DEFAULT_NET_WORKERS)?;
+        if net_workers == 0 {
+            bail!("--net-workers must be >= 1");
+        }
+        let pipeline_depth = self.get_usize("pipeline-depth", DEFAULT_PIPELINE_DEPTH)?;
+        if pipeline_depth == 0 {
+            bail!("--pipeline-depth must be >= 1");
+        }
+        let mut extra_schemes = Vec::new();
+        for name in self
+            .get_str("schemes", "")
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+        {
+            let scheme = SchemeKind::parse(name)
+                .ok_or_else(|| err!("unknown scheme {name:?} in --schemes"))?;
+            if scheme != cluster.service.scheme && !extra_schemes.contains(&scheme) {
+                extra_schemes.push(scheme);
+            }
+        }
+        Ok(NetServerConfig {
+            addr: self.get_str("addr", default_addr),
+            cluster,
+            writer_queue,
+            net_workers,
+            pipeline_depth,
+            extra_schemes,
+        })
+    }
+
+    /// Resolve `--sweep rate1,rate2,...` into an ascending offered-load
+    /// list; `None` when the flag is absent (plain single-rate run).
+    pub fn sweep_rates(&self) -> Result<Option<Vec<f64>>> {
+        let Some(spec) = self.options.get("sweep") else {
+            return Ok(None);
+        };
+        let rates: Vec<f64> = spec
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse::<f64>().map_err(|_| err!("bad --sweep rate {s:?}")))
+            .collect::<Result<_>>()?;
+        if rates.is_empty() {
+            bail!("--sweep needs at least one rate");
+        }
+        Ok(Some(rates))
+    }
+
     /// Resolve `--workloads` (comma-separated [`WorkloadSpec`] names) for
     /// the load generator; `default` when absent.
     pub fn workloads(&self, default: &str) -> Result<Vec<WorkloadSpec>> {
@@ -261,6 +325,59 @@ mod tests {
         }
         let bad = p(&["cluster", "--policy", "nope"]);
         assert!(bad.cluster_config(ServiceConfig::default()).is_err());
+    }
+
+    #[test]
+    fn net_knobs_resolve_and_validate() {
+        let a = p(&[
+            "serve-net",
+            "--writer-queue",
+            "64",
+            "--net-workers",
+            "8",
+            "--pipeline-depth",
+            "16",
+            "--schemes",
+            "18x18, 9x9",
+        ]);
+        let cluster = a.cluster_config(ServiceConfig::default()).unwrap();
+        let net = a.net_server_config("127.0.0.1:0", cluster).unwrap();
+        assert_eq!(net.writer_queue, 64);
+        assert_eq!(net.net_workers, 8);
+        assert_eq!(net.pipeline_depth, 16);
+        assert_eq!(net.extra_schemes, vec![SchemeKind::Baseline18, SchemeKind::Baseline9]);
+        // Defaults: writer queue from the service config, pool constants.
+        let a = p(&["serve-net"]);
+        let cluster = a.cluster_config(ServiceConfig::default()).unwrap();
+        let net = a.net_server_config("127.0.0.1:0", cluster).unwrap();
+        assert_eq!(net.writer_queue, crate::config::DEFAULT_NET_WRITER_QUEUE);
+        assert_eq!(net.net_workers, DEFAULT_NET_WORKERS);
+        assert_eq!(net.pipeline_depth, DEFAULT_PIPELINE_DEPTH);
+        assert!(net.extra_schemes.is_empty());
+        // The primary scheme is not duplicated into the extras.
+        let a = p(&["serve-net", "--schemes", "civp,18x18,18x18"]);
+        let cluster = a.cluster_config(ServiceConfig::default()).unwrap();
+        let net = a.net_server_config("127.0.0.1:0", cluster).unwrap();
+        assert_eq!(net.extra_schemes, vec![SchemeKind::Baseline18]);
+        for bad in [
+            vec!["serve-net", "--writer-queue", "0"],
+            vec!["serve-net", "--net-workers", "0"],
+            vec!["serve-net", "--pipeline-depth", "0"],
+            vec!["serve-net", "--schemes", "nope"],
+        ] {
+            let a = p(&bad);
+            let cluster = a.cluster_config(ServiceConfig::default()).unwrap();
+            assert!(a.net_server_config("127.0.0.1:0", cluster).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn sweep_rate_lists_parse() {
+        assert_eq!(p(&["loadgen"]).sweep_rates().unwrap(), None);
+        let a = p(&["loadgen", "--sweep", "500, 1000,2000"]);
+        assert_eq!(a.sweep_rates().unwrap(), Some(vec![500.0, 1000.0, 2000.0]));
+        assert!(p(&["loadgen", "--sweep", "500,x"]).sweep_rates().is_err());
+        assert!(p(&["loadgen", "--sweep", ","]).sweep_rates().is_err());
     }
 
     #[test]

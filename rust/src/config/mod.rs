@@ -6,5 +6,5 @@ mod toml;
 #[cfg(test)]
 mod tests;
 
-pub use schema::ServiceConfig;
+pub use schema::{ServiceConfig, DEFAULT_NET_WRITER_QUEUE};
 pub use toml::{parse_toml, TomlValue};

@@ -8,6 +8,11 @@ use crate::error::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
+/// Default per-connection writer-queue bound for the network edge (the
+/// value `service.net_writer_queue` and `--writer-queue` default to —
+/// matches the constant the PR-8 thread-per-connection listener used).
+pub const DEFAULT_NET_WRITER_QUEUE: usize = 256;
+
 /// Everything `civp-server` needs to run. Every field has a default; a
 /// config file overrides selectively.
 #[derive(Clone, Debug, PartialEq)]
@@ -35,6 +40,12 @@ pub struct ServiceConfig {
     pub linger_us: u64,
     /// Bounded queue depth per precision (backpressure beyond this).
     pub queue_depth: usize,
+    /// Network edge: per-connection bound on responses queued for the
+    /// socket (`service.net_writer_queue` / `--writer-queue`). When a
+    /// connection has this many responses waiting, its worker stops
+    /// reading the socket — the mechanism that turns a slow reader into
+    /// TCP backpressure instead of unbounded buffering.
+    pub net_writer_queue: usize,
     /// Partition organization for the simulated fabric accounting.
     pub scheme: SchemeKind,
     /// Fabric preset to account against.
@@ -66,6 +77,7 @@ impl Default for ServiceConfig {
             max_batch: 256,
             linger_us: 200,
             queue_depth: 4096,
+            net_writer_queue: DEFAULT_NET_WRITER_QUEUE,
             scheme: SchemeKind::Civp,
             fabric: FabricKind::Civp,
             fabric_scale: 1,
@@ -124,18 +136,14 @@ impl ServiceConfig {
                     self.use_pjrt =
                         value.as_bool().with_context(|| format!("{key} must be bool"))?
                 }
+                "service.net_writer_queue" => self.net_writer_queue = req_usize(key, value)?,
                 "batcher.max_batch" => self.max_batch = req_usize(key, value)?,
                 "batcher.linger_us" => self.linger_us = req_usize(key, value)? as u64,
                 "batcher.queue_depth" => self.queue_depth = req_usize(key, value)?,
                 "fabric.scheme" => {
                     let s = req_str(key, value)?;
-                    self.scheme = match s.as_str() {
-                        "civp" => SchemeKind::Civp,
-                        "18x18" => SchemeKind::Baseline18,
-                        "25x18" => SchemeKind::Baseline25x18,
-                        "9x9" => SchemeKind::Baseline9,
-                        other => bail!("unknown scheme {other:?}"),
-                    };
+                    self.scheme = SchemeKind::parse(&s)
+                        .with_context(|| format!("unknown scheme {s:?}"))?;
                 }
                 "fabric.kind" => {
                     let s = req_str(key, value)?;
@@ -189,6 +197,9 @@ impl ServiceConfig {
                 "service.lane_width must be one of 8, 16 or 32 (got {})",
                 self.lane_width
             );
+        }
+        if self.net_writer_queue == 0 {
+            bail!("service.net_writer_queue must be >= 1");
         }
         if self.queue_depth < self.max_batch {
             bail!(

@@ -122,6 +122,20 @@ fn config_parallel_executor_keys() {
 }
 
 #[test]
+fn config_net_writer_queue_key() {
+    // Default matches the constant the network edge uses.
+    let cfg = ServiceConfig::default();
+    assert_eq!(cfg.net_writer_queue, DEFAULT_NET_WRITER_QUEUE);
+    assert_eq!(cfg.net_writer_queue, 256);
+    // TOML override round-trips.
+    let cfg = ServiceConfig::from_toml("[service]\nnet_writer_queue = 64\n").unwrap();
+    assert_eq!(cfg.net_writer_queue, 64);
+    // A zero bound would mean no reply may ever be queued.
+    assert!(ServiceConfig::from_toml("[service]\nnet_writer_queue = 0\n").is_err());
+    assert!(ServiceConfig::from_toml("[service]\nnet_writer_queue = -1\n").is_err());
+}
+
+#[test]
 fn config_rejects_unknown_key() {
     assert!(ServiceConfig::from_toml("[service]\nbogus = 1\n").is_err());
     assert!(ServiceConfig::from_toml("[workload]\nmix_float8 = 0.5\n").is_err());

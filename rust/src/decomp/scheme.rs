@@ -114,6 +114,13 @@ impl SchemeKind {
             SchemeKind::Baseline9 => "9x9",
         }
     }
+
+    /// Inverse of [`SchemeKind::name`]: parse a display name (the TOML
+    /// `fabric.scheme` value and the CLI `--schemes` entries resolve
+    /// through here, so the accepted vocabulary is the registry itself).
+    pub fn parse(name: &str) -> Option<SchemeKind> {
+        Self::ALL.into_iter().find(|k| k.name() == name)
+    }
 }
 
 /// One partial-product tile: chunk `i` of A times chunk `j` of B on a

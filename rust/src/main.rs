@@ -8,11 +8,14 @@
 //!                 serving + fabric reports.
 //! * `cluster`   — drive a trace through the sharded multi-fabric cluster
 //!                 (router policies, admission control, degradation demo).
-//! * `serve-net` — expose the cluster over TCP (length-prefixed binary
+//! * `serve-net` — expose per-scheme clusters over TCP through a bounded
+//!                 connection-worker pool (length-prefixed binary
 //!                 protocol; see `civp::net::wire`).
-//! * `loadgen`   — open-loop load generator against a `serve-net`
-//!                 listener (or an embedded loopback one), emitting
-//!                 latency/throughput rows as `BENCH_net.json`.
+//! * `loadgen`   — load generator against a `serve-net` listener (or an
+//!                 embedded loopback one): open-loop, closed-loop
+//!                 (`--closed-loop`), or an offered-load sweep
+//!                 (`--sweep`), emitting latency/throughput rows as
+//!                 `BENCH_net.json` / `BENCH_net_sweep.json`.
 //! * `analyze`   — print the §III block/utilization analysis table (E6).
 //! * `predicates` — run the adaptive-precision geometric-predicate demo.
 //! * `info`      — load the PJRT engine and print artifact facts.
@@ -29,7 +32,7 @@ use civp::config::ServiceConfig;
 use civp::coordinator::{orient2d_adaptive, AdaptiveStats, BackendChoice, Service};
 use civp::decomp::{AnalysisRow, OpClass, SchemeKind};
 use civp::error::{bail, err, Result};
-use civp::net::{LoadgenConfig, NetServer, NetServerConfig};
+use civp::net::{LoadgenConfig, NetServer};
 use civp::runtime::EngineHandle;
 use civp::trace::TraceGen;
 use std::time::{Duration, Instant};
@@ -89,24 +92,43 @@ COMMANDS
   cluster      run a synthetic trace through the sharded cluster
                --degrade <shard>    inject faults into one shard first
                --faults <n>         fault count for --degrade (default 8)
-  serve-net    expose the cluster over TCP
+  serve-net    expose per-scheme clusters over TCP (worker-pool edge)
                --addr <host:port>   bind address (default 127.0.0.1:7070;
                                     port 0 picks an ephemeral port)
                --duration <secs>    serve this long then report (0 =
                                     forever, the default)
+               --net-workers <n>    connection-worker pool size (default 4;
+                                    thread count is pool-sized, never
+                                    connection-sized)
+               --pipeline-depth <n> per-connection pipelined in-flight
+                                    bound (default 32)
                --writer-queue <n>   per-connection reply queue bound
-                                    (default 256)
-  loadgen      drive open-loop load at a serve-net listener
+                                    (default service.net_writer_queue, 256)
+               --schemes <list>     extra schemes served via their own
+                                    clusters, e.g. 18x18,9x9 (others
+                                    answer `unsupported`)
+  loadgen      drive load at a serve-net listener
                --addr <host:port>   target server; omit to run against an
-                                    embedded loopback server
+                                    embedded loopback server (which also
+                                    accepts the serve-net options above)
                --workloads <list>   comma-separated mixes (default the
                                     --workload value, default mixed)
                --conns <n>          connections (default 4)
-               --rate <r/s>         offered load, 0 = closed-loop flood
-                                    (the default)
+               --rate <r/s>         offered load, 0 = flood (the default)
+               --closed-loop        bound outstanding requests instead of
+                                    offering load unconditionally
+               --concurrency <n>    closed-loop window across connections
+                                    (default 32)
+               --sweep <r1,r2,...>  drive one closed-loop run per rate
+                                    (ascending) and emit the p99-vs-load
+                                    curve (BENCH_net_sweep.json rows);
+                                    against --addr, pass --net-workers to
+                                    state the server's pool size for the
+                                    knee gate
                --warmup <n>         leading requests excluded from latency
                                     stats (default requests/20)
-               --json <path>        write bench rows (BENCH_net.json)
+               --json <path>        write bench rows (BENCH_net.json or
+                                    BENCH_net_sweep.json under --sweep)
   analyze      print the paper's block/utilization analysis table
   predicates   adaptive-precision orient2d demo
                --points <n>         number of predicates (default 2000)
@@ -232,22 +254,22 @@ fn cluster(args: &Args) -> Result<()> {
 
 fn serve_net(args: &Args) -> Result<()> {
     let cfg = args.service_config()?;
-    let net_cfg = NetServerConfig {
-        addr: args.get_str("addr", "127.0.0.1:7070"),
-        cluster: args.cluster_config(cfg.clone())?,
-        writer_queue: args.get_usize("writer-queue", 256)?,
-    };
+    let net_cfg = args.net_server_config("127.0.0.1:7070", args.cluster_config(cfg.clone())?)?;
     let backend = args.backend_choice(&cfg)?;
     let shards = net_cfg.cluster.shards;
     let policy = net_cfg.cluster.policy;
     let server = NetServer::start(&net_cfg, backend)?;
     println!(
-        "serve-net: listening on {} (scheme {:?}, {shards} shards, policy `{}`, \
+        "serve-net: listening on {} (schemes {:?}, {shards} shards/scheme, policy `{}`, \
          per-shard inflight {})",
         server.local_addr(),
-        cfg.scheme,
+        server.schemes(),
         policy.name(),
         net_cfg.cluster.max_inflight
+    );
+    println!(
+        "  edge: {} net workers, pipeline depth {}, writer queue {}",
+        net_cfg.net_workers, net_cfg.pipeline_depth, net_cfg.writer_queue
     );
     let duration = args.get_usize("duration", 0)?;
     if duration == 0 {
@@ -257,6 +279,8 @@ fn serve_net(args: &Args) -> Result<()> {
         }
     }
     std::thread::sleep(Duration::from_secs(duration as u64));
+    println!("\n== net metrics ==");
+    print!("{}", server.metrics().render());
     let report = server.stop();
     println!("\n== cluster report ==");
     print!("{}", report.render());
@@ -267,20 +291,25 @@ fn loadgen(args: &Args) -> Result<()> {
     let cfg = args.service_config()?;
     let specs = args.workloads(cfg.workload.name())?;
     let external_addr = args.options.get("addr").cloned();
+    let sweep = args.sweep_rates()?;
     let mut json = JsonReport::new();
     for spec in specs {
         // Each mix gets a fresh server in embedded mode, so the per-class
         // op counters it reports cover exactly this run.
-        let (addr, server) = match &external_addr {
-            Some(addr) => (addr.clone(), None),
+        let (addr, server, workers) = match &external_addr {
+            // Against a remote server the pool size cannot be observed
+            // over the wire — `--net-workers` states it for the sweep's
+            // knee floor (and must match the server's flag).
+            Some(addr) => (
+                addr.clone(),
+                None,
+                args.get_usize("net-workers", civp::net::server::DEFAULT_NET_WORKERS)?,
+            ),
             None => {
-                let net_cfg = NetServerConfig {
-                    addr: "127.0.0.1:0".to_string(),
-                    cluster: args.cluster_config(cfg.clone())?,
-                    writer_queue: args.get_usize("writer-queue", 256)?,
-                };
+                let net_cfg =
+                    args.net_server_config("127.0.0.1:0", args.cluster_config(cfg.clone())?)?;
                 let server = NetServer::start(&net_cfg, args.backend_choice(&cfg)?)?;
-                (server.local_addr().to_string(), Some(server))
+                (server.local_addr().to_string(), Some(server), net_cfg.net_workers)
             }
         };
         let lg = LoadgenConfig {
@@ -289,22 +318,41 @@ fn loadgen(args: &Args) -> Result<()> {
             requests: cfg.requests as u64,
             warmup: args.get_usize("warmup", (cfg.requests / 20).max(1))? as u64,
             rate: args.get_f64("rate", 0.0)?,
+            closed_loop: args.get_flag("closed-loop") || sweep.is_some(),
+            concurrency: args.get_usize("concurrency", 32)?,
             mix: spec.mix(),
             mix_name: spec.name().to_string(),
             scheme: cfg.scheme,
             seed: cfg.seed,
             ..LoadgenConfig::default()
         };
-        println!(
-            "loadgen: mix `{}`, {} requests over {} conns at {} -> {}",
-            lg.mix_name,
-            lg.requests,
-            lg.conns,
-            if lg.rate > 0.0 { format!("{} req/s", lg.rate) } else { "flood".to_string() },
-            lg.addr
-        );
-        let report = civp::net::loadgen::run(&lg)?;
-        print!("{}", report.render());
+        if let Some(rates) = &sweep {
+            println!(
+                "loadgen sweep: mix `{}`, {} requests/point over {} conns \
+                 (window {}), rates {rates:?} -> {}",
+                lg.mix_name, lg.requests, lg.conns, lg.concurrency, lg.addr
+            );
+            let sweep_report = civp::net::loadgen::run_sweep(&lg, rates, workers)?;
+            print!("{}", sweep_report.render());
+            sweep_report.push_bench_rows(&mut json);
+        } else {
+            println!(
+                "loadgen: mix `{}`, {} requests over {} conns at {}{} -> {}",
+                lg.mix_name,
+                lg.requests,
+                lg.conns,
+                if lg.rate > 0.0 { format!("{} req/s", lg.rate) } else { "flood".to_string() },
+                if lg.closed_loop {
+                    format!(" (closed loop, window {})", lg.concurrency)
+                } else {
+                    String::new()
+                },
+                lg.addr
+            );
+            let report = civp::net::loadgen::run(&lg)?;
+            print!("{}", report.render());
+            report.push_bench_rows(&mut json);
+        }
         if let Some(server) = server {
             // Embedded mode doubles as the e2e oracle: everything the
             // generator sent must be visible in the cluster's counters.
@@ -315,7 +363,6 @@ fn loadgen(args: &Args) -> Result<()> {
                 cluster_report.accepted, cluster_report.rejected_saturated
             );
         }
-        report.push_bench_rows(&mut json);
     }
     if let Some(path) = args.options.get("json") {
         json.write(path)?;

@@ -6,16 +6,26 @@
 //! request at its trace arrival time regardless of replies — the offered
 //! load does not slow down when the server does, which is what makes
 //! [`Status::Saturated`] responses observable. `rate == 0` switches to a
-//! closed-loop flood (send as fast as the socket accepts).
+//! flood (send as fast as the socket accepts).
 //!
-//! Per connection, a paired reader thread consumes responses (FIFO, per
-//! the listener's ordering guarantee) under a read timeout, so replies
-//! the server never delivers surface as a `lost` count instead of a
-//! hang. The first `warmup` requests per connection are excluded from
-//! the latency distribution; every reply is still counted by status.
-//! Latency percentiles are exact (all post-warmup samples are kept and
-//! sorted — at bench scale this is a few MB, not a reservoir's
-//! approximation).
+//! **Closed-loop mode** (`closed_loop` + `concurrency`) additionally
+//! bounds the outstanding-request window: each connection holds a token
+//! budget (its share of `concurrency`), acquires a token before every
+//! send and releases one per reply, so the generator pipelines up to the
+//! window and then paces itself off the server's completions. Composed
+//! with `rate` it offers *up to* the configured load without ever
+//! holding more than the window in flight — the shape [`run_sweep`]
+//! drives at several offered rates to trace a latency-vs-load curve
+//! (`net/<mix>/p99@<rate>` rows) whose knee the bench gate pins.
+//!
+//! Per connection, a paired reader thread consumes responses (matched by
+//! request id, so the listener's out-of-order pipelined completions are
+//! fine) under a read timeout, so replies the server never delivers
+//! surface as a `lost` count instead of a hang. The first `warmup`
+//! requests per connection are excluded from the latency distribution;
+//! every reply is still counted by status. Latency percentiles are exact
+//! (all post-warmup samples are kept and sorted — at bench scale this is
+//! a few MB, not a reservoir's approximation).
 
 use super::wire::{self, FrameRead, Request, Response, Status};
 use crate::benchx::{wall_measurement, JsonReport, Measurement};
@@ -42,8 +52,16 @@ pub struct LoadgenConfig {
     /// across connections like `requests`).
     pub warmup: u64,
     /// Offered load in requests/second across all connections;
-    /// `0.0` floods closed-loop.
+    /// `0.0` floods (no pacing).
     pub rate: f64,
+    /// Bound the outstanding-request window instead of offering load
+    /// unconditionally (`--closed-loop`). Composable with `rate`: the
+    /// generator offers up to the configured load, never holding more
+    /// than `concurrency` requests in flight.
+    pub closed_loop: bool,
+    /// Outstanding-request window across all connections (closed-loop
+    /// mode only; split over connections, each gets at least 1).
+    pub concurrency: usize,
     /// Class mix to draw requests from.
     pub mix: WorkloadMix,
     /// Mix label for reports and bench-row names.
@@ -66,6 +84,8 @@ impl Default for LoadgenConfig {
             requests: 10_000,
             warmup: 500,
             rate: 0.0,
+            closed_loop: false,
+            concurrency: 32,
             mix: WorkloadMix::ZERO,
             mix_name: String::new(),
             scheme: SchemeKind::Civp,
@@ -174,6 +194,120 @@ impl LoadgenReport {
     }
 }
 
+/// One point on the latency-vs-offered-load curve.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Offered load for this point (requests/second).
+    pub rate: f64,
+    /// The full run outcome at that rate.
+    pub report: LoadgenReport,
+}
+
+/// Outcome of an offered-load sweep: the same workload driven at each
+/// configured rate in ascending order, closed-loop, so the curve's knee
+/// — the last rate the deployment absorbs without p99 blowing up — is a
+/// measurable, gateable property (the bench gate checks knee *location*,
+/// not absolute latency, which is what survives machine variance).
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    /// Mix label the sweep drew from.
+    pub mix_name: String,
+    /// Connection-worker pool size of the server under test (stamped by
+    /// the caller; the gate derives its knee floor from it).
+    pub workers: usize,
+    /// One entry per swept rate, in the order driven (ascending).
+    pub points: Vec<SweepPoint>,
+}
+
+impl SweepReport {
+    /// Human-readable sweep table.
+    pub fn render(&self) -> String {
+        let mut out = format!("sweep mix {} ({} server workers)\n", self.mix_name, self.workers);
+        for p in &self.points {
+            out.push_str(&format!(
+                "  rate {:>8}  p50 {:>9} ns  p99 {:>9} ns  ok {:>8}  lost {:>4}\n",
+                rate_label(p.rate),
+                p.report.p50_ns,
+                p.report.p99_ns,
+                p.report.ok,
+                p.report.lost
+            ));
+        }
+        out
+    }
+
+    /// Append the sweep rows to a [`JsonReport`]: per swept rate a
+    /// `net/<mix>/p50@<rate>` and `p99@<rate>` latency row and a
+    /// `lost@<rate>` count row, plus one `net/<mix>/sweep-workers` count
+    /// row carrying the server's worker-pool size (the gate's knee floor
+    /// is derived from it). All `net/` rows are never-baselined; the
+    /// gate checks curve *shape*, not absolute values.
+    pub fn push_bench_rows(&self, report: &mut JsonReport) {
+        let prefix = format!("net/{}", self.mix_name);
+        report.push(
+            &format!("{prefix}/sweep-workers"),
+            Measurement::uniform(0.0, self.workers as u64),
+        );
+        for p in &self.points {
+            let rate = rate_label(p.rate);
+            let replies = p.report.replies();
+            report.push(
+                &format!("{prefix}/p50@{rate}"),
+                Measurement::uniform(p.report.p50_ns as f64, replies),
+            );
+            report.push(
+                &format!("{prefix}/p99@{rate}"),
+                Measurement::uniform(p.report.p99_ns as f64, replies),
+            );
+            report.push(
+                &format!("{prefix}/lost@{rate}"),
+                Measurement::uniform(0.0, p.report.lost),
+            );
+        }
+    }
+}
+
+/// Stable row-name label for an offered rate: integral rates print
+/// without a fraction (`2000`), fractional ones with one decimal.
+pub fn rate_label(rate: f64) -> String {
+    if rate.fract() == 0.0 && rate.abs() < 1e15 {
+        format!("{}", rate as i64)
+    } else {
+        format!("{rate:.1}")
+    }
+}
+
+/// Drive one closed-loop run per rate in `rates` (ascending, positive)
+/// against the same server and assemble the latency-vs-load curve.
+/// `workers` is the server's connection-worker pool size, stamped into
+/// the report for the knee gate's floor. Each point perturbs the trace
+/// seed so the points are independent draws of the same mix.
+pub fn run_sweep(cfg: &LoadgenConfig, rates: &[f64], workers: usize) -> Result<SweepReport> {
+    if rates.is_empty() {
+        return Err(err!("sweep needs at least one rate"));
+    }
+    if workers == 0 {
+        return Err(err!("sweep needs the server worker count (>= 1)"));
+    }
+    for pair in rates.windows(2) {
+        if pair[0] >= pair[1] {
+            return Err(err!("sweep rates must be strictly ascending"));
+        }
+    }
+    if rates[0] <= 0.0 || !rates.iter().all(|r| r.is_finite()) {
+        return Err(err!("sweep rates must be positive finite numbers"));
+    }
+    let mut points = Vec::with_capacity(rates.len());
+    for (i, &rate) in rates.iter().enumerate() {
+        let mut point_cfg = cfg.clone();
+        point_cfg.rate = rate;
+        point_cfg.closed_loop = true;
+        point_cfg.seed = cfg.seed.wrapping_add((i as u64) << 48);
+        points.push(SweepPoint { rate, report: run(&point_cfg)? });
+    }
+    Ok(SweepReport { mix_name: cfg.mix_name.clone(), workers, points })
+}
+
 /// What one connection's reader thread tallied.
 #[derive(Default)]
 struct ReaderTally {
@@ -191,6 +325,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     }
     if cfg.conns > u32::MAX as usize {
         return Err(err!("connection count does not fit the id space"));
+    }
+    if cfg.closed_loop && cfg.concurrency == 0 {
+        return Err(err!("closed-loop mode needs a concurrency window >= 1"));
     }
     let per_conn = split(cfg.requests, cfg.conns);
     let warmup_per_conn = split(cfg.warmup.min(cfg.requests), cfg.conns);
@@ -279,13 +416,30 @@ fn run_conn(
     reader_stream
         .set_read_timeout(Some(cfg.reply_timeout))
         .context("setting reply timeout")?;
+    // Closed-loop token window: the sender deposits a token per send
+    // (blocking at the window bound), the reader withdraws one per
+    // reply. When the reader dies early (timeout/close) the dropped
+    // receiver unblocks the sender with an error instead of a deadlock.
+    let window = if cfg.closed_loop {
+        // This connection's share of the aggregate window, never zero.
+        let share = (cfg.concurrency / cfg.conns).max(1);
+        Some(std::sync::mpsc::sync_channel::<()>(share))
+    } else {
+        None
+    };
+    let (tokens_in, tokens_out) = match window {
+        Some((tx, rx)) => (Some(tx), Some(rx)),
+        None => (None, None),
+    };
     // Send timestamps indexed by per-connection sequence number, written
     // by the sender before each frame and read by the reader on reply.
     let send_ns: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
     let start = Instant::now();
     let reader = {
         let send_ns = send_ns.clone();
-        std::thread::spawn(move || read_replies(reader_stream, n, warmup, &send_ns, start))
+        std::thread::spawn(move || {
+            read_replies(reader_stream, n, warmup, &send_ns, start, tokens_out)
+        })
     };
     let mut gen = TraceGen::new(cfg.seed.wrapping_add(conn_idx as u64), cfg.mix, mean_gap_ns);
     let mut writer = BufWriter::new(stream);
@@ -300,6 +454,13 @@ fn run_conn(
             let elapsed = start.elapsed();
             if target > elapsed {
                 std::thread::sleep(target - elapsed);
+            }
+        }
+        if let Some(tx) = &tokens_in {
+            // Closed loop: block until the window has room. A dead
+            // reader dropped its receiver — stop offering load.
+            if tx.send(()).is_err() {
+                break;
             }
         }
         let req = Request {
@@ -330,6 +491,7 @@ fn read_replies(
     warmup: u64,
     send_ns: &[AtomicU64],
     start: Instant,
+    tokens: Option<std::sync::mpsc::Receiver<()>>,
 ) -> ReaderTally {
     let mut tally = ReaderTally::default();
     let mut reader = BufReader::new(stream);
@@ -344,6 +506,11 @@ fn read_replies(
             Ok(resp) => resp,
             Err(_) => break,
         };
+        if let Some(rx) = &tokens {
+            // Every reply follows a send that deposited a token, so
+            // there is always one to withdraw — never blocks.
+            let _ = rx.try_recv();
+        }
         tally.received += 1;
         match resp.status {
             Status::Ok => tally.ok += 1,
@@ -415,5 +582,68 @@ mod tests {
         assert_eq!(report.replies(), 100);
         assert_eq!(report.throughput(), 200.0);
         assert!(report.render().contains("saturated"));
+    }
+
+    #[test]
+    fn rate_labels_are_stable_row_names() {
+        assert_eq!(rate_label(2000.0), "2000");
+        assert_eq!(rate_label(500.0), "500");
+        assert_eq!(rate_label(1234.5), "1234.5");
+        assert_eq!(rate_label(0.25), "0.2");
+    }
+
+    fn sweep_fixture() -> SweepReport {
+        let point = |rate: f64, p99: u64, lost: u64| SweepPoint {
+            rate,
+            report: LoadgenReport {
+                mix_name: "mixed".to_string(),
+                sent: 100,
+                ok: 100 - lost,
+                saturated: 0,
+                other: 0,
+                lost,
+                wall_s: 0.5,
+                p50_ns: p99 / 2,
+                p99_ns: p99,
+                p999_ns: p99 * 2,
+                per_class_sent: [20; OpClass::COUNT],
+            },
+        };
+        SweepReport {
+            mix_name: "mixed".to_string(),
+            workers: 4,
+            points: vec![point(500.0, 1000, 0), point(1000.0, 1100, 0), point(2000.0, 9000, 0)],
+        }
+    }
+
+    #[test]
+    fn sweep_rows_follow_the_net_schema() {
+        let sweep = sweep_fixture();
+        let mut json = JsonReport::new();
+        sweep.push_bench_rows(&mut json);
+        let text = json.to_json();
+        for name in [
+            "net/mixed/sweep-workers",
+            "net/mixed/p50@500",
+            "net/mixed/p99@500",
+            "net/mixed/lost@500",
+            "net/mixed/p99@1000",
+            "net/mixed/p99@2000",
+            "net/mixed/lost@2000",
+        ] {
+            assert!(text.contains(&format!("\"name\": \"{name}\"")), "{name} missing");
+        }
+        assert!(sweep.render().contains("rate"));
+    }
+
+    #[test]
+    fn sweep_rejects_bad_rate_lists_before_connecting() {
+        // Validation happens before any socket work, so no server needed.
+        let cfg = LoadgenConfig { addr: "127.0.0.1:1".to_string(), ..Default::default() };
+        assert!(run_sweep(&cfg, &[], 4).is_err(), "empty rate list");
+        assert!(run_sweep(&cfg, &[1000.0, 500.0], 4).is_err(), "descending rates");
+        assert!(run_sweep(&cfg, &[500.0, 500.0], 4).is_err(), "duplicate rates");
+        assert!(run_sweep(&cfg, &[0.0, 500.0], 4).is_err(), "non-positive rate");
+        assert!(run_sweep(&cfg, &[500.0], 0).is_err(), "zero worker count");
     }
 }

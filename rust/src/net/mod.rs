@@ -9,25 +9,31 @@
 //!   registry-indexed class/scheme/rounding-mode bytes, operands at the
 //!   class's packed width, and a status byte on every response. Decoding
 //!   is total — malformed frames become [`wire::Status::BadRequest`]
-//!   responses, never panics or hangs.
-//! * [`server`] — a std-only multi-threaded listener (`civp-server
-//!   serve-net`): per-connection reader/writer thread pairs around a
-//!   bounded FIFO reply queue, decoding frames into
-//!   [`crate::cluster::Cluster::try_submit`]. Admission outcomes
-//!   ([`crate::serve::AdmissionError`]) map 1:1 onto wire status codes,
-//!   so a saturated cluster answers `Saturated` instead of dropping the
-//!   connection, and a full writer queue stops the socket reads — TCP
-//!   backpressure end to end.
-//! * [`loadgen`] — the built-in open-loop load generator (`civp-server
-//!   loadgen`): exponential arrivals over the [`crate::trace`] workload
-//!   mixes, connection fan-out, warmup exclusion, exact p50/p99/p999
-//!   latency percentiles and sustained throughput, emitted as
-//!   `BENCH_net.json` rows the bench gate validates.
+//!   responses, never panics or hangs. Responses carry the request id,
+//!   so out-of-order completion of pipelined requests is wire-legal.
+//! * [`server`] — a std-only event-driven listener (`civp-server
+//!   serve-net`): a bounded pool of `civp-net-{i}` connection workers,
+//!   each multiplexing a slab of non-blocking sockets (per-connection
+//!   reassembly buffers, `WouldBlock` rotation), with request
+//!   pipelining up to a per-connection in-flight depth and one listener
+//!   routing frames to per-[`crate::decomp::SchemeKind`] clusters.
+//!   Admission outcomes ([`crate::serve::AdmissionError`]) map 1:1 onto
+//!   wire status codes, so a saturated cluster answers `Saturated`
+//!   instead of dropping the connection; a full writer queue stops that
+//!   socket's reads — TCP backpressure end to end. Thread count is a
+//!   function of configuration, never of connection count.
+//! * [`loadgen`] — the built-in load generator (`civp-server loadgen`):
+//!   exponential arrivals over the [`crate::trace`] workload mixes,
+//!   connection fan-out, warmup exclusion, exact p50/p99/p999 latency
+//!   percentiles, an optional closed-loop outstanding-request window
+//!   (`--closed-loop --concurrency`), and an offered-load sweep
+//!   (`--sweep`) emitting `net/<mix>/p99@<rate>` curve rows whose knee
+//!   location the bench gate pins.
 
 pub mod loadgen;
 pub mod server;
 pub mod wire;
 
-pub use loadgen::{LoadgenConfig, LoadgenReport};
+pub use loadgen::{LoadgenConfig, LoadgenReport, SweepReport};
 pub use server::{NetServer, NetServerConfig};
 pub use wire::Status;

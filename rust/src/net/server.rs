@@ -1,59 +1,109 @@
-//! Std-only multi-threaded TCP listener feeding the cluster router.
+//! Std-only event-driven TCP front-end: a bounded connection-worker pool
+//! multiplexing many sockets per thread.
 //!
-//! Thread model (no async runtime — blocking I/O end to end):
+//! Thread model (no async runtime, no per-connection threads):
 //!
 //! ```text
-//!   accept thread ── one per listener, spawns per-connection pairs
-//!     ├─ reader thread ── read_frame → decode → Cluster::try_submit
-//!     │                    │ admission/decode errors become status
-//!     │                    ▼ responses, never dropped connections
-//!     │    bounded writer queue (reader blocks when full ⇒ it stops
-//!     │    reading the socket ⇒ TCP backpressure reaches the client)
-//!     │                    ▼
-//!     └─ writer thread ── FIFO: ClusterReply::recv → encode → write
+//!   accept thread ── assigns each new socket to the least-loaded worker
+//!        │
+//!        ▼
+//!   civp-net-0 .. civp-net-{W-1}   ── fixed pool, W = net_workers
+//!        │  each worker owns a slab of connections and rotates over it
+//!        │  with non-blocking reads/writes (WouldBlock ⇒ move on, park
+//!        │  briefly only when a full rotation made no progress)
+//!        │
+//!        │  per connection:
+//!        │    reassembly buffer ── bytes in, frames parsed out
+//!        │    in-flight deque   ── ≤ pipeline_depth submitted requests;
+//!        │                         completions drain OUT OF ORDER
+//!        │                         (responses carry request ids)
+//!        │    writer queue      ── ≤ writer_queue encoded responses;
+//!        │                         full ⇒ the worker stops reading this
+//!        │                         socket ⇒ TCP backpressure
+//!        ▼
+//!   per-scheme clusters ── one listener serves several `SchemeKind`s by
+//!   routing each frame to its scheme's cluster (frames for schemes the
+//!   deployment does not serve still answer `Unsupported`)
 //! ```
 //!
-//! Responses are written in request order per connection (the writer
-//! drains its queue FIFO), trading head-of-line latency for a protocol
-//! with no reordering to track. Cross-connection parallelism comes from
-//! the per-connection thread pairs; within the cluster, batching and the
-//! shard worker pools parallelize as in the in-process paths.
+//! The steady-state thread count is `net_workers + 1` (accept) plus the
+//! per-cluster worker pools — a function of configuration, never of the
+//! connection count. [`NetServer::worker_registry`] exposes the pool so
+//! tests can assert the bound without groveling `/proc`.
+//!
+//! **Pipelining.** A client may write many frames without waiting for
+//! replies. Each connection submits at most `pipeline_depth` requests
+//! into the cluster concurrently; beyond that the worker stops parsing
+//! (and, buffers full, stops reading — backpressure again). Completions
+//! are written as they arrive, so responses can legally overtake each
+//! other; the request id on every response is what clients key on.
 //!
 //! Framing-level failures (truncated stream, oversized length prefix)
-//! get one [`Status::BadRequest`] response and then the connection
-//! closes — the byte stream cannot be resynchronized. In-frame decode
-//! failures (bad version, unknown class index, length mismatch against a
-//! valid prefix) also answer `BadRequest` but keep the connection open:
-//! framing is intact, so subsequent frames still parse.
+//! get one [`Status::BadRequest`] response, then the connection drains
+//! its in-flight replies and closes — the byte stream cannot be
+//! resynchronized. In-frame decode failures answer `BadRequest` and keep
+//! the connection open: framing is intact, so subsequent frames parse.
 
-use super::wire::{self, FrameRead, Request, Response, Status};
+use super::wire::{self, Request, Response, Status};
 use crate::cluster::{Cluster, ClusterConfig, ClusterReply, ClusterReport};
-use crate::coordinator::BackendChoice;
+use crate::config::{ServiceConfig, DEFAULT_NET_WRITER_QUEUE};
+use crate::coordinator::{BackendChoice, TryRecvError};
 use crate::decomp::{OpClass, SchemeKind};
 use crate::error::{Context, Result};
+use crate::fabric::FabricKind;
 use crate::fpu::RoundMode;
-use std::io::{BufReader, BufWriter, Write};
+use crate::metrics::{Counter, Registry, Snapshot};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Default connection-worker pool size.
+pub const DEFAULT_NET_WORKERS: usize = 4;
+
+/// Default per-connection pipelined in-flight bound.
+pub const DEFAULT_PIPELINE_DEPTH: usize = 32;
+
+/// How long an idle worker parks when a full slab rotation made no
+/// progress (short enough to stay responsive, long enough not to spin).
+const IDLE_PARK: Duration = Duration::from_micros(100);
+
+/// Socket read chunk size (one rotation reads at most this much per
+/// connection, so one firehose connection cannot starve its slab mates).
+const READ_CHUNK: usize = 4096;
+
+/// Compact the reassembly buffer once this many parsed bytes accumulate.
+const COMPACT_AT: usize = 8 * 1024;
 
 /// Listener deployment shape.
 #[derive(Clone, Debug)]
 pub struct NetServerConfig {
     /// Bind address (`host:port`; port 0 picks an ephemeral port).
     pub addr: String,
-    /// The cluster behind the listener (shards, policy, in-flight bound).
-    /// Its `service.scheme` is the one partition organization this
-    /// listener serves; requests for any other scheme — or for a rounding
-    /// mode other than round-to-nearest-even, the only mode the batch
-    /// backends run — are answered [`Status::Unsupported`].
+    /// The primary cluster behind the listener (shards, policy, in-flight
+    /// bound). Its `service.scheme` is the primary partition organization
+    /// this listener serves.
     pub cluster: ClusterConfig,
-    /// Per-connection bound on replies awaiting the writer. When full,
-    /// the reader stops pulling frames off the socket, which is the
-    /// mechanism that turns cluster latency into TCP backpressure.
+    /// Per-connection bound on responses queued for the socket. When
+    /// full, the worker stops completing replies and stops reading that
+    /// socket, which is the mechanism that turns cluster latency and
+    /// slow readers into TCP backpressure.
     pub writer_queue: usize,
+    /// Connection-worker pool size (the `civp-net-{i}` threads). The
+    /// steady-state thread count of the edge is this plus the accept
+    /// thread — independent of connection count.
+    pub net_workers: usize,
+    /// Per-connection bound on requests submitted into the cluster and
+    /// not yet completed (the pipelining window).
+    pub pipeline_depth: usize,
+    /// Additional schemes served by this listener, each through its own
+    /// cluster (same shard/policy shape as the primary, scheme and
+    /// fabric preset swapped). Requests for schemes in neither set
+    /// answer [`Status::Unsupported`].
+    pub extra_schemes: Vec<SchemeKind>,
 }
 
 impl Default for NetServerConfig {
@@ -61,50 +111,196 @@ impl Default for NetServerConfig {
         NetServerConfig {
             addr: "127.0.0.1:0".to_string(),
             cluster: ClusterConfig::default(),
-            writer_queue: 256,
+            writer_queue: DEFAULT_NET_WRITER_QUEUE,
+            net_workers: DEFAULT_NET_WORKERS,
+            pipeline_depth: DEFAULT_PIPELINE_DEPTH,
+            extra_schemes: Vec::new(),
         }
     }
 }
 
-/// One entry in a connection's FIFO writer queue.
+/// A per-shard service config re-targeted at `scheme`: the fabric preset
+/// follows the scheme's block-kind needs (mirrors
+/// `ServiceConfig::validate`'s compatibility table).
+fn scheme_service(mut svc: ServiceConfig, scheme: SchemeKind) -> ServiceConfig {
+    svc.scheme = scheme;
+    svc.fabric = match scheme {
+        SchemeKind::Civp => FabricKind::Civp,
+        SchemeKind::Baseline18 | SchemeKind::Baseline25x18 => FabricKind::Legacy,
+        // 9x9 tiles run on either fabric — keep the configured preset.
+        SchemeKind::Baseline9 => svc.fabric,
+    };
+    svc
+}
+
+/// The scheme routing table: one optional cluster per registry scheme.
+struct SchemeClusters {
+    by_scheme: [Option<Arc<Cluster>>; SchemeKind::COUNT],
+}
+
+impl SchemeClusters {
+    fn get(&self, scheme: SchemeKind) -> Option<&Arc<Cluster>> {
+        self.by_scheme[scheme.index()].as_ref()
+    }
+}
+
+/// One entry in a connection's pipelined in-flight deque.
 enum Pending {
-    /// Admitted into the cluster; the writer blocks on the reply.
+    /// Admitted into a cluster; completed whenever the reply lands (out
+    /// of order with its neighbours is fine — responses carry ids).
     Submitted {
         id: u64,
         class: OpClass,
         reply: ClusterReply,
     },
-    /// Already resolved at the reader (admission/decode/validation
-    /// outcome) — encoded as-is, in order.
+    /// Already resolved at parse time (admission/decode/validation
+    /// outcome) — encoded as soon as the writer queue has room.
     Immediate(Response),
 }
 
-/// A running network serving edge: TCP listener + cluster.
+/// One multiplexed connection owned by a pool worker.
+struct Conn {
+    stream: TcpStream,
+    /// Reassembly buffer: raw bytes in, frames parsed out at `rdpos`.
+    rdbuf: Vec<u8>,
+    rdpos: usize,
+    /// Pipelined requests: submitted or immediately-resolved, bounded by
+    /// `pipeline_depth`.
+    inflight: VecDeque<Pending>,
+    /// Encoded responses awaiting the socket, bounded by `writer_queue`
+    /// responses (`wr_queued` counts them; `wrpos` is the write cursor).
+    wrbuf: Vec<u8>,
+    wrpos: usize,
+    wr_queued: usize,
+    /// Peer closed its write half (EOF seen).
+    read_closed: bool,
+    /// Framing lost: answer what is owed, flush, then close.
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rdbuf: Vec::with_capacity(READ_CHUNK),
+            rdpos: 0,
+            inflight: VecDeque::new(),
+            wrbuf: Vec::with_capacity(256),
+            wrpos: 0,
+            wr_queued: 0,
+            read_closed: false,
+            closing: false,
+        }
+    }
+
+    /// Unparsed byte count sitting in the reassembly buffer.
+    fn unparsed(&self) -> usize {
+        self.rdbuf.len() - self.rdpos
+    }
+}
+
+/// Accept-side handle to one pool worker: its injection queue plus the
+/// live connection count (accept balances on it; the registry reads it).
+struct WorkerShared {
+    name: String,
+    incoming: Mutex<Vec<TcpStream>>,
+    conns: AtomicUsize,
+}
+
+/// Pool-wide instruments shared by every worker.
+struct NetInstruments {
+    /// Frames answered, by wire status code.
+    status_frames: Vec<Arc<Counter>>,
+    /// High-water mark of any connection's pipelined in-flight depth.
+    inflight_hwm: AtomicU64,
+}
+
+/// Per-connection limits, resolved once at startup.
+#[derive(Clone, Copy)]
+struct ConnLimits {
+    writer_queue: usize,
+    pipeline_depth: usize,
+}
+
+/// A running network serving edge: accept thread + worker pool +
+/// per-scheme clusters.
 pub struct NetServer {
     local_addr: SocketAddr,
-    cluster: Arc<Cluster>,
+    clusters: Arc<SchemeClusters>,
+    primary: SchemeKind,
     stop: Arc<AtomicBool>,
-    conns: Arc<Mutex<Vec<TcpStream>>>,
+    workers: Vec<Arc<WorkerShared>>,
+    worker_handles: Vec<JoinHandle<()>>,
     accept: JoinHandle<()>,
+    metrics: Registry,
+    instruments: Arc<NetInstruments>,
 }
 
 impl NetServer {
-    /// Bind, start the cluster and the accept thread, return immediately.
+    /// Bind, start the per-scheme clusters and the worker pool, return
+    /// immediately.
     pub fn start(cfg: &NetServerConfig, backend: BackendChoice) -> Result<NetServer> {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding listener on {}", cfg.addr))?;
         let local_addr = listener.local_addr().context("resolving bound address")?;
-        let cluster = Arc::new(Cluster::start(&cfg.cluster, backend));
+        let primary = cfg.cluster.service.scheme;
+
+        let mut by_scheme: [Option<Arc<Cluster>>; SchemeKind::COUNT] = Default::default();
+        by_scheme[primary.index()] = Some(Arc::new(Cluster::start(&cfg.cluster, backend.clone())));
+        for &scheme in &cfg.extra_schemes {
+            if by_scheme[scheme.index()].is_some() {
+                continue;
+            }
+            let mut ccfg = cfg.cluster.clone();
+            ccfg.service = scheme_service(ccfg.service, scheme);
+            // Native backends re-target cleanly; the PJRT artifacts are
+            // scheme-agnostic, so extra schemes under a PJRT deployment
+            // get a plain native cluster for that organization.
+            let scheme_backend = match &backend {
+                BackendChoice::Native(opts) => BackendChoice::Native(opts.clone().scheme(scheme)),
+                BackendChoice::Pjrt(_) => BackendChoice::native(scheme),
+            };
+            by_scheme[scheme.index()] = Some(Arc::new(Cluster::start(&ccfg, scheme_backend)));
+        }
+        let clusters = Arc::new(SchemeClusters { by_scheme });
+
+        let metrics = Registry::new();
+        let status_frames = Status::ALL
+            .iter()
+            .map(|s| metrics.counter(&format!("net_frames_{}", s.name())))
+            .collect();
+        let instruments =
+            Arc::new(NetInstruments { status_frames, inflight_hwm: AtomicU64::new(0) });
+
         let stop = Arc::new(AtomicBool::new(false));
-        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
-        let accept = {
-            let cluster = cluster.clone();
+        let limits = ConnLimits {
+            writer_queue: cfg.writer_queue.max(1),
+            pipeline_depth: cfg.pipeline_depth.max(1),
+        };
+        let mut workers = Vec::new();
+        let mut worker_handles = Vec::new();
+        for i in 0..cfg.net_workers.max(1) {
+            let shared = Arc::new(WorkerShared {
+                name: format!("civp-net-{i}"),
+                incoming: Mutex::new(Vec::new()),
+                conns: AtomicUsize::new(0),
+            });
+            workers.push(shared.clone());
+            let clusters = clusters.clone();
             let stop = stop.clone();
-            let conns = conns.clone();
-            let scheme = cfg.cluster.service.scheme;
-            let writer_queue = cfg.writer_queue.max(1);
+            let instruments = instruments.clone();
+            worker_handles.push(
+                std::thread::Builder::new()
+                    .name(shared.name.clone())
+                    .spawn(move || worker_loop(&shared, &clusters, &stop, limits, &instruments))
+                    .context("spawning net worker")?,
+            );
+        }
+
+        let accept = {
+            let stop = stop.clone();
+            let workers = workers.clone();
             std::thread::spawn(move || {
-                let mut workers: Vec<JoinHandle<()>> = Vec::new();
                 for incoming in listener.incoming() {
                     if stop.load(Ordering::Acquire) {
                         break;
@@ -113,22 +309,29 @@ impl NetServer {
                         Ok(s) => s,
                         Err(_) => continue,
                     };
-                    // Keep a handle for forced shutdown; readers blocked in
-                    // `read` see EOF when `stop` shuts these down.
-                    if let Ok(clone) = stream.try_clone() {
-                        conns.lock().unwrap().push(clone);
-                    }
-                    let cluster = cluster.clone();
-                    workers.push(std::thread::spawn(move || {
-                        handle_conn(stream, &cluster, scheme, writer_queue);
-                    }));
-                }
-                for w in workers {
-                    let _ = w.join();
+                    // Least-loaded assignment over the fixed pool: the
+                    // connection count is the only signal accept needs.
+                    let target = workers
+                        .iter()
+                        .min_by_key(|w| w.conns.load(Ordering::Acquire))
+                        .expect("worker pool is never empty");
+                    target.conns.fetch_add(1, Ordering::AcqRel);
+                    target.incoming.lock().unwrap().push(stream);
                 }
             })
         };
-        Ok(NetServer { local_addr, cluster, stop, conns, accept })
+
+        Ok(NetServer {
+            local_addr,
+            clusters,
+            primary,
+            stop,
+            workers,
+            worker_handles,
+            accept,
+            metrics,
+            instruments,
+        })
     }
 
     /// The bound address (resolves port 0 to the ephemeral port).
@@ -136,120 +339,310 @@ impl NetServer {
         self.local_addr
     }
 
-    /// The cluster behind the listener (op counters, metrics — the e2e
-    /// oracle that per-class executed counts match frames sent).
+    /// The primary cluster behind the listener (op counters, metrics —
+    /// the e2e oracle that per-class executed counts match frames sent).
     pub fn cluster(&self) -> &Cluster {
-        &self.cluster
+        self.cluster_for(self.primary).expect("primary cluster always exists")
     }
 
-    /// Stop accepting, close every live connection, join every thread,
-    /// then drain the cluster and return its final report.
+    /// The cluster serving `scheme`, when this deployment serves it.
+    pub fn cluster_for(&self, scheme: SchemeKind) -> Option<&Cluster> {
+        self.clusters.get(scheme).map(|c| c.as_ref())
+    }
+
+    /// Every scheme this listener serves (primary first).
+    pub fn schemes(&self) -> Vec<SchemeKind> {
+        let mut out = vec![self.primary];
+        for scheme in SchemeKind::ALL {
+            if scheme != self.primary && self.clusters.get(scheme).is_some() {
+                out.push(scheme);
+            }
+        }
+        out
+    }
+
+    /// The connection-worker pool: one `(name, live connections)` row per
+    /// worker. The pool is fixed at startup — its length bounds the
+    /// edge's thread count no matter how many sockets are connected,
+    /// which is exactly what tests assert instead of groveling `/proc`.
+    pub fn worker_registry(&self) -> Vec<(String, usize)> {
+        self.workers
+            .iter()
+            .map(|w| (w.name.clone(), w.conns.load(Ordering::Acquire)))
+            .collect()
+    }
+
+    /// Net-edge telemetry snapshot: open connections, per-worker
+    /// multiplexed-connection counts, the pipelined in-flight depth
+    /// high-water mark, and frames answered per wire status code.
+    /// Gauges are refreshed from the live pool at snapshot time (the
+    /// same pattern as [`Cluster::metrics`]).
+    pub fn metrics(&self) -> Snapshot {
+        let mut open = 0usize;
+        for w in &self.workers {
+            let n = w.conns.load(Ordering::Acquire);
+            open += n;
+            self.metrics.gauge(&format!("{}_connections", w.name)).set(n as i64);
+        }
+        self.metrics.gauge("net_open_connections").set(open as i64);
+        self.metrics
+            .gauge("net_pipeline_inflight_hwm")
+            .set(self.instruments.inflight_hwm.load(Ordering::Relaxed) as i64);
+        self.metrics.snapshot()
+    }
+
+    /// Stop accepting, close every live connection, join the pool, then
+    /// drain every cluster and return the primary scheme's final report.
     pub fn stop(self) -> ClusterReport {
-        let NetServer { local_addr, cluster, stop, conns, accept } = self;
+        let NetServer {
+            local_addr,
+            clusters,
+            primary,
+            stop,
+            workers,
+            worker_handles,
+            accept,
+            ..
+        } = self;
         stop.store(true, Ordering::Release);
         // Unblock the accept loop (it re-checks `stop` per connection).
         let _ = TcpStream::connect(local_addr);
-        for s in conns.lock().unwrap().drain(..) {
-            let _ = s.shutdown(Shutdown::Both);
-        }
         let _ = accept.join();
-        match Arc::try_unwrap(cluster) {
-            Ok(c) => c.shutdown(),
-            // Defensive: joining the accept thread joined every reader and
-            // writer, so no clone should survive — but never panic in
-            // shutdown.
-            Err(shared) => {
-                shared.drain();
-                shared.report()
-            }
+        drop(workers);
+        for handle in worker_handles {
+            let _ = handle.join();
         }
-    }
-}
-
-/// Serve one connection: spawn the writer, run the reader inline, join.
-fn handle_conn(stream: TcpStream, cluster: &Cluster, scheme: SchemeKind, writer_queue: usize) {
-    let _ = stream.set_nodelay(true);
-    let writer_stream = match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    };
-    let (tx, rx) = sync_channel::<Pending>(writer_queue);
-    let writer = std::thread::spawn(move || write_loop(writer_stream, rx));
-    read_loop(stream, cluster, scheme, &tx);
-    drop(tx); // writer drains the queue FIFO, then exits
-    let _ = writer.join();
-}
-
-/// Decode frames and resolve admission until EOF / framing loss / error.
-fn read_loop(stream: TcpStream, cluster: &Cluster, scheme: SchemeKind, tx: &SyncSender<Pending>) {
-    let mut reader = BufReader::new(stream);
-    let mut payload = Vec::with_capacity(wire::MAX_REQUEST_PAYLOAD);
-    loop {
-        match wire::read_frame(&mut reader, &mut payload) {
-            // Transport error: the peer is unreachable, nothing to answer.
-            Err(_) => return,
-            Ok(FrameRead::Eof) => return,
-            Ok(FrameRead::Truncated) | Ok(FrameRead::Oversized(_)) => {
-                // Framing lost: answer once, then close.
-                let resp = Response::error(Status::BadRequest, OpClass::from_index(0), 0);
-                let _ = tx.send(Pending::Immediate(resp));
-                return;
-            }
-            Ok(FrameRead::Frame) => {}
-        }
-        let req = match Request::decode(&payload) {
-            Ok(req) => req,
-            Err(_) => {
-                // In-frame error: framing intact, connection stays open.
-                let resp = Response::error(Status::BadRequest, OpClass::from_index(0), 0);
-                if tx.send(Pending::Immediate(resp)).is_err() {
-                    return;
+        // Joining the pool dropped every in-flight reply; drain all
+        // clusters and report the primary one.
+        let mut report = None;
+        for scheme in SchemeKind::ALL {
+            if let Some(cluster) = &clusters.by_scheme[scheme.index()] {
+                cluster.drain();
+                if scheme == primary {
+                    report = Some(cluster.report());
                 }
-                continue;
             }
-        };
-        let pending = if req.scheme != scheme || req.round != RoundMode::NearestEven {
-            Pending::Immediate(Response::error(Status::Unsupported, req.class, req.id))
-        } else {
-            match cluster.try_submit(req.id, req.class, req.a, req.b) {
-                Ok(reply) => Pending::Submitted { id: req.id, class: req.class, reply },
-                // Backpressure and shutdown become status responses — the
-                // connection survives a saturated cluster.
-                Err(e) => Pending::Immediate(Response::error(Status::from(e), req.class, req.id)),
+        }
+        report.expect("primary cluster always exists")
+    }
+}
+
+/// Outcome of one connection pump.
+enum Pump {
+    Alive { progress: bool },
+    Closed,
+}
+
+/// One pool worker: adopt injected sockets, rotate over the slab, park
+/// briefly when a full rotation made no progress.
+fn worker_loop(
+    shared: &WorkerShared,
+    clusters: &SchemeClusters,
+    stop: &AtomicBool,
+    limits: ConnLimits,
+    instruments: &NetInstruments,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut chunk = [0u8; READ_CHUNK];
+    loop {
+        // Adopt new sockets before checking `stop`, so connections
+        // assigned during shutdown are closed rather than leaked.
+        {
+            let mut incoming = shared.incoming.lock().unwrap();
+            for stream in incoming.drain(..) {
+                let _ = stream.set_nodelay(true);
+                if stream.set_nonblocking(true).is_err() {
+                    shared.conns.fetch_sub(1, Ordering::AcqRel);
+                    continue;
+                }
+                conns.push(Conn::new(stream));
             }
-        };
-        if tx.send(pending).is_err() {
-            return; // writer side is gone
+        }
+        if stop.load(Ordering::Acquire) {
+            for conn in &conns {
+                let _ = conn.stream.shutdown(Shutdown::Both);
+            }
+            shared.conns.fetch_sub(conns.len(), Ordering::AcqRel);
+            return;
+        }
+        let mut progress = false;
+        let mut i = 0;
+        while i < conns.len() {
+            match pump_conn(&mut conns[i], clusters, limits, instruments, &mut chunk) {
+                Pump::Alive { progress: p } => {
+                    progress |= p;
+                    i += 1;
+                }
+                Pump::Closed => {
+                    conns.swap_remove(i);
+                    shared.conns.fetch_sub(1, Ordering::AcqRel);
+                    progress = true;
+                }
+            }
+        }
+        if !progress {
+            std::thread::park_timeout(IDLE_PARK);
         }
     }
 }
 
-/// Drain the FIFO queue: wait for each admitted reply, encode, write.
-fn write_loop(stream: TcpStream, rx: Receiver<Pending>) {
-    let mut writer = BufWriter::new(stream);
-    let mut buf = Vec::with_capacity(64);
-    while let Ok(pending) = rx.recv() {
-        let resp = match pending {
-            Pending::Immediate(resp) => resp,
-            Pending::Submitted { id, class, reply } => match reply.recv() {
-                Ok(done) => Response::ok(class, id, done.bits),
-                // Admitted but the shard died before replying: the client
-                // still gets exactly one response for the frame.
-                Err(_) => Response::error(Status::Internal, class, id),
+/// Drive one connection one step: complete ready replies, flush the
+/// socket, read what is available, parse frames, submit. Never blocks.
+fn pump_conn(
+    conn: &mut Conn,
+    clusters: &SchemeClusters,
+    limits: ConnLimits,
+    instruments: &NetInstruments,
+    chunk: &mut [u8],
+) -> Pump {
+    let mut progress = false;
+
+    // 1. Complete in-flight requests into the writer queue — out of
+    //    order, wherever in the deque a reply has landed.
+    let mut idx = 0;
+    while idx < conn.inflight.len() && conn.wr_queued < limits.writer_queue {
+        let resp = match &conn.inflight[idx] {
+            Pending::Immediate(resp) => Some(*resp),
+            Pending::Submitted { id, class, reply } => match reply.try_recv() {
+                Ok(done) => Some(Response::ok(*class, *id, done.bits)),
+                Err(TryRecvError::Empty) => None,
+                // Admitted but the shard died before replying: the
+                // client still gets exactly one response for the frame.
+                Err(TryRecvError::Disconnected) => {
+                    Some(Response::error(Status::Internal, *class, *id))
+                }
             },
         };
-        buf.clear();
-        resp.encode(&mut buf);
-        if writer.write_all(&buf).is_err() || writer.flush().is_err() {
-            return; // peer gone; remaining replies are dropped with the queue
+        match resp {
+            Some(resp) => {
+                conn.inflight.remove(idx);
+                resp.encode(&mut conn.wrbuf);
+                conn.wr_queued += 1;
+                instruments.status_frames[resp.status.code() as usize].inc();
+                progress = true;
+            }
+            None => idx += 1,
         }
+    }
+
+    // 2. Flush queued response bytes (non-blocking).
+    while conn.wrpos < conn.wrbuf.len() {
+        match conn.stream.write(&conn.wrbuf[conn.wrpos..]) {
+            Ok(0) => return Pump::Closed,
+            Ok(n) => {
+                conn.wrpos += n;
+                progress = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return Pump::Closed,
+        }
+    }
+    if conn.wrpos > 0 && conn.wrpos == conn.wrbuf.len() {
+        conn.wrbuf.clear();
+        conn.wrpos = 0;
+        conn.wr_queued = 0;
+    }
+
+    // 3. Read newly arrived bytes — unless framing is lost, the peer
+    //    already hit EOF, or the pipelining/writer bounds say stop
+    //    (stopping the reads is what propagates TCP backpressure).
+    let may_read = !conn.closing
+        && !conn.read_closed
+        && conn.inflight.len() < limits.pipeline_depth
+        && conn.wr_queued < limits.writer_queue;
+    if may_read {
+        match conn.stream.read(chunk) {
+            Ok(0) => {
+                conn.read_closed = true;
+                progress = true;
+            }
+            Ok(n) => {
+                conn.rdbuf.extend_from_slice(&chunk[..n]);
+                progress = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return Pump::Closed,
+        }
+    }
+
+    // 4. Parse complete frames and submit, up to the pipelining bound.
+    while !conn.closing
+        && conn.inflight.len() < limits.pipeline_depth
+        && conn.unparsed() >= 4
+    {
+        let len_bytes: [u8; 4] =
+            conn.rdbuf[conn.rdpos..conn.rdpos + 4].try_into().expect("4 bytes checked");
+        let len = u32::from_le_bytes(len_bytes);
+        if len == 0 || len > wire::MAX_FRAME {
+            // Framing lost: answer once, drain what is owed, then close.
+            conn.inflight.push_back(Pending::Immediate(Response::error(
+                Status::BadRequest,
+                OpClass::from_index(0),
+                0,
+            )));
+            conn.closing = true;
+            progress = true;
+            break;
+        }
+        let len = len as usize;
+        if conn.unparsed() < 4 + len {
+            break; // frame still reassembling
+        }
+        let payload = &conn.rdbuf[conn.rdpos + 4..conn.rdpos + 4 + len];
+        let pending = match Request::decode(payload) {
+            // In-frame error: framing intact, connection stays open.
+            Err(_) => Pending::Immediate(Response::error(
+                Status::BadRequest,
+                OpClass::from_index(0),
+                0,
+            )),
+            Ok(req) => route(req, clusters),
+        };
+        conn.rdpos += 4 + len;
+        conn.inflight.push_back(pending);
+        instruments.inflight_hwm.fetch_max(conn.inflight.len() as u64, Ordering::Relaxed);
+        progress = true;
+    }
+    if conn.rdpos > 0 && (conn.rdpos == conn.rdbuf.len() || conn.rdpos >= COMPACT_AT) {
+        conn.rdbuf.drain(..conn.rdpos);
+        conn.rdpos = 0;
+    }
+
+    // 5. Close once everything owed has been answered and flushed: after
+    //    framing loss, or after peer EOF with no bytes left to serve.
+    let drained = conn.inflight.is_empty() && conn.wrbuf.is_empty();
+    let eof_done = conn.read_closed && conn.unparsed() == 0;
+    if drained && (conn.closing || eof_done) {
+        let _ = conn.stream.shutdown(Shutdown::Both);
+        return Pump::Closed;
+    }
+    Pump::Alive { progress }
+}
+
+/// Route one decoded request to its scheme's cluster.
+fn route(req: Request, clusters: &SchemeClusters) -> Pending {
+    let cluster = match clusters.get(req.scheme) {
+        Some(cluster) => cluster,
+        None => return Pending::Immediate(Response::error(Status::Unsupported, req.class, req.id)),
+    };
+    if req.round != RoundMode::NearestEven {
+        // The batch backends only run round-to-nearest-even.
+        return Pending::Immediate(Response::error(Status::Unsupported, req.class, req.id));
+    }
+    match cluster.try_submit(req.id, req.class, req.a, req.b) {
+        Ok(reply) => Pending::Submitted { id: req.id, class: req.class, reply },
+        // Backpressure and shutdown become status responses — the
+        // connection survives a saturated cluster.
+        Err(e) => Pending::Immediate(Response::error(Status::from(e), req.class, req.id)),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ServiceConfig;
+    use crate::net::wire::FrameRead;
 
     fn tiny_config() -> NetServerConfig {
         NetServerConfig {
@@ -263,6 +656,7 @@ mod tests {
                 },
                 ..Default::default()
             },
+            net_workers: 2,
             ..Default::default()
         }
     }
@@ -274,54 +668,31 @@ mod tests {
         Response::decode(&payload).unwrap()
     }
 
+    fn request_frame(id: u64, class: OpClass, scheme: SchemeKind, a: u128, b: u128) -> Vec<u8> {
+        let mut frame = Vec::new();
+        Request { id, class, scheme, round: RoundMode::NearestEven, a, b }.encode(&mut frame);
+        frame
+    }
+
     #[test]
     fn loopback_multiply_and_unsupported() {
-        let server = NetServer::start(
-            &tiny_config(),
-            BackendChoice::native(SchemeKind::Civp),
-        )
-        .unwrap();
+        let server =
+            NetServer::start(&tiny_config(), BackendChoice::native(SchemeKind::Civp)).unwrap();
         let mut stream = TcpStream::connect(server.local_addr()).unwrap();
         let one = OpClass::Double.format().one();
-        let mut frame = Vec::new();
-        Request {
-            id: 42,
-            class: OpClass::Double,
-            scheme: SchemeKind::Civp,
-            round: RoundMode::NearestEven,
-            a: one,
-            b: one,
-        }
-        .encode(&mut frame);
+        let frame = request_frame(42, OpClass::Double, SchemeKind::Civp, one, one);
         let resp = send_recv(&mut stream, &frame);
         assert_eq!(resp.status, Status::Ok);
         assert_eq!(resp.id, 42);
         assert_eq!(resp.bits, one, "1.0 * 1.0 is exact over the wire too");
-        // Wrong scheme for this server: a status response, not a close.
-        frame.clear();
-        Request {
-            id: 43,
-            class: OpClass::Double,
-            scheme: SchemeKind::Baseline18,
-            round: RoundMode::NearestEven,
-            a: one,
-            b: one,
-        }
-        .encode(&mut frame);
-        let resp = send_recv(&mut stream, &frame);
+        // A scheme this deployment does not serve: a status response, not
+        // a close.
+        let bad = request_frame(43, OpClass::Double, SchemeKind::Baseline18, one, one);
+        let resp = send_recv(&mut stream, &bad);
         assert_eq!(resp.status, Status::Unsupported);
         assert_eq!(resp.id, 43);
         // The connection survived both: one more good request.
-        frame.clear();
-        Request {
-            id: 44,
-            class: OpClass::Double,
-            scheme: SchemeKind::Civp,
-            round: RoundMode::NearestEven,
-            a: one,
-            b: one,
-        }
-        .encode(&mut frame);
+        let frame = request_frame(44, OpClass::Double, SchemeKind::Civp, one, one);
         assert_eq!(send_recv(&mut stream, &frame).status, Status::Ok);
         drop(stream);
         let report = server.stop();
@@ -330,11 +701,8 @@ mod tests {
 
     #[test]
     fn malformed_frame_gets_bad_request_not_a_hang() {
-        let server = NetServer::start(
-            &tiny_config(),
-            BackendChoice::native(SchemeKind::Civp),
-        )
-        .unwrap();
+        let server =
+            NetServer::start(&tiny_config(), BackendChoice::native(SchemeKind::Civp)).unwrap();
         let mut stream = TcpStream::connect(server.local_addr()).unwrap();
         // Oversized length prefix: one BadRequest, then the server closes.
         stream.write_all(&u32::MAX.to_le_bytes()).unwrap();
@@ -343,6 +711,75 @@ mod tests {
         let resp = Response::decode(&payload).unwrap();
         assert_eq!(resp.status, Status::BadRequest);
         assert_eq!(wire::read_frame(&mut stream, &mut payload).unwrap(), FrameRead::Eof);
+        server.stop();
+    }
+
+    #[test]
+    fn per_scheme_routing_serves_multiple_clusters() {
+        let mut cfg = tiny_config();
+        cfg.extra_schemes = vec![SchemeKind::Baseline18, SchemeKind::Baseline9];
+        let server = NetServer::start(&cfg, BackendChoice::native(SchemeKind::Civp)).unwrap();
+        assert_eq!(
+            server.schemes(),
+            vec![SchemeKind::Civp, SchemeKind::Baseline18, SchemeKind::Baseline9]
+        );
+        let one = OpClass::Single.format().one();
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        for (id, scheme) in
+            [(1, SchemeKind::Civp), (2, SchemeKind::Baseline18), (3, SchemeKind::Baseline9)]
+        {
+            let frame = request_frame(id, OpClass::Single, scheme, one, one);
+            let resp = send_recv(&mut stream, &frame);
+            assert_eq!(resp.status, Status::Ok, "{scheme:?} must be served, not Unsupported");
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.bits, one);
+        }
+        // A scheme outside the served set still answers Unsupported.
+        let frame = request_frame(4, OpClass::Single, SchemeKind::Baseline25x18, one, one);
+        assert_eq!(send_recv(&mut stream, &frame).status, Status::Unsupported);
+        // Each scheme's ops landed in its own cluster.
+        for scheme in [SchemeKind::Civp, SchemeKind::Baseline18, SchemeKind::Baseline9] {
+            let ops: u64 = server.cluster_for(scheme).unwrap().op_counts().values().sum();
+            assert_eq!(ops, 1, "{scheme:?} cluster executed exactly its own frame");
+        }
+        assert!(server.cluster_for(SchemeKind::Baseline25x18).is_none());
+        drop(stream);
+        server.stop();
+    }
+
+    #[test]
+    fn worker_pool_is_bounded_and_metrics_count_statuses() {
+        let mut cfg = tiny_config();
+        cfg.net_workers = 3;
+        let server = NetServer::start(&cfg, BackendChoice::native(SchemeKind::Civp)).unwrap();
+        // 9 connections over a 3-worker pool: the registry shows 3
+        // workers (thread bound = pool size, not connection count) with
+        // every connection assigned to one of them.
+        let one = OpClass::Single.format().one();
+        let mut streams: Vec<TcpStream> = (0..9)
+            .map(|_| TcpStream::connect(server.local_addr()).unwrap())
+            .collect();
+        for (i, stream) in streams.iter_mut().enumerate() {
+            let frame = request_frame(i as u64, OpClass::Single, SchemeKind::Civp, one, one);
+            assert_eq!(send_recv(stream, &frame).status, Status::Ok);
+        }
+        let registry = server.worker_registry();
+        assert_eq!(registry.len(), 3, "pool size is fixed at startup");
+        assert_eq!(
+            registry.iter().map(|(_, n)| n).sum::<usize>(),
+            9,
+            "every connection is owned by exactly one pool worker"
+        );
+        assert!(
+            registry.iter().all(|(_, n)| *n == 3),
+            "least-loaded assignment spreads 9 conns evenly over 3 workers: {registry:?}"
+        );
+        let snapshot = server.metrics();
+        assert_eq!(snapshot.gauges["net_open_connections"], 9);
+        assert_eq!(snapshot.counters["net_frames_ok"], 9);
+        assert_eq!(snapshot.counters["net_frames_unsupported"], 0);
+        assert!(snapshot.gauges["net_pipeline_inflight_hwm"] >= 1);
+        drop(streams);
         server.stop();
     }
 }

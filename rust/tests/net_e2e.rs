@@ -12,8 +12,10 @@ use civp::fpu::RoundMode;
 use civp::net::wire::{self, FrameRead, Request, Response};
 use civp::net::{LoadgenConfig, NetServer, NetServerConfig, Status};
 use civp::trace::WorkloadSpec;
+use std::collections::BTreeMap;
 use std::io::Write;
 use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
 fn small_server(max_inflight: u64) -> NetServer {
     let cfg = NetServerConfig {
@@ -180,5 +182,248 @@ fn malformed_frames_get_error_responses_not_hangs() {
     assert_eq!(wire::read_frame(&mut stream, &mut payload).unwrap(), FrameRead::Frame);
     assert_eq!(Response::decode(&payload).unwrap().status, Status::Ok);
     drop(stream);
+    server.stop();
+}
+
+/// Encode one well-formed request frame for `class` with operands 1.0.
+fn one_frame(id: u64, class: OpClass, scheme: SchemeKind) -> Vec<u8> {
+    let one = class.format().one();
+    let mut frame = Vec::new();
+    Request { id, class, scheme, round: RoundMode::NearestEven, a: one, b: one }
+        .encode(&mut frame);
+    frame
+}
+
+/// Read exactly `n` responses off one socket, tallying per request id.
+fn read_n_responses(stream: &mut TcpStream, n: usize) -> BTreeMap<u64, (Status, u64)> {
+    stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut payload = Vec::new();
+    let mut seen: BTreeMap<u64, (Status, u64)> = BTreeMap::new();
+    for _ in 0..n {
+        assert_eq!(
+            wire::read_frame(stream, &mut payload).unwrap(),
+            FrameRead::Frame,
+            "server must deliver all {n} replies"
+        );
+        let resp = Response::decode(&payload).unwrap();
+        let entry = seen.entry(resp.id).or_insert((resp.status, 0));
+        entry.1 += 1;
+    }
+    seen
+}
+
+/// The pipelining contract: K frames with distinct request ids written
+/// back-to-back on one connection, an in-flight depth much smaller than
+/// K on the server, and every id answered exactly once — in whatever
+/// order completions land (responses carry ids; ordering is NOT part of
+/// the contract, and the depth high-water mark proves requests really
+/// were concurrent inside the server, bounded by the configured depth).
+#[test]
+fn pipelined_frames_answered_exactly_once_out_of_order_tolerated() {
+    const K: u64 = 64;
+    const DEPTH: usize = 8;
+    let cfg = NetServerConfig {
+        cluster: ClusterConfig {
+            shards: 2,
+            service: ServiceConfig {
+                workers: 2,
+                max_batch: 16,
+                linger_us: 50,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        pipeline_depth: DEPTH,
+        ..Default::default()
+    };
+    let server = NetServer::start(&cfg, BackendChoice::native(SchemeKind::Civp)).unwrap();
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    // Alternate classes so completion latency varies across the window.
+    let classes = [OpClass::Single, OpClass::Double, OpClass::Quad];
+    let mut burst = Vec::new();
+    for i in 0..K {
+        burst.extend_from_slice(&one_frame(
+            1000 + i,
+            classes[(i % 3) as usize],
+            SchemeKind::Civp,
+        ));
+    }
+    stream.write_all(&burst).unwrap();
+    let seen = read_n_responses(&mut stream, K as usize);
+    assert_eq!(seen.len(), K as usize, "every distinct id must be answered");
+    for i in 0..K {
+        let (status, count) = seen[&(1000 + i)];
+        assert_eq!(count, 1, "id {} answered exactly once", 1000 + i);
+        assert_eq!(status, Status::Ok);
+    }
+    let snapshot = server.metrics();
+    let hwm = snapshot.gauges["net_pipeline_inflight_hwm"];
+    assert!(hwm >= 2, "a {K}-frame burst must actually pipeline (hwm {hwm})");
+    assert!(hwm <= DEPTH as i64, "in-flight depth is bounded by the config (hwm {hwm})");
+    assert_eq!(snapshot.counters["net_frames_ok"], K);
+    drop(stream);
+    let report = server.stop();
+    assert_eq!(report.total_ops, K);
+}
+
+/// The slow-reader contract: a client that floods requests and reads
+/// nothing for a while, against a writer queue a fraction of that size,
+/// still gets every reply exactly once — the bounded queue stalls the
+/// server's reads (TCP backpressure) instead of dropping or duplicating
+/// replies.
+#[test]
+fn slow_reader_bounded_writer_queue_drops_nothing() {
+    const K: u64 = 48;
+    let cfg = NetServerConfig {
+        cluster: ClusterConfig {
+            shards: 1,
+            service: ServiceConfig {
+                workers: 1,
+                max_batch: 16,
+                linger_us: 50,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        // Both bounds far below the burst: the server can hold at most
+        // 2 responses queued and 2 requests in flight per connection.
+        writer_queue: 2,
+        pipeline_depth: 2,
+        net_workers: 1,
+        ..Default::default()
+    };
+    let server = NetServer::start(&cfg, BackendChoice::native(SchemeKind::Civp)).unwrap();
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut burst = Vec::new();
+    for i in 0..K {
+        burst.extend_from_slice(&one_frame(i, OpClass::Single, SchemeKind::Civp));
+    }
+    stream.write_all(&burst).unwrap();
+    // Read nothing while the server chews through the burst two at a
+    // time; the writer-queue bound caps what it may buffer per step.
+    std::thread::sleep(Duration::from_millis(300));
+    let seen = read_n_responses(&mut stream, K as usize);
+    assert_eq!(seen.len(), K as usize);
+    for i in 0..K {
+        let (status, count) = seen[&i];
+        assert_eq!(count, 1, "id {i} answered exactly once through the bounded queue");
+        assert_eq!(status, Status::Ok);
+    }
+    let snapshot = server.metrics();
+    assert!(
+        snapshot.gauges["net_pipeline_inflight_hwm"] <= 2,
+        "depth bound must hold under the backlog"
+    );
+    drop(stream);
+    server.stop();
+}
+
+/// Per-scheme multiplexing end to end: the load generator stamps a
+/// non-primary scheme and the listener serves it through that scheme's
+/// own cluster instead of answering `Unsupported`.
+#[test]
+fn loadgen_traffic_routes_to_extra_scheme_cluster() {
+    let cfg = NetServerConfig {
+        cluster: ClusterConfig {
+            shards: 1,
+            service: ServiceConfig {
+                workers: 2,
+                max_batch: 64,
+                linger_us: 50,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        extra_schemes: vec![SchemeKind::Baseline18],
+        ..Default::default()
+    };
+    let server = NetServer::start(&cfg, BackendChoice::native(SchemeKind::Civp)).unwrap();
+    let lg = LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        conns: 2,
+        requests: 400,
+        warmup: 20,
+        mix: WorkloadSpec::Mixed.mix(),
+        mix_name: "mixed".to_string(),
+        scheme: SchemeKind::Baseline18,
+        ..LoadgenConfig::default()
+    };
+    let report = civp::net::loadgen::run(&lg).unwrap();
+    assert_eq!(report.lost, 0);
+    assert_eq!(report.ok, report.sent, "the 18x18 cluster must serve, not Unsupported");
+    let routed: u64 =
+        server.cluster_for(SchemeKind::Baseline18).unwrap().op_counts().values().sum();
+    assert_eq!(routed, report.sent, "all frames landed in the 18x18 scheme's cluster");
+    let primary: u64 = server.cluster().op_counts().values().sum();
+    assert_eq!(primary, 0, "the primary CIVP cluster saw none of it");
+    server.stop();
+}
+
+/// The acceptance-criterion run: 4 net workers serving 256 loopback
+/// connections, a closed-loop two-point offered-load sweep, zero lost
+/// replies at every point — and the thread-count bound asserted through
+/// the worker registry (4 fixed workers owning all 256 connections), not
+/// by groveling `/proc`.
+#[test]
+fn sweep_256_conns_over_4_workers_loses_nothing() {
+    let cfg = NetServerConfig {
+        cluster: ClusterConfig {
+            shards: 2,
+            service: ServiceConfig {
+                workers: 2,
+                max_batch: 64,
+                linger_us: 50,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        net_workers: 4,
+        ..Default::default()
+    };
+    let server = NetServer::start(&cfg, BackendChoice::native(SchemeKind::Civp)).unwrap();
+    let lg = LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        conns: 256,
+        requests: 2560,
+        warmup: 256,
+        concurrency: 1024,
+        mix: WorkloadSpec::Mixed.mix(),
+        mix_name: "mixed".to_string(),
+        ..LoadgenConfig::default()
+    };
+    let sweep = std::thread::spawn(move || {
+        civp::net::loadgen::run_sweep(&lg, &[4000.0, 16000.0], 4).unwrap()
+    });
+    // While the sweep drives load, watch the worker registry: the pool
+    // never grows, and at peak all 256 connections are owned by it.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut max_open = 0usize;
+    while Instant::now() < deadline {
+        let registry = server.worker_registry();
+        assert_eq!(registry.len(), 4, "the pool is fixed at 4 workers");
+        let open: usize = registry.iter().map(|(_, n)| n).sum();
+        max_open = max_open.max(open);
+        if max_open >= 256 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // `>=`: between sweep points, closes from the previous point can
+    // briefly overlap the next point's connects in the registry sums.
+    assert!(max_open >= 256, "all 256 connections must be owned by the 4-worker pool");
+    let sweep_report = sweep.join().unwrap();
+    assert_eq!(sweep_report.points.len(), 2);
+    for point in &sweep_report.points {
+        assert_eq!(point.report.sent, 2560, "rate {}", point.rate);
+        assert_eq!(point.report.lost, 0, "zero lost replies at rate {}", point.rate);
+        assert_eq!(point.report.replies(), point.report.sent);
+    }
+    // The sweep's bench rows carry the knee-gate inputs.
+    let mut json = civp::benchx::JsonReport::new();
+    sweep_report.push_bench_rows(&mut json);
+    let text = json.to_json();
+    for name in ["net/mixed/sweep-workers", "net/mixed/p99@4000", "net/mixed/lost@16000"] {
+        assert!(text.contains(name), "{name} missing from sweep rows");
+    }
     server.stop();
 }
