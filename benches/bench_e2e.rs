@@ -27,6 +27,7 @@ use civp::decomp::{OpClass, SchemeKind};
 use civp::fabric::{simulate_counts, simulate_stream, CostModel, FabricConfig, FabricOp};
 use civp::runtime::EngineHandle;
 use civp::trace::{TraceGen, WorkloadSpec};
+use civp::wideint::PackedBits;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
@@ -121,7 +122,7 @@ fn main() {
 
     // --- reply path: pooled oneshot vs per-request mpsc channel --------
     section("reply path: pooled oneshot slot vs mpsc channel per request (pre-PR)");
-    let resp = Response { id: 1, bits: 42, latency_ns: 100, batch_size: 8 };
+    let resp = Response { id: 1, bits: PackedBits::from_u64(42), latency_ns: 100, batch_size: 8 };
     let pool = ReplyPool::new();
     let iters = scaled(20_000);
     let oneshot = bench("reply roundtrip: pooled oneshot", 1_000, 30, iters, || {

@@ -11,16 +11,26 @@
 //! * **full IEEE pipeline** — `formats/fpu-<class>/fused-x256`
 //!   (`FpuBatch`) vs `formats/fpu-<class>/per-op-x256` (`mul_bits_batch`).
 //!
+//! The **wide ablation** then takes the tree-path classes (Fp256/Fp512,
+//! which bypass the U128 lane engine entirely): for each one it times
+//! `Plan::execute_batch_wide` under the naive all-pairs organization
+//! (`civp`) against the sub-quadratic `karatsuba24` planner, and records
+//! the static per-multiply tile counts of both plans —
+//! `formats/wide-<class>/{naive,karatsuba}-x64` and
+//! `formats/wide-<class>/tile-count-{naive,karatsuba}`.
+//!
 //! Every measurement lands in `BENCH_formats.json`; CI smoke-runs this
 //! target and `python/tools/check_bench.py` enforces `lane p50 ≤ per-op
-//! p50` per pair, so the sub-single classes gate regressions exactly like
-//! the original three.
+//! p50` per pair plus the Karatsuba ablation gate (`karatsuba p50 ≤
+//! naive p50` and sub-quadratic tile growth at every wide class), so the
+//! sub-single and wide classes gate regressions exactly like the
+//! original three.
 
-use civp::benchx::{bb, bench, scaled, section, verdict_table, JsonReport};
-use civp::decomp::{DecompMul, ExecStats, OpClass, PlanCache, SchemeKind};
-use civp::fpu::{mul_bits_batch, FpuBatch, RoundMode};
+use civp::benchx::{bb, bench, scaled, section, verdict_table, JsonReport, Measurement};
+use civp::decomp::{DecompMul, ExecStats, OpClass, Plan, PlanCache, SchemeKind};
+use civp::fpu::{mul_bits_batch, FpuBatch, RoundMode, WideProd};
 use civp::proput::Rng;
-use civp::wideint::{mul_u128, U128, U256};
+use civp::wideint::{mul_u128, PackedBits, U128, U256};
 
 const BATCH: usize = 256;
 
@@ -29,7 +39,9 @@ fn main() {
 
     section("raw significand products x256 per registry class");
     let mut verdicts: Vec<(String, f64)> = Vec::new();
-    for class in OpClass::ALL {
+    // The lane/per-op pair covers the U128-path classes; the wide classes
+    // (tree path) get their own naive-vs-karatsuba ablation below.
+    for class in OpClass::ALL.into_iter().filter(|c| !c.is_wide()) {
         let label = format!("civp-{}", class.name());
         let bits = class.sig_bits();
         let plan = PlanCache::get(SchemeKind::Civp, class);
@@ -67,7 +79,7 @@ fn main() {
     }
 
     section("full IEEE pipeline x256 per registry class: fused vs per-op");
-    for class in OpClass::ALL {
+    for class in OpClass::ALL.into_iter().filter(|c| !c.is_wide()) {
         let fmt = class.format();
         let bits = fmt.total_bits();
         let mask = if bits == 128 { u128::MAX } else { (1u128 << bits) - 1 };
@@ -110,6 +122,69 @@ fn main() {
         "the lane path beats the per-op path on every registry class",
         "at least one class did not benefit from lane fusion",
     );
+
+    section("wide ablation x64: karatsuba24 planner vs naive all-pairs tiling");
+    const WIDE_BATCH: usize = 64;
+    let mut wide_verdicts: Vec<(String, f64)> = Vec::new();
+    for class in OpClass::ALL.into_iter().filter(|c| c.is_wide()) {
+        let bits = class.sig_bits();
+        let mut rng = Rng::new(0xF1DE ^ bits as u64);
+        let mut draw = |rng: &mut Rng| {
+            let mut v = PackedBits::ZERO;
+            for l in v.limbs.iter_mut() {
+                *l = rng.next_u64();
+            }
+            let mut v = v.mask_low(bits);
+            v.set_bit(bits - 1); // normalized significand: top bit set
+            v
+        };
+        let a: Vec<PackedBits> = (0..WIDE_BATCH).map(|_| draw(&mut rng)).collect();
+        let b: Vec<PackedBits> = (0..WIDE_BATCH).map(|_| draw(&mut rng)).collect();
+
+        let naive_plan = PlanCache::get(SchemeKind::Civp, class);
+        let kara_plan = PlanCache::get(SchemeKind::Karatsuba24, class);
+
+        // Correctness cross-check before timing: both organizations must
+        // reproduce the exact double-width product.
+        let mut st = ExecStats::default();
+        for i in 0..WIDE_BATCH {
+            let want: WideProd = a[i].mul_full(&b[i]);
+            assert_eq!(naive_plan.execute_wide(a[i], b[i], &mut st), want, "naive {i}");
+            assert_eq!(kara_plan.execute_wide(a[i], b[i], &mut st), want, "karatsuba {i}");
+        }
+
+        let iters = scaled(300).max(2);
+        let mut run = |tag: &str, plan: &Plan| -> Measurement {
+            let mut stats = ExecStats::default();
+            let mut out: Vec<WideProd> = Vec::with_capacity(WIDE_BATCH);
+            let label = format!("{:<8} {tag:<10} x{WIDE_BATCH}", class.name());
+            let m = bench(&label, 10, 30, iters, || {
+                plan.execute_batch_wide(&a, &b, &mut stats, &mut out);
+                bb(out.len());
+            });
+            json.push(&format!("formats/wide-{}/{tag}-x{WIDE_BATCH}", class.name()), m);
+            // Static tile census per multiply, stored as a pseudo-measurement
+            // so check_bench.py can gate sub-quadratic growth from the JSON.
+            let tiles = plan.per_mul_stats().tiles;
+            json.push(
+                &format!("formats/wide-{}/tile-count-{tag}", class.name()),
+                Measurement::uniform(tiles as f64, tiles),
+            );
+            println!("  {:<8} {tag:<10} {tiles} tiles/mul", class.name());
+            m
+        };
+        let naive_m = run("naive", &naive_plan);
+        let kara_m = run("karatsuba", &kara_plan);
+        wide_verdicts.push((format!("wide-{}", class.name()), kara_m.p50_speedup_over(&naive_m)));
+    }
+    if !wide_verdicts.is_empty() {
+        verdict_table(
+            "verdict: karatsuba24 speedup over naive all-pairs at wide widths (p50)",
+            &wide_verdicts,
+            "the sub-quadratic planner beats all-pairs tiling on every wide class",
+            "at least one wide class did not benefit from the karatsuba planner",
+        );
+    }
 
     json.write("BENCH_formats.json").expect("write BENCH_formats.json");
 }

@@ -44,8 +44,11 @@ fn main() {
 
     section("raw significand products x256: lane path vs per-op path");
     let mut verdicts: Vec<(String, f64)> = Vec::new();
+    // Lane fusion is a U128-path engine; the wide classes run the tile
+    // tree and are benched in `bench_formats` (Karatsuba ablation).
     let widths: Vec<(String, u32)> = OpClass::ALL
         .iter()
+        .filter(|p| !p.is_wide())
         .map(|p| (format!("civp-{}", p.name()), p.sig_bits()))
         .chain(std::iter::once(("civp-int48".to_string(), 48)))
         .collect();
@@ -88,7 +91,7 @@ fn main() {
     }
 
     section("full IEEE pipeline x256: FpuBatch fused vs per-op mul_bits_batch");
-    for prec in OpClass::ALL {
+    for prec in OpClass::ALL.into_iter().filter(|c| !c.is_wide()) {
         let fmt = prec.format();
         let bits = fmt.total_bits();
         let mask = if bits == 128 { u128::MAX } else { (1u128 << bits) - 1 };
@@ -132,7 +135,7 @@ fn main() {
         if cfg!(feature = "simd") { "on" } else { "off" }
     );
     let mut simd_verdicts: Vec<(String, f64)> = Vec::new();
-    for class in OpClass::ALL {
+    for class in OpClass::ALL.into_iter().filter(|c| !c.is_wide()) {
         let bits = class.sig_bits();
         let plan = PlanCache::get(SchemeKind::Civp, class);
         let mut rng = Rng::new(0x51D0 ^ bits as u64);

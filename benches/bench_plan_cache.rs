@@ -23,18 +23,20 @@ use civp::coordinator::NativeBackend;
 use civp::decomp::{execute, ExecStats, OpClass, PlanCache, Scheme, SchemeKind};
 use civp::fpu::{mul_bits, DirectMul, RoundMode};
 use civp::proput::Rng;
-use civp::wideint::{mul_u128, U128, U256};
+use civp::wideint::{mul_u128, PackedBits, U128, U256};
 
 
 fn main() {
-    let precisions = OpClass::ALL; // the full registry, sub-single included
+    // The full registry's U128-path classes (sub-single included). The wide
+    // classes run the tree path; `bench_formats` carries their ablation.
+    let precisions: Vec<OpClass> = OpClass::ALL.into_iter().filter(|c| !c.is_wide()).collect();
     let kinds = SchemeKind::ALL; // civp + all three baselines
     let mut json = JsonReport::new();
     let iters = scaled(10_000);
 
     section("significand product: cached plan vs per-call tile-DAG derivation");
     let mut verdicts: Vec<(String, f64)> = Vec::new();
-    for prec in precisions {
+    for &prec in &precisions {
         for kind in kinds {
             let bits = prec.sig_bits();
             let scheme = Scheme::new(kind, prec);
@@ -80,7 +82,7 @@ fn main() {
     }
 
     section("plan batch surface: execute_batch (one scaled stats merge per batch)");
-    for prec in precisions {
+    for &prec in &precisions {
         let bits = prec.sig_bits();
         let plan = PlanCache::get(SchemeKind::Civp, prec);
         let mut rng = Rng::new(0xD00D ^ bits as u64);
@@ -102,16 +104,22 @@ fn main() {
     }
 
     section("coordinator batch path: mul_batch (reused scratch) vs per-call pipeline");
-    for prec in precisions {
+    for &prec in &precisions {
         let fmt = prec.format();
         let bits = fmt.total_bits();
         let mut rng = Rng::new(0xABCD ^ bits as u64);
         let mask = if bits == 128 { u128::MAX } else { (1u128 << bits) - 1 };
-        let a: Vec<u128> = (0..256)
-            .map(|_| (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & mask)
+        let a: Vec<PackedBits> = (0..256)
+            .map(|_| {
+                let v = (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & mask;
+                PackedBits::from_u128(v)
+            })
             .collect();
-        let b: Vec<u128> = (0..256)
-            .map(|_| (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & mask)
+        let b: Vec<PackedBits> = (0..256)
+            .map(|_| {
+                let v = (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & mask;
+                PackedBits::from_u128(v)
+            })
             .collect();
 
         let mut be = NativeBackend::new(SchemeKind::Civp);
@@ -127,8 +135,8 @@ fn main() {
             for i in 0..a.len() {
                 let (bits, _) = mul_bits(
                     fmt,
-                    U128::from_u128(a[i]),
-                    U128::from_u128(b[i]),
+                    U128::from_u128(a[i].as_u128()),
+                    U128::from_u128(b[i].as_u128()),
                     RoundMode::NearestEven,
                     &mut dm,
                 );

@@ -121,7 +121,7 @@ fn main() {
         (6.0f64).to_bits() as u128,
         (7.0f64).to_bits() as u128,
     );
-    println!("service: 6.0 x 7.0 = {}", f64::from_bits(product as u64));
+    println!("service: 6.0 x 7.0 = {}", f64::from_bits(product.as_u64()));
     let report = svc.shutdown();
     println!("service handled {} request(s); backend = {}", report.responses, report.backend);
     println!("\nquickstart OK");

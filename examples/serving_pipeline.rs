@@ -20,16 +20,18 @@ use civp::config::ServiceConfig;
 use civp::coordinator::{BackendChoice, Service};
 use civp::decomp::SchemeKind;
 use civp::fabric::FabricKind;
-use civp::fpu::{Fp128, Fp32, Fp64};
+use civp::decomp::OpClass;
+use civp::fpu::{mul_bits_wide, DirectMul, Fp128, Fp32, Fp64, RoundMode};
 use civp::runtime::EngineHandle;
 use civp::trace::{TraceGen, TraceRequest, WorkloadSpec};
+use civp::wideint::PackedBits;
 use std::time::Instant;
 
 const REQUESTS: usize = 30_000;
 
-fn drive(svc: &Service, trace: &[TraceRequest]) -> (f64, Vec<u128>) {
+fn drive(svc: &Service, trace: &[TraceRequest]) -> (f64, Vec<PackedBits>) {
     let t0 = Instant::now();
-    let mut results = vec![0u128; trace.len()];
+    let mut results = vec![PackedBits::ZERO; trace.len()];
     let mut pending: Vec<(usize, civp::coordinator::ReplyHandle)> = Vec::with_capacity(4096);
     for (idx, req) in trace.iter().enumerate() {
         pending.push((idx, svc.submit(req.id, req.class, req.a, req.b).unwrap()));
@@ -45,23 +47,25 @@ fn drive(svc: &Service, trace: &[TraceRequest]) -> (f64, Vec<u128>) {
     (t0.elapsed().as_secs_f64(), results)
 }
 
-fn verify_against_softfloat(trace: &[TraceRequest], results: &[u128]) -> usize {
+fn verify_against_softfloat(trace: &[TraceRequest], results: &[PackedBits]) -> usize {
     let mut checked = 0;
     for (req, &got) in trace.iter().zip(results) {
+        let (a, b) = (req.a, req.b);
         let want = match req.class {
-            civp::decomp::OpClass::Bf16 => {
-                civp::fpu::Bf16(req.a as u16).mul(civp::fpu::Bf16(req.b as u16)).0 as u128
+            OpClass::Bf16 => PackedBits::from_u64(
+                civp::fpu::Bf16(a.as_u64() as u16).mul(civp::fpu::Bf16(b.as_u64() as u16)).0 as u64,
+            ),
+            OpClass::Half => PackedBits::from_u64(
+                civp::fpu::Fp16(a.as_u64() as u16).mul(civp::fpu::Fp16(b.as_u64() as u16)).0 as u64,
+            ),
+            OpClass::Single => {
+                PackedBits::from_u64(Fp32(a.as_u64() as u32).mul(Fp32(b.as_u64() as u32)).0 as u64)
             }
-            civp::decomp::OpClass::Half => {
-                civp::fpu::Fp16(req.a as u16).mul(civp::fpu::Fp16(req.b as u16)).0 as u128
+            OpClass::Double => PackedBits::from_u64(Fp64(a.as_u64()).mul(Fp64(b.as_u64())).0),
+            OpClass::Quad => PackedBits::from_u128(Fp128(a.as_u128()).mul(Fp128(b.as_u128())).0),
+            OpClass::Fp256 | OpClass::Fp512 => {
+                mul_bits_wide(req.class.format(), a, b, RoundMode::NearestEven, &mut DirectMul).0
             }
-            civp::decomp::OpClass::Single => {
-                Fp32(req.a as u32).mul(Fp32(req.b as u32)).0 as u128
-            }
-            civp::decomp::OpClass::Double => {
-                Fp64(req.a as u64).mul(Fp64(req.b as u64)).0 as u128
-            }
-            civp::decomp::OpClass::Quad => Fp128(req.a).mul(Fp128(req.b)).0,
         };
         assert_eq!(got, want, "req {} ({:?}) diverged", req.id, req.class);
         checked += 1;

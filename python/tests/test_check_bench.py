@@ -10,6 +10,11 @@ parallel-executor efficiency gate added with `BENCH_parallel.json`:
   missing core point each exit 1 with a targeted message;
 * `parallel/wall-*` rows are wall-clock: never written into the
   baseline by `--update`, so runner core counts cannot gate PRs.
+
+Later gates (simd ablation, net conservation + knee, wide-class
+karatsuba ablation) are pinned the same way further down: pass shape,
+each targeted failure message, and baseline exclusion for their
+machine-dependent rows.
 """
 
 import json
@@ -276,6 +281,103 @@ def test_update_never_baselines_net_rows(tmp_path):
     names = [r["name"] for r in json.loads((tmp_path / "BL.json").read_text())]
     assert not any(n.startswith("net/") for n in names), names
     assert "lanes/civp-double/lane-path" in names
+
+
+def karatsuba_rows(cls, naive, kara, tiles_naive, tiles_kara):
+    """One wide class's ablation quartet from bench_formats."""
+    prefix = f"formats/wide-{cls}"
+    return [
+        row(f"{prefix}/naive-x64", naive),
+        row(f"{prefix}/karatsuba-x64", kara),
+        row(f"{prefix}/tile-count-naive", float(tiles_naive)),
+        row(f"{prefix}/tile-count-karatsuba", float(tiles_kara)),
+    ]
+
+
+# The real census: fp512/fp256 karatsuba tile ratio 243/75 = 3.24x, below
+# the 4x a quadratic tiler would pay for the doubled width.
+GOOD_KARATSUBA = karatsuba_rows("fp256", 900.0, 500.0, 169, 75) + karatsuba_rows(
+    "fp512", 3600.0, 1500.0, 676, 243
+)
+
+
+def test_karatsuba_gate_passes_on_subquadratic_census(tmp_path):
+    art = write_artifact(tmp_path / "BENCH_formats.json", GOOD_KARATSUBA)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 0, out
+    assert "karatsuba beats naive tiling on 2 wide class(es)" in out
+
+
+def test_karatsuba_gate_fails_when_karatsuba_slower(tmp_path):
+    bad = karatsuba_rows("fp256", 500.0, 900.0, 169, 75) + karatsuba_rows(
+        "fp512", 3600.0, 1500.0, 676, 243
+    )
+    art = write_artifact(tmp_path / "BENCH_formats.json", bad)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "karatsuba batch slower than naive all-pairs for wide-fp256" in out
+
+
+def test_karatsuba_gate_fails_when_tile_count_not_below_naive(tmp_path):
+    bad = karatsuba_rows("fp256", 900.0, 500.0, 169, 169) + karatsuba_rows(
+        "fp512", 3600.0, 1500.0, 676, 243
+    )
+    art = write_artifact(tmp_path / "BENCH_formats.json", bad)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "karatsuba tile count not below naive for wide-fp256" in out
+
+
+def test_karatsuba_gate_fails_on_quadratic_tile_growth(tmp_path):
+    # fp512 at 300 tiles makes the fp256 -> fp512 ratio exactly 4x: the
+    # boundary is exclusive, so quadratic growth must fail.
+    bad = karatsuba_rows("fp256", 900.0, 500.0, 169, 75) + karatsuba_rows(
+        "fp512", 3600.0, 1500.0, 676, 300
+    )
+    art = write_artifact(tmp_path / "BENCH_formats.json", bad)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "4.00x" in out and "not sub-quadratic" in out
+
+
+def test_karatsuba_gate_fails_on_missing_naive_sibling(tmp_path):
+    bad = [r for r in GOOD_KARATSUBA if r["name"] != "formats/wide-fp512/naive-x64"]
+    art = write_artifact(tmp_path / "BENCH_formats.json", bad)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "no naive sibling `formats/wide-fp512/naive-x64`" in out
+
+
+def test_karatsuba_gate_fails_on_missing_tile_census(tmp_path):
+    bad = [r for r in GOOD_KARATSUBA if "tile-count" not in r["name"]]
+    art = write_artifact(tmp_path / "BENCH_formats.json", bad)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 1, out
+    assert "tile-count rows missing" in out
+
+
+def test_karatsuba_gate_tolerates_small_noise(tmp_path):
+    # Within LANES_NOISE_SLACK (5%) the batch-timing leg must not flake;
+    # the tile-census legs stay exact.
+    noisy = karatsuba_rows("fp256", 500.0, 520.0, 169, 75) + karatsuba_rows(
+        "fp512", 3600.0, 1500.0, 676, 243
+    )
+    art = write_artifact(tmp_path / "BENCH_formats.json", noisy)
+    code, out = run_gate(tmp_path, art.name)
+    assert code == 0, out
+
+
+def test_update_never_baselines_wide_rows(tmp_path):
+    # The wide-ablation timings are machine-dependent wall time and the
+    # tile counts are pseudo-measurements — neither belongs in the
+    # baseline. The formats/civp-* rows still do.
+    rows = GOOD_KARATSUBA + [row("formats/civp-double/batch-x256", 40.0)]
+    art = write_artifact(tmp_path / "BENCH_formats.json", rows)
+    code, out = run_gate(tmp_path, art.name, "--update", "--baseline", "BL.json")
+    assert code == 0, out
+    names = [r["name"] for r in json.loads((tmp_path / "BL.json").read_text())]
+    assert not any(n.startswith("formats/wide-") for n in names), names
+    assert "formats/civp-double/batch-x256" in names
 
 
 def sweep_rows(mix, workers, points):

@@ -32,6 +32,13 @@ artifacts (CI does this with CIVP_BENCH_QUICK=1). Three layers of checks:
    * the same lane-vs-per-op invariant holds per registry op class in
      `BENCH_formats.json` (`formats/...` rows) — binary16 and bfloat16
      gate regressions exactly like single/double/quad;
+   * the wide-class Karatsuba ablation (`formats/wide-<class>/...` rows):
+     for every wide class the `karatsuba-x<N>` batch p50 must not lose to
+     its `naive-x<N>` all-pairs sibling, the static `tile-count-karatsuba`
+     row must be strictly below `tile-count-naive`, and the karatsuba tile
+     count must grow sub-quadratically from fp256 to fp512 (ratio < 4x for
+     a 2x width step — the planner's headline claim). These rows depend on
+     the batch size and runner, so they are never baselined;
    * the width x ISA ablation matrix (`lanes/simd-<class>/w<W>-<isa>`
      rows): every SIMD-dispatched sweep must have a same-(class, width)
      scalar sibling in the run and must not be slower than it — a
@@ -101,7 +108,8 @@ PARALLEL_MIN_SPEEDUP = 2.0
 # pjrt row does not exist on runners without artifacts. --update never
 # writes these into the baseline.
 UNBASELINEABLE_RE = re.compile(
-    r"^(e2e/|cluster/mixed/wall-|cluster/mixed/policy-|parallel/wall-|lanes/simd-|net/)"
+    r"^(e2e/|cluster/mixed/wall-|cluster/mixed/policy-|parallel/wall-|lanes/simd-"
+    r"|formats/wide-|net/)"
 )
 # Headroom --update applies on top of the measured p50 so a baseline
 # refreshed on a fast machine doesn't fail the 25% gate on a slower one.
@@ -232,6 +240,78 @@ def check_lanes_invariants(current, prefix="lanes"):
     if pairs and len(failures) == before:
         print(
             f"invariant ok: {prefix} lane path beats per-op path on all {pairs} measured pairs"
+        )
+
+
+KARATSUBA_ROW_RE = re.compile(r"^formats/wide-([^/]+)/karatsuba-x(\d+)$")
+# Quadratic tiling quadruples the tile count when the operand width
+# doubles; the karatsuba fp256 -> fp512 step must come in strictly below
+# that to certify sub-quadratic growth (3-way recursion predicts ~3.24x).
+KARATSUBA_SUBQUADRATIC_RATIO = 4.0
+
+
+def check_karatsuba_ablation(current):
+    """Wide-class planner gate over the `formats/wide-<class>/...` rows.
+
+    Machine-independent: the karatsuba and naive organizations run in the
+    same process on the same operand batch, so runner speed cancels out.
+    Three properties per run:
+
+    * karatsuba batch p50 <= naive batch p50 (modulo LANES_NOISE_SLACK,
+      same rationale as the lane-vs-per-op gate) for every wide class —
+      the planner must actually pay for its combine additions;
+    * static tile census strictly smaller: `tile-count-karatsuba` <
+      `tile-count-naive` per class (the counts ride in ns_per_op_p50 as
+      pseudo-measurements written by bench_formats);
+    * sub-quadratic growth: the karatsuba tile count may grow by less
+      than KARATSUBA_SUBQUADRATIC_RATIO when the significand width
+      doubles from fp256 to fp512.
+    """
+    before = len(failures)
+    classes = []
+    for name, p50 in sorted(current.items()):
+        m = KARATSUBA_ROW_RE.match(name)
+        if not m:
+            continue
+        cls, batch = m.group(1), m.group(2)
+        classes.append(cls)
+        sibling = f"formats/wide-{cls}/naive-x{batch}"
+        if sibling not in current:
+            fail(f"`{name}` has no naive sibling `{sibling}` — bench target incomplete?")
+            continue
+        if p50 > current[sibling] * LANES_NOISE_SLACK:
+            fail(
+                f"karatsuba batch slower than naive all-pairs for wide-{cls}: "
+                f"{p50:.1f} vs {current[sibling]:.1f} ns/op"
+            )
+    if not classes:
+        return
+    tiles = {}
+    for cls in classes:
+        kara = current.get(f"formats/wide-{cls}/tile-count-karatsuba")
+        naive = current.get(f"formats/wide-{cls}/tile-count-naive")
+        if kara is None or naive is None:
+            fail(f"wide-{cls}: tile-count rows missing from the run")
+            continue
+        tiles[cls] = kara
+        if not kara < naive:
+            fail(
+                f"karatsuba tile count not below naive for wide-{cls}: "
+                f"{kara:.0f} vs {naive:.0f} tiles/mul"
+            )
+    if "fp256" in tiles and "fp512" in tiles and tiles["fp256"] > 0:
+        ratio = tiles["fp512"] / tiles["fp256"]
+        if ratio >= KARATSUBA_SUBQUADRATIC_RATIO:
+            fail(
+                f"karatsuba tile growth fp256 -> fp512 is {ratio:.2f}x >= "
+                f"{KARATSUBA_SUBQUADRATIC_RATIO:g}x — not sub-quadratic"
+            )
+    elif classes:
+        fail("karatsuba ablation present but missing the fp256 or fp512 tile-count rows")
+    if len(failures) == before:
+        print(
+            f"invariant ok: karatsuba beats naive tiling on {len(classes)} wide class(es), "
+            f"tile growth sub-quadratic"
         )
 
 
@@ -572,6 +652,7 @@ def main():
     check_plan_invariants(current)
     check_lanes_invariants(current)
     check_lanes_invariants(current, prefix="formats")
+    check_karatsuba_ablation(current)
     check_simd_invariants(current)
     check_cluster_scaling(current)
     check_parallel_scaling(current)

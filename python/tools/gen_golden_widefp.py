@@ -1,0 +1,178 @@
+"""Generate Fp256/Fp512 multiplication golden vectors with pure-integer math.
+
+Independent oracle for the Rust softfloat's wide (tree-path) pipeline:
+the same IEEE-754 multiply model as `gen_golden_fp128.py`, generalized
+over the format geometry and instantiated for the two extended registry
+classes (fp256: 19/236, fp512: 23/488). No code shared with the Rust
+pipeline. Output is Rust array literals pasted into
+`rust/src/fpu/golden.rs`; operands are hex strings because Rust has no
+integer literal wide enough to hold them (`Wide::from_hex` parses them
+back at test time).
+"""
+import random
+
+
+class Fmt:
+    def __init__(self, name, exp_bits, frac_bits):
+        self.name = name
+        self.exp_bits = exp_bits
+        self.frac_bits = frac_bits
+        self.total = 1 + exp_bits + frac_bits
+        self.bias = (1 << (exp_bits - 1)) - 1
+        self.emin = 1 - self.bias
+        self.emax = self.bias
+        self.exp_mask = (1 << exp_bits) - 1
+
+
+FP256 = Fmt("FP256", 19, 236)
+FP512 = Fmt("FP512", 23, 488)
+
+
+def unpack(f, bits):
+    sign = bits >> (f.total - 1)
+    biased = (bits >> f.frac_bits) & f.exp_mask
+    frac = bits & ((1 << f.frac_bits) - 1)
+    if biased == f.exp_mask:
+        return (sign, 'nan' if frac else 'inf', 0, 0)
+    if biased == 0:
+        if frac == 0:
+            return (sign, 'zero', 0, 0)
+        return (sign, 'fin', f.emin, frac)  # subnormal, no hidden bit
+    return (sign, 'fin', biased - f.bias, frac | (1 << f.frac_bits))
+
+
+def mul_mode(f, a_bits, b_bits, mode):
+    """IEEE multiply in format `f` under any rounding-direction attribute.
+
+    mode: 'rne' | 'rna' | 'rtz' | 'rup' | 'rdn'
+    """
+    sa, ca, ea, ma = unpack(f, a_bits)
+    sb, cb, eb, mb = unpack(f, b_bits)
+    sign = sa ^ sb
+    sign_shift = f.total - 1
+    QNAN = (f.exp_mask << f.frac_bits) | (1 << (f.frac_bits - 1))
+    INF = f.exp_mask << f.frac_bits
+    if ca == 'nan' or cb == 'nan':
+        return QNAN
+    if (ca == 'inf' and cb == 'zero') or (ca == 'zero' and cb == 'inf'):
+        return QNAN
+    if ca == 'inf' or cb == 'inf':
+        return (sign << sign_shift) | INF
+    if ca == 'zero' or cb == 'zero':
+        return sign << sign_shift
+    while ma < (1 << f.frac_bits):
+        ma <<= 1
+        ea -= 1
+    while mb < (1 << f.frac_bits):
+        mb <<= 1
+        eb -= 1
+    prod = ma * mb
+    top = prod.bit_length() - 1
+    exp = ea + eb + (top - 2 * f.frac_bits)
+    shift = top - f.frac_bits
+    if exp < f.emin:
+        shift += f.emin - exp
+        exp = f.emin
+    kept = prod >> shift
+    rem = prod & ((1 << shift) - 1) if shift > 0 else 0
+    half = 1 << (shift - 1) if shift > 0 else 0
+    inc = False
+    if rem:
+        if mode == 'rne':
+            inc = rem > half or (rem == half and kept & 1)
+        elif mode == 'rna':
+            inc = rem >= half
+        elif mode == 'rtz':
+            inc = False
+        elif mode == 'rup':
+            inc = sign == 0
+        elif mode == 'rdn':
+            inc = sign == 1
+    if inc:
+        kept += 1
+    if kept.bit_length() > f.frac_bits + 1:
+        kept >>= 1
+        exp += 1
+    if exp > f.emax:
+        to_inf = mode in ('rne', 'rna') or (mode == 'rup' and sign == 0) or (
+            mode == 'rdn' and sign == 1)
+        if to_inf:
+            return (sign << sign_shift) | INF
+        return (sign << sign_shift) | ((f.exp_mask - 1) << f.frac_bits) | (
+            (1 << f.frac_bits) - 1)
+    if kept == 0:
+        return sign << sign_shift
+    if kept < (1 << f.frac_bits):
+        return (sign << sign_shift) | kept  # subnormal (exp == emin)
+    return (sign << sign_shift) | ((exp + f.bias) << f.frac_bits) | (
+        kept - (1 << f.frac_bits))
+
+
+def rand_bits(f, rng):
+    kind = rng.randrange(8)
+    if kind == 0:
+        return rng.getrandbits(f.total)
+    if kind == 1:
+        return rng.getrandbits(f.frac_bits)  # subnormal
+    if kind == 2:  # near overflow
+        return ((f.exp_mask - 1 - rng.randrange(4)) << f.frac_bits) | rng.getrandbits(
+            f.frac_bits)
+    if kind == 3:  # near underflow
+        return ((1 + rng.randrange(4)) << f.frac_bits) | rng.getrandbits(f.frac_bits)
+    if kind == 4:  # all-ones significand
+        return (rng.randrange(f.exp_mask) << f.frac_bits) | ((1 << f.frac_bits) - 1)
+    if kind == 5:  # power of two
+        return rng.randrange(f.exp_mask) << f.frac_bits
+    if kind == 6:  # sparse significand
+        return (rng.randrange(f.exp_mask) << f.frac_bits) | (
+            1 << rng.randrange(f.frac_bits))
+    return rng.getrandbits(f.total) | (1 << (f.total - 1))  # negative
+
+
+def hx(f, v):
+    return f'"{v:#0{f.total // 4 + 2}x}"'
+
+
+def emit(f):
+    rng = random.Random(20260808 ^ f.total)
+    cases = []
+    one = f.bias << f.frac_bits
+    directed = [
+        (one, one),
+        (one, 1),  # 1 * min_subnormal
+        ((1 << f.frac_bits) - 1, (1 << f.frac_bits) - 1),  # max subnormal^2 -> 0
+        (((f.exp_mask - 1) << f.frac_bits) | ((1 << f.frac_bits) - 1),) * 2,
+        ((f.bias - 1) << f.frac_bits, 1 << f.frac_bits),  # 0.5 * min_normal
+        ((f.bias << f.frac_bits) | ((1 << f.frac_bits) - 1),) * 2,  # (2-ulp)^2
+    ]
+    for a, b in directed:
+        cases.append((a, b, mul_mode(f, a, b, 'rne')))
+    while len(cases) < 32:
+        a, b = rand_bits(f, rng), rand_bits(f, rng)
+        cases.append((a, b, mul_mode(f, a, b, 'rne')))
+    print(f"pub const GOLDEN_{f.name}_MUL_RNE: &[(&str, &str, &str)] = &[")
+    for a, b, r in cases:
+        print(f"    ({hx(f, a)}, {hx(f, b)}, {hx(f, r)}),")
+    print("];")
+    # directed-mode vectors: (mode_idx, a, b, result); mode order matches
+    # RoundMode::ALL = [NearestEven, NearestAway, TowardZero,
+    # TowardPositive, TowardNegative]
+    modes = ['rne', 'rna', 'rtz', 'rup', 'rdn']
+    print()
+    print(f"pub const GOLDEN_{f.name}_MUL_MODES: &[(u8, &str, &str, &str)] = &[")
+    for mi, mode in enumerate(modes):
+        for a, b, _ in cases[:12]:
+            r = mul_mode(f, a, b, mode)
+            print(f"    ({mi}, {hx(f, a)}, {hx(f, b)}, {hx(f, r)}),")
+    print("];")
+
+
+def main():
+    print("// @generated by python/tools/gen_golden_widefp.py — do not edit.")
+    emit(FP256)
+    print()
+    emit(FP512)
+
+
+if __name__ == "__main__":
+    main()

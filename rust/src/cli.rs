@@ -13,6 +13,7 @@ use crate::config::ServiceConfig;
 use crate::coordinator::{BackendChoice, NativeOptions};
 use crate::decomp::{Executor, LaneConfig, LaneWidth, OpClass, SchemeKind};
 use crate::error::{bail, err, Result};
+use crate::fabric::FabricKind;
 use crate::net::server::{NetServerConfig, DEFAULT_NET_WORKERS, DEFAULT_PIPELINE_DEPTH};
 use crate::runtime::EngineHandle;
 use crate::trace::WorkloadSpec;
@@ -101,6 +102,18 @@ impl Args {
             cfg.workload =
                 WorkloadSpec::parse(w).ok_or_else(|| err!("unknown workload {w:?}"))?;
         }
+        if let Some(s) = self.options.get("scheme") {
+            // `--scheme karatsuba24` etc.: re-target the partition
+            // organization and follow it with the compatible fabric preset
+            // (the same table as `ServiceConfig::validate`).
+            cfg.scheme =
+                SchemeKind::parse(s).ok_or_else(|| err!("unknown scheme {s:?}"))?;
+            cfg.fabric = match cfg.scheme {
+                SchemeKind::Civp | SchemeKind::Karatsuba24 => FabricKind::Civp,
+                SchemeKind::Baseline18 | SchemeKind::Baseline25x18 => FabricKind::Legacy,
+                SchemeKind::Baseline9 => cfg.fabric,
+            };
+        }
         if let Some(spec) = self.options.get("mix") {
             // `--mix half=0.2,bf16=0.3,...` — explicit per-class weights
             // over the open registry; unlisted classes get zero mass.
@@ -171,7 +184,9 @@ impl Args {
 
     /// Resolve the network-edge knobs — `--addr`, `--writer-queue`
     /// (defaulting to the resolved `service.net_writer_queue`),
-    /// `--net-workers`, `--pipeline-depth`, `--schemes` (extra
+    /// `--net-workers`, `--pipeline-depth`, `--max-conns` (accept-side
+    /// connection cap, 0 = unlimited), `--idle-timeout` (ms before an
+    /// idle connection is reaped, 0 = never), `--schemes` (extra
     /// [`SchemeKind`]s this listener serves through their own clusters)
     /// — around an already-resolved cluster config.
     pub fn net_server_config(
@@ -191,6 +206,11 @@ impl Args {
         if pipeline_depth == 0 {
             bail!("--pipeline-depth must be >= 1");
         }
+        let max_conns = self.get_usize("max-conns", 0)?;
+        let idle_timeout = match self.get_usize("idle-timeout", 0)? {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms as u64)),
+        };
         let mut extra_schemes = Vec::new();
         for name in self
             .get_str("schemes", "")
@@ -211,6 +231,8 @@ impl Args {
             net_workers,
             pipeline_depth,
             extra_schemes,
+            max_conns,
+            idle_timeout,
         })
     }
 
@@ -315,6 +337,17 @@ mod tests {
     }
 
     #[test]
+    fn scheme_flag_retargets_and_keeps_fabric_compatible() {
+        let cfg = p(&["serve", "--scheme", "karatsuba24"]).service_config().unwrap();
+        assert_eq!(cfg.scheme, SchemeKind::Karatsuba24);
+        assert_eq!(cfg.fabric, FabricKind::Civp);
+        let cfg = p(&["serve", "--scheme", "18x18"]).service_config().unwrap();
+        assert_eq!(cfg.scheme, SchemeKind::Baseline18);
+        assert_eq!(cfg.fabric, FabricKind::Legacy);
+        assert!(p(&["serve", "--scheme", "nope"]).service_config().is_err());
+    }
+
+    #[test]
     fn cluster_knobs_resolve_under_any_command() {
         for cmd in ["cluster", "serve-net", "loadgen"] {
             let a = p(&[cmd, "--shards", "2", "--policy", "round-robin", "--inflight", "7"]);
@@ -346,7 +379,14 @@ mod tests {
         assert_eq!(net.net_workers, 8);
         assert_eq!(net.pipeline_depth, 16);
         assert_eq!(net.extra_schemes, vec![SchemeKind::Baseline18, SchemeKind::Baseline9]);
-        // Defaults: writer queue from the service config, pool constants.
+        // Admission knobs resolve: a cap plus an idle window in ms.
+        let a = p(&["serve-net", "--max-conns", "128", "--idle-timeout", "2500"]);
+        let cluster = a.cluster_config(ServiceConfig::default()).unwrap();
+        let net = a.net_server_config("127.0.0.1:0", cluster).unwrap();
+        assert_eq!(net.max_conns, 128);
+        assert_eq!(net.idle_timeout, Some(std::time::Duration::from_millis(2500)));
+        // Defaults: writer queue from the service config, pool constants,
+        // no connection cap, no idle reaping.
         let a = p(&["serve-net"]);
         let cluster = a.cluster_config(ServiceConfig::default()).unwrap();
         let net = a.net_server_config("127.0.0.1:0", cluster).unwrap();
@@ -354,6 +394,8 @@ mod tests {
         assert_eq!(net.net_workers, DEFAULT_NET_WORKERS);
         assert_eq!(net.pipeline_depth, DEFAULT_PIPELINE_DEPTH);
         assert!(net.extra_schemes.is_empty());
+        assert_eq!(net.max_conns, 0);
+        assert_eq!(net.idle_timeout, None);
         // The primary scheme is not duplicated into the extras.
         let a = p(&["serve-net", "--schemes", "civp,18x18,18x18"]);
         let cluster = a.cluster_config(ServiceConfig::default()).unwrap();

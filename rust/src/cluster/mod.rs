@@ -48,6 +48,7 @@ use crate::fabric::FabricOp;
 use crate::metrics::{Counter, Gauge, Registry, Snapshot};
 use crate::proput::Rng;
 use crate::serve::AdmissionError;
+use crate::wideint::PackedBits;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
@@ -206,9 +207,10 @@ impl Cluster {
         &self,
         id: u64,
         class: OpClass,
-        a: u128,
-        b: u128,
+        a: impl Into<PackedBits>,
+        b: impl Into<PackedBits>,
     ) -> Result<ClusterReply, AdmissionError> {
+        let (a, b): (PackedBits, PackedBits) = (a.into(), b.into());
         let mut tried: u64 = 0;
         // The first shard that turns the request away; charged with one
         // `spilled` only if the request is later accepted elsewhere (a
@@ -261,9 +263,10 @@ impl Cluster {
         &self,
         id: u64,
         class: OpClass,
-        a: u128,
-        b: u128,
+        a: impl Into<PackedBits>,
+        b: impl Into<PackedBits>,
     ) -> Result<ClusterReply, AdmissionError> {
+        let (a, b): (PackedBits, PackedBits) = (a.into(), b.into());
         loop {
             match self.try_submit(id, class, a, b) {
                 Err(AdmissionError::Saturated) => {

@@ -222,7 +222,9 @@ impl ServiceConfig {
         // CIVP tiles need 24x24/24x9 blocks (CIVP fabric only); 18x18 and
         // 25x18 tiles need the legacy fabric; 9x9 runs anywhere.
         let compatible = match self.scheme {
-            SchemeKind::Civp => self.fabric == FabricKind::Civp,
+            // Karatsuba leaves compile to the CIVP tile vocabulary, so the
+            // recursive organization has the same fabric needs as flat CIVP.
+            SchemeKind::Civp | SchemeKind::Karatsuba24 => self.fabric == FabricKind::Civp,
             SchemeKind::Baseline18 | SchemeKind::Baseline25x18 => {
                 self.fabric == FabricKind::Legacy
             }

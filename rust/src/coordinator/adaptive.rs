@@ -110,17 +110,17 @@ fn det_inputs_exact32(a: (f64, f64), b: (f64, f64), c: (f64, f64)) -> bool {
 fn mul32(svc: &Service, x: f32, y: f32) -> f32 {
     let (a, b) = (Fp32::from_f32(x).0 as u128, Fp32::from_f32(y).0 as u128);
     let bits = svc.mul_blocking(OpClass::Single, a, b);
-    Fp32(bits as u32).to_f32()
+    Fp32(bits.as_u64() as u32).to_f32()
 }
 
 fn mul64(svc: &Service, x: f64, y: f64) -> f64 {
     let (a, b) = (Fp64::from_f64(x).0 as u128, Fp64::from_f64(y).0 as u128);
     let bits = svc.mul_blocking(OpClass::Double, a, b);
-    Fp64(bits as u64).to_f64()
+    Fp64(bits.as_u64()).to_f64()
 }
 
 fn mul128(svc: &Service, x: Fp128, y: Fp128) -> Fp128 {
-    Fp128(svc.mul_blocking(OpClass::Quad, x.0, y.0))
+    Fp128(svc.mul_blocking(OpClass::Quad, x.0, y.0).as_u128())
 }
 
 fn sign_of(det: f64) -> Orient {

@@ -5,14 +5,17 @@ use crate::decomp::{DecompMul, ExecStats, Executor, LaneConfig, OpClass, SchemeK
 use crate::error::{ensure, Result};
 use crate::fpu::{FpuBatch, RoundMode};
 use crate::runtime::EngineHandle;
+use crate::wideint::PackedBits;
 use std::sync::Arc;
 
 /// A batch executor for one op class.
 ///
-/// `execute` writes into a caller-owned output vector so the worker pool
-/// can reuse one scratch allocation across batches — together with the
-/// process-wide plan cache this makes the batch path allocation-free in
-/// steady state.
+/// Operands travel as [`PackedBits`] — the universal packed word, wide
+/// enough for every registry class (binary512 included); narrow classes
+/// use the low `total_bits`. `execute` writes into a caller-owned output
+/// vector so the worker pool can reuse one scratch allocation across
+/// batches — together with the process-wide plan cache this makes the
+/// batch path allocation-free in steady state.
 pub trait Backend: Send {
     /// Multiply packed bit patterns elementwise. `a` and `b` must have
     /// equal length; `out` is cleared and filled with packed patterns of
@@ -20,9 +23,9 @@ pub trait Backend: Send {
     fn execute(
         &mut self,
         class: OpClass,
-        a: &[u128],
-        b: &[u128],
-        out: &mut Vec<u128>,
+        a: &[PackedBits],
+        b: &[PackedBits],
+        out: &mut Vec<PackedBits>,
     ) -> Result<()>;
     /// Backend display name.
     fn name(&self) -> &'static str;
@@ -177,12 +180,18 @@ impl BackendChoice {
 /// batch is accounted with one scaled stats merge.
 pub struct NativeBackend {
     fpu: FpuBatch<DecompMul>,
+    /// Narrow scratch: `PackedBits` batches from the service surface fold
+    /// down to `u128` for the lane-fused narrow pipeline (wide classes go
+    /// straight through [`FpuBatch::mul_batch_bits_wide`]).
+    na: Vec<u128>,
+    nb: Vec<u128>,
+    nout: Vec<u128>,
 }
 
 impl NativeBackend {
     /// New backend with the given organization.
     pub fn new(kind: SchemeKind) -> NativeBackend {
-        NativeBackend { fpu: FpuBatch::new(DecompMul::new(kind)) }
+        Self::from_mul(DecompMul::new(kind))
     }
 
     /// New backend sharing a work-stealing [`Executor`]: significand
@@ -191,30 +200,56 @@ impl NativeBackend {
     /// identical to [`NativeBackend::new`]'s single-threaded path —
     /// results, flags and stats (pinned by `rust/tests/parallel_equiv.rs`).
     pub fn with_executor(kind: SchemeKind, exec: Arc<Executor>) -> NativeBackend {
-        NativeBackend { fpu: FpuBatch::new(DecompMul::with_executor(kind, exec)) }
+        Self::from_mul(DecompMul::with_executor(kind, exec))
     }
 
     /// New backend with an explicit lane configuration for its inline
     /// batches. Every width × ISA combination is bit-identical to
     /// [`NativeBackend::new`] (pinned by the lane property tests).
     pub fn with_lane(kind: SchemeKind, lane: LaneConfig) -> NativeBackend {
-        NativeBackend { fpu: FpuBatch::new(DecompMul::with_lane(kind, lane)) }
+        Self::from_mul(DecompMul::with_lane(kind, lane))
+    }
+
+    fn from_mul(m: DecompMul) -> NativeBackend {
+        NativeBackend {
+            fpu: FpuBatch::new(m),
+            na: Vec::new(),
+            nb: Vec::new(),
+            nout: Vec::new(),
+        }
     }
 
     /// Multiply one batch, appending packed products to `out` (cleared
     /// first). Exposed for direct (service-less) batch callers and benches.
     /// The format descriptor comes straight off the [`OpClass`] registry,
-    /// so every served class — sub-single formats included — runs the same
-    /// lane-fused pipeline.
+    /// so every served class — sub-single and wide formats included — runs
+    /// the appropriate fused pipeline: lane-fused SoA for classes within
+    /// the `u128` operand word, the tile-tree wide path above it.
     pub fn mul_batch(
         &mut self,
         class: OpClass,
-        a: &[u128],
-        b: &[u128],
-        out: &mut Vec<u128>,
+        a: &[PackedBits],
+        b: &[PackedBits],
+        out: &mut Vec<PackedBits>,
     ) -> Result<()> {
         ensure!(a.len() == b.len(), "operand length mismatch");
-        self.fpu.mul_batch_bits(class.format(), a, b, RoundMode::NearestEven, out);
+        if class.is_wide() {
+            self.fpu.mul_batch_bits_wide(class.format(), a, b, RoundMode::NearestEven, out);
+            return Ok(());
+        }
+        self.na.clear();
+        self.na.extend(a.iter().map(PackedBits::as_u128));
+        self.nb.clear();
+        self.nb.extend(b.iter().map(PackedBits::as_u128));
+        self.fpu.mul_batch_bits(
+            class.format(),
+            &self.na,
+            &self.nb,
+            RoundMode::NearestEven,
+            &mut self.nout,
+        );
+        out.clear();
+        out.extend(self.nout.iter().map(|&v| PackedBits::from_u128(v)));
         Ok(())
     }
 }
@@ -223,9 +258,9 @@ impl Backend for NativeBackend {
     fn execute(
         &mut self,
         class: OpClass,
-        a: &[u128],
-        b: &[u128],
-        out: &mut Vec<u128>,
+        a: &[PackedBits],
+        b: &[PackedBits],
+        out: &mut Vec<PackedBits>,
     ) -> Result<()> {
         self.mul_batch(class, a, b, out)
     }
@@ -245,8 +280,8 @@ impl Backend for NativeBackend {
 
 /// PJRT backend: batches go through the compiled HLO artifacts on the
 /// pinned executor thread. The artifacts cover the paper's three classes
-/// (single/double/quad); sub-single batches fall back to the embedded
-/// native lane-fused pipeline, so a PJRT service still serves the whole
+/// (single/double/quad); sub-single and wide batches fall back to the
+/// embedded native pipeline, so a PJRT service still serves the whole
 /// registry.
 pub struct PjrtBackend {
     handle: EngineHandle,
@@ -265,19 +300,24 @@ impl Backend for PjrtBackend {
     fn execute(
         &mut self,
         class: OpClass,
-        a: &[u128],
-        b: &[u128],
-        out: &mut Vec<u128>,
+        a: &[PackedBits],
+        b: &[PackedBits],
+        out: &mut Vec<PackedBits>,
     ) -> Result<()> {
         ensure!(a.len() == b.len(), "operand length mismatch");
         match class {
-            // No fp16/bf16 artifacts exist yet: serve these natively
-            // instead of erroring the batch (and dropping its replies).
-            OpClass::Bf16 | OpClass::Half => self.native.execute(class, a, b, out),
+            // No fp16/bf16/fp256/fp512 artifacts exist yet (the engine's
+            // job payload is u128-wide): serve these natively instead of
+            // erroring the batch (and dropping its replies).
+            OpClass::Bf16 | OpClass::Half | OpClass::Fp256 | OpClass::Fp512 => {
+                self.native.execute(class, a, b, out)
+            }
             _ => {
-                let bits = self.handle.mul(class, a.to_vec(), b.to_vec())?;
+                let xa: Vec<u128> = a.iter().map(PackedBits::as_u128).collect();
+                let xb: Vec<u128> = b.iter().map(PackedBits::as_u128).collect();
+                let bits = self.handle.mul(class, xa, xb)?;
                 out.clear();
-                out.extend(bits);
+                out.extend(bits.into_iter().map(PackedBits::from_u128));
                 Ok(())
             }
         }

@@ -248,7 +248,8 @@ mod tests {
     use crate::coordinator::Response;
 
     fn resp(id: u64) -> Response {
-        Response { id, bits: id as u128 * 3, latency_ns: 1, batch_size: 1 }
+        let bits = crate::wideint::PackedBits::from_u128(id as u128 * 3);
+        Response { id, bits, latency_ns: 1, batch_size: 1 }
     }
 
     #[test]

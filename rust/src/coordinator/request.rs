@@ -1,10 +1,12 @@
 //! Request/response types for the multiplication service.
 
 use crate::decomp::OpClass;
+use crate::wideint::PackedBits;
 use std::time::Instant;
 
 /// A multiplication request. Operand bits are packed interchange patterns
-/// of the request's op class, carried in the low bits of a `u128`.
+/// of the request's op class, carried in the low bits of a [`PackedBits`]
+/// word — wide enough for every registry class up to binary512.
 #[derive(Clone, Copy, Debug)]
 pub struct Request {
     /// Client-assigned id, echoed in the response.
@@ -12,9 +14,9 @@ pub struct Request {
     /// Operation class of the operands and result.
     pub class: OpClass,
     /// Packed operand A.
-    pub a: u128,
+    pub a: PackedBits,
     /// Packed operand B.
-    pub b: u128,
+    pub b: PackedBits,
     /// Enqueue timestamp (set by the service).
     pub enqueued: Instant,
 }
@@ -25,7 +27,7 @@ pub struct Response {
     /// Echo of the request id.
     pub id: u64,
     /// Packed product bits.
-    pub bits: u128,
+    pub bits: PackedBits,
     /// Queue + batch + execute time.
     pub latency_ns: u64,
     /// Size of the batch this request was served in (telemetry).

@@ -10,6 +10,7 @@ use crate::config::ServiceConfig;
 use crate::decomp::{OpClass, SchemeKind};
 use crate::fabric::{simulate_counts, CostModel, FabricConfig, FabricKind, FabricOp, StreamReport};
 use crate::metrics::Registry;
+use crate::wideint::PackedBits;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -188,11 +189,11 @@ impl Service {
         &self,
         id: u64,
         class: OpClass,
-        a: u128,
-        b: u128,
+        a: impl Into<PackedBits>,
+        b: impl Into<PackedBits>,
     ) -> Result<ReplyHandle, AdmissionError> {
         let (tx, rx) = self.shared.pools[class.index()].acquire();
-        let req = Request { id, class, a, b, enqueued: Instant::now() };
+        let req = Request { id, class, a: a.into(), b: b.into(), enqueued: Instant::now() };
         self.shared.batchers[class.index()].submit(Item { req, reply: tx })?;
         self.shared.hot.requests_total.inc();
         self.shared.hot.requests_by_class[class.index()].inc();
@@ -207,11 +208,11 @@ impl Service {
         &self,
         id: u64,
         class: OpClass,
-        a: u128,
-        b: u128,
+        a: impl Into<PackedBits>,
+        b: impl Into<PackedBits>,
     ) -> Result<ReplyHandle, AdmissionError> {
         let (tx, rx) = self.shared.pools[class.index()].acquire();
-        let req = Request { id, class, a, b, enqueued: Instant::now() };
+        let req = Request { id, class, a: a.into(), b: b.into(), enqueued: Instant::now() };
         match self.shared.batchers[class.index()].try_submit(Item { req, reply: tx }) {
             Ok(()) => {
                 self.shared.hot.requests_total.inc();
@@ -228,7 +229,12 @@ impl Service {
     }
 
     /// Convenience: submit and wait.
-    pub fn mul_blocking(&self, class: OpClass, a: u128, b: u128) -> u128 {
+    pub fn mul_blocking(
+        &self,
+        class: OpClass,
+        a: impl Into<PackedBits>,
+        b: impl Into<PackedBits>,
+    ) -> PackedBits {
         let rx = self.submit(0, class, a, b).expect("service closed");
         rx.recv().expect("worker dropped reply").bits
     }
@@ -344,9 +350,9 @@ fn worker_loop(class: OpClass, shared: Arc<Shared>, backend: &mut dyn super::Bac
     // pipeline passes (§Perf).
     let batcher = &shared.batchers[class.index()];
     let op_counter = shared.op_counts.slot(FabricOp { class, organization: shared.scheme });
-    let mut a: Vec<u128> = Vec::with_capacity(shared.max_batch);
-    let mut b: Vec<u128> = Vec::with_capacity(shared.max_batch);
-    let mut out: Vec<u128> = Vec::with_capacity(shared.max_batch);
+    let mut a: Vec<PackedBits> = Vec::with_capacity(shared.max_batch);
+    let mut b: Vec<PackedBits> = Vec::with_capacity(shared.max_batch);
+    let mut out: Vec<PackedBits> = Vec::with_capacity(shared.max_batch);
     while let Some(batch) = batcher.next_batch(shared.max_batch, shared.linger) {
         let n = batch.len();
         bsize.record(n as u64);

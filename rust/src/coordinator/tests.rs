@@ -18,9 +18,10 @@ fn native_service(cfg: &ServiceConfig) -> Service {
 }
 
 /// 1.0 in each registry format's packed bits (1.0 × 1.0 is exact
-/// everywhere) — derived from the registry, no hand-mirrored table.
-fn one_bits(class: OpClass) -> u128 {
-    class.format().one()
+/// everywhere) — derived from the registry, no hand-mirrored table. The
+/// wide word covers every class up to binary512.
+fn one_bits(class: OpClass) -> crate::wideint::PackedBits {
+    class.format().one_w()
 }
 
 // ---------------------------------------------------------------------
@@ -123,7 +124,7 @@ fn service_multiplies_correctly_all_precisions() {
         );
         let hw = a * b;
         if !hw.is_nan() {
-            assert_eq!(out as u64, hw.to_bits());
+            assert_eq!(out.as_u64(), hw.to_bits());
         }
         let af = a as f32;
         let bf = b as f32;
@@ -134,7 +135,7 @@ fn service_multiplies_correctly_all_precisions() {
         );
         let hw = af * bf;
         if !hw.is_nan() {
-            assert_eq!(out as u32, hw.to_bits());
+            assert_eq!(out.as_u64() as u32, hw.to_bits());
         }
     });
     let report = svc.shutdown();
@@ -158,7 +159,7 @@ fn service_batches_concurrent_submissions() {
                 }
                 for (x, rx) in rxs {
                     let resp = rx.recv().unwrap();
-                    assert_eq!(resp.bits as u64, (x * x).to_bits());
+                    assert_eq!(resp.bits.as_u64(), (x * x).to_bits());
                 }
             })
         })
@@ -196,19 +197,19 @@ fn service_serves_sub_single_classes_end_to_end() {
     let mut rng = crate::proput::Rng::new(0x5AB);
     for i in 0..300u64 {
         let (a, b) = (rng.next_u64() as u16, rng.next_u64() as u16);
-        let got = svc.mul_blocking(OpClass::Half, a as u128, b as u128);
+        let got = svc.mul_blocking(OpClass::Half, a as u128, b as u128).as_u64() as u16;
         let want = Fp16(a).mul(Fp16(b));
         if want.is_nan() {
-            assert!(Fp16(got as u16).is_nan(), "i={i}");
+            assert!(Fp16(got).is_nan(), "i={i}");
         } else {
-            assert_eq!(got as u16, want.0, "half i={i} a={a:#06x} b={b:#06x}");
+            assert_eq!(got, want.0, "half i={i} a={a:#06x} b={b:#06x}");
         }
-        let got = svc.mul_blocking(OpClass::Bf16, a as u128, b as u128);
+        let got = svc.mul_blocking(OpClass::Bf16, a as u128, b as u128).as_u64() as u16;
         let want = Bf16(a).mul(Bf16(b));
         if want.is_nan() {
-            assert!(Bf16(got as u16).is_nan(), "i={i}");
+            assert!(Bf16(got).is_nan(), "i={i}");
         } else {
-            assert_eq!(got as u16, want.0, "bf16 i={i} a={a:#06x} b={b:#06x}");
+            assert_eq!(got, want.0, "bf16 i={i} a={a:#06x} b={b:#06x}");
         }
     }
     let fabric = svc.fabric_report();

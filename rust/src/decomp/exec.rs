@@ -15,8 +15,8 @@ use super::lanes::LaneConfig;
 use super::parallel::Executor;
 use super::plan::{Plan, PlanCache};
 use super::scheme::{BlockKind, Scheme, SchemeKind, Tile};
-use crate::fpu::{OpClass, SigBatchMultiplier, SigMultiplier};
-use crate::wideint::{U128, U256};
+use crate::fpu::{OpClass, SigBatchMultiplier, SigMultiplier, WideProd, WIDE_PROD_LIMBS};
+use crate::wideint::{PackedBits, Wide, U128, U256};
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
@@ -111,37 +111,54 @@ pub fn execute_tiles(
 ) -> U256 {
     debug_assert!(a.bit_len() <= eff_bits, "operand A wider than scheme");
     debug_assert!(b.bit_len() <= eff_bits, "operand B wider than scheme");
+    tally_tiles(tiles, stats);
     let mut acc = U256::ZERO;
     for tile in tiles {
         let pa = a.extract_u64(tile.off_a, tile.wa);
         let pb = b.extract_u64(tile.off_b, tile.wb);
-        // The dedicated block always fires (it is hard-wired into the
-        // partial-product array) — even when a port is all padding. That is
-        // precisely the energy waste the paper argues about, so the stats
-        // count it either way.
+        let prod = (pa as u128) * (pb as u128);
+        let off = tile.off_a + tile.off_b;
+        accumulate_shifted(&mut acc, prod, (off / 64) as usize, off % 64);
+    }
+    stats.muls += 1;
+    acc
+}
+
+/// Tally one firing of every tile in the set — the value-independent half
+/// of [`execute_tiles`]'s accounting (everything except `muls`), also used
+/// to precompute wide-plan stats deltas without running the tree.
+///
+/// The dedicated block always fires (it is hard-wired into the
+/// partial-product array) — even when a port is all padding. That is
+/// precisely the energy waste the paper argues about, so the stats count
+/// it either way.
+pub(crate) fn tally_tiles(tiles: &[Tile], stats: &mut ExecStats) {
+    for tile in tiles {
         stats.ops_by_kind[tile.kind as usize] += 1;
         if tile.is_padded() {
             stats.padded_tiles += 1;
         }
         stats.useful_bitops += (tile.eff_a * tile.eff_b) as u64;
         stats.capacity_bitops += tile.kind.capacity() as u64;
-        let prod = (pa as u128) * (pb as u128);
-        let off = tile.off_a + tile.off_b;
-        accumulate_shifted(&mut acc, prod, (off / 64) as usize, off % 64);
     }
     stats.tiles += tiles.len() as u64;
-    stats.muls += 1;
-    acc
 }
 
 /// Accumulate `prod << (64*limb + shift)` into `acc` without building a
-/// temporary `U256`: the shifted ≤50-bit product spans at most two 64-bit
-/// limbs (three when the in-limb shift wraps) — add limb-wise with carry.
+/// temporary wide value: the shifted ≤50-bit product spans at most two
+/// 64-bit limbs (three when the in-limb shift wraps) — add limb-wise with
+/// carry. Limb-count generic: `N = 4` (`U256`) on the narrow paths,
+/// `N = 16` ([`WideProd`]) in the wide-plan leaf sweeps.
 ///
 /// The shared inner kernel of [`execute_tiles`] and [`Plan::execute`]
 /// (`shift < 64`).
 #[inline]
-pub(crate) fn accumulate_shifted(acc: &mut U256, prod: u128, limb: usize, shift: u32) {
+pub(crate) fn accumulate_shifted<const N: usize>(
+    acc: &mut Wide<N>,
+    prod: u128,
+    limb: usize,
+    shift: u32,
+) {
     let parts = [
         (prod << shift) as u64,
         (prod >> (64 - shift).min(127)) as u64, // shift==0 -> prod>>64
@@ -150,7 +167,7 @@ pub(crate) fn accumulate_shifted(acc: &mut U256, prod: u128, limb: usize, shift:
     let mut carry = false;
     for (i, &p) in parts.iter().enumerate() {
         let idx = limb + i;
-        if idx < 4 {
+        if idx < N {
             let (v, c1) = acc.limbs[idx].overflowing_add(p);
             let (v, c2) = v.overflowing_add(carry as u64);
             acc.limbs[idx] = v;
@@ -159,7 +176,7 @@ pub(crate) fn accumulate_shifted(acc: &mut U256, prod: u128, limb: usize, shift:
             debug_assert!(p == 0 && !carry, "accumulator overflow");
         }
     }
-    if carry && limb + 3 < 4 {
+    if carry && limb + 3 < N {
         acc.limbs[limb + 3] = acc.limbs[limb + 3].wrapping_add(1);
     }
 }
@@ -177,7 +194,8 @@ pub(crate) fn accumulate_shifted(acc: &mut U256, prod: u128, limb: usize, shift:
 #[derive(Clone, Debug)]
 pub struct DecompMul {
     kind: SchemeKind,
-    /// Fast slots, one per [`OpClass`] significand width (8/11/24/53/113).
+    /// Fast slots, one per [`OpClass`] significand width
+    /// (8/11/24/53/113/237/489).
     classes: [Option<Arc<Plan>>; OpClass::COUNT],
     /// Cached plans for other (integer) widths.
     plans: HashMap<u32, Arc<Plan>>,
@@ -305,6 +323,23 @@ impl SigMultiplier for DecompMul {
         }
         out
     }
+
+    /// Wide path (widths > 128): the product runs through the cached
+    /// plan's Karatsuba/naive tile tree ([`Plan::execute_wide`]) instead
+    /// of the flat step table. Verified against the schoolbook limb
+    /// multiply oracle exactly like the narrow path.
+    fn mul_sig_wide(&mut self, a: PackedBits, b: PackedBits, width: u32) -> WideProd {
+        let mut stats = std::mem::take(&mut self.stats);
+        let out = self.entry_for(width).execute_wide(a, b, &mut stats);
+        self.stats = stats;
+        if self.verify {
+            let oracle = a.mul_full::<WIDE_PROD_LIMBS>(&b);
+            assert_eq!(out, oracle, "decomposed wide product mismatch (width={width})");
+        } else {
+            debug_assert_eq!(out, a.mul_full::<WIDE_PROD_LIMBS>(&b));
+        }
+        out
+    }
 }
 
 impl SigBatchMultiplier for DecompMul {
@@ -334,6 +369,39 @@ impl SigBatchMultiplier for DecompMul {
                 .zip(b)
                 .zip(out.iter())
                 .all(|((&x, &y), &p)| p == crate::wideint::mul_u128(x, y)));
+        }
+    }
+
+    /// Wide batch path: element-wise tree evaluation through the cached
+    /// plan with one scaled stats merge ([`Plan::execute_batch_wide`]).
+    /// The SoA lane engine and the work-stealing executor are narrow-word
+    /// machinery (`U128` operand lanes), so wide batches stay on the
+    /// submitting thread — the tree itself already amortizes per-element
+    /// work into large-limb adds.
+    fn mul_sig_batch_wide(
+        &mut self,
+        a: &[PackedBits],
+        b: &[PackedBits],
+        width: u32,
+        out: &mut Vec<WideProd>,
+    ) {
+        let mut stats = std::mem::take(&mut self.stats);
+        self.entry_for(width).execute_batch_wide(a, b, &mut stats, out);
+        self.stats = stats;
+        if self.verify {
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                let oracle = x.mul_full::<WIDE_PROD_LIMBS>(y);
+                assert_eq!(
+                    out[i], oracle,
+                    "decomposed wide product mismatch (width={width}, i={i})"
+                );
+            }
+        } else {
+            debug_assert!(a
+                .iter()
+                .zip(b)
+                .zip(out.iter())
+                .all(|((x, y), p)| *p == x.mul_full::<WIDE_PROD_LIMBS>(y)));
         }
     }
 }

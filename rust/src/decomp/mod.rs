@@ -33,6 +33,16 @@
 //! fans them out across per-core workers, bit-for-bit equivalent to the
 //! single-threaded path (outputs *and* merged stats — pinned by
 //! `rust/tests/parallel_equiv.rs`).
+//!
+//! Above the 128-bit operand word (binary256 / binary512 significands) the
+//! flat all-pairs tiling goes quadratic in the chunk count, and
+//! [`SchemeKind::Karatsuba24`] takes over: [`karatsuba_tree`] recursively
+//! halves the operand while the three-way split is cheaper than the flat
+//! tiling (measured in tiles via the same census model), and each leaf is
+//! tiled with the ordinary CIVP `[24, 24, 9]` vocabulary. The compiled
+//! wide plan evaluates that DAG with exact wide-limb adds/subtracts — the
+//! combine network costs no dedicated multiplier blocks, which is the
+//! whole point: `Fp512` drops from 676 flat tiles to 243.
 
 pub mod analysis;
 pub mod exec;
@@ -50,6 +60,8 @@ pub use exec::{execute, DecompMul, ExecStats};
 pub use lanes::{LaneBlock, LaneConfig, LanePlan, LaneScratch, LaneWidth, SimdIsa, LANES};
 pub use parallel::{chunk_plan, Executor, ExecutorCounters, WorkerCounters, DEFAULT_PAR_THRESHOLD};
 pub use plan::{Plan, PlanCache, PlanStep};
-pub use scheme::{BlockKind, Scheme, SchemeKind, Tile};
+pub use scheme::{
+    karatsuba_tree, BlockKind, KaraTree, Scheme, SchemeKind, Tile, KARATSUBA_CROSSOVER,
+};
 
 pub use crate::fpu::OpClass;

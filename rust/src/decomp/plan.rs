@@ -37,11 +37,11 @@
 //!   single scaled stats merge. This is the throughput path the serving
 //!   stack runs in steady state.
 
-use super::exec::{accumulate_shifted, execute_tiles, ExecStats};
+use super::exec::{accumulate_shifted, execute_tiles, tally_tiles, ExecStats};
 use super::lanes::{LaneConfig, LanePlan, LaneScratch, LaneWidth, SimdIsa};
-use super::scheme::{Scheme, SchemeKind};
-use crate::fpu::OpClass;
-use crate::wideint::{U128, U256};
+use super::scheme::{karatsuba_tree, KaraTree, Scheme, SchemeKind, Tile};
+use crate::fpu::{OpClass, WideProd};
+use crate::wideint::{PackedBits, U128, U256};
 use std::collections::HashMap;
 use std::sync::{Arc, OnceLock, RwLock};
 
@@ -118,7 +118,14 @@ pub struct Plan {
     kernel: Kernel,
     /// Tile-major SoA lowering of the same step table (see
     /// [`super::lanes`]); compiled once, used by [`Plan::execute_lanes`].
-    lanes: LanePlan,
+    /// `None` for wide plans — operands past 128 bits have no SoA lane
+    /// path; their batch parallelism lives in the tile DAG itself.
+    lanes: Option<LanePlan>,
+    /// Wide execution recipe (operands as [`PackedBits`], products as
+    /// [`WideProd`]): the compiled Karatsuba combine tree, or a single
+    /// flat leaf for the all-pairs organizations. `Some` exactly when
+    /// `scheme.eff_bits > 128`.
+    wide: Option<WidePlan>,
 }
 
 impl Plan {
@@ -126,6 +133,22 @@ impl Plan {
     /// DAG is walked; every subsequent [`Plan::execute`] runs straight over
     /// the step array.
     pub fn compile(scheme: Scheme) -> Plan {
+        if scheme.eff_bits > 128 {
+            // Wide plan: no U128 step table, no lane lowering — execution
+            // goes through the compiled wide node tree. The stats delta is
+            // value-independent, tallied straight off the leaf tile sets.
+            let mut per_mul = ExecStats::default();
+            let wide = WidePlan::compile(&scheme, &mut per_mul);
+            per_mul.muls = 1;
+            return Plan {
+                scheme,
+                steps: Box::new([]),
+                per_mul,
+                kernel: Kernel::Generic,
+                lanes: None,
+                wide: Some(wide),
+            };
+        }
         let tiles = scheme.tiles();
         // One multiplication's worth of accounting. The stats a tile set
         // produces do not depend on operand values, so running the tile
@@ -156,8 +179,8 @@ impl Plan {
         } else {
             Kernel::Generic
         };
-        let lanes = LanePlan::compile(&scheme, &tiles);
-        Plan { scheme, steps: steps.into_boxed_slice(), per_mul, kernel, lanes }
+        let lanes = Some(LanePlan::compile(&scheme, &tiles));
+        Plan { scheme, steps: steps.into_boxed_slice(), per_mul, kernel, lanes, wide: None }
     }
 
     /// The scheme this plan was compiled from.
@@ -203,6 +226,7 @@ impl Plan {
     /// dispatch resolved from the compile-time classification.
     #[inline]
     fn product(&self, a: U128, b: U128) -> U256 {
+        debug_assert!(self.wide.is_none(), "wide plan: use execute_wide");
         debug_assert!(a.bit_len() <= self.scheme.eff_bits, "operand A wider than plan");
         debug_assert!(b.bit_len() <= self.scheme.eff_bits, "operand B wider than plan");
         match self.kernel {
@@ -363,19 +387,167 @@ impl Plan {
             stats.merge_scaled(&self.per_mul, a.len() as u64);
             return;
         }
+        let lanes = self.lanes.as_ref().expect("wide plan: use execute_batch_wide");
         let full = a.len() - a.len() % W;
         let mut block = LaneScratch::<W>::new();
         let mut i = 0;
         while i < full {
             let ba: &[U128; W] = a[i..i + W].try_into().expect("block width");
             let bb: &[U128; W] = b[i..i + W].try_into().expect("block width");
-            block.run_with(&self.lanes, ba, bb, out, isa);
+            block.run_with(lanes, ba, bb, out, isa);
             i += W;
         }
         for (&x, &y) in a[full..].iter().zip(&b[full..]) {
             out.push(self.product(x, y));
         }
         stats.merge_scaled(&self.per_mul, a.len() as u64);
+    }
+
+    /// True when this plan executes on the wide operand path
+    /// (`width() > 128`): [`Plan::execute_wide`] /
+    /// [`Plan::execute_batch_wide`] instead of the `U128` entry points.
+    pub fn is_wide(&self) -> bool {
+        self.wide.is_some()
+    }
+
+    /// Execute `a × b` exactly through the compiled wide plan,
+    /// accumulating block usage into `stats`. `a, b < 2^self.width()`.
+    ///
+    /// For the all-pairs organizations this is one flat tile sweep into a
+    /// [`WideProd`] accumulator; for `karatsuba24` it walks the compiled
+    /// combine tree — leaf tile sweeps plus the shift/add/subtract combine
+    /// schedule. Bit-exact against `PackedBits::mul_full` (pinned by
+    /// `rust/tests/plan_equiv.rs`).
+    ///
+    /// # Panics
+    ///
+    /// Panics if this is a narrow plan (`width() <= 128`).
+    pub fn execute_wide(&self, a: PackedBits, b: PackedBits, stats: &mut ExecStats) -> WideProd {
+        let wide = self.wide.as_ref().expect("narrow plan: use execute");
+        debug_assert!(a.bit_len() <= self.scheme.eff_bits, "operand A wider than plan");
+        debug_assert!(b.bit_len() <= self.scheme.eff_bits, "operand B wider than plan");
+        let out = wide.root.eval(&a, &b);
+        stats.merge(&self.per_mul);
+        out
+    }
+
+    /// Batch counterpart of [`Plan::execute_wide`]: per-element tree
+    /// walks with one scaled stats merge for the whole batch.
+    ///
+    /// # Panics
+    ///
+    /// Panics if this is a narrow plan, or if `a` and `b` have different
+    /// lengths.
+    pub fn execute_batch_wide(
+        &self,
+        a: &[PackedBits],
+        b: &[PackedBits],
+        stats: &mut ExecStats,
+        out: &mut Vec<WideProd>,
+    ) {
+        assert_eq!(a.len(), b.len(), "operand length mismatch");
+        let wide = self.wide.as_ref().expect("narrow plan: use execute_batch");
+        out.clear();
+        out.reserve(a.len());
+        for (x, y) in a.iter().zip(b) {
+            out.push(wide.root.eval(x, y));
+        }
+        stats.merge_scaled(&self.per_mul, a.len() as u64);
+    }
+}
+
+/// Compiled wide execution recipe: the [`KaraTree`] lowered to leaf tile
+/// sets plus the combine schedule, evaluated over [`PackedBits`] operands
+/// into a [`WideProd`] accumulator.
+#[derive(Clone, Debug)]
+struct WidePlan {
+    root: WideNode,
+}
+
+/// One node of the compiled wide plan.
+#[derive(Clone, Debug)]
+enum WideNode {
+    /// Flat tile sweep: the naive all-pairs plan, or one Karatsuba leaf
+    /// multiply (tile offsets are node-local).
+    Leaf { tiles: Box<[Tile]> },
+    /// Karatsuba split at bit `h`:
+    /// `z2·2^{2h} + [zm − z2 − z0]·2^h + z0` over the three children.
+    Split { h: u32, low: Box<WideNode>, high: Box<WideNode>, mid: Box<WideNode> },
+}
+
+impl WidePlan {
+    /// Lower `scheme` into a wide plan, tallying the value-independent
+    /// per-multiply stats delta (everything except `muls`) into `per_mul`.
+    fn compile(scheme: &Scheme, per_mul: &mut ExecStats) -> WidePlan {
+        let root = if scheme.kind == SchemeKind::Karatsuba24 {
+            WideNode::from_tree(&karatsuba_tree(scheme.eff_bits), per_mul)
+        } else {
+            let tiles = scheme.tiles();
+            tally_tiles(&tiles, per_mul);
+            WideNode::Leaf { tiles: tiles.into_boxed_slice() }
+        };
+        WidePlan { root }
+    }
+}
+
+impl WideNode {
+    /// Lower one [`KaraTree`] node, tallying leaf tile accounting.
+    fn from_tree(tree: &KaraTree, per_mul: &mut ExecStats) -> WideNode {
+        match tree {
+            KaraTree::Leaf(w) => {
+                // Each leaf is a flat CIVP integer multiply of its width —
+                // the same tile source `Scheme::tiles` uses for the
+                // karatsuba census, so plan stats and census always agree.
+                let tiles = Scheme::for_int(SchemeKind::Civp, *w).tiles();
+                tally_tiles(&tiles, per_mul);
+                WideNode::Leaf { tiles: tiles.into_boxed_slice() }
+            }
+            KaraTree::Split { h, low, high, mid } => WideNode::Split {
+                h: *h,
+                low: Box::new(WideNode::from_tree(low, per_mul)),
+                high: Box::new(WideNode::from_tree(high, per_mul)),
+                mid: Box::new(WideNode::from_tree(mid, per_mul)),
+            },
+        }
+    }
+
+    /// Evaluate the exact product of `a × b` for this node's width.
+    ///
+    /// Leaves sweep their tiles into a wide accumulator (chunk products
+    /// are ≤ 50 bits, shift-accumulated limb-wise, same dataflow as the
+    /// narrow executor). Splits recurse: `z0 = lo·lo`, `z2 = hi·hi`,
+    /// `zm = (lo+hi)(lo+hi)`, combined as
+    /// `z0 + (zm − z2 − z0)·2^h + z2·2^{2h}` — `zm − z2 − z0` is
+    /// non-negative by construction, and every partial sum is bounded by
+    /// the true ≤ 978-bit product, so the wrapping ops never wrap.
+    fn eval(&self, a: &PackedBits, b: &PackedBits) -> WideProd {
+        match self {
+            WideNode::Leaf { tiles } => {
+                let mut acc = WideProd::ZERO;
+                for t in tiles.iter() {
+                    let pa = a.extract_u64(t.off_a, t.wa);
+                    let pb = b.extract_u64(t.off_b, t.wb);
+                    let prod = (pa as u128) * (pb as u128);
+                    let off = t.off_a + t.off_b;
+                    accumulate_shifted(&mut acc, prod, (off / 64) as usize, off % 64);
+                }
+                acc
+            }
+            WideNode::Split { h, low, high, mid } => {
+                let h = *h;
+                let a_lo = a.mask_low(h);
+                let a_hi = a.shr(h);
+                let b_lo = b.mask_low(h);
+                let b_hi = b.shr(h);
+                let z0 = low.eval(&a_lo, &b_lo);
+                let z2 = high.eval(&a_hi, &b_hi);
+                let sa = a_lo.wrapping_add(&a_hi);
+                let sb = b_lo.wrapping_add(&b_hi);
+                let zm = mid.eval(&sa, &sb);
+                let z1 = zm.wrapping_sub(&z2).wrapping_sub(&z0);
+                z0.wrapping_add(&z1.shl(h)).wrapping_add(&z2.shl(2 * h))
+            }
+        }
     }
 }
 

@@ -78,15 +78,23 @@ pub enum SchemeKind {
     Baseline25x18,
     /// Small-block baseline: `9x9` blocks only.
     Baseline9,
+    /// Sub-quadratic wide-operand organization: the CIVP block set under a
+    /// recursive Karatsuba tile planner. At or below the
+    /// [`KARATSUBA_CROSSOVER`] width it is tile-for-tile identical to
+    /// [`SchemeKind::Civp`]; above it the operand splits into halves and
+    /// the three half-width products recurse, so the tile count grows as
+    /// ~w^1.585 instead of w².
+    Karatsuba24,
 }
 
 impl SchemeKind {
     /// All kinds, CIVP first.
-    pub const ALL: [SchemeKind; 4] = [
+    pub const ALL: [SchemeKind; 5] = [
         SchemeKind::Civp,
         SchemeKind::Baseline18,
         SchemeKind::Baseline25x18,
         SchemeKind::Baseline9,
+        SchemeKind::Karatsuba24,
     ];
 
     /// Number of organizations (sizes `kind × class` flat arrays).
@@ -112,6 +120,7 @@ impl SchemeKind {
             SchemeKind::Baseline18 => "18x18",
             SchemeKind::Baseline25x18 => "25x18",
             SchemeKind::Baseline9 => "9x9",
+            SchemeKind::Karatsuba24 => "karatsuba24",
         }
     }
 
@@ -220,12 +229,12 @@ impl Scheme {
     }
 
     fn for_width(kind: SchemeKind, width: u32, class: Option<OpClass>) -> Scheme {
-        assert!(width >= 1 && width <= 128, "operand width out of range");
+        assert!(width >= 1 && width <= 512, "operand width out of range");
         let name = class
             .map(|c| format!("{}-{}", kind.name(), c.name()))
             .unwrap_or_else(|| format!("{}-int{width}", kind.name()));
         let (a_chunks, b_chunks, blocks) = match kind {
-            SchemeKind::Civp => {
+            SchemeKind::Civp | SchemeKind::Karatsuba24 => {
                 let (a, b) = civp_chunks(width, class);
                 (a, b, vec![BlockKind::M24x24, BlockKind::M24x9, BlockKind::M9x9])
             }
@@ -255,12 +264,33 @@ impl Scheme {
         }
     }
 
-    /// Generate the partial-product tile set (row-major over `(i, j)`).
+    /// Generate the partial-product tile set.
     ///
-    /// Effective bits per chunk are the overlap of the chunk's bit range
+    /// For the all-pairs organizations this is row-major over `(i, j)`:
+    /// effective bits per chunk are the overlap of the chunk's bit range
     /// with `[0, eff_bits)` — operands are placed at bit 0 and padded at the
     /// most-significant end (value-preserving).
+    ///
+    /// For [`SchemeKind::Karatsuba24`] above the [`KARATSUBA_CROSSOVER`]
+    /// the tile set is the concatenation of the recursion tree's *leaf*
+    /// multiplies, each tiled as a CIVP integer multiply of the leaf width
+    /// (tile offsets are leaf-local; the inter-leaf shift/add/subtract
+    /// combine schedule lives in `decomp::plan`'s wide executor, not in
+    /// the tile vocabulary). At or below the crossover the tree is a
+    /// single leaf and the tile set is identical to [`SchemeKind::Civp`].
     pub fn tiles(&self) -> Vec<Tile> {
+        if self.kind == SchemeKind::Karatsuba24 {
+            let tree = karatsuba_tree(self.eff_bits);
+            if matches!(tree, KaraTree::Split { .. }) {
+                let mut widths = Vec::new();
+                tree.leaf_widths(&mut widths);
+                let mut out = Vec::new();
+                for w in widths {
+                    out.extend(Scheme::for_int(SchemeKind::Civp, w).tiles());
+                }
+                return out;
+            }
+        }
         let mut out = Vec::with_capacity(self.a_chunks.len() * self.b_chunks.len());
         let mut off_a = 0u32;
         for (i, &wa) in self.a_chunks.iter().enumerate() {
@@ -291,6 +321,13 @@ impl Scheme {
 
     /// Total number of dedicated blocks consumed by one multiplication.
     pub fn block_count(&self) -> usize {
+        if self.kind == SchemeKind::Karatsuba24
+            && matches!(karatsuba_tree(self.eff_bits), KaraTree::Split { .. })
+        {
+            // Above the crossover the DAG is no longer an a×b product:
+            // count the leaf tiles.
+            return self.tiles().len();
+        }
         self.a_chunks.len() * self.b_chunks.len()
     }
 }
@@ -326,6 +363,26 @@ fn civp_chunks(width: u32, class: Option<OpClass>) -> (Vec<u32>, Vec<u32>) {
             let half = [24, 24, 9, 24, 24, 9];
             return (half.to_vec(), half.to_vec());
         }
+        Some(OpClass::Fp256) => {
+            // 237 = 4 × 57 + 9: four Fig.-2 groups and one closing 9 —
+            // zero padding bits (13 chunks, 169 all-pairs tiles).
+            let mut c = Vec::with_capacity(13);
+            for _ in 0..4 {
+                c.extend_from_slice(&[24, 24, 9]);
+            }
+            c.push(9);
+            return (c.clone(), c);
+        }
+        Some(OpClass::Fp512) => {
+            // 489 = 8 × 57 + 24 + 9 — zero padding bits (26 chunks,
+            // 676 all-pairs tiles).
+            let mut c = Vec::with_capacity(26);
+            for _ in 0..8 {
+                c.extend_from_slice(&[24, 24, 9]);
+            }
+            c.extend_from_slice(&[24, 9]);
+            return (c.clone(), c);
+        }
         None => {}
     }
     // Greedy integer chunking: as many 24s as possible, remainder served by
@@ -359,5 +416,118 @@ fn effective_bits(off: u32, w: u32, eff: u32) -> u32 {
         0
     } else {
         (eff - off).min(w)
+    }
+}
+
+/// Top-level widths at or below this always take the flat all-pairs plan.
+///
+/// The measured crossover for the recursion: at ≤ 128 bits the operands
+/// fit the `u128` scalar and lane fast paths, and the combine overhead
+/// (two wide additions, two subtractions, three shifted accumulates per
+/// split) outweighs the handful of tiles a split would save. *Inside* a
+/// wide recursion the operands are already on the wide execution path, so
+/// sub-128-bit internal nodes may still split whenever the tile estimate
+/// says it pays (Fp512 recurses down to ~61-bit leaves).
+pub const KARATSUBA_CROSSOVER: u32 = 128;
+
+/// The Karatsuba recursion tree for one operand width: how
+/// [`SchemeKind::Karatsuba24`] decomposes a `width × width` multiply.
+///
+/// A `Split { h, .. }` node computes `a = a_hi·2^h + a_lo` (same for `b`)
+/// and reduces the product to three recursive multiplies:
+/// `z0 = a_lo·b_lo` (the `low` child, width `h`), `z2 = a_hi·b_hi` (the
+/// `high` child, width `width − h`) and
+/// `z1 = (a_lo+a_hi)(b_lo+b_hi) − z2 − z0` (the `mid` child — the sums
+/// carry one extra bit, so its width is `max(h, width−h) + 1`), combined
+/// as `z2·2^{2h} + z1·2^h + z0`. A `Leaf` multiplies flat through the
+/// CIVP all-pairs tiling of its width.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KaraTree {
+    /// Flat CIVP multiply of this width.
+    Leaf(u32),
+    /// Three-product split at bit `h`.
+    Split {
+        /// Split point: low half is `[0, h)`, high half `[h, width)`.
+        h: u32,
+        /// `z0` subtree (width `h`).
+        low: Box<KaraTree>,
+        /// `z2` subtree (width `width − h`).
+        high: Box<KaraTree>,
+        /// `z1` subtree (width `max(h, width − h) + 1` — the operand sums).
+        mid: Box<KaraTree>,
+    },
+}
+
+impl KaraTree {
+    /// Append every leaf width in combine order (low, high, mid).
+    pub fn leaf_widths(&self, out: &mut Vec<u32>) {
+        match self {
+            KaraTree::Leaf(w) => out.push(*w),
+            KaraTree::Split { low, high, mid, .. } => {
+                low.leaf_widths(out);
+                high.leaf_widths(out);
+                mid.leaf_widths(out);
+            }
+        }
+    }
+
+    /// Number of leaf multiplies in the tree.
+    pub fn leaf_count(&self) -> usize {
+        match self {
+            KaraTree::Leaf(_) => 1,
+            KaraTree::Split { low, high, mid, .. } => {
+                low.leaf_count() + high.leaf_count() + mid.leaf_count()
+            }
+        }
+    }
+}
+
+/// Flat-plan cost estimate in tiles: the square of the greedy CIVP chunk
+/// count (every chunk pair is one block firing in the all-pairs plan).
+fn flat_tile_estimate(width: u32) -> u32 {
+    let mut n = 0u32;
+    let mut rem = width;
+    while rem > 0 {
+        rem = rem.saturating_sub(24);
+        n += 1;
+    }
+    n * n
+}
+
+/// Build the Karatsuba recursion tree for a top-level operand width.
+///
+/// Top-level widths at or below [`KARATSUBA_CROSSOVER`] return a single
+/// [`KaraTree::Leaf`] (the flat fallback). Above it, each node splits at
+/// `h = width / 2` whenever the three children's flat tile estimates sum
+/// below the node's own — the planner's cost model — and the children
+/// recurse under the same rule.
+pub fn karatsuba_tree(width: u32) -> KaraTree {
+    if width <= KARATSUBA_CROSSOVER {
+        return KaraTree::Leaf(width);
+    }
+    build_kara_node(width)
+}
+
+/// Recursive node builder: est-driven, no top-level crossover (internal
+/// nodes already execute on the wide path, so sub-crossover widths may
+/// split when the tile estimate pays).
+fn build_kara_node(width: u32) -> KaraTree {
+    let h = width / 2;
+    let lw = h;
+    let hw = width - h;
+    let mw = lw.max(hw) + 1;
+    // A split needs real halves; below ~2 chunks per side it can't pay.
+    if lw < 25 {
+        return KaraTree::Leaf(width);
+    }
+    let split_est = flat_tile_estimate(lw) + flat_tile_estimate(hw) + flat_tile_estimate(mw);
+    if split_est >= flat_tile_estimate(width) {
+        return KaraTree::Leaf(width);
+    }
+    KaraTree::Split {
+        h,
+        low: Box::new(build_kara_node(lw)),
+        high: Box::new(build_kara_node(hw)),
+        mid: Box::new(build_kara_node(mw)),
     }
 }

@@ -3,9 +3,12 @@
 //! and every input.
 
 use super::*;
-use crate::fpu::{DirectMul, Fp128, Fp32, Fp64, RoundMode};
-use crate::proput::forall;
-use crate::wideint::{mul_u128, U128, U256};
+use crate::fpu::{
+    mul_bits_wide, DirectMul, Fp128, Fp32, Fp64, RoundMode, SigBatchMultiplier, SigMultiplier,
+    WideProd, FP256, FP512, WIDE_PROD_LIMBS,
+};
+use crate::proput::{forall, Rng};
+use crate::wideint::{mul_u128, PackedBits, U128, U256};
 
 
 // ---------------------------------------------------------------------
@@ -201,7 +204,14 @@ fn tile_offsets_cover_operand_exactly() {
             assert!(sum_a >= s.eff_bits);
             assert!(sum_b >= s.eff_bits);
             let tiles = s.tiles();
-            assert_eq!(tiles.len(), s.a_chunks.len() * s.b_chunks.len());
+            if kind == SchemeKind::Karatsuba24 && prec.is_wide() {
+                // DAG tiling: the tile set is the concatenation of the
+                // recursion leaves (offsets leaf-local), not a flat
+                // cross-product — but block_count must agree with it.
+                assert_eq!(tiles.len(), s.block_count());
+            } else {
+                assert_eq!(tiles.len(), s.a_chunks.len() * s.b_chunks.len());
+            }
             // every tile's chunk fits its block
             for t in &tiles {
                 assert!(t.kind.fits(t.wa, t.wb), "{t:?}");
@@ -219,6 +229,9 @@ fn tile_offsets_cover_operand_exactly() {
 fn execute_exact_all_schemes_all_precisions() {
     forall(0x200, 2_000, |rng| {
         for prec in OpClass::ALL {
+            if prec.is_wide() {
+                continue; // wide classes run the tree path — see the wide section
+            }
             for kind in SchemeKind::ALL {
                 let s = Scheme::new(kind, prec);
                 let a = rng.sig(prec.sig_bits());
@@ -254,6 +267,9 @@ fn execute_edge_operands() {
     // all-zeros (denormal path feeds normalized values, but the executor
     // must still be exact), all-ones, single-bit.
     for prec in OpClass::ALL {
+        if prec.is_wide() {
+            continue;
+        }
         let bits = prec.sig_bits();
         let ones = U128::ONE.shl(bits).wrapping_sub(&U128::ONE);
         let one = U128::ONE;
@@ -364,6 +380,13 @@ fn plan_steps_mirror_tiles() {
             let scheme = Scheme::new(kind, prec);
             let tiles = scheme.tiles();
             let plan = Plan::compile(scheme);
+            if prec.is_wide() {
+                // Wide plans lower to the tile tree, not the flat step
+                // table.
+                assert!(plan.is_wide());
+                assert!(plan.steps().is_empty());
+                continue;
+            }
             assert_eq!(plan.steps().len(), tiles.len());
             for (s, t) in plan.steps().iter().zip(&tiles) {
                 assert_eq!((s.off_a, s.wa, s.off_b, s.wb), (t.off_a, t.wa, t.off_b, t.wb));
@@ -405,6 +428,9 @@ fn decomp_mul_shares_cached_plans() {
 fn plan_exact_for_random_sigs_every_scheme() {
     forall(0x210, 1_000, |rng| {
         for prec in OpClass::ALL {
+            if prec.is_wide() {
+                continue;
+            }
             for kind in SchemeKind::ALL {
                 let plan = PlanCache::get(kind, prec);
                 let a = rng.sig(prec.sig_bits());
@@ -522,6 +548,198 @@ fn accumulate_shifted_carry_into_top_limb() {
     let got = run_kernel(acc, 1, 2, 0);
     assert_eq!(got.limbs, [7, 0, 0, 10]);
     assert_eq!(got, acc_oracle(acc, 1, 2, 0));
+}
+
+// ---------------------------------------------------------------------
+// Wide classes (binary256 / binary512): the Karatsuba planner and the
+// tile-tree execution path. The paper's census model extended *upward*.
+// ---------------------------------------------------------------------
+
+/// Random wide operand, `< 2^bits` (`bits <= 512`).
+fn wide_operand(rng: &mut Rng, bits: u32) -> PackedBits {
+    let mut v = PackedBits::ZERO;
+    for limb in v.limbs.iter_mut() {
+        *limb = rng.next_u64();
+    }
+    let mut v = v.mask_low(bits);
+    if rng.chance(0.5) {
+        v.set_bit(bits - 1); // exercise full-width (normalized) values too
+    }
+    v
+}
+
+#[test]
+fn karatsuba_tree_shape_fp256_fp512() {
+    // Fp256 significand (237 bits): one split into 118/119/120-bit leaves.
+    let t = karatsuba_tree(237);
+    let mut widths = Vec::new();
+    t.leaf_widths(&mut widths);
+    assert_eq!(widths, vec![118, 119, 120]);
+    // Fp512 significand (489 bits): three levels of recursion, 27 leaves.
+    let t = karatsuba_tree(489);
+    assert_eq!(t.leaf_count(), 27);
+    let mut widths = Vec::new();
+    t.leaf_widths(&mut widths);
+    assert!(widths.iter().all(|&w| (25..=128).contains(&w)), "{widths:?}");
+    // At or below the crossover the planner never splits: the narrow
+    // flat/lane executors stay tile-identical to Civp.
+    for w in 1..=KARATSUBA_CROSSOVER {
+        assert_eq!(karatsuba_tree(w), KaraTree::Leaf(w));
+    }
+    assert!(matches!(karatsuba_tree(KARATSUBA_CROSSOVER + 1), KaraTree::Split { .. }));
+}
+
+#[test]
+fn wide_census_karatsuba_is_subquadratic() {
+    // Flat all-pairs CIVP tiling is quadratic in the chunk count:
+    // 13² = 169 tiles at Fp256, 26² = 676 at Fp512 (exact [24,24,9]
+    // chunking, zero padding). Karatsuba replaces the cross-products with
+    // three half-width recursions: 3 × 25 = 75 and 27 × 9 = 243 tiles.
+    let n256 = scheme_census(&Scheme::new(SchemeKind::Civp, OpClass::Fp256));
+    assert_eq!(n256.total_blocks, 169);
+    assert_eq!(n256.padded_blocks, 0);
+    assert_eq!(n256.utilization, 1.0);
+    let n512 = scheme_census(&Scheme::new(SchemeKind::Civp, OpClass::Fp512));
+    assert_eq!(n512.total_blocks, 676);
+    assert_eq!(n512.padded_blocks, 0);
+    let k256 = scheme_census(&Scheme::new(SchemeKind::Karatsuba24, OpClass::Fp256));
+    assert_eq!(k256.total_blocks, 75);
+    let k512 = scheme_census(&Scheme::new(SchemeKind::Karatsuba24, OpClass::Fp512));
+    assert_eq!(k512.total_blocks, 243);
+    // Sub-quadratic growth: doubling the width should *less* than
+    // quadruple the tile bill (the naive ratio is exactly 4).
+    let kara_ratio = k512.total_blocks as f64 / k256.total_blocks as f64;
+    let naive_ratio = n512.total_blocks as f64 / n256.total_blocks as f64;
+    assert!(kara_ratio < naive_ratio, "{kara_ratio} vs {naive_ratio}");
+    assert!(kara_ratio < 4.0);
+}
+
+#[test]
+fn wide_census_matches_plan_per_mul() {
+    // The census (static tile walk) and the compiled wide plan's
+    // per-multiply stats delta are built from the same leaf tiling — they
+    // must agree exactly, for both organizations of both wide classes.
+    for class in [OpClass::Fp256, OpClass::Fp512] {
+        for kind in SchemeKind::ALL {
+            let census = scheme_census(&Scheme::new(kind, class));
+            let plan = PlanCache::get(kind, class);
+            assert!(plan.is_wide());
+            let pm = plan.per_mul_stats();
+            assert_eq!(pm.muls, 1, "{kind:?} {class:?}");
+            assert_eq!(pm.tiles, census.total_blocks as u64, "{kind:?} {class:?}");
+            assert_eq!(pm.padded_tiles, census.padded_blocks as u64, "{kind:?} {class:?}");
+            for (bk, n) in census.by_kind.iter() {
+                assert_eq!(pm.ops(*bk), *n as u64, "{kind:?} {class:?} {bk:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn wide_plan_exact_every_scheme() {
+    // Bit-exactness of the wide tree path — Karatsuba's add/subtract
+    // combine network included — against the schoolbook limb oracle, for
+    // every organization at both wide widths.
+    forall(0x220, 400, |rng| {
+        for class in [OpClass::Fp256, OpClass::Fp512] {
+            let bits = class.sig_bits();
+            let a = wide_operand(rng, bits);
+            let b = wide_operand(rng, bits);
+            let oracle = a.mul_full::<WIDE_PROD_LIMBS>(&b);
+            for kind in SchemeKind::ALL {
+                let plan = PlanCache::get(kind, class);
+                let mut stats = ExecStats::default();
+                let got = plan.execute_wide(a, b, &mut stats);
+                assert_eq!(got, oracle, "{kind:?} {class:?}");
+                assert_eq!(stats.muls, 1);
+                assert_eq!(stats.tiles, plan.per_mul_stats().tiles);
+            }
+        }
+    });
+}
+
+#[test]
+fn wide_edge_operands() {
+    // All-ones, single-bit, top-bit and zero operands through the
+    // Karatsuba tree: the combine subtraction must never underflow.
+    for class in [OpClass::Fp256, OpClass::Fp512] {
+        let bits = class.sig_bits();
+        let ones = PackedBits::ONE.shl(bits).wrapping_sub(&PackedBits::ONE);
+        let one = PackedBits::ONE;
+        let top = PackedBits::ONE.shl(bits - 1);
+        for kind in [SchemeKind::Civp, SchemeKind::Karatsuba24] {
+            let plan = PlanCache::get(kind, class);
+            for (a, b) in
+                [(ones, ones), (one, ones), (top, top), (PackedBits::ZERO, ones), (top, one)]
+            {
+                let mut st = ExecStats::default();
+                let got = plan.execute_wide(a, b, &mut st);
+                assert_eq!(got, a.mul_full::<WIDE_PROD_LIMBS>(&b), "{kind:?} {class:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn wide_batch_matches_scalar() {
+    // One batch call == N scalar tree walks: outputs and merged stats.
+    forall(0x221, 40, |rng| {
+        let class = if rng.chance(0.5) { OpClass::Fp256 } else { OpClass::Fp512 };
+        let bits = class.sig_bits();
+        let n = rng.range(1, 33) as usize;
+        let a: Vec<PackedBits> = (0..n).map(|_| wide_operand(rng, bits)).collect();
+        let b: Vec<PackedBits> = (0..n).map(|_| wide_operand(rng, bits)).collect();
+        let plan = PlanCache::get(SchemeKind::Karatsuba24, class);
+        let mut batch_stats = ExecStats::default();
+        let mut out = Vec::new();
+        plan.execute_batch_wide(&a, &b, &mut batch_stats, &mut out);
+        let mut scalar_stats = ExecStats::default();
+        for i in 0..n {
+            let want = plan.execute_wide(a[i], b[i], &mut scalar_stats);
+            assert_eq!(out[i], want, "i={i}");
+        }
+        assert_eq!(batch_stats, scalar_stats);
+    });
+}
+
+#[test]
+fn decomp_mul_wide_verified_and_stats() {
+    // The adapter's wide overrides: oracle-verified products and the same
+    // per-multiply accounting as the narrow path.
+    let mut m = DecompMul::verified(SchemeKind::Karatsuba24);
+    let a = PackedBits::from_u64(0xDEAD_BEEF).shl(200).or(&PackedBits::from_u64(12345));
+    let b = PackedBits::ONE.shl(236).or(&PackedBits::from_u64(987));
+    let p = m.mul_sig_wide(a, b, 237);
+    assert_eq!(p, a.mul_full::<WIDE_PROD_LIMBS>(&b));
+    assert_eq!(m.stats.muls, 1);
+    assert_eq!(m.stats.tiles, 75);
+    let mut out: Vec<WideProd> = Vec::new();
+    m.mul_sig_batch_wide(&[a, b], &[b, a], 237, &mut out);
+    assert_eq!(out.len(), 2);
+    assert_eq!(m.stats.muls, 3);
+    assert_eq!(m.stats.tiles, 225);
+}
+
+#[test]
+fn wide_ieee_pipeline_all_schemes_agree() {
+    // Full binary256/binary512 multiplications: every decomposed
+    // organization must match the direct multiplier bit-for-bit, flags
+    // included, across all rounding modes — the wide analogue of
+    // `decomp_mul_all_baselines_agree_on_fp128`.
+    forall(0x222, 150, |rng| {
+        for fmt in [&FP256, &FP512] {
+            let a = wide_operand(rng, fmt.total_bits());
+            let b = wide_operand(rng, fmt.total_bits());
+            let mode = RoundMode::ALL[rng.below(RoundMode::COUNT as u64) as usize];
+            let (want, want_flags) = mul_bits_wide(fmt, a, b, mode, &mut DirectMul);
+            for kind in SchemeKind::ALL {
+                let mut m = DecompMul::new(kind);
+                let (got, got_flags) = mul_bits_wide(fmt, a, b, mode, &mut m);
+                assert_eq!(got, want, "{kind:?} {} {mode:?}", fmt.name);
+                assert_eq!(got_flags, want_flags, "{kind:?} {} {mode:?}", fmt.name);
+            }
+        }
+    });
 }
 
 #[test]

@@ -31,9 +31,12 @@
 
 use super::format::{FpFormat, BF16, DOUBLE, HALF, QUAD, SINGLE};
 use super::round::RoundMode;
-use super::softfp::{finish_product, special_product, DirectMul, Flags};
+use super::softfp::{
+    finish_product, finish_product_w, special_product, special_product_w, DirectMul, Flags,
+    WideProd, WIDE_PROD_LIMBS,
+};
 use super::types::{Bf16, Fp128, Fp16, Fp32, Fp64};
-use crate::wideint::{mul_u128, U128, U256};
+use crate::wideint::{mul_u128, PackedBits, U128, U256};
 
 /// Batch counterpart of [`SigMultiplier`](super::SigMultiplier): the
 /// exact integer multiplier for a whole batch of `width`-bit significand
@@ -50,6 +53,31 @@ pub trait SigBatchMultiplier {
     ///
     /// Panics if `a` and `b` have different lengths.
     fn mul_sig_batch(&mut self, a: &[U128], b: &[U128], width: u32, out: &mut Vec<U256>);
+
+    /// Exact products for wide significands (width up to 489). Default:
+    /// one direct widening multiply per element — the oracle.
+    /// `decomp::DecompMul` overrides it with per-element tile-plan
+    /// execution (wide classes have no lane-fused SoA path; their
+    /// parallelism lives in the tile DAG itself).
+    ///
+    /// # Panics
+    ///
+    /// Panics if `a` and `b` have different lengths.
+    fn mul_sig_batch_wide(
+        &mut self,
+        a: &[PackedBits],
+        b: &[PackedBits],
+        width: u32,
+        out: &mut Vec<WideProd>,
+    ) {
+        let _ = width;
+        assert_eq!(a.len(), b.len(), "operand length mismatch");
+        out.clear();
+        out.reserve(a.len());
+        for (x, y) in a.iter().zip(b) {
+            out.push(x.mul_full::<WIDE_PROD_LIMBS>(y));
+        }
+    }
 }
 
 impl SigBatchMultiplier for DirectMul {
@@ -159,6 +187,9 @@ pub struct FpuBatch<M> {
     sig_a: Vec<U128>,
     sig_b: Vec<U128>,
     prods: Vec<U256>,
+    sig_aw: Vec<PackedBits>,
+    sig_bw: Vec<PackedBits>,
+    prods_w: Vec<WideProd>,
     meta: Vec<LaneMeta>,
     bits_a: Vec<u128>,
     bits_b: Vec<u128>,
@@ -173,6 +204,9 @@ impl<M: SigBatchMultiplier> FpuBatch<M> {
             sig_a: Vec::new(),
             sig_b: Vec::new(),
             prods: Vec::new(),
+            sig_aw: Vec::new(),
+            sig_bw: Vec::new(),
+            prods_w: Vec::new(),
             meta: Vec::new(),
             bits_a: Vec::new(),
             bits_b: Vec::new(),
@@ -282,6 +316,61 @@ impl<M: SigBatchMultiplier> FpuBatch<M> {
             let bits = finish_product(fmt, meta.sign, meta.exp_sum, prod, mode, &mut ef);
             flags.merge(ef);
             out[meta.idx as usize] = bits.as_u128();
+        }
+        flags
+    }
+
+    /// Wide-operand twin of [`FpuBatch::mul_batch_bits`] for Fp256/Fp512:
+    /// the same three stages over [`PackedBits`] operands, with the
+    /// significand multiply going through
+    /// [`SigBatchMultiplier::mul_sig_batch_wide`].
+    ///
+    /// # Panics
+    ///
+    /// Panics if `a` and `b` have different lengths.
+    pub fn mul_batch_bits_wide(
+        &mut self,
+        fmt: &FpFormat,
+        a: &[PackedBits],
+        b: &[PackedBits],
+        mode: RoundMode,
+        out: &mut Vec<PackedBits>,
+    ) -> Flags {
+        assert_eq!(a.len(), b.len(), "operand length mismatch");
+        assert!(a.len() <= u32::MAX as usize, "batch too large");
+        out.clear();
+        out.resize(a.len(), PackedBits::ZERO);
+        self.sig_aw.clear();
+        self.sig_bw.clear();
+        self.meta.clear();
+        let mut flags = Flags::default();
+
+        // --- Stage 1: unpack/classify; specials to the scalar sidecar ---
+        for (i, (&pa, &pb)) in a.iter().zip(b).enumerate() {
+            let ua = fmt.unpack_g(pa);
+            let ub = fmt.unpack_g(pb);
+            let sign = ua.sign ^ ub.sign;
+            if let Some(bits) = special_product_w(fmt, pa, pb, &ua, &ub, sign, &mut flags) {
+                out[i] = bits;
+                continue;
+            }
+            let na = ua.normalize(fmt);
+            let nb = ub.normalize(fmt);
+            self.sig_aw.push(na.sig);
+            self.sig_bw.push(nb.sig);
+            self.meta.push(LaneMeta { idx: i as u32, sign, exp_sum: na.exp + nb.exp });
+        }
+
+        // --- Stage 2: one batched wide significand multiply -------------
+        self.m.mul_sig_batch_wide(&self.sig_aw, &self.sig_bw, fmt.sig_bits(), &mut self.prods_w);
+        debug_assert_eq!(self.prods_w.len(), self.meta.len());
+
+        // --- Stage 3: batched normalize/round/pack, scattered back ------
+        for (meta, &prod) in self.meta.iter().zip(self.prods_w.iter()) {
+            let mut ef = Flags::default();
+            let bits = finish_product_w(fmt, meta.sign, meta.exp_sum, prod, mode, &mut ef);
+            flags.merge(ef);
+            out[meta.idx as usize] = bits;
         }
         flags
     }

@@ -8,14 +8,18 @@
 //! `civp_chunks` arm in `decomp::scheme`); the rest of the stack sizes
 //! itself from [`OpClass::COUNT`].
 //!
-//! The registry currently serves five classes, ordered by significand
-//! width: bfloat16 (8), binary16 (11), binary32 (24), binary64 (53) and
-//! binary128 (113). The two sub-single formats extend the paper's §II
-//! census *downward*: a bf16 significand product fits one `9x9` block and
-//! a binary16 product tiles onto the `24x9` block, so the CIVP block set
-//! serves them without touching the `24x24` pool.
+//! The registry currently serves seven classes, ordered by significand
+//! width: bfloat16 (8), binary16 (11), binary32 (24), binary64 (53),
+//! binary128 (113), binary256 (237) and binary512 (489). The two
+//! sub-single formats extend the paper's §II census *downward*: a bf16
+//! significand product fits one `9x9` block and a binary16 product tiles
+//! onto the `24x9` block, so the CIVP block set serves them without
+//! touching the `24x24` pool. The two wide formats extend it *upward*
+//! past the `U128` operand word: their packed values travel as
+//! `wideint::PackedBits` and their tile DAGs are where the sub-quadratic
+//! `karatsuba24` scheme pays off.
 
-use super::format::{FpFormat, BF16, DOUBLE, HALF, QUAD, SINGLE};
+use super::format::{FpFormat, BF16, DOUBLE, FP256, FP512, HALF, QUAD, SINGLE};
 
 /// One served floating-point operation class (a packed interchange format
 /// whose multiplications the system batches, executes and accounts).
@@ -24,15 +28,16 @@ use super::format::{FpFormat, BF16, DOUBLE, HALF, QUAD, SINGLE};
 /// use civp::fpu::OpClass;
 ///
 /// // The registry drives every class-indexed structure in the stack.
-/// assert_eq!(OpClass::COUNT, 5);
+/// assert_eq!(OpClass::COUNT, 7);
 /// for (i, class) in OpClass::ALL.into_iter().enumerate() {
 ///     assert_eq!(class.index(), i);
 ///     assert_eq!(OpClass::from_index(i), class);
 ///     assert_eq!(OpClass::parse(class.name()), Some(class));
 /// }
-/// // Significand widths drive the block-count claims: 8/11/24/53/113.
+/// // Significand widths drive the block-count claims: 8/11/24/53/113/237/489.
 /// assert_eq!(OpClass::Half.sig_bits(), 11);
 /// assert_eq!(OpClass::Quad.sig_bits(), 113);
+/// assert_eq!(OpClass::Fp512.sig_bits(), 489);
 /// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum OpClass {
@@ -46,14 +51,25 @@ pub enum OpClass {
     Double,
     /// binary128 — 113-bit significand.
     Quad,
+    /// binary256 — 237-bit significand (13 CIVP chunks; wide operand word).
+    Fp256,
+    /// binary512 — 489-bit significand (26 CIVP chunks; wide operand word).
+    Fp512,
 }
 
 impl OpClass {
     /// All served classes, ascending significand width. This array IS the
     /// registry: every `[T; OpClass::COUNT]` structure in the stack is
     /// indexed by position in it.
-    pub const ALL: [OpClass; 5] =
-        [OpClass::Bf16, OpClass::Half, OpClass::Single, OpClass::Double, OpClass::Quad];
+    pub const ALL: [OpClass; 7] = [
+        OpClass::Bf16,
+        OpClass::Half,
+        OpClass::Single,
+        OpClass::Double,
+        OpClass::Quad,
+        OpClass::Fp256,
+        OpClass::Fp512,
+    ];
 
     /// Number of served classes (sizes the flat arrays everywhere).
     pub const COUNT: usize = Self::ALL.len();
@@ -84,16 +100,25 @@ impl OpClass {
             OpClass::Single => &SINGLE,
             OpClass::Double => &DOUBLE,
             OpClass::Quad => &QUAD,
+            OpClass::Fp256 => &FP256,
+            OpClass::Fp512 => &FP512,
         }
     }
 
+    /// True when the packed operand no longer fits the narrow `U128` word
+    /// and must travel as `wideint::PackedBits` through the `_w` / wide
+    /// batch entry points.
+    pub const fn is_wide(self) -> bool {
+        self.total_bits() > 128
+    }
+
     /// Significand width including the hidden bit — the integer multiplier
-    /// width handed to the block array (8 / 11 / 24 / 53 / 113).
+    /// width handed to the block array (8 / 11 / 24 / 53 / 113 / 237 / 489).
     pub const fn sig_bits(self) -> u32 {
         self.format().sig_bits()
     }
 
-    /// Total packed storage width (16 / 16 / 32 / 64 / 128).
+    /// Total packed storage width (16 / 16 / 32 / 64 / 128 / 256 / 512).
     pub const fn total_bits(self) -> u32 {
         self.format().total_bits()
     }
@@ -112,6 +137,8 @@ impl OpClass {
             "binary32" | "fp32" => return Some(OpClass::Single),
             "binary64" | "fp64" => return Some(OpClass::Double),
             "binary128" | "fp128" => return Some(OpClass::Quad),
+            "binary256" => return Some(OpClass::Fp256),
+            "binary512" => return Some(OpClass::Fp512),
             _ => {}
         }
         Self::ALL.into_iter().find(|c| c.name() == s)
@@ -126,6 +153,8 @@ impl OpClass {
             24 => Some(OpClass::Single),
             53 => Some(OpClass::Double),
             113 => Some(OpClass::Quad),
+            237 => Some(OpClass::Fp256),
+            489 => Some(OpClass::Fp512),
             _ => None,
         }
     }
@@ -159,6 +188,10 @@ mod tests {
         assert_eq!(OpClass::parse("binary32"), Some(OpClass::Single));
         assert_eq!(OpClass::parse("fp64"), Some(OpClass::Double));
         assert_eq!(OpClass::parse("binary128"), Some(OpClass::Quad));
+        assert_eq!(OpClass::parse("fp256"), Some(OpClass::Fp256));
+        assert_eq!(OpClass::parse("binary256"), Some(OpClass::Fp256));
+        assert_eq!(OpClass::parse("fp512"), Some(OpClass::Fp512));
+        assert_eq!(OpClass::parse("binary512"), Some(OpClass::Fp512));
         assert_eq!(OpClass::parse("nope"), None);
     }
 
@@ -168,6 +201,14 @@ mod tests {
         assert_eq!(OpClass::Half.total_bits(), 16);
         assert_eq!(OpClass::Bf16.total_bits(), 16);
         assert_eq!(OpClass::Quad.sig_bits(), 113);
+        // Wide classes outgrow U128; everything narrower still fits it.
+        assert_eq!(OpClass::Fp256.total_bits(), 256);
+        assert_eq!(OpClass::Fp512.total_bits(), 512);
+        for class in OpClass::ALL {
+            assert_eq!(class.is_wide(), class.total_bits() > 128, "{}", class.name());
+        }
+        assert!(!OpClass::Quad.is_wide());
+        assert!(OpClass::Fp256.is_wide());
         // Class bitmasks across the stack fit one byte.
         assert!(OpClass::COUNT <= 8);
     }

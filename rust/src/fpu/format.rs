@@ -6,7 +6,7 @@
 //! between precisions is the significand width handed to the multiplier
 //! array (24 / 53 / 113 bits).
 
-use crate::wideint::U128;
+use crate::wideint::{PackedBits, Wide, U128};
 
 /// Floating-point datum class after unpacking.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,6 +47,14 @@ pub const SINGLE: FpFormat = FpFormat { name: "single", exp_bits: 8, frac_bits: 
 pub const DOUBLE: FpFormat = FpFormat { name: "double", exp_bits: 11, frac_bits: 52 };
 /// binary128: Fig. 3 — 113-bit significand.
 pub const QUAD: FpFormat = FpFormat { name: "quad", exp_bits: 15, frac_bits: 112 };
+/// binary256: IEEE interchange formula (exp = 4·log2(k) − 13) — 237-bit
+/// significand. First format whose packed value no longer fits `U128`;
+/// wide operands travel as [`PackedBits`] through the `_w` entry points.
+pub const FP256: FpFormat = FpFormat { name: "fp256", exp_bits: 19, frac_bits: 236 };
+/// binary512 by the same interchange formula — 489-bit significand. The
+/// stress case for the sub-quadratic Karatsuba tile planner: naive
+/// all-pairs tiling is quadratic in the 26-chunk significand.
+pub const FP512: FpFormat = FpFormat { name: "fp512", exp_bits: 23, frac_bits: 488 };
 
 impl FpFormat {
     /// Total storage width (1 + exp_bits + frac_bits).
@@ -124,6 +132,13 @@ impl FpFormat {
 
     /// Unpack a bit pattern into fields + class.
     pub fn unpack(&self, bits: U128) -> Unpacked {
+        self.unpack_g(bits)
+    }
+
+    /// Limb-generic unpack: same field logic for any operand word wide
+    /// enough to hold `total_bits()` (`U128` for the narrow registry,
+    /// [`PackedBits`] for Fp256/Fp512).
+    pub fn unpack_g<const N: usize>(&self, bits: Wide<N>) -> Unpacked<N> {
         debug_assert!(
             bits.bit_len() <= self.total_bits(),
             "packed value wider than format"
@@ -133,13 +148,13 @@ impl FpFormat {
         let frac = bits.mask_low(self.frac_bits);
         let (class, exp, sig) = if biased == self.exp_mask() {
             if frac.is_zero() {
-                (FpClass::Infinite, 0, U128::ZERO)
+                (FpClass::Infinite, 0, Wide::ZERO)
             } else {
                 (FpClass::Nan, 0, frac)
             }
         } else if biased == 0 {
             if frac.is_zero() {
-                (FpClass::Zero, 0, U128::ZERO)
+                (FpClass::Zero, 0, Wide::ZERO)
             } else {
                 // Subnormal: significand has no hidden bit; report the raw
                 // fraction with exponent emin. `normalize()` shifts it up.
@@ -158,8 +173,13 @@ impl FpFormat {
     /// position `frac_bits` (normal) or is below it (subnormal, `exp ==
     /// emin`). No rounding happens here.
     pub fn pack(&self, sign: bool, exp: i32, sig: U128) -> U128 {
+        self.pack_g(sign, exp, sig)
+    }
+
+    /// Limb-generic pack — see [`FpFormat::pack`].
+    pub fn pack_g<const N: usize>(&self, sign: bool, exp: i32, sig: Wide<N>) -> Wide<N> {
         debug_assert!(sig.bit_len() <= self.sig_bits());
-        let hidden = U128::ONE.shl(self.frac_bits);
+        let hidden = Wide::ONE.shl(self.frac_bits);
         let (biased, frac) = if sig.cmp_wide(&hidden) == core::cmp::Ordering::Less {
             // Subnormal or zero.
             debug_assert!(sig.is_zero() || exp == self.emin(), "subnormal pack at wrong exp");
@@ -169,7 +189,7 @@ impl FpFormat {
             debug_assert!(biased >= 1 && biased < self.exp_mask() as u64);
             (biased, sig.wrapping_sub(&hidden))
         };
-        let mut v = U128::from_u64(biased).shl(self.frac_bits).or(&frac);
+        let mut v = Wide::from_u64(biased).shl(self.frac_bits).or(&frac);
         if sign {
             v.set_bit(self.total_bits() - 1);
         }
@@ -178,14 +198,65 @@ impl FpFormat {
 
     /// True if the pattern is a signalling NaN (NaN with quiet bit clear).
     pub fn is_signaling_nan(&self, bits: U128) -> bool {
-        let u = self.unpack(bits);
+        self.is_signaling_nan_g(bits)
+    }
+
+    /// Limb-generic signalling-NaN test — see [`FpFormat::is_signaling_nan`].
+    pub fn is_signaling_nan_g<const N: usize>(&self, bits: Wide<N>) -> bool {
+        let u = self.unpack_g(bits);
         u.class == FpClass::Nan && !bits.bit(self.frac_bits - 1)
+    }
+
+    /// Positive infinity as a wide packed operand.
+    pub fn inf_w(&self, sign: bool) -> PackedBits {
+        let mut v = PackedBits::from_u64(self.exp_mask() as u64).shl(self.frac_bits);
+        if sign {
+            v.set_bit(self.total_bits() - 1);
+        }
+        v
+    }
+
+    /// Canonical quiet NaN as a wide packed operand.
+    pub fn quiet_nan_w(&self) -> PackedBits {
+        let mut v = self.inf_w(false);
+        v.set_bit(self.frac_bits - 1);
+        v
+    }
+
+    /// Largest finite value as a wide packed operand.
+    pub fn max_finite_w(&self, sign: bool) -> PackedBits {
+        let exp = (self.exp_mask() - 1) as u64;
+        let mut v = PackedBits::from_u64(exp).shl(self.frac_bits);
+        let frac = PackedBits::ONE.shl(self.frac_bits).wrapping_sub(&PackedBits::ONE);
+        v = v.or(&frac);
+        if sign {
+            v.set_bit(self.total_bits() - 1);
+        }
+        v
+    }
+
+    /// ±0 as a wide packed operand.
+    pub fn zero_w(&self, sign: bool) -> PackedBits {
+        let mut v = PackedBits::ZERO;
+        if sign {
+            v.set_bit(self.total_bits() - 1);
+        }
+        v
+    }
+
+    /// Positive one as a wide packed operand — the wide-format analog of
+    /// [`FpFormat::one`], whose `u128` return cannot hold Fp256/Fp512.
+    pub fn one_w(&self) -> PackedBits {
+        PackedBits::from_u64(self.bias() as u64).shl(self.frac_bits)
     }
 }
 
-/// Unpacked floating-point datum.
+/// Unpacked floating-point datum. `N` is the operand limb count: the
+/// default (`N = 2`, a `U128` significand) serves every narrow registry
+/// class; wide formats unpack through [`FpFormat::unpack_g`] into
+/// `Unpacked<8>`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct Unpacked {
+pub struct Unpacked<const N: usize = 2> {
     /// Sign bit (true = negative).
     pub sign: bool,
     /// Datum class.
@@ -194,13 +265,13 @@ pub struct Unpacked {
     pub exp: i32,
     /// Significand. Normal: hidden bit set at `frac_bits`. Subnormal: raw
     /// fraction. NaN: payload.
-    pub sig: U128,
+    pub sig: Wide<N>,
 }
 
-impl Unpacked {
+impl<const N: usize> Unpacked<N> {
     /// Normalize a subnormal into `Normal` representation (hidden bit at
     /// `frac_bits`), adjusting the exponent. No-op for normals.
-    pub fn normalize(&self, fmt: &FpFormat) -> Unpacked {
+    pub fn normalize(&self, fmt: &FpFormat) -> Unpacked<N> {
         match self.class {
             FpClass::Subnormal => {
                 let shift = fmt.sig_bits() - self.sig.bit_len();
@@ -327,6 +398,47 @@ mod format_tests {
         assert!(f64::from_bits(DOUBLE.quiet_nan().as_u64()).is_nan());
         assert_eq!(SINGLE.inf(false).as_u64(), f32::INFINITY.to_bits() as u64);
         assert_eq!(SINGLE.max_finite(false).as_u64(), f32::MAX.to_bits() as u64);
+    }
+
+    #[test]
+    fn wide_field_widths_match_interchange_formula() {
+        // binary256: 1 + 19 + 236; hidden bit -> 237-bit significand.
+        assert_eq!(FP256.total_bits(), 256);
+        assert_eq!(FP256.sig_bits(), 237);
+        assert_eq!(FP256.bias(), 262_143);
+        // binary512: 1 + 23 + 488; hidden bit -> 489-bit significand.
+        assert_eq!(FP512.total_bits(), 512);
+        assert_eq!(FP512.sig_bits(), 489);
+        assert_eq!(FP512.bias(), 4_194_303);
+    }
+
+    #[test]
+    fn wide_special_patterns_and_roundtrip() {
+        for fmt in [&FP256, &FP512] {
+            assert_eq!(fmt.unpack_g(fmt.inf_w(false)).class, FpClass::Infinite);
+            assert_eq!(fmt.unpack_g(fmt.quiet_nan_w()).class, FpClass::Nan);
+            assert!(!fmt.is_signaling_nan_g(fmt.quiet_nan_w()));
+            let mut snan = fmt.inf_w(false);
+            snan.set_bit(0);
+            assert!(fmt.is_signaling_nan_g(snan), "{}", fmt.name);
+            // 1.0: unbiased exponent 0, significand = hidden bit alone.
+            let one = fmt.unpack_g(fmt.one_w());
+            assert_eq!(one.class, FpClass::Normal);
+            assert_eq!(one.exp, 0);
+            assert_eq!(one.sig.bit_len(), fmt.sig_bits());
+            // max_finite unpacks at emax and repacks bit-exactly.
+            let mf = fmt.max_finite_w(true);
+            let u = fmt.unpack_g(mf);
+            assert_eq!(u.class, FpClass::Normal);
+            assert_eq!(u.exp, fmt.emax());
+            assert_eq!(fmt.pack_g(u.sign, u.exp, u.sig), mf, "{}", fmt.name);
+            // Smallest subnormal normalizes exactly like the narrow path.
+            let tiny = fmt.unpack_g(PackedBits::ONE).normalize(fmt);
+            assert_eq!(tiny.class, FpClass::Normal);
+            assert_eq!(tiny.exp, fmt.emin() - fmt.frac_bits as i32);
+            assert!(fmt.zero_w(true).bit(fmt.total_bits() - 1));
+            assert!(fmt.zero_w(false).is_zero());
+        }
     }
 
     #[test]

@@ -9,12 +9,20 @@
 //! multiply and verified bit-exactly against hardware.
 //!
 //! The served formats live in the open [`OpClass`] registry — the paper's
-//! three precisions plus two sub-single classes:
+//! three precisions plus two sub-single and two wide classes:
 //! * bfloat16  — 1 sign, 8 exponent,  7 fraction  (8-bit significand)
 //! * binary16  — 1 sign, 5 exponent,  10 fraction (11-bit significand)
 //! * binary32  — 1 sign, 8 exponent,  23 fraction (24-bit significand)
 //! * binary64  — 1 sign, 11 exponent, 52 fraction (53-bit significand)
 //! * binary128 — 1 sign, 15 exponent, 112 fraction (113-bit significand)
+//! * binary256 — 1 sign, 19 exponent, 236 fraction (237-bit significand)
+//! * binary512 — 1 sign, 23 exponent, 488 fraction (489-bit significand)
+//!
+//! The two wide classes outgrow the `U128` operand word: their packed
+//! values travel as [`crate::wideint::PackedBits`] through the `_wide`
+//! entry points ([`mul_bits_wide`], [`FpuBatch::mul_batch_bits_wide`]),
+//! which share every stage implementation with the narrow pipeline via
+//! limb-generic unpack/round/pack.
 //!
 //! Two execution shapes share the same stage implementations: the scalar
 //! per-op pipeline ([`mul_bits`], the oracle) and the lane-fused batch
@@ -35,7 +43,10 @@ mod golden;
 
 pub use batch::{FpScalar, FpuBatch, SigBatchMultiplier};
 pub use class::OpClass;
-pub use format::{FpClass, FpFormat, Unpacked, BF16, DOUBLE, HALF, QUAD, SINGLE};
+pub use format::{FpClass, FpFormat, Unpacked, BF16, DOUBLE, FP256, FP512, HALF, QUAD, SINGLE};
 pub use round::RoundMode;
-pub use softfp::{mul_bits, mul_bits_batch, DirectMul, Flags, SigMultiplier};
+pub use softfp::{
+    mul_bits, mul_bits_batch, mul_bits_batch_wide, mul_bits_wide, DirectMul, Flags, SigMultiplier,
+    WideProd, WIDE_PROD_LIMBS,
+};
 pub use types::{Bf16, Fp128, Fp16, Fp32, Fp64};

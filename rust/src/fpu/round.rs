@@ -4,7 +4,7 @@
 //! reduces it to `sig_bits` with guard/sticky semantics. This stage is
 //! shared by every precision and every multiplier backend.
 
-use crate::wideint::U256;
+use crate::wideint::Wide;
 
 /// IEEE-754 rounding-direction attributes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -48,12 +48,14 @@ impl RoundMode {
     }
 }
 
-/// Outcome of [`round_shift`].
+/// Outcome of [`round_shift`]. `N` is the product limb count — the default
+/// (`N = 4`, a `U256` product) serves every narrow class; wide formats
+/// round `Wide<16>` products through the same function.
 #[derive(Clone, Copy, Debug)]
-pub struct Rounded {
+pub struct Rounded<const N: usize = 4> {
     /// Rounded significand (may have grown one bit past the target width —
     /// caller renormalizes).
-    pub sig: U256,
+    pub sig: Wide<N>,
     /// Any discarded bit was non-zero (inexact).
     pub inexact: bool,
 }
@@ -63,7 +65,12 @@ pub struct Rounded {
 ///
 /// `shift == 0` returns the value unchanged and exact. Shifts larger than
 /// the value's width collapse everything into the sticky bit.
-pub fn round_shift(value: U256, shift: u32, mode: RoundMode, sign: bool) -> Rounded {
+pub fn round_shift<const N: usize>(
+    value: Wide<N>,
+    shift: u32,
+    mode: RoundMode,
+    sign: bool,
+) -> Rounded<N> {
     if shift == 0 {
         return Rounded { sig: value, inexact: false };
     }
@@ -81,7 +88,7 @@ pub fn round_shift(value: U256, shift: u32, mode: RoundMode, sign: bool) -> Roun
         RoundMode::TowardPositive => !sign,
         RoundMode::TowardNegative => sign,
     };
-    let sig = if increment { kept.wrapping_add(&U256::ONE) } else { kept };
+    let sig = if increment { kept.wrapping_add(&Wide::ONE) } else { kept };
     Rounded { sig, inexact }
 }
 
@@ -156,6 +163,24 @@ mod tests {
             let got = round_shift(U256::from_u128(v), shift, RoundMode::NearestEven, false);
             assert_eq!(got.sig.as_u128(), expect, "v={v:#x} shift={shift}");
             assert_eq!(got.inexact, rem != 0);
+        });
+    }
+
+    #[test]
+    fn wide_round_matches_narrow() {
+        // The generic round path is limb-count agnostic: a Wide<16> product
+        // rounds bit-identically to the U256 path on shared-range values.
+        use crate::wideint::Wide;
+        forall(0x33, 2000, |rng| {
+            let v = rng.next_u64() as u128 | ((rng.next_u64() as u128) << 64);
+            let shift = rng.range(1, 100) as u32;
+            let sign = rng.chance(0.5);
+            for mode in RoundMode::ALL {
+                let narrow = round_shift(U256::from_u128(v), shift, mode, sign);
+                let wide = round_shift(Wide::<16>::from_u128(v), shift, mode, sign);
+                assert_eq!(narrow.sig.as_u128(), wide.sig.as_u128(), "v={v:#x} shift={shift}");
+                assert_eq!(narrow.inexact, wide.inexact);
+            }
         });
     }
 

@@ -9,7 +9,15 @@
 
 use super::format::{FpClass, FpFormat, Unpacked};
 use super::round::{round_shift, RoundMode};
-use crate::wideint::{mul_u128, U128, U256};
+use crate::wideint::{mul_u128, PackedBits, Wide, U128, U256};
+
+/// Limb count of the exact wide significand product: two 489-bit Fp512
+/// significands multiply into ≤ 978 bits, held in a `Wide<16>` (1024-bit)
+/// word.
+pub const WIDE_PROD_LIMBS: usize = 16;
+
+/// The exact double-width product of two wide significands.
+pub type WideProd = Wide<WIDE_PROD_LIMBS>;
 
 /// IEEE-754 exception flags raised by an operation.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -41,6 +49,16 @@ impl Flags {
 pub trait SigMultiplier {
     /// Exact product of `a × b`, where `a, b < 2^width`.
     fn mul_sig(&mut self, a: U128, b: U128, width: u32) -> U256;
+
+    /// Exact product for significands wider than 128 bits (`width` up to
+    /// 489). The default is the direct widening multiply — the oracle every
+    /// decomposed implementation is pinned against; `decomp::DecompMul`
+    /// overrides it with tile-plan execution (naive all-pairs or the
+    /// Karatsuba DAG).
+    fn mul_sig_wide(&mut self, a: PackedBits, b: PackedBits, width: u32) -> WideProd {
+        let _ = width;
+        a.mul_full::<WIDE_PROD_LIMBS>(&b)
+    }
 }
 
 /// Oracle multiplier: one widening schoolbook multiply, no decomposition.
@@ -162,6 +180,146 @@ pub(super) fn finish_product(
     }
 
     fmt.pack(sign, exp, sig128)
+}
+
+/// Wide-operand twin of [`special_product`]: the same IEEE special-case
+/// lattice over [`PackedBits`] operands and `Unpacked<8>` fields, using the
+/// `_w` constant constructors.
+pub(super) fn special_product_w(
+    fmt: &FpFormat,
+    a: PackedBits,
+    b: PackedBits,
+    ua: &Unpacked<8>,
+    ub: &Unpacked<8>,
+    sign: bool,
+    flags: &mut Flags,
+) -> Option<PackedBits> {
+    if ua.class == FpClass::Nan || ub.class == FpClass::Nan {
+        flags.invalid |= fmt.is_signaling_nan_g(a) || fmt.is_signaling_nan_g(b);
+        return Some(fmt.quiet_nan_w());
+    }
+    match (ua.class, ub.class) {
+        (FpClass::Infinite, FpClass::Zero) | (FpClass::Zero, FpClass::Infinite) => {
+            flags.invalid = true;
+            Some(fmt.quiet_nan_w())
+        }
+        (FpClass::Infinite, _) | (_, FpClass::Infinite) => Some(fmt.inf_w(sign)),
+        (FpClass::Zero, _) | (_, FpClass::Zero) => Some(fmt.zero_w(sign)),
+        _ => None,
+    }
+}
+
+/// Wide-operand twin of [`finish_product`]: rounds an exact [`WideProd`]
+/// significand product down to a wide format, with identical underflow /
+/// overflow / renormalization semantics (the round stage itself is the
+/// shared limb-generic `round_shift`).
+pub(super) fn finish_product_w(
+    fmt: &FpFormat,
+    sign: bool,
+    exp_sum: i32,
+    prod: WideProd,
+    mode: RoundMode,
+    flags: &mut Flags,
+) -> PackedBits {
+    let f = fmt.frac_bits;
+    debug_assert!(!prod.is_zero());
+    let top = prod.bit_len() - 1;
+    debug_assert!(top == 2 * f || top == 2 * f + 1);
+
+    let mut exp = exp_sum + (top as i32 - 2 * f as i32);
+    let mut shift = top - f;
+    if exp < fmt.emin() {
+        let extra = (fmt.emin() - exp) as u32;
+        shift = shift.saturating_add(extra);
+        exp = fmt.emin();
+    }
+
+    let rounded = round_shift(prod, shift, mode, sign);
+    flags.inexact |= rounded.inexact;
+    let mut sig = rounded.sig;
+
+    if sig.bit_len() > fmt.sig_bits() {
+        debug_assert!(sig.bit_len() == fmt.sig_bits() + 1);
+        sig = sig.shr(1);
+        exp += 1;
+    }
+
+    let hidden = PackedBits::ONE.shl(f);
+    let sig_w: PackedBits = sig.narrow();
+    let is_subnormal_result =
+        exp == fmt.emin() && sig_w.cmp_wide(&hidden) == core::cmp::Ordering::Less;
+    if is_subnormal_result && rounded.inexact {
+        flags.underflow = true;
+    }
+
+    if exp > fmt.emax() {
+        flags.overflow = true;
+        flags.inexact = true;
+        let to_inf = match mode {
+            RoundMode::NearestEven | RoundMode::NearestAway => true,
+            RoundMode::TowardZero => false,
+            RoundMode::TowardPositive => !sign,
+            RoundMode::TowardNegative => sign,
+        };
+        return if to_inf { fmt.inf_w(sign) } else { fmt.max_finite_w(sign) };
+    }
+
+    if sig.is_zero() {
+        return fmt.zero_w(sign);
+    }
+
+    fmt.pack_g(sign, exp, sig_w)
+}
+
+/// Multiply two wide packed values (Fp256/Fp512) under rounding mode
+/// `mode`, computing the significand product through `m.mul_sig_wide`. The
+/// wide twin of [`mul_bits`], stage for stage.
+pub fn mul_bits_wide(
+    fmt: &FpFormat,
+    a: PackedBits,
+    b: PackedBits,
+    mode: RoundMode,
+    m: &mut dyn SigMultiplier,
+) -> (PackedBits, Flags) {
+    let mut flags = Flags::default();
+    let ua = fmt.unpack_g(a);
+    let ub = fmt.unpack_g(b);
+    let sign = ua.sign ^ ub.sign;
+
+    if let Some(bits) = special_product_w(fmt, a, b, &ua, &ub, sign, &mut flags) {
+        return (bits, flags);
+    }
+
+    let na = ua.normalize(fmt);
+    let nb = ub.normalize(fmt);
+
+    let prod = m.mul_sig_wide(na.sig, nb.sig, fmt.sig_bits());
+
+    let bits = finish_product_w(fmt, sign, na.exp + nb.exp, prod, mode, &mut flags);
+    (bits, flags)
+}
+
+/// Multiply a batch of wide packed values elementwise — the wide analog of
+/// [`mul_bits_batch`] (per-op, scalar pipeline per element; wide classes
+/// have no lane-fused path, their parallelism lives in the tile DAG).
+pub fn mul_bits_batch_wide(
+    fmt: &FpFormat,
+    a: &[PackedBits],
+    b: &[PackedBits],
+    mode: RoundMode,
+    m: &mut dyn SigMultiplier,
+    out: &mut Vec<PackedBits>,
+) -> Flags {
+    assert_eq!(a.len(), b.len(), "operand length mismatch");
+    out.clear();
+    out.reserve(a.len());
+    let mut flags = Flags::default();
+    for (&x, &y) in a.iter().zip(b) {
+        let (bits, f) = mul_bits_wide(fmt, x, y, mode, m);
+        flags.merge(f);
+        out.push(bits);
+    }
+    flags
 }
 
 /// Multiply two packed values of format `fmt` under rounding mode `mode`,

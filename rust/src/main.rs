@@ -74,6 +74,10 @@ SHARED OPTIONS (serve / cluster / serve-net / loadgen)
   --workload <spec>    graphics|scientific|uniform|single-only|mixed|ml
   --mix <spec>         custom class weights, e.g.
                        half=0.2,bf16=0.3,single=0.5 (overrides --workload)
+  --scheme <s>         partition organization: civp|18x18|25x18|9x9|
+                       karatsuba24 (recursive sub-quadratic tiling for
+                       the wide fp256/fp512 classes; narrow classes fall
+                       back to flat CIVP tiles)
   --backend <b>        native|pjrt (default native)
   --artifacts <dir>    artifacts directory (pjrt backend)
   --cores <n>          work-stealing lane-executor cores
@@ -104,6 +108,12 @@ COMMANDS
                                     bound (default 32)
                --writer-queue <n>   per-connection reply queue bound
                                     (default service.net_writer_queue, 256)
+               --max-conns <n>      accept-side cap on open connections;
+                                    arrivals beyond it are closed at
+                                    accept and counted in
+                                    net_conns_rejected (0 = unlimited)
+               --idle-timeout <ms>  close connections idle this long so
+                                    their slots come back (0 = never)
                --schemes <list>     extra schemes served via their own
                                     clusters, e.g. 18x18,9x9 (others
                                     answer `unsupported`)

@@ -59,7 +59,7 @@ use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Default connection-worker pool size.
 pub const DEFAULT_NET_WORKERS: usize = 4;
@@ -104,6 +104,17 @@ pub struct NetServerConfig {
     /// fabric preset swapped). Requests for schemes in neither set
     /// answer [`Status::Unsupported`].
     pub extra_schemes: Vec<SchemeKind>,
+    /// Hard cap on simultaneously open connections, enforced at the
+    /// accept thread: a connection arriving at the cap is closed
+    /// immediately (counted in `net_conns_rejected`) so the fixed worker
+    /// pool never multiplexes more sockets than the deployment sized
+    /// for. `0` means unlimited.
+    pub max_conns: usize,
+    /// Close a connection after this much inactivity (no bytes read or
+    /// written, nothing in flight). Reclaims slots held by idle or
+    /// half-dead peers — without it, `max_conns` slots leak to clients
+    /// that connected and walked away. `None` disables the timeout.
+    pub idle_timeout: Option<Duration>,
 }
 
 impl Default for NetServerConfig {
@@ -115,6 +126,8 @@ impl Default for NetServerConfig {
             net_workers: DEFAULT_NET_WORKERS,
             pipeline_depth: DEFAULT_PIPELINE_DEPTH,
             extra_schemes: Vec::new(),
+            max_conns: 0,
+            idle_timeout: None,
         }
     }
 }
@@ -125,7 +138,9 @@ impl Default for NetServerConfig {
 fn scheme_service(mut svc: ServiceConfig, scheme: SchemeKind) -> ServiceConfig {
     svc.scheme = scheme;
     svc.fabric = match scheme {
-        SchemeKind::Civp => FabricKind::Civp,
+        // Karatsuba leaves are CIVP tile vocabularies, so the karatsuba
+        // organization runs on the CIVP fabric preset.
+        SchemeKind::Civp | SchemeKind::Karatsuba24 => FabricKind::Civp,
         SchemeKind::Baseline18 | SchemeKind::Baseline25x18 => FabricKind::Legacy,
         // 9x9 tiles run on either fabric — keep the configured preset.
         SchemeKind::Baseline9 => svc.fabric,
@@ -176,6 +191,9 @@ struct Conn {
     read_closed: bool,
     /// Framing lost: answer what is owed, flush, then close.
     closing: bool,
+    /// Last time this connection made any progress (read, write, parse,
+    /// completion) — the idle-timeout reaper's clock.
+    last_activity: Instant,
 }
 
 impl Conn {
@@ -190,6 +208,7 @@ impl Conn {
             wr_queued: 0,
             read_closed: false,
             closing: false,
+            last_activity: Instant::now(),
         }
     }
 
@@ -213,6 +232,10 @@ struct NetInstruments {
     status_frames: Vec<Arc<Counter>>,
     /// High-water mark of any connection's pipelined in-flight depth.
     inflight_hwm: AtomicU64,
+    /// Connections turned away at the accept thread (`max_conns` hit).
+    conns_rejected: Arc<Counter>,
+    /// Connections closed by the idle-timeout reaper.
+    conns_idle_closed: Arc<Counter>,
 }
 
 /// Per-connection limits, resolved once at startup.
@@ -220,6 +243,8 @@ struct NetInstruments {
 struct ConnLimits {
     writer_queue: usize,
     pipeline_depth: usize,
+    /// Close fully-idle connections after this long (None = never).
+    idle_timeout: Option<Duration>,
 }
 
 /// A running network serving edge: accept thread + worker pool +
@@ -269,13 +294,18 @@ impl NetServer {
             .iter()
             .map(|s| metrics.counter(&format!("net_frames_{}", s.name())))
             .collect();
-        let instruments =
-            Arc::new(NetInstruments { status_frames, inflight_hwm: AtomicU64::new(0) });
+        let instruments = Arc::new(NetInstruments {
+            status_frames,
+            inflight_hwm: AtomicU64::new(0),
+            conns_rejected: metrics.counter("net_conns_rejected"),
+            conns_idle_closed: metrics.counter("net_conns_idle_closed"),
+        });
 
         let stop = Arc::new(AtomicBool::new(false));
         let limits = ConnLimits {
             writer_queue: cfg.writer_queue.max(1),
             pipeline_depth: cfg.pipeline_depth.max(1),
+            idle_timeout: cfg.idle_timeout,
         };
         let mut workers = Vec::new();
         let mut worker_handles = Vec::new();
@@ -300,6 +330,8 @@ impl NetServer {
         let accept = {
             let stop = stop.clone();
             let workers = workers.clone();
+            let instruments = instruments.clone();
+            let max_conns = cfg.max_conns;
             std::thread::spawn(move || {
                 for incoming in listener.incoming() {
                     if stop.load(Ordering::Acquire) {
@@ -309,6 +341,18 @@ impl NetServer {
                         Ok(s) => s,
                         Err(_) => continue,
                     };
+                    // Connection admission: at the cap, close at accept
+                    // instead of queueing the socket onto a worker —
+                    // `max_conns` bounds slab sizes, not just threads.
+                    if max_conns > 0 {
+                        let open: usize =
+                            workers.iter().map(|w| w.conns.load(Ordering::Acquire)).sum();
+                        if open >= max_conns {
+                            instruments.conns_rejected.inc();
+                            let _ = stream.shutdown(Shutdown::Both);
+                            continue;
+                        }
+                    }
                     // Least-loaded assignment over the fixed pool: the
                     // connection count is the only signal accept needs.
                     let target = workers
@@ -618,6 +662,20 @@ fn pump_conn(
         let _ = conn.stream.shutdown(Shutdown::Both);
         return Pump::Closed;
     }
+
+    // 6. Idle reaping: a connection that owes nothing (no in-flight
+    //    requests, no queued bytes, no half-parsed frame) and has made no
+    //    progress for the idle window is closed to reclaim its slot.
+    if progress {
+        conn.last_activity = Instant::now();
+    } else if let Some(timeout) = limits.idle_timeout {
+        let idle = drained && conn.unparsed() == 0;
+        if idle && conn.last_activity.elapsed() >= timeout {
+            instruments.conns_idle_closed.inc();
+            let _ = conn.stream.shutdown(Shutdown::Both);
+            return Pump::Closed;
+        }
+    }
     Pump::Alive { progress }
 }
 
@@ -670,6 +728,7 @@ mod tests {
 
     fn request_frame(id: u64, class: OpClass, scheme: SchemeKind, a: u128, b: u128) -> Vec<u8> {
         let mut frame = Vec::new();
+        let (a, b) = (a.into(), b.into());
         Request { id, class, scheme, round: RoundMode::NearestEven, a, b }.encode(&mut frame);
         frame
     }

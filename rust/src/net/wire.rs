@@ -3,7 +3,7 @@
 //! Every frame on the wire is a little-endian `u32` payload length
 //! followed by exactly that many payload bytes. Operand width is the op
 //! class's packed size (`total_bits / 8`), so a bfloat16 request is 16
-//! payload bytes and a binary128 request is [`MAX_REQUEST_PAYLOAD`]:
+//! payload bytes and a binary512 request is [`MAX_REQUEST_PAYLOAD`]:
 //!
 //! ```text
 //!   request  = len:u32 | ver:u8 | class:u8 | scheme:u8 | round:u8
@@ -12,12 +12,15 @@
 //!            | id:u64 | bits:[u8; w]                     (bits iff Ok)
 //! ```
 //!
-//! `class`, `scheme` and `round` are the registry indices
-//! ([`OpClass::index`], [`SchemeKind::index`], [`RoundMode::index`]), so
-//! the wire vocabulary is derived from the in-process registries instead
-//! of a hand-mirrored table. Decoding is total: every malformed payload
-//! maps to a [`WireError`] (never a panic), which the listener answers
-//! with [`Status::BadRequest`].
+//! `class` and `scheme` carry *pinned wire ids* ([`class_wire_id`],
+//! [`scheme_wire_id`]) — explicit per-variant byte assignments frozen for
+//! protocol compatibility. Today they coincide with the registry indices
+//! because new classes are appended, but the wire tables are authoritative:
+//! reordering an enum must not (and, with the compat test in this module,
+//! cannot silently) change what a deployed client sends. `round` is the
+//! [`RoundMode::index`] (that registry is IEEE-fixed and closed). Decoding
+//! is total: every malformed payload maps to a [`WireError`] (never a
+//! panic), which the listener answers with [`Status::BadRequest`].
 //!
 //! Admission outcomes map 1:1 onto status codes —
 //! [`crate::serve::AdmissionError`] `impl`s `Into<Status>` — so cluster
@@ -27,6 +30,7 @@
 use crate::decomp::{OpClass, SchemeKind};
 use crate::fpu::RoundMode;
 use crate::serve::AdmissionError;
+use crate::wideint::PackedBits;
 use std::io;
 
 /// Protocol version carried in every frame.
@@ -38,17 +42,55 @@ const REQ_FIXED: usize = 12;
 /// Fixed response-payload bytes before the (optional) result bits.
 const RESP_FIXED: usize = 11;
 
-/// Largest legal request payload (binary128: 12 + 2×16 bytes).
-pub const MAX_REQUEST_PAYLOAD: usize = REQ_FIXED + 32;
+/// Largest legal request payload (binary512: 12 + 2×64 bytes).
+pub const MAX_REQUEST_PAYLOAD: usize = REQ_FIXED + 128;
 
 /// Hard bound on any frame's payload length. A length prefix above this
 /// is a framing error ([`FrameRead::Oversized`]) — the reader refuses to
 /// allocate or skip it, answers `BadRequest` and closes.
-pub const MAX_FRAME: u32 = 64;
+pub const MAX_FRAME: u32 = 160;
 
 /// Packed operand width in bytes for one op class.
 pub const fn operand_bytes(class: OpClass) -> usize {
     (class.total_bits() / 8) as usize
+}
+
+/// Pinned wire byte for an op class. These assignments are frozen: a
+/// deployed client's `class` byte must mean the same format forever, so
+/// new classes take fresh ids and existing rows never change. (The compat
+/// test `wire_ids_are_pinned` fails the build if one does.)
+pub const fn class_wire_id(class: OpClass) -> u8 {
+    match class {
+        OpClass::Bf16 => 0,
+        OpClass::Half => 1,
+        OpClass::Single => 2,
+        OpClass::Double => 3,
+        OpClass::Quad => 4,
+        OpClass::Fp256 => 5,
+        OpClass::Fp512 => 6,
+    }
+}
+
+/// Inverse of [`class_wire_id`]; `None` for unassigned bytes.
+pub fn class_from_wire_id(id: u8) -> Option<OpClass> {
+    OpClass::ALL.into_iter().find(|c| class_wire_id(*c) == id)
+}
+
+/// Pinned wire byte for a partition scheme (same freeze policy as
+/// [`class_wire_id`]).
+pub const fn scheme_wire_id(kind: SchemeKind) -> u8 {
+    match kind {
+        SchemeKind::Civp => 0,
+        SchemeKind::Baseline18 => 1,
+        SchemeKind::Baseline25x18 => 2,
+        SchemeKind::Baseline9 => 3,
+        SchemeKind::Karatsuba24 => 4,
+    }
+}
+
+/// Inverse of [`scheme_wire_id`]; `None` for unassigned bytes.
+pub fn scheme_from_wire_id(id: u8) -> Option<SchemeKind> {
+    SchemeKind::ALL.into_iter().find(|k| scheme_wire_id(*k) == id)
 }
 
 /// Response status codes. `Saturated`/`Unservable`/`Draining` mirror
@@ -177,9 +219,9 @@ pub struct Request {
     /// Rounding mode.
     pub round: RoundMode,
     /// Packed operand A (low `total_bits` valid).
-    pub a: u128,
+    pub a: PackedBits,
     /// Packed operand B.
-    pub b: u128,
+    pub b: PackedBits,
 }
 
 impl Request {
@@ -189,12 +231,12 @@ impl Request {
         let w = operand_bytes(self.class);
         buf.extend_from_slice(&((REQ_FIXED + 2 * w) as u32).to_le_bytes());
         buf.push(VERSION);
-        buf.push(self.class.index() as u8);
-        buf.push(self.scheme.index() as u8);
+        buf.push(class_wire_id(self.class));
+        buf.push(scheme_wire_id(self.scheme));
         buf.push(self.round.index() as u8);
         buf.extend_from_slice(&self.id.to_le_bytes());
-        buf.extend_from_slice(&self.a.to_le_bytes()[..w]);
-        buf.extend_from_slice(&self.b.to_le_bytes()[..w]);
+        write_packed(buf, &self.a, w);
+        write_packed(buf, &self.b, w);
     }
 
     /// Decode a request payload (the bytes *after* the length prefix).
@@ -205,12 +247,8 @@ impl Request {
         if payload[0] != VERSION {
             return Err(WireError::BadVersion(payload[0]));
         }
-        if payload[1] as usize >= OpClass::COUNT {
-            return Err(WireError::BadClass(payload[1]));
-        }
-        let class = OpClass::from_index(payload[1] as usize);
-        let scheme = SchemeKind::from_index(payload[2] as usize)
-            .ok_or(WireError::BadScheme(payload[2]))?;
+        let class = class_from_wire_id(payload[1]).ok_or(WireError::BadClass(payload[1]))?;
+        let scheme = scheme_from_wire_id(payload[2]).ok_or(WireError::BadScheme(payload[2]))?;
         let round = RoundMode::from_index(payload[3] as usize)
             .ok_or(WireError::BadRound(payload[3]))?;
         let id = u64::from_le_bytes(payload[4..12].try_into().unwrap());
@@ -219,8 +257,8 @@ impl Request {
         if payload.len() != expect {
             return Err(WireError::LengthMismatch { expect, got: payload.len() });
         }
-        let a = read_u128(&payload[REQ_FIXED..REQ_FIXED + w]);
-        let b = read_u128(&payload[REQ_FIXED + w..]);
+        let a = read_packed(&payload[REQ_FIXED..REQ_FIXED + w]);
+        let b = read_packed(&payload[REQ_FIXED + w..]);
         Ok(Request { id, class, scheme, round, a, b })
     }
 }
@@ -237,19 +275,19 @@ pub struct Response {
     /// Request id echoed back (0 when the request never decoded).
     pub id: u64,
     /// Packed product bits (`Ok` only).
-    pub bits: u128,
+    pub bits: PackedBits,
 }
 
 impl Response {
     /// A successful response carrying the product bits.
-    pub fn ok(class: OpClass, id: u64, bits: u128) -> Response {
-        Response { status: Status::Ok, class, id, bits }
+    pub fn ok(class: OpClass, id: u64, bits: impl Into<PackedBits>) -> Response {
+        Response { status: Status::Ok, class, id, bits: bits.into() }
     }
 
     /// A non-`Ok` response (no result bits on the wire).
     pub fn error(status: Status, class: OpClass, id: u64) -> Response {
         debug_assert!(status != Status::Ok, "error responses carry no bits");
-        Response { status, class, id, bits: 0 }
+        Response { status, class, id, bits: PackedBits::ZERO }
     }
 
     /// Append the full frame (length prefix + payload) to `buf`.
@@ -258,10 +296,10 @@ impl Response {
         buf.extend_from_slice(&((RESP_FIXED + w) as u32).to_le_bytes());
         buf.push(VERSION);
         buf.push(self.status.code());
-        buf.push(self.class.index() as u8);
+        buf.push(class_wire_id(self.class));
         buf.extend_from_slice(&self.id.to_le_bytes());
         if self.status == Status::Ok {
-            buf.extend_from_slice(&self.bits.to_le_bytes()[..w]);
+            write_packed(buf, &self.bits, w);
         }
     }
 
@@ -274,25 +312,35 @@ impl Response {
             return Err(WireError::BadVersion(payload[0]));
         }
         let status = Status::from_code(payload[1]).ok_or(WireError::BadStatus(payload[1]))?;
-        if payload[2] as usize >= OpClass::COUNT {
-            return Err(WireError::BadClass(payload[2]));
-        }
-        let class = OpClass::from_index(payload[2] as usize);
+        let class = class_from_wire_id(payload[2]).ok_or(WireError::BadClass(payload[2]))?;
         let id = u64::from_le_bytes(payload[3..11].try_into().unwrap());
         let expect = RESP_FIXED + if status == Status::Ok { operand_bytes(class) } else { 0 };
         if payload.len() != expect {
             return Err(WireError::LengthMismatch { expect, got: payload.len() });
         }
-        let bits = if status == Status::Ok { read_u128(&payload[RESP_FIXED..]) } else { 0 };
+        let bits =
+            if status == Status::Ok { read_packed(&payload[RESP_FIXED..]) } else { PackedBits::ZERO };
         Ok(Response { status, class, id, bits })
     }
 }
 
-/// Zero-extend up to 16 little-endian bytes into a `u128`.
-fn read_u128(bytes: &[u8]) -> u128 {
-    let mut buf = [0u8; 16];
-    buf[..bytes.len()].copy_from_slice(bytes);
-    u128::from_le_bytes(buf)
+/// Emit the low `w` bytes of a packed word, little-endian. `w` is an
+/// operand width from the registry, so `w <= 64` (binary512) always.
+fn write_packed(buf: &mut Vec<u8>, v: &PackedBits, w: usize) {
+    debug_assert!(w <= 8 * v.limbs.len());
+    for i in 0..w {
+        buf.push((v.limbs[i / 8] >> (8 * (i % 8))) as u8);
+    }
+}
+
+/// Zero-extend up to 64 little-endian bytes into a packed word.
+fn read_packed(bytes: &[u8]) -> PackedBits {
+    debug_assert!(bytes.len() <= 64);
+    let mut v = PackedBits::ZERO;
+    for (i, &b) in bytes.iter().enumerate() {
+        v.limbs[i / 8] |= (b as u64) << (8 * (i % 8));
+    }
+    v
 }
 
 /// Outcome of one [`read_frame`] call.
@@ -342,15 +390,16 @@ pub fn read_frame(r: &mut impl io::Read, buf: &mut Vec<u8>) -> io::Result<FrameR
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::proput::forall;
+    use crate::proput::{forall, Rng};
 
-    fn mask(class: OpClass) -> u128 {
-        let bits = class.total_bits();
-        if bits == 128 {
-            u128::MAX
-        } else {
-            (1u128 << bits) - 1
+    /// Random packed operand with every bit position of the class's width
+    /// exercised (wide classes included — no `u128` shift anywhere).
+    fn rand_operand(rng: &mut Rng, class: OpClass) -> PackedBits {
+        let mut v = PackedBits::ZERO;
+        for limb in v.limbs.iter_mut() {
+            *limb = rng.next_u64();
         }
+        v.mask_low(class.total_bits())
     }
 
     /// Decode one frame from raw bytes (length prefix included), the way
@@ -371,14 +420,13 @@ mod tests {
             for class in OpClass::ALL {
                 for scheme in SchemeKind::ALL {
                     for round in RoundMode::ALL {
-                        let m = mask(class);
                         let req = Request {
                             id: rng.next_u64(),
                             class,
                             scheme,
                             round,
-                            a: (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & m,
-                            b: (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & m,
+                            a: rand_operand(rng, class),
+                            b: rand_operand(rng, class),
                         };
                         let mut buf = Vec::new();
                         req.encode(&mut buf);
@@ -397,11 +445,8 @@ mod tests {
         forall(0x9E8, 2000, |rng| {
             let class = OpClass::from_index(rng.below(OpClass::COUNT as u64) as usize);
             let id = rng.next_u64();
-            let ok = Response::ok(
-                class,
-                id,
-                (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & mask(class),
-            );
+            let bits = rand_operand(rng, class);
+            let ok = Response::ok(class, id, bits);
             let mut buf = Vec::new();
             ok.encode(&mut buf);
             let (fr, payload) = decode_stream(&buf);
@@ -433,14 +478,99 @@ mod tests {
         assert_eq!(Status::from(AdmissionError::Draining), Status::Draining);
     }
 
+    /// Protocol-compatibility freeze. These bytes are what deployed
+    /// clients have on the wire: if this test fails, an enum edit changed
+    /// an *existing* assignment — revert it and append instead. Adding a
+    /// new class/scheme extends these tables with a fresh id; it never
+    /// renumbers a row.
+    #[test]
+    fn wire_ids_are_pinned() {
+        let classes: [(OpClass, u8); 7] = [
+            (OpClass::Bf16, 0),
+            (OpClass::Half, 1),
+            (OpClass::Single, 2),
+            (OpClass::Double, 3),
+            (OpClass::Quad, 4),
+            (OpClass::Fp256, 5),
+            (OpClass::Fp512, 6),
+        ];
+        assert_eq!(classes.len(), OpClass::COUNT, "new class: add its pinned wire id here");
+        for (class, id) in classes {
+            assert_eq!(class_wire_id(class), id, "{} wire id changed", class.name());
+            assert_eq!(class_from_wire_id(id), Some(class));
+        }
+        let schemes: [(SchemeKind, u8); 5] = [
+            (SchemeKind::Civp, 0),
+            (SchemeKind::Baseline18, 1),
+            (SchemeKind::Baseline25x18, 2),
+            (SchemeKind::Baseline9, 3),
+            (SchemeKind::Karatsuba24, 4),
+        ];
+        assert_eq!(schemes.len(), SchemeKind::COUNT, "new scheme: add its pinned wire id here");
+        for (kind, id) in schemes {
+            assert_eq!(scheme_wire_id(kind), id, "{} wire id changed", kind.name());
+            assert_eq!(scheme_from_wire_id(id), Some(kind));
+        }
+        // Bytes beyond the tables stay unassigned (decode rejects them).
+        for id in OpClass::COUNT as u8..=u8::MAX {
+            assert_eq!(class_from_wire_id(id), None);
+        }
+        for id in SchemeKind::COUNT as u8..=u8::MAX {
+            assert_eq!(scheme_from_wire_id(id), None);
+        }
+    }
+
+    /// Byte-exact golden frames: pins the frame layout (offsets, LE order,
+    /// operand truncation) in addition to the id tables above.
+    #[test]
+    fn wire_frames_are_byte_stable() {
+        let req = Request {
+            id: 0x0102_0304_0506_0708,
+            class: OpClass::Single,
+            scheme: SchemeKind::Karatsuba24,
+            round: RoundMode::TowardZero,
+            a: PackedBits::from_u128(0x3F80_0001),
+            b: PackedBits::from_u128(0x4000_0002),
+        };
+        let mut buf = Vec::new();
+        req.encode(&mut buf);
+        assert_eq!(
+            buf,
+            vec![
+                20, 0, 0, 0, // len = 12 + 2*4
+                1,  // version
+                2,  // class: single
+                4,  // scheme: karatsuba24
+                2,  // round: toward-zero
+                0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01, // id LE
+                0x01, 0x00, 0x80, 0x3F, // a LE
+                0x02, 0x00, 0x00, 0x40, // b LE
+            ]
+        );
+        let resp = Response::ok(OpClass::Bf16, 9, PackedBits::from_u128(0xBEEF));
+        buf.clear();
+        resp.encode(&mut buf);
+        assert_eq!(
+            buf,
+            vec![
+                13, 0, 0, 0, // len = 11 + 2
+                1, // version
+                0, // status: ok
+                0, // class: bf16
+                9, 0, 0, 0, 0, 0, 0, 0, // id LE
+                0xEF, 0xBE, // bits LE
+            ]
+        );
+    }
+
     fn valid_request_frame() -> Vec<u8> {
         let req = Request {
             id: 7,
             class: OpClass::Single,
             scheme: SchemeKind::Civp,
             round: RoundMode::NearestEven,
-            a: 0x3F80_0000,
-            b: 0x3F80_0000,
+            a: PackedBits::from_u128(0x3F80_0000),
+            b: PackedBits::from_u128(0x3F80_0000),
         };
         let mut buf = Vec::new();
         req.encode(&mut buf);

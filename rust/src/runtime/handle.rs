@@ -91,14 +91,19 @@ impl EngineHandle {
                                     })
                                 }
                                 OpClass::Quad => engine.mul_fp128(&a, &b),
-                                // No sub-single artifacts are compiled yet;
+                                // No sub-single or wide artifacts are
+                                // compiled yet (the u128 job payload also
+                                // cannot carry a wide operand);
                                 // `PjrtBackend` serves these through its
                                 // embedded native fallback, so reaching the
                                 // engine with one is a caller error, not a
                                 // panic.
-                                OpClass::Half | OpClass::Bf16 => Err(err!(
+                                OpClass::Half
+                                | OpClass::Bf16
+                                | OpClass::Fp256
+                                | OpClass::Fp512 => Err(err!(
                                     "pjrt engine has no {} artifact (use the native backend \
-                                     for sub-single classes)",
+                                     for sub-single and wide classes)",
                                     class.name()
                                 )),
                             };

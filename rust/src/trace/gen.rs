@@ -3,6 +3,7 @@
 use super::workloads::WorkloadMix;
 use crate::decomp::OpClass;
 use crate::proput::Rng;
+use crate::wideint::PackedBits;
 
 /// One multiplication request in a trace.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -11,10 +12,12 @@ pub struct TraceRequest {
     pub id: u64,
     /// Op class demanded by the application.
     pub class: OpClass,
-    /// Packed operand A bits (low `total_bits` of the class are valid).
-    pub a: u128,
+    /// Packed operand A bits (low `total_bits` of the class are valid —
+    /// the [`PackedBits`] word carries every registry class up to
+    /// binary512).
+    pub a: PackedBits,
     /// Packed operand B bits.
-    pub b: u128,
+    pub b: PackedBits,
     /// Arrival offset in nanoseconds from trace start (open-loop arrivals,
     /// exponential inter-arrival).
     pub arrival_ns: u64,
@@ -43,7 +46,7 @@ impl TraceGen {
     /// Field widths come straight from the class's [`crate::fpu::FpFormat`]
     /// descriptor — the registry is the single source of truth; no
     /// per-format table is duplicated here.
-    fn operand(&mut self, class: OpClass) -> u128 {
+    fn operand(&mut self, class: OpClass) -> PackedBits {
         let fmt = class.format();
         let (exp_bits, frac_bits) = (fmt.exp_bits, fmt.frac_bits);
         let bias = fmt.bias() as u64;
@@ -54,14 +57,19 @@ impl TraceGen {
         let lo = bias.saturating_sub(40).max(1);
         let hi = (bias + 40).min(exp_mask - 1);
         let biased = lo + self.rng.below(hi - lo + 1);
-        let frac = if frac_bits <= 64 {
-            (self.rng.next_u64() & ((1u64 << frac_bits) - 1)) as u128
-        } else {
-            let hi64 = self.rng.next_u64() as u128 & ((1u128 << (frac_bits - 64)) - 1);
-            (hi64 << 64) | self.rng.next_u64() as u128
-        };
-        let sign = (self.rng.below(2) as u128) << (exp_bits + frac_bits);
-        sign | ((biased as u128) << frac_bits) | frac
+        // Random fraction: fill the packed word limb-wise and mask —
+        // covers every fraction width in the registry (7..488 bits)
+        // without per-width byte bookkeeping.
+        let mut frac = PackedBits::ZERO;
+        for limb in frac.limbs.iter_mut() {
+            *limb = self.rng.next_u64();
+        }
+        let frac = frac.mask_low(frac_bits);
+        let mut v = PackedBits::from_u64(biased).shl(frac_bits).or(&frac);
+        if self.rng.below(2) == 1 {
+            v.set_bit(exp_bits + frac_bits);
+        }
+        v
     }
 
     /// Next request.

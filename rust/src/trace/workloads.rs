@@ -77,8 +77,9 @@ pub enum WorkloadSpec {
     /// Pure single precision (the CIFM [2] setting the paper extends).
     SingleOnly,
     /// Cluster-serving mix: the full registry in one stream — sub-single
-    /// ML traffic (half/bf16) riding alongside the paper's three classes,
-    /// with enough quad mass that precision-affinity routing matters. The
+    /// ML traffic (half/bf16) riding alongside the paper's three classes
+    /// and a wide (binary256/binary512) refinement tail, with enough
+    /// quad mass that precision-affinity routing matters. The
     /// `bench_cluster` scaling curves run this spec.
     Mixed,
     /// ML inference: bf16-dominant with a binary16 side channel and a
@@ -113,9 +114,11 @@ impl WorkloadSpec {
             WorkloadSpec::Mixed => WorkloadMix::from_pairs(&[
                 (Bf16, 0.15),
                 (Half, 0.10),
-                (Single, 0.35),
-                (Double, 0.25),
-                (Quad, 0.15),
+                (Single, 0.33),
+                (Double, 0.22),
+                (Quad, 0.10),
+                (Fp256, 0.06),
+                (Fp512, 0.04),
             ]),
             WorkloadSpec::MlInference => WorkloadMix::from_pairs(&[
                 (Bf16, 0.55),

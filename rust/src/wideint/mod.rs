@@ -27,12 +27,23 @@ pub struct Wide<const N: usize> {
     pub limbs: [u64; N],
 }
 
-/// 128-bit value (2 limbs) — significand container for every precision.
+/// 128-bit value (2 limbs) — significand container for the narrow classes.
 pub type U128 = Wide<2>;
 /// 192-bit value (3 limbs).
 pub type U192 = Wide<3>;
-/// 256-bit value (4 limbs) — product accumulator for every precision.
+/// 256-bit value (4 limbs) — product accumulator for the narrow classes.
 pub type U256 = Wide<4>;
+/// 512-bit value (8 limbs) — significand/operand container for the wide
+/// classes (binary256/binary512 significands are 237/489 bits).
+pub type U512 = Wide<8>;
+/// 1024-bit value (16 limbs) — product accumulator for the wide classes
+/// (a 489×489 product is 978 bits).
+pub type U1024 = Wide<16>;
+
+/// The universal packed-operand word the serving layers carry: big enough
+/// for every registry class (the widest packed format is binary512 = 512
+/// bits). Narrow classes occupy the low limbs; the rest stay zero.
+pub type PackedBits = U512;
 
 impl<const N: usize> Default for Wide<N> {
     fn default() -> Self {
@@ -315,6 +326,44 @@ impl<const N: usize> Wide<N> {
         out
     }
 
+    /// Exact schoolbook multiply into a fixed `Wide<M>` — the
+    /// allocation-free sibling of [`Wide::mul_wide`]. `M` must hold the
+    /// full `2N`-limb product of the operands' significant limbs
+    /// (debug-asserted; limbs past `M` must come out zero).
+    pub fn mul_full<const M: usize>(&self, rhs: &Self) -> Wide<M> {
+        let mut out = Wide::<M>::ZERO;
+        for i in 0..N {
+            if self.limbs[i] == 0 {
+                continue;
+            }
+            let mut carry = 0u128;
+            for j in 0..N {
+                let idx = i + j;
+                let prod = self.limbs[i] as u128 * rhs.limbs[j] as u128 + carry;
+                if idx < M {
+                    let s = out.limbs[idx] as u128 + (prod as u64 as u128);
+                    out.limbs[idx] = s as u64;
+                    carry = (prod >> 64) + (s >> 64);
+                } else {
+                    debug_assert!(prod == 0, "Wide::mul_full drops non-zero limb");
+                    carry = 0;
+                }
+            }
+            let mut idx = i + N;
+            while carry != 0 {
+                debug_assert!(idx < M, "Wide::mul_full carry past top limb");
+                if idx >= M {
+                    break;
+                }
+                let s = out.limbs[idx] as u128 + carry;
+                out.limbs[idx] = s as u64;
+                carry = s >> 64;
+                idx += 1;
+            }
+        }
+        out
+    }
+
     /// Exact schoolbook widening multiply: `N x N -> 2N` limbs.
     pub fn mul_wide(&self, rhs: &Self) -> WideProduct<N> {
         let mut out = vec![0u64; 2 * N];
@@ -339,6 +388,23 @@ impl<const N: usize> Wide<N> {
             }
         }
         WideProduct { limbs: out }
+    }
+
+    /// Parse a hex string (with or without a `0x` prefix). Panics on
+    /// invalid digits or overflow — intended for tests and golden vectors.
+    pub fn from_hex(s: &str) -> Self {
+        let s = s.strip_prefix("0x").unwrap_or(s);
+        let mut out = Self::ZERO;
+        let mut bit = 0u32;
+        for c in s.as_bytes().iter().rev() {
+            let d = (*c as char).to_digit(16).expect("invalid hex digit") as u64;
+            assert!(bit + 4 <= Self::BITS || d == 0, "hex literal overflows width");
+            if d != 0 {
+                out.limbs[(bit / 64) as usize] |= d << (bit % 64);
+            }
+            bit += 4;
+        }
+        out
     }
 
     /// Hex string (for debugging / golden tests).
@@ -375,6 +441,27 @@ impl<const N: usize> PartialOrd for Wide<N> {
 impl<const N: usize> Ord for Wide<N> {
     fn cmp(&self, other: &Self) -> core::cmp::Ordering {
         self.cmp_wide(other)
+    }
+}
+
+impl<const N: usize> From<u64> for Wide<N> {
+    fn from(v: u64) -> Self {
+        Self::from_u64(v)
+    }
+}
+
+impl<const N: usize> From<u128> for Wide<N> {
+    fn from(v: u128) -> Self {
+        Self::from_u128(v)
+    }
+}
+
+/// Equality against a `u128`: the low 128 bits match and every higher limb
+/// is zero. Lets narrow-operand call sites keep comparing against `u128`
+/// literals after the serving layers widened to [`PackedBits`].
+impl<const N: usize> PartialEq<u128> for Wide<N> {
+    fn eq(&self, other: &u128) -> bool {
+        self.as_u128() == *other && self.limbs.iter().skip(2).all(|&l| l == 0)
     }
 }
 

@@ -6,7 +6,8 @@ use civp::config::ServiceConfig;
 use civp::coordinator::{Backend, BackendChoice, Service};
 use civp::decomp::{OpClass, SchemeKind};
 use civp::fabric::FabricKind;
-use civp::fpu::{Bf16, Fp128, Fp16, Fp32, Fp64};
+use civp::fpu::{mul_bits_wide, Bf16, DirectMul, Fp128, Fp16, Fp32, Fp64, RoundMode};
+use civp::wideint::PackedBits;
 use civp::proput::Rng;
 use civp::runtime::EngineHandle;
 use civp::trace::{TraceGen, WorkloadSpec};
@@ -41,12 +42,22 @@ fn config_file_drives_service_end_to_end() {
     let mut gen = TraceGen::new(cfg.seed, cfg.workload.mix(), 0);
     for req in gen.take(300) {
         let got = svc.mul_blocking(req.class, req.a, req.b);
+        let (a, b) = (req.a, req.b);
         let want = match req.class {
-            OpClass::Bf16 => Bf16(req.a as u16).mul(Bf16(req.b as u16)).0 as u128,
-            OpClass::Half => Fp16(req.a as u16).mul(Fp16(req.b as u16)).0 as u128,
-            OpClass::Single => Fp32(req.a as u32).mul(Fp32(req.b as u32)).0 as u128,
-            OpClass::Double => Fp64(req.a as u64).mul(Fp64(req.b as u64)).0 as u128,
-            OpClass::Quad => Fp128(req.a).mul(Fp128(req.b)).0,
+            OpClass::Bf16 => {
+                PackedBits::from_u64(Bf16(a.as_u64() as u16).mul(Bf16(b.as_u64() as u16)).0 as u64)
+            }
+            OpClass::Half => {
+                PackedBits::from_u64(Fp16(a.as_u64() as u16).mul(Fp16(b.as_u64() as u16)).0 as u64)
+            }
+            OpClass::Single => {
+                PackedBits::from_u64(Fp32(a.as_u64() as u32).mul(Fp32(b.as_u64() as u32)).0 as u64)
+            }
+            OpClass::Double => PackedBits::from_u64(Fp64(a.as_u64()).mul(Fp64(b.as_u64())).0),
+            OpClass::Quad => PackedBits::from_u128(Fp128(a.as_u128()).mul(Fp128(b.as_u128())).0),
+            OpClass::Fp256 | OpClass::Fp512 => {
+                mul_bits_wide(req.class.format(), a, b, RoundMode::NearestEven, &mut DirectMul).0
+            }
         };
         assert_eq!(got, want);
     }
@@ -198,7 +209,7 @@ fn dropped_receiver_does_not_wedge_service() {
     // service still answers new requests
     let two = (2.0f64).to_bits() as u128;
     let bits = svc.mul_blocking(OpClass::Double, two, two);
-    assert_eq!(f64::from_bits(bits as u64), 4.0);
+    assert_eq!(f64::from_bits(bits.as_u64()), 4.0);
     let report = svc.shutdown();
     assert_eq!(report.responses, 201);
 }

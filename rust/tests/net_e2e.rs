@@ -145,8 +145,8 @@ fn malformed_frames_get_error_responses_not_hangs() {
         class: OpClass::Single,
         scheme: SchemeKind::Civp,
         round: RoundMode::NearestEven,
-        a: one,
-        b: one,
+        a: one.into(),
+        b: one.into(),
     }
     .encode(&mut frame);
     let mut bad = frame.clone();
@@ -189,7 +189,7 @@ fn malformed_frames_get_error_responses_not_hangs() {
 fn one_frame(id: u64, class: OpClass, scheme: SchemeKind) -> Vec<u8> {
     let one = class.format().one();
     let mut frame = Vec::new();
-    Request { id, class, scheme, round: RoundMode::NearestEven, a: one, b: one }
+    Request { id, class, scheme, round: RoundMode::NearestEven, a: one.into(), b: one.into() }
         .encode(&mut frame);
     frame
 }
@@ -356,6 +356,83 @@ fn loadgen_traffic_routes_to_extra_scheme_cluster() {
     assert_eq!(routed, report.sent, "all frames landed in the 18x18 scheme's cluster");
     let primary: u64 = server.cluster().op_counts().values().sum();
     assert_eq!(primary, 0, "the primary CIVP cluster saw none of it");
+    server.stop();
+}
+
+/// Accept-side connection admission and the idle reaper: a connection
+/// beyond `max_conns` is closed at accept (counted in
+/// `net_conns_rejected`, never queued onto a worker), and connections
+/// that go quiet past `idle_timeout` are reaped so their slots admit
+/// fresh clients again.
+#[test]
+fn max_conns_rejects_at_accept_and_idle_timeout_reclaims_slots() {
+    let cfg = NetServerConfig {
+        cluster: ClusterConfig {
+            shards: 1,
+            service: ServiceConfig {
+                workers: 1,
+                max_batch: 16,
+                linger_us: 50,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        net_workers: 1,
+        max_conns: 2,
+        idle_timeout: Some(Duration::from_millis(100)),
+        ..Default::default()
+    };
+    let server = NetServer::start(&cfg, BackendChoice::native(SchemeKind::Civp)).unwrap();
+
+    // Fill both slots and prove they serve (the round trips also settle
+    // the accept-side connection counts before the third connect).
+    let mut a = TcpStream::connect(server.local_addr()).unwrap();
+    let mut b = TcpStream::connect(server.local_addr()).unwrap();
+    let mut payload = Vec::new();
+    for (i, stream) in [&mut a, &mut b].into_iter().enumerate() {
+        stream.write_all(&one_frame(i as u64, OpClass::Single, SchemeKind::Civp)).unwrap();
+        assert_eq!(wire::read_frame(stream, &mut payload).unwrap(), FrameRead::Frame);
+        assert_eq!(Response::decode(&payload).unwrap().status, Status::Ok);
+    }
+
+    // Third connection: turned away at accept — no frame ever comes
+    // back, only a close (clean FIN or reset, depending on timing).
+    let mut c = TcpStream::connect(server.local_addr()).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let _ = c.write_all(&one_frame(9, OpClass::Single, SchemeKind::Civp));
+    assert!(
+        !matches!(wire::read_frame(&mut c, &mut payload), Ok(FrameRead::Frame)),
+        "a connection beyond max_conns must not be served"
+    );
+    drop(c);
+    assert_eq!(server.metrics().counters["net_conns_rejected"], 1);
+
+    // The two admitted connections go quiet past the idle window: the
+    // reaper closes them and the open-connection gauge returns to zero.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let open = server.metrics().gauges["net_open_connections"];
+        if open == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "idle connections must be reaped ({open} open)");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(server.metrics().counters["net_conns_idle_closed"] >= 2);
+    a.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    assert!(
+        !matches!(wire::read_frame(&mut a, &mut payload), Ok(FrameRead::Frame)),
+        "a reaped connection delivers no further frames"
+    );
+
+    // The freed slots admit a fresh connection again.
+    let mut d = TcpStream::connect(server.local_addr()).unwrap();
+    d.write_all(&one_frame(10, OpClass::Single, SchemeKind::Civp)).unwrap();
+    assert_eq!(wire::read_frame(&mut d, &mut payload).unwrap(), FrameRead::Frame);
+    assert_eq!(Response::decode(&payload).unwrap().status, Status::Ok);
+    drop(a);
+    drop(b);
+    drop(d);
     server.stop();
 }
 

@@ -42,8 +42,13 @@ fn many_submitters_one_executor_all_classes_and_schemes() {
             let exec = exec.clone();
             std::thread::spawn(move || {
                 let mut rng = Rng::new(0x730 + t as u64);
+                // The executor's batch path is U128-based; the wide classes'
+                // batch equivalence runs in decomp::tests::wide_batch_matches_scalar
+                // and through the service-level stress below.
+                let narrow: Vec<OpClass> =
+                    OpClass::ALL.into_iter().filter(|c| !c.is_wide()).collect();
                 for i in 0..iters {
-                    let prec = OpClass::from_index(rng.below(OpClass::COUNT as u64) as usize);
+                    let prec = narrow[rng.below(narrow.len() as u64) as usize];
                     let kind =
                         SchemeKind::ALL[rng.below(SchemeKind::ALL.len() as u64) as usize];
                     let plan = PlanCache::get(kind, prec);
@@ -89,8 +94,10 @@ fn many_submitters_fpu_pipeline_with_specials() {
                 let mut par =
                     FpuBatch::new(DecompMul::with_executor(SchemeKind::Civp, exec.clone()));
                 let mut seq = FpuBatch::new(DecompMul::new(SchemeKind::Civp));
+                let narrow: Vec<OpClass> =
+                    OpClass::ALL.into_iter().filter(|c| !c.is_wide()).collect();
                 for i in 0..iters {
-                    let prec = OpClass::from_index(rng.below(OpClass::COUNT as u64) as usize);
+                    let prec = narrow[rng.below(narrow.len() as u64) as usize];
                     let fmt = prec.format();
                     let mode = RoundMode::ALL[rng.below(5) as usize];
                     let n = rng.range(100, 800) as usize;
@@ -146,7 +153,7 @@ fn service_on_shared_executor_under_concurrent_load() {
                 for i in 0..per_thread {
                     let class =
                         OpClass::from_index(((t as u64 + i) % OpClass::COUNT as u64) as usize);
-                    let one = class.format().one();
+                    let one = class.format().one_w();
                     match svc.submit(i, class, one, one) {
                         Ok(rx) => pending.push((one, rx)),
                         Err(AdmissionError::Draining) => {

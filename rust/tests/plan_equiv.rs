@@ -15,13 +15,19 @@ use civp::decomp::{
     SchemeKind, SimdIsa, LANES,
 };
 use civp::fpu::{
-    mul_bits, mul_bits_batch, DirectMul, Flags, Fp128, Fp32, Fp64, FpFormat, FpuBatch, RoundMode,
-    BF16, DOUBLE, HALF, QUAD, SINGLE,
+    mul_bits, mul_bits_batch, mul_bits_wide, DirectMul, Flags, Fp128, Fp32, Fp64, FpFormat,
+    FpuBatch, RoundMode, BF16, DOUBLE, HALF, QUAD, SINGLE,
 };
 use civp::proput::{forall, Rng};
-use civp::wideint::{mul_u128, U128, U256};
+use civp::wideint::{mul_u128, PackedBits, U128, U256};
 use std::sync::Arc;
 
+/// The classes whose significands fit the `U128` scalar/lane entry points.
+/// The wide classes (Fp256/Fp512) run the `execute_wide` tree path, pinned
+/// in the wide section at the bottom of this file.
+fn narrow_classes() -> impl Iterator<Item = OpClass> {
+    OpClass::ALL.into_iter().filter(|c| !c.is_wide())
+}
 
 /// Edge-case significands for a given width: all-ones, single-bit at every
 /// byte boundary, the subnormal-range pattern (low bits only), and the
@@ -49,7 +55,7 @@ fn plan_product_equals_direct_mul_random() {
     // The cached plan's integer product == DirectMul's widening multiply,
     // for every scheme x precision, over random normalized significands.
     forall(0x700, 2_000, |rng| {
-        for prec in OpClass::ALL {
+        for prec in narrow_classes() {
             for kind in SchemeKind::ALL {
                 let plan = PlanCache::get(kind, prec);
                 let a = rng.sig(prec.sig_bits());
@@ -66,7 +72,7 @@ fn plan_product_equals_direct_mul_random() {
 
 #[test]
 fn plan_product_equals_direct_mul_edge_cases() {
-    for prec in OpClass::ALL {
+    for prec in narrow_classes() {
         let edges = edge_sigs(prec.sig_bits());
         for kind in SchemeKind::ALL {
             let plan = PlanCache::get(kind, prec);
@@ -86,7 +92,7 @@ fn plan_matches_rederived_tile_executor_and_stats() {
     // The compiled plan is a pure lowering: product AND accounting must be
     // identical to deriving the tile DAG per call.
     forall(0x701, 500, |rng| {
-        for prec in OpClass::ALL {
+        for prec in narrow_classes() {
             for kind in SchemeKind::ALL {
                 let scheme = Scheme::new(kind, prec);
                 let plan = PlanCache::get(kind, prec);
@@ -212,7 +218,7 @@ fn execute_lanes_matches_per_op_all_schemes_and_tails() {
     // ragged tail length around the LANES block size (including the
     // empty batch and a batch smaller than one block).
     let mut rng = Rng::new(0x710);
-    for prec in OpClass::ALL {
+    for prec in narrow_classes() {
         for kind in SchemeKind::ALL {
             let plan = PlanCache::get(kind, prec);
             for n in [0, 1, LANES - 1, LANES, LANES + 1, 2 * LANES, 2 * LANES + 3, 67] {
@@ -248,7 +254,7 @@ fn execute_lanes_cfg_every_width_isa_and_tail_residue() {
                 continue;
             }
             let cfg = LaneConfig { width, isa };
-            for prec in OpClass::ALL {
+            for prec in narrow_classes() {
                 let plan = PlanCache::get(SchemeKind::Civp, prec);
                 for residue in 0..w {
                     let n = w + residue;
@@ -344,7 +350,7 @@ fn execute_lanes_edge_significands() {
     // Edge significands (all-ones, single bits, low-half patterns) through
     // full blocks: the SoA extraction and carry chains see the worst-case
     // bit patterns in every lane position, for every scheme.
-    for prec in OpClass::ALL {
+    for prec in narrow_classes() {
         let edges = edge_sigs(prec.sig_bits());
         for kind in SchemeKind::ALL {
             let plan = PlanCache::get(kind, prec);
@@ -541,4 +547,125 @@ fn fpu_batch_typed_surface_all_three_widths() {
     for i in 0..qa.len() {
         assert_eq!(outq[i].0, qa[i].mul(qb[i]).0, "i={i}");
     }
+}
+
+// ---------------------------------------------------------------------
+// Wide classes (Fp256/Fp512): the compiled wide plan — the flat all-pairs
+// sweep or the karatsuba24 combine tree — pinned against the direct
+// widening multiply, and the full IEEE pipeline across organizations.
+// ---------------------------------------------------------------------
+
+/// A normalized wide significand: `bits` wide with the hidden bit set —
+/// the wide sibling of `Rng::sig`.
+fn wide_sig(rng: &mut Rng, bits: u32) -> PackedBits {
+    let mut v = PackedBits::ZERO;
+    for l in v.limbs.iter_mut() {
+        *l = rng.next_u64();
+    }
+    let mut v = v.mask_low(bits);
+    v.set_bit(bits - 1);
+    v
+}
+
+/// Nasty packed wide values: specials, subnormals, boundary exponents and
+/// uniform noise, built from the format descriptor like `nasty_packed`.
+fn nasty_packed_wide(rng: &mut Rng, fmt: &FpFormat) -> PackedBits {
+    let rand_wide = |rng: &mut Rng| {
+        let mut v = PackedBits::ZERO;
+        for l in v.limbs.iter_mut() {
+            *l = rng.next_u64();
+        }
+        v.mask_low(fmt.total_bits())
+    };
+    let exp_field = |biased: u32| PackedBits::from_u64(biased as u64).shl(fmt.frac_bits);
+    match rng.below(7) {
+        0 => PackedBits::ZERO,
+        1 => {
+            // ±inf
+            let mut v = exp_field(fmt.exp_mask());
+            if rng.below(2) == 1 {
+                v.set_bit(fmt.total_bits() - 1);
+            }
+            v
+        }
+        2 => {
+            // qNaN
+            let mut v = exp_field(fmt.exp_mask());
+            v.set_bit(fmt.frac_bits - 1);
+            v
+        }
+        3 => rand_wide(rng).mask_low(fmt.frac_bits), // subnormal
+        4 => {
+            // boundary exponents: emin and emax neighbourhoods
+            let biased = if rng.below(2) == 0 {
+                1 + rng.below(3) as u32
+            } else {
+                fmt.exp_mask() - 1 - rng.below(3) as u32
+            };
+            exp_field(biased).or(&rand_wide(rng).mask_low(fmt.frac_bits))
+        }
+        _ => rand_wide(rng),
+    }
+}
+
+#[test]
+fn wide_plan_product_equals_direct_mul_every_scheme() {
+    forall(0x720, 200, |rng| {
+        for prec in [OpClass::Fp256, OpClass::Fp512] {
+            for kind in SchemeKind::ALL {
+                let plan = PlanCache::get(kind, prec);
+                assert!(plan.is_wide(), "{prec:?} must compile to a wide plan");
+                let a = wide_sig(rng, prec.sig_bits());
+                let b = wide_sig(rng, prec.sig_bits());
+                let mut stats = ExecStats::default();
+                let got = plan.execute_wide(a, b, &mut stats);
+                assert_eq!(got, a.mul_full(&b), "{kind:?} {prec:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn wide_plan_batch_matches_scalar_every_scheme() {
+    let mut rng = Rng::new(0x722);
+    for prec in [OpClass::Fp256, OpClass::Fp512] {
+        for kind in SchemeKind::ALL {
+            let plan = PlanCache::get(kind, prec);
+            let n = 33;
+            let a: Vec<PackedBits> = (0..n).map(|_| wide_sig(&mut rng, prec.sig_bits())).collect();
+            let b: Vec<PackedBits> = (0..n).map(|_| wide_sig(&mut rng, prec.sig_bits())).collect();
+            let mut batch_stats = ExecStats::default();
+            let mut out = Vec::new();
+            plan.execute_batch_wide(&a, &b, &mut batch_stats, &mut out);
+            assert_eq!(out.len(), n);
+            let mut scalar_stats = ExecStats::default();
+            for i in 0..n {
+                let want = plan.execute_wide(a[i], b[i], &mut scalar_stats);
+                assert_eq!(out[i], want, "{kind:?} {prec:?} i={i}");
+            }
+            assert_stats_eq(&batch_stats, &scalar_stats, &format!("{kind:?} {prec:?}"));
+        }
+    }
+}
+
+#[test]
+fn wide_ieee_pipeline_karatsuba_equals_naive_equals_direct() {
+    // Organization equivalence one layer up: packed wide products through
+    // `DecompMul(karatsuba24)` == `DecompMul(civp)` == every other scheme
+    // == `DirectMul`, across rounding modes, flags included.
+    forall(0x721, 150, |rng| {
+        let mode = RoundMode::ALL[rng.below(5) as usize];
+        for prec in [OpClass::Fp256, OpClass::Fp512] {
+            let fmt = prec.format();
+            let a = nasty_packed_wide(rng, fmt);
+            let b = nasty_packed_wide(rng, fmt);
+            let (want, wf) = mul_bits_wide(fmt, a, b, mode, &mut DirectMul);
+            for kind in SchemeKind::ALL {
+                let mut m = DecompMul::new(kind);
+                let (got, gf) = mul_bits_wide(fmt, a, b, mode, &mut m);
+                assert_eq!(got, want, "{kind:?} {} {mode:?}", fmt.name);
+                assert_eq!(gf, wf, "flags diverged: {kind:?} {}", fmt.name);
+            }
+        }
+    });
 }

@@ -36,8 +36,10 @@ fn every_scheme_is_exact_for_every_width_exhaustive_small() {
 
 #[test]
 fn census_matches_exec_stats_for_all_precisions() {
-    // Static census and dynamic execution must agree on what fired.
-    for prec in OpClass::ALL {
+    // Static census and dynamic execution must agree on what fired. The
+    // wide classes run the tree path — decomp::tests pins their census
+    // against `Plan::execute_wide` per-mul stats instead.
+    for prec in OpClass::ALL.into_iter().filter(|c| !c.is_wide()) {
         for kind in SchemeKind::ALL {
             let s = Scheme::new(kind, prec);
             let census = scheme_census(&s);
